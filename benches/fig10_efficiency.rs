@@ -1,0 +1,66 @@
+//! Fig 10 regenerator: power efficiency (perf/W) and energy per benchmark
+//! across (warps × threads) configurations, normalized to 2w × 2t.
+//!
+//! The paper's finding: for most benchmarks the most power-efficient
+//! design point has FEW warps and MANY threads; BFS is the exception
+//! (it wants warps too).
+
+use vortex::config::MachineConfig;
+use vortex::coordinator::report::Table;
+use vortex::coordinator::sweep::{fig10_efficiency, fig9_configs, fig9_sweep};
+use vortex::kernels::Bench;
+use vortex::power;
+use vortex::pocl::Backend;
+
+const SEED: u64 = 0xC0FFEE;
+
+fn main() {
+    let configs = fig9_configs();
+    println!("=== Fig 10: power efficiency perf/W (norm to 2x2; higher = better) ===\n");
+
+    let mut header = vec!["config".to_string()];
+    header.extend(Bench::ALL.iter().map(|b| b.name().to_string()));
+    let mut table = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    let mut columns = Vec::new();
+    for bench in Bench::ALL {
+        eprintln!("  sweeping {}...", bench.name());
+        let rows = fig9_sweep(bench, &configs, SEED).expect("sweep");
+        columns.push(fig10_efficiency(&rows));
+    }
+    for (i, &(w, t)) in configs.iter().enumerate() {
+        let mut row = vec![format!("{w}x{t}")];
+        for col in &columns {
+            row.push(format!("{:.2}", col[i].1));
+        }
+        table.row(row);
+    }
+    println!("{}", table.render());
+
+    // best design point per benchmark (the paper's conclusion check)
+    println!("most power-efficient design point per benchmark:");
+    for (b, bench) in Bench::ALL.iter().enumerate() {
+        let best = columns[b]
+            .iter()
+            .max_by(|a, c| a.1.partial_cmp(&c.1).unwrap())
+            .unwrap();
+        println!("  {:<10} {} ({:.2}x)", bench.name(), best.0, best.1);
+    }
+
+    // activity-based energy extension (beyond the paper's static metric)
+    println!("\nactivity-based energy (mJ) for the paper's reference 8x4 core:");
+    let cfg = MachineConfig::paper_default();
+    let mut t = Table::new(&["benchmark", "cycles", "energy mJ", "avg power mW"]);
+    for bench in Bench::ALL {
+        let r = bench.run(cfg, SEED, Backend::SimX, true).expect("run");
+        let e = power::energy_mj(&cfg, &r.stats);
+        let t_s = r.cycles as f64 / power::FREQ_HZ;
+        t.row(vec![
+            bench.name().to_string(),
+            r.cycles.to_string(),
+            format!("{e:.4}"),
+            format!("{:.1}", e * 1e-3 / t_s * 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+}

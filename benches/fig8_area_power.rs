@@ -1,0 +1,35 @@
+//! Fig 8 regenerator: synthesized power, area and cell counts across the
+//! (warps × threads) design space, normalized to the 1-warp × 1-thread
+//! configuration — the paper's exact presentation.
+
+use vortex::config::MachineConfig;
+use vortex::coordinator::report::Table;
+use vortex::power;
+
+fn main() {
+    println!("=== Fig 8: normalized power / area / cell count (norm to 1w x 1t) ===\n");
+    let mut t = Table::new(&["config", "power", "area", "cells"]);
+    for (w, th) in MachineConfig::paper_sweep() {
+        let (area, power, cells) = power::fig8_point(w, th);
+        t.row(vec![
+            format!("{w}x{th}"),
+            format!("{power:.2}"),
+            format!("{area:.2}"),
+            format!("{cells:.2}"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // the §V-A claims, checked numerically:
+    let cost = |w, th| power::fig8_point(w, th).0;
+    let warp_doubling_t1 = cost(2, 1) - cost(1, 1);
+    let warp_doubling_t32 = cost(2, 32) - cost(1, 32);
+    println!("warp-doubling area cost at 1 thread:  {warp_doubling_t1:+.2} (normalized units)");
+    println!("warp-doubling area cost at 32 threads: {warp_doubling_t32:+.2}");
+    println!(
+        "ratio {:.1}x — warps are cheap state at small SIMD width, expensive at large\n\
+         (paper §V-A: \"increasing warps for bigger thread configurations becomes\n\
+         more expensive\")",
+        warp_doubling_t32 / warp_doubling_t1.max(1e-9)
+    );
+}

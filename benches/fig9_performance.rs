@@ -1,0 +1,90 @@
+//! Fig 9 regenerator: normalized execution time of the Rodinia subset
+//! across (warps × threads) configurations, normalized to 2w × 2t —
+//! the paper's exact presentation (§V-D), including its methodology
+//! (reduced data sets + warmed caches).
+
+use vortex::coordinator::report::Table;
+use vortex::coordinator::sweep::{fig9_configs, fig9_sweep, normalize_to_2x2};
+use vortex::kernels::Bench;
+
+const SEED: u64 = 0xC0FFEE;
+
+fn main() {
+    let configs = fig9_configs();
+    println!("=== Fig 9: normalized execution time (norm to 2x2; lower = faster) ===\n");
+
+    let mut header = vec!["config".to_string()];
+    header.extend(Bench::ALL.iter().map(|b| b.name().to_string()));
+    let mut table = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    let mut columns = Vec::new();
+    let mut raw_cycles = Vec::new();
+    for bench in Bench::ALL {
+        eprintln!("  sweeping {}...", bench.name());
+        let rows = fig9_sweep(bench, &configs, SEED).expect("sweep");
+        raw_cycles.push(rows.iter().map(|p| p.cycles).collect::<Vec<_>>());
+        columns.push(normalize_to_2x2(&rows));
+    }
+    for (i, &(w, t)) in configs.iter().enumerate() {
+        let mut row = vec![format!("{w}x{t}")];
+        for col in &columns {
+            row.push(format!("{:.3}", col[i].1));
+        }
+        table.row(row);
+    }
+    println!("{}", table.render());
+
+    println!("raw cycles at 2x2 (the normalization base):");
+    for (b, bench) in Bench::ALL.iter().enumerate() {
+        println!("  {:<10} {}", bench.name(), raw_cycles[b][0]);
+    }
+
+    // paper shape checks (§V-D)
+    let col = |b: Bench| {
+        let i = Bench::ALL.iter().position(|x| *x == b).unwrap();
+        &columns[i]
+    };
+    let at = |c: &[(String, f64)], name: &str| c.iter().find(|(n, _)| n == name).unwrap().1;
+    println!("\nshape checks vs the paper:");
+    let v = at(col(Bench::VecAdd), "8x16");
+    println!(
+        "  [{}] threads scaling speeds up regular kernels: vecadd 8x16 = {v:.3} (≪ 1)",
+        if v < 0.25 { "ok" } else { "??" }
+    );
+    let warps_gain = at(col(Bench::Sgemm), "8x8") / at(col(Bench::Sgemm), "4x8");
+    println!(
+        "  [{}] warps alone barely help cache-warm regular kernels: sgemm 8x8/4x8 = {warps_gain:.2} (≈ 1)",
+        if (0.8..=1.25).contains(&warps_gain) { "ok" } else { "??" }
+    );
+    let bfs_warp_gain = at(col(Bench::Bfs), "2x4") / at(col(Bench::Bfs), "4x4");
+    let va_warp_gain = at(col(Bench::VecAdd), "2x4") / at(col(Bench::VecAdd), "4x4");
+    println!(
+        "  [{}] BFS (irregular) gains more from warps than vecadd: {bfs_warp_gain:.2}x vs {va_warp_gain:.2}x",
+        if bfs_warp_gain > va_warp_gain { "ok" } else { "differs" }
+    );
+
+    // Ablation: the paper's §V-D argument is that warps hide *miss*
+    // latency, and warmed caches are why warps barely help its regular
+    // benchmarks. With cold caches, warp-doubling should pay off much
+    // more — especially for BFS (scattered, irregular).
+    println!("\nablation — warp-doubling speedup (4x8 over 2x8), warm vs cold caches:");
+    for bench in [Bench::VecAdd, Bench::Bfs] {
+        let run = |w: u32, warm: bool| {
+            bench
+                .run(vortex::config::MachineConfig::with_wt(w, 8), SEED,
+                     vortex::pocl::Backend::SimX, warm)
+                .expect("run")
+                .cycles as f64
+        };
+        let warm_gain = run(2, true) / run(4, true);
+        let cold_gain = run(2, false) / run(4, false);
+        println!(
+            "  {:<10} warm {:.2}x   cold {:.2}x   (cold/warm ratio {:.2})",
+            bench.name(),
+            warm_gain,
+            cold_gain,
+            cold_gain / warm_gain
+        );
+    }
+    println!("(paper §V-D: \"warmed up caches ... hence increasing the number of warps\n is not translated into performance benefit\"; TLP pays when misses exist)");
+}

@@ -1,0 +1,94 @@
+//! §Perf harness: simulator hot-path throughput (simulated instructions
+//! per wall-clock second) plus per-subsystem microbenchmarks. This is the
+//! measurement loop the EXPERIMENTS.md §Perf iteration log is based on.
+
+use vortex::asm::assemble;
+use vortex::config::MachineConfig;
+use vortex::coordinator::benchkit::{throughput, Bencher};
+use vortex::emu::Emulator;
+use vortex::kernels::Bench;
+use vortex::pocl::Backend;
+use vortex::sim::cache::Cache;
+use vortex::sim::Simulator;
+
+fn alu_loop_src(iters: u32) -> String {
+    format!(
+        r#"
+        li t0, {iters}
+        loop:
+        addi t1, t1, 1
+        xor t2, t2, t1
+        add t3, t3, t2
+        addi t0, t0, -1
+        bnez t0, loop
+        li a0, 0
+        li a7, 93
+        ecall
+        "#
+    )
+}
+
+fn main() {
+    let bencher = Bencher::default();
+
+    // --- end-to-end simulator throughput: ALU-bound warp program ---
+    let prog = assemble(&alu_loop_src(20_000)).unwrap();
+    let cfg = MachineConfig::with_wt(8, 4);
+    let m = bencher.bench("simx_alu_loop_8w4t", || {
+        let mut sim = Simulator::new(cfg);
+        sim.load(&prog);
+        sim.launch(prog.entry());
+        sim.run(u64::MAX).unwrap().stats.warp_instrs
+    });
+    // measure instruction count once for the rate
+    let mut sim = Simulator::new(cfg);
+    sim.load(&prog);
+    sim.launch(prog.entry());
+    let instrs = sim.run(u64::MAX).unwrap().stats.warp_instrs;
+    println!(
+        "  -> simX {:.2} M warp-instrs/s\n",
+        throughput(instrs, &m) / 1e6
+    );
+
+    // --- functional emulator throughput (the oracle should be faster) ---
+    let m = bencher.bench("emu_alu_loop_8w4t", || {
+        let mut emu = Emulator::new(cfg);
+        emu.load(&prog);
+        emu.launch(prog.entry());
+        emu.run(u64::MAX).unwrap();
+        emu.instret
+    });
+    let mut emu = Emulator::new(cfg);
+    emu.load(&prog);
+    emu.launch(prog.entry());
+    emu.run(u64::MAX).unwrap();
+    println!("  -> emu {:.2} M instrs/s\n", throughput(emu.instret, &m) / 1e6);
+
+    // --- full benchmark end-to-end (the Fig 9 unit of work) ---
+    for bench in [Bench::VecAdd, Bench::Sgemm, Bench::Bfs] {
+        let m = bencher.bench(&format!("bench_{}_8x8", bench.name()), || {
+            bench
+                .run(MachineConfig::with_wt(8, 8), 0xC0FFEE, Backend::SimX, true)
+                .unwrap()
+                .cycles
+        });
+        let r = bench.run(MachineConfig::with_wt(8, 8), 0xC0FFEE, Backend::SimX, true).unwrap();
+        println!(
+            "  -> {} simulates {:.2} M cycles/s\n",
+            bench.name(),
+            throughput(r.cycles, &m) / 1e6
+        );
+    }
+
+    // --- subsystem micro: cache access path ---
+    let m = bencher.bench("dcache_warp_access_1M", || {
+        let mut c = Cache::new(vortex::config::CacheConfig::paper_dcache());
+        let mut acc = 0u64;
+        for i in 0..1_000_000u32 {
+            let a = c.access(&[i * 4, i * 4 + 64, i * 4 + 128, i * 4 + 192], i % 4 == 0);
+            acc += a.cycles as u64;
+        }
+        acc
+    });
+    println!("  -> {:.1} M warp-accesses/s", throughput(1_000_000, &m) / 1e6);
+}

@@ -1,0 +1,84 @@
+//! Multi-core scaling + global barriers (paper §IV-D).
+//!
+//! Runs sgemm across 1, 2 and 4 cores of the same (warps × threads)
+//! configuration — the work split and the end-of-kernel global barrier are
+//! handled by the generated `pocl_spawn` protocol — and then demonstrates
+//! the local/global barrier tables directly with a producer/consumer
+//! program.
+//!
+//! Run: `cargo run --release --example multicore_barriers`
+
+use vortex::asm::assemble;
+use vortex::config::MachineConfig;
+use vortex::emu::ExitStatus;
+use vortex::kernels::Bench;
+use vortex::pocl::Backend;
+use vortex::sim::Simulator;
+
+fn main() {
+    println!("== sgemm strong scaling across cores (8w x 4t each) ==");
+    println!("{:>6} {:>10} {:>8} {:>10}", "cores", "cycles", "speedup", "verified");
+    let mut base = None;
+    for cores in [1u32, 2, 4] {
+        let mut cfg = MachineConfig::with_wt(8, 4);
+        cfg.num_cores = cores;
+        let r = Bench::Sgemm.run_scaled(cfg, 2, 0xC0FFEE, Backend::SimX, true).expect("run");
+        let base_cycles = *base.get_or_insert(r.cycles);
+        println!(
+            "{cores:>6} {:>10} {:>8.2} {:>10}",
+            r.cycles,
+            base_cycles as f64 / r.cycles as f64,
+            r.verified
+        );
+        assert!(r.verified);
+    }
+
+    println!("\n== global barrier across cores (MSB barrier id) ==");
+    // every core's warp 0 publishes its core id, meets at a global
+    // barrier, then core 0 sums the publications — impossible without the
+    // cross-core release (paper §IV-D: "another table on multicore
+    // configurations ... release mask per each core").
+    let src = r#"
+        csrr t0, 0xCC2          # cid
+        slli t1, t0, 2
+        li t2, 0x90000000
+        add t1, t1, t2
+        addi t3, t0, 1
+        sw t3, 0(t1)            # publish cid+1
+        li t0, 0x80000001       # global barrier id (MSB set)
+        csrr t1, 0xFC2          # NC
+        bar t0, t1              # all cores' warp 0
+        csrr t0, 0xCC2
+        bnez t0, worker_exit
+        # core 0: sum the publications = NC*(NC+1)/2
+        csrr t1, 0xFC2
+        li t2, 0x90000000
+        li a0, 0
+        sum:
+        lw t3, 0(t2)
+        add a0, a0, t3
+        addi t2, t2, 4
+        addi t1, t1, -1
+        bnez t1, sum
+        li a7, 93
+        ecall
+        worker_exit:
+        li t0, 0
+        tmc t0
+    "#;
+    let prog = assemble(src).unwrap();
+    for cores in [2u32, 4, 8] {
+        let mut cfg = MachineConfig::with_wt(2, 2);
+        cfg.num_cores = cores;
+        let mut sim = Simulator::new(cfg);
+        sim.load(&prog);
+        sim.launch(prog.entry());
+        let res = sim.run(10_000_000).unwrap();
+        let want = cores * (cores + 1) / 2;
+        assert_eq!(res.status, ExitStatus::Exited(want), "{cores} cores");
+        println!(
+            "{cores} cores: sum={want} OK  ({} cycles, {} barrier stall-cycles)",
+            res.cycles, res.stats.barrier_stall_cycles
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Quickstart: the whole stack in one file.
+//!
+//! 1. Write a tiny OpenCL-style kernel against the `pocl_spawn` ABI.
+//! 2. Create a Vortex device (8 warps × 4 threads — the paper's Fig 7
+//!    reference configuration), buffers, and launch an NDRange.
+//! 3. Read the result back and inspect the simX statistics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use vortex::config::MachineConfig;
+use vortex::pocl::{Backend, Kernel, VortexDevice};
+
+fn main() {
+    // kernel: out[i] = in[i] * in[i]   (args: [in, out])
+    let square = Kernel {
+        name: "square",
+        body: r#"
+kernel_body:
+    li t0, 0x7F000100       # ARGS
+    lw t1, 0(t0)            # in
+    lw t2, 4(t0)            # out
+    slli t3, a0, 2          # a0 = global work-item id
+    add t4, t1, t3
+    lw t5, 0(t4)
+    mul t5, t5, t5
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#
+        .to_string(),
+    };
+
+    // the paper's reference core: 8 warps x 4 threads (Fig 7)
+    let cfg = MachineConfig::paper_default();
+    let mut dev = VortexDevice::new(cfg);
+    dev.warm_caches = true;
+
+    let n = 64usize;
+    let input: Vec<i32> = (0..n as i32).collect();
+    let in_buf = dev.create_buffer(n * 4);
+    let out_buf = dev.create_buffer(n * 4);
+    dev.write_buffer_i32(in_buf, &input);
+
+    let result = dev
+        .launch(&square, n as u32, &[in_buf.addr, out_buf.addr], Backend::SimX)
+        .expect("launch");
+
+    let output = dev.read_buffer_i32(out_buf, n);
+    assert!(output.iter().enumerate().all(|(i, &v)| v == (i * i) as i32));
+    println!("square([0..{n}]) OK — first 8: {:?}", &output[..8]);
+    println!();
+    println!("device: {}w x {}t, {} cycles", cfg.num_warps, cfg.num_threads, result.cycles);
+    println!("{}", result.stats.report(cfg.num_threads));
+}

@@ -1,0 +1,104 @@
+//! END-TO-END DRIVER: the paper's full evaluation on a real workload set.
+//!
+//! This exercises every layer of the stack in one run:
+//!   * workload generators produce the (reduced-scale, cache-warmed)
+//!     Rodinia inputs (§V-B/§V-D methodology);
+//!   * the mini-POCL runtime maps each kernel onto the device via
+//!     `pocl_spawn` (§III);
+//!   * the simX cycle simulator executes the RV32IM+SIMT programs on a
+//!     sweep of (warps × threads) design points (§V-D, Fig 9);
+//!   * the power model turns cycles into perf/W (Fig 10);
+//!   * the PJRT golden runtime validates every output buffer against the
+//!     AOT-compiled JAX/Pallas golden models (bit-exact), proving the
+//!     three layers compose.
+//!
+//! Results (paper-vs-measured shape) are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example rodinia_sweep`
+
+use vortex::config::MachineConfig;
+use vortex::coordinator::report::Table;
+use vortex::coordinator::sweep::{fig10_efficiency, fig9_sweep, normalize_to_2x2};
+use vortex::kernels::Bench;
+use vortex::runtime::GoldenRuntime;
+use vortex::pocl::Backend;
+
+const SEED: u64 = 0xC0FFEE;
+
+fn main() {
+    let configs = vec![(2, 2), (2, 4), (4, 4), (4, 8), (8, 8), (8, 16), (16, 16), (32, 32)];
+    let benches = Bench::ALL;
+
+    // golden runtime is optional (artifacts may be absent in a fresh tree)
+    let mut golden = GoldenRuntime::new(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    )
+    .ok()
+    .filter(|rt| rt.has_artifact(Bench::VecAdd));
+    if golden.is_none() {
+        eprintln!("note: artifacts/ missing — golden validation skipped (run `make artifacts`)");
+    }
+
+    let mut fig9 = Table::new(
+        &std::iter::once("config")
+            .chain(benches.iter().map(|b| b.name()))
+            .collect::<Vec<_>>(),
+    );
+    let mut fig10 = Table::new(
+        &std::iter::once("config")
+            .chain(benches.iter().map(|b| b.name()))
+            .collect::<Vec<_>>(),
+    );
+
+    let mut norm_time = Vec::new();
+    let mut norm_eff = Vec::new();
+    for &bench in &benches {
+        eprint!("sweeping {:<10}", bench.name());
+        let rows = fig9_sweep(bench, &configs, SEED).expect("sweep");
+        // golden validation at one representative config
+        if let Some(rt) = golden.as_mut() {
+            let r = bench
+                .run(MachineConfig::with_wt(4, 4), SEED, Backend::SimX, true)
+                .expect("validation run");
+            assert!(
+                rt.validate(bench, SEED, &r.output).expect("golden execute"),
+                "{}: golden mismatch",
+                bench.name()
+            );
+            eprint!("  [golden OK]");
+        }
+        eprintln!();
+        norm_time.push(normalize_to_2x2(&rows));
+        norm_eff.push(fig10_efficiency(&rows));
+    }
+
+    for (i, &(w, t)) in configs.iter().enumerate() {
+        let mut row9 = vec![format!("{w}x{t}")];
+        let mut row10 = vec![format!("{w}x{t}")];
+        for b in 0..benches.len() {
+            row9.push(format!("{:.3}", norm_time[b][i].1));
+            row10.push(format!("{:.2}", norm_eff[b][i].1));
+        }
+        fig9.row(row9);
+        fig10.row(row10);
+    }
+
+    println!("\n=== Fig 9 — normalized execution time (lower is better; norm to 2x2) ===");
+    println!("{}", fig9.render());
+    println!("=== Fig 10 — power efficiency, perf/W (higher is better; norm to 2x2) ===");
+    println!("{}", fig10.render());
+
+    // the paper's headline observations, checked programmatically:
+    let va_time = &norm_time[0]; // vecadd
+    let bfs_idx = benches.iter().position(|b| *b == Bench::Bfs).unwrap();
+    let bfs_time = &norm_time[bfs_idx];
+    let t32 = va_time.iter().find(|(c, _)| c == "32x32").unwrap().1;
+    assert!(t32 < 0.5, "threads scaling must speed up regular kernels (vecadd 32x32 = {t32})");
+    let bfs_16x16 = bfs_time.iter().find(|(c, _)| c == "16x16").unwrap().1;
+    let bfs_2x4 = bfs_time.iter().find(|(c, _)| c == "2x4").unwrap().1;
+    assert!(
+        bfs_16x16 < bfs_2x4,
+        "BFS must keep benefiting from warps (irregular, latency-bound)"
+    );
+    println!("headline shape checks passed — see EXPERIMENTS.md for the full comparison");
+}

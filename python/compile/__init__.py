@@ -1,0 +1,11 @@
+"""Build-time Python: JAX/Pallas golden models, AOT-lowered to HLO text.
+
+Layers (see DESIGN.md):
+  L1 - ``kernels/``: Pallas kernels (interpret=True) for the compute
+       hot-spots, checked against ``kernels/ref.py`` by pytest+hypothesis.
+  L2 - ``model.py``: per-benchmark golden compute graphs calling the L1
+       kernels; ``aot.py`` lowers each to ``artifacts/<name>.hlo.txt``.
+
+Python runs ONCE at build time (``make artifacts``); the Rust coordinator
+loads the HLO artifacts through PJRT and never calls back into Python.
+"""

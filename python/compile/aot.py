@@ -1,0 +1,58 @@
+"""AOT lowering: golden models → HLO *text* artifacts + manifest.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Usage (from `make artifacts`):  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import benchmark_specs
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, example_args) in benchmark_specs().items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+            ],
+            "hlo_bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

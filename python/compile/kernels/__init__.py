@@ -1,0 +1,16 @@
+"""L1 — Pallas kernels for the golden models.
+
+All kernels use ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO ops that run on
+any backend (see /opt/xla-example/README.md). Real-TPU efficiency is
+*estimated* from the BlockSpec geometry in DESIGN.md §Perf.
+
+Integer semantics are chosen to be bit-exact with the RV32IM device
+kernels (wrapping int32 adds/muls, arithmetic shifts, truncating division).
+"""
+
+from .elementwise import saxpy, vecadd
+from .matmul import matmul_i32, minplus
+from .distance import pairwise_dist2
+
+__all__ = ["vecadd", "saxpy", "matmul_i32", "minplus", "pairwise_dist2"]

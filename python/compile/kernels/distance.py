@@ -1,0 +1,39 @@
+"""Pairwise squared-distance Pallas kernel (nearest-neighbor / k-means
+golden hot-spot): points (n) × centroids (k) → (n, k) int32."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(n: int, target: int = 256) -> int:
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return max(b, 1)
+
+
+def pairwise_dist2(px, py, cx, cy):
+    """out[i, c] = (px[i]-cx[c])² + (py[i]-cy[c])² (wrapping int32)."""
+    n = px.shape[0]
+    k = cx.shape[0]
+    bn = _block(n)
+
+    def kernel(px_ref, py_ref, cx_ref, cy_ref, o_ref):
+        dx = px_ref[...][:, None] - cx_ref[...][None, :]
+        dy = py_ref[...][:, None] - cy_ref[...][None, :]
+        o_ref[...] = dx * dx + dy * dy
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.int32),
+        interpret=True,
+    )(px, py, cx, cy)

@@ -1,0 +1,69 @@
+"""Elementwise Pallas kernels: vecadd and Q16.16 saxpy.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): a Vortex warp of NT
+lanes maps to one VMEM-resident block per grid step; the BlockSpec index
+map is the HBM↔VMEM schedule the device expressed with `pocl_spawn`
+work-item ranges.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(n: int, target: int = 256) -> int:
+    """Largest divisor of n that is <= target (shapes here are powers of 2)."""
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return max(b, 1)
+
+
+def vecadd(a: jax.Array, b: jax.Array) -> jax.Array:
+    """c[i] = a[i] + b[i] (wrapping int32, same as the device)."""
+    n = a.shape[0]
+    bn = _block(n)
+
+    def kernel(a_ref, b_ref, o_ref):
+        o_ref[...] = a_ref[...] + b_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def saxpy(x: jax.Array, y: jax.Array, alpha: jax.Array) -> jax.Array:
+    """y[i] + ((alpha * x[i]) >> 16) in Q16.16.
+
+    The device computes the 64-bit product with a mul/mulh pair then shifts;
+    we compute in int64 (arithmetic shift) — bit-identical results.
+    """
+    n = x.shape[0]
+    bn = _block(n)
+
+    def kernel(x_ref, y_ref, alpha_ref, o_ref):
+        xi = x_ref[...].astype(jnp.int64)
+        al = alpha_ref[0].astype(jnp.int64)
+        prod = (al * xi) >> 16
+        o_ref[...] = (y_ref[...].astype(jnp.int64) + prod).astype(jnp.int32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(x, y, alpha)

@@ -1,0 +1,85 @@
+"""Tiled matmul-shaped Pallas kernels.
+
+``matmul_i32`` is the sgemm golden hot-spot: the device kernel walks a
+K-loop per output element; here the same contraction is re-thought for the
+MXU — (bm × bk)·(bk × bn) tile products accumulated across the K grid
+dimension, with the output tile revisited (standard Pallas accumulation
+pattern).
+
+``minplus`` is the same schedule over the (min, +) semiring — the BFS
+golden model's relaxation step (dense adjacency), which is how the
+irregular benchmark becomes MXU-shaped on a TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: "Infinity" for min-plus that survives `INF + 1` without wrapping.
+#: (plain int so Pallas kernels don't capture a traced constant)
+INF = 0x3FFF_FFFF
+
+
+def _block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return max(b, 1)
+
+
+def matmul_i32(a: jax.Array, b: jax.Array, bm: int = 64, bn: int = 64, bk: int = 64):
+    """C = A @ B over int32 (wrapping), tiled for the MXU."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+
+    def kernel(a_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.int32
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def minplus(d: jax.Array, adj: jax.Array, bm: int = 1, bn: int = 64, bk: int = 64):
+    """out[i, j] = min_k d[i, k] + adj[k, j] — one BFS relaxation step."""
+    m, k = d.shape
+    k2, n = adj.shape
+    assert k == k2
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+
+    def kernel(d_ref, a_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _():
+            o_ref[...] = jnp.full_like(o_ref, INF)
+
+        # (bm, bk, 1) + (1, bk, bn) -> reduce over the contraction axis
+        cand = d_ref[...][:, :, None] + a_ref[...][None, :, :]
+        o_ref[...] = jnp.minimum(o_ref[...], jnp.min(cand, axis=1))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(d, adj)

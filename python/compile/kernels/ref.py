@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the L1 Pallas kernels (the pytest/hypothesis
+correctness signal; see python/tests/test_kernels.py)."""
+
+import jax.numpy as jnp
+
+from .matmul import INF
+
+
+def vecadd_ref(a, b):
+    return a + b
+
+
+def saxpy_ref(x, y, alpha):
+    prod = (alpha[0].astype(jnp.int64) * x.astype(jnp.int64)) >> 16
+    return (y.astype(jnp.int64) + prod).astype(jnp.int32)
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.int32)
+
+
+def minplus_ref(d, adj):
+    cand = d[:, :, None] + adj[None, :, :]
+    return jnp.minimum(INF, jnp.min(cand, axis=1)).astype(jnp.int32)
+
+
+def pairwise_dist2_ref(px, py, cx, cy):
+    dx = px[:, None] - cx[None, :]
+    dy = py[:, None] - cy[None, :]
+    return dx * dx + dy * dy

@@ -1,0 +1,146 @@
+"""L2 — per-benchmark golden compute graphs (JAX), calling the L1 Pallas
+kernels.
+
+Each ``golden_*`` function computes what a *correct* Vortex device must
+produce for that benchmark, with integer semantics bit-identical to the
+RV32IM kernels (wrapping int32, arithmetic shifts, truncating division).
+``aot.py`` lowers each at the Rust benchmark-driver's default shapes
+(`rust/src/kernels/mod.rs`) and the Rust runtime validates simulator
+output against these artifacts through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)  # int64 intermediates (saxpy Q16.16)
+
+from .kernels import matmul_i32, minplus, pairwise_dist2, saxpy, vecadd
+from .kernels.matmul import INF
+
+
+# --------------------------------------------------------------------------
+# regular kernels — direct L1 calls
+# --------------------------------------------------------------------------
+
+def golden_vecadd(a, b):
+    return (vecadd(a, b),)
+
+
+def golden_saxpy(x, y, alpha):
+    return (saxpy(x, y, alpha),)
+
+
+def golden_sgemm(a, b):
+    return (matmul_i32(a, b),)
+
+
+def golden_nearn(xs, ys, q):
+    # one "centroid" = the query point; device stores the (n,) distances
+    d = pairwise_dist2(xs, ys, q[0:1], q[1:2])
+    return (d[:, 0],)
+
+
+def golden_kmeans(px, py, cx, cy):
+    d = pairwise_dist2(px, py, cx, cy)
+    # device picks the lowest index on ties (strict <); argmin matches
+    return (jnp.argmin(d, axis=1).astype(jnp.int32),)
+
+
+# --------------------------------------------------------------------------
+# bfs — level-synchronous relaxation over the (min, +) semiring
+# --------------------------------------------------------------------------
+
+def golden_bfs(adj):
+    """adj[v][u] = 1 if edge else INF (dense int32). Returns BFS levels
+    from node 0 (-1 where unreachable) after n relaxation rounds."""
+    n = adj.shape[0]
+    d0 = jnp.full((n,), INF, dtype=jnp.int32).at[0].set(0)
+
+    def body(_, d):
+        relaxed = minplus(d[None, :], adj)[0]
+        return jnp.minimum(d, relaxed)
+
+    d = jax.lax.fori_loop(0, n, body, d0)
+    return (jnp.where(d >= INF, jnp.int32(-1), d),)
+
+
+# --------------------------------------------------------------------------
+# gaussian — Q24.8 forward elimination (device-mirrored fixed point)
+# --------------------------------------------------------------------------
+
+def _trunc_div(a, b):
+    """C/RISC-V style division truncating toward zero (jnp // floors)."""
+    q = jnp.abs(a) // jnp.abs(b)
+    return jnp.sign(a) * jnp.sign(b) * q
+
+
+def golden_gaussian(a):
+    """Mirror of the device gaussian_step loop (kernels/bodies.rs):
+    factor = (A[i][k] << 8) / A[k][k] (trunc), row -= (factor·rowk) >> 8."""
+    n = a.shape[0]
+    m = jnp.asarray(a, dtype=jnp.int32)
+    for k in range(n - 1):  # n is static at lowering time
+        piv = m[k, k]
+        aik = m[k + 1 :, k]  # (n-k-1,)
+        factor = _trunc_div(aik.astype(jnp.int32) << 8, piv).astype(jnp.int32)
+        delta = (factor[:, None] * m[k, k + 1 :][None, :]) >> 8
+        m = m.at[k + 1 :, k + 1 :].add(-delta)
+        m = m.at[k + 1 :, k].set(0)
+    return (m,)
+
+
+# --------------------------------------------------------------------------
+# nw — wavefront DP via row scan (sequential carry = left neighbor)
+# --------------------------------------------------------------------------
+
+def golden_nw(sim, penalty):
+    """sim is the (dim, dim) similarity matrix (row/col 0 unused); returns
+    the full score matrix after the Needleman–Wunsch recurrence."""
+    dim = sim.shape[0]
+    sim = jnp.asarray(sim, dtype=jnp.int32)
+    penalty = jnp.asarray(penalty, dtype=jnp.int32)
+    p = penalty[0]
+    gaps = (-p * jnp.arange(dim, dtype=jnp.int32)).astype(jnp.int32)
+
+    def row_step(prev_row, sim_row):
+        # prev_row: score[i-1][:]; sim_row carries i's gap head in [0]
+        head = sim_row[0]  # score[i][0] (precomputed gap penalty)
+
+        def cell(left, j):
+            diag = prev_row[j - 1] + sim_row[j]
+            up = prev_row[j] - p
+            lf = left - p
+            s = jnp.maximum(jnp.maximum(diag, up), lf)
+            return s, s
+
+        _, cells = jax.lax.scan(cell, head, jnp.arange(1, dim))
+        row = jnp.concatenate([head[None], cells]).astype(jnp.int32)
+        return row, row
+
+    # stash each row's first-column gap value in sim[:, 0] (unused slot)
+    sim_aug = sim.at[:, 0].set(gaps)
+    first_row = gaps  # score[0][j] = -j·p
+    _, rows = jax.lax.scan(row_step, first_row, sim_aug[1:])
+    return (jnp.concatenate([first_row[None, :], rows], axis=0),)
+
+
+# --------------------------------------------------------------------------
+# default shapes (must match rust/src/kernels/mod.rs scale=1)
+# --------------------------------------------------------------------------
+
+S32 = jnp.int32
+
+
+def benchmark_specs():
+    """name -> (fn, example_args) at the Rust driver's default sizes."""
+    i32 = lambda *shape: jax.ShapeDtypeStruct(shape, S32)
+    return {
+        "vecadd": (golden_vecadd, (i32(2048), i32(2048))),
+        "saxpy": (golden_saxpy, (i32(2048), i32(2048), i32(1))),
+        "sgemm": (golden_sgemm, (i32(16, 16), i32(16, 16))),
+        "bfs": (golden_bfs, (i32(256, 256),)),
+        "nearn": (golden_nearn, (i32(2048), i32(2048), i32(2))),
+        "gaussian": (golden_gaussian, (i32(12, 12),)),
+        "kmeans": (golden_kmeans, (i32(1024), i32(1024), i32(4), i32(4))),
+        "nw": (golden_nw, (i32(49, 49), i32(1))),
+    }

@@ -1,0 +1,37 @@
+"""SplitMix64 twin of ``rust/src/workloads/rng.rs``.
+
+The golden artifacts are compiled for fixed shapes, but their *test*
+inputs (python/tests) and the Rust benchmark inputs must be identical
+streams; both sides implement the same SplitMix64 with pinned
+known-answer vectors (see rng.rs `known_answer_vector`).
+"""
+
+MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return z ^ (z >> 31)
+
+    def next_u32(self) -> int:
+        return self.next_u64() >> 32
+
+    def below(self, bound: int) -> int:
+        """Lemire reduction — identical to the Rust twin."""
+        return (self.next_u32() * bound) >> 32
+
+    def range_i32(self, lo: int, hi: int) -> int:
+        assert hi > lo
+        return lo + self.below(hi - lo)
+
+
+def vec_i32(seed: int, n: int, lo: int, hi: int):
+    r = SplitMix64(seed)
+    return [r.range_i32(lo, hi) for _ in range(n)]

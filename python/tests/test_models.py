@@ -1,0 +1,154 @@
+"""L2 correctness: golden models vs independent Python references,
+driven by SplitMix64 inputs identical to the Rust workload generators."""
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.model import (
+    golden_bfs,
+    golden_gaussian,
+    golden_kmeans,
+    golden_nearn,
+    golden_nw,
+    golden_saxpy,
+    golden_sgemm,
+    golden_vecadd,
+)
+from compile.kernels.matmul import INF
+from compile.workloads import SplitMix64
+
+
+def test_vecadd_model():
+    r = SplitMix64(1)
+    a = np.array([r.range_i32(-1000, 1000) for _ in range(64)], dtype=np.int32)
+    b = np.array([r.range_i32(-1000, 1000) for _ in range(64)], dtype=np.int32)
+    (c,) = golden_vecadd(a, b)
+    np.testing.assert_array_equal(np.asarray(c), a + b)
+
+
+def test_saxpy_model_q16():
+    r = SplitMix64(2)
+    n = 64
+    x = np.array([r.range_i32(-(8 << 16), 8 << 16) for _ in range(n)], dtype=np.int32)
+    y = np.array([r.range_i32(-(8 << 16), 8 << 16) for _ in range(n)], dtype=np.int32)
+    alpha = np.array([r.range_i32(-(4 << 16), 4 << 16)], dtype=np.int32)
+    (got,) = golden_saxpy(x, y, alpha)
+    want = (y.astype(np.int64) + ((alpha[0].astype(np.int64) * x.astype(np.int64)) >> 16)).astype(
+        np.int32
+    )
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_sgemm_model():
+    r = SplitMix64(3)
+    a = np.array([r.range_i32(-16, 16) for _ in range(8 * 8)], dtype=np.int32).reshape(8, 8)
+    b = np.array([r.range_i32(-16, 16) for _ in range(8 * 8)], dtype=np.int32).reshape(8, 8)
+    (c,) = golden_sgemm(a, b)
+    np.testing.assert_array_equal(np.asarray(c), (a.astype(np.int64) @ b.astype(np.int64)).astype(np.int32))
+
+
+def _bfs_reference(adj_list, n):
+    levels = [-1] * n
+    levels[0] = 0
+    frontier = [0]
+    lvl = 0
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for u in adj_list[v]:
+                if levels[u] == -1:
+                    levels[u] = lvl + 1
+                    nxt.append(u)
+        frontier = nxt
+        lvl += 1
+    return levels
+
+
+def test_bfs_model_matches_frontier_bfs():
+    r = SplitMix64(4)
+    n = 64
+    adj_list = [[] for _ in range(n)]
+    dense = np.full((n, n), INF, dtype=np.int32)
+    for v in range(n):
+        deg = 1 + r.below(4)
+        for _ in range(deg):
+            u = r.below(n)
+            if u == v:
+                u = (u + 1) % n
+            adj_list[v].append(u)
+            dense[v][u] = 1
+    (levels,) = golden_bfs(dense)
+    assert list(np.asarray(levels)) == _bfs_reference(adj_list, n)
+
+
+def test_gaussian_model_mirrors_device_ops():
+    r = SplitMix64(5)
+    n = 8
+    a = np.zeros((n, n), dtype=np.int32)
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                a[i][j] = (8 + r.range_i32(0, 4)) << 8
+            else:
+                a[i][j] = r.range_i32(-2 << 8, (2 << 8) + 1)
+    (got,) = golden_gaussian(a)
+    # independent python mirror (trunc division like RISC-V div)
+    m = a.astype(np.int64).copy()
+    for k in range(n - 1):
+        piv = int(m[k, k])
+        for i in range(k + 1, n):
+            aik = int(m[i, k])
+            factor = int(np.trunc((aik << 8) / piv))
+            for j in range(k + 1, n):
+                m[i, j] -= (factor * int(m[k, j])) >> 8
+            m[i, k] = 0
+    np.testing.assert_array_equal(np.asarray(got), m.astype(np.int32))
+
+
+def test_kmeans_model_assigns_nearest():
+    r = SplitMix64(6)
+    n, k = 128, 4
+    cx = np.array([r.range_i32(-800, 800) for _ in range(k)], dtype=np.int32)
+    cy = np.array([r.range_i32(-800, 800) for _ in range(k)], dtype=np.int32)
+    px = np.array([r.range_i32(-900, 900) for _ in range(n)], dtype=np.int32)
+    py = np.array([r.range_i32(-900, 900) for _ in range(n)], dtype=np.int32)
+    (assign,) = golden_kmeans(px, py, cx, cy)
+    d = (px[:, None] - cx[None, :]) ** 2 + (py[:, None] - cy[None, :]) ** 2
+    np.testing.assert_array_equal(np.asarray(assign), d.argmin(axis=1).astype(np.int32))
+
+
+def test_nearn_model():
+    r = SplitMix64(7)
+    n = 128
+    xs = np.array([r.range_i32(-1000, 1000) for _ in range(n)], dtype=np.int32)
+    ys = np.array([r.range_i32(-1000, 1000) for _ in range(n)], dtype=np.int32)
+    q = np.array([r.range_i32(-1000, 1000), r.range_i32(-1000, 1000)], dtype=np.int32)
+    (d,) = golden_nearn(xs, ys, q)
+    want = (xs - q[0]) ** 2 + (ys - q[1]) ** 2
+    np.testing.assert_array_equal(np.asarray(d), want)
+
+
+def test_nw_model_matches_dp():
+    r = SplitMix64(8)
+    n = 12
+    dim = n + 1
+    penalty = 4
+    sim = np.zeros((dim, dim), dtype=np.int32)
+    for i in range(1, dim):
+        for j in range(1, dim):
+            sim[i][j] = r.range_i32(-6, 6)
+    (got,) = golden_nw(sim, np.array([penalty], dtype=np.int32))
+    score = np.zeros((dim, dim), dtype=np.int32)
+    for i in range(1, dim):
+        score[i][0] = -i * penalty
+        score[0][i] = -i * penalty
+    for i in range(1, dim):
+        for j in range(1, dim):
+            score[i][j] = max(
+                score[i - 1][j - 1] + sim[i][j],
+                score[i - 1][j] - penalty,
+                score[i][j - 1] - penalty,
+            )
+    np.testing.assert_array_equal(np.asarray(got), score)

@@ -1,0 +1,161 @@
+//! Line-level lexing: comment stripping, label extraction, operand
+//! tokenization and immediate/register/symbol classification.
+
+use crate::isa::reg::parse_reg;
+
+/// A classified operand token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Operand {
+    Reg(u8),
+    Imm(i64),
+    Symbol(String),
+    /// `sym+4` / `sym-4`
+    SymbolPlus(String, i64),
+    /// `off(base)` memory operand; offset is symbolic or immediate.
+    Mem { offset: Box<Operand>, base: u8 },
+}
+
+/// Strip `#`, `//` and `;` comments.
+pub fn strip_comment(line: &str) -> &str {
+    let mut end = line.len();
+    for (i, _) in line.char_indices() {
+        let rest = &line[i..];
+        if rest.starts_with('#') || rest.starts_with("//") || rest.starts_with(';') {
+            end = i;
+            break;
+        }
+    }
+    &line[..end]
+}
+
+/// Parse an integer literal: decimal, `0x…`, `0b…`, `0o…`, optional sign.
+pub fn parse_int(s: &str) -> Option<i64> {
+    let s = s.trim();
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(rest) => (true, rest),
+        None => (false, s.strip_prefix('+').unwrap_or(s)),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x").or_else(|| body.strip_prefix("0X")) {
+        u64::from_str_radix(&hex.replace('_', ""), 16).ok()? as i64
+    } else if let Some(bin) = body.strip_prefix("0b").or_else(|| body.strip_prefix("0B")) {
+        u64::from_str_radix(&bin.replace('_', ""), 2).ok()? as i64
+    } else if let Some(oct) = body.strip_prefix("0o") {
+        u64::from_str_radix(&oct.replace('_', ""), 8).ok()? as i64
+    } else {
+        body.replace('_', "").parse::<i64>().ok()?
+    };
+    Some(if neg { -v } else { v })
+}
+
+fn is_symbol(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().map(|c| c.is_ascii_alphabetic() || c == '_' || c == '.').unwrap_or(false)
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '$')
+}
+
+/// Classify one operand token.
+pub fn classify(tok: &str) -> Result<Operand, String> {
+    let tok = tok.trim();
+    // memory operand `off(base)`
+    if let Some(open) = tok.find('(') {
+        if tok.ends_with(')') {
+            let off_s = tok[..open].trim();
+            let base_s = tok[open + 1..tok.len() - 1].trim();
+            let base =
+                parse_reg(base_s).ok_or_else(|| format!("bad base register `{base_s}`"))?;
+            let offset = if off_s.is_empty() {
+                Operand::Imm(0)
+            } else {
+                classify(off_s)?
+            };
+            return Ok(Operand::Mem { offset: Box::new(offset), base });
+        }
+    }
+    if let Some(r) = parse_reg(tok) {
+        return Ok(Operand::Reg(r));
+    }
+    if let Some(v) = parse_int(tok) {
+        return Ok(Operand::Imm(v));
+    }
+    // sym+off / sym-off
+    for (i, c) in tok.char_indices().skip(1) {
+        if c == '+' || c == '-' {
+            let (name, off_s) = tok.split_at(i);
+            if is_symbol(name.trim()) {
+                if let Some(off) = parse_int(off_s) {
+                    return Ok(Operand::SymbolPlus(name.trim().to_string(), off));
+                }
+            }
+        }
+    }
+    if is_symbol(tok) {
+        return Ok(Operand::Symbol(tok.to_string()));
+    }
+    Err(format!("unparseable operand `{tok}`"))
+}
+
+/// Split a statement into `(mnemonic, operands)`.
+pub fn tokenize(stmt: &str) -> Result<(String, Vec<Operand>), String> {
+    let stmt = stmt.trim();
+    let (mnemonic, rest) = match stmt.find(char::is_whitespace) {
+        Some(i) => (&stmt[..i], stmt[i..].trim()),
+        None => (stmt, ""),
+    };
+    let mut ops = Vec::new();
+    if !rest.is_empty() {
+        for tok in rest.split(',') {
+            ops.push(classify(tok)?);
+        }
+    }
+    Ok((mnemonic.to_ascii_lowercase(), ops))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_all_comment_styles() {
+        assert_eq!(strip_comment("addi x1, x1, 1 # inc"), "addi x1, x1, 1 ");
+        assert_eq!(strip_comment("nop // c"), "nop ");
+        assert_eq!(strip_comment("nop ; c"), "nop ");
+        assert_eq!(strip_comment("plain"), "plain");
+    }
+
+    #[test]
+    fn parses_int_bases() {
+        assert_eq!(parse_int("42"), Some(42));
+        assert_eq!(parse_int("-42"), Some(-42));
+        assert_eq!(parse_int("0x10"), Some(16));
+        assert_eq!(parse_int("0b101"), Some(5));
+        assert_eq!(parse_int("1_000"), Some(1000));
+        assert_eq!(parse_int("0xFFFFFFFF"), Some(0xFFFF_FFFF));
+        assert_eq!(parse_int("zzz"), None);
+    }
+
+    #[test]
+    fn classifies_operands() {
+        assert_eq!(classify("a0").unwrap(), Operand::Reg(10));
+        assert_eq!(classify("-8").unwrap(), Operand::Imm(-8));
+        assert_eq!(classify("loop").unwrap(), Operand::Symbol("loop".into()));
+        assert_eq!(
+            classify("buf+8").unwrap(),
+            Operand::SymbolPlus("buf".into(), 8)
+        );
+        assert_eq!(
+            classify("-4(sp)").unwrap(),
+            Operand::Mem { offset: Box::new(Operand::Imm(-4)), base: 2 }
+        );
+        assert_eq!(
+            classify("(a1)").unwrap(),
+            Operand::Mem { offset: Box::new(Operand::Imm(0)), base: 11 }
+        );
+    }
+
+    #[test]
+    fn tokenizes_statement() {
+        let (m, ops) = tokenize("addi a0, a1, -1").unwrap();
+        assert_eq!(m, "addi");
+        assert_eq!(ops, vec![Operand::Reg(10), Operand::Reg(11), Operand::Imm(-1)]);
+    }
+}

@@ -1,0 +1,632 @@
+//! Statement parsing and pseudo-instruction expansion.
+//!
+//! Pass 1 parses every line into a [`Line`]; instruction statements become
+//! [`InstrTemplate`]s whose *expansion length* is known immediately (so
+//! label addresses can be laid out) while label operands stay symbolic
+//! until pass 2 calls [`expand`].
+
+pub use super::lexer::Operand;
+use super::lexer::{parse_int, strip_comment, tokenize};
+use crate::isa::{AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp};
+
+/// A parsed source line.
+#[derive(Debug, Clone)]
+pub enum Line {
+    Empty,
+    #[allow(dead_code)] // produced only by the parse_line convenience form
+    Label(String),
+    SectionText,
+    SectionData,
+    Equ(String, i64),
+    Align(u32),
+    Org(u32),
+    /// Fully-literal data bytes.
+    Data(Vec<u8>),
+    /// Data words/halves/bytes with possibly-symbolic operands.
+    DataExpr { size: u8, exprs: Vec<Operand> },
+    Instr(InstrTemplate),
+}
+
+/// An instruction statement with unresolved (symbolic) operands.
+#[derive(Debug, Clone)]
+pub enum InstrTemplate {
+    /// Expands to exactly one concrete instruction.
+    Fixed(Instr),
+    /// Conditional branch to a label/offset.
+    Branch { op: BranchOp, rs1: u8, rs2: u8, target: Operand },
+    /// `jal rd, target`.
+    Jal { rd: u8, target: Operand },
+    /// OP-IMM whose immediate is symbolic (e.g. `.equ` constant).
+    OpImm { op: AluOp, rd: u8, rs1: u8, imm: Operand },
+    /// Load with symbolic offset.
+    Load { op: LoadOp, rd: u8, base: u8, offset: Operand },
+    /// Store with symbolic offset.
+    Store { op: StoreOp, src: u8, base: u8, offset: Operand },
+    /// CSR access with symbolic CSR number.
+    Csr { op: CsrOp, rd: u8, rs1: u8, csr: Operand },
+    /// `li rd, value` — `long` fixes the 2-instruction form.
+    Li { rd: u8, value: Operand, long: bool },
+    /// `la rd, symbol` — always lui+addi.
+    La { rd: u8, target: Operand },
+    /// `call target` — auipc ra + jalr ra.
+    Call { target: Operand },
+    /// `.word`-style data with symbolic operands (routed through pass 2).
+    DataExpr { size: u8, exprs: Vec<Operand> },
+}
+
+impl InstrTemplate {
+    /// Number of 32-bit words this template occupies (must be exact in
+    /// pass 1 so label layout is stable).
+    pub fn expansion_len(&self) -> u32 {
+        match self {
+            InstrTemplate::Li { long, .. } => {
+                if *long {
+                    2
+                } else {
+                    1
+                }
+            }
+            InstrTemplate::La { .. } | InstrTemplate::Call { .. } => 2,
+            InstrTemplate::DataExpr { .. } => unreachable!("data handled separately"),
+            _ => 1,
+        }
+    }
+}
+
+fn reg(op: &Operand) -> Result<u8, String> {
+    match op {
+        Operand::Reg(r) => Ok(*r),
+        other => Err(format!("expected register, got {other:?}")),
+    }
+}
+
+fn mem(op: &Operand) -> Result<(Operand, u8), String> {
+    match op {
+        Operand::Mem { offset, base } => Ok(((**offset).clone(), *base)),
+        other => Err(format!("expected mem operand `off(base)`, got {other:?}")),
+    }
+}
+
+fn expect(ops: &[Operand], n: usize, mnem: &str) -> Result<(), String> {
+    if ops.len() != n {
+        Err(format!("`{mnem}` expects {n} operand(s), got {}", ops.len()))
+    } else {
+        Ok(())
+    }
+}
+
+/// Parse one raw source line into an optional leading label plus a
+/// statement (`loop: addi …` is one line with both).
+pub fn parse_line_full(raw: &str) -> Result<(Option<String>, Line), String> {
+    let mut s = strip_comment(raw).trim();
+    if s.is_empty() {
+        return Ok((None, Line::Empty));
+    }
+    let mut label = None;
+    if let Some(colon) = s.find(':') {
+        let name = s[..colon].trim();
+        if !name.is_empty() && !name.contains(char::is_whitespace) {
+            label = Some(name.to_string());
+            s = s[colon + 1..].trim();
+        }
+    }
+    if s.is_empty() {
+        return Ok((label, Line::Empty));
+    }
+    if let Some(rest) = s.strip_prefix('.') {
+        return Ok((label, parse_directive(rest)?));
+    }
+    let (mnem, ops) = tokenize(s)?;
+    Ok((label, Line::Instr(parse_instr(&mnem, &ops)?)))
+}
+
+/// Parse one raw source line (label-only lines yield [`Line::Label`]).
+/// Convenience wrapper kept for external consumers and tests; the
+/// assembler itself uses [`parse_line_full`].
+#[allow(dead_code)]
+pub fn parse_line(raw: &str) -> Result<Line, String> {
+    match parse_line_full(raw)? {
+        (Some(l), Line::Empty) => Ok(Line::Label(l)),
+        (None, line) => Ok(line),
+        (Some(l), _) => Err(format!(
+            "internal: use parse_line_full for labeled statement at `{l}`"
+        )),
+    }
+}
+
+fn parse_directive(rest: &str) -> Result<Line, String> {
+    let (name, args) = match rest.find(char::is_whitespace) {
+        Some(i) => (&rest[..i], rest[i..].trim()),
+        None => (rest, ""),
+    };
+    match name {
+        "text" => Ok(Line::SectionText),
+        "data" | "rodata" | "bss" => Ok(Line::SectionData),
+        "globl" | "global" | "type" | "size" | "option" | "file" | "p2align" | "section" => {
+            Ok(Line::Empty) // accepted & ignored (gcc-style noise)
+        }
+        "equ" | "set" => {
+            let mut parts = args.splitn(2, ',');
+            let sym = parts.next().unwrap_or("").trim().to_string();
+            let val = parts
+                .next()
+                .and_then(parse_int)
+                .ok_or_else(|| format!(".equ needs `name, value`, got `{args}`"))?;
+            if sym.is_empty() {
+                return Err(".equ needs a symbol name".into());
+            }
+            Ok(Line::Equ(sym, val))
+        }
+        "align" => {
+            let n = parse_int(args).ok_or(".align needs an exponent")? as u32;
+            Ok(Line::Align(n))
+        }
+        "org" => {
+            let a = parse_int(args).ok_or(".org needs an address")? as u32;
+            Ok(Line::Org(a))
+        }
+        "zero" | "space" => {
+            let n = parse_int(args).ok_or(".zero needs a byte count")? as usize;
+            Ok(Line::Data(vec![0u8; n]))
+        }
+        "byte" | "half" | "short" | "word" => {
+            let size: u8 = match name {
+                "byte" => 1,
+                "half" | "short" => 2,
+                _ => 4,
+            };
+            let mut exprs = Vec::new();
+            let mut all_literal = true;
+            for tok in args.split(',') {
+                let op = super::lexer::classify(tok)?;
+                if !matches!(op, Operand::Imm(_)) {
+                    all_literal = false;
+                }
+                exprs.push(op);
+            }
+            if all_literal {
+                let mut bytes = Vec::with_capacity(exprs.len() * size as usize);
+                for e in &exprs {
+                    if let Operand::Imm(v) = e {
+                        bytes.extend_from_slice(&(*v as u32).to_le_bytes()[..size as usize]);
+                    }
+                }
+                Ok(Line::Data(bytes))
+            } else {
+                Ok(Line::DataExpr { size, exprs })
+            }
+        }
+        "asciz" | "string" => {
+            let t = args.trim();
+            let inner = t
+                .strip_prefix('"')
+                .and_then(|x| x.strip_suffix('"'))
+                .ok_or(".asciz needs a quoted string")?;
+            let mut bytes = unescape(inner)?;
+            bytes.push(0);
+            Ok(Line::Data(bytes))
+        }
+        other => Err(format!("unknown directive `.{other}`")),
+    }
+}
+
+fn unescape(s: &str) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(s.len());
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c == '\\' {
+            match it.next() {
+                Some('n') => out.push(b'\n'),
+                Some('t') => out.push(b'\t'),
+                Some('0') => out.push(0),
+                Some('\\') => out.push(b'\\'),
+                Some('"') => out.push(b'"'),
+                other => return Err(format!("bad escape `\\{other:?}`")),
+            }
+        } else {
+            let mut buf = [0u8; 4];
+            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+        }
+    }
+    Ok(out)
+}
+
+/// `li` fits one `addi` iff value ∈ [-2048, 2047].
+fn li_is_short(v: i64) -> bool {
+    (-2048..=2047).contains(&v)
+}
+
+fn parse_instr(mnem: &str, ops: &[Operand]) -> Result<InstrTemplate, String> {
+    use InstrTemplate as T;
+    let imm_of = |op: &Operand| -> Result<i64, String> {
+        match op {
+            Operand::Imm(v) => Ok(*v),
+            other => Err(format!("expected immediate, got {other:?}")),
+        }
+    };
+
+    // register-register ALU (incl. M)
+    let rr = |op: AluOp| -> Result<T, String> {
+        expect(ops, 3, mnem)?;
+        Ok(T::Fixed(Instr::Op { op, rd: reg(&ops[0])?, rs1: reg(&ops[1])?, rs2: reg(&ops[2])? }))
+    };
+    // OP-IMM (symbolic immediate allowed)
+    let ri = |op: AluOp| -> Result<T, String> {
+        expect(ops, 3, mnem)?;
+        Ok(T::OpImm { op, rd: reg(&ops[0])?, rs1: reg(&ops[1])?, imm: ops[2].clone() })
+    };
+    let branch = |op: BranchOp, rs1: &Operand, rs2: &Operand, t: &Operand| -> Result<T, String> {
+        Ok(T::Branch { op, rs1: reg(rs1)?, rs2: reg(rs2)?, target: t.clone() })
+    };
+    let load = |op: LoadOp| -> Result<T, String> {
+        expect(ops, 2, mnem)?;
+        let (offset, base) = mem(&ops[1])?;
+        Ok(T::Load { op, rd: reg(&ops[0])?, base, offset })
+    };
+    let store = |op: StoreOp| -> Result<T, String> {
+        expect(ops, 2, mnem)?;
+        let (offset, base) = mem(&ops[1])?;
+        Ok(T::Store { op, src: reg(&ops[0])?, base, offset })
+    };
+    let csr_full = |op: CsrOp| -> Result<T, String> {
+        expect(ops, 3, mnem)?;
+        let rs1 = match op {
+            CsrOp::Rwi | CsrOp::Rsi | CsrOp::Rci => imm_of(&ops[2])? as u8,
+            _ => reg(&ops[2])?,
+        };
+        Ok(T::Csr { op, rd: reg(&ops[0])?, rs1, csr: ops[1].clone() })
+    };
+
+    match mnem {
+        // ---- RV32I ----
+        "lui" => {
+            expect(ops, 2, mnem)?;
+            let v = imm_of(&ops[1])?;
+            Ok(T::Fixed(Instr::Lui { rd: reg(&ops[0])?, imm: ((v as u32) << 12) as i32 }))
+        }
+        "auipc" => {
+            expect(ops, 2, mnem)?;
+            let v = imm_of(&ops[1])?;
+            Ok(T::Fixed(Instr::Auipc { rd: reg(&ops[0])?, imm: ((v as u32) << 12) as i32 }))
+        }
+        "jal" => match ops.len() {
+            1 => Ok(T::Jal { rd: 1, target: ops[0].clone() }),
+            2 => Ok(T::Jal { rd: reg(&ops[0])?, target: ops[1].clone() }),
+            n => Err(format!("`jal` expects 1-2 operands, got {n}")),
+        },
+        "jalr" => match ops.len() {
+            1 => Ok(T::Fixed(Instr::Jalr { rd: 1, rs1: reg(&ops[0])?, imm: 0 })),
+            2 => {
+                let (offset, base) = mem(&ops[1])?;
+                let imm = match offset {
+                    Operand::Imm(v) => v as i32,
+                    other => return Err(format!("jalr offset must be literal, got {other:?}")),
+                };
+                Ok(T::Fixed(Instr::Jalr { rd: reg(&ops[0])?, rs1: base, imm }))
+            }
+            n => Err(format!("`jalr` expects 1-2 operands, got {n}")),
+        },
+        "beq" | "bne" | "blt" | "bge" | "bltu" | "bgeu" => {
+            expect(ops, 3, mnem)?;
+            let op = match mnem {
+                "beq" => BranchOp::Beq,
+                "bne" => BranchOp::Bne,
+                "blt" => BranchOp::Blt,
+                "bge" => BranchOp::Bge,
+                "bltu" => BranchOp::Bltu,
+                _ => BranchOp::Bgeu,
+            };
+            branch(op, &ops[0], &ops[1], &ops[2])
+        }
+        "lb" => load(LoadOp::Lb),
+        "lh" => load(LoadOp::Lh),
+        "lw" => load(LoadOp::Lw),
+        "lbu" => load(LoadOp::Lbu),
+        "lhu" => load(LoadOp::Lhu),
+        "sb" => store(StoreOp::Sb),
+        "sh" => store(StoreOp::Sh),
+        "sw" => store(StoreOp::Sw),
+        "addi" => ri(AluOp::Add),
+        "slti" => ri(AluOp::Slt),
+        "sltiu" => ri(AluOp::Sltu),
+        "xori" => ri(AluOp::Xor),
+        "ori" => ri(AluOp::Or),
+        "andi" => ri(AluOp::And),
+        "slli" => ri(AluOp::Sll),
+        "srli" => ri(AluOp::Srl),
+        "srai" => ri(AluOp::Sra),
+        "add" => rr(AluOp::Add),
+        "sub" => rr(AluOp::Sub),
+        "sll" => rr(AluOp::Sll),
+        "slt" => rr(AluOp::Slt),
+        "sltu" => rr(AluOp::Sltu),
+        "xor" => rr(AluOp::Xor),
+        "srl" => rr(AluOp::Srl),
+        "sra" => rr(AluOp::Sra),
+        "or" => rr(AluOp::Or),
+        "and" => rr(AluOp::And),
+        "fence" | "fence.i" => Ok(T::Fixed(Instr::Fence)),
+        "ecall" => Ok(T::Fixed(Instr::Ecall)),
+        "ebreak" => Ok(T::Fixed(Instr::Ebreak)),
+        // ---- RV32M ----
+        "mul" => rr(AluOp::Mul),
+        "mulh" => rr(AluOp::Mulh),
+        "mulhsu" => rr(AluOp::Mulhsu),
+        "mulhu" => rr(AluOp::Mulhu),
+        "div" => rr(AluOp::Div),
+        "divu" => rr(AluOp::Divu),
+        "rem" => rr(AluOp::Rem),
+        "remu" => rr(AluOp::Remu),
+        // ---- Zicsr ----
+        "csrrw" => csr_full(CsrOp::Rw),
+        "csrrs" => csr_full(CsrOp::Rs),
+        "csrrc" => csr_full(CsrOp::Rc),
+        "csrrwi" => csr_full(CsrOp::Rwi),
+        "csrrsi" => csr_full(CsrOp::Rsi),
+        "csrrci" => csr_full(CsrOp::Rci),
+        "csrr" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Csr { op: CsrOp::Rs, rd: reg(&ops[0])?, rs1: 0, csr: ops[1].clone() })
+        }
+        "csrw" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Csr { op: CsrOp::Rw, rd: 0, rs1: reg(&ops[1])?, csr: ops[0].clone() })
+        }
+        // ---- Vortex SIMT (paper Table I) + intrinsic aliases (Fig 2/3) ----
+        "wspawn" | "vx_wspawn" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Fixed(Instr::Wspawn { rs1: reg(&ops[0])?, rs2: reg(&ops[1])? }))
+        }
+        "tmc" | "vx_tmc" => {
+            expect(ops, 1, mnem)?;
+            Ok(T::Fixed(Instr::Tmc { rs1: reg(&ops[0])? }))
+        }
+        "split" | "vx_split" => {
+            expect(ops, 1, mnem)?;
+            Ok(T::Fixed(Instr::Split { rs1: reg(&ops[0])? }))
+        }
+        "join" | "vx_join" => Ok(T::Fixed(Instr::Join)),
+        "bar" | "vx_bar" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Fixed(Instr::Bar { rs1: reg(&ops[0])?, rs2: reg(&ops[1])? }))
+        }
+        // ---- pseudo-instructions ----
+        "nop" => Ok(T::Fixed(Instr::OpImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 0 })),
+        "mv" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Fixed(Instr::OpImm { op: AluOp::Add, rd: reg(&ops[0])?, rs1: reg(&ops[1])?, imm: 0 }))
+        }
+        "not" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Fixed(Instr::OpImm { op: AluOp::Xor, rd: reg(&ops[0])?, rs1: reg(&ops[1])?, imm: -1 }))
+        }
+        "neg" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Fixed(Instr::Op { op: AluOp::Sub, rd: reg(&ops[0])?, rs1: 0, rs2: reg(&ops[1])? }))
+        }
+        "seqz" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Fixed(Instr::OpImm { op: AluOp::Sltu, rd: reg(&ops[0])?, rs1: reg(&ops[1])?, imm: 1 }))
+        }
+        "snez" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Fixed(Instr::Op { op: AluOp::Sltu, rd: reg(&ops[0])?, rs1: 0, rs2: reg(&ops[1])? }))
+        }
+        "sltz" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Fixed(Instr::Op { op: AluOp::Slt, rd: reg(&ops[0])?, rs1: reg(&ops[1])?, rs2: 0 }))
+        }
+        "sgtz" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::Fixed(Instr::Op { op: AluOp::Slt, rd: reg(&ops[0])?, rs1: 0, rs2: reg(&ops[1])? }))
+        }
+        "beqz" | "bnez" | "blez" | "bgez" | "bltz" | "bgtz" => {
+            expect(ops, 2, mnem)?;
+            let zero = Operand::Reg(0);
+            match mnem {
+                "beqz" => branch(BranchOp::Beq, &ops[0], &zero, &ops[1]),
+                "bnez" => branch(BranchOp::Bne, &ops[0], &zero, &ops[1]),
+                "blez" => branch(BranchOp::Bge, &zero, &ops[0], &ops[1]),
+                "bgez" => branch(BranchOp::Bge, &ops[0], &zero, &ops[1]),
+                "bltz" => branch(BranchOp::Blt, &ops[0], &zero, &ops[1]),
+                _ => branch(BranchOp::Blt, &zero, &ops[0], &ops[1]),
+            }
+        }
+        "bgt" | "ble" | "bgtu" | "bleu" => {
+            expect(ops, 3, mnem)?;
+            // swap operands
+            match mnem {
+                "bgt" => branch(BranchOp::Blt, &ops[1], &ops[0], &ops[2]),
+                "ble" => branch(BranchOp::Bge, &ops[1], &ops[0], &ops[2]),
+                "bgtu" => branch(BranchOp::Bltu, &ops[1], &ops[0], &ops[2]),
+                _ => branch(BranchOp::Bgeu, &ops[1], &ops[0], &ops[2]),
+            }
+        }
+        "j" => {
+            expect(ops, 1, mnem)?;
+            Ok(T::Jal { rd: 0, target: ops[0].clone() })
+        }
+        "jr" => {
+            expect(ops, 1, mnem)?;
+            Ok(T::Fixed(Instr::Jalr { rd: 0, rs1: reg(&ops[0])?, imm: 0 }))
+        }
+        "ret" => Ok(T::Fixed(Instr::Jalr { rd: 0, rs1: 1, imm: 0 })),
+        "call" => {
+            expect(ops, 1, mnem)?;
+            Ok(T::Call { target: ops[0].clone() })
+        }
+        "li" => {
+            expect(ops, 2, mnem)?;
+            let rd = reg(&ops[0])?;
+            let long = match &ops[1] {
+                Operand::Imm(v) => !li_is_short(*v),
+                _ => true, // symbolic: conservatively 2 instructions
+            };
+            Ok(T::Li { rd, value: ops[1].clone(), long })
+        }
+        "la" => {
+            expect(ops, 2, mnem)?;
+            Ok(T::La { rd: reg(&ops[0])?, target: ops[1].clone() })
+        }
+        other => Err(format!("unknown mnemonic `{other}`")),
+    }
+}
+
+/// Split a 32-bit value into `(hi20, lo12)` such that
+/// `(hi20 << 12) + sext(lo12) == value` (the standard `lui+addi` carry fix).
+pub fn hi_lo(value: u32) -> (i32, i32) {
+    let lo = ((value & 0xfff) as i32) << 20 >> 20; // sign-extend 12 bits
+    let hi = value.wrapping_sub(lo as u32);
+    ((hi & 0xffff_f000) as i32, lo)
+}
+
+/// Resolve a template into concrete instructions at address `addr`.
+///
+/// `resolve` maps a symbolic operand to its absolute value.
+pub fn expand<F>(template: InstrTemplate, addr: u32, resolve: F) -> Result<Vec<Instr>, String>
+where
+    F: Fn(&Operand) -> Result<u32, crate::asm::AsmError>,
+{
+    use InstrTemplate as T;
+    let val = |op: &Operand| -> Result<u32, String> {
+        match op {
+            Operand::Imm(v) => Ok(*v as u32),
+            _ => resolve(op).map_err(|e| e.msg),
+        }
+    };
+    // Branch/jump displacement: literal immediates are *relative* offsets;
+    // symbols are absolute targets.
+    let disp = |op: &Operand| -> Result<i32, String> {
+        match op {
+            Operand::Imm(v) => Ok(*v as i32),
+            _ => {
+                let target = resolve(op).map_err(|e| e.msg)?;
+                Ok(target.wrapping_sub(addr) as i32)
+            }
+        }
+    };
+    match template {
+        T::Fixed(i) => Ok(vec![i]),
+        T::Branch { op, rs1, rs2, target } => {
+            let d = disp(&target)?;
+            if !(-4096..=4094).contains(&d) || d % 2 != 0 {
+                return Err(format!("branch displacement {d} out of range"));
+            }
+            Ok(vec![Instr::Branch { op, rs1, rs2, imm: d }])
+        }
+        T::Jal { rd, target } => {
+            let d = disp(&target)?;
+            if !(-(1 << 20)..(1 << 20)).contains(&d) || d % 2 != 0 {
+                return Err(format!("jal displacement {d} out of range"));
+            }
+            Ok(vec![Instr::Jal { rd, imm: d }])
+        }
+        T::OpImm { op, rd, rs1, imm } => {
+            let v = val(&imm)? as i32;
+            let ok = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => (0..32).contains(&v),
+                _ => (-2048..=2047).contains(&v),
+            };
+            if !ok {
+                return Err(format!("immediate {v} out of range for {op:?}"));
+            }
+            Ok(vec![Instr::OpImm { op, rd, rs1, imm: v }])
+        }
+        T::Load { op, rd, base, offset } => {
+            let v = val(&offset)? as i32;
+            if !(-2048..=2047).contains(&v) {
+                return Err(format!("load offset {v} out of range"));
+            }
+            Ok(vec![Instr::Load { op, rd, rs1: base, imm: v }])
+        }
+        T::Store { op, src, base, offset } => {
+            let v = val(&offset)? as i32;
+            if !(-2048..=2047).contains(&v) {
+                return Err(format!("store offset {v} out of range"));
+            }
+            Ok(vec![Instr::Store { op, rs1: base, rs2: src, imm: v }])
+        }
+        T::Csr { op, rd, rs1, csr } => {
+            let c = val(&csr)?;
+            if c > 0xfff {
+                return Err(format!("csr number {c:#x} out of range"));
+            }
+            Ok(vec![Instr::Csr { op, rd, rs1, csr: c as u16 }])
+        }
+        T::Li { rd, value, long } => {
+            let v = val(&value)?;
+            if !long {
+                return Ok(vec![Instr::OpImm { op: AluOp::Add, rd, rs1: 0, imm: v as i32 }]);
+            }
+            let (hi, lo) = hi_lo(v);
+            Ok(vec![
+                Instr::Lui { rd, imm: hi },
+                Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: lo },
+            ])
+        }
+        T::La { rd, target } => {
+            let v = val(&target)?;
+            let (hi, lo) = hi_lo(v);
+            Ok(vec![
+                Instr::Lui { rd, imm: hi },
+                Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: lo },
+            ])
+        }
+        T::Call { target } => {
+            let d = disp(&target)?;
+            let (hi, lo) = hi_lo(d as u32);
+            Ok(vec![
+                Instr::Auipc { rd: 1, imm: hi },
+                Instr::Jalr { rd: 1, rs1: 1, imm: lo },
+            ])
+        }
+        T::DataExpr { .. } => Err("data expression in instruction position".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hi_lo_reconstructs() {
+        for v in [0u32, 1, 0x7ff, 0x800, 0xfff, 0x1000, 0x12345678, 0xffff_ffff, 0x8000_0000] {
+            let (hi, lo) = hi_lo(v);
+            assert_eq!((hi as u32).wrapping_add(lo as u32), v, "value {v:#x}");
+        }
+    }
+
+    #[test]
+    fn parses_label_only_line() {
+        assert!(matches!(parse_line("loop:").unwrap(), Line::Label(l) if l == "loop"));
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic() {
+        assert!(parse_line("frobnicate a0").is_err());
+    }
+
+    #[test]
+    fn data_word_literal() {
+        match parse_line(".word 1, 2").unwrap() {
+            Line::Data(bytes) => assert_eq!(bytes, vec![1, 0, 0, 0, 2, 0, 0, 0]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn data_word_symbolic() {
+        assert!(matches!(
+            parse_line(".word foo, 2").unwrap(),
+            Line::DataExpr { size: 4, .. }
+        ));
+    }
+
+    #[test]
+    fn asciz_escapes() {
+        match parse_line(r#".asciz "hi\n""#).unwrap() {
+            Line::Data(bytes) => assert_eq!(bytes, vec![b'h', b'i', b'\n', 0]),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Assembled program image: a sparse byte map plus the symbol table —
+//! the loadable unit both the functional emulator and the cycle simulator
+//! consume (our stand-in for the paper's newlib ELF binaries).
+
+use crate::isa::{decode, Instr};
+use std::collections::{BTreeMap, HashMap};
+
+/// Section discriminator for reporting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Section {
+    Text,
+    Data,
+}
+
+/// A fully-assembled, relocated program image.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    /// Sparse memory image (byte granularity, little-endian words).
+    pub image: BTreeMap<u32, u8>,
+    /// Label/`.equ` symbol table.
+    pub symbols: HashMap<String, u32>,
+    /// Base address of `.text` (warp 0's reset PC).
+    pub text_base: u32,
+    /// Base address of `.data`.
+    pub data_base: u32,
+    /// Addresses of assembled instructions, in layout order.
+    pub instr_addrs: Vec<u32>,
+}
+
+impl Program {
+    pub fn new(text_base: u32, data_base: u32) -> Self {
+        Program { text_base, data_base, ..Default::default() }
+    }
+
+    /// Place raw bytes at an absolute address.
+    pub fn place(&mut self, addr: u32, bytes: &[u8]) {
+        for (i, b) in bytes.iter().enumerate() {
+            self.image.insert(addr.wrapping_add(i as u32), *b);
+        }
+    }
+
+    /// Record that an instruction was emitted at `addr`.
+    pub fn note_instr(&mut self, addr: u32) {
+        self.instr_addrs.push(addr);
+    }
+
+    /// Read a little-endian 32-bit word (absent bytes read as 0).
+    pub fn read_u32(&self, addr: u32) -> u32 {
+        let mut v = 0u32;
+        for i in 0..4 {
+            v |= (*self.image.get(&addr.wrapping_add(i)).unwrap_or(&0) as u32) << (8 * i);
+        }
+        v
+    }
+
+    /// Entry point (symbol `_start` / `main` if present, else text base).
+    pub fn entry(&self) -> u32 {
+        self.symbols
+            .get("_start")
+            .or_else(|| self.symbols.get("main"))
+            .copied()
+            .unwrap_or(self.text_base)
+    }
+
+    /// Decoded instructions in layout order, with addresses.
+    pub fn text_instrs(&self) -> Vec<(u32, Instr)> {
+        self.instr_addrs
+            .iter()
+            .filter_map(|&a| decode(self.read_u32(a)).ok().map(|i| (a, i)))
+            .collect()
+    }
+
+    /// Total placed bytes (for reports).
+    pub fn size_bytes(&self) -> usize {
+        self.image.len()
+    }
+
+    /// Iterate over (address, byte) pairs for loading into simulator memory.
+    pub fn bytes(&self) -> impl Iterator<Item = (u32, u8)> + '_ {
+        self.image.iter().map(|(&a, &b)| (a, b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn place_and_read_roundtrip() {
+        let mut p = Program::new(0x8000_0000, 0x9000_0000);
+        p.place(0x8000_0000, &0xdead_beefu32.to_le_bytes());
+        assert_eq!(p.read_u32(0x8000_0000), 0xdead_beef);
+        assert_eq!(p.size_bytes(), 4);
+    }
+
+    #[test]
+    fn entry_prefers_start_symbol() {
+        let mut p = Program::new(0x8000_0000, 0x9000_0000);
+        assert_eq!(p.entry(), 0x8000_0000);
+        p.symbols.insert("main".into(), 0x8000_0010);
+        assert_eq!(p.entry(), 0x8000_0010);
+        p.symbols.insert("_start".into(), 0x8000_0020);
+        assert_eq!(p.entry(), 0x8000_0020);
+    }
+
+    #[test]
+    fn missing_bytes_read_zero() {
+        let p = Program::new(0, 0);
+        assert_eq!(p.read_u32(0x1234), 0);
+    }
+}

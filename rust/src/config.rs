@@ -1,0 +1,200 @@
+//! Machine configuration shared by the functional emulator, the cycle
+//! simulator, the power model and the software stack.
+//!
+//! The paper's design space is `(warps × threads)` per core (Figs 8–10)
+//! with fixed cache parameters: *"1Kb 2 way instruction cache, 4 Kb 2 way 4
+//! banks data cache, and an 8kb 4 banks shared memory module"* (§V-A), and
+//! multi-core configurations with a global barrier table (§IV-D).
+
+/// Cache geometry (one level; the paper's cores have I$, D$ and a
+/// software-managed shared memory).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Total size in bytes.
+    pub size: u32,
+    /// Line size in bytes.
+    pub line: u32,
+    /// Associativity (ways).
+    pub ways: u32,
+    /// Number of banks (load/store lane conflicts are modeled per bank).
+    pub banks: u32,
+    /// Hit latency in cycles.
+    pub hit_latency: u32,
+    /// Miss penalty in cycles (fill from the next level).
+    pub miss_penalty: u32,
+    /// Number of MSHRs (outstanding misses) before the cache back-pressures.
+    pub mshrs: u32,
+}
+
+impl CacheConfig {
+    /// Paper §V-A instruction cache: 1 KB, 2-way, 1 bank.
+    pub fn paper_icache() -> Self {
+        CacheConfig { size: 1024, line: 16, ways: 2, banks: 1, hit_latency: 1, miss_penalty: 50, mshrs: 4 }
+    }
+
+    /// Paper §V-A data cache: 4 KB, 2-way, 4 banks.
+    pub fn paper_dcache() -> Self {
+        CacheConfig { size: 4096, line: 16, ways: 2, banks: 4, hit_latency: 1, miss_penalty: 50, mshrs: 8 }
+    }
+
+    pub fn sets(&self) -> u32 {
+        self.size / (self.line * self.ways)
+    }
+}
+
+/// Shared-memory geometry (software-managed scratchpad; §V-A: 8 KB, 4 banks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SmemConfig {
+    pub size: u32,
+    pub banks: u32,
+    pub latency: u32,
+}
+
+impl SmemConfig {
+    pub fn paper() -> Self {
+        SmemConfig { size: 8192, banks: 4, latency: 1 }
+    }
+}
+
+/// Fixed-function latencies for the execute stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimingConfig {
+    /// Single-cycle ALU ops.
+    pub alu_latency: u32,
+    /// M-extension multiply.
+    pub mul_latency: u32,
+    /// M-extension divide/remainder (iterative divider).
+    pub div_latency: u32,
+    /// Branch resolution (redirect penalty on taken control flow).
+    pub branch_penalty: u32,
+}
+
+impl Default for TimingConfig {
+    fn default() -> Self {
+        TimingConfig { alu_latency: 1, mul_latency: 3, div_latency: 32, branch_penalty: 2 }
+    }
+}
+
+/// Full machine configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MachineConfig {
+    pub num_cores: u32,
+    /// Warp-scheduling policy (ablation axis; default = paper's two-level).
+    pub sched_policy: crate::sim::scheduler::SchedPolicy,
+    /// Hardware warps per core.
+    pub num_warps: u32,
+    /// Hardware threads (lanes) per warp.
+    pub num_threads: u32,
+    pub icache: CacheConfig,
+    pub dcache: CacheConfig,
+    pub smem: SmemConfig,
+    pub timing: TimingConfig,
+    /// Base of the per-thread stack region (stacks grow down from
+    /// `stack_base + (core,warp,thread) slot * stack_size`).
+    pub stack_base: u32,
+    /// Stack bytes per hardware thread.
+    pub stack_size: u32,
+    /// Base address of the shared-memory aperture (addresses in
+    /// `[smem_base, smem_base + smem.size)` route to the scratchpad).
+    pub smem_base: u32,
+}
+
+impl MachineConfig {
+    /// The paper's layout/power reference point: 8 warps × 4 threads
+    /// (Fig 7), paper §V-A caches.
+    pub fn paper_default() -> Self {
+        MachineConfig::with_wt(8, 4)
+    }
+
+    /// A `(warps × threads)` design point with paper-fixed caches — the axis
+    /// the paper sweeps in Figs 8–10.
+    pub fn with_wt(num_warps: u32, num_threads: u32) -> Self {
+        MachineConfig {
+            num_cores: 1,
+            sched_policy: Default::default(),
+            num_warps,
+            num_threads,
+            icache: CacheConfig::paper_icache(),
+            dcache: CacheConfig::paper_dcache(),
+            smem: SmemConfig::paper(),
+            timing: TimingConfig::default(),
+            stack_base: 0xA000_0000,
+            stack_size: 0x1_0000,
+            smem_base: 0xB000_0000,
+        }
+    }
+
+    /// Total hardware threads in the machine.
+    pub fn total_threads(&self) -> u32 {
+        self.num_cores * self.num_warps * self.num_threads
+    }
+
+    /// Stack top for a given (core, warp, thread) hardware slot.
+    pub fn stack_top(&self, core: u32, warp: u32, thread: u32) -> u32 {
+        let slot = (core * self.num_warps + warp) * self.num_threads + thread;
+        // top of the slot's region, 16-byte aligned (RISC-V ABI)
+        self.stack_base + (slot + 1) * self.stack_size - 16
+    }
+
+    /// True if `addr` falls in the shared-memory aperture.
+    pub fn is_smem(&self, addr: u32) -> bool {
+        addr >= self.smem_base && addr < self.smem_base + self.smem.size
+    }
+
+    /// The paper's Fig 8–10 sweep axis, as `(warps, threads)` pairs.
+    pub fn paper_sweep() -> Vec<(u32, u32)> {
+        vec![
+            (1, 1),
+            (2, 2),
+            (2, 4),
+            (4, 4),
+            (4, 8),
+            (8, 4),
+            (8, 8),
+            (8, 16),
+            (16, 16),
+            (16, 32),
+            (32, 32),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cache_geometry() {
+        let i = CacheConfig::paper_icache();
+        assert_eq!(i.sets(), 32); // 1KB / (16B * 2 ways)
+        let d = CacheConfig::paper_dcache();
+        assert_eq!(d.sets(), 128);
+    }
+
+    #[test]
+    fn stack_slots_disjoint() {
+        let m = MachineConfig::with_wt(4, 4);
+        let a = m.stack_top(0, 0, 0);
+        let b = m.stack_top(0, 0, 1);
+        let c = m.stack_top(0, 1, 0);
+        assert!(b > a && c > b);
+        assert_eq!(b - a, m.stack_size);
+        assert_eq!(a % 16, 0);
+    }
+
+    #[test]
+    fn smem_aperture() {
+        let m = MachineConfig::paper_default();
+        assert!(m.is_smem(m.smem_base));
+        assert!(m.is_smem(m.smem_base + m.smem.size - 1));
+        assert!(!m.is_smem(m.smem_base + m.smem.size));
+        assert!(!m.is_smem(0x8000_0000));
+    }
+
+    #[test]
+    fn total_threads() {
+        let mut m = MachineConfig::with_wt(8, 4);
+        m.num_cores = 2;
+        assert_eq!(m.total_threads(), 64);
+    }
+}

@@ -1,0 +1,117 @@
+//! Micro-benchmark harness (in-tree substrate for `criterion`): warmup,
+//! timed iterations, mean/stddev/min reporting. Used by every target in
+//! `benches/` (`cargo bench` runs them as `harness = false` binaries).
+
+use std::time::{Duration, Instant};
+
+/// One measurement summary.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:>12.3?}/iter (±{:.3?}, min {:.3?}, n={})",
+            self.mean, self.stddev, self.min, self.iters
+        )
+    }
+}
+
+/// Benchmark runner with fixed warmup + sample counts (deterministic
+/// runtime, suitable for CI).
+pub struct Bencher {
+    pub warmup_iters: u32,
+    pub sample_iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 2, sample_iters: 5 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, sample_iters: 3 }
+    }
+
+    /// Time `f`, returning the summary. The closure's return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters as usize);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let mean_ns = samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>()
+            / samples.len() as f64;
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_nanos() as f64 - mean_ns;
+                x * x
+            })
+            .sum::<f64>()
+            / samples.len() as f64;
+        let m = Measurement {
+            iters: self.sample_iters,
+            mean: Duration::from_nanos(mean_ns as u64),
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            min: *samples.iter().min().unwrap(),
+        };
+        println!("bench {name:<40} {m}");
+        m
+    }
+}
+
+/// Throughput helper: report items/sec for a measured run.
+pub fn throughput(items: u64, m: &Measurement) -> f64 {
+    items as f64 / (m.mean.as_secs_f64().max(1e-12))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher::quick();
+        let m = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.min <= m.mean);
+    }
+
+    #[test]
+    fn throughput_scales() {
+        let m = Measurement {
+            iters: 1,
+            mean: Duration::from_millis(10),
+            stddev: Duration::ZERO,
+            min: Duration::from_millis(10),
+        };
+        let t = throughput(1000, &m);
+        assert!((t - 100_000.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,385 @@
+//! Command-line interface (in-tree substrate for `clap`).
+//!
+//! ```text
+//! vortex run --bench sgemm --warps 8 --threads 4 [--cores N] [--emu]
+//!            [--scale K] [--seed S] [--no-warm] [--config file.toml]
+//! vortex sweep [--bench NAME]... [--seed S]       # Fig 9 + Fig 10 rows
+//! vortex power [--warps W --threads T]            # Fig 7/8 model output
+//! vortex validate [--artifacts DIR] [--seed S]    # golden-model check
+//! vortex list                                     # benchmarks + configs
+//! ```
+
+use super::{config as cfgfile, report::Table, sweep};
+use crate::config::MachineConfig;
+use crate::kernels::Bench;
+use crate::pocl::Backend;
+use crate::power;
+use crate::runtime::GoldenRuntime;
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    Run {
+        bench: Bench,
+        cfg: MachineConfig,
+        backend: Backend,
+        scale: u32,
+        seed: u64,
+        warm: bool,
+    },
+    Sweep {
+        benches: Vec<Bench>,
+        seed: u64,
+    },
+    Power {
+        warps: u32,
+        threads: u32,
+    },
+    Validate {
+        artifacts: String,
+        seed: u64,
+    },
+    List,
+    Help,
+}
+
+/// Argument-parse failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+fn take_value<'a>(
+    args: &'a [String],
+    i: &mut usize,
+    flag: &str,
+) -> Result<&'a str, CliError> {
+    *i += 1;
+    args.get(*i).map(|s| s.as_str()).ok_or_else(|| CliError(format!("{flag} needs a value")))
+}
+
+/// Parse an argument vector (excluding argv[0]).
+pub fn parse(args: &[String]) -> Result<Command, CliError> {
+    let Some(cmd) = args.first() else {
+        return Ok(Command::Help);
+    };
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => Ok(Command::Help),
+        "list" => Ok(Command::List),
+        "run" => {
+            let mut bench = None;
+            let mut warps = 8u32;
+            let mut threads = 4u32;
+            let mut cores = 1u32;
+            let mut backend = Backend::SimX;
+            let mut scale = 1u32;
+            let mut seed = 0xC0FFEEu64;
+            let mut warm = true;
+            let mut base: Option<MachineConfig> = None;
+            let mut i = 1;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--bench" => {
+                        let v = take_value(args, &mut i, "--bench")?;
+                        bench = Some(
+                            Bench::from_name(v)
+                                .ok_or_else(|| CliError(format!("unknown benchmark `{v}`")))?,
+                        );
+                    }
+                    "--warps" => warps = parse_num(take_value(args, &mut i, "--warps")?)?,
+                    "--threads" => threads = parse_num(take_value(args, &mut i, "--threads")?)?,
+                    "--cores" => cores = parse_num(take_value(args, &mut i, "--cores")?)?,
+                    "--scale" => scale = parse_num(take_value(args, &mut i, "--scale")?)?,
+                    "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
+                    "--emu" => backend = Backend::Emu,
+                    "--no-warm" => warm = false,
+                    "--config" => {
+                        let path = take_value(args, &mut i, "--config")?;
+                        base = Some(
+                            cfgfile::load_machine(path)
+                                .map_err(|e| CliError(format!("config: {e}")))?,
+                        );
+                    }
+                    other => return Err(CliError(format!("unknown flag `{other}`"))),
+                }
+                i += 1;
+            }
+            let bench = bench.ok_or_else(|| CliError("run requires --bench".into()))?;
+            let mut cfg = base.unwrap_or_else(|| MachineConfig::with_wt(warps, threads));
+            if base_is_overridden(args, "--warps") {
+                cfg.num_warps = warps;
+            }
+            if base_is_overridden(args, "--threads") {
+                cfg.num_threads = threads;
+            }
+            cfg.num_cores = cores;
+            Ok(Command::Run { bench, cfg, backend, scale, seed, warm })
+        }
+        "sweep" => {
+            let mut benches = Vec::new();
+            let mut seed = 0xC0FFEEu64;
+            let mut i = 1;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--bench" => {
+                        let v = take_value(args, &mut i, "--bench")?;
+                        benches.push(
+                            Bench::from_name(v)
+                                .ok_or_else(|| CliError(format!("unknown benchmark `{v}`")))?,
+                        );
+                    }
+                    "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
+                    other => return Err(CliError(format!("unknown flag `{other}`"))),
+                }
+                i += 1;
+            }
+            if benches.is_empty() {
+                benches = Bench::ALL.to_vec();
+            }
+            Ok(Command::Sweep { benches, seed })
+        }
+        "power" => {
+            let mut warps = 8u32;
+            let mut threads = 4u32;
+            let mut i = 1;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--warps" => warps = parse_num(take_value(args, &mut i, "--warps")?)?,
+                    "--threads" => threads = parse_num(take_value(args, &mut i, "--threads")?)?,
+                    other => return Err(CliError(format!("unknown flag `{other}`"))),
+                }
+                i += 1;
+            }
+            Ok(Command::Power { warps, threads })
+        }
+        "validate" => {
+            let mut artifacts = "artifacts".to_string();
+            let mut seed = 0xC0FFEEu64;
+            let mut i = 1;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--artifacts" => {
+                        artifacts = take_value(args, &mut i, "--artifacts")?.to_string()
+                    }
+                    "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
+                    other => return Err(CliError(format!("unknown flag `{other}`"))),
+                }
+                i += 1;
+            }
+            Ok(Command::Validate { artifacts, seed })
+        }
+        other => Err(CliError(format!("unknown command `{other}` (try `help`)"))),
+    }
+}
+
+fn base_is_overridden(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn parse_num(s: &str) -> Result<u32, CliError> {
+    let s = s.replace('_', "");
+    if let Some(hex) = s.strip_prefix("0x") {
+        u32::from_str_radix(hex, 16).map_err(|_| CliError(format!("bad number `{s}`")))
+    } else {
+        s.parse().map_err(|_| CliError(format!("bad number `{s}`")))
+    }
+}
+
+pub const HELP: &str = "\
+Vortex: OpenCL-compatible RISC-V GPGPU — full-stack reproduction
+
+USAGE:
+  vortex run --bench <name> [--warps W --threads T --cores C] [--emu]
+             [--scale K --seed S --no-warm --config file.toml]
+  vortex sweep [--bench <name>]... [--seed S]     Fig 9 + Fig 10 series
+  vortex power [--warps W --threads T]            Fig 7/8 area/power model
+  vortex validate [--artifacts DIR] [--seed S]    golden-model validation
+  vortex list                                     benchmarks + paper configs
+";
+
+/// Execute a parsed command, writing human-readable output to stdout.
+/// Returns a process exit code.
+pub fn execute(cmd: Command) -> i32 {
+    match cmd {
+        Command::Help => {
+            println!("{HELP}");
+            0
+        }
+        Command::List => {
+            println!("benchmarks: {}", Bench::ALL.map(|b| b.name()).join(", "));
+            println!("paper sweep configs (warps x threads):");
+            for (w, t) in MachineConfig::paper_sweep() {
+                println!("  {w}x{t}");
+            }
+            0
+        }
+        Command::Run { bench, cfg, backend, scale, seed, warm } => {
+            println!(
+                "running {} on {}w x {}t x {}c ({:?}, scale {scale}, seed {seed:#x})",
+                bench.name(),
+                cfg.num_warps,
+                cfg.num_threads,
+                cfg.num_cores,
+                backend
+            );
+            match bench.run_scaled(cfg, scale, seed, backend, warm) {
+                Ok(r) => {
+                    println!(
+                        "cycles {}  launches {}  verified {}",
+                        r.cycles, r.launches, r.verified
+                    );
+                    println!("{}", r.stats.report(cfg.num_threads));
+                    let e = power::energy_mj(&cfg, &r.stats);
+                    println!("model energy {:.4} mJ  power {:.1} mW", e, power::evaluate(&cfg).power_mw);
+                    if r.verified {
+                        0
+                    } else {
+                        2
+                    }
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    1
+                }
+            }
+        }
+        Command::Sweep { benches, seed } => {
+            let configs = sweep::fig9_configs();
+            match sweep::fig9_table(&benches, &configs, seed) {
+                Ok(table) => {
+                    println!("Fig 9 — normalized execution time (norm to 2x2):\n{}", table.render());
+                    0
+                }
+                Err(e) => {
+                    eprintln!("sweep failed: {e}");
+                    1
+                }
+            }
+        }
+        Command::Power { warps, threads } => {
+            let cfg = MachineConfig::with_wt(warps, threads);
+            let b = power::evaluate(&cfg);
+            println!(
+                "{}w x {}t @300MHz: {:.2} mW, {:.4} mm², {:.0} cells",
+                warps, threads, b.power_mw, b.area_mm2, b.cells
+            );
+            let mut t = Table::new(&["component", "area", "power", "cells"]);
+            for c in &b.components {
+                t.row(vec![
+                    c.name.to_string(),
+                    format!("{:.1}", c.area),
+                    format!("{:.1}", c.power),
+                    format!("{:.0}", c.cells),
+                ]);
+            }
+            println!("{}", t.render());
+            0
+        }
+        Command::Validate { artifacts, seed } => {
+            let mut rt = match GoldenRuntime::new(&artifacts) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    eprintln!("runtime: {e}");
+                    return 1;
+                }
+            };
+            let cfg = MachineConfig::with_wt(4, 4);
+            let mut failures = 0;
+            for bench in Bench::ALL {
+                let r = match bench.run(cfg, seed, Backend::SimX, true) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        println!("{:<10} DEVICE-ERROR {e}", bench.name());
+                        failures += 1;
+                        continue;
+                    }
+                };
+                match rt.validate(bench, seed, &r.output) {
+                    Ok(true) => println!(
+                        "{:<10} OK  ({} cycles, {} launches)",
+                        bench.name(),
+                        r.cycles,
+                        r.launches
+                    ),
+                    Ok(false) => {
+                        println!("{:<10} MISMATCH vs golden model", bench.name());
+                        failures += 1;
+                    }
+                    Err(e) => {
+                        println!("{:<10} GOLDEN-ERROR {e}", bench.name());
+                        failures += 1;
+                    }
+                }
+            }
+            if failures == 0 {
+                println!("all benchmarks validated against golden artifacts");
+                0
+            } else {
+                eprintln!("{failures} validation failure(s)");
+                1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_run() {
+        let cmd = parse(&argv("run --bench sgemm --warps 16 --threads 8 --emu --seed 0x10")).unwrap();
+        match cmd {
+            Command::Run { bench, cfg, backend, seed, .. } => {
+                assert_eq!(bench, Bench::Sgemm);
+                assert_eq!(cfg.num_warps, 16);
+                assert_eq!(cfg.num_threads, 8);
+                assert_eq!(backend, Backend::Emu);
+                assert_eq!(seed, 0x10);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_requires_bench() {
+        assert!(parse(&argv("run --warps 4")).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_and_commands_error() {
+        assert!(parse(&argv("run --bench sgemm --frobnicate")).is_err());
+        assert!(parse(&argv("bogus")).is_err());
+    }
+
+    #[test]
+    fn sweep_defaults_to_all_benches() {
+        match parse(&argv("sweep")).unwrap() {
+            Command::Sweep { benches, .. } => assert_eq!(benches.len(), 8),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert_eq!(parse(&[]).unwrap(), Command::Help);
+    }
+
+    #[test]
+    fn power_command() {
+        match parse(&argv("power --warps 32 --threads 32")).unwrap() {
+            Command::Power { warps: 32, threads: 32 } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

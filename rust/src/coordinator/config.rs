@@ -1,0 +1,199 @@
+//! Configuration file support: a TOML-subset parser (tables, integer /
+//! boolean / string keys, comments) feeding [`MachineConfig`].
+//!
+//! Example accepted file:
+//!
+//! ```toml
+//! [machine]
+//! cores = 1
+//! warps = 8
+//! threads = 4
+//!
+//! [dcache]
+//! size = 4096
+//! ways = 2
+//! banks = 4
+//! miss_penalty = 50
+//! ```
+
+use crate::config::MachineConfig;
+use std::collections::HashMap;
+
+/// Parsed TOML-subset document: `table -> key -> raw value`.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub tables: HashMap<String, HashMap<String, String>>,
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Parse the TOML subset.
+pub fn parse(src: &str) -> Result<Doc, ConfigError> {
+    let mut doc = Doc::default();
+    let mut table = String::from("");
+    for (lineno, raw) in src.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| ConfigError { line: lineno, msg: "unterminated table".into() })?;
+            table = name.trim().to_string();
+            doc.tables.entry(table.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| ConfigError {
+            line: lineno,
+            msg: format!("expected `key = value`, got `{line}`"),
+        })?;
+        let v = v.trim().trim_matches('"').to_string();
+        doc.tables.entry(table.clone()).or_default().insert(k.trim().to_string(), v);
+    }
+    Ok(doc)
+}
+
+impl Doc {
+    pub fn get_u32(&self, table: &str, key: &str) -> Option<u32> {
+        self.tables.get(table)?.get(key)?.replace('_', "").parse().ok()
+    }
+
+    pub fn get_bool(&self, table: &str, key: &str) -> Option<bool> {
+        match self.tables.get(table)?.get(key)?.as_str() {
+            "true" => Some(true),
+            "false" => Some(false),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, table: &str, key: &str) -> Option<&str> {
+        Some(self.tables.get(table)?.get(key)?.as_str())
+    }
+}
+
+/// Build a [`MachineConfig`] from a parsed document (missing keys keep the
+/// paper defaults).
+pub fn machine_from_doc(doc: &Doc) -> MachineConfig {
+    let mut cfg = MachineConfig::with_wt(
+        doc.get_u32("machine", "warps").unwrap_or(8),
+        doc.get_u32("machine", "threads").unwrap_or(4),
+    );
+    if let Some(c) = doc.get_u32("machine", "cores") {
+        cfg.num_cores = c;
+    }
+    fn apply_cache(doc: &Doc, name: &str, cache: &mut crate::config::CacheConfig) {
+        if let Some(v) = doc.get_u32(name, "size") {
+            cache.size = v;
+        }
+        if let Some(v) = doc.get_u32(name, "line") {
+            cache.line = v;
+        }
+        if let Some(v) = doc.get_u32(name, "ways") {
+            cache.ways = v;
+        }
+        if let Some(v) = doc.get_u32(name, "banks") {
+            cache.banks = v;
+        }
+        if let Some(v) = doc.get_u32(name, "miss_penalty") {
+            cache.miss_penalty = v;
+        }
+        if let Some(v) = doc.get_u32(name, "mshrs") {
+            cache.mshrs = v;
+        }
+    }
+    apply_cache(doc, "icache", &mut cfg.icache);
+    apply_cache(doc, "dcache", &mut cfg.dcache);
+    if let Some(v) = doc.get_u32("smem", "size") {
+        cfg.smem.size = v;
+    }
+    if let Some(v) = doc.get_u32("smem", "banks") {
+        cfg.smem.banks = v;
+    }
+    if let Some(v) = doc.get_u32("timing", "mul_latency") {
+        cfg.timing.mul_latency = v;
+    }
+    if let Some(v) = doc.get_u32("timing", "div_latency") {
+        cfg.timing.div_latency = v;
+    }
+    if let Some(v) = doc.get_u32("timing", "branch_penalty") {
+        cfg.timing.branch_penalty = v;
+    }
+    cfg
+}
+
+/// Load a machine config from a file path.
+pub fn load_machine(path: &str) -> Result<MachineConfig, Box<dyn std::error::Error>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(machine_from_doc(&parse(&text)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_values() {
+        let doc = parse(
+            r#"
+            # comment
+            [machine]
+            warps = 16
+            threads = 8
+            cores = 2
+
+            [dcache]
+            size = 8192   # bigger D$
+            banks = 8
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_u32("machine", "warps"), Some(16));
+        assert_eq!(doc.get_u32("dcache", "banks"), Some(8));
+        assert_eq!(doc.get_u32("nope", "x"), None);
+    }
+
+    #[test]
+    fn machine_from_doc_applies_overrides() {
+        let doc = parse("[machine]\nwarps = 16\nthreads = 8\ncores = 2\n[dcache]\nsize = 8192\n")
+            .unwrap();
+        let cfg = machine_from_doc(&doc);
+        assert_eq!(cfg.num_warps, 16);
+        assert_eq!(cfg.num_threads, 8);
+        assert_eq!(cfg.num_cores, 2);
+        assert_eq!(cfg.dcache.size, 8192);
+        // untouched keys keep paper defaults
+        assert_eq!(cfg.icache.size, 1024);
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("not a kv\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc_gives_paper_defaults() {
+        let cfg = machine_from_doc(&parse("").unwrap());
+        assert_eq!(cfg.num_warps, 8);
+        assert_eq!(cfg.num_threads, 4);
+    }
+}

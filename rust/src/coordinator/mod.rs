@@ -1,0 +1,18 @@
+//! L3 coordinator: configuration, CLI, design-space sweeps and report
+//! generation — the "leader" process that drives every experiment in the
+//! paper's evaluation (Figs 7–10, Table I) over the simulator, the power
+//! model and the PJRT golden runtime.
+//!
+//! Because this image builds offline against the vendored `xla` closure
+//! only, the usual framework dependencies are in-tree substrates:
+//! [`config`] (TOML-subset parser replacing `toml`+`serde`), [`cli`]
+//! (replacing `clap`), [`benchkit`] (replacing `criterion`),
+//! [`quickcheck`] (replacing `proptest`), [`report`] (replacing
+//! `serde_json` for report output).
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod quickcheck;
+pub mod report;
+pub mod sweep;

@@ -1,0 +1,64 @@
+//! Mini property-testing framework (in-tree substrate for `proptest`):
+//! seeded random case generation with failure reporting that pins the
+//! reproducing seed. Used by the invariant suites in `rust/tests/`.
+
+use crate::workloads::rng::SplitMix64;
+
+/// Number of cases per property (env `VORTEX_QC_CASES` overrides).
+pub fn default_cases() -> u32 {
+    std::env::var("VORTEX_QC_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+pub fn check(name: &str, cases: u32, mut prop: impl FnMut(&mut SplitMix64)) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000u64 + case as u64;
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with SplitMix64::new({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Run with the default case count.
+pub fn check_default(name: &str, prop: impl FnMut(&mut SplitMix64)) {
+    check(name, default_cases(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 16, |r| {
+            let a = r.next_u32();
+            let b = r.next_u32();
+            assert_eq!(a.wrapping_add(b), b.wrapping_add(a));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always-fails", 4, |_| panic!("boom"));
+        });
+        let msg = match result.unwrap_err().downcast_ref::<String>() {
+            Some(s) => s.clone(),
+            None => panic!("expected string panic"),
+        };
+        assert!(msg.contains("always-fails"));
+        assert!(msg.contains("seed"));
+    }
+}

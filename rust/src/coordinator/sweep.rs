@@ -1,0 +1,139 @@
+//! Design-space sweep drivers — the engines behind Figs 8, 9 and 10.
+//!
+//! The paper normalizes Fig 9/10 to the 2-warp × 2-thread configuration
+//! and Fig 8 to 1×1; these helpers run the sweep and emit both raw and
+//! normalized rows so the bench targets print exactly the series the
+//! paper plots.
+
+use super::report::Table;
+use crate::config::MachineConfig;
+use crate::kernels::Bench;
+use crate::pocl::Backend;
+use crate::power;
+
+/// One (warps × threads) point of a benchmark sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub warps: u32,
+    pub threads: u32,
+    pub cycles: u64,
+    pub warp_instrs: u64,
+    pub dcache_hit_rate: f64,
+    pub divergent_splits: u64,
+    pub barrier_stalls: u64,
+}
+
+/// Fig 9: execution time of `bench` across the configuration sweep.
+pub fn fig9_sweep(
+    bench: Bench,
+    configs: &[(u32, u32)],
+    seed: u64,
+) -> Result<Vec<SweepPoint>, crate::pocl::LaunchError> {
+    let mut rows = Vec::new();
+    for &(w, t) in configs {
+        let cfg = MachineConfig::with_wt(w, t);
+        let r = bench.run(cfg, seed, Backend::SimX, true)?;
+        assert!(r.verified, "{} failed verification at {w}x{t}", bench.name());
+        rows.push(SweepPoint {
+            warps: w,
+            threads: t,
+            cycles: r.cycles,
+            warp_instrs: r.stats.warp_instrs,
+            dcache_hit_rate: r.stats.dcache_hit_rate(),
+            divergent_splits: r.stats.divergent_splits,
+            barrier_stalls: r.stats.barrier_stall_cycles,
+        });
+    }
+    Ok(rows)
+}
+
+/// Normalize cycles to the `(2, 2)` baseline (the paper's Fig 9 norm).
+pub fn normalize_to_2x2(rows: &[SweepPoint]) -> Vec<(String, f64)> {
+    let base = rows
+        .iter()
+        .find(|p| p.warps == 2 && p.threads == 2)
+        .map(|p| p.cycles)
+        .unwrap_or_else(|| rows.first().map(|p| p.cycles).unwrap_or(1));
+    rows.iter()
+        .map(|p| {
+            (format!("{}x{}", p.warps, p.threads), p.cycles as f64 / base as f64)
+        })
+        .collect()
+}
+
+/// Fig 10: power efficiency (perf/W) normalized to 2×2.
+pub fn fig10_efficiency(rows: &[SweepPoint]) -> Vec<(String, f64)> {
+    let ppw = |p: &SweepPoint| {
+        power::perf_per_watt(&MachineConfig::with_wt(p.warps, p.threads), p.cycles)
+    };
+    let base = rows
+        .iter()
+        .find(|p| p.warps == 2 && p.threads == 2)
+        .map(ppw)
+        .unwrap_or_else(|| rows.first().map(ppw).unwrap_or(1.0));
+    rows.iter().map(|p| (format!("{}x{}", p.warps, p.threads), ppw(p) / base)).collect()
+}
+
+/// Render a Fig 9-style table for several benchmarks (rows = configs,
+/// columns = benchmarks, values = normalized execution time).
+pub fn fig9_table(
+    benches: &[Bench],
+    configs: &[(u32, u32)],
+    seed: u64,
+) -> Result<Table, crate::pocl::LaunchError> {
+    let mut header = vec!["config".to_string()];
+    header.extend(benches.iter().map(|b| b.name().to_string()));
+    let mut table =
+        Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut columns = Vec::new();
+    for &b in benches {
+        let rows = fig9_sweep(b, configs, seed)?;
+        columns.push(normalize_to_2x2(&rows));
+    }
+    for (i, &(w, t)) in configs.iter().enumerate() {
+        let mut row = vec![format!("{w}x{t}")];
+        for col in &columns {
+            row.push(format!("{:.3}", col[i].1));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}
+
+/// The paper's Fig 9/10 config axis (subset of the full Fig 8 sweep that
+/// is meaningful for execution: ≥2 warps so barriers/latency-hiding show).
+pub fn fig9_configs() -> Vec<(u32, u32)> {
+    vec![(2, 2), (2, 4), (4, 4), (4, 8), (8, 8), (8, 16), (16, 16), (16, 32), (32, 32)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_normalization_baseline_is_one() {
+        let rows = fig9_sweep(Bench::VecAdd, &[(2, 2), (2, 4)], 7).unwrap();
+        let norm = normalize_to_2x2(&rows);
+        assert_eq!(norm[0].0, "2x2");
+        assert!((norm[0].1 - 1.0).abs() < 1e-12);
+        // more threads ⇒ faster (normalized < 1)
+        assert!(norm[1].1 < 1.0);
+    }
+
+    #[test]
+    fn fig10_prefers_efficient_points() {
+        let rows = fig9_sweep(Bench::VecAdd, &[(2, 2), (2, 8)], 7).unwrap();
+        let eff = fig10_efficiency(&rows);
+        assert!((eff[0].1 - 1.0).abs() < 1e-12);
+        // 2x8 runs ~4x faster but costs < 4x power ⇒ more efficient
+        assert!(eff[1].1 > 1.0, "2x8 efficiency {} should beat 2x2", eff[1].1);
+    }
+
+    #[test]
+    fn fig9_table_renders() {
+        let t = fig9_table(&[Bench::VecAdd], &[(2, 2), (4, 4)], 7).unwrap();
+        let s = t.render();
+        assert!(s.contains("vecadd"));
+        assert!(s.contains("4x4"));
+    }
+}

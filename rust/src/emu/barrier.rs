@@ -1,0 +1,123 @@
+//! Warp-barrier table (paper §IV-D).
+//!
+//! Each barrier id owns an entry with: validity, the number of warps still
+//! needed, and the mask of warps currently stalled on it. The MSB of the
+//! barrier id selects the *global* (cross-core) table; the same arrival /
+//! release algorithm serves both — global entries just track (core, warp)
+//! pairs instead of warps.
+
+use std::collections::HashMap;
+
+/// MSB of the 32-bit barrier id selects the global table (§IV-D).
+pub const GLOBAL_BARRIER_BIT: u32 = 1 << 31;
+
+/// A participant: `(core, warp)` — core is always 0 for per-core tables.
+pub type Participant = (u32, u32);
+
+#[derive(Clone, Debug, Default)]
+struct Entry {
+    /// Warps that executed `bar` with this id and are stalled.
+    stalled: Vec<Participant>,
+}
+
+/// Barrier table: one per core for local barriers plus one machine-global
+/// table (paper Fig 5 "Barrier Table"; global variant has a release mask
+/// per core).
+#[derive(Clone, Debug, Default)]
+pub struct BarrierTable {
+    entries: HashMap<u32, Entry>,
+}
+
+impl BarrierTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A warp arrived at barrier `id` needing `count` warps total.
+    ///
+    /// Returns `Some(participants)` — the full release set, including this
+    /// arrival — when the barrier trips; `None` while the warp must stall.
+    /// `count <= 1` is a no-op barrier (released immediately), mirroring the
+    /// hardware check "if the number of warps is not equal to one" (§IV-D).
+    pub fn arrive(&mut self, id: u32, count: u32, who: Participant) -> Option<Vec<Participant>> {
+        if count <= 1 {
+            return Some(vec![who]);
+        }
+        let entry = self.entries.entry(id).or_default();
+        debug_assert!(
+            !entry.stalled.contains(&who),
+            "warp {who:?} arrived twice at barrier {id}"
+        );
+        entry.stalled.push(who);
+        if entry.stalled.len() as u32 >= count {
+            let released = self.entries.remove(&id).unwrap().stalled;
+            Some(released)
+        } else {
+            None
+        }
+    }
+
+    /// Number of live (armed, un-released) barrier entries.
+    pub fn live(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Warps currently stalled across all entries (deadlock diagnostics).
+    pub fn stalled_participants(&self) -> Vec<Participant> {
+        let mut all: Vec<Participant> =
+            self.entries.values().flat_map(|e| e.stalled.iter().copied()).collect();
+        all.sort_unstable();
+        all
+    }
+}
+
+/// True if `id` addresses the global (cross-core) table.
+pub fn is_global(id: u32) -> bool {
+    id & GLOBAL_BARRIER_BIT != 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn releases_when_count_reached() {
+        let mut t = BarrierTable::new();
+        assert_eq!(t.arrive(3, 3, (0, 0)), None);
+        assert_eq!(t.arrive(3, 3, (0, 1)), None);
+        let rel = t.arrive(3, 3, (0, 2)).unwrap();
+        assert_eq!(rel.len(), 3);
+        assert_eq!(t.live(), 0);
+    }
+
+    #[test]
+    fn single_warp_barrier_is_noop() {
+        let mut t = BarrierTable::new();
+        assert_eq!(t.arrive(7, 1, (0, 5)), Some(vec![(0, 5)]));
+        assert_eq!(t.live(), 0);
+    }
+
+    #[test]
+    fn independent_ids_do_not_interfere() {
+        let mut t = BarrierTable::new();
+        assert_eq!(t.arrive(1, 2, (0, 0)), None);
+        assert_eq!(t.arrive(2, 2, (0, 1)), None);
+        assert_eq!(t.live(), 2);
+        assert!(t.arrive(1, 2, (0, 2)).is_some());
+        assert_eq!(t.live(), 1);
+    }
+
+    #[test]
+    fn global_bit() {
+        assert!(is_global(GLOBAL_BARRIER_BIT | 3));
+        assert!(!is_global(3));
+    }
+
+    #[test]
+    fn stalled_participants_reported() {
+        let mut t = BarrierTable::new();
+        t.arrive(1, 3, (0, 2));
+        t.arrive(1, 3, (0, 0));
+        assert_eq!(t.stalled_participants(), vec![(0, 0), (0, 2)]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Pure per-lane execution semantics, shared by the functional emulator and
+//! the cycle simulator so both machines agree bit-for-bit (this is what the
+//! equivalence property tests lean on).
+
+use crate::isa::{AluOp, BranchOp, LoadOp, StoreOp};
+
+/// Evaluate an ALU / M-extension op on two lane operands.
+#[inline]
+pub fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a.wrapping_shl(b & 31),
+        AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+        AluOp::Sltu => (a < b) as u32,
+        AluOp::Xor => a ^ b,
+        AluOp::Srl => a.wrapping_shr(b & 31),
+        AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+        AluOp::Or => a | b,
+        AluOp::And => a & b,
+        AluOp::Mul => a.wrapping_mul(b),
+        AluOp::Mulh => (((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32,
+        AluOp::Mulhsu => (((a as i32 as i64) * (b as u64 as i64)) >> 32) as u32,
+        AluOp::Mulhu => (((a as u64) * (b as u64)) >> 32) as u32,
+        AluOp::Div => {
+            // RISC-V: div by zero = -1; overflow (MIN/-1) = MIN
+            let (a, b) = (a as i32, b as i32);
+            if b == 0 {
+                u32::MAX
+            } else if a == i32::MIN && b == -1 {
+                a as u32
+            } else {
+                (a / b) as u32
+            }
+        }
+        AluOp::Divu => {
+            if b == 0 {
+                u32::MAX
+            } else {
+                a / b
+            }
+        }
+        AluOp::Rem => {
+            let (a, b) = (a as i32, b as i32);
+            if b == 0 {
+                a as u32
+            } else if a == i32::MIN && b == -1 {
+                0
+            } else {
+                (a % b) as u32
+            }
+        }
+        AluOp::Remu => {
+            if b == 0 {
+                a
+            } else {
+                a % b
+            }
+        }
+    }
+}
+
+/// Evaluate a branch condition.
+#[inline]
+pub fn branch_taken(op: BranchOp, a: u32, b: u32) -> bool {
+    match op {
+        BranchOp::Beq => a == b,
+        BranchOp::Bne => a != b,
+        BranchOp::Blt => (a as i32) < (b as i32),
+        BranchOp::Bge => (a as i32) >= (b as i32),
+        BranchOp::Bltu => a < b,
+        BranchOp::Bgeu => a >= b,
+    }
+}
+
+/// Extend a loaded value per the load op.
+#[inline]
+pub fn load_extend(op: LoadOp, raw: u32) -> u32 {
+    match op {
+        LoadOp::Lb => raw as u8 as i8 as i32 as u32,
+        LoadOp::Lbu => raw as u8 as u32,
+        LoadOp::Lh => raw as u16 as i16 as i32 as u32,
+        LoadOp::Lhu => raw as u16 as u32,
+        LoadOp::Lw => raw,
+    }
+}
+
+/// Merge a store value into an existing word (sub-word stores).
+#[inline]
+pub fn store_merge(op: StoreOp, old: u32, value: u32, addr: u32) -> u32 {
+    match op {
+        StoreOp::Sw => value,
+        StoreOp::Sh => {
+            let shift = (addr & 2) * 8;
+            (old & !(0xffff << shift)) | ((value & 0xffff) << shift)
+        }
+        StoreOp::Sb => {
+            let shift = (addr & 3) * 8;
+            (old & !(0xff << shift)) | ((value & 0xff) << shift)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn riscv_division_edge_cases() {
+        assert_eq!(alu(AluOp::Div, 7, 0), u32::MAX); // -1
+        assert_eq!(alu(AluOp::Divu, 7, 0), u32::MAX);
+        assert_eq!(alu(AluOp::Rem, 7, 0), 7);
+        assert_eq!(alu(AluOp::Remu, 7, 0), 7);
+        assert_eq!(alu(AluOp::Div, i32::MIN as u32, -1i32 as u32), i32::MIN as u32);
+        assert_eq!(alu(AluOp::Rem, i32::MIN as u32, -1i32 as u32), 0);
+        assert_eq!(alu(AluOp::Div, -7i32 as u32, 2), -3i32 as u32); // trunc toward 0
+        assert_eq!(alu(AluOp::Rem, -7i32 as u32, 2), -1i32 as u32);
+    }
+
+    #[test]
+    fn mulh_variants() {
+        let a = 0x8000_0000u32; // -2^31 signed
+        let b = 2u32;
+        assert_eq!(alu(AluOp::Mulh, a, b), 0xFFFF_FFFF); // -2^32 >> 32 = -1
+        assert_eq!(alu(AluOp::Mulhu, a, b), 1);
+        assert_eq!(alu(AluOp::Mulhsu, a, b), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn shifts_mask_amount() {
+        assert_eq!(alu(AluOp::Sll, 1, 33), 2); // shamt masked to 5 bits
+        assert_eq!(alu(AluOp::Sra, 0x8000_0000, 31), 0xFFFF_FFFF);
+        assert_eq!(alu(AluOp::Srl, 0x8000_0000, 31), 1);
+    }
+
+    #[test]
+    fn branch_signedness() {
+        assert!(branch_taken(BranchOp::Blt, -1i32 as u32, 0));
+        assert!(!branch_taken(BranchOp::Bltu, -1i32 as u32, 0));
+        assert!(branch_taken(BranchOp::Bgeu, -1i32 as u32, 0));
+    }
+
+    #[test]
+    fn load_extension() {
+        assert_eq!(load_extend(LoadOp::Lb, 0x80), 0xFFFF_FF80);
+        assert_eq!(load_extend(LoadOp::Lbu, 0x80), 0x80);
+        assert_eq!(load_extend(LoadOp::Lh, 0x8000), 0xFFFF_8000);
+        assert_eq!(load_extend(LoadOp::Lhu, 0x8000), 0x8000);
+    }
+
+    #[test]
+    fn store_merging() {
+        assert_eq!(store_merge(StoreOp::Sb, 0xAABBCCDD, 0x11, 2), 0xAA11CCDD);
+        assert_eq!(store_merge(StoreOp::Sh, 0xAABBCCDD, 0x1122, 2), 0x1122CCDD);
+        assert_eq!(store_merge(StoreOp::Sh, 0xAABBCCDD, 0x1122, 0), 0xAABB1122);
+        assert_eq!(store_merge(StoreOp::Sw, 0xAABBCCDD, 1, 0), 1);
+    }
+}

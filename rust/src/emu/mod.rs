@@ -1,0 +1,433 @@
+//! Functional (instruction-accurate, not cycle-accurate) SIMT emulator.
+//!
+//! This is the architectural oracle of the stack — the role spike plays for
+//! RISC-V cores. It executes the same programs as the cycle simulator
+//! ([`crate::sim`]) using the *same* per-instruction semantics
+//! ([`step::exec_warp`]); equivalence between the two is enforced by the
+//! property tests in `rust/tests/equivalence.rs`.
+
+pub mod barrier;
+pub mod exec;
+pub mod step;
+pub mod warp;
+
+pub use step::{EmuError, Event, MemAccess, StepCtx, StepInfo};
+pub use warp::{IpdomEntry, Warp};
+
+use crate::asm::Program;
+use crate::config::MachineConfig;
+use crate::isa::decode;
+use crate::mem::Memory;
+use barrier::{is_global, BarrierTable};
+
+/// Why the machine stopped.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExitStatus {
+    /// `ecall exit` with this code.
+    Exited(u32),
+    /// Every warp on every core left the active mask (kernel drained).
+    Drained,
+    /// Step budget exhausted (runaway kernel guard).
+    OutOfFuel,
+}
+
+/// One emulated core: a warp table plus its local barrier table.
+struct EmuCore {
+    warps: Vec<Warp>,
+    /// Warps stalled on a barrier (local or global).
+    barrier_stalled: Vec<bool>,
+    local_barriers: BarrierTable,
+}
+
+/// The functional machine: cores sharing one memory and a global barrier
+/// table (paper §IV-D).
+pub struct Emulator {
+    pub config: MachineConfig,
+    pub mem: Memory,
+    cores: Vec<EmuCore>,
+    global_barriers: BarrierTable,
+    /// NewLib console output (write syscall).
+    pub console: Vec<u8>,
+    heap_end: u32,
+    cycle: u64,
+    /// Total instructions retired (all warps, all cores).
+    pub instret: u64,
+}
+
+impl Emulator {
+    pub fn new(config: MachineConfig) -> Self {
+        let cores = (0..config.num_cores)
+            .map(|_| EmuCore {
+                warps: (0..config.num_warps)
+                    .map(|w| Warp::new(w, config.num_threads))
+                    .collect(),
+                barrier_stalled: vec![false; config.num_warps as usize],
+                local_barriers: BarrierTable::new(),
+            })
+            .collect();
+        Emulator {
+            config,
+            mem: Memory::new(),
+            cores,
+            global_barriers: BarrierTable::new(),
+            console: Vec::new(),
+            heap_end: 0xC000_0000,
+            cycle: 0,
+            instret: 0,
+        }
+    }
+
+    /// Load a program image into device memory.
+    pub fn load(&mut self, prog: &Program) {
+        self.mem.load_program(prog);
+    }
+
+    /// Start warp 0 of every core at `entry` (lane 0 active) — the hardware
+    /// reset state the paper's runtime assumes before `wspawn`/`tmc`.
+    pub fn launch(&mut self, entry: u32) {
+        for core in &mut self.cores {
+            core.warps[0].spawn(entry);
+        }
+    }
+
+    /// Any warp still in the active mask anywhere?
+    fn any_active(&self) -> bool {
+        self.cores.iter().any(|c| c.warps.iter().any(|w| w.active))
+    }
+
+    /// Any warp that could make progress this round?
+    fn any_runnable(&self) -> bool {
+        self.cores.iter().any(|c| {
+            c.warps
+                .iter()
+                .enumerate()
+                .any(|(i, w)| w.active && !c.barrier_stalled[i])
+        })
+    }
+
+    /// Run until exit/drain or `max_steps` warp-instructions retire.
+    pub fn run(&mut self, max_steps: u64) -> Result<ExitStatus, EmuError> {
+        let mut steps = 0u64;
+        while self.any_active() {
+            if !self.any_runnable() {
+                return Err(EmuError::Deadlock { cycle: self.cycle });
+            }
+            // Round-robin across cores and warps: one instruction per
+            // runnable warp per round (fair, like the visible-mask refill).
+            for c in 0..self.cores.len() {
+                for w in 0..self.cores[c].warps.len() {
+                    if !self.cores[c].warps[w].active || self.cores[c].barrier_stalled[w] {
+                        continue;
+                    }
+                    if let Some(code) = self.step_warp(c, w)? {
+                        return Ok(ExitStatus::Exited(code));
+                    }
+                    steps += 1;
+                    if steps >= max_steps {
+                        return Ok(ExitStatus::OutOfFuel);
+                    }
+                }
+            }
+            self.cycle += 1;
+        }
+        Ok(ExitStatus::Drained)
+    }
+
+    /// Execute one instruction on core `c`, warp `w`. Returns `Some(code)`
+    /// on machine exit.
+    fn step_warp(&mut self, c: usize, w: usize) -> Result<Option<u32>, EmuError> {
+        let pc = self.cores[c].warps[w].pc;
+        let word = self.mem.read_u32(pc);
+        let instr = decode(word).map_err(|_| EmuError::Illegal { pc, word })?;
+
+        let mut ctx = StepCtx {
+            core_id: c as u32,
+            num_cores: self.config.num_cores,
+            num_warps: self.config.num_warps,
+            num_threads: self.config.num_threads,
+            cycle: self.cycle,
+            console: &mut self.console,
+            heap_end: &mut self.heap_end,
+        };
+        let info = step::exec_warp(&mut self.cores[c].warps[w], instr, &mut self.mem, &mut ctx)?;
+        self.instret += 1;
+
+        match info.event {
+            Event::Exit { code } => return Ok(Some(code)),
+            Event::Wspawn { count, pc } => self.apply_wspawn(c, count, pc),
+            Event::Barrier { id, count } => self.apply_barrier(c, w, id, count),
+            Event::None | Event::CtrlTaken | Event::WarpExit => {}
+        }
+        Ok(None)
+    }
+
+    /// `wspawn n, pc`: warps `1..n` of the executing core become active at
+    /// `pc`; warps `>= n` are deactivated (the paper notes warp 0 can use
+    /// wspawn to deactivate warps, Fig 6(c)).
+    fn apply_wspawn(&mut self, c: usize, count: u32, pc: u32) {
+        let n = count.min(self.config.num_warps);
+        for i in 1..self.config.num_warps as usize {
+            if (i as u32) < n {
+                self.cores[c].warps[i].spawn(pc);
+            } else {
+                self.cores[c].warps[i].deactivate();
+            }
+        }
+    }
+
+    fn apply_barrier(&mut self, c: usize, w: usize, id: u32, count: u32) {
+        let released = if is_global(id) {
+            self.global_barriers.arrive(id, count, (c as u32, w as u32))
+        } else {
+            self.cores[c].local_barriers.arrive(id, count, (0, w as u32))
+        };
+        match released {
+            Some(parts) => {
+                // release everyone (the arriving warp never actually stalls)
+                for (pcore, pw) in parts {
+                    let core = if is_global(id) { pcore as usize } else { c };
+                    self.cores[core].barrier_stalled[pw as usize] = false;
+                }
+            }
+            None => {
+                self.cores[c].barrier_stalled[w] = true;
+            }
+        }
+    }
+
+    /// Architectural register view (testing): core, warp, thread, reg.
+    pub fn reg(&self, core: usize, warp: usize, thread: usize, reg: u8) -> u32 {
+        self.cores[core].warps[warp].read(thread, reg)
+    }
+
+    /// Warp view for invariant checks.
+    pub fn warp(&self, core: usize, warp: usize) -> &Warp {
+        &self.cores[core].warps[warp]
+    }
+
+    /// Console output decoded as UTF-8 (lossy).
+    pub fn console_string(&self) -> String {
+        String::from_utf8_lossy(&self.console).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+
+    fn run_src(src: &str, cfg: MachineConfig) -> (Emulator, ExitStatus) {
+        let prog = assemble(src).expect("assembles");
+        let mut emu = Emulator::new(cfg);
+        emu.load(&prog);
+        emu.launch(prog.entry());
+        let status = emu.run(1_000_000).expect("runs");
+        (emu, status)
+    }
+
+    #[test]
+    fn scalar_countdown_exits() {
+        let (emu, status) = run_src(
+            r#"
+            li t0, 5
+            loop: addi t0, t0, -1
+            bnez t0, loop
+            li a0, 0
+            li a7, 93
+            ecall
+            "#,
+            MachineConfig::with_wt(2, 2),
+        );
+        assert_eq!(status, ExitStatus::Exited(0));
+        assert_eq!(emu.reg(0, 0, 0, 5), 0);
+    }
+
+    #[test]
+    fn tmc_activates_lanes_and_store_scatter() {
+        let (emu, status) = run_src(
+            r#"
+            li t0, 4
+            tmc t0                 # activate all 4 lanes
+            csrr t1, 0xCC0         # tid per lane
+            slli t2, t1, 2
+            li t3, 0x90000000
+            add t2, t2, t3
+            sw t1, 0(t2)           # mem[0x90000000 + 4*tid] = tid
+            li t0, 0
+            tmc t0                 # warp exits
+            "#,
+            MachineConfig::with_wt(2, 4),
+        );
+        assert_eq!(status, ExitStatus::Drained);
+        assert_eq!(emu.mem.read_u32_slice(0x9000_0000, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn wspawn_runs_worker_warps() {
+        // warp0 spawns warps 1..3 at `worker` (wspawn 3 ⇒ 3 warps total);
+        // each worker writes its wid.
+        let (emu, status) = run_src(
+            r#"
+            la t1, worker
+            li t0, 3
+            wspawn t0, t1
+            li a0, 0
+            li a7, 93
+            j wait
+            worker:
+            csrr t1, 0xCC1        # wid
+            slli t2, t1, 2
+            li t3, 0x90000100
+            add t2, t2, t3
+            sw t1, 0(t2)
+            li t0, 0
+            tmc t0
+            wait:
+            # spin long enough for workers to finish under round-robin
+            li t4, 40
+            spin: addi t4, t4, -1
+            bnez t4, spin
+            ecall
+            "#,
+            MachineConfig::with_wt(4, 2),
+        );
+        assert_eq!(status, ExitStatus::Exited(0));
+        assert_eq!(emu.mem.read_u32(0x9000_0104), 1);
+        assert_eq!(emu.mem.read_u32(0x9000_0108), 2);
+        assert_eq!(emu.mem.read_u32(0x9000_010C), 0); // warp 3 never spawned
+    }
+
+    #[test]
+    fn divergence_if_else_pattern() {
+        // The __if/__endif macro pattern from paper Fig 3.
+        let (emu, status) = run_src(
+            r#"
+            li t0, 4
+            tmc t0
+            csrr t1, 0xCC0         # tid
+            slti t2, t1, 2         # pred: tid < 2
+            split t2
+            beqz t2, else_path
+            # then: out[tid] = 100 + tid
+            addi t3, t1, 100
+            j endif
+            else_path:
+            # else: out[tid] = 200 + tid
+            addi t3, t1, 200
+            endif:
+            join
+            slli t4, t1, 2
+            li t5, 0x90000200
+            add t4, t4, t5
+            sw t3, 0(t4)
+            li t0, 0
+            tmc t0
+            "#,
+            MachineConfig::with_wt(2, 4),
+        );
+        assert_eq!(status, ExitStatus::Drained);
+        assert_eq!(
+            emu.mem.read_u32_slice(0x9000_0200, 4),
+            vec![100, 101, 202, 203]
+        );
+    }
+
+    #[test]
+    fn local_barrier_synchronizes_warps() {
+        // warp0 spawns warp1; both hit barrier 0 (count 2); warp1 writes
+        // before the barrier, warp0 reads after it.
+        let (emu, status) = run_src(
+            r#"
+            la t1, worker
+            li t0, 2
+            wspawn t0, t1
+            li t0, 0              # barrier id
+            li t1, 2              # count
+            bar t0, t1
+            li t2, 0x90000300
+            lw a0, 0(t2)          # must observe worker's store
+            li a7, 93
+            ecall
+            worker:
+            li t2, 0x90000300
+            li t3, 777
+            sw t3, 0(t2)
+            li t0, 0
+            li t1, 2
+            bar t0, t1
+            li t0, 0
+            tmc t0
+            "#,
+            MachineConfig::with_wt(2, 2),
+        );
+        assert_eq!(status, ExitStatus::Exited(777));
+        assert_eq!(emu.mem.read_u32(0x9000_0300), 777);
+    }
+
+    #[test]
+    fn barrier_deadlock_detected() {
+        let prog = assemble(
+            r#"
+            li t0, 0
+            li t1, 2
+            bar t0, t1    # nobody else will ever arrive
+            "#,
+        )
+        .unwrap();
+        let mut emu = Emulator::new(MachineConfig::with_wt(2, 2));
+        emu.load(&prog);
+        emu.launch(prog.entry());
+        let err = emu.run(10_000).unwrap_err();
+        assert!(matches!(err, EmuError::Deadlock { .. }));
+    }
+
+    #[test]
+    fn global_barrier_across_cores() {
+        // Both cores' warp0 meet at a global barrier; each writes its core
+        // id before, reads the other's after.
+        let mut cfg = MachineConfig::with_wt(2, 2);
+        cfg.num_cores = 2;
+        let (emu, status) = run_src(
+            r#"
+            csrr t0, 0xCC2          # cid
+            slli t1, t0, 2
+            li t2, 0x90000400
+            add t1, t1, t2
+            addi t3, t0, 1          # 1 + cid
+            sw t3, 0(t1)
+            li t0, 0x80000000       # global barrier id (MSB set)
+            li t1, 2                # both cores' warp 0
+            bar t0, t1
+            csrr t0, 0xCC2
+            bnez t0, done           # only core 0 performs the check+exit
+            li t2, 0x90000404
+            lw a0, 0(t2)            # core1's value: 2
+            li a7, 93
+            ecall
+            done:
+            li t0, 0
+            tmc t0
+            "#,
+            cfg,
+        );
+        assert_eq!(status, ExitStatus::Exited(2));
+    }
+
+    #[test]
+    fn out_of_fuel_on_infinite_loop() {
+        let prog = assemble("spin: j spin").unwrap();
+        let mut emu = Emulator::new(MachineConfig::with_wt(1, 1));
+        emu.load(&prog);
+        emu.launch(prog.entry());
+        assert_eq!(emu.run(1000).unwrap(), ExitStatus::OutOfFuel);
+    }
+
+    #[test]
+    fn illegal_instruction_reported() {
+        let mut emu = Emulator::new(MachineConfig::with_wt(1, 1));
+        emu.mem.write_u32(0x8000_0000, 0xFFFF_FFFF);
+        emu.launch(0x8000_0000);
+        let err = emu.run(10).unwrap_err();
+        assert!(matches!(err, EmuError::Illegal { .. }));
+    }
+}

@@ -1,0 +1,683 @@
+//! Warp-granularity instruction semantics — the single architectural
+//! truth used by both the functional emulator (directly) and the cycle
+//! simulator (at its execute stage), so the two machines cannot drift.
+
+use super::exec::{alu, branch_taken, load_extend, store_merge};
+use super::warp::{IpdomEntry, Warp};
+use crate::isa::csr::CsrCtx;
+use crate::isa::{CsrOp, Instr};
+use crate::mem::Memory;
+
+/// Newlib-style syscall numbers (RISC-V ABI, matching our NewLib stubs in
+/// [`crate::stack`]).
+pub const SYS_EXIT: u32 = 93;
+pub const SYS_WRITE: u32 = 64;
+pub const SYS_BRK: u32 = 214;
+
+/// Warp-table / machine-level effects the caller must apply (the core owns
+/// the warp table; `exec_warp` only owns one warp + memory).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    None,
+    /// Taken branch / jump — the front-end redirect (timing only).
+    CtrlTaken,
+    /// Warp hit `bar barID, numW`; stall until released (paper §IV-D).
+    Barrier { id: u32, count: u32 },
+    /// Warp set its thread mask to zero and left the active mask (§IV-B).
+    WarpExit,
+    /// `wspawn count, pc` executed (§IV-B, Fig 6(c)).
+    Wspawn { count: u32, pc: u32 },
+    /// `ecall exit` — halt the machine with this code.
+    Exit { code: u32 },
+}
+
+/// Per-lane address list with fixed capacity (max 32 lanes) — heap-free on
+/// the simulator's per-instruction hot path (§Perf iteration 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneAddrs {
+    len: u8,
+    buf: [u32; 32],
+}
+
+impl LaneAddrs {
+    pub fn new() -> Self {
+        LaneAddrs { len: 0, buf: [0; 32] }
+    }
+
+    #[inline]
+    pub fn push(&mut self, addr: u32) {
+        self.buf[self.len as usize] = addr;
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u32] {
+        &self.buf[..self.len as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Default for LaneAddrs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FromIterator<u32> for LaneAddrs {
+    fn from_iter<I: IntoIterator<Item = u32>>(iter: I) -> Self {
+        let mut l = LaneAddrs::new();
+        for a in iter {
+            l.push(a);
+        }
+        l
+    }
+}
+
+/// Memory behaviour of the retired instruction (drives cache/bank timing in
+/// the cycle simulator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemAccess {
+    None,
+    /// Per-active-lane load addresses.
+    Load(LaneAddrs),
+    /// Per-active-lane store addresses.
+    Store(LaneAddrs),
+}
+
+/// Result of retiring one instruction on one warp.
+#[derive(Clone, Debug)]
+pub struct StepInfo {
+    pub event: Event,
+    pub mem: MemAccess,
+}
+
+/// Architectural error (these abort simulation — they indicate a kernel or
+/// toolchain bug, which is exactly what the oracle is for).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EmuError {
+    Illegal { pc: u32, word: u32 },
+    /// Active lanes disagreed on a branch direction without a `split`
+    /// (the paper's model requires explicit divergence handling; Fig 3).
+    DivergentBranch { pc: u32 },
+    IpdomUnderflow { pc: u32 },
+    /// Warp exited (`tmc 0`) with live IPDOM entries — a split was never
+    /// joined.
+    UnbalancedIpdom { pc: u32, depth: usize },
+    UnknownSyscall { pc: u32, num: u32 },
+    CsrUnmapped { pc: u32, csr: u16 },
+    CsrReadOnly { pc: u32, csr: u16 },
+    /// All active warps are stalled on barriers that can never release.
+    Deadlock { cycle: u64 },
+}
+
+impl std::fmt::Display for EmuError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EmuError::Illegal { pc, word } => {
+                write!(f, "illegal instruction {word:#010x} at pc={pc:#010x}")
+            }
+            EmuError::DivergentBranch { pc } => write!(
+                f,
+                "divergent branch at pc={pc:#010x} (missing split/join around condition)"
+            ),
+            EmuError::IpdomUnderflow { pc } => {
+                write!(f, "join with empty IPDOM stack at pc={pc:#010x}")
+            }
+            EmuError::UnbalancedIpdom { pc, depth } => write!(
+                f,
+                "warp exited at pc={pc:#010x} with {depth} unjoined split(s) on the IPDOM stack"
+            ),
+            EmuError::UnknownSyscall { pc, num } => {
+                write!(f, "unknown syscall {num} at pc={pc:#010x}")
+            }
+            EmuError::CsrUnmapped { pc, csr } => {
+                write!(f, "unmapped CSR {csr:#05x} at pc={pc:#010x}")
+            }
+            EmuError::CsrReadOnly { pc, csr } => {
+                write!(f, "write to read-only CSR {csr:#05x} at pc={pc:#010x}")
+            }
+            EmuError::Deadlock { cycle } => write!(f, "barrier deadlock at cycle {cycle}"),
+        }
+    }
+}
+
+impl std::error::Error for EmuError {}
+
+/// Machine context surfaced to CSR reads and syscalls.
+pub struct StepCtx<'a> {
+    pub core_id: u32,
+    pub num_cores: u32,
+    pub num_warps: u32,
+    pub num_threads: u32,
+    pub cycle: u64,
+    /// Console sink for the `write` syscall (NewLib stdout/stderr).
+    pub console: &'a mut Vec<u8>,
+    /// Program break for the `brk` syscall (bump allocator).
+    pub heap_end: &'a mut u32,
+}
+
+/// Execute one decoded instruction on `warp`, updating architectural state
+/// and memory. `warp.pc` must point at the instruction; on return it holds
+/// the next PC.
+pub fn exec_warp(
+    warp: &mut Warp,
+    instr: Instr,
+    mem: &mut Memory,
+    ctx: &mut StepCtx<'_>,
+) -> Result<StepInfo, EmuError> {
+    let pc = warp.pc;
+    let mut next_pc = pc.wrapping_add(4);
+    let mut event = Event::None;
+    let mut mem_access = MemAccess::None;
+
+    match instr {
+        Instr::Lui { rd, imm } => {
+            for t in lanes(warp) {
+                warp.write(t, rd, imm as u32);
+            }
+        }
+        Instr::Auipc { rd, imm } => {
+            for t in lanes(warp) {
+                warp.write(t, rd, pc.wrapping_add(imm as u32));
+            }
+        }
+        Instr::Jal { rd, imm } => {
+            for t in lanes(warp) {
+                warp.write(t, rd, next_pc);
+            }
+            next_pc = pc.wrapping_add(imm as u32);
+            event = Event::CtrlTaken;
+        }
+        Instr::Jalr { rd, rs1, imm } => {
+            // Warp-wide target from the leader lane (SIMT shared PC).
+            let target = warp.read(warp.leader(), rs1).wrapping_add(imm as u32) & !1;
+            for t in lanes(warp) {
+                warp.write(t, rd, next_pc);
+            }
+            next_pc = target;
+            event = Event::CtrlTaken;
+        }
+        Instr::Branch { op, rs1, rs2, imm } => {
+            // SIMT branches must be uniform across active lanes; divergent
+            // conditions are the job of split/join (paper Fig 3).
+            let mut taken: Option<bool> = None;
+            for t in lanes(warp) {
+                let tk = branch_taken(op, warp.read(t, rs1), warp.read(t, rs2));
+                match taken {
+                    None => taken = Some(tk),
+                    Some(prev) if prev != tk => {
+                        return Err(EmuError::DivergentBranch { pc });
+                    }
+                    _ => {}
+                }
+            }
+            if taken.unwrap_or(false) {
+                next_pc = pc.wrapping_add(imm as u32);
+                event = Event::CtrlTaken;
+            }
+        }
+        Instr::Load { op, rd, rs1, imm } => {
+            let mut addrs = LaneAddrs::new();
+            for t in lanes(warp) {
+                let addr = warp.read(t, rs1).wrapping_add(imm as u32);
+                let aligned = addr & !3;
+                let raw = mem.read_u32(aligned) >> ((addr & 3) * 8);
+                warp.write(t, rd, load_extend(op, raw));
+                addrs.push(addr);
+            }
+            mem_access = MemAccess::Load(addrs);
+        }
+        Instr::Store { op, rs1, rs2, imm } => {
+            let mut addrs = LaneAddrs::new();
+            for t in lanes(warp) {
+                let addr = warp.read(t, rs1).wrapping_add(imm as u32);
+                let aligned = addr & !3;
+                let old = mem.read_u32(aligned);
+                mem.write_u32(aligned, store_merge(op, old, warp.read(t, rs2), addr));
+                addrs.push(addr);
+            }
+            mem_access = MemAccess::Store(addrs);
+        }
+        Instr::OpImm { op, rd, rs1, imm } => {
+            for t in lanes(warp) {
+                let v = alu(op, warp.read(t, rs1), imm as u32);
+                warp.write(t, rd, v);
+            }
+        }
+        Instr::Op { op, rd, rs1, rs2 } => {
+            for t in lanes(warp) {
+                let v = alu(op, warp.read(t, rs1), warp.read(t, rs2));
+                warp.write(t, rd, v);
+            }
+        }
+        Instr::Fence => {}
+        Instr::Ebreak => {
+            // Treated as a halt-with-failure so runaway kernels stop loudly.
+            event = Event::Exit { code: 0xDEAD };
+        }
+        Instr::Ecall => {
+            event = syscall(warp, mem, ctx, pc)?;
+        }
+        Instr::Csr { op, rd, rs1, csr: csr_num } => {
+            let writes = match op {
+                CsrOp::Rw | CsrOp::Rwi => true,
+                // csrrs/rc with rs1=x0 (or zimm=0) is a pure read
+                _ => rs1 != 0,
+            };
+            if writes {
+                return Err(EmuError::CsrReadOnly { pc, csr: csr_num });
+            }
+            if rd != 0 {
+                for t in lanes(warp) {
+                    let cc = CsrCtx {
+                        thread_id: t as u32,
+                        warp_id: warp.id,
+                        core_id: ctx.core_id,
+                        thread_mask: warp.tmask,
+                        num_threads: ctx.num_threads,
+                        num_warps: ctx.num_warps,
+                        num_cores: ctx.num_cores,
+                        cycle: ctx.cycle,
+                        instret: warp.instret,
+                    };
+                    let v = cc
+                        .read(csr_num)
+                        .ok_or(EmuError::CsrUnmapped { pc, csr: csr_num })?;
+                    warp.write(t, rd, v);
+                }
+            } else {
+                // validate the address even when rd=x0
+                let cc = CsrCtx {
+                    thread_id: 0,
+                    warp_id: warp.id,
+                    core_id: ctx.core_id,
+                    thread_mask: warp.tmask,
+                    num_threads: ctx.num_threads,
+                    num_warps: ctx.num_warps,
+                    num_cores: ctx.num_cores,
+                    cycle: ctx.cycle,
+                    instret: warp.instret,
+                };
+                cc.read(csr_num).ok_or(EmuError::CsrUnmapped { pc, csr: csr_num })?;
+            }
+        }
+        // ---- SIMT extension (paper Table I) ----
+        Instr::Tmc { rs1 } => {
+            let n = warp.read(warp.leader(), rs1).min(ctx.num_threads);
+            let mask = if n >= 32 { u32::MAX } else { (1u32 << n) - 1 };
+            warp.tmask = mask;
+            if mask == 0 {
+                // a warp leaving the active mask with live IPDOM entries
+                // means a split was never joined — fail loudly (bring-up
+                // diagnosability; the RTL would silently corrupt here)
+                if !warp.ipdom.is_empty() {
+                    return Err(EmuError::UnbalancedIpdom {
+                        pc,
+                        depth: warp.ipdom.len(),
+                    });
+                }
+                warp.deactivate();
+                event = Event::WarpExit;
+            }
+        }
+        Instr::Wspawn { rs1, rs2 } => {
+            let leader = warp.leader();
+            let count = warp.read(leader, rs1);
+            let target = warp.read(leader, rs2);
+            event = Event::Wspawn { count, pc: target };
+        }
+        Instr::Split { rs1 } => {
+            let active: Vec<usize> = lanes(warp).collect();
+            let mut true_mask = 0u32;
+            let mut false_mask = 0u32;
+            for &t in &active {
+                if warp.read(t, rs1) != 0 {
+                    true_mask |= 1 << t;
+                } else {
+                    false_mask |= 1 << t;
+                }
+            }
+            if active.len() <= 1 || true_mask == 0 || false_mask == 0 {
+                // Uniform: "acts like a nop" (§IV-C) — but push a
+                // fall-through entry so the paired join stays balanced.
+                warp.ipdom.push(IpdomEntry { pc: 0, tmask: warp.tmask, fallthrough: true });
+            } else {
+                // 1) current mask as fall-through, 2) false threads at
+                //    PC+4, 3) continue with the true threads (§IV-C).
+                warp.ipdom.push(IpdomEntry { pc: 0, tmask: warp.tmask, fallthrough: true });
+                warp.ipdom.push(IpdomEntry { pc: next_pc, tmask: false_mask, fallthrough: false });
+                warp.tmask = true_mask;
+            }
+        }
+        Instr::Join => {
+            let entry = warp.ipdom.pop().ok_or(EmuError::IpdomUnderflow { pc })?;
+            warp.tmask = entry.tmask;
+            if !entry.fallthrough {
+                next_pc = entry.pc;
+                event = Event::CtrlTaken;
+            }
+        }
+        Instr::Bar { rs1, rs2 } => {
+            let leader = warp.leader();
+            let id = warp.read(leader, rs1);
+            let count = warp.read(leader, rs2);
+            event = Event::Barrier { id, count };
+        }
+    }
+
+    warp.pc = next_pc;
+    warp.instret += 1;
+    Ok(StepInfo { event, mem: mem_access })
+}
+
+#[inline]
+fn lanes(warp: &Warp) -> impl Iterator<Item = usize> {
+    let mask = warp.tmask;
+    let n = warp.num_threads() as usize;
+    (0..n).filter(move |&t| mask & (1 << t) != 0)
+}
+
+/// NewLib-stub syscall dispatch (paper §III-A.2). Arguments follow the
+/// RISC-V ABI: number in `a7`, args in `a0..a2`, result in `a0`.
+fn syscall(
+    warp: &mut Warp,
+    mem: &mut Memory,
+    ctx: &mut StepCtx<'_>,
+    pc: u32,
+) -> Result<Event, EmuError> {
+    let leader = warp.leader();
+    let num = warp.read(leader, 17); // a7
+    let a0 = warp.read(leader, 10);
+    let a1 = warp.read(leader, 11);
+    let a2 = warp.read(leader, 12);
+    match num {
+        SYS_EXIT => {
+            // exiting with live IPDOM entries means an unjoined split
+            // (same diagnosability rule as `tmc 0`)
+            if !warp.ipdom.is_empty() {
+                return Err(EmuError::UnbalancedIpdom { pc, depth: warp.ipdom.len() });
+            }
+            Ok(Event::Exit { code: a0 })
+        }
+        SYS_WRITE => {
+            // fd=a0 (1/2 both go to the console), buf=a1, len=a2
+            for i in 0..a2 {
+                ctx.console.push(mem.read_u8(a1.wrapping_add(i)));
+            }
+            for t in lanes(warp).collect::<Vec<_>>() {
+                warp.write(t, 10, a2);
+            }
+            Ok(Event::None)
+        }
+        SYS_BRK => {
+            let result = if a0 == 0 {
+                *ctx.heap_end
+            } else {
+                *ctx.heap_end = a0;
+                a0
+            };
+            for t in lanes(warp).collect::<Vec<_>>() {
+                warp.write(t, 10, result);
+            }
+            Ok(Event::None)
+        }
+        other => Err(EmuError::UnknownSyscall { pc, num: other }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{csr, AluOp, BranchOp};
+
+    fn mkctx<'a>(console: &'a mut Vec<u8>, heap: &'a mut u32) -> StepCtx<'a> {
+        StepCtx {
+            core_id: 0,
+            num_cores: 1,
+            num_warps: 4,
+            num_threads: 4,
+            cycle: 0,
+            console,
+            heap_end: heap,
+        }
+    }
+
+    fn warp4() -> Warp {
+        let mut w = Warp::new(0, 4);
+        w.pc = 0x8000_0000;
+        w.tmask = 0xF;
+        w.active = true;
+        w
+    }
+
+    #[test]
+    fn simd_alu_applies_per_lane() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        for t in 0..4 {
+            w.write(t, 5, t as u32 + 1);
+        }
+        exec_warp(&mut w, Instr::Op { op: AluOp::Add, rd: 6, rs1: 5, rs2: 5 }, &mut mem, &mut ctx)
+            .unwrap();
+        for t in 0..4 {
+            assert_eq!(w.read(t, 6), 2 * (t as u32 + 1));
+        }
+        assert_eq!(w.pc, 0x8000_0004);
+    }
+
+    #[test]
+    fn predicated_lane_untouched() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        w.tmask = 0b0101;
+        exec_warp(
+            &mut w,
+            Instr::OpImm { op: AluOp::Add, rd: 6, rs1: 0, imm: 9 },
+            &mut mem,
+            &mut ctx,
+        )
+        .unwrap();
+        assert_eq!(w.read(0, 6), 9);
+        assert_eq!(w.read(1, 6), 0); // masked lane: no register write (§IV-C)
+        assert_eq!(w.read(2, 6), 9);
+        assert_eq!(w.read(3, 6), 0);
+    }
+
+    #[test]
+    fn divergent_branch_is_an_error() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        for t in 0..4 {
+            w.write(t, 5, t as u32); // lane0=0, others nonzero
+        }
+        let e = exec_warp(
+            &mut w,
+            Instr::Branch { op: BranchOp::Bne, rs1: 5, rs2: 0, imm: 16 },
+            &mut mem,
+            &mut ctx,
+        )
+        .unwrap_err();
+        assert!(matches!(e, EmuError::DivergentBranch { .. }));
+    }
+
+    #[test]
+    fn split_join_roundtrip_divergent() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        for t in 0..4 {
+            w.write(t, 5, (t < 2) as u32); // lanes 0,1 true; 2,3 false
+        }
+        let split_pc = w.pc;
+        exec_warp(&mut w, Instr::Split { rs1: 5 }, &mut mem, &mut ctx).unwrap();
+        assert_eq!(w.tmask, 0b0011); // true side first
+        assert_eq!(w.ipdom.len(), 2);
+
+        // true side runs to the join
+        w.pc = 0x8000_0100;
+        exec_warp(&mut w, Instr::Join, &mut mem, &mut ctx).unwrap();
+        // pops else entry -> false lanes resume at split_pc + 4
+        assert_eq!(w.tmask, 0b1100);
+        assert_eq!(w.pc, split_pc + 4);
+
+        // false side reaches the same join
+        w.pc = 0x8000_0100;
+        exec_warp(&mut w, Instr::Join, &mut mem, &mut ctx).unwrap();
+        assert_eq!(w.tmask, 0b1111); // reconverged
+        assert_eq!(w.pc, 0x8000_0104); // fall-through
+        assert!(w.ipdom.is_empty());
+    }
+
+    #[test]
+    fn uniform_split_is_balanced_nop() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        for t in 0..4 {
+            w.write(t, 5, 1); // all true
+        }
+        exec_warp(&mut w, Instr::Split { rs1: 5 }, &mut mem, &mut ctx).unwrap();
+        assert_eq!(w.tmask, 0xF);
+        assert_eq!(w.ipdom.len(), 1);
+        exec_warp(&mut w, Instr::Join, &mut mem, &mut ctx).unwrap();
+        assert_eq!(w.tmask, 0xF);
+        assert!(w.ipdom.is_empty());
+    }
+
+    #[test]
+    fn tmc_zero_exits_warp() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        w.write(0, 5, 0);
+        let info = exec_warp(&mut w, Instr::Tmc { rs1: 5 }, &mut mem, &mut ctx).unwrap();
+        assert_eq!(info.event, Event::WarpExit);
+        assert!(!w.active);
+    }
+
+    #[test]
+    fn tmc_clamps_to_hw_threads() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        w.write(0, 5, 99);
+        exec_warp(&mut w, Instr::Tmc { rs1: 5 }, &mut mem, &mut ctx).unwrap();
+        assert_eq!(w.tmask, 0xF);
+    }
+
+    #[test]
+    fn gather_load_scatter_store() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        for t in 0..4u32 {
+            mem.write_u32(0x1000 + 4 * t, 100 + t);
+        }
+        let mut w = warp4();
+        for t in 0..4 {
+            w.write(t, 5, 0x1000 + 4 * t as u32);
+        }
+        let info = exec_warp(
+            &mut w,
+            Instr::Load { op: crate::isa::LoadOp::Lw, rd: 6, rs1: 5, imm: 0 },
+            &mut mem,
+            &mut ctx,
+        )
+        .unwrap();
+        for t in 0..4 {
+            assert_eq!(w.read(t, 6), 100 + t as u32);
+        }
+        assert!(matches!(info.mem, MemAccess::Load(ref a) if a.len() == 4));
+    }
+
+    #[test]
+    fn exit_syscall() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        w.write(0, 17, SYS_EXIT);
+        w.write(0, 10, 42);
+        let info = exec_warp(&mut w, Instr::Ecall, &mut mem, &mut ctx).unwrap();
+        assert_eq!(info.event, Event::Exit { code: 42 });
+    }
+
+    #[test]
+    fn write_syscall_hits_console() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut mem = Memory::new();
+        mem.write_block(0x2000, b"hi");
+        {
+            let mut ctx = mkctx(&mut console, &mut heap);
+            let mut w = warp4();
+            w.write(0, 17, SYS_WRITE);
+            w.write(0, 10, 1);
+            w.write(0, 11, 0x2000);
+            w.write(0, 12, 2);
+            exec_warp(&mut w, Instr::Ecall, &mut mem, &mut ctx).unwrap();
+            assert_eq!(w.read(0, 10), 2);
+        }
+        assert_eq!(console, b"hi");
+    }
+
+    #[test]
+    fn join_underflow_is_error() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        let e = exec_warp(&mut w, Instr::Join, &mut mem, &mut ctx).unwrap_err();
+        assert!(matches!(e, EmuError::IpdomUnderflow { .. }));
+    }
+
+    #[test]
+    fn csr_thread_id_per_lane() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        exec_warp(
+            &mut w,
+            Instr::Csr { op: CsrOp::Rs, rd: 6, rs1: 0, csr: csr::CSR_THREAD_ID },
+            &mut mem,
+            &mut ctx,
+        )
+        .unwrap();
+        for t in 0..4 {
+            assert_eq!(w.read(t, 6), t as u32);
+        }
+    }
+
+    #[test]
+    fn csr_write_rejected() {
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = mkctx(&mut console, &mut heap);
+        let mut mem = Memory::new();
+        let mut w = warp4();
+        let e = exec_warp(
+            &mut w,
+            Instr::Csr { op: CsrOp::Rw, rd: 1, rs1: 2, csr: csr::CSR_THREAD_ID },
+            &mut mem,
+            &mut ctx,
+        )
+        .unwrap_err();
+        assert!(matches!(e, EmuError::CsrReadOnly { .. }));
+    }
+}

@@ -1,0 +1,131 @@
+//! Architectural warp state: per-thread register files, thread mask and the
+//! IPDOM reconvergence stack (paper §IV-A/§IV-C).
+
+/// One IPDOM stack entry. A divergent `split` pushes a *fall-through* entry
+/// (the pre-split mask) followed by the *else* entry (false-predicate
+/// threads at `split_pc + 4`); `join` pops one entry per execution
+/// (paper §IV-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IpdomEntry {
+    /// Resume PC for a non-fall-through entry.
+    pub pc: u32,
+    /// Thread mask to install when this entry is popped.
+    pub tmask: u32,
+    /// Fall-through entries restore the mask and continue at `join_pc + 4`.
+    pub fallthrough: bool,
+}
+
+/// Architectural state of one hardware warp.
+#[derive(Clone, Debug)]
+pub struct Warp {
+    pub id: u32,
+    /// Shared PC for all threads in the warp (SIMT; §IV-A).
+    pub pc: u32,
+    /// Thread (lane) predication mask (§IV-C).
+    pub tmask: u32,
+    /// Whether this warp is in the active-warps mask (§IV-B).
+    pub active: bool,
+    /// Per-thread general-purpose registers: `regs[thread][reg]`.
+    pub regs: Vec<[u32; 32]>,
+    /// IPDOM reconvergence stack.
+    pub ipdom: Vec<IpdomEntry>,
+    /// Retired-instruction counter (CSR `instret`).
+    pub instret: u64,
+}
+
+impl Warp {
+    pub fn new(id: u32, num_threads: u32) -> Self {
+        Warp {
+            id,
+            pc: 0,
+            tmask: 0,
+            active: false,
+            regs: vec![[0u32; 32]; num_threads as usize],
+            ipdom: Vec::new(),
+            instret: 0,
+        }
+    }
+
+    /// (Re)activate at `pc` with only lane 0 enabled — the hardware state a
+    /// `wspawn` target starts from; the kernel stub then widens the mask
+    /// with `tmc`.
+    pub fn spawn(&mut self, pc: u32) {
+        self.pc = pc;
+        self.tmask = 1;
+        self.active = true;
+        self.ipdom.clear();
+    }
+
+    pub fn deactivate(&mut self) {
+        self.active = false;
+        self.tmask = 0;
+        self.ipdom.clear();
+    }
+
+    /// Number of lanes this warp was built with.
+    pub fn num_threads(&self) -> u32 {
+        self.regs.len() as u32
+    }
+
+    /// Iterator over active lane indices under the current mask.
+    pub fn active_lanes(&self) -> impl Iterator<Item = usize> + '_ {
+        let mask = self.tmask;
+        (0..self.regs.len()).filter(move |&t| mask & (1 << t) != 0)
+    }
+
+    #[inline]
+    pub fn read(&self, thread: usize, reg: u8) -> u32 {
+        if reg == 0 {
+            0
+        } else {
+            self.regs[thread][reg as usize]
+        }
+    }
+
+    #[inline]
+    pub fn write(&mut self, thread: usize, reg: u8, value: u32) {
+        if reg != 0 {
+            self.regs[thread][reg as usize] = value;
+        }
+    }
+
+    /// Lowest active lane — the lane whose registers warp-wide operations
+    /// (branch decisions, SIMT operands, syscall arguments) read.
+    pub fn leader(&self) -> usize {
+        self.tmask.trailing_zeros() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let mut w = Warp::new(0, 4);
+        w.write(2, 0, 0xdead);
+        assert_eq!(w.read(2, 0), 0);
+        w.write(2, 5, 0xdead);
+        assert_eq!(w.read(2, 5), 0xdead);
+    }
+
+    #[test]
+    fn spawn_resets_to_lane0() {
+        let mut w = Warp::new(3, 8);
+        w.tmask = 0xFF;
+        w.ipdom.push(IpdomEntry { pc: 0, tmask: 1, fallthrough: true });
+        w.spawn(0x8000_0100);
+        assert!(w.active);
+        assert_eq!(w.pc, 0x8000_0100);
+        assert_eq!(w.tmask, 1);
+        assert!(w.ipdom.is_empty());
+    }
+
+    #[test]
+    fn active_lanes_follow_mask() {
+        let mut w = Warp::new(0, 4);
+        w.tmask = 0b1010;
+        assert_eq!(w.active_lanes().collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(w.leader(), 1);
+    }
+}

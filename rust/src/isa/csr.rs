@@ -1,0 +1,110 @@
+//! Vortex control & status registers.
+//!
+//! The paper's intrinsic library (§III-A, Fig 2) exposes `vx_getTid()` and
+//! friends; in hardware those read machine-specific CSRs. We follow the
+//! released Vortex RTL's CSR map: per-thread/warp/core identity in the
+//! `0xCC0` block, machine configuration in the read-only `0xFC0` block, plus
+//! the standard cycle/instret counters.
+
+/// Hart-local thread id within the warp (`vx_getTid`).
+pub const CSR_THREAD_ID: u16 = 0xCC0;
+/// Warp id within the core (`vx_getWid`).
+pub const CSR_WARP_ID: u16 = 0xCC1;
+/// Core id within the processor (`vx_getCid`).
+pub const CSR_CORE_ID: u16 = 0xCC2;
+/// Current thread mask of the executing warp (read-only).
+pub const CSR_THREAD_MASK: u16 = 0xCC3;
+
+/// Number of hardware threads (lanes) per warp (`vx_getNT`).
+pub const CSR_NUM_THREADS: u16 = 0xFC0;
+/// Number of hardware warps per core (`vx_getNW`).
+pub const CSR_NUM_WARPS: u16 = 0xFC1;
+/// Number of cores (`vx_getNC`).
+pub const CSR_NUM_CORES: u16 = 0xFC2;
+
+/// Standard RISC-V counters (low halves; we simulate RV32).
+pub const CSR_CYCLE: u16 = 0xC00;
+pub const CSR_CYCLE_H: u16 = 0xC80;
+pub const CSR_INSTRET: u16 = 0xC02;
+pub const CSR_INSTRET_H: u16 = 0xC82;
+
+/// Identity/configuration visible to CSR reads; shared by the functional
+/// emulator and the cycle simulator so both resolve intrinsics identically.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrCtx {
+    pub thread_id: u32,
+    pub warp_id: u32,
+    pub core_id: u32,
+    pub thread_mask: u32,
+    pub num_threads: u32,
+    pub num_warps: u32,
+    pub num_cores: u32,
+    pub cycle: u64,
+    pub instret: u64,
+}
+
+impl CsrCtx {
+    /// Read a CSR. Returns `None` for unmapped addresses (the machines traps
+    /// those; our emulator reports an illegal-instruction error).
+    pub fn read(&self, csr: u16) -> Option<u32> {
+        Some(match csr {
+            CSR_THREAD_ID => self.thread_id,
+            CSR_WARP_ID => self.warp_id,
+            CSR_CORE_ID => self.core_id,
+            CSR_THREAD_MASK => self.thread_mask,
+            CSR_NUM_THREADS => self.num_threads,
+            CSR_NUM_WARPS => self.num_warps,
+            CSR_NUM_CORES => self.num_cores,
+            CSR_CYCLE => self.cycle as u32,
+            CSR_CYCLE_H => (self.cycle >> 32) as u32,
+            CSR_INSTRET => self.instret as u32,
+            CSR_INSTRET_H => (self.instret >> 32) as u32,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> CsrCtx {
+        CsrCtx {
+            thread_id: 3,
+            warp_id: 2,
+            core_id: 1,
+            thread_mask: 0b1011,
+            num_threads: 4,
+            num_warps: 8,
+            num_cores: 2,
+            cycle: 0x1_0000_0002,
+            instret: 7,
+        }
+    }
+
+    #[test]
+    fn identity_csrs() {
+        let c = ctx();
+        assert_eq!(c.read(CSR_THREAD_ID), Some(3));
+        assert_eq!(c.read(CSR_WARP_ID), Some(2));
+        assert_eq!(c.read(CSR_CORE_ID), Some(1));
+        assert_eq!(c.read(CSR_THREAD_MASK), Some(0b1011));
+        assert_eq!(c.read(CSR_NUM_THREADS), Some(4));
+        assert_eq!(c.read(CSR_NUM_WARPS), Some(8));
+        assert_eq!(c.read(CSR_NUM_CORES), Some(2));
+    }
+
+    #[test]
+    fn wide_counters_split() {
+        let c = ctx();
+        assert_eq!(c.read(CSR_CYCLE), Some(2));
+        assert_eq!(c.read(CSR_CYCLE_H), Some(1));
+        assert_eq!(c.read(CSR_INSTRET), Some(7));
+        assert_eq!(c.read(CSR_INSTRET_H), Some(0));
+    }
+
+    #[test]
+    fn unmapped_is_none() {
+        assert_eq!(ctx().read(0x300), None);
+    }
+}

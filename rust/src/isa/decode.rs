@@ -1,0 +1,279 @@
+//! RV32IM + SIMT instruction decoder.
+//!
+//! Field extraction follows the RISC-V unprivileged spec v2.2 (the version
+//! the paper's toolchain targeted). The SIMT extension decodes from major
+//! opcode [`OPCODE_SIMT`](super::OPCODE_SIMT) by `funct3`.
+
+use super::{AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp, OPCODE_SIMT};
+
+/// Decode failure: the word is not a valid RV32IM/Zicsr/SIMT instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeError {
+    pub word: u32,
+    pub pc_hint: Option<u32>,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.pc_hint {
+            Some(pc) => write!(f, "illegal instruction {:#010x} at pc {:#010x}", self.word, pc),
+            None => write!(f, "illegal instruction {:#010x}", self.word),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+#[inline]
+fn bits(w: u32, lo: u32, hi: u32) -> u32 {
+    (w >> lo) & ((1u32 << (hi - lo + 1)) - 1)
+}
+
+#[inline]
+fn rd(w: u32) -> u8 {
+    bits(w, 7, 11) as u8
+}
+#[inline]
+fn rs1(w: u32) -> u8 {
+    bits(w, 15, 19) as u8
+}
+#[inline]
+fn rs2(w: u32) -> u8 {
+    bits(w, 20, 24) as u8
+}
+#[inline]
+fn funct3(w: u32) -> u32 {
+    bits(w, 12, 14)
+}
+#[inline]
+fn funct7(w: u32) -> u32 {
+    bits(w, 25, 31)
+}
+
+/// I-type immediate, sign-extended.
+#[inline]
+fn imm_i(w: u32) -> i32 {
+    (w as i32) >> 20
+}
+
+/// S-type immediate, sign-extended.
+#[inline]
+fn imm_s(w: u32) -> i32 {
+    (((w & 0xfe00_0000) as i32) >> 20) | (bits(w, 7, 11) as i32)
+}
+
+/// B-type immediate, sign-extended (bit 0 always zero).
+#[inline]
+fn imm_b(w: u32) -> i32 {
+    (((w & 0x8000_0000) as i32) >> 19)
+        | ((bits(w, 7, 7) << 11) as i32)
+        | ((bits(w, 25, 30) << 5) as i32)
+        | ((bits(w, 8, 11) << 1) as i32)
+}
+
+/// U-type immediate (upper 20 bits, already shifted).
+#[inline]
+fn imm_u(w: u32) -> i32 {
+    (w & 0xffff_f000) as i32
+}
+
+/// J-type immediate, sign-extended (bit 0 always zero).
+#[inline]
+fn imm_j(w: u32) -> i32 {
+    (((w & 0x8000_0000) as i32) >> 11)
+        | ((bits(w, 12, 19) << 12) as i32)
+        | ((bits(w, 20, 20) << 11) as i32)
+        | ((bits(w, 21, 30) << 1) as i32)
+}
+
+/// Decode one 32-bit instruction word.
+pub fn decode(word: u32) -> Result<Instr, DecodeError> {
+    let err = || DecodeError { word, pc_hint: None };
+    let opcode = word & 0x7f;
+    let f3 = funct3(word);
+    let f7 = funct7(word);
+    match opcode {
+        0x37 => Ok(Instr::Lui { rd: rd(word), imm: imm_u(word) }),
+        0x17 => Ok(Instr::Auipc { rd: rd(word), imm: imm_u(word) }),
+        0x6F => Ok(Instr::Jal { rd: rd(word), imm: imm_j(word) }),
+        0x67 => {
+            if f3 != 0 {
+                return Err(err());
+            }
+            Ok(Instr::Jalr { rd: rd(word), rs1: rs1(word), imm: imm_i(word) })
+        }
+        0x63 => {
+            let op = match f3 {
+                0b000 => BranchOp::Beq,
+                0b001 => BranchOp::Bne,
+                0b100 => BranchOp::Blt,
+                0b101 => BranchOp::Bge,
+                0b110 => BranchOp::Bltu,
+                0b111 => BranchOp::Bgeu,
+                _ => return Err(err()),
+            };
+            Ok(Instr::Branch { op, rs1: rs1(word), rs2: rs2(word), imm: imm_b(word) })
+        }
+        0x03 => {
+            let op = match f3 {
+                0b000 => LoadOp::Lb,
+                0b001 => LoadOp::Lh,
+                0b010 => LoadOp::Lw,
+                0b100 => LoadOp::Lbu,
+                0b101 => LoadOp::Lhu,
+                _ => return Err(err()),
+            };
+            Ok(Instr::Load { op, rd: rd(word), rs1: rs1(word), imm: imm_i(word) })
+        }
+        0x23 => {
+            let op = match f3 {
+                0b000 => StoreOp::Sb,
+                0b001 => StoreOp::Sh,
+                0b010 => StoreOp::Sw,
+                _ => return Err(err()),
+            };
+            Ok(Instr::Store { op, rs1: rs1(word), rs2: rs2(word), imm: imm_s(word) })
+        }
+        0x13 => {
+            // OP-IMM. Shifts carry shamt in rs2 field with funct7 legality.
+            let (op, imm) = match f3 {
+                0b000 => (AluOp::Add, imm_i(word)),
+                0b010 => (AluOp::Slt, imm_i(word)),
+                0b011 => (AluOp::Sltu, imm_i(word)),
+                0b100 => (AluOp::Xor, imm_i(word)),
+                0b110 => (AluOp::Or, imm_i(word)),
+                0b111 => (AluOp::And, imm_i(word)),
+                0b001 => {
+                    if f7 != 0 {
+                        return Err(err());
+                    }
+                    (AluOp::Sll, rs2(word) as i32)
+                }
+                0b101 => match f7 {
+                    0x00 => (AluOp::Srl, rs2(word) as i32),
+                    0x20 => (AluOp::Sra, rs2(word) as i32),
+                    _ => return Err(err()),
+                },
+                _ => return Err(err()),
+            };
+            Ok(Instr::OpImm { op, rd: rd(word), rs1: rs1(word), imm })
+        }
+        0x33 => {
+            let op = match (f7, f3) {
+                (0x00, 0b000) => AluOp::Add,
+                (0x20, 0b000) => AluOp::Sub,
+                (0x00, 0b001) => AluOp::Sll,
+                (0x00, 0b010) => AluOp::Slt,
+                (0x00, 0b011) => AluOp::Sltu,
+                (0x00, 0b100) => AluOp::Xor,
+                (0x00, 0b101) => AluOp::Srl,
+                (0x20, 0b101) => AluOp::Sra,
+                (0x00, 0b110) => AluOp::Or,
+                (0x00, 0b111) => AluOp::And,
+                (0x01, 0b000) => AluOp::Mul,
+                (0x01, 0b001) => AluOp::Mulh,
+                (0x01, 0b010) => AluOp::Mulhsu,
+                (0x01, 0b011) => AluOp::Mulhu,
+                (0x01, 0b100) => AluOp::Div,
+                (0x01, 0b101) => AluOp::Divu,
+                (0x01, 0b110) => AluOp::Rem,
+                (0x01, 0b111) => AluOp::Remu,
+                _ => return Err(err()),
+            };
+            Ok(Instr::Op { op, rd: rd(word), rs1: rs1(word), rs2: rs2(word) })
+        }
+        0x0F => Ok(Instr::Fence), // fence / fence.i both act as full fences here
+        0x73 => match f3 {
+            0b000 => match word {
+                0x0000_0073 => Ok(Instr::Ecall),
+                0x0010_0073 => Ok(Instr::Ebreak),
+                _ => Err(err()),
+            },
+            0b001 => Ok(csr(word, CsrOp::Rw)),
+            0b010 => Ok(csr(word, CsrOp::Rs)),
+            0b011 => Ok(csr(word, CsrOp::Rc)),
+            0b101 => Ok(csr(word, CsrOp::Rwi)),
+            0b110 => Ok(csr(word, CsrOp::Rsi)),
+            0b111 => Ok(csr(word, CsrOp::Rci)),
+            _ => Err(err()),
+        },
+        OPCODE_SIMT => match f3 {
+            0 => Ok(Instr::Tmc { rs1: rs1(word) }),
+            1 => Ok(Instr::Wspawn { rs1: rs1(word), rs2: rs2(word) }),
+            2 => Ok(Instr::Split { rs1: rs1(word) }),
+            3 => Ok(Instr::Join),
+            4 => Ok(Instr::Bar { rs1: rs1(word), rs2: rs2(word) }),
+            _ => Err(err()),
+        },
+        _ => Err(err()),
+    }
+}
+
+fn csr(word: u32, op: CsrOp) -> Instr {
+    Instr::Csr { op, rd: rd(word), rs1: rs1(word), csr: bits(word, 20, 31) as u16 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decodes_addi() {
+        // addi x5, x6, -1  =>  imm=0xfff rs1=6 f3=0 rd=5 op=0x13
+        let w = (0xFFFu32 << 20) | (6 << 15) | (5 << 7) | 0x13;
+        assert_eq!(
+            decode(w).unwrap(),
+            Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 6, imm: -1 }
+        );
+    }
+
+    #[test]
+    fn decodes_branch_negative_offset() {
+        // beq x1, x2, -8
+        let imm: i32 = -8;
+        let w = encode_b(0x63, 0, 1, 2, imm);
+        assert_eq!(
+            decode(w).unwrap(),
+            Instr::Branch { op: BranchOp::Beq, rs1: 1, rs2: 2, imm: -8 }
+        );
+    }
+
+    // local helper mirroring the encoder (tested against it in encode.rs)
+    fn encode_b(op: u32, f3: u32, rs1: u32, rs2: u32, imm: i32) -> u32 {
+        let i = imm as u32;
+        op | (f3 << 12)
+            | (rs1 << 15)
+            | (rs2 << 20)
+            | (((i >> 12) & 1) << 31)
+            | (((i >> 5) & 0x3f) << 25)
+            | (((i >> 1) & 0xf) << 8)
+            | (((i >> 11) & 1) << 7)
+    }
+
+    #[test]
+    fn decodes_simt_ops() {
+        // tmc x3 : opcode 0x6b f3=0 rs1=3
+        let w = 0x6B | (0 << 12) | (3 << 15);
+        assert_eq!(decode(w).unwrap(), Instr::Tmc { rs1: 3 });
+        // join : f3=3
+        let w = 0x6B | (3 << 12);
+        assert_eq!(decode(w).unwrap(), Instr::Join);
+        // bar x1, x2 : f3=4
+        let w = 0x6B | (4 << 12) | (1 << 15) | (2 << 20);
+        assert_eq!(decode(w).unwrap(), Instr::Bar { rs1: 1, rs2: 2 });
+    }
+
+    #[test]
+    fn rejects_illegal() {
+        assert!(decode(0).is_err());
+        assert!(decode(0xFFFF_FFFF).is_err());
+        // SIMT funct3=7 undefined
+        assert!(decode(0x6B | (7 << 12)).is_err());
+    }
+
+    #[test]
+    fn decodes_ecall_ebreak() {
+        assert_eq!(decode(0x0000_0073).unwrap(), Instr::Ecall);
+        assert_eq!(decode(0x0010_0073).unwrap(), Instr::Ebreak);
+    }
+}

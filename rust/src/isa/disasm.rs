@@ -1,0 +1,134 @@
+//! Disassembler — debugging aid for the simulator's trace mode and for
+//! assembler tests (asm → encode → disasm round-trips).
+
+use super::reg::reg_name;
+use super::{AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp};
+
+fn alu_name(op: AluOp) -> &'static str {
+    match op {
+        AluOp::Add => "add",
+        AluOp::Sub => "sub",
+        AluOp::Sll => "sll",
+        AluOp::Slt => "slt",
+        AluOp::Sltu => "sltu",
+        AluOp::Xor => "xor",
+        AluOp::Srl => "srl",
+        AluOp::Sra => "sra",
+        AluOp::Or => "or",
+        AluOp::And => "and",
+        AluOp::Mul => "mul",
+        AluOp::Mulh => "mulh",
+        AluOp::Mulhsu => "mulhsu",
+        AluOp::Mulhu => "mulhu",
+        AluOp::Div => "div",
+        AluOp::Divu => "divu",
+        AluOp::Rem => "rem",
+        AluOp::Remu => "remu",
+    }
+}
+
+/// Render an instruction in assembler syntax (the same syntax
+/// [`crate::asm`] accepts).
+pub fn disasm(i: Instr) -> String {
+    let r = reg_name;
+    match i {
+        Instr::Lui { rd, imm } => format!("lui {}, {:#x}", r(rd), (imm as u32) >> 12),
+        Instr::Auipc { rd, imm } => format!("auipc {}, {:#x}", r(rd), (imm as u32) >> 12),
+        Instr::Jal { rd, imm } => format!("jal {}, {}", r(rd), imm),
+        Instr::Jalr { rd, rs1, imm } => format!("jalr {}, {}({})", r(rd), imm, r(rs1)),
+        Instr::Branch { op, rs1, rs2, imm } => {
+            let name = match op {
+                BranchOp::Beq => "beq",
+                BranchOp::Bne => "bne",
+                BranchOp::Blt => "blt",
+                BranchOp::Bge => "bge",
+                BranchOp::Bltu => "bltu",
+                BranchOp::Bgeu => "bgeu",
+            };
+            format!("{name} {}, {}, {}", r(rs1), r(rs2), imm)
+        }
+        Instr::Load { op, rd, rs1, imm } => {
+            let name = match op {
+                LoadOp::Lb => "lb",
+                LoadOp::Lh => "lh",
+                LoadOp::Lw => "lw",
+                LoadOp::Lbu => "lbu",
+                LoadOp::Lhu => "lhu",
+            };
+            format!("{name} {}, {}({})", r(rd), imm, r(rs1))
+        }
+        Instr::Store { op, rs1, rs2, imm } => {
+            let name = match op {
+                StoreOp::Sb => "sb",
+                StoreOp::Sh => "sh",
+                StoreOp::Sw => "sw",
+            };
+            format!("{name} {}, {}({})", r(rs2), imm, r(rs1))
+        }
+        Instr::OpImm { op, rd, rs1, imm } => {
+            let name = match op {
+                AluOp::Add => "addi",
+                AluOp::Slt => "slti",
+                AluOp::Sltu => "sltiu",
+                AluOp::Xor => "xori",
+                AluOp::Or => "ori",
+                AluOp::And => "andi",
+                AluOp::Sll => "slli",
+                AluOp::Srl => "srli",
+                AluOp::Sra => "srai",
+                other => return format!("<bad op-imm {other:?}>"),
+            };
+            format!("{name} {}, {}, {}", r(rd), r(rs1), imm)
+        }
+        Instr::Op { op, rd, rs1, rs2 } => {
+            format!("{} {}, {}, {}", alu_name(op), r(rd), r(rs1), r(rs2))
+        }
+        Instr::Fence => "fence".to_string(),
+        Instr::Ecall => "ecall".to_string(),
+        Instr::Ebreak => "ebreak".to_string(),
+        Instr::Csr { op, rd, rs1, csr } => {
+            let name = match op {
+                CsrOp::Rw => "csrrw",
+                CsrOp::Rs => "csrrs",
+                CsrOp::Rc => "csrrc",
+                CsrOp::Rwi => "csrrwi",
+                CsrOp::Rsi => "csrrsi",
+                CsrOp::Rci => "csrrci",
+            };
+            match op {
+                CsrOp::Rwi | CsrOp::Rsi | CsrOp::Rci => {
+                    format!("{name} {}, {:#x}, {}", r(rd), csr, rs1)
+                }
+                _ => format!("{name} {}, {:#x}, {}", r(rd), csr, r(rs1)),
+            }
+        }
+        Instr::Wspawn { rs1, rs2 } => format!("wspawn {}, {}", r(rs1), r(rs2)),
+        Instr::Tmc { rs1 } => format!("tmc {}", r(rs1)),
+        Instr::Split { rs1 } => format!("split {}", r(rs1)),
+        Instr::Join => "join".to_string(),
+        Instr::Bar { rs1, rs2 } => format!("bar {}, {}", r(rs1), r(rs2)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_core_and_simt_forms() {
+        assert_eq!(
+            disasm(Instr::OpImm { op: AluOp::Add, rd: 10, rs1: 10, imm: -4 }),
+            "addi a0, a0, -4"
+        );
+        assert_eq!(
+            disasm(Instr::Load { op: LoadOp::Lw, rd: 5, rs1: 2, imm: 8 }),
+            "lw t0, 8(sp)"
+        );
+        assert_eq!(
+            disasm(Instr::Store { op: StoreOp::Sw, rs1: 2, rs2: 5, imm: 8 }),
+            "sw t0, 8(sp)"
+        );
+        assert_eq!(disasm(Instr::Bar { rs1: 10, rs2: 11 }), "bar a0, a1");
+        assert_eq!(disasm(Instr::Join), "join");
+    }
+}

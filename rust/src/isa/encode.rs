@@ -1,0 +1,199 @@
+//! RV32IM + SIMT instruction encoder (inverse of [`super::decode`]).
+//!
+//! Used by the assembler ([`crate::asm`]) and the kernel-builder DSL
+//! ([`crate::kernels::builder`]) — this is how our stack replaces the
+//! RISC-V binutils dependency of the paper's toolchain.
+
+use super::{AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp, OPCODE_SIMT};
+
+#[inline]
+fn r_type(opcode: u32, f3: u32, f7: u32, rd: u8, rs1: u8, rs2: u8) -> u32 {
+    opcode
+        | ((rd as u32) << 7)
+        | (f3 << 12)
+        | ((rs1 as u32) << 15)
+        | ((rs2 as u32) << 20)
+        | (f7 << 25)
+}
+
+#[inline]
+fn i_type(opcode: u32, f3: u32, rd: u8, rs1: u8, imm: i32) -> u32 {
+    opcode
+        | ((rd as u32) << 7)
+        | (f3 << 12)
+        | ((rs1 as u32) << 15)
+        | (((imm as u32) & 0xfff) << 20)
+}
+
+#[inline]
+fn s_type(opcode: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    opcode
+        | ((i & 0x1f) << 7)
+        | (f3 << 12)
+        | ((rs1 as u32) << 15)
+        | ((rs2 as u32) << 20)
+        | (((i >> 5) & 0x7f) << 25)
+}
+
+#[inline]
+fn b_type(opcode: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    opcode
+        | (((i >> 11) & 1) << 7)
+        | (((i >> 1) & 0xf) << 8)
+        | (f3 << 12)
+        | ((rs1 as u32) << 15)
+        | ((rs2 as u32) << 20)
+        | (((i >> 5) & 0x3f) << 25)
+        | (((i >> 12) & 1) << 31)
+}
+
+#[inline]
+fn u_type(opcode: u32, rd: u8, imm: i32) -> u32 {
+    opcode | ((rd as u32) << 7) | ((imm as u32) & 0xffff_f000)
+}
+
+#[inline]
+fn j_type(opcode: u32, rd: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    opcode
+        | ((rd as u32) << 7)
+        | (((i >> 12) & 0xff) << 12)
+        | (((i >> 11) & 1) << 20)
+        | (((i >> 1) & 0x3ff) << 21)
+        | (((i >> 20) & 1) << 31)
+}
+
+/// Encode an instruction to its 32-bit word.
+pub fn encode(instr: Instr) -> u32 {
+    match instr {
+        Instr::Lui { rd, imm } => u_type(0x37, rd, imm),
+        Instr::Auipc { rd, imm } => u_type(0x17, rd, imm),
+        Instr::Jal { rd, imm } => j_type(0x6F, rd, imm),
+        Instr::Jalr { rd, rs1, imm } => i_type(0x67, 0, rd, rs1, imm),
+        Instr::Branch { op, rs1, rs2, imm } => {
+            let f3 = match op {
+                BranchOp::Beq => 0b000,
+                BranchOp::Bne => 0b001,
+                BranchOp::Blt => 0b100,
+                BranchOp::Bge => 0b101,
+                BranchOp::Bltu => 0b110,
+                BranchOp::Bgeu => 0b111,
+            };
+            b_type(0x63, f3, rs1, rs2, imm)
+        }
+        Instr::Load { op, rd, rs1, imm } => {
+            let f3 = match op {
+                LoadOp::Lb => 0b000,
+                LoadOp::Lh => 0b001,
+                LoadOp::Lw => 0b010,
+                LoadOp::Lbu => 0b100,
+                LoadOp::Lhu => 0b101,
+            };
+            i_type(0x03, f3, rd, rs1, imm)
+        }
+        Instr::Store { op, rs1, rs2, imm } => {
+            let f3 = match op {
+                StoreOp::Sb => 0b000,
+                StoreOp::Sh => 0b001,
+                StoreOp::Sw => 0b010,
+            };
+            s_type(0x23, f3, rs1, rs2, imm)
+        }
+        Instr::OpImm { op, rd, rs1, imm } => match op {
+            AluOp::Add => i_type(0x13, 0b000, rd, rs1, imm),
+            AluOp::Slt => i_type(0x13, 0b010, rd, rs1, imm),
+            AluOp::Sltu => i_type(0x13, 0b011, rd, rs1, imm),
+            AluOp::Xor => i_type(0x13, 0b100, rd, rs1, imm),
+            AluOp::Or => i_type(0x13, 0b110, rd, rs1, imm),
+            AluOp::And => i_type(0x13, 0b111, rd, rs1, imm),
+            AluOp::Sll => i_type(0x13, 0b001, rd, rs1, imm & 0x1f),
+            AluOp::Srl => i_type(0x13, 0b101, rd, rs1, imm & 0x1f),
+            AluOp::Sra => i_type(0x13, 0b101, rd, rs1, (imm & 0x1f) | 0x400),
+            other => panic!("{other:?} has no OP-IMM encoding"),
+        },
+        Instr::Op { op, rd, rs1, rs2 } => {
+            let (f7, f3) = match op {
+                AluOp::Add => (0x00, 0b000),
+                AluOp::Sub => (0x20, 0b000),
+                AluOp::Sll => (0x00, 0b001),
+                AluOp::Slt => (0x00, 0b010),
+                AluOp::Sltu => (0x00, 0b011),
+                AluOp::Xor => (0x00, 0b100),
+                AluOp::Srl => (0x00, 0b101),
+                AluOp::Sra => (0x20, 0b101),
+                AluOp::Or => (0x00, 0b110),
+                AluOp::And => (0x00, 0b111),
+                AluOp::Mul => (0x01, 0b000),
+                AluOp::Mulh => (0x01, 0b001),
+                AluOp::Mulhsu => (0x01, 0b010),
+                AluOp::Mulhu => (0x01, 0b011),
+                AluOp::Div => (0x01, 0b100),
+                AluOp::Divu => (0x01, 0b101),
+                AluOp::Rem => (0x01, 0b110),
+                AluOp::Remu => (0x01, 0b111),
+            };
+            r_type(0x33, f3, f7, rd, rs1, rs2)
+        }
+        Instr::Fence => 0x0000_000F,
+        Instr::Ecall => 0x0000_0073,
+        Instr::Ebreak => 0x0010_0073,
+        Instr::Csr { op, rd, rs1, csr } => {
+            let f3 = match op {
+                CsrOp::Rw => 0b001,
+                CsrOp::Rs => 0b010,
+                CsrOp::Rc => 0b011,
+                CsrOp::Rwi => 0b101,
+                CsrOp::Rsi => 0b110,
+                CsrOp::Rci => 0b111,
+            };
+            i_type(0x73, f3, rd, rs1, csr as i32)
+        }
+        Instr::Tmc { rs1 } => r_type(OPCODE_SIMT, 0, 0, 0, rs1, 0),
+        Instr::Wspawn { rs1, rs2 } => r_type(OPCODE_SIMT, 1, 0, 0, rs1, rs2),
+        Instr::Split { rs1 } => r_type(OPCODE_SIMT, 2, 0, 0, rs1, 0),
+        Instr::Join => r_type(OPCODE_SIMT, 3, 0, 0, 0, 0),
+        Instr::Bar { rs1, rs2 } => r_type(OPCODE_SIMT, 4, 0, 0, rs1, rs2),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decode;
+    use super::*;
+
+    fn roundtrip(i: Instr) {
+        assert_eq!(decode(encode(i)).unwrap(), i, "roundtrip of {i:?}");
+    }
+
+    #[test]
+    fn roundtrips_representative_instrs() {
+        roundtrip(Instr::Lui { rd: 1, imm: 0x12345 << 12 });
+        roundtrip(Instr::Auipc { rd: 31, imm: -4096 });
+        roundtrip(Instr::Jal { rd: 1, imm: -2048 });
+        roundtrip(Instr::Jalr { rd: 0, rs1: 1, imm: 0 });
+        roundtrip(Instr::Branch { op: BranchOp::Bgeu, rs1: 4, rs2: 9, imm: 4094 });
+        roundtrip(Instr::Branch { op: BranchOp::Blt, rs1: 4, rs2: 9, imm: -4096 });
+        roundtrip(Instr::Load { op: LoadOp::Lhu, rd: 7, rs1: 2, imm: -1 });
+        roundtrip(Instr::Store { op: StoreOp::Sb, rs1: 2, rs2: 8, imm: 2047 });
+        roundtrip(Instr::Store { op: StoreOp::Sw, rs1: 2, rs2: 8, imm: -2048 });
+        roundtrip(Instr::OpImm { op: AluOp::Sra, rd: 5, rs1: 5, imm: 31 });
+        roundtrip(Instr::OpImm { op: AluOp::Sll, rd: 5, rs1: 5, imm: 0 });
+        roundtrip(Instr::Op { op: AluOp::Mulhsu, rd: 10, rs1: 11, rs2: 12 });
+        roundtrip(Instr::Csr { op: CsrOp::Rs, rd: 10, rs1: 0, csr: 0xCC0 });
+        roundtrip(Instr::Ecall);
+        roundtrip(Instr::Fence);
+        roundtrip(Instr::Wspawn { rs1: 10, rs2: 11 });
+        roundtrip(Instr::Tmc { rs1: 10 });
+        roundtrip(Instr::Split { rs1: 10 });
+        roundtrip(Instr::Join);
+        roundtrip(Instr::Bar { rs1: 10, rs2: 11 });
+    }
+
+    #[test]
+    #[should_panic(expected = "no OP-IMM encoding")]
+    fn subi_is_rejected() {
+        encode(Instr::OpImm { op: AluOp::Sub, rd: 1, rs1: 1, imm: 1 });
+    }
+}

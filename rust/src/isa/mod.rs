@@ -1,0 +1,274 @@
+//! RV32IM + Vortex SIMT instruction set (paper Table I).
+//!
+//! The paper's key ISA claim: *"the minimal set of five instructions on top
+//! of RV32IM enables SIMT execution"*. Those five — `wspawn`, `tmc`,
+//! `split`, `join`, `bar` — are encoded on the RISC-V custom opcode `0x6B`
+//! (the encoding the released Vortex RTL uses), discriminated by `funct3`:
+//!
+//! | funct3 | mnemonic | operands          | paper semantics                    |
+//! |--------|----------|-------------------|------------------------------------|
+//! | 0      | `tmc`    | rs1 = numT        | activate threads `0..numT`         |
+//! | 1      | `wspawn` | rs1 = numW, rs2=PC| spawn `numW` warps at `PC`         |
+//! | 2      | `split`  | rs1 = pred        | control-flow divergence (IPDOM push)|
+//! | 3      | `join`   | —                 | reconvergence (IPDOM pop)          |
+//! | 4      | `bar`    | rs1 = barID, rs2 = numW | warp barrier (MSB ⇒ global) |
+//!
+//! Everything else is stock RV32IM plus the Zicsr subset needed by the
+//! runtime intrinsics (`csrrs` of the Vortex ID CSRs — see [`csr`]).
+
+pub mod csr;
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+pub mod reg;
+
+pub use decode::{decode, DecodeError};
+pub use disasm::disasm;
+pub use encode::encode;
+
+/// Major opcode used by the five SIMT instructions (RISC-V "custom-2/rv128"
+/// space, matching the released Vortex RTL).
+pub const OPCODE_SIMT: u32 = 0x6B;
+
+/// ALU / M-extension operation selector shared by `OP` and `OP-IMM` forms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+    // M extension (register-register only)
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+impl AluOp {
+    /// True for the M-extension subset (requires the multiplier unit; the
+    /// cycle simulator charges these a longer execute latency).
+    pub fn is_muldiv(self) -> bool {
+        matches!(
+            self,
+            AluOp::Mul
+                | AluOp::Mulh
+                | AluOp::Mulhsu
+                | AluOp::Mulhu
+                | AluOp::Div
+                | AluOp::Divu
+                | AluOp::Rem
+                | AluOp::Remu
+        )
+    }
+}
+
+/// Conditional branch comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+/// Memory load width/sign.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+impl LoadOp {
+    pub fn bytes(self) -> u32 {
+        match self {
+            LoadOp::Lb | LoadOp::Lbu => 1,
+            LoadOp::Lh | LoadOp::Lhu => 2,
+            LoadOp::Lw => 4,
+        }
+    }
+}
+
+/// Memory store width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+impl StoreOp {
+    pub fn bytes(self) -> u32 {
+        match self {
+            StoreOp::Sb => 1,
+            StoreOp::Sh => 2,
+            StoreOp::Sw => 4,
+        }
+    }
+}
+
+/// Zicsr operation (register and immediate forms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CsrOp {
+    Rw,
+    Rs,
+    Rc,
+    Rwi,
+    Rsi,
+    Rci,
+}
+
+/// A decoded instruction. `rd`/`rs1`/`rs2` are architectural register
+/// indices (0..32); immediates are already sign-extended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Instr {
+    Lui { rd: u8, imm: i32 },
+    Auipc { rd: u8, imm: i32 },
+    Jal { rd: u8, imm: i32 },
+    Jalr { rd: u8, rs1: u8, imm: i32 },
+    Branch { op: BranchOp, rs1: u8, rs2: u8, imm: i32 },
+    Load { op: LoadOp, rd: u8, rs1: u8, imm: i32 },
+    Store { op: StoreOp, rs1: u8, rs2: u8, imm: i32 },
+    /// OP-IMM. For `Sll`/`Srl`/`Sra` the immediate is the 5-bit shamt.
+    /// `Sub` is not representable (RISC-V uses `addi` with negated imm).
+    OpImm { op: AluOp, rd: u8, rs1: u8, imm: i32 },
+    Op { op: AluOp, rd: u8, rs1: u8, rs2: u8 },
+    Fence,
+    Ecall,
+    Ebreak,
+    /// Zicsr. For immediate forms `rs1` carries the 5-bit zimm.
+    Csr { op: CsrOp, rd: u8, rs1: u8, csr: u16 },
+    // ---- Vortex SIMT extension (paper Table I) ----
+    /// Spawn `R[rs1]` warps executing at `R[rs2]`.
+    Wspawn { rs1: u8, rs2: u8 },
+    /// Set the current warp's thread mask to activate threads `0..R[rs1]`.
+    Tmc { rs1: u8 },
+    /// Control-flow divergence on per-thread predicate `R[rs1] != 0`.
+    Split { rs1: u8 },
+    /// Control-flow reconvergence (pop IPDOM).
+    Join,
+    /// Barrier `R[rs1]` (MSB set ⇒ global/cross-core) over `R[rs2]` warps.
+    Bar { rs1: u8, rs2: u8 },
+}
+
+impl Instr {
+    /// Destination register, if the instruction writes one.
+    pub fn rd(&self) -> Option<u8> {
+        match *self {
+            Instr::Lui { rd, .. }
+            | Instr::Auipc { rd, .. }
+            | Instr::Jal { rd, .. }
+            | Instr::Jalr { rd, .. }
+            | Instr::Load { rd, .. }
+            | Instr::OpImm { rd, .. }
+            | Instr::Op { rd, .. }
+            | Instr::Csr { rd, .. } => {
+                if rd == 0 {
+                    None
+                } else {
+                    Some(rd)
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Source registers read by this instruction (x0 excluded).
+    pub fn srcs(&self) -> [Option<u8>; 2] {
+        fn nz(r: u8) -> Option<u8> {
+            if r == 0 {
+                None
+            } else {
+                Some(r)
+            }
+        }
+        match *self {
+            Instr::Jalr { rs1, .. } | Instr::Load { rs1, .. } | Instr::OpImm { rs1, .. } => {
+                [nz(rs1), None]
+            }
+            Instr::Branch { rs1, rs2, .. }
+            | Instr::Store { rs1, rs2, .. }
+            | Instr::Op { rs1, rs2, .. }
+            | Instr::Wspawn { rs1, rs2 }
+            | Instr::Bar { rs1, rs2 } => [nz(rs1), nz(rs2)],
+            Instr::Csr { op, rs1, .. } => match op {
+                CsrOp::Rw | CsrOp::Rs | CsrOp::Rc => [nz(rs1), None],
+                _ => [None, None], // immediate forms
+            },
+            Instr::Tmc { rs1 } | Instr::Split { rs1 } => [nz(rs1), None],
+            _ => [None, None],
+        }
+    }
+
+    /// True for the five Vortex SIMT-extension instructions.
+    pub fn is_simt(&self) -> bool {
+        matches!(
+            self,
+            Instr::Wspawn { .. }
+                | Instr::Tmc { .. }
+                | Instr::Split { .. }
+                | Instr::Join
+                | Instr::Bar { .. }
+        )
+    }
+
+    /// True if the instruction may redirect control flow.
+    pub fn is_control(&self) -> bool {
+        matches!(
+            self,
+            Instr::Jal { .. } | Instr::Jalr { .. } | Instr::Branch { .. }
+        )
+    }
+
+    /// True if the decode stage must stall the warp until the instruction
+    /// retires because it can change warp/thread state the front-end depends
+    /// on (paper §IV-B, Fig 6(b): "requires a change of state").
+    pub fn changes_warp_state(&self) -> bool {
+        self.is_simt() || matches!(self, Instr::Ecall | Instr::Ebreak)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rd_of_x0_writer_is_none() {
+        let i = Instr::OpImm { op: AluOp::Add, rd: 0, rs1: 1, imm: 4 };
+        assert_eq!(i.rd(), None);
+    }
+
+    #[test]
+    fn simt_instrs_flagged() {
+        assert!(Instr::Join.is_simt());
+        assert!(Instr::Tmc { rs1: 5 }.is_simt());
+        assert!(!Instr::Ecall.is_simt());
+        assert!(Instr::Ecall.changes_warp_state());
+    }
+
+    #[test]
+    fn srcs_skip_x0() {
+        let i = Instr::Op { op: AluOp::Add, rd: 3, rs1: 0, rs2: 7 };
+        assert_eq!(i.srcs(), [None, Some(7)]);
+    }
+
+    #[test]
+    fn muldiv_classification() {
+        assert!(AluOp::Mulhsu.is_muldiv());
+        assert!(!AluOp::Sra.is_muldiv());
+    }
+}

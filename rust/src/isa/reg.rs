@@ -1,0 +1,89 @@
+//! Register ABI names and conventions (RV32I calling convention).
+//!
+//! The paper's intrinsic library leans on the RISC-V ABI — arguments in
+//! `a0..a7`, return value in `a0` (§III-A.1) — so both the assembler and the
+//! kernel-builder DSL speak ABI names.
+
+/// ABI register names indexed by architectural number.
+pub const ABI_NAMES: [&str; 32] = [
+    "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3", "a4",
+    "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "t3", "t4",
+    "t5", "t6",
+];
+
+// Named constants for the registers the runtime/codegen touch frequently.
+pub const ZERO: u8 = 0;
+pub const RA: u8 = 1;
+pub const SP: u8 = 2;
+pub const GP: u8 = 3;
+pub const TP: u8 = 4;
+pub const T0: u8 = 5;
+pub const T1: u8 = 6;
+pub const T2: u8 = 7;
+pub const S0: u8 = 8;
+pub const S1: u8 = 9;
+pub const A0: u8 = 10;
+pub const A1: u8 = 11;
+pub const A2: u8 = 12;
+pub const A3: u8 = 13;
+pub const A4: u8 = 14;
+pub const A5: u8 = 15;
+pub const A6: u8 = 16;
+pub const A7: u8 = 17;
+pub const S2: u8 = 18;
+pub const S3: u8 = 19;
+pub const S4: u8 = 20;
+pub const S5: u8 = 21;
+pub const S6: u8 = 22;
+pub const S7: u8 = 23;
+pub const S8: u8 = 24;
+pub const S9: u8 = 25;
+pub const S10: u8 = 26;
+pub const S11: u8 = 27;
+pub const T3: u8 = 28;
+pub const T4: u8 = 29;
+pub const T5: u8 = 30;
+pub const T6: u8 = 31;
+
+/// Resolve a register name: ABI name (`a0`), numeric (`x10`), or alias
+/// (`fp` == `s0`).
+pub fn parse_reg(name: &str) -> Option<u8> {
+    if name == "fp" {
+        return Some(S0);
+    }
+    if let Some(rest) = name.strip_prefix('x') {
+        if let Ok(n) = rest.parse::<u8>() {
+            if n < 32 {
+                return Some(n);
+            }
+        }
+    }
+    ABI_NAMES.iter().position(|&n| n == name).map(|i| i as u8)
+}
+
+/// ABI name for an architectural register index.
+pub fn reg_name(idx: u8) -> &'static str {
+    ABI_NAMES[idx as usize & 31]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_abi_numeric_and_alias() {
+        assert_eq!(parse_reg("a0"), Some(10));
+        assert_eq!(parse_reg("x31"), Some(31));
+        assert_eq!(parse_reg("zero"), Some(0));
+        assert_eq!(parse_reg("fp"), Some(8));
+        assert_eq!(parse_reg("x32"), None);
+        assert_eq!(parse_reg("q7"), None);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for i in 0..32u8 {
+            assert_eq!(parse_reg(reg_name(i)), Some(i));
+        }
+    }
+}

@@ -1,0 +1,389 @@
+//! Device-kernel bodies for the Rodinia subset (paper §V-B), authored
+//! against the `pocl_spawn` ABI (`kernel_body:` label, `a0` = global
+//! work-item id, args at `ARGS_ADDR`, `s0..s3` preserved, `ret` to the
+//! item loop).
+//!
+//! These are the programs POCL's compiler would emit for the OpenCL
+//! sources: straight-line SIMT code with `split`/`join` around every
+//! data-dependent branch (the paper's `__if`/`__endif` macros, Fig 3).
+//! Divergence shapes mirror the originals — BFS is the irregular one
+//! (per-lane edge lists ⇒ nested divergence), kmeans diverges on the
+//! running-minimum update, NW uses branchless max.
+
+use crate::pocl::Kernel;
+
+/// `c[i] = a[i] + b[i]` — args: `[a, b, c]`.
+pub fn vecadd() -> Kernel {
+    Kernel {
+        name: "vecadd",
+        body: r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)            # a
+    lw t2, 4(t0)            # b
+    lw t3, 8(t0)            # c
+    slli t4, a0, 2
+    add t5, t1, t4
+    lw t5, 0(t5)
+    add t6, t2, t4
+    lw t6, 0(t6)
+    add t5, t5, t6
+    add t6, t3, t4
+    sw t5, 0(t6)
+    ret
+"#
+        .to_string(),
+    }
+}
+
+/// `y[i] += (alpha * x[i]) >> 16` in Q16.16 — args: `[x, y, alpha]`.
+pub fn saxpy() -> Kernel {
+    Kernel {
+        name: "saxpy",
+        body: r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)            # x
+    lw t2, 4(t0)            # y
+    lw t3, 8(t0)            # alpha (Q16.16)
+    slli t4, a0, 2
+    add t5, t1, t4
+    lw t5, 0(t5)            # x[i]
+    mul t6, t3, t5          # low 32 of alpha*x
+    mulh t5, t3, t5         # high 32
+    srli t6, t6, 16
+    slli t5, t5, 16
+    or t6, t6, t5           # (alpha*x) >> 16  (Q16.16 product)
+    add t5, t2, t4
+    lw t0, 0(t5)            # y[i]
+    add t0, t0, t6
+    sw t0, 0(t5)
+    ret
+"#
+        .to_string(),
+    }
+}
+
+/// `C[row,col] = Σ_k A[row,k]·B[k,col]` (int32), one work-item per output
+/// element — args: `[A, B, C, N, K]` (`M` is implied by `total = M·N`).
+pub fn sgemm() -> Kernel {
+    Kernel {
+        name: "sgemm",
+        body: r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)            # A
+    lw t2, 4(t0)            # B
+    lw t3, 8(t0)            # C
+    lw t4, 12(t0)           # N
+    lw t5, 16(t0)           # K
+    div t6, a0, t4          # row
+    rem a1, a0, t4          # col
+    mul a2, t6, t5
+    slli a2, a2, 2
+    add a2, t1, a2          # &A[row][0]
+    slli a3, a1, 2
+    add a3, t2, a3          # &B[0][col]
+    li a4, 0                # acc
+    mv a5, t5               # k counter
+    slli a6, t4, 2          # B row stride in bytes
+sgemm_k:
+    lw a7, 0(a2)
+    lw t6, 0(a3)
+    mul a7, a7, t6
+    add a4, a4, a7
+    addi a2, a2, 4
+    add a3, a3, a6
+    addi a5, a5, -1
+    bnez a5, sgemm_k
+    slli t6, a0, 2
+    add t6, t3, t6
+    sw a4, 0(t6)
+    ret
+"#
+        .to_string(),
+    }
+}
+
+/// One level-synchronous BFS sweep — args:
+/// `[row_ptr, col_idx, levels, cur_level, changed, max_degree]`.
+///
+/// The irregular benchmark: per-lane edge ranges force nested divergence
+/// (the degree-bounded outer loop is uniform; lane participation per edge
+/// slot and the "unvisited?" test are `split`/`join` regions).
+pub fn bfs_step() -> Kernel {
+    Kernel {
+        name: "bfs_step",
+        body: r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)            # row_ptr
+    lw t2, 4(t0)            # col_idx
+    lw t3, 8(t0)            # levels
+    lw t4, 12(t0)           # cur_level
+    lw t5, 16(t0)           # &changed
+    lw a6, 20(t0)           # max_degree (uniform loop bound)
+    slli t6, a0, 2
+    add t6, t3, t6
+    lw a1, 0(t6)            # levels[id]
+    xor a2, a1, t4
+    seqz a2, a2             # pred: on the current frontier?
+    split a2
+    beqz a2, bfs_skip
+    slli a3, a0, 2
+    add a3, t1, a3
+    lw a4, 0(a3)            # edge cursor = row_ptr[id]
+    lw a5, 4(a3)            # edge end   = row_ptr[id+1]
+bfs_edge_loop:
+    slt a7, a4, a5          # this lane still has an edge
+    split a7
+    beqz a7, bfs_edge_skip
+    slli t6, a4, 2
+    add t6, t2, t6
+    lw t6, 0(t6)            # neighbor id
+    slli t6, t6, 2
+    add t6, t3, t6          # &levels[nb]
+    lw a1, 0(t6)
+    addi a2, a1, 1          # pred: levels[nb] == -1  ⇔  a1+1 == 0
+    seqz a2, a2
+    split a2
+    beqz a2, bfs_no_upd
+    addi a1, t4, 1
+    sw a1, 0(t6)            # levels[nb] = cur_level + 1
+    li a1, 1
+    sw a1, 0(t5)            # changed = 1
+bfs_no_upd:
+    join
+    addi a4, a4, 1
+bfs_edge_skip:
+    join
+    addi a6, a6, -1
+    bnez a6, bfs_edge_loop
+bfs_skip:
+    join
+    ret
+"#
+        .to_string(),
+    }
+}
+
+/// Squared distance to the query per point (Rodinia `nn`) — args:
+/// `[xs, ys, qx, qy, out]`; the final arg-min reduce is host-side as in
+/// the original.
+pub fn nearn() -> Kernel {
+    Kernel {
+        name: "nearn",
+        body: r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)            # xs
+    lw t2, 4(t0)            # ys
+    lw t3, 8(t0)            # qx
+    lw t4, 12(t0)           # qy
+    lw t5, 16(t0)           # out
+    slli t6, a0, 2
+    add a1, t1, t6
+    lw a1, 0(a1)
+    sub a1, a1, t3
+    mul a1, a1, a1          # (x-qx)^2
+    add a2, t2, t6
+    lw a2, 0(a2)
+    sub a2, a2, t4
+    mul a2, a2, a2          # (y-qy)^2
+    add a1, a1, a2
+    add t6, t5, t6
+    sw a1, 0(t6)
+    ret
+"#
+        .to_string(),
+    }
+}
+
+/// One pivot step of Q24.8 forward elimination (Rodinia gaussian
+/// Fan1+Fan2 fused): work-item = row `k+1+gid` — args: `[A, n, k]`.
+pub fn gaussian_step() -> Kernel {
+    Kernel {
+        name: "gaussian_step",
+        body: r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)            # A (Q24.8)
+    lw t2, 4(t0)            # n
+    lw t3, 8(t0)            # k
+    addi a1, t3, 1
+    add a1, a1, a0          # row i = k + 1 + gid
+    mul t5, t3, t2
+    add t5, t5, t3
+    slli t5, t5, 2
+    add t5, t1, t5
+    lw t5, 0(t5)            # pivot = A[k][k]
+    mul a2, a1, t2
+    slli a2, a2, 2
+    add a2, t1, a2          # &A[i][0]
+    mul a3, t3, t2
+    slli a3, a3, 2
+    add a3, t1, a3          # &A[k][0]
+    slli a4, t3, 2          # k*4
+    add a5, a2, a4
+    lw a5, 0(a5)            # aik = A[i][k]
+    slli a5, a5, 8
+    div a5, a5, t5          # factor = (aik << 8) / pivot   (Q8)
+    addi a6, t3, 1          # j = k+1
+gauss_j:
+    bge a6, t2, gauss_done
+    slli a7, a6, 2
+    add t6, a2, a7
+    lw t0, 0(t6)            # A[i][j]
+    add a7, a3, a7
+    lw a7, 0(a7)            # A[k][j]
+    mul a7, a7, a5          # factor * A[k][j]
+    srai a7, a7, 8
+    sub t0, t0, a7
+    sw t0, 0(t6)
+    addi a6, a6, 1
+    j gauss_j
+gauss_done:
+    add a7, a2, a4
+    sw zero, 0(a7)          # A[i][k] = 0
+    ret
+"#
+        .to_string(),
+    }
+}
+
+/// K-means assignment step — args: `[px, py, cx, cy, K, assign]`.
+/// Diverges on every running-minimum update (split/join per centroid).
+pub fn kmeans_assign() -> Kernel {
+    Kernel {
+        name: "kmeans_assign",
+        body: r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)            # px
+    lw t2, 4(t0)            # py
+    lw t3, 8(t0)            # cx
+    lw t4, 12(t0)           # cy
+    lw t5, 16(t0)           # K
+    lw t6, 20(t0)           # assign
+    slli a1, a0, 2
+    add a2, t1, a1
+    lw a2, 0(a2)            # x
+    add a3, t2, a1
+    lw a3, 0(a3)            # y
+    li a4, 0                # c
+    li a5, 0x7fffffff       # best_d
+    li a6, 0                # best_c
+km_loop:
+    bge a4, t5, km_done
+    slli a7, a4, 2
+    add t0, t3, a7
+    lw t0, 0(t0)            # cx[c]
+    sub t0, a2, t0
+    mul t0, t0, t0
+    add a7, t4, a7
+    lw a7, 0(a7)            # cy[c]
+    sub a7, a3, a7
+    mul a7, a7, a7
+    add t0, t0, a7          # d
+    slt a7, t0, a5          # divergent: lanes update their minimum or not
+    split a7
+    beqz a7, km_no
+    mv a5, t0
+    mv a6, a4
+km_no:
+    join
+    addi a4, a4, 1
+    j km_loop
+km_done:
+    add a7, t6, a1
+    sw a6, 0(a7)
+    ret
+"#
+        .to_string(),
+    }
+}
+
+/// One anti-diagonal of the Needleman–Wunsch DP (wavefront) — args:
+/// `[score, sim, dim, d, i_start, penalty]`. Branchless max keeps the
+/// inner cell uniform; parallelism per launch = cells on the diagonal.
+pub fn nw_diag() -> Kernel {
+    Kernel {
+        name: "nw_diag",
+        body: r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)            # score
+    lw t2, 4(t0)            # sim
+    lw t3, 8(t0)            # dim (row stride)
+    lw t4, 12(t0)           # d (diagonal index)
+    lw t5, 16(t0)           # i_start
+    lw t6, 20(t0)           # penalty
+    add a1, t5, a0          # i
+    sub a2, t4, a1          # j = d - i
+    mul a3, a1, t3
+    add a3, a3, a2
+    slli a3, a3, 2          # byte idx of (i,j)
+    add a4, t1, a3          # &score[i][j]
+    slli a6, t3, 2          # dim*4
+    sub a7, a4, a6          # &score[i-1][j]
+    lw t0, -4(a7)           # score[i-1][j-1]
+    add a5, t2, a3
+    lw a5, 0(a5)            # sim[i][j]
+    add t0, t0, a5          # diag
+    lw a5, 0(a7)            # score[i-1][j]
+    sub a5, a5, t6          # up
+    # t0 = max(t0, a5) branchless
+    slt a2, t0, a5
+    sub a2, zero, a2
+    xor a1, t0, a5
+    and a1, a1, a2
+    xor t0, t0, a1
+    lw a5, -4(a4)           # score[i][j-1]
+    sub a5, a5, t6          # left
+    slt a2, t0, a5
+    sub a2, zero, a2
+    xor a1, t0, a5
+    and a1, a1, a2
+    xor t0, t0, a1
+    sw t0, 0(a4)
+    ret
+"#
+        .to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::config::MachineConfig;
+    use crate::stack::spawn::device_program;
+
+    #[test]
+    fn all_bodies_assemble_into_device_programs() {
+        let cfg = MachineConfig::paper_default();
+        for k in [
+            vecadd(),
+            saxpy(),
+            sgemm(),
+            bfs_step(),
+            nearn(),
+            gaussian_step(),
+            kmeans_assign(),
+            nw_diag(),
+        ] {
+            let src = device_program(&k.body, &cfg);
+            assemble(&src).unwrap_or_else(|e| panic!("{}: {e}", k.name));
+        }
+    }
+
+    #[test]
+    fn split_join_balanced_in_bodies() {
+        // static check: every kernel has equal split and join counts
+        for k in [bfs_step(), kmeans_assign()] {
+            let splits = k.body.matches("split").count();
+            let joins = k.body.matches("join").count();
+            assert_eq!(splits, joins, "{}", k.name);
+        }
+    }
+}

@@ -1,0 +1,444 @@
+//! The Rodinia benchmark subset (paper §V-B), end to end: workload
+//! generation → buffers → one or more NDRange launches (multi-launch for
+//! the level-synchronous / wavefront benchmarks) → bit-exact verification
+//! against the host reference.
+//!
+//! Fig 9/10 of the paper sweep these benchmarks over `(warps × threads)`
+//! design points; [`Bench::run`] is the unit those sweeps invoke.
+
+pub mod bodies;
+
+use crate::config::MachineConfig;
+use crate::pocl::{Backend, Buffer, LaunchError, VortexDevice};
+use crate::sim::CoreStats;
+use crate::workloads as wl;
+
+/// The benchmark suite (the paper's evaluated subset, §V-B: regular
+/// kernels plus BFS as the irregular one).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Bench {
+    VecAdd,
+    Saxpy,
+    Sgemm,
+    Bfs,
+    Nearn,
+    Gaussian,
+    Kmeans,
+    Nw,
+}
+
+/// Outcome of running one benchmark on one device configuration.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Total device cycles across all launches.
+    pub cycles: u64,
+    /// Merged simX statistics (cycles field = summed total).
+    pub stats: CoreStats,
+    /// Number of NDRange launches (1 for regular kernels; levels /
+    /// pivots / diagonals for the iterative ones).
+    pub launches: u32,
+    /// Bit-exact match against the host reference.
+    pub verified: bool,
+    /// The checked output payload (consumed by the golden-model runtime).
+    pub output: Vec<i32>,
+}
+
+impl Bench {
+    pub const ALL: [Bench; 8] = [
+        Bench::VecAdd,
+        Bench::Saxpy,
+        Bench::Sgemm,
+        Bench::Bfs,
+        Bench::Nearn,
+        Bench::Gaussian,
+        Bench::Kmeans,
+        Bench::Nw,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Bench::VecAdd => "vecadd",
+            Bench::Saxpy => "saxpy",
+            Bench::Sgemm => "sgemm",
+            Bench::Bfs => "bfs",
+            Bench::Nearn => "nearn",
+            Bench::Gaussian => "gaussian",
+            Bench::Kmeans => "kmeans",
+            Bench::Nw => "nw",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Bench> {
+        Bench::ALL.into_iter().find(|b| b.name() == name)
+    }
+
+    /// Run at the paper-reduced default scale.
+    pub fn run(
+        self,
+        cfg: MachineConfig,
+        seed: u64,
+        backend: Backend,
+        warm: bool,
+    ) -> Result<BenchResult, LaunchError> {
+        self.run_scaled(cfg, 1, seed, backend, warm)
+    }
+
+    /// Run with a problem-size multiplier (1 = the paper's reduced sets).
+    pub fn run_scaled(
+        self,
+        cfg: MachineConfig,
+        scale: u32,
+        seed: u64,
+        backend: Backend,
+        warm: bool,
+    ) -> Result<BenchResult, LaunchError> {
+        let mut dev = VortexDevice::new(cfg);
+        dev.warm_caches = warm;
+        let scale = scale.max(1);
+        match self {
+            Bench::VecAdd => run_vecadd(&mut dev, scale, seed, backend),
+            Bench::Saxpy => run_saxpy(&mut dev, scale, seed, backend),
+            Bench::Sgemm => run_sgemm(&mut dev, scale, seed, backend),
+            Bench::Bfs => run_bfs(&mut dev, scale, seed, backend),
+            Bench::Nearn => run_nearn(&mut dev, scale, seed, backend),
+            Bench::Gaussian => run_gaussian(&mut dev, scale, seed, backend),
+            Bench::Kmeans => run_kmeans(&mut dev, scale, seed, backend),
+            Bench::Nw => run_nw(&mut dev, scale, seed, backend),
+        }
+    }
+}
+
+/// Accumulates multi-launch results (cycles sum; counter merge).
+struct Acc {
+    cycles: u64,
+    stats: CoreStats,
+    launches: u32,
+}
+
+impl Acc {
+    fn new() -> Self {
+        Acc { cycles: 0, stats: CoreStats::default(), launches: 0 }
+    }
+
+    fn add(&mut self, r: &crate::pocl::LaunchResult) {
+        self.cycles += r.cycles;
+        self.stats.merge(&r.stats);
+        self.launches += 1;
+    }
+
+    fn finish(mut self, verified: bool, output: Vec<i32>) -> BenchResult {
+        self.stats.cycles = self.cycles;
+        BenchResult { cycles: self.cycles, stats: self.stats, launches: self.launches, verified, output }
+    }
+}
+
+fn ibuf(dev: &mut VortexDevice, data: &[i32]) -> Buffer {
+    let b = dev.create_buffer(data.len().max(1) * 4);
+    dev.write_buffer_i32(b, data);
+    b
+}
+
+fn run_vecadd(
+    dev: &mut VortexDevice,
+    scale: u32,
+    seed: u64,
+    backend: Backend,
+) -> Result<BenchResult, LaunchError> {
+    let n = 2048 * scale as usize;
+    let w = wl::vecadd(n, seed);
+    let a = ibuf(dev, &w.a);
+    let b = ibuf(dev, &w.b);
+    let c = dev.create_buffer(n * 4);
+    let mut acc = Acc::new();
+    let r = dev.launch(&bodies::vecadd(), n as u32, &[a.addr, b.addr, c.addr], backend)?;
+    acc.add(&r);
+    let out = dev.read_buffer_i32(c, n);
+    let ok = out == w.expect;
+    Ok(acc.finish(ok, out))
+}
+
+fn run_saxpy(
+    dev: &mut VortexDevice,
+    scale: u32,
+    seed: u64,
+    backend: Backend,
+) -> Result<BenchResult, LaunchError> {
+    let n = 2048 * scale as usize;
+    let w = wl::saxpy(n, seed);
+    let x = ibuf(dev, &w.x);
+    let y = ibuf(dev, &w.y);
+    let mut acc = Acc::new();
+    let r =
+        dev.launch(&bodies::saxpy(), n as u32, &[x.addr, y.addr, w.alpha as u32], backend)?;
+    acc.add(&r);
+    let out = dev.read_buffer_i32(y, n);
+    let ok = out == w.expect;
+    Ok(acc.finish(ok, out))
+}
+
+fn run_sgemm(
+    dev: &mut VortexDevice,
+    scale: u32,
+    seed: u64,
+    backend: Backend,
+) -> Result<BenchResult, LaunchError> {
+    let (m, n, k) = (16 * scale as usize, 16 * scale as usize, 16);
+    let w = wl::sgemm(m, n, k, seed);
+    let a = ibuf(dev, &w.a);
+    let b = ibuf(dev, &w.b);
+    let c = dev.create_buffer(m * n * 4);
+    let mut acc = Acc::new();
+    let r = dev.launch(
+        &bodies::sgemm(),
+        (m * n) as u32,
+        &[a.addr, b.addr, c.addr, n as u32, k as u32],
+        backend,
+    )?;
+    acc.add(&r);
+    let out = dev.read_buffer_i32(c, m * n);
+    let ok = out == w.expect;
+    Ok(acc.finish(ok, out))
+}
+
+fn run_bfs(
+    dev: &mut VortexDevice,
+    scale: u32,
+    seed: u64,
+    backend: Backend,
+) -> Result<BenchResult, LaunchError> {
+    let nodes = 256 * scale as usize;
+    let w = wl::bfs(nodes, 4, seed);
+    let row_ptr = ibuf(dev, &w.row_ptr);
+    let col_idx = ibuf(dev, &w.col_idx);
+    let mut levels_init = vec![-1i32; nodes];
+    levels_init[w.source] = 0;
+    let levels = ibuf(dev, &levels_init);
+    let changed = ibuf(dev, &[0]);
+    let kernel = bodies::bfs_step();
+    let mut acc = Acc::new();
+    let mut cur_level = 0u32;
+    loop {
+        dev.write_buffer_i32(changed, &[0]);
+        let r = dev.launch(
+            &kernel,
+            nodes as u32,
+            &[row_ptr.addr, col_idx.addr, levels.addr, cur_level, changed.addr, w.max_degree],
+            backend,
+        )?;
+        acc.add(&r);
+        if dev.read_buffer_i32(changed, 1)[0] == 0 {
+            break;
+        }
+        cur_level += 1;
+        if cur_level > nodes as u32 {
+            break; // safety: must have converged by now
+        }
+    }
+    let out = dev.read_buffer_i32(levels, nodes);
+    let ok = out == w.expect;
+    Ok(acc.finish(ok, out))
+}
+
+fn run_nearn(
+    dev: &mut VortexDevice,
+    scale: u32,
+    seed: u64,
+    backend: Backend,
+) -> Result<BenchResult, LaunchError> {
+    let n = 2048 * scale as usize;
+    let w = wl::nearn(n, seed);
+    let xs = ibuf(dev, &w.xs);
+    let ys = ibuf(dev, &w.ys);
+    let out_buf = dev.create_buffer(n * 4);
+    let mut acc = Acc::new();
+    let r = dev.launch(
+        &bodies::nearn(),
+        n as u32,
+        &[xs.addr, ys.addr, w.qx as u32, w.qy as u32, out_buf.addr],
+        backend,
+    )?;
+    acc.add(&r);
+    let out = dev.read_buffer_i32(out_buf, n);
+    // host-side final reduce, as in Rodinia nn
+    let argmin = out.iter().enumerate().min_by_key(|(_, &d)| d).map(|(i, _)| i).unwrap_or(0);
+    let ok = out == w.expect && argmin == w.argmin;
+    Ok(acc.finish(ok, out))
+}
+
+fn run_gaussian(
+    dev: &mut VortexDevice,
+    scale: u32,
+    seed: u64,
+    backend: Backend,
+) -> Result<BenchResult, LaunchError> {
+    let n = (8 * scale + 4) as usize;
+    let w = wl::gaussian(n, seed);
+    let a = ibuf(dev, &w.a);
+    let kernel = bodies::gaussian_step();
+    let mut acc = Acc::new();
+    for k in 0..n - 1 {
+        let rows = (n - 1 - k) as u32;
+        let r = dev.launch(&kernel, rows, &[a.addr, n as u32, k as u32], backend)?;
+        acc.add(&r);
+    }
+    let out = dev.read_buffer_i32(a, n * n);
+    let ok = out == w.expect;
+    Ok(acc.finish(ok, out))
+}
+
+fn run_kmeans(
+    dev: &mut VortexDevice,
+    scale: u32,
+    seed: u64,
+    backend: Backend,
+) -> Result<BenchResult, LaunchError> {
+    let n = 1024 * scale as usize;
+    let k = 4usize;
+    let w = wl::kmeans(n, k, seed);
+    let px = ibuf(dev, &w.px);
+    let py = ibuf(dev, &w.py);
+    let cx = ibuf(dev, &w.cx);
+    let cy = ibuf(dev, &w.cy);
+    let assign = dev.create_buffer(n * 4);
+    let mut acc = Acc::new();
+    let r = dev.launch(
+        &bodies::kmeans_assign(),
+        n as u32,
+        &[px.addr, py.addr, cx.addr, cy.addr, k as u32, assign.addr],
+        backend,
+    )?;
+    acc.add(&r);
+    let out = dev.read_buffer_i32(assign, n);
+    let ok = out == w.expect;
+    Ok(acc.finish(ok, out))
+}
+
+fn run_nw(
+    dev: &mut VortexDevice,
+    scale: u32,
+    seed: u64,
+    backend: Backend,
+) -> Result<BenchResult, LaunchError> {
+    let n = 48 * scale as usize;
+    let w = wl::nw(n, seed);
+    let dim = n + 1;
+    // device starts from the gap-penalty initialized score matrix
+    let mut init = vec![0i32; dim * dim];
+    for i in 1..dim {
+        init[i * dim] = -(i as i32) * w.penalty;
+        init[i] = -(i as i32) * w.penalty;
+    }
+    let score = ibuf(dev, &init);
+    let sim = ibuf(dev, &w.sim);
+    let kernel = bodies::nw_diag();
+    let mut acc = Acc::new();
+    for d in 2..=2 * n {
+        let i_start = 1.max(d as i32 - n as i32) as u32;
+        let i_end = n.min(d - 1) as u32; // inclusive
+        if i_end < i_start {
+            continue;
+        }
+        let count = i_end - i_start + 1;
+        let r = dev.launch(
+            &kernel,
+            count,
+            &[score.addr, sim.addr, dim as u32, d as u32, i_start, w.penalty as u32],
+            backend,
+        )?;
+        acc.add(&r);
+    }
+    let out = dev.read_buffer_i32(score, dim * dim);
+    let ok = out == w.expect;
+    Ok(acc.finish(ok, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SEED: u64 = 0xC0FFEE;
+
+    /// Every benchmark must verify bit-exactly on the functional oracle.
+    #[test]
+    fn all_benchmarks_verify_on_emulator() {
+        let cfg = MachineConfig::with_wt(4, 4);
+        for b in Bench::ALL {
+            let r = b.run(cfg, SEED, Backend::Emu, false).unwrap_or_else(|e| {
+                panic!("{} failed to launch: {e}", b.name())
+            });
+            assert!(r.verified, "{} output mismatch", b.name());
+        }
+    }
+
+    /// And on the cycle simulator, with sensible stats.
+    #[test]
+    fn regular_benchmarks_verify_on_simx() {
+        let cfg = MachineConfig::with_wt(2, 4);
+        for b in [Bench::VecAdd, Bench::Saxpy, Bench::Sgemm, Bench::Nearn] {
+            let r = b.run(cfg, SEED, Backend::SimX, true).unwrap();
+            assert!(r.verified, "{} mismatch", b.name());
+            assert!(r.cycles > 0 && r.stats.warp_instrs > 0);
+        }
+    }
+
+    #[test]
+    fn iterative_benchmarks_verify_on_simx() {
+        let cfg = MachineConfig::with_wt(2, 4);
+        for b in [Bench::Bfs, Bench::Gaussian, Bench::Kmeans, Bench::Nw] {
+            let r = b.run(cfg, SEED, Backend::SimX, true).unwrap();
+            assert!(r.verified, "{} mismatch", b.name());
+            assert!(r.launches >= 1);
+        }
+        // iterative ones really iterate
+        let r = Bench::Nw.run(cfg, SEED, Backend::SimX, true).unwrap();
+        assert!(r.launches > 10);
+    }
+
+    #[test]
+    fn bfs_diverges_more_than_vecadd() {
+        // the paper's §V-D point: BFS is the irregular benchmark
+        let cfg = MachineConfig::with_wt(4, 8);
+        let bfs = Bench::Bfs.run(cfg, SEED, Backend::SimX, true).unwrap();
+        let va = Bench::VecAdd.run(cfg, SEED, Backend::SimX, true).unwrap();
+        assert!(bfs.stats.divergent_splits > 0);
+        let bfs_rate = bfs.stats.divergent_splits as f64 / bfs.stats.warp_instrs as f64;
+        let va_rate = va.stats.divergent_splits as f64 / va.stats.warp_instrs as f64;
+        assert!(bfs_rate > va_rate, "bfs {bfs_rate} !> vecadd {va_rate}");
+    }
+
+    #[test]
+    fn threads_scaling_speeds_up_vecadd() {
+        // Fig 9's main trend: more threads (SIMD width) ⇒ faster
+        let t2 = Bench::VecAdd
+            .run(MachineConfig::with_wt(2, 2), SEED, Backend::SimX, true)
+            .unwrap();
+        let t16 = Bench::VecAdd
+            .run(MachineConfig::with_wt(2, 16), SEED, Backend::SimX, true)
+            .unwrap();
+        assert!(t2.verified && t16.verified);
+        assert!(
+            (t16.cycles as f64) < 0.5 * t2.cycles as f64,
+            "2x16 ({}) should be ≪ 2x2 ({})",
+            t16.cycles,
+            t2.cycles
+        );
+    }
+
+    #[test]
+    fn emu_and_simx_outputs_identical() {
+        let cfg = MachineConfig::with_wt(2, 2);
+        for b in [Bench::Sgemm, Bench::Bfs, Bench::Nw] {
+            let e = b.run(cfg, SEED, Backend::Emu, false).unwrap();
+            let s = b.run(cfg, SEED, Backend::SimX, false).unwrap();
+            assert_eq!(e.output, s.output, "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn bench_names_roundtrip() {
+        for b in Bench::ALL {
+            assert_eq!(Bench::from_name(b.name()), Some(b));
+        }
+        assert_eq!(Bench::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,39 @@
+//! # Vortex: OpenCL Compatible RISC-V GPGPU — full-stack reproduction
+//!
+//! This crate reproduces the Vortex GPGPU system (Elsabbagh et al., 2020) as
+//! a three-layer Rust + JAX/Pallas stack:
+//!
+//! * [`isa`] — RV32IM + the paper's 5-instruction SIMT extension (Table I).
+//! * [`asm`] — a two-pass assembler replacing the RISC-V binutils dependency.
+//! * [`emu`] — a warp-accurate *functional* SIMT emulator (architectural oracle).
+//! * [`sim`] — the cycle-level simulator (the paper's simX): warp scheduler
+//!   with the four scheduling masks, IPDOM stacks, thread-mask predication,
+//!   barrier tables, banked caches and shared memory, multi-core.
+//! * [`stack`] — the Vortex native runtime analog: intrinsics, NewLib-style
+//!   syscall stubs, and `pocl_spawn` work-group mapping (paper §III-A).
+//! * [`pocl`] — a mini-OpenCL host API with a Vortex device target (§III-B).
+//! * [`kernels`] — the Rodinia-subset device kernels, authored with a
+//!   kernel-builder DSL that mirrors POCL's generated structure.
+//! * [`workloads`] — seeded input generators + host-side references.
+//! * [`power`] — the analytic area/power/energy model standing in for the
+//!   paper's 15 nm Synopsys synthesis flow (Figs 7, 8, 10).
+//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas golden
+//!   models (`artifacts/*.hlo.txt`) for end-to-end output validation.
+//! * [`coordinator`] — configuration, benchmark driver, design-space sweeps
+//!   and report generation for every table/figure in the paper.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod asm;
+pub mod config;
+pub mod coordinator;
+pub mod emu;
+pub mod isa;
+pub mod kernels;
+pub mod mem;
+pub mod pocl;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod stack;
+pub mod workloads;

@@ -1,0 +1,16 @@
+//! `vortex` — leader binary: CLI over the full stack (simulator, power
+//! model, golden-model validation). See `vortex help`.
+
+use vortex::coordinator::cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match cli::parse(&args) {
+        Ok(cmd) => cli::execute(cmd),
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli::HELP);
+            2
+        }
+    };
+    std::process::exit(code);
+}

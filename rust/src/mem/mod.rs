@@ -1,0 +1,188 @@
+//! Device memory substrate: a paged, sparse 32-bit address space shared by
+//! the functional emulator and the cycle simulator, plus the host-side
+//! buffer helpers the mini-OpenCL runtime uses for `clCreateBuffer`-style
+//! transfers.
+
+use crate::asm::Program;
+use std::collections::HashMap;
+
+const PAGE_BITS: u32 = 12;
+const PAGE_SIZE: usize = 1 << PAGE_BITS;
+const PAGE_MASK: u32 = (PAGE_SIZE as u32) - 1;
+
+/// Sparse paged memory. Reads of unmapped pages return zeros; writes map
+/// pages on demand (the device has no MMU — the paper's cores are
+/// bare-metal newlib targets).
+#[derive(Default, Clone)]
+pub struct Memory {
+    pages: HashMap<u32, Box<[u8; PAGE_SIZE]>>,
+}
+
+impl Memory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn page(&self, addr: u32) -> Option<&[u8; PAGE_SIZE]> {
+        self.pages.get(&(addr >> PAGE_BITS)).map(|b| &**b)
+    }
+
+    #[inline]
+    fn page_mut(&mut self, addr: u32) -> &mut [u8; PAGE_SIZE] {
+        self.pages
+            .entry(addr >> PAGE_BITS)
+            .or_insert_with(|| Box::new([0u8; PAGE_SIZE]))
+    }
+
+    #[inline]
+    pub fn read_u8(&self, addr: u32) -> u8 {
+        match self.page(addr) {
+            Some(p) => p[(addr & PAGE_MASK) as usize],
+            None => 0,
+        }
+    }
+
+    #[inline]
+    pub fn write_u8(&mut self, addr: u32, v: u8) {
+        self.page_mut(addr)[(addr & PAGE_MASK) as usize] = v;
+    }
+
+    #[inline]
+    pub fn read_u16(&self, addr: u32) -> u16 {
+        // halfword accesses are naturally aligned in all our codegen, but
+        // the emulator tolerates any alignment (byte-composed).
+        (self.read_u8(addr) as u16) | ((self.read_u8(addr.wrapping_add(1)) as u16) << 8)
+    }
+
+    #[inline]
+    pub fn write_u16(&mut self, addr: u32, v: u16) {
+        self.write_u8(addr, v as u8);
+        self.write_u8(addr.wrapping_add(1), (v >> 8) as u8);
+    }
+
+    #[inline]
+    pub fn read_u32(&self, addr: u32) -> u32 {
+        let off = (addr & PAGE_MASK) as usize;
+        if off + 4 <= PAGE_SIZE {
+            if let Some(p) = self.page(addr) {
+                return u32::from_le_bytes([p[off], p[off + 1], p[off + 2], p[off + 3]]);
+            }
+            return 0;
+        }
+        (self.read_u16(addr) as u32) | ((self.read_u16(addr.wrapping_add(2)) as u32) << 16)
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, addr: u32, v: u32) {
+        let off = (addr & PAGE_MASK) as usize;
+        if off + 4 <= PAGE_SIZE {
+            let p = self.page_mut(addr);
+            p[off..off + 4].copy_from_slice(&v.to_le_bytes());
+            return;
+        }
+        self.write_u16(addr, v as u16);
+        self.write_u16(addr.wrapping_add(2), (v >> 16) as u16);
+    }
+
+    /// Load an assembled program image.
+    pub fn load_program(&mut self, prog: &Program) {
+        for (addr, byte) in prog.bytes() {
+            self.write_u8(addr, byte);
+        }
+    }
+
+    /// Host→device bulk copy (mini-OpenCL `clEnqueueWriteBuffer`).
+    pub fn write_block(&mut self, addr: u32, data: &[u8]) {
+        for (i, b) in data.iter().enumerate() {
+            self.write_u8(addr.wrapping_add(i as u32), *b);
+        }
+    }
+
+    /// Device→host bulk copy (mini-OpenCL `clEnqueueReadBuffer`).
+    pub fn read_block(&self, addr: u32, len: usize) -> Vec<u8> {
+        (0..len).map(|i| self.read_u8(addr.wrapping_add(i as u32))).collect()
+    }
+
+    /// Convenience: write a slice of words.
+    pub fn write_u32_slice(&mut self, addr: u32, data: &[u32]) {
+        for (i, w) in data.iter().enumerate() {
+            self.write_u32(addr.wrapping_add(4 * i as u32), *w);
+        }
+    }
+
+    /// Convenience: read a slice of words.
+    pub fn read_u32_slice(&self, addr: u32, n: usize) -> Vec<u32> {
+        (0..n).map(|i| self.read_u32(addr.wrapping_add(4 * i as u32))).collect()
+    }
+
+    /// Convenience for i32 payloads (our kernels are int/fixed-point).
+    pub fn write_i32_slice(&mut self, addr: u32, data: &[i32]) {
+        for (i, w) in data.iter().enumerate() {
+            self.write_u32(addr.wrapping_add(4 * i as u32), *w as u32);
+        }
+    }
+
+    pub fn read_i32_slice(&self, addr: u32, n: usize) -> Vec<i32> {
+        (0..n).map(|i| self.read_u32(addr.wrapping_add(4 * i as u32)) as i32).collect()
+    }
+
+    /// Number of resident pages (footprint diagnostics).
+    pub fn resident_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_roundtrip_all_widths() {
+        let mut m = Memory::new();
+        m.write_u8(0x10, 0xAB);
+        assert_eq!(m.read_u8(0x10), 0xAB);
+        m.write_u16(0x20, 0xBEEF);
+        assert_eq!(m.read_u16(0x20), 0xBEEF);
+        m.write_u32(0x30, 0xDEAD_BEEF);
+        assert_eq!(m.read_u32(0x30), 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn unmapped_reads_zero() {
+        let m = Memory::new();
+        assert_eq!(m.read_u32(0xFFFF_0000), 0);
+    }
+
+    #[test]
+    fn cross_page_word_access() {
+        let mut m = Memory::new();
+        let addr = (1 << PAGE_BITS) - 2; // straddles page 0 / page 1
+        m.write_u32(addr, 0x1122_3344);
+        assert_eq!(m.read_u32(addr), 0x1122_3344);
+        assert_eq!(m.read_u8(addr), 0x44);
+        assert_eq!(m.read_u8(addr + 3), 0x11);
+    }
+
+    #[test]
+    fn block_copies() {
+        let mut m = Memory::new();
+        let data: Vec<u8> = (0..=255).collect();
+        m.write_block(0x5000, &data);
+        assert_eq!(m.read_block(0x5000, 256), data);
+    }
+
+    #[test]
+    fn i32_slices() {
+        let mut m = Memory::new();
+        m.write_i32_slice(0x100, &[-1, 2, -3]);
+        assert_eq!(m.read_i32_slice(0x100, 3), vec![-1, 2, -3]);
+    }
+
+    #[test]
+    fn wraparound_addresses_do_not_panic() {
+        let mut m = Memory::new();
+        m.write_u32(0xFFFF_FFFE, 0xAABB_CCDD);
+        assert_eq!(m.read_u32(0xFFFF_FFFE), 0xAABB_CCDD);
+    }
+}

@@ -1,0 +1,334 @@
+//! Mini-OpenCL host runtime with a Vortex device target (paper §III-B).
+//!
+//! POCL's common device interface lets each target plug in buffer
+//! management and kernel launch; the paper adds a Vortex target that is
+//! "a variant of the POCL basic CPU target … modified to use Vortex's
+//! pocl_spawn runtime API". This module is that layer for our stack:
+//!
+//! * [`Platform`] / device discovery (`clGetDeviceIDs` analog),
+//! * [`VortexDevice`] — persistent device memory, a bump allocator for
+//!   buffers (`clCreateBuffer`), host↔device transfers
+//!   (`clEnqueueRead/WriteBuffer`), and
+//! * [`VortexDevice::launch`] — `clEnqueueNDRangeKernel`, which performs
+//!   the `pocl_spawn` mapping (paper §III-A.3) by writing the DCB and the
+//!   kernel arguments, generating + assembling the device program, and
+//!   running it on the cycle simulator (or the functional oracle).
+
+use crate::asm::{assemble, Program};
+use crate::config::MachineConfig;
+use crate::emu::step::EmuError;
+use crate::emu::{Emulator, ExitStatus};
+use crate::mem::Memory;
+use crate::sim::{CoreStats, Simulator};
+use crate::stack::spawn::{dcb_words, device_program};
+use crate::stack::{ARGS_ADDR, DCB_ADDR, MAX_ARGS};
+use std::collections::HashMap;
+
+/// Device-buffer handle (`cl_mem` analog).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Buffer {
+    pub addr: u32,
+    pub len: usize,
+}
+
+/// A compiled-source kernel (`cl_kernel` analog). `body` must define the
+/// `kernel_body:` label per the [`crate::stack::spawn`] ABI.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub name: &'static str,
+    pub body: String,
+}
+
+/// Which machine executes the launch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Cycle-level simulator (timing + stats) — the default.
+    SimX,
+    /// Functional oracle (fast, no timing).
+    Emu,
+}
+
+/// Result of one NDRange launch.
+#[derive(Clone, Debug)]
+pub struct LaunchResult {
+    pub status: ExitStatus,
+    /// Machine cycles (0 for the functional backend).
+    pub cycles: u64,
+    /// simX statistics (empty default for the functional backend).
+    pub stats: CoreStats,
+    pub console: String,
+}
+
+/// Launch failure.
+#[derive(Debug)]
+pub enum LaunchError {
+    Asm(crate::asm::AsmError),
+    Machine(EmuError),
+    BadExit(ExitStatus),
+    TooManyArgs(usize),
+}
+
+impl std::fmt::Display for LaunchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LaunchError::Asm(e) => write!(f, "kernel assembly failed: {e}"),
+            LaunchError::Machine(e) => write!(f, "device error: {e}"),
+            LaunchError::BadExit(s) => write!(f, "kernel did not exit cleanly: {s:?}"),
+            LaunchError::TooManyArgs(n) => write!(f, "{n} kernel args (max {MAX_ARGS})"),
+        }
+    }
+}
+
+impl std::error::Error for LaunchError {}
+
+/// The platform: enumerates available device configurations
+/// (`clGetPlatformIDs` analog; configurations are the paper's
+/// warps × threads design points).
+pub struct Platform;
+
+impl Platform {
+    /// The design points of the paper's evaluation (Figs 8–10).
+    pub fn paper_devices() -> Vec<MachineConfig> {
+        MachineConfig::paper_sweep()
+            .into_iter()
+            .map(|(w, t)| MachineConfig::with_wt(w, t))
+            .collect()
+    }
+}
+
+/// Base of the global-memory buffer arena.
+const BUFFER_BASE: u32 = 0x9000_0000;
+
+/// An OpenCL-style device wrapping one machine configuration.
+pub struct VortexDevice {
+    pub config: MachineConfig,
+    /// Persistent device global memory (survives across launches).
+    pub mem: Memory,
+    next_buffer: u32,
+    /// Pre-warm caches over buffers before each launch (the paper's
+    /// evaluation methodology, §V-D).
+    pub warm_caches: bool,
+    /// Assembled-program cache keyed by kernel name.
+    program_cache: HashMap<&'static str, Program>,
+}
+
+impl VortexDevice {
+    pub fn new(config: MachineConfig) -> Self {
+        VortexDevice {
+            config,
+            mem: Memory::new(),
+            next_buffer: BUFFER_BASE,
+            warm_caches: false,
+            program_cache: HashMap::new(),
+        }
+    }
+
+    /// `clCreateBuffer`: allocate `len` bytes of device global memory.
+    pub fn create_buffer(&mut self, len: usize) -> Buffer {
+        let addr = self.next_buffer;
+        // 64B alignment keeps buffers line-aligned in the D$
+        self.next_buffer += ((len as u32) + 63) & !63;
+        Buffer { addr, len }
+    }
+
+    /// `clEnqueueWriteBuffer` for i32 payloads (our kernels are int/Q16.16).
+    pub fn write_buffer_i32(&mut self, buf: Buffer, data: &[i32]) {
+        assert!(data.len() * 4 <= buf.len, "write overflows buffer");
+        self.mem.write_i32_slice(buf.addr, data);
+    }
+
+    /// `clEnqueueReadBuffer` for i32 payloads.
+    pub fn read_buffer_i32(&self, buf: Buffer, n: usize) -> Vec<i32> {
+        assert!(n * 4 <= buf.len, "read overflows buffer");
+        self.mem.read_i32_slice(buf.addr, n)
+    }
+
+    /// `clEnqueueNDRangeKernel`: run `kernel` over `total` work items with
+    /// the given argument words (buffer addresses or scalars).
+    pub fn launch(
+        &mut self,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        backend: Backend,
+    ) -> Result<LaunchResult, LaunchError> {
+        if args.len() > MAX_ARGS as usize {
+            return Err(LaunchError::TooManyArgs(args.len()));
+        }
+        // assemble once per kernel; later launches borrow the cached image
+        // (cloning the Program per launch dominated the multi-launch
+        // profile — §Perf iteration 4)
+        if !self.program_cache.contains_key(kernel.name) {
+            let src = device_program(&kernel.body, &self.config);
+            let p = assemble(&src).map_err(LaunchError::Asm)?;
+            self.program_cache.insert(kernel.name, p);
+        }
+
+        // stage launch parameters into the persistent device memory
+        self.mem.write_u32_slice(DCB_ADDR, &dcb_words(total, &self.config));
+        for (i, a) in args.iter().enumerate() {
+            self.mem.write_u32(ARGS_ADDR + 4 * i as u32, *a);
+        }
+
+        let prog = &self.program_cache[kernel.name];
+        match backend {
+            Backend::SimX => {
+                let mut sim = Simulator::new(self.config);
+                // move (not clone) device memory into the machine; it moves
+                // back after the run — the clones dominated the launch-path
+                // profile (EXPERIMENTS.md §Perf iteration 1)
+                sim.mem = std::mem::take(&mut self.mem);
+                sim.load(prog);
+                if self.warm_caches {
+                    let len = self.next_buffer - BUFFER_BASE;
+                    sim.warm_dcache(BUFFER_BASE, len);
+                }
+                sim.launch(prog.entry());
+                let run = sim.run(u64::MAX);
+                self.mem = sim.mem; // device memory persists (even on error)
+                let res = run.map_err(LaunchError::Machine)?;
+                if res.status != ExitStatus::Exited(0) {
+                    return Err(LaunchError::BadExit(res.status));
+                }
+                Ok(LaunchResult {
+                    status: res.status,
+                    cycles: res.cycles,
+                    stats: res.stats,
+                    console: String::from_utf8_lossy(&sim.console).into_owned(),
+                })
+            }
+            Backend::Emu => {
+                let mut emu = Emulator::new(self.config);
+                emu.mem = std::mem::take(&mut self.mem);
+                emu.load(prog);
+                emu.launch(prog.entry());
+                let run = emu.run(u64::MAX);
+                let console = emu.console_string();
+                self.mem = emu.mem; // device memory persists (even on error)
+                let status = run.map_err(LaunchError::Machine)?;
+                if status != ExitStatus::Exited(0) {
+                    return Err(LaunchError::BadExit(status));
+                }
+                Ok(LaunchResult {
+                    status,
+                    cycles: 0,
+                    stats: CoreStats::default(),
+                    console,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn double_kernel() -> Kernel {
+        Kernel {
+            name: "double",
+            body: r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)           # in
+    lw t2, 4(t0)           # out
+    slli t3, a0, 2
+    add t4, t1, t3
+    lw t5, 0(t4)
+    slli t5, t5, 1
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#
+            .to_string(),
+        }
+    }
+
+    #[test]
+    fn ndrange_launch_roundtrip_simx() {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(4, 4));
+        let n = 33usize;
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        let input: Vec<i32> = (0..n as i32).collect();
+        dev.write_buffer_i32(a, &input);
+        let res = dev
+            .launch(&double_kernel(), n as u32, &[a.addr, b.addr], Backend::SimX)
+            .unwrap();
+        assert!(res.cycles > 0);
+        let out = dev.read_buffer_i32(b, n);
+        assert_eq!(out, input.iter().map(|x| 2 * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn emu_and_simx_agree() {
+        let n = 17usize;
+        let input: Vec<i32> = (0..n as i32).map(|x| 3 * x - 5).collect();
+        let mut outs = Vec::new();
+        for backend in [Backend::SimX, Backend::Emu] {
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 4));
+            let a = dev.create_buffer(n * 4);
+            let b = dev.create_buffer(n * 4);
+            dev.write_buffer_i32(a, &input);
+            dev.launch(&double_kernel(), n as u32, &[a.addr, b.addr], backend).unwrap();
+            outs.push(dev.read_buffer_i32(b, n));
+        }
+        assert_eq!(outs[0], outs[1]);
+    }
+
+    #[test]
+    fn buffers_are_disjoint_and_aligned() {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 1));
+        let a = dev.create_buffer(100);
+        let b = dev.create_buffer(10);
+        assert_eq!(a.addr % 64, 0);
+        assert_eq!(b.addr % 64, 0);
+        assert!(b.addr >= a.addr + 100);
+    }
+
+    #[test]
+    fn device_memory_persists_across_launches() {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 2));
+        let n = 8usize;
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &vec![1; n]);
+        let k = double_kernel();
+        dev.launch(&k, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        // second launch reads the first launch's output
+        dev.launch(&k, n as u32, &[b.addr, a.addr], Backend::SimX).unwrap();
+        assert_eq!(dev.read_buffer_i32(a, n), vec![4; n]);
+    }
+
+    #[test]
+    fn warm_caches_reduce_cycles() {
+        let n = 256usize;
+        let input: Vec<i32> = (0..n as i32).collect();
+        let run = |warm: bool| {
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 4));
+            dev.warm_caches = warm;
+            let a = dev.create_buffer(n * 4);
+            let b = dev.create_buffer(n * 4);
+            dev.write_buffer_i32(a, &input);
+            dev.launch(&double_kernel(), n as u32, &[a.addr, b.addr], Backend::SimX)
+                .unwrap()
+                .cycles
+        };
+        assert!(run(true) < run(false));
+    }
+
+    #[test]
+    fn paper_platform_lists_sweep() {
+        let devs = Platform::paper_devices();
+        assert!(devs.len() >= 10);
+        assert!(devs.iter().any(|d| d.num_warps == 32 && d.num_threads == 32));
+    }
+
+    #[test]
+    fn too_many_args_rejected() {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 1));
+        let args = vec![0u32; 17];
+        let e = dev.launch(&double_kernel(), 1, &args, Backend::Emu).unwrap_err();
+        assert!(matches!(e, LaunchError::TooManyArgs(17)));
+    }
+}

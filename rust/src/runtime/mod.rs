@@ -1,0 +1,154 @@
+//! PJRT golden-model runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from Rust via the `xla` crate.
+//!
+//! This is the verification half of the three-layer architecture: the L2
+//! golden models define what a correct device must produce; this runtime
+//! runs them natively (Python is never on this path) and compares against
+//! the cycle simulator's output buffers. The pattern follows
+//! /opt/xla-example/load_hlo (HLO *text* interchange — see aot.py).
+
+use crate::kernels::Bench;
+use crate::workloads as wl;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One input literal spec: flat i32 payload + dims.
+pub struct GoldenInput {
+    pub data: Vec<i32>,
+    pub dims: Vec<i64>,
+}
+
+/// The loaded golden-model runtime.
+pub struct GoldenRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    executables: HashMap<&'static str, xla::PjRtLoadedExecutable>,
+}
+
+impl GoldenRuntime {
+    /// Create a CPU PJRT client over the artifact directory. Compilation is
+    /// lazy per benchmark (first use) and cached.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(GoldenRuntime {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            executables: HashMap::new(),
+        })
+    }
+
+    /// True if the artifact file for `bench` exists.
+    pub fn has_artifact(&self, bench: Bench) -> bool {
+        self.dir.join(format!("{}.hlo.txt", bench.name())).exists()
+    }
+
+    fn executable(&mut self, bench: Bench) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(bench.name()) {
+            let path = self.dir.join(format!("{}.hlo.txt", bench.name()));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).context("XLA compile")?;
+            self.executables.insert(bench.name(), exe);
+        }
+        Ok(&self.executables[bench.name()])
+    }
+
+    /// Execute the golden model for `bench` on the given inputs; returns
+    /// the flattened i32 output.
+    pub fn run(&mut self, bench: Bench, inputs: &[GoldenInput]) -> Result<Vec<i32>> {
+        let exe = self.executable(bench)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| {
+                let lit = xla::Literal::vec1(&i.data);
+                if i.dims.len() == 1 {
+                    Ok(lit)
+                } else {
+                    lit.reshape(&i.dims).context("reshape input")
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .context("execute")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetch result")?
+            .to_tuple1()
+            .context("unwrap 1-tuple (lowered with return_tuple=True)")?;
+        out.to_vec::<i32>().context("read i32 payload")
+    }
+
+    /// Build the golden-model inputs for a benchmark at the default scale,
+    /// from the same seeded generators the device driver uses.
+    pub fn golden_inputs(bench: Bench, seed: u64) -> Vec<GoldenInput> {
+        let v1 = |data: Vec<i32>| {
+            let n = data.len() as i64;
+            GoldenInput { data, dims: vec![n] }
+        };
+        let m2 = |data: Vec<i32>, r: i64, c: i64| GoldenInput { data, dims: vec![r, c] };
+        match bench {
+            Bench::VecAdd => {
+                let w = wl::vecadd(2048, seed);
+                vec![v1(w.a), v1(w.b)]
+            }
+            Bench::Saxpy => {
+                let w = wl::saxpy(2048, seed);
+                vec![v1(w.x), v1(w.y), v1(vec![w.alpha])]
+            }
+            Bench::Sgemm => {
+                let w = wl::sgemm(16, 16, 16, seed);
+                vec![m2(w.a, 16, 16), m2(w.b, 16, 16)]
+            }
+            Bench::Bfs => {
+                let w = wl::bfs(256, 4, seed);
+                const INF: i32 = 0x3FFF_FFFF;
+                let n = w.nodes;
+                let mut dense = vec![INF; n * n];
+                for v in 0..n {
+                    for e in w.row_ptr[v] as usize..w.row_ptr[v + 1] as usize {
+                        dense[v * n + w.col_idx[e] as usize] = 1;
+                    }
+                }
+                vec![m2(dense, n as i64, n as i64)]
+            }
+            Bench::Nearn => {
+                let w = wl::nearn(2048, seed);
+                vec![v1(w.xs), v1(w.ys), v1(vec![w.qx, w.qy])]
+            }
+            Bench::Gaussian => {
+                let w = wl::gaussian(12, seed);
+                vec![m2(w.a, 12, 12)]
+            }
+            Bench::Kmeans => {
+                let w = wl::kmeans(1024, 4, seed);
+                vec![v1(w.px), v1(w.py), v1(w.cx), v1(w.cy)]
+            }
+            Bench::Nw => {
+                let w = wl::nw(48, seed);
+                let dim = (w.n + 1) as i64;
+                vec![m2(w.sim, dim, dim), v1(vec![w.penalty])]
+            }
+        }
+    }
+
+    /// End-to-end validation: run the golden model and compare against a
+    /// device output buffer (bit-exact).
+    pub fn validate(&mut self, bench: Bench, seed: u64, device_output: &[i32]) -> Result<bool> {
+        let inputs = Self::golden_inputs(bench, seed);
+        let golden = self.run(bench, &inputs)?;
+        if golden.len() != device_output.len() {
+            return Err(anyhow!(
+                "{}: golden len {} != device len {}",
+                bench.name(),
+                golden.len(),
+                device_output.len()
+            ));
+        }
+        Ok(golden == device_output)
+    }
+}

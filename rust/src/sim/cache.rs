@@ -1,0 +1,270 @@
+//! Set-associative, banked, LRU cache timing model (I$ and D$).
+//!
+//! The paper's memory system (§V-A): banked caches whose arbitration logic
+//! detects bank conflicts and handles misses; lanes of a warp access the
+//! cache together, so the model coalesces per-line, serializes per-bank,
+//! and overlaps misses up to the MSHR count.
+
+use crate::config::CacheConfig;
+
+/// Timing + hit/miss outcome of one warp-wide access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Access {
+    /// Total cycles the access occupies the cache port.
+    pub cycles: u32,
+    /// Distinct lines that hit.
+    pub hits: u32,
+    /// Distinct lines that missed (filled by this access).
+    pub misses: u32,
+    /// Extra cycles lost to bank-conflict serialization.
+    pub conflict_cycles: u32,
+    /// Dirty lines written back during fills.
+    pub writebacks: u32,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct LineState {
+    tag: u32,
+    valid: bool,
+    dirty: bool,
+    /// LRU stamp (bigger = more recent).
+    lru: u64,
+}
+
+/// One cache instance.
+pub struct Cache {
+    cfg: CacheConfig,
+    /// `sets × ways` line states.
+    lines: Vec<LineState>,
+    stamp: u64,
+    // cumulative stats
+    pub total_hits: u64,
+    pub total_misses: u64,
+    pub total_writebacks: u64,
+    pub total_conflict_cycles: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let n = (cfg.sets() * cfg.ways) as usize;
+        Cache {
+            cfg,
+            lines: vec![LineState::default(); n],
+            stamp: 0,
+            total_hits: 0,
+            total_misses: 0,
+            total_writebacks: 0,
+            total_conflict_cycles: 0,
+        }
+    }
+
+    #[inline]
+    fn line_addr(&self, addr: u32) -> u32 {
+        addr / self.cfg.line
+    }
+
+    /// Probe/fill one line. Returns `(hit, writeback)`.
+    fn touch(&mut self, line_addr: u32, is_store: bool) -> (bool, bool) {
+        let sets = self.cfg.sets();
+        let set = (line_addr % sets) as usize;
+        let tag = line_addr / sets;
+        let ways = self.cfg.ways as usize;
+        let base = set * ways;
+        self.stamp += 1;
+
+        // hit?
+        for i in 0..ways {
+            let l = &mut self.lines[base + i];
+            if l.valid && l.tag == tag {
+                l.lru = self.stamp;
+                l.dirty |= is_store;
+                return (true, false);
+            }
+        }
+        // miss: evict LRU way
+        let mut victim = 0usize;
+        let mut oldest = u64::MAX;
+        for i in 0..ways {
+            let l = &self.lines[base + i];
+            if !l.valid {
+                victim = i;
+                break;
+            }
+            if l.lru < oldest {
+                oldest = l.lru;
+                victim = i;
+            }
+        }
+        let evicted_dirty = {
+            let l = &self.lines[base + victim];
+            l.valid && l.dirty
+        };
+        self.lines[base + victim] =
+            LineState { tag, valid: true, dirty: is_store, lru: self.stamp };
+        (false, evicted_dirty)
+    }
+
+    /// Warp-wide access: `addrs` are the per-lane byte addresses.
+    ///
+    /// Model: (1) coalesce to distinct lines, (2) serialize lines that
+    /// collide on a bank, (3) overlap misses up to the MSHR count
+    /// (`ceil(misses / mshrs)` sequential fill rounds).
+    pub fn access(&mut self, addrs: &[u32], is_store: bool) -> Access {
+        if addrs.is_empty() {
+            return Access { cycles: 0, hits: 0, misses: 0, conflict_cycles: 0, writebacks: 0 };
+        }
+        // coalescing unit: distinct lines, preserving first-seen order
+        // (fixed-capacity stack arrays — this path runs once per memory
+        // instruction, §Perf iteration 2)
+        let mut lines = [0u32; 32];
+        let mut n_lines = 0usize;
+        'outer: for &a in addrs.iter().take(32) {
+            let la = self.line_addr(a);
+            for &seen in &lines[..n_lines] {
+                if seen == la {
+                    continue 'outer;
+                }
+            }
+            lines[n_lines] = la;
+            n_lines += 1;
+        }
+        let lines = &lines[..n_lines];
+        // bank conflicts
+        let banks = self.cfg.banks.max(1).min(64);
+        let mut per_bank = [0u32; 64];
+        for &la in lines {
+            per_bank[(la % banks) as usize] += 1;
+        }
+        let serial = per_bank[..banks as usize].iter().copied().max().unwrap_or(1).max(1);
+        let conflict_cycles = serial - 1;
+
+        // probe/fill
+        let (mut hits, mut misses, mut writebacks) = (0u32, 0u32, 0u32);
+        for &la in lines {
+            let (hit, wb) = self.touch(la, is_store);
+            if hit {
+                hits += 1;
+            } else {
+                misses += 1;
+            }
+            if wb {
+                writebacks += 1;
+            }
+        }
+        let mshrs = self.cfg.mshrs.max(1);
+        let fill_rounds = misses.div_ceil(mshrs);
+        let cycles = self.cfg.hit_latency + conflict_cycles + fill_rounds * self.cfg.miss_penalty;
+
+        self.total_hits += hits as u64;
+        self.total_misses += misses as u64;
+        self.total_writebacks += writebacks as u64;
+        self.total_conflict_cycles += conflict_cycles as u64;
+        Access { cycles, hits, misses, conflict_cycles, writebacks }
+    }
+
+    /// Single-address convenience (instruction fetch).
+    pub fn access_one(&mut self, addr: u32, is_store: bool) -> Access {
+        self.access(&[addr], is_store)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.total_hits + self.total_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.total_hits as f64 / total as f64
+        }
+    }
+
+    /// Pre-warm a line (the paper "warmed up caches" for evaluation, §V-D).
+    pub fn warm(&mut self, addr: u32) {
+        let la = self.line_addr(addr);
+        self.touch(la, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CacheConfig;
+
+    fn small() -> CacheConfig {
+        // 4 sets × 2 ways × 16B lines = 128B, 2 banks
+        CacheConfig { size: 128, line: 16, ways: 2, banks: 2, hit_latency: 1, miss_penalty: 10, mshrs: 2 }
+    }
+
+    #[test]
+    fn first_touch_misses_second_hits() {
+        let mut c = Cache::new(small());
+        let a = c.access_one(0x100, false);
+        assert_eq!((a.hits, a.misses), (0, 1));
+        assert_eq!(a.cycles, 1 + 10);
+        let a = c.access_one(0x100, false);
+        assert_eq!((a.hits, a.misses), (1, 0));
+        assert_eq!(a.cycles, 1);
+    }
+
+    #[test]
+    fn coalesces_same_line() {
+        let mut c = Cache::new(small());
+        // 4 lanes in one 16B line
+        let a = c.access(&[0x100, 0x104, 0x108, 0x10C], false);
+        assert_eq!(a.misses, 1);
+        assert_eq!(a.conflict_cycles, 0);
+    }
+
+    #[test]
+    fn bank_conflicts_serialize() {
+        let mut c = Cache::new(small());
+        // two lines, both on bank 0: lines 0x10 and 0x12 (16B lines, 2 banks)
+        let a = c.access(&[0x100, 0x120], false);
+        assert_eq!(a.misses, 2);
+        assert_eq!(a.conflict_cycles, 1);
+        // two lines on different banks: no conflict
+        let a = c.access(&[0x140, 0x150], false);
+        assert_eq!(a.conflict_cycles, 0);
+    }
+
+    #[test]
+    fn lru_eviction_and_writeback() {
+        let mut c = Cache::new(small());
+        // set count = 4; lines mapping to set 0: line_addr % 4 == 0
+        let l0 = 0 * 16 * 4; // line 0 -> set 0
+        let l1 = 1 * 16 * 4 + 0; // line 4 -> set 0
+        let l2 = 2 * 16 * 4; // line 8 -> set 0
+        c.access_one(l0, true); // dirty
+        c.access_one(l1, false);
+        // evicts l0 (LRU, dirty) -> writeback
+        let a = c.access_one(l2, false);
+        assert_eq!(a.writebacks, 1);
+        // l0 is gone
+        let a = c.access_one(l0, false);
+        assert_eq!(a.misses, 1);
+    }
+
+    #[test]
+    fn mshr_limits_overlap() {
+        let mut c = Cache::new(small());
+        // 3 distinct lines missing with 2 MSHRs -> 2 fill rounds
+        let a = c.access(&[0x000, 0x210, 0x420], false);
+        assert_eq!(a.misses, 3);
+        assert!(a.cycles >= 1 + 2 * 10);
+    }
+
+    #[test]
+    fn warm_prefills() {
+        let mut c = Cache::new(small());
+        c.warm(0x300);
+        let a = c.access_one(0x300, false);
+        assert_eq!(a.misses, 0);
+    }
+
+    #[test]
+    fn paper_icache_geometry_works() {
+        let mut c = Cache::new(CacheConfig::paper_icache());
+        let a = c.access_one(0x8000_0000, false);
+        assert_eq!(a.misses, 1);
+        let a = c.access_one(0x8000_0004, false); // same 16B line
+        assert_eq!(a.hits, 1);
+    }
+}

@@ -1,0 +1,414 @@
+//! One simulated SIMT core (paper Fig 5): warp scheduler → fetch (I$) →
+//! decode → issue (scoreboard) → execute (ALU/MulDiv/LSU with D$ + shared
+//! memory) → commit, modeled at cycle granularity with a single issue slot
+//! per cycle.
+//!
+//! Architectural effects are delegated to [`crate::emu::step::exec_warp`]
+//! (the same semantics the functional oracle uses); this module owns
+//! *timing only*.
+
+use super::cache::Cache;
+use super::scheduler::WarpScheduler;
+use super::scoreboard::Scoreboard;
+use super::smem::SharedMem;
+use super::stats::CoreStats;
+use crate::config::MachineConfig;
+use crate::emu::barrier::{is_global, BarrierTable};
+use crate::emu::step::{exec_warp, EmuError, Event, MemAccess, StepCtx};
+use crate::emu::warp::Warp;
+use crate::isa::{decode, AluOp, Instr};
+use crate::mem::Memory;
+
+/// Events the machine (multi-core container) must act on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CoreEvent {
+    Exit(u32),
+    /// Arrival at a *global* barrier (MSB id set); the machine owns that
+    /// table (§IV-D).
+    GlobalBarrier { id: u32, count: u32, warp: u32 },
+}
+
+/// Machine-shared mutable context threaded into each core step.
+pub struct MachineShared<'a> {
+    pub console: &'a mut Vec<u8>,
+    pub heap_end: &'a mut u32,
+}
+
+/// Fixed syscall cost (rare; host-proxied NewLib stubs).
+const SYSCALL_LATENCY: u64 = 20;
+/// Extra bubble for instructions the decode stage must stall on
+/// (paper Fig 6(b): "requires a change of state").
+const STATE_CHANGE_BUBBLE: u64 = 1;
+
+pub struct SimCore {
+    pub core_id: u32,
+    cfg: MachineConfig,
+    pub warps: Vec<Warp>,
+    pub scheduler: WarpScheduler,
+    scoreboard: Scoreboard,
+    pub icache: Cache,
+    pub dcache: Cache,
+    pub smem: SharedMem,
+    /// Cycle at which each warp may be scheduled again.
+    ready_at: Vec<u64>,
+    /// Per-warp fetched-instruction buffer (avoids refetching the I$ on
+    /// issue-stage retries; invalidated on redirects).
+    ibuf: Vec<Option<(u32, Instr)>>,
+    /// Direct-mapped decoded-instruction cache (tag = pc). Purely a host
+    /// optimization — decode each static instruction once (§Perf iter 3);
+    /// the *modeled* I$ timing is untouched.
+    dec_cache: Vec<(u32, Instr)>,
+    /// Load/store unit port busy-until.
+    lsu_busy_until: u64,
+    /// Non-pipelined divider busy-until.
+    div_busy_until: u64,
+    pub local_barriers: BarrierTable,
+    pub stats: CoreStats,
+    /// Retired-instruction trace (enabled by setting `trace_limit > 0`):
+    /// the bring-up tool simX-style simulators live and die by.
+    pub trace: Vec<TraceEntry>,
+    pub trace_limit: usize,
+}
+
+/// One retired instruction in the trace.
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    pub cycle: u64,
+    pub warp: u32,
+    pub pc: u32,
+    /// Thread mask at issue.
+    pub tmask: u32,
+    pub instr: Instr,
+}
+
+impl TraceEntry {
+    /// `cycle warp pc [mask] disasm` — one line per retirement.
+    pub fn render(&self) -> String {
+        format!(
+            "{:>8}  w{:<2} {:#010x} [{:08b}] {}",
+            self.cycle,
+            self.warp,
+            self.pc,
+            self.tmask & 0xff,
+            crate::isa::disasm(self.instr)
+        )
+    }
+}
+
+impl SimCore {
+    pub fn new(core_id: u32, cfg: MachineConfig) -> Self {
+        SimCore {
+            core_id,
+            cfg,
+            warps: (0..cfg.num_warps).map(|w| Warp::new(w, cfg.num_threads)).collect(),
+            scheduler: {
+                let mut s = WarpScheduler::new(cfg.num_warps);
+                s.policy = cfg.sched_policy;
+                s
+            },
+            scoreboard: Scoreboard::new(cfg.num_warps),
+            icache: Cache::new(cfg.icache),
+            dcache: Cache::new(cfg.dcache),
+            smem: SharedMem::new(cfg.smem),
+            ready_at: vec![0; cfg.num_warps as usize],
+            ibuf: vec![None; cfg.num_warps as usize],
+            dec_cache: vec![(u32::MAX, Instr::Fence); 4096],
+            lsu_busy_until: 0,
+            div_busy_until: 0,
+            local_barriers: BarrierTable::new(),
+            stats: CoreStats::default(),
+            trace: Vec::new(),
+            trace_limit: 0,
+        }
+    }
+
+    /// Activate warp `w` at `pc` (reset/wspawn).
+    pub fn spawn_warp(&mut self, w: u32, pc: u32) {
+        self.warps[w as usize].spawn(pc);
+        self.scheduler.set_active(w, true);
+        self.scheduler.set_barrier(w, false);
+        self.scoreboard.clear_warp(w as usize);
+        self.ibuf[w as usize] = None;
+        self.ready_at[w as usize] = 0;
+    }
+
+    fn deactivate_warp(&mut self, w: u32) {
+        self.warps[w as usize].deactivate();
+        self.scheduler.set_active(w, false);
+        self.scoreboard.clear_warp(w as usize);
+        self.ibuf[w as usize] = None;
+    }
+
+    /// Release a warp parked on a barrier.
+    pub fn release_barrier(&mut self, w: u32) {
+        self.scheduler.set_barrier(w, false);
+    }
+
+    pub fn any_active(&self) -> bool {
+        self.scheduler.any_active()
+    }
+
+    /// All remaining active warps are parked on barriers (deadlock input).
+    pub fn all_blocked_on_barriers(&self) -> bool {
+        self.scheduler.any_active()
+            && (self.scheduler.active & !self.scheduler.barrier_stalled) == 0
+    }
+
+    /// Earliest cycle at which any non-barrier warp becomes schedulable
+    /// (used by the machine to fast-forward pure-stall stretches).
+    pub fn next_ready_cycle(&self) -> Option<u64> {
+        let mut next = None;
+        for w in 0..self.warps.len() {
+            let bit = 1u64 << w;
+            if self.scheduler.active & bit != 0 && self.scheduler.barrier_stalled & bit == 0 {
+                let r = self.ready_at[w];
+                next = Some(next.map_or(r, |n: u64| n.min(r)));
+            }
+        }
+        next
+    }
+
+    /// Simulate one cycle. Returns an event the machine must handle.
+    pub fn step(
+        &mut self,
+        now: u64,
+        mem: &mut Memory,
+        shared: &mut MachineShared<'_>,
+    ) -> Result<Option<CoreEvent>, EmuError> {
+        self.stats.cycles = now + 1;
+        self.stats.active_warp_cycles += self.scheduler.active_count() as u64;
+        self.stats.barrier_stall_cycles +=
+            (self.scheduler.active & self.scheduler.barrier_stalled).count_ones() as u64;
+
+        // refresh the stalled mask from per-warp ready cycles
+        for w in 0..self.warps.len() {
+            self.scheduler.set_stalled(w as u32, self.ready_at[w] > now);
+        }
+
+        let Some(w) = self.scheduler.schedule() else {
+            self.stats.idle_cycles += 1;
+            return Ok(None);
+        };
+        let wi = w as usize;
+        let pc = self.warps[wi].pc;
+
+        // ---- fetch (I$ + instruction buffer) ----
+        let instr = match self.ibuf[wi] {
+            Some((buf_pc, i)) if buf_pc == pc => i,
+            _ => {
+                let acc = self.icache.access_one(pc, false);
+                if acc.misses > 0 {
+                    self.stats.icache_misses += 1;
+                    self.stats.icache_stall_cycles += acc.cycles as u64;
+                    // line is being filled; warp refetches (and hits) later
+                    self.ready_at[wi] = now + acc.cycles as u64;
+                    return Ok(None);
+                }
+                self.stats.icache_hits += 1;
+                let slot = ((pc >> 2) & 0xFFF) as usize;
+                let i = if self.dec_cache[slot].0 == pc {
+                    self.dec_cache[slot].1
+                } else {
+                    let word = mem.read_u32(pc);
+                    let i = decode(word).map_err(|_| EmuError::Illegal { pc, word })?;
+                    self.dec_cache[slot] = (pc, i);
+                    i
+                };
+                self.ibuf[wi] = Some((pc, i));
+                i
+            }
+        };
+
+        // ---- issue: scoreboard + structural hazards ----
+        // (fixed-size array: no heap on the issue path, §Perf iteration 2)
+        let srcs = instr.srcs();
+        let regs = [
+            srcs[0].unwrap_or(0),
+            srcs[1].unwrap_or(0),
+            instr.rd().unwrap_or(0), // WAW
+        ];
+        let hazard = self.scoreboard.hazard_until(wi, regs.iter().copied(), now);
+        if hazard > now {
+            self.stats.scoreboard_stalls += 1;
+            self.ready_at[wi] = hazard;
+            return Ok(None);
+        }
+        let is_mem = matches!(instr, Instr::Load { .. } | Instr::Store { .. });
+        if is_mem && self.lsu_busy_until > now {
+            self.stats.lsu_busy_stalls += 1;
+            self.ready_at[wi] = self.lsu_busy_until;
+            return Ok(None);
+        }
+        let is_div = matches!(
+            instr,
+            Instr::Op { op: AluOp::Div | AluOp::Divu | AluOp::Rem | AluOp::Remu, .. }
+        );
+        if is_div && self.div_busy_until > now {
+            self.stats.div_busy_stalls += 1;
+            self.ready_at[wi] = self.div_busy_until;
+            return Ok(None);
+        }
+
+        // ---- execute (architectural effect via the shared semantics) ----
+        let pre_tmask = self.warps[wi].tmask;
+        let mut ctx = StepCtx {
+            core_id: self.core_id,
+            num_cores: self.cfg.num_cores,
+            num_warps: self.cfg.num_warps,
+            num_threads: self.cfg.num_threads,
+            cycle: now,
+            console: shared.console,
+            heap_end: shared.heap_end,
+        };
+        let info = exec_warp(&mut self.warps[wi], instr, mem, &mut ctx)?;
+        if self.trace.len() < self.trace_limit {
+            self.trace.push(TraceEntry { cycle: now, warp: w, pc, tmask: pre_tmask, instr });
+        }
+        self.ibuf[wi] = None;
+        self.stats.warp_instrs += 1;
+        self.stats.thread_instrs += pre_tmask.count_ones() as u64;
+        // default: schedulable again next cycle
+        self.ready_at[wi] = now + 1;
+
+        // ---- timing classification ----
+        let timing = self.cfg.timing;
+        match instr {
+            Instr::Load { rd, .. } => {
+                let lat = self.mem_access_cycles(&info.mem, false);
+                self.scoreboard.set_pending(wi, rd, now + lat);
+                // the LSU port is occupied for the conflict-serialized part
+                self.lsu_busy_until = now + 1;
+            }
+            Instr::Store { .. } => {
+                let _ = self.mem_access_cycles(&info.mem, true);
+                self.lsu_busy_until = now + 1;
+            }
+            Instr::Op { op, rd, .. } if op.is_muldiv() => {
+                let lat = if matches!(op, AluOp::Mul | AluOp::Mulh | AluOp::Mulhsu | AluOp::Mulhu)
+                {
+                    timing.mul_latency as u64
+                } else {
+                    self.div_busy_until = now + timing.div_latency as u64;
+                    timing.div_latency as u64
+                };
+                self.scoreboard.set_pending(wi, rd, now + lat);
+            }
+            Instr::Branch { .. } => {
+                self.stats.branches += 1;
+                if info.event == Event::CtrlTaken {
+                    self.stats.taken_redirects += 1;
+                    self.ready_at[wi] = now + 1 + timing.branch_penalty as u64;
+                }
+            }
+            Instr::Jal { rd, .. } | Instr::Jalr { rd, .. } => {
+                self.stats.taken_redirects += 1;
+                self.scoreboard.set_pending(wi, rd, now + 1);
+                self.ready_at[wi] = now + 1 + timing.branch_penalty as u64;
+            }
+            Instr::Split { .. } => {
+                self.stats.splits += 1;
+                if self.warps[wi].tmask != pre_tmask {
+                    self.stats.divergent_splits += 1;
+                }
+                self.ready_at[wi] = now + 1 + STATE_CHANGE_BUBBLE;
+            }
+            Instr::Join => {
+                self.stats.joins += 1;
+                self.ready_at[wi] = if info.event == Event::CtrlTaken {
+                    now + 1 + timing.branch_penalty as u64
+                } else {
+                    now + 1 + STATE_CHANGE_BUBBLE
+                };
+            }
+            Instr::Tmc { .. } | Instr::Wspawn { .. } | Instr::Bar { .. } => {
+                self.ready_at[wi] = now + 1 + STATE_CHANGE_BUBBLE;
+            }
+            Instr::Ecall => {
+                self.ready_at[wi] = now + SYSCALL_LATENCY;
+            }
+            Instr::Csr { rd, .. } => {
+                self.scoreboard.set_pending(wi, rd, now + 1);
+            }
+            _ => {
+                if let Some(rd) = instr.rd() {
+                    self.scoreboard.set_pending(wi, rd, now + timing.alu_latency as u64);
+                }
+            }
+        }
+
+        // ---- warp-table / machine events ----
+        match info.event {
+            Event::Exit { code } => return Ok(Some(CoreEvent::Exit(code))),
+            Event::WarpExit => self.deactivate_warp(w),
+            Event::Wspawn { count, pc } => self.apply_wspawn(count, pc),
+            Event::Barrier { id, count } => {
+                self.stats.barriers += 1;
+                if is_global(id) {
+                    return Ok(Some(CoreEvent::GlobalBarrier { id, count, warp: w }));
+                }
+                match self.local_barriers.arrive(id, count, (0, w)) {
+                    Some(parts) => {
+                        for (_, pw) in parts {
+                            self.release_barrier(pw);
+                        }
+                    }
+                    None => self.scheduler.set_barrier(w, true),
+                }
+            }
+            Event::None | Event::CtrlTaken => {}
+        }
+        Ok(None)
+    }
+
+    /// Route a warp-wide memory access to D$ / shared memory and return the
+    /// result latency in cycles.
+    fn mem_access_cycles(&mut self, access: &MemAccess, is_store: bool) -> u64 {
+        let addrs = match access {
+            MemAccess::Load(a) | MemAccess::Store(a) => a,
+            MemAccess::None => return 1,
+        };
+        // common case: every lane targets global memory — no splitting
+        let any_smem = addrs.as_slice().iter().any(|&a| self.cfg.is_smem(a));
+        let mut smem_addrs = crate::emu::step::LaneAddrs::new();
+        let mut global_addrs = crate::emu::step::LaneAddrs::new();
+        if any_smem {
+            for &a in addrs.as_slice() {
+                if self.cfg.is_smem(a) {
+                    smem_addrs.push(a);
+                } else {
+                    global_addrs.push(a);
+                }
+            }
+        }
+        let mut cycles = 0u64;
+        if any_smem && !smem_addrs.is_empty() {
+            let lat = self.smem.access(smem_addrs.as_slice());
+            self.stats.smem_accesses += 1;
+            cycles += lat as u64;
+        }
+        let global_slice =
+            if any_smem { global_addrs.as_slice() } else { addrs.as_slice() };
+        if !global_slice.is_empty() {
+            let acc = self.dcache.access(global_slice, is_store);
+            self.stats.dcache_hits += acc.hits as u64;
+            self.stats.dcache_misses += acc.misses as u64;
+            self.stats.dcache_conflict_cycles += acc.conflict_cycles as u64;
+            self.stats.dcache_writebacks += acc.writebacks as u64;
+            cycles += acc.cycles as u64;
+        }
+        // update running conflict totals for smem
+        self.stats.smem_conflict_cycles = self.smem.total_conflict_cycles;
+        cycles.max(1)
+    }
+
+    fn apply_wspawn(&mut self, count: u32, pc: u32) {
+        let n = count.min(self.cfg.num_warps);
+        for i in 1..self.cfg.num_warps {
+            if i < n {
+                self.spawn_warp(i, pc);
+            } else if self.scheduler.is_active(i) {
+                self.deactivate_warp(i);
+            }
+        }
+    }
+}

@@ -1,0 +1,564 @@
+//! simX — the cycle-level Vortex simulator (paper §V-C).
+//!
+//! The paper evaluated performance with "simX, a C++ cycle-level in-house
+//! simulator for Vortex with a cycle accuracy within 6% of the actual
+//! Verilog model"; Figs 9 and 10 are simX numbers. This module is that
+//! layer: a cycle-level model of the microarchitecture in Fig 5 — warp
+//! scheduler with the four masks (§IV-B), IPDOM stacks and thread masks
+//! (§IV-C), warp barriers with local + global tables (§IV-D), banked I$/D$
+//! and shared memory (§V-A), per-warp scoreboards, and a single issue slot
+//! per core per cycle.
+//!
+//! Architectural semantics are shared with the functional oracle
+//! ([`crate::emu`]); the equivalence suite in `rust/tests/equivalence.rs`
+//! keeps the two in lockstep.
+
+pub mod cache;
+pub mod core;
+pub mod scheduler;
+pub mod scoreboard;
+pub mod smem;
+pub mod stats;
+
+pub use self::core::{CoreEvent, MachineShared, SimCore, TraceEntry};
+pub use stats::CoreStats;
+
+use crate::asm::Program;
+use crate::config::MachineConfig;
+use crate::emu::barrier::BarrierTable;
+use crate::emu::step::EmuError;
+use crate::emu::ExitStatus;
+use crate::mem::Memory;
+
+/// Result of a simulation run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub status: ExitStatus,
+    /// Total machine cycles.
+    pub cycles: u64,
+    /// Machine-wide aggregated stats.
+    pub stats: CoreStats,
+    /// Per-core stats.
+    pub per_core: Vec<CoreStats>,
+}
+
+/// The cycle-level machine: lock-step cores sharing memory and the global
+/// barrier table.
+pub struct Simulator {
+    pub config: MachineConfig,
+    pub mem: Memory,
+    pub cores: Vec<SimCore>,
+    global_barriers: BarrierTable,
+    pub console: Vec<u8>,
+    heap_end: u32,
+    cycle: u64,
+}
+
+impl Simulator {
+    pub fn new(config: MachineConfig) -> Self {
+        Simulator {
+            config,
+            mem: Memory::new(),
+            cores: (0..config.num_cores).map(|c| SimCore::new(c, config)).collect(),
+            global_barriers: BarrierTable::new(),
+            console: Vec::new(),
+            heap_end: 0xC000_0000,
+            cycle: 0,
+        }
+    }
+
+    pub fn load(&mut self, prog: &Program) {
+        self.mem.load_program(prog);
+    }
+
+    /// Start warp 0 of every core at `entry`.
+    pub fn launch(&mut self, entry: u32) {
+        for core in &mut self.cores {
+            core.spawn_warp(0, entry);
+        }
+    }
+
+    /// Enable per-core retired-instruction tracing (first `limit` entries).
+    pub fn enable_trace(&mut self, limit: usize) {
+        for core in &mut self.cores {
+            core.trace_limit = limit;
+        }
+    }
+
+    /// Render all cores' traces, interleaved per core.
+    pub fn render_trace(&self) -> String {
+        let mut out = String::new();
+        for (c, core) in self.cores.iter().enumerate() {
+            for e in &core.trace {
+                out.push_str(&format!("c{c} {}\n", e.render()));
+            }
+        }
+        out
+    }
+
+    /// Pre-warm every core's D$ over `[base, base+len)` (the paper warmed
+    /// caches to reduce simulation time, §V-D).
+    pub fn warm_dcache(&mut self, base: u32, len: u32) {
+        let line = self.config.dcache.line;
+        for core in &mut self.cores {
+            let mut a = base & !(line - 1);
+            while a < base + len {
+                core.dcache.warm(a);
+                a += line;
+            }
+        }
+    }
+
+    /// Run until exit/drain, at most `max_cycles`.
+    pub fn run(&mut self, max_cycles: u64) -> Result<RunResult, EmuError> {
+        let mut exit_code: Option<u32> = None;
+        'outer: while self.cycle < max_cycles {
+            let any_active = self.cores.iter().any(|c| c.any_active());
+            if !any_active {
+                break;
+            }
+            // deadlock: every active warp everywhere is parked on a barrier
+            if self.cores.iter().all(|c| !c.any_active() || c.all_blocked_on_barriers()) {
+                return Err(EmuError::Deadlock { cycle: self.cycle });
+            }
+            // fast-forward through cycles where no core can issue
+            if let Some(skip_to) = self.pure_stall_until() {
+                if skip_to > self.cycle {
+                    let skipped = skip_to - self.cycle;
+                    for core in &mut self.cores {
+                        if core.any_active() {
+                            core.stats.idle_cycles += skipped;
+                        }
+                    }
+                    self.cycle = skip_to;
+                    continue;
+                }
+            }
+            for c in 0..self.cores.len() {
+                if !self.cores[c].any_active() {
+                    continue;
+                }
+                let mut shared =
+                    MachineShared { console: &mut self.console, heap_end: &mut self.heap_end };
+                let event = self.cores[c].step(self.cycle, &mut self.mem, &mut shared)?;
+                match event {
+                    Some(CoreEvent::Exit(code)) => {
+                        exit_code = Some(code);
+                        self.cycle += 1;
+                        break 'outer;
+                    }
+                    Some(CoreEvent::GlobalBarrier { id, count, warp }) => {
+                        self.apply_global_barrier(c, id, count, warp);
+                    }
+                    None => {}
+                }
+            }
+            self.cycle += 1;
+        }
+
+        let status = match exit_code {
+            Some(code) => ExitStatus::Exited(code),
+            None if self.cores.iter().any(|c| c.any_active()) => ExitStatus::OutOfFuel,
+            None => ExitStatus::Drained,
+        };
+        let per_core: Vec<CoreStats> = self.cores.iter().map(|c| c.stats.clone()).collect();
+        let mut stats = CoreStats::default();
+        for cs in &per_core {
+            stats.merge(cs);
+        }
+        stats.cycles = self.cycle;
+        Ok(RunResult { status, cycles: self.cycle, stats, per_core })
+    }
+
+    /// If *every* core with active work is only waiting on timers (no warp
+    /// schedulable right now), return the earliest cycle anything wakes.
+    fn pure_stall_until(&self) -> Option<u64> {
+        let mut earliest: Option<u64> = None;
+        for core in &self.cores {
+            if !core.any_active() {
+                continue;
+            }
+            match core.next_ready_cycle() {
+                Some(r) => {
+                    if r <= self.cycle {
+                        return None; // this core can issue now
+                    }
+                    earliest = Some(earliest.map_or(r, |e: u64| e.min(r)));
+                }
+                // all of this core's active warps are barrier-parked; they
+                // wake via another core's progress
+                None => {}
+            }
+        }
+        earliest
+    }
+
+    fn apply_global_barrier(&mut self, core: usize, id: u32, count: u32, warp: u32) {
+        match self.global_barriers.arrive(id, count, (core as u32, warp)) {
+            Some(parts) => {
+                for (pc, pw) in parts {
+                    self.cores[pc as usize].release_barrier(pw);
+                }
+            }
+            None => self.cores[core].scheduler.set_barrier(warp, true),
+        }
+    }
+
+    pub fn console_string(&self) -> String {
+        String::from_utf8_lossy(&self.console).into_owned()
+    }
+
+    /// Architectural register view (testing).
+    pub fn reg(&self, core: usize, warp: usize, thread: usize, reg: u8) -> u32 {
+        self.cores[core].warps[warp].read(thread, reg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::emu::ExitStatus;
+
+    fn run_src(src: &str, cfg: MachineConfig) -> (Simulator, RunResult) {
+        let prog = assemble(src).expect("assembles");
+        let mut sim = Simulator::new(cfg);
+        sim.load(&prog);
+        sim.launch(prog.entry());
+        let res = sim.run(10_000_000).expect("runs");
+        (sim, res)
+    }
+
+    #[test]
+    fn countdown_exits_with_code() {
+        let src = r#"
+            li t0, 50
+            loop: addi t0, t0, -1
+            bnez t0, loop
+            li a0, 7
+            li a7, 93
+            ecall
+        "#;
+        let (_, res) = run_src(src, MachineConfig::with_wt(2, 2));
+        assert_eq!(res.status, ExitStatus::Exited(7));
+        assert!(res.cycles > 100, "branch penalties must show up: {}", res.cycles);
+        assert!(res.stats.warp_instrs > 100);
+    }
+
+    #[test]
+    fn simd_store_pattern() {
+        let (sim, res) = run_src(
+            r#"
+            li t0, 4
+            tmc t0
+            csrr t1, 0xCC0
+            slli t2, t1, 2
+            li t3, 0x90000000
+            add t2, t2, t3
+            sw t1, 0(t2)
+            li t0, 0
+            tmc t0
+            "#,
+            MachineConfig::with_wt(2, 4),
+        );
+        assert_eq!(res.status, ExitStatus::Drained);
+        assert_eq!(sim.mem.read_u32_slice(0x9000_0000, 4), vec![0, 1, 2, 3]);
+        // 4-lane store to 4 consecutive words: one line, no conflicts
+        assert_eq!(res.stats.dcache_conflict_cycles, 0);
+    }
+
+    #[test]
+    fn more_warps_hide_memory_latency() {
+        // Each warp streams over its own slab; misses dominate. More warps
+        // ⇒ latency hiding ⇒ fewer cycles per instruction (the paper's
+        // BFS/TLP argument in §V-D).
+        let src = |warps: u32| {
+            format!(
+                r#"
+            la t1, worker
+            li t0, {warps}
+            wspawn t0, t1
+            j worker
+            worker:
+            csrr t2, 0xCC1          # wid
+            slli t3, t2, 10         # 1KB stride per warp
+            li t4, 0x90000000
+            add t3, t3, t4          # base
+            li t5, 64               # 64 loads, 16B apart (new line each)
+            ld_loop:
+            lw t6, 0(t3)
+            add t6, t6, t6          # consume the load (RAW stall)
+            addi t3, t3, 16
+            addi t5, t5, -1
+            bnez t5, ld_loop
+            li t0, 0
+            tmc t0
+            "#
+            )
+        };
+        let cpi = |warps: u32| {
+            let (_, res) = run_src(&src(warps), MachineConfig::with_wt(8, 2));
+            res.cycles as f64 / res.stats.warp_instrs as f64
+        };
+        let cpi1 = cpi(1);
+        let cpi8 = cpi(8);
+        assert!(
+            cpi8 < cpi1 * 0.6,
+            "8 warps should hide miss latency: cpi1={cpi1:.2} cpi8={cpi8:.2}"
+        );
+    }
+
+    #[test]
+    fn smem_faster_than_cold_dram() {
+        let body = |base: &str| {
+            format!(
+                r#"
+            li t0, 4
+            tmc t0
+            csrr t1, 0xCC0
+            slli t2, t1, 2
+            li t3, {base}
+            add t2, t2, t3
+            li t5, 32
+            loop:
+            sw t1, 0(t2)
+            lw t6, 0(t2)
+            addi t5, t5, -1
+            bnez t5, loop
+            li t0, 0
+            tmc t0
+            "#
+            )
+        };
+        let (_, res_smem) = run_src(&body("0xB0000000"), MachineConfig::with_wt(1, 4));
+        let (_, res_glob) = run_src(&body("0x90000000"), MachineConfig::with_wt(1, 4));
+        assert!(res_smem.stats.smem_accesses > 0);
+        assert!(
+            res_smem.cycles <= res_glob.cycles,
+            "smem {} !<= global {}",
+            res_smem.cycles,
+            res_glob.cycles
+        );
+    }
+
+    #[test]
+    fn divergence_costs_cycles_but_is_correct() {
+        let (sim, res) = run_src(
+            r#"
+            li t0, 4
+            tmc t0
+            csrr t1, 0xCC0
+            slti t2, t1, 2
+            split t2
+            beqz t2, else_p
+            addi t3, t1, 100
+            j endif
+            else_p:
+            addi t3, t1, 200
+            endif:
+            join
+            slli t4, t1, 2
+            li t5, 0x90000200
+            add t4, t4, t5
+            sw t3, 0(t4)
+            li t0, 0
+            tmc t0
+            "#,
+            MachineConfig::with_wt(1, 4),
+        );
+        assert_eq!(sim.mem.read_u32_slice(0x9000_0200, 4), vec![100, 101, 202, 203]);
+        assert_eq!(res.stats.divergent_splits, 1);
+        assert_eq!(res.stats.joins, 2); // same join executed by both sides
+    }
+
+    #[test]
+    fn local_barrier_event_counted_and_correct() {
+        let (sim, res) = run_src(
+            r#"
+            la t1, worker
+            li t0, 2
+            wspawn t0, t1
+            li t0, 0
+            li t1, 2
+            bar t0, t1
+            li t2, 0x90000300
+            lw a0, 0(t2)
+            li a7, 93
+            ecall
+            worker:
+            li t2, 0x90000300
+            li t3, 555
+            sw t3, 0(t2)
+            li t0, 0
+            li t1, 2
+            bar t0, t1
+            li t0, 0
+            tmc t0
+            "#,
+            MachineConfig::with_wt(2, 2),
+        );
+        assert_eq!(res.status, ExitStatus::Exited(555));
+        assert_eq!(res.stats.barriers, 2);
+        assert_eq!(sim.mem.read_u32(0x9000_0300), 555);
+    }
+
+    #[test]
+    fn global_barrier_across_cores_cycle_level() {
+        let mut cfg = MachineConfig::with_wt(2, 2);
+        cfg.num_cores = 2;
+        let (_, res) = run_src(
+            r#"
+            csrr t0, 0xCC2
+            slli t1, t0, 2
+            li t2, 0x90000400
+            add t1, t1, t2
+            addi t3, t0, 1
+            sw t3, 0(t1)
+            li t0, 0x80000000
+            li t1, 2
+            bar t0, t1
+            csrr t0, 0xCC2
+            bnez t0, done
+            li t2, 0x90000404
+            lw a0, 0(t2)
+            li a7, 93
+            ecall
+            done:
+            li t0, 0
+            tmc t0
+            "#,
+            cfg,
+        );
+        assert_eq!(res.status, ExitStatus::Exited(2));
+    }
+
+    #[test]
+    fn barrier_deadlock_detected() {
+        let prog = assemble("li t0, 0\nli t1, 2\nbar t0, t1").unwrap();
+        let mut sim = Simulator::new(MachineConfig::with_wt(2, 2));
+        sim.load(&prog);
+        sim.launch(prog.entry());
+        let err = sim.run(100_000).unwrap_err();
+        assert!(matches!(err, EmuError::Deadlock { .. }));
+    }
+
+    #[test]
+    fn out_of_fuel() {
+        let prog = assemble("spin: j spin").unwrap();
+        let mut sim = Simulator::new(MachineConfig::with_wt(1, 1));
+        sim.load(&prog);
+        sim.launch(prog.entry());
+        let res = sim.run(500).unwrap();
+        assert_eq!(res.status, ExitStatus::OutOfFuel);
+    }
+
+    #[test]
+    fn warm_dcache_reduces_misses() {
+        // loop of dependent loads (16B stride ⇒ one line each): after the
+        // first iteration the loop body hits in the I$, so D$ behaviour is
+        // the only difference between the warm and cold runs
+        let body = r#"
+            li t2, 0x90000000
+            li t5, 8
+            loop:
+            lw t4, 0(t2)
+            add t6, t4, t4   # consume the load so miss latency is exposed
+            addi t2, t2, 16
+            addi t5, t5, -1
+            bnez t5, loop
+            li t0, 0
+            tmc t0
+        "#;
+        let prog = assemble(body).unwrap();
+        let mut cold = Simulator::new(MachineConfig::with_wt(1, 4));
+        cold.load(&prog);
+        cold.launch(prog.entry());
+        let cold_res = cold.run(100_000).unwrap();
+
+        let mut warm = Simulator::new(MachineConfig::with_wt(1, 4));
+        warm.load(&prog);
+        warm.warm_dcache(0x9000_0000, 256);
+        warm.launch(prog.entry());
+        let warm_res = warm.run(100_000).unwrap();
+
+        assert!(warm_res.stats.dcache_misses < cold_res.stats.dcache_misses);
+        assert!(warm_res.cycles < cold_res.cycles);
+    }
+
+    #[test]
+    fn ipc_bounded_by_single_issue() {
+        let (_, res) = run_src(
+            r#"
+            li t0, 200
+            loop: addi t1, t1, 1
+            addi t2, t2, 1
+            addi t3, t3, 1
+            addi t0, t0, -1
+            bnez t0, loop
+            li a7, 93
+            li a0, 0
+            ecall
+            "#,
+            MachineConfig::with_wt(4, 4),
+        );
+        assert!(res.stats.ipc() <= 1.0 + 1e-9);
+        assert!(res.stats.ipc() > 0.4, "ALU loop should pipeline: {}", res.stats.ipc());
+    }
+}
+
+#[cfg(test)]
+mod trace_tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::config::MachineConfig;
+
+    #[test]
+    fn trace_records_retired_instructions_in_order() {
+        let prog = assemble(
+            r#"
+            li t0, 2
+            tmc t0
+            addi t1, t1, 7
+            li t0, 0
+            tmc t0
+            "#,
+        )
+        .unwrap();
+        let mut sim = Simulator::new(MachineConfig::with_wt(1, 2));
+        sim.enable_trace(100);
+        sim.load(&prog);
+        sim.launch(prog.entry());
+        sim.run(10_000).unwrap();
+        let t = &sim.cores[0].trace;
+        assert_eq!(t.len() as u64, sim.cores[0].stats.warp_instrs);
+        // monotone cycles, contiguous pcs for the straight-line prefix
+        assert!(t.windows(2).all(|w| w[0].cycle <= w[1].cycle));
+        assert_eq!(t[0].pc, prog.entry());
+        // mask visible in the trace: after tmc 2, lanes 0b11
+        let addi = t.iter().find(|e| crate::isa::disasm(e.instr).starts_with("addi t1")).unwrap();
+        assert_eq!(addi.tmask, 0b11);
+        // render has one line per entry
+        assert_eq!(sim.render_trace().lines().count(), t.len());
+    }
+
+    #[test]
+    fn trace_limit_caps_memory() {
+        let prog = assemble("li t0, 500\nl: addi t0, t0, -1\nbnez t0, l\nli a7, 93\nli a0, 0\necall").unwrap();
+        let mut sim = Simulator::new(MachineConfig::with_wt(1, 1));
+        sim.enable_trace(10);
+        sim.load(&prog);
+        sim.launch(prog.entry());
+        sim.run(100_000).unwrap();
+        assert_eq!(sim.cores[0].trace.len(), 10);
+    }
+
+    #[test]
+    fn trace_disabled_by_default() {
+        let prog = assemble("li a7, 93\nli a0, 0\necall").unwrap();
+        let mut sim = Simulator::new(MachineConfig::with_wt(1, 1));
+        sim.load(&prog);
+        sim.launch(prog.entry());
+        sim.run(10_000).unwrap();
+        assert!(sim.cores[0].trace.is_empty());
+    }
+}

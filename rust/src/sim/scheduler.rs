@@ -1,0 +1,302 @@
+//! Warp scheduler (paper §IV-B, Fig 6).
+//!
+//! Implements the paper's four scheduling masks verbatim:
+//!  1. **active** — warp holds work;
+//!  2. **stalled** — temporarily unschedulable (memory/hazard/state change);
+//!  3. **barrier-stalled** — parked on a warp barrier;
+//!  4. **visible** — the hierarchical two-level scheduling window
+//!     (Narasiman et al. [18]): each cycle one visible warp is scheduled
+//!     and invalidated; when the visible mask drains it is refilled from
+//!     `active & !stalled & !barrier`.
+
+/// Scheduling policy (ablation axis; the paper's design is two-level
+/// scheduling after Narasiman et al. [18]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// The paper's policy: rotate a visible-mask window, refill on drain.
+    #[default]
+    TwoLevel,
+    /// Plain round-robin over all eligible warps.
+    RoundRobin,
+    /// Greedy-then-oldest: keep issuing the same warp until it becomes
+    /// ineligible, then fall back to the lowest-index eligible warp.
+    GreedyOldest,
+}
+
+/// Warp-scheduler masks for one core (warps are mask bit positions; the
+/// simulator supports up to 64 warps/core, double the paper's sweep).
+#[derive(Clone, Debug)]
+pub struct WarpScheduler {
+    num_warps: u32,
+    pub policy: SchedPolicy,
+    /// RoundRobin: next index to consider. GreedyOldest: last issued warp.
+    cursor: u32,
+    pub active: u64,
+    pub stalled: u64,
+    pub barrier_stalled: u64,
+    pub visible: u64,
+    /// Scheduling statistics: refills of the visible mask.
+    pub refills: u64,
+    /// Cycles where no warp was schedulable.
+    pub idle_cycles: u64,
+}
+
+impl WarpScheduler {
+    pub fn new(num_warps: u32) -> Self {
+        assert!(num_warps <= 64, "scheduler mask width");
+        WarpScheduler {
+            num_warps,
+            policy: SchedPolicy::TwoLevel,
+            cursor: 0,
+            active: 0,
+            stalled: 0,
+            barrier_stalled: 0,
+            visible: 0,
+            refills: 0,
+            idle_cycles: 0,
+        }
+    }
+
+    #[inline]
+    fn eligible(&self) -> u64 {
+        self.active & !self.stalled & !self.barrier_stalled
+    }
+
+    /// Pick the warp to fetch this cycle according to the policy.
+    pub fn schedule(&mut self) -> Option<u32> {
+        match self.policy {
+            SchedPolicy::TwoLevel => self.schedule_two_level(),
+            SchedPolicy::RoundRobin => self.schedule_round_robin(),
+            SchedPolicy::GreedyOldest => self.schedule_greedy_oldest(),
+        }
+    }
+
+    /// Paper Fig 6: take one warp from the visible mask and invalidate it;
+    /// refill the visible mask from the eligible warps when it drains.
+    fn schedule_two_level(&mut self) -> Option<u32> {
+        // drop no-longer-eligible warps from the window (they went inactive
+        // or stalled after becoming visible)
+        self.visible &= self.eligible();
+        if self.visible == 0 {
+            let refill = self.eligible();
+            if refill == 0 {
+                self.idle_cycles += 1;
+                return None;
+            }
+            self.visible = refill;
+            self.refills += 1;
+        }
+        let w = self.visible.trailing_zeros();
+        self.visible &= !(1 << w);
+        Some(w)
+    }
+
+    /// Plain round-robin: next eligible warp after the cursor.
+    fn schedule_round_robin(&mut self) -> Option<u32> {
+        let elig = self.eligible();
+        if elig == 0 {
+            self.idle_cycles += 1;
+            return None;
+        }
+        for k in 1..=self.num_warps {
+            let w = (self.cursor + k) % self.num_warps;
+            if elig & (1 << w) != 0 {
+                self.cursor = w;
+                return Some(w);
+            }
+        }
+        unreachable!("eligible mask nonzero");
+    }
+
+    /// Greedy-then-oldest: stick to the last warp while eligible.
+    fn schedule_greedy_oldest(&mut self) -> Option<u32> {
+        let elig = self.eligible();
+        if elig == 0 {
+            self.idle_cycles += 1;
+            return None;
+        }
+        if elig & (1 << self.cursor) != 0 {
+            return Some(self.cursor);
+        }
+        let w = elig.trailing_zeros();
+        self.cursor = w;
+        Some(w)
+    }
+
+    pub fn set_active(&mut self, w: u32, on: bool) {
+        debug_assert!(w < self.num_warps);
+        if on {
+            self.active |= 1 << w;
+        } else {
+            self.active &= !(1 << w);
+            self.visible &= !(1 << w);
+        }
+    }
+
+    pub fn set_stalled(&mut self, w: u32, on: bool) {
+        if on {
+            self.stalled |= 1 << w;
+        } else {
+            self.stalled &= !(1 << w);
+        }
+    }
+
+    pub fn set_barrier(&mut self, w: u32, on: bool) {
+        if on {
+            self.barrier_stalled |= 1 << w;
+        } else {
+            self.barrier_stalled &= !(1 << w);
+        }
+    }
+
+    pub fn is_active(&self, w: u32) -> bool {
+        self.active & (1 << w) != 0
+    }
+
+    pub fn any_active(&self) -> bool {
+        self.active != 0
+    }
+
+    pub fn any_eligible(&self) -> bool {
+        self.eligible() != 0
+    }
+
+    /// Count of active warps (occupancy stat).
+    pub fn active_count(&self) -> u32 {
+        self.active.count_ones()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Fig 6(a): normal round-robin through the visible mask.
+    #[test]
+    fn fig6a_normal_rotation() {
+        let mut s = WarpScheduler::new(2);
+        s.set_active(0, true);
+        s.set_active(1, true);
+        assert_eq!(s.schedule(), Some(0)); // cycle 1: w0, invalidated
+        assert_eq!(s.schedule(), Some(1)); // cycle 2: w1
+        assert_eq!(s.schedule(), Some(0)); // cycle 3: refill, w0 again
+        assert_eq!(s.refills, 2);
+    }
+
+    /// Paper Fig 6(b): a stalled warp is skipped until unstalled.
+    #[test]
+    fn fig6b_stall_skips_warp() {
+        let mut s = WarpScheduler::new(2);
+        s.set_active(0, true);
+        s.set_active(1, true);
+        assert_eq!(s.schedule(), Some(0));
+        s.set_stalled(0, true); // decode identified a state change on w0
+        assert_eq!(s.schedule(), Some(1));
+        assert_eq!(s.schedule(), Some(1)); // refill sees only w1
+        s.set_stalled(0, false);
+        assert_eq!(s.schedule(), Some(0)); // w0 visible again after refill
+    }
+
+    /// Paper Fig 6(c): wspawn-ed warps join at the next refill.
+    #[test]
+    fn fig6c_spawned_warps_join_on_refill() {
+        let mut s = WarpScheduler::new(4);
+        s.set_active(0, true);
+        assert_eq!(s.schedule(), Some(0));
+        // w0 executed wspawn activating warps 2 and 3
+        s.set_active(2, true);
+        s.set_active(3, true);
+        // refill now includes them
+        assert_eq!(s.schedule(), Some(0));
+        assert_eq!(s.schedule(), Some(2));
+        assert_eq!(s.schedule(), Some(3));
+    }
+
+    #[test]
+    fn idle_when_everything_stalled() {
+        let mut s = WarpScheduler::new(2);
+        s.set_active(0, true);
+        s.set_stalled(0, true);
+        assert_eq!(s.schedule(), None);
+        assert_eq!(s.idle_cycles, 1);
+    }
+
+    #[test]
+    fn barrier_mask_blocks_scheduling() {
+        let mut s = WarpScheduler::new(2);
+        s.set_active(0, true);
+        s.set_active(1, true);
+        s.set_barrier(0, true);
+        assert_eq!(s.schedule(), Some(1));
+        assert_eq!(s.schedule(), Some(1));
+        s.set_barrier(0, false);
+        // after barrier release w0 reappears at next refill
+        let mut seen = vec![s.schedule().unwrap(), s.schedule().unwrap()];
+        seen.sort();
+        assert_eq!(seen, vec![0, 1]);
+    }
+
+    #[test]
+    fn deactivated_warp_leaves_visible_window() {
+        let mut s = WarpScheduler::new(2);
+        s.set_active(0, true);
+        s.set_active(1, true);
+        assert_eq!(s.schedule(), Some(0));
+        s.set_active(1, false); // w1 exited before being scheduled
+        assert_eq!(s.schedule(), Some(0)); // not w1
+    }
+}
+
+#[cfg(test)]
+mod policy_tests {
+    use super::*;
+
+    fn two_active() -> WarpScheduler {
+        let mut s = WarpScheduler::new(4);
+        s.set_active(0, true);
+        s.set_active(1, true);
+        s
+    }
+
+    #[test]
+    fn round_robin_alternates() {
+        let mut s = two_active();
+        s.policy = SchedPolicy::RoundRobin;
+        let picks: Vec<_> = (0..4).map(|_| s.schedule().unwrap()).collect();
+        assert_eq!(picks, vec![1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn greedy_sticks_until_stalled() {
+        let mut s = two_active();
+        s.policy = SchedPolicy::GreedyOldest;
+        assert_eq!(s.schedule(), Some(0));
+        assert_eq!(s.schedule(), Some(0)); // sticks
+        s.set_stalled(0, true);
+        assert_eq!(s.schedule(), Some(1)); // falls over
+        assert_eq!(s.schedule(), Some(1)); // sticks on the new one
+        s.set_stalled(0, false);
+        assert_eq!(s.schedule(), Some(1)); // still greedy on w1
+    }
+
+    #[test]
+    fn all_policies_are_live() {
+        for p in [SchedPolicy::TwoLevel, SchedPolicy::RoundRobin, SchedPolicy::GreedyOldest] {
+            let mut s = two_active();
+            s.policy = p;
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..8 {
+                if let Some(w) = s.schedule() {
+                    seen.insert(w);
+                    // emulate the warp stalling briefly so greedy moves on
+                    s.set_stalled(w, true);
+                    let others: Vec<u32> = (0..2).filter(|x| *x != w).collect();
+                    for o in others {
+                        s.set_stalled(o, false);
+                    }
+                }
+            }
+            assert!(seen.len() >= 2, "{p:?} starved a warp");
+        }
+    }
+}

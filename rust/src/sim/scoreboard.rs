@@ -1,0 +1,80 @@
+//! Per-warp register scoreboard (paper §V-A lists "register scoreboards"
+//! among the per-warp costs).
+//!
+//! Tracks, per warp and architectural register, the cycle at which the
+//! in-flight producer's result becomes available. The issue stage consults
+//! it for RAW/WAW hazards; long-latency producers (loads, mul/div) set it.
+
+/// Scoreboard for all warps of one core.
+pub struct Scoreboard {
+    /// `ready_at[warp][reg]` — cycle when the register's pending write
+    /// completes; 0 means no pending write.
+    ready_at: Vec<[u64; 32]>,
+}
+
+impl Scoreboard {
+    pub fn new(num_warps: u32) -> Self {
+        Scoreboard { ready_at: vec![[0u64; 32]; num_warps as usize] }
+    }
+
+    /// Latest cycle any of `regs` (sources and/or destination) is pending.
+    /// Returns `now` if there is no hazard.
+    pub fn hazard_until(&self, warp: usize, regs: impl IntoIterator<Item = u8>, now: u64) -> u64 {
+        let mut until = now;
+        for r in regs {
+            if r != 0 {
+                until = until.max(self.ready_at[warp][r as usize]);
+            }
+        }
+        until
+    }
+
+    /// Record that `warp` will write `reg` at `ready` (issue stage).
+    pub fn set_pending(&mut self, warp: usize, reg: u8, ready: u64) {
+        if reg != 0 {
+            self.ready_at[warp][reg as usize] = ready;
+        }
+    }
+
+    /// Clear all pending state for a warp (on spawn/deactivate).
+    pub fn clear_warp(&mut self, warp: usize) {
+        self.ready_at[warp] = [0u64; 32];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_hazard_returns_now() {
+        let sb = Scoreboard::new(2);
+        assert_eq!(sb.hazard_until(0, [5u8, 6u8], 100), 100);
+    }
+
+    #[test]
+    fn raw_hazard_blocks_until_ready() {
+        let mut sb = Scoreboard::new(2);
+        sb.set_pending(0, 5, 140);
+        assert_eq!(sb.hazard_until(0, [5u8], 100), 140);
+        // other warp unaffected
+        assert_eq!(sb.hazard_until(1, [5u8], 100), 100);
+        // past the ready cycle: no hazard
+        assert_eq!(sb.hazard_until(0, [5u8], 150), 150);
+    }
+
+    #[test]
+    fn x0_never_hazards() {
+        let mut sb = Scoreboard::new(1);
+        sb.set_pending(0, 0, 999);
+        assert_eq!(sb.hazard_until(0, [0u8], 1), 1);
+    }
+
+    #[test]
+    fn clear_warp_resets() {
+        let mut sb = Scoreboard::new(1);
+        sb.set_pending(0, 7, 500);
+        sb.clear_warp(0);
+        assert_eq!(sb.hazard_until(0, [7u8], 1), 1);
+    }
+}

@@ -1,0 +1,90 @@
+//! Shared-memory (scratchpad) bank-conflict timing model (§V-A: "8kb with
+//! 4 banks-shared memory").
+//!
+//! Functionally, shared memory is just an aperture of device memory
+//! (`MachineConfig::smem_base`); this model only charges time: word-granular
+//! banks, conflicts serialize, broadcast (same word) is free.
+
+use crate::config::SmemConfig;
+
+/// One core's shared-memory port model.
+pub struct SharedMem {
+    cfg: SmemConfig,
+    pub total_accesses: u64,
+    pub total_conflict_cycles: u64,
+}
+
+impl SharedMem {
+    pub fn new(cfg: SmemConfig) -> Self {
+        SharedMem { cfg, total_accesses: 0, total_conflict_cycles: 0 }
+    }
+
+    /// Cycles for a warp-wide access at the given per-lane addresses.
+    pub fn access(&mut self, addrs: &[u32]) -> u32 {
+        if addrs.is_empty() {
+            return 0;
+        }
+        self.total_accesses += 1;
+        let banks = self.cfg.banks.max(1).min(64);
+        // distinct words only — multiple lanes reading the same word is a
+        // broadcast and costs nothing extra (stack arrays; §Perf iter 2)
+        let mut words = [0u32; 32];
+        let mut n_words = 0usize;
+        'outer: for &a in addrs.iter().take(32) {
+            let w = a >> 2;
+            for &seen in &words[..n_words] {
+                if seen == w {
+                    continue 'outer;
+                }
+            }
+            words[n_words] = w;
+            n_words += 1;
+        }
+        let mut per_bank = [0u32; 64];
+        for &w in &words[..n_words] {
+            per_bank[(w % banks) as usize] += 1;
+        }
+        let serial = per_bank[..banks as usize].iter().copied().max().unwrap_or(1).max(1);
+        let conflicts = serial - 1;
+        self.total_conflict_cycles += conflicts as u64;
+        self.cfg.latency + conflicts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smem4() -> SharedMem {
+        SharedMem::new(SmemConfig { size: 8192, banks: 4, latency: 1 })
+    }
+
+    #[test]
+    fn conflict_free_stride_one() {
+        let mut s = smem4();
+        // words 0,1,2,3 -> banks 0,1,2,3
+        assert_eq!(s.access(&[0x0, 0x4, 0x8, 0xC]), 1);
+        assert_eq!(s.total_conflict_cycles, 0);
+    }
+
+    #[test]
+    fn stride_banks_fully_conflicts() {
+        let mut s = smem4();
+        // words 0,4,8,12 -> all bank 0: 4-way serialization
+        assert_eq!(s.access(&[0x0, 0x10, 0x20, 0x30]), 1 + 3);
+        assert_eq!(s.total_conflict_cycles, 3);
+    }
+
+    #[test]
+    fn broadcast_is_free() {
+        let mut s = smem4();
+        assert_eq!(s.access(&[0x8, 0x8, 0x8, 0x8]), 1);
+    }
+
+    #[test]
+    fn partial_conflict() {
+        let mut s = smem4();
+        // words 0,1,4 -> banks 0,1,0: 2-way serialization
+        assert_eq!(s.access(&[0x0, 0x4, 0x10]), 2);
+    }
+}

@@ -1,0 +1,175 @@
+//! Simulation statistics: everything the paper's evaluation plots need
+//! (cycles, instructions, stall breakdown, cache behaviour, occupancy).
+
+/// Counters for one core (aggregated machine-wide by [`super::Simulator`]).
+#[derive(Clone, Debug, Default)]
+pub struct CoreStats {
+    /// Cycles this core was powered (same for all cores in lockstep).
+    pub cycles: u64,
+    /// Warp-instructions issued.
+    pub warp_instrs: u64,
+    /// Thread-instructions (warp instrs × active lanes) — the SIMD work.
+    pub thread_instrs: u64,
+    /// Issue-slot outcomes.
+    pub idle_cycles: u64,
+    pub scoreboard_stalls: u64,
+    pub lsu_busy_stalls: u64,
+    pub div_busy_stalls: u64,
+    /// Fetch outcomes.
+    pub icache_hits: u64,
+    pub icache_misses: u64,
+    pub icache_stall_cycles: u64,
+    /// Data-side.
+    pub dcache_hits: u64,
+    pub dcache_misses: u64,
+    pub dcache_conflict_cycles: u64,
+    pub dcache_writebacks: u64,
+    pub smem_accesses: u64,
+    pub smem_conflict_cycles: u64,
+    /// Control.
+    pub branches: u64,
+    pub taken_redirects: u64,
+    pub splits: u64,
+    pub divergent_splits: u64,
+    pub joins: u64,
+    pub barriers: u64,
+    pub barrier_stall_cycles: u64,
+    /// Occupancy: sum over cycles of active-warp count (divide by cycles).
+    pub active_warp_cycles: u64,
+}
+
+impl CoreStats {
+    /// Instructions per cycle (warp granularity; single-issue core ⇒ ≤ 1).
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.warp_instrs as f64 / self.cycles as f64
+        }
+    }
+
+    /// SIMD efficiency: average active lanes per issued warp-instruction,
+    /// relative to the machine width.
+    pub fn simd_efficiency(&self, num_threads: u32) -> f64 {
+        if self.warp_instrs == 0 {
+            0.0
+        } else {
+            self.thread_instrs as f64 / (self.warp_instrs as f64 * num_threads as f64)
+        }
+    }
+
+    pub fn dcache_hit_rate(&self) -> f64 {
+        let t = self.dcache_hits + self.dcache_misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.dcache_hits as f64 / t as f64
+        }
+    }
+
+    pub fn icache_hit_rate(&self) -> f64 {
+        let t = self.icache_hits + self.icache_misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.icache_hits as f64 / t as f64
+        }
+    }
+
+    /// Mean warp occupancy per cycle.
+    pub fn avg_active_warps(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.active_warp_cycles as f64 / self.cycles as f64
+        }
+    }
+
+    /// Merge another core's counters (machine totals; cycles take max —
+    /// cores run in lockstep).
+    pub fn merge(&mut self, other: &CoreStats) {
+        self.cycles = self.cycles.max(other.cycles);
+        self.warp_instrs += other.warp_instrs;
+        self.thread_instrs += other.thread_instrs;
+        self.idle_cycles += other.idle_cycles;
+        self.scoreboard_stalls += other.scoreboard_stalls;
+        self.lsu_busy_stalls += other.lsu_busy_stalls;
+        self.div_busy_stalls += other.div_busy_stalls;
+        self.icache_hits += other.icache_hits;
+        self.icache_misses += other.icache_misses;
+        self.icache_stall_cycles += other.icache_stall_cycles;
+        self.dcache_hits += other.dcache_hits;
+        self.dcache_misses += other.dcache_misses;
+        self.dcache_conflict_cycles += other.dcache_conflict_cycles;
+        self.dcache_writebacks += other.dcache_writebacks;
+        self.smem_accesses += other.smem_accesses;
+        self.smem_conflict_cycles += other.smem_conflict_cycles;
+        self.branches += other.branches;
+        self.taken_redirects += other.taken_redirects;
+        self.splits += other.splits;
+        self.divergent_splits += other.divergent_splits;
+        self.joins += other.joins;
+        self.barriers += other.barriers;
+        self.barrier_stall_cycles += other.barrier_stall_cycles;
+        self.active_warp_cycles += other.active_warp_cycles;
+    }
+
+    /// Human-readable multi-line report.
+    pub fn report(&self, num_threads: u32) -> String {
+        format!(
+            "cycles {}  warp-instrs {}  thread-instrs {}  IPC {:.3}  SIMD-eff {:.2}\n\
+             stalls: scoreboard {}  lsu {}  div {}  icache {}  barrier {}\n\
+             icache {:.1}% hit  dcache {:.1}% hit ({} wb)  smem conflicts {}\n\
+             branches {} ({} redirects)  splits {} ({} divergent)  joins {}  bars {}",
+            self.cycles,
+            self.warp_instrs,
+            self.thread_instrs,
+            self.ipc(),
+            self.simd_efficiency(num_threads),
+            self.scoreboard_stalls,
+            self.lsu_busy_stalls,
+            self.div_busy_stalls,
+            self.icache_stall_cycles,
+            self.barrier_stall_cycles,
+            100.0 * self.icache_hit_rate(),
+            100.0 * self.dcache_hit_rate(),
+            self.dcache_writebacks,
+            self.smem_conflict_cycles,
+            self.branches,
+            self.taken_redirects,
+            self.splits,
+            self.divergent_splits,
+            self.joins,
+            self.barriers,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ipc_and_efficiency() {
+        let s = CoreStats { cycles: 100, warp_instrs: 50, thread_instrs: 150, ..Default::default() };
+        assert!((s.ipc() - 0.5).abs() < 1e-9);
+        assert!((s.simd_efficiency(4) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_takes_max_cycles_sums_rest() {
+        let mut a = CoreStats { cycles: 100, warp_instrs: 10, ..Default::default() };
+        let b = CoreStats { cycles: 80, warp_instrs: 20, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.cycles, 100);
+        assert_eq!(a.warp_instrs, 30);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let s = CoreStats::default();
+        assert_eq!(s.ipc(), 0.0);
+        assert_eq!(s.dcache_hit_rate(), 0.0);
+        assert_eq!(s.avg_active_warps(), 0.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! The Vortex native runtime (paper §III-A), as build-time code generation.
+//!
+//! The paper's software stack has three parts: (1) an intrinsic library
+//! exposing the new ISA, (2) NewLib stub functions, and (3) a native API
+//! with `pocl_spawn()` that maps POCL work to hardware warps. We reproduce
+//! all three, but — since our toolchain substrate is the in-tree assembler
+//! rather than GCC — they materialize as assembly *generators*:
+//!
+//! * [`intrinsics`] — the `vx_intrinsic.s` equivalents (the assembler also
+//!   accepts `vx_tmc` etc. directly, mirroring Fig 3's encoded-hex trick);
+//! * [`crt0`] — per-lane stack setup executed by every warp at `_start`;
+//! * [`spawn`] — the `pocl_spawn` scheduler: warp-range assignment, warp
+//!   spawning, the per-warp work-item loop with `split`/`join` predication
+//!   (§III-A steps 1–5, Fig 4), drain barriers, and machine exit.
+//!
+//! Host↔device ABI (what the paper keeps in "a global structure"):
+//!
+//! ```text
+//! DCB  (0x7F00_0000): +0 total work-items   +4 items per warp
+//!                     +8 dim0 size          +12 dim1 size (for 2-D/3-D ids)
+//! ARGS (0x7F00_0100): up to 16 kernel arguments (u32 each), host-written
+//! ```
+
+pub mod intrinsics;
+pub mod newlib;
+pub mod spawn;
+
+use crate::config::MachineConfig;
+
+/// Device-control-block base address (host-written launch parameters).
+pub const DCB_ADDR: u32 = 0x7F00_0000;
+/// Kernel-argument region base address.
+pub const ARGS_ADDR: u32 = 0x7F00_0100;
+/// Maximum kernel arguments.
+pub const MAX_ARGS: u32 = 16;
+
+/// DCB field offsets.
+pub const DCB_TOTAL: u32 = 0;
+pub const DCB_PER_WARP: u32 = 4;
+pub const DCB_DIM0: u32 = 8;
+pub const DCB_DIM1: u32 = 12;
+
+/// Barrier ids reserved by the runtime (kernel code must use ids > 7).
+pub const RT_LOCAL_DRAIN_BARRIER: u32 = 1;
+pub const RT_GLOBAL_DRAIN_BARRIER: u32 = 2; // MSB is set by the codegen
+
+/// Generate the `_start` prologue: every warp (the launched warp 0 and each
+/// `wspawn`-ed warp) enters here; all lanes are activated briefly so each
+/// computes its private stack pointer from the identity CSRs, then the warp
+/// drops back to lane 0 and branches to its role.
+pub fn crt0(cfg: &MachineConfig) -> String {
+    format!(
+        r#"# ---- crt0: per-lane stack setup (generated; paper §III-A) ----
+_start:
+    csrr t0, 0xFC0          # NT
+    tmc t0                  # all lanes on for stack setup
+    csrr t0, 0xCC2          # cid
+    csrr t1, 0xFC1          # NW
+    mul t0, t0, t1
+    csrr t1, 0xCC1          # wid
+    add t0, t0, t1
+    csrr t1, 0xFC0          # NT
+    mul t0, t0, t1
+    csrr t1, 0xCC0          # tid
+    add t0, t0, t1          # linear hw-thread slot
+    addi t0, t0, 1
+    li t1, {stack_size}
+    mul t0, t0, t1
+    li t1, {stack_base}
+    add sp, t0, t1
+    addi sp, sp, -16        # 16-byte aligned top of slot
+    li t0, 1
+    tmc t0                  # back to lane 0
+    csrr t0, 0xCC1          # wid
+    bnez t0, __worker       # spawned warps go straight to work
+"#,
+        stack_size = cfg.stack_size,
+        stack_base = cfg.stack_base,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+
+    #[test]
+    fn crt0_assembles_with_worker_label() {
+        let cfg = MachineConfig::paper_default();
+        let src = format!("{}\n__worker:\n li t0, 0\n tmc t0\n", crt0(&cfg));
+        assert!(assemble(&src).is_ok());
+    }
+
+    #[test]
+    fn abi_regions_do_not_overlap_stacks() {
+        let cfg = MachineConfig::paper_default();
+        // DCB/ARGS live far below the stack region
+        assert!(DCB_ADDR + 0x200 < cfg.stack_base);
+        assert!(ARGS_ADDR > DCB_ADDR);
+    }
+}

@@ -1,0 +1,97 @@
+//! NewLib stub library (paper §III-A.2).
+//!
+//! The paper uses NewLib so kernels get a C library without an OS; NewLib
+//! requires the port to provide a small set of system-call stubs. Ours are
+//! the device-side halves: tiny assembly functions that trap to the host
+//! via `ecall` with the RISC-V Linux syscall numbers the emulator/simulator
+//! service ([`crate::emu::step`]): `exit` (93), `write` (64), `brk` (214).
+
+/// Generate the callable stub functions (appended to device programs).
+pub fn newlib_stubs() -> String {
+    r#"# ---- NewLib stubs (generated; paper §III-A.2) ----
+__exit:                    # void _exit(int code /* a0 */)
+    li a7, 93
+    ecall
+__exit_spin:               # unreachable
+    j __exit_spin
+
+__write:                   # ssize_t write(int fd, const void* buf, size_t n)
+    li a7, 64
+    ecall
+    ret
+
+__sbrk:                    # void* sbrk(intptr_t incr /* a0 */)
+    mv t0, a0
+    li a0, 0
+    li a7, 214
+    ecall                  # a0 = current break
+    add t1, a0, t0
+    mv a0, t1
+    li a7, 214
+    ecall                  # set new break, returns it
+    sub a0, a0, t0         # return old break
+    ret
+"#
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::config::MachineConfig;
+    use crate::emu::{Emulator, ExitStatus};
+
+    #[test]
+    fn stubs_assemble() {
+        assert!(assemble(&newlib_stubs()).is_ok());
+    }
+
+    #[test]
+    fn write_and_exit_work_end_to_end() {
+        let src = format!(
+            r#"
+            la a1, msg
+            li a0, 1
+            li a2, 6
+            call __write
+            li a0, 0
+            call __exit
+            {stubs}
+            .data
+            msg: .asciz "hello\n"
+            "#,
+            stubs = newlib_stubs()
+        );
+        let prog = assemble(&src).unwrap();
+        let mut emu = Emulator::new(MachineConfig::with_wt(1, 1));
+        emu.load(&prog);
+        emu.launch(prog.entry());
+        let status = emu.run(10_000).unwrap();
+        assert_eq!(status, ExitStatus::Exited(0));
+        assert_eq!(emu.console_string(), "hello\n");
+    }
+
+    #[test]
+    fn sbrk_bumps_monotonically() {
+        let src = format!(
+            r#"
+            li a0, 64
+            call __sbrk
+            mv s0, a0          # first break
+            li a0, 64
+            call __sbrk
+            sub a0, a0, s0     # second - first = 64
+            call __exit
+            {stubs}
+            "#,
+            stubs = newlib_stubs()
+        );
+        let prog = assemble(&src).unwrap();
+        let mut emu = Emulator::new(MachineConfig::with_wt(1, 1));
+        emu.load(&prog);
+        emu.launch(prog.entry());
+        let status = emu.run(10_000).unwrap();
+        assert_eq!(status, ExitStatus::Exited(64));
+    }
+}

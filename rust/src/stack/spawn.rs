@@ -1,0 +1,252 @@
+//! `pocl_spawn` — mapping POCL work onto hardware warps (paper §III-A.3).
+//!
+//! The paper's five steps, reproduced as generated device code plus a host
+//! helper:
+//!
+//! 1. *"uses the intrinsic layer to find out the available hardware
+//!    resources"* — the dispatcher reads the `NT/NW/NC` CSRs;
+//! 2. *"divides the work equally among the hardware resources"* — the host
+//!    writes `total` and `per_warp = ceil(total / (NC·NW))` into the DCB;
+//! 3. *"assigns a range of IDs to each available warp in a global
+//!    structure"* — each warp derives its `[start, end)` slice from its
+//!    linear warp index and the DCB;
+//! 4. *"uses the intrinsic layer to spawn the warps and activate the
+//!    threads"* — warp 0 `wspawn`s all warps at `_start`, each warp `tmc`s
+//!    its lanes on;
+//! 5. *"each warp will loop through the assigned IDs, executing the kernel
+//!    every time with a new OpenCL global_id"* — the item loop below, with
+//!    `split`/`join` predicating the ragged tail.
+//!
+//! The generated program layout:
+//! `crt0` → dispatcher (warp 0) / `__worker` (all warps) → per-warp item
+//! loop calling `kernel_body` with `a0 = global_id` → drain barriers →
+//! `ecall exit` from core 0 / warp 0.
+
+use super::{crt0, newlib::newlib_stubs, DCB_ADDR, DCB_PER_WARP, DCB_TOTAL};
+use crate::config::MachineConfig;
+
+/// Host-side half of `pocl_spawn`: the DCB words for a launch of
+/// `total` work-items (step 2 — divide work equally among `NC·NW` warps).
+pub fn dcb_words(total: u32, cfg: &MachineConfig) -> Vec<u32> {
+    let warps = (cfg.num_cores * cfg.num_warps).max(1);
+    let per_warp = total.div_ceil(warps);
+    vec![total, per_warp, 0, 0]
+}
+
+/// Generate the complete device program for a kernel body.
+///
+/// `kernel_body` must define the label `kernel_body:`, take the global
+/// work-item id in `a0`, read its arguments from the ARGS region, preserve
+/// `s0..s3`, and `ret`.
+pub fn device_program(kernel_body: &str, cfg: &MachineConfig) -> String {
+    let mut p = String::new();
+    p.push_str(&crt0(cfg));
+    p.push_str(&dispatcher(cfg));
+    p.push_str(&worker(cfg));
+    p.push_str("# ---- kernel body ----\n");
+    p.push_str(kernel_body);
+    p.push('\n');
+    p.push_str(&newlib_stubs());
+    p
+}
+
+/// Warp 0's dispatcher: spawn the workers, then become one (step 4).
+fn dispatcher(cfg: &MachineConfig) -> String {
+    format!(
+        r#"# ---- pocl_spawn dispatcher (warp 0; generated) ----
+    li t0, {nw}
+    la t1, _start           # spawned warps re-run crt0, then route to __worker
+    wspawn t0, t1
+    j __worker
+"#,
+        nw = cfg.num_warps,
+    )
+}
+
+/// The per-warp work loop (steps 3 and 5) plus drain/exit protocol.
+fn worker(cfg: &MachineConfig) -> String {
+    let multi_core_exit = if cfg.num_cores > 1 {
+        format!(
+            r#"    li t0, 0x80000002       # global drain barrier (MSB ⇒ global)
+    li t1, {nc}
+    bar t0, t1
+    csrr t0, 0xCC2          # cid
+    bnez t0, __drain_die
+"#,
+            nc = cfg.num_cores,
+        )
+    } else {
+        String::new()
+    };
+    format!(
+        r#"# ---- pocl_spawn worker loop (generated; paper §III-A steps 3+5) ----
+__worker:
+    csrr t0, 0xFC0          # NT
+    tmc t0                  # step 4: activate the threads up front so every
+                            # lane computes the (uniform) warp range below
+    csrr t0, 0xCC2          # cid
+    csrr t1, 0xFC1          # NW
+    mul t0, t0, t1
+    csrr t1, 0xCC1          # wid
+    add s1, t0, t1          # linear warp index (cid*NW + wid)
+    li t0, {dcb}
+    lw s2, {off_pw}(t0)     # per-warp item count
+    lw s3, {off_total}(t0)  # total items
+    mul s0, s1, s2          # start = warp_index * per_warp
+    add s2, s0, s2          # end (uncapped)
+    ble s2, s3, __range_ok
+    mv s2, s3               # cap at total
+__range_ok:
+    bge s0, s2, __drain     # empty range: straight to the drain barrier
+__item_loop:
+    csrr t1, 0xCC0          # tid
+    add a0, s0, t1          # global_id for this lane (step 5)
+    slt t2, a0, s2          # ragged tail: lanes past `end` are masked
+    split t2
+    beqz t2, __skip_body
+    call kernel_body
+__skip_body:
+    join
+    csrr t1, 0xFC0
+    add s0, s0, t1          # advance by NT
+    blt s0, s2, __item_loop
+    li t0, 1
+    tmc t0                  # back to lane 0 for the drain protocol
+__drain:
+    li t0, 1                # local drain barrier id
+    li t1, {nw}
+    bar t0, t1              # wait for every warp of this core
+    csrr t0, 0xCC1          # wid
+    bnez t0, __drain_die
+{multi_core_exit}    li a0, 0
+    li a7, 93
+    ecall                   # kernel complete
+__drain_die:
+    li t0, 0
+    tmc t0                  # worker warps leave the active mask
+"#,
+        dcb = DCB_ADDR,
+        off_pw = DCB_PER_WARP,
+        off_total = DCB_TOTAL,
+        nw = cfg.num_warps,
+        multi_core_exit = multi_core_exit,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::config::MachineConfig;
+    use crate::emu::{Emulator, ExitStatus};
+    use crate::mem::Memory;
+    use crate::sim::Simulator;
+    use crate::stack::ARGS_ADDR;
+
+    /// kernel: out[id] = 3*id + 7  (out* = args[0])
+    const TRIPLE_KERNEL: &str = r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t0, 0(t0)           # out base
+    slli t1, a0, 2
+    add t0, t0, t1
+    li t2, 3
+    mul t2, t2, a0
+    addi t2, t2, 7
+    sw t2, 0(t0)
+    ret
+"#;
+
+    fn setup_mem(mem: &mut Memory, total: u32, cfg: &MachineConfig, out_base: u32) {
+        mem.write_u32_slice(DCB_ADDR, &dcb_words(total, cfg));
+        mem.write_u32(ARGS_ADDR, out_base);
+    }
+
+    fn check_output(mem: &Memory, total: u32, out_base: u32) {
+        let got = mem.read_u32_slice(out_base, total as usize);
+        let want: Vec<u32> = (0..total).map(|i| 3 * i + 7).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn full_stack_on_emulator_ragged_total() {
+        // 37 items on 4 warps × 4 threads: ragged tail exercises split/join
+        let cfg = MachineConfig::with_wt(4, 4);
+        let total = 37;
+        let out = 0x9000_0000;
+        let prog = assemble(&device_program(TRIPLE_KERNEL, &cfg)).unwrap();
+        let mut emu = Emulator::new(cfg);
+        emu.load(&prog);
+        setup_mem(&mut emu.mem, total, &cfg, out);
+        emu.launch(prog.entry());
+        let status = emu.run(10_000_000).unwrap();
+        assert_eq!(status, ExitStatus::Exited(0));
+        check_output(&emu.mem, total, out);
+    }
+
+    #[test]
+    fn full_stack_on_simulator_matches() {
+        let cfg = MachineConfig::with_wt(2, 4);
+        let total = 19;
+        let out = 0x9000_0000;
+        let prog = assemble(&device_program(TRIPLE_KERNEL, &cfg)).unwrap();
+        let mut sim = Simulator::new(cfg);
+        sim.load(&prog);
+        setup_mem(&mut sim.mem, total, &cfg, out);
+        sim.launch(prog.entry());
+        let res = sim.run(50_000_000).unwrap();
+        assert_eq!(res.status, ExitStatus::Exited(0));
+        check_output(&sim.mem, total, out);
+        assert!(res.stats.barriers >= 2, "drain barrier executed per warp");
+    }
+
+    #[test]
+    fn multi_core_split_covers_all_items() {
+        let mut cfg = MachineConfig::with_wt(2, 2);
+        cfg.num_cores = 2;
+        let total = 23;
+        let out = 0x9000_0000;
+        let prog = assemble(&device_program(TRIPLE_KERNEL, &cfg)).unwrap();
+        let mut emu = Emulator::new(cfg);
+        emu.load(&prog);
+        setup_mem(&mut emu.mem, total, &cfg, out);
+        emu.launch(prog.entry());
+        let status = emu.run(10_000_000).unwrap();
+        assert_eq!(status, ExitStatus::Exited(0));
+        check_output(&emu.mem, total, out);
+    }
+
+    #[test]
+    fn single_item_single_warp() {
+        let cfg = MachineConfig::with_wt(1, 1);
+        let total = 1;
+        let out = 0x9000_0000;
+        let prog = assemble(&device_program(TRIPLE_KERNEL, &cfg)).unwrap();
+        let mut emu = Emulator::new(cfg);
+        emu.load(&prog);
+        setup_mem(&mut emu.mem, total, &cfg, out);
+        emu.launch(prog.entry());
+        assert_eq!(emu.run(1_000_000).unwrap(), ExitStatus::Exited(0));
+        check_output(&emu.mem, total, out);
+    }
+
+    #[test]
+    fn dcb_divides_work_equally() {
+        let mut cfg = MachineConfig::with_wt(8, 4);
+        cfg.num_cores = 2;
+        let words = dcb_words(1000, &cfg);
+        assert_eq!(words[0], 1000);
+        assert_eq!(words[1], 1000u32.div_ceil(16)); // 63 per warp
+    }
+
+    #[test]
+    fn zero_items_still_exits_cleanly() {
+        let cfg = MachineConfig::with_wt(2, 2);
+        let prog = assemble(&device_program(TRIPLE_KERNEL, &cfg)).unwrap();
+        let mut emu = Emulator::new(cfg);
+        emu.load(&prog);
+        setup_mem(&mut emu.mem, 0, &cfg, 0x9000_0000);
+        emu.launch(prog.entry());
+        assert_eq!(emu.run(1_000_000).unwrap(), ExitStatus::Exited(0));
+    }
+}

@@ -1,0 +1,460 @@
+//! Workload generators + host-side reference implementations for the
+//! Rodinia benchmark subset (paper §V-B).
+//!
+//! The paper evaluated with "reduced data set size" and warmed caches
+//! (§V-D); these generators produce seeded synthetic inputs at that scale.
+//! Every generator has a *reference* twin computing the expected output
+//! with the exact integer/Q16.16 arithmetic the device kernels use, so
+//! device-vs-host comparison is bit-exact. The AOT golden models
+//! (`python/compile/`) compute the same functions in JAX from identical
+//! SplitMix64 input streams.
+
+pub mod rng;
+
+use rng::SplitMix64;
+
+/// Q16.16 fixed point (RV32IM has no FPU — the paper's own constraint;
+/// see DESIGN.md §Substitutions #5).
+pub const Q: i32 = 16;
+
+/// Multiply two Q16.16 numbers (as the device does: mul/mulh pair).
+pub fn qmul(a: i32, b: i32) -> i32 {
+    (((a as i64) * (b as i64)) >> Q) as i32
+}
+
+// --------------------------------------------------------------------------
+// vecadd
+// --------------------------------------------------------------------------
+
+pub struct VecAdd {
+    pub a: Vec<i32>,
+    pub b: Vec<i32>,
+    pub expect: Vec<i32>,
+}
+
+pub fn vecadd(n: usize, seed: u64) -> VecAdd {
+    let mut r = SplitMix64::new(seed);
+    let a: Vec<i32> = (0..n).map(|_| r.range_i32(-1000, 1000)).collect();
+    let b: Vec<i32> = (0..n).map(|_| r.range_i32(-1000, 1000)).collect();
+    let expect = a.iter().zip(&b).map(|(x, y)| x.wrapping_add(*y)).collect();
+    VecAdd { a, b, expect }
+}
+
+// --------------------------------------------------------------------------
+// saxpy (Q16.16)
+// --------------------------------------------------------------------------
+
+pub struct Saxpy {
+    pub x: Vec<i32>,
+    pub y: Vec<i32>,
+    pub alpha: i32,
+    pub expect: Vec<i32>,
+}
+
+pub fn saxpy(n: usize, seed: u64) -> Saxpy {
+    let mut r = SplitMix64::new(seed);
+    // values in (-8, 8) in Q16.16 to keep products well inside i32
+    let x: Vec<i32> = (0..n).map(|_| r.range_i32(-8 << Q, 8 << Q)).collect();
+    let y: Vec<i32> = (0..n).map(|_| r.range_i32(-8 << Q, 8 << Q)).collect();
+    let alpha = r.range_i32(-4 << Q, 4 << Q);
+    let expect = x.iter().zip(&y).map(|(&xi, &yi)| yi.wrapping_add(qmul(alpha, xi))).collect();
+    Saxpy { x, y, alpha, expect }
+}
+
+// --------------------------------------------------------------------------
+// sgemm (int32)
+// --------------------------------------------------------------------------
+
+pub struct Sgemm {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub a: Vec<i32>,
+    pub b: Vec<i32>,
+    pub expect: Vec<i32>,
+}
+
+pub fn sgemm(m: usize, n: usize, k: usize, seed: u64) -> Sgemm {
+    let mut r = SplitMix64::new(seed);
+    let a: Vec<i32> = (0..m * k).map(|_| r.range_i32(-16, 16)).collect();
+    let b: Vec<i32> = (0..k * n).map(|_| r.range_i32(-16, 16)).collect();
+    let mut expect = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for p in 0..k {
+                acc = acc.wrapping_add(a[i * k + p].wrapping_mul(b[p * n + j]));
+            }
+            expect[i * n + j] = acc;
+        }
+    }
+    Sgemm { m, n, k, a, b, expect }
+}
+
+// --------------------------------------------------------------------------
+// bfs (level-synchronous, CSR)
+// --------------------------------------------------------------------------
+
+pub struct Bfs {
+    pub nodes: usize,
+    pub row_ptr: Vec<i32>,
+    pub col_idx: Vec<i32>,
+    pub source: usize,
+    pub max_degree: u32,
+    /// Expected BFS levels (-1 = unreachable).
+    pub expect: Vec<i32>,
+}
+
+/// Random graph with out-degree in `[1, max_deg]` (the paper's irregular
+/// benchmark — scattered loads + heavy divergence).
+pub fn bfs(nodes: usize, max_deg: u32, seed: u64) -> Bfs {
+    let mut r = SplitMix64::new(seed);
+    let mut row_ptr = Vec::with_capacity(nodes + 1);
+    let mut col_idx = Vec::new();
+    row_ptr.push(0i32);
+    for v in 0..nodes {
+        let deg = 1 + r.below(max_deg) as usize;
+        for _ in 0..deg {
+            let mut u = r.below(nodes as u32) as usize;
+            if u == v {
+                u = (u + 1) % nodes;
+            }
+            col_idx.push(u as i32);
+        }
+        row_ptr.push(col_idx.len() as i32);
+    }
+    let source = 0usize;
+    // reference: classic frontier BFS
+    let mut expect = vec![-1i32; nodes];
+    expect[source] = 0;
+    let mut frontier = vec![source];
+    let mut level = 0i32;
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for e in row_ptr[v] as usize..row_ptr[v + 1] as usize {
+                let u = col_idx[e] as usize;
+                if expect[u] == -1 {
+                    expect[u] = level + 1;
+                    next.push(u);
+                }
+            }
+        }
+        frontier = next;
+        level += 1;
+    }
+    Bfs { nodes, row_ptr, col_idx, source, max_degree: max_deg, expect }
+}
+
+// --------------------------------------------------------------------------
+// nearest neighbor (distance computation; Rodinia `nn`)
+// --------------------------------------------------------------------------
+
+pub struct Nearn {
+    pub xs: Vec<i32>,
+    pub ys: Vec<i32>,
+    pub qx: i32,
+    pub qy: i32,
+    /// Squared distances per point.
+    pub expect: Vec<i32>,
+    /// Index of the global minimum (host-side final reduce, as in Rodinia).
+    pub argmin: usize,
+}
+
+pub fn nearn(n: usize, seed: u64) -> Nearn {
+    let mut r = SplitMix64::new(seed);
+    let xs: Vec<i32> = (0..n).map(|_| r.range_i32(-1000, 1000)).collect();
+    let ys: Vec<i32> = (0..n).map(|_| r.range_i32(-1000, 1000)).collect();
+    let qx = r.range_i32(-1000, 1000);
+    let qy = r.range_i32(-1000, 1000);
+    let expect: Vec<i32> = xs
+        .iter()
+        .zip(&ys)
+        .map(|(&x, &y)| {
+            let dx = x - qx;
+            let dy = y - qy;
+            dx * dx + dy * dy
+        })
+        .collect();
+    let argmin =
+        expect.iter().enumerate().min_by_key(|(_, &d)| d).map(|(i, _)| i).unwrap_or(0);
+    Nearn { xs, ys, qx, qy, expect, argmin }
+}
+
+// --------------------------------------------------------------------------
+// gaussian elimination (fraction-free Bareiss; integer-exact)
+// --------------------------------------------------------------------------
+
+pub struct Gaussian {
+    pub n: usize,
+    /// Q24.8 fixed-point matrix.
+    pub a: Vec<i32>,
+    /// Matrix after forward elimination (same Q24.8 ops as the device).
+    pub expect: Vec<i32>,
+}
+
+/// Q24.8 shift used by the gaussian benchmark (8 bits keep every
+/// intermediate product inside i32 for the generated magnitudes).
+pub const GAUSS_Q: i32 = 8;
+
+/// Forward Gaussian elimination in Q24.8 fixed point.
+///
+/// The reference performs *exactly* the integer operations the device
+/// kernel performs (`div` truncating toward zero, `mul` + arithmetic
+/// shift), so device-vs-host comparison is bit-exact — numerical accuracy
+/// is irrelevant for a performance benchmark, determinism is everything.
+/// The access pattern matches Rodinia's Fan1/Fan2 (per-pivot row updates).
+pub fn gaussian(n: usize, seed: u64) -> Gaussian {
+    let mut r = SplitMix64::new(seed);
+    let mut a = vec![0i32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            a[i * n + j] = if i == j {
+                (8 + r.range_i32(0, 4)) << GAUSS_Q // dominant diagonal
+            } else {
+                r.range_i32(-2 << GAUSS_Q, (2 << GAUSS_Q) + 1)
+            };
+        }
+    }
+    let mut m = a.clone();
+    for k in 0..n - 1 {
+        let piv = m[k * n + k];
+        assert!(piv != 0, "zero pivot in generator");
+        for i in k + 1..n {
+            let aik = m[i * n + k];
+            // factor in Q8: (aik << 8) / piv — same as the device kernel
+            let factor = (aik << GAUSS_Q) / piv;
+            for j in k + 1..n {
+                let delta = (factor * m[k * n + j]) >> GAUSS_Q;
+                m[i * n + j] -= delta;
+            }
+            m[i * n + k] = 0;
+        }
+    }
+    Gaussian { n, a, expect: m }
+}
+
+// --------------------------------------------------------------------------
+// kmeans (assignment step over 2-D points)
+// --------------------------------------------------------------------------
+
+pub struct Kmeans {
+    pub px: Vec<i32>,
+    pub py: Vec<i32>,
+    pub cx: Vec<i32>,
+    pub cy: Vec<i32>,
+    pub k: usize,
+    /// Expected cluster assignment per point.
+    pub expect: Vec<i32>,
+}
+
+pub fn kmeans(n: usize, k: usize, seed: u64) -> Kmeans {
+    let mut r = SplitMix64::new(seed);
+    let cx: Vec<i32> = (0..k).map(|_| r.range_i32(-800, 800)).collect();
+    let cy: Vec<i32> = (0..k).map(|_| r.range_i32(-800, 800)).collect();
+    let mut px = Vec::with_capacity(n);
+    let mut py = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = r.below(k as u32) as usize;
+        px.push(cx[c] + r.range_i32(-100, 100));
+        py.push(cy[c] + r.range_i32(-100, 100));
+    }
+    let expect = px
+        .iter()
+        .zip(&py)
+        .map(|(&x, &y)| {
+            let mut best = 0i32;
+            let mut best_d = i32::MAX;
+            for c in 0..k {
+                let dx = x - cx[c];
+                let dy = y - cy[c];
+                let d = dx * dx + dy * dy;
+                if d < best_d {
+                    best_d = d;
+                    best = c as i32;
+                }
+            }
+            best
+        })
+        .collect();
+    Kmeans { px, py, cx, cy, k, expect }
+}
+
+// --------------------------------------------------------------------------
+// needleman-wunsch (wavefront DP)
+// --------------------------------------------------------------------------
+
+pub struct Nw {
+    /// `n` — sequence length; matrices are `(n+1) × (n+1)`.
+    pub n: usize,
+    /// Similarity matrix (`(n+1)²`, row-major; row 0 / col 0 unused).
+    pub sim: Vec<i32>,
+    pub penalty: i32,
+    /// Expected score matrix after DP.
+    pub expect: Vec<i32>,
+}
+
+pub fn nw(n: usize, seed: u64) -> Nw {
+    let mut r = SplitMix64::new(seed);
+    let dim = n + 1;
+    let mut sim = vec![0i32; dim * dim];
+    for i in 1..dim {
+        for j in 1..dim {
+            sim[i * dim + j] = r.range_i32(-6, 6);
+        }
+    }
+    let penalty = 4i32;
+    let mut score = vec![0i32; dim * dim];
+    for i in 1..dim {
+        score[i * dim] = -(i as i32) * penalty;
+        score[i] = -(i as i32) * penalty;
+    }
+    for i in 1..dim {
+        for j in 1..dim {
+            let diag = score[(i - 1) * dim + (j - 1)] + sim[i * dim + j];
+            let up = score[(i - 1) * dim + j] - penalty;
+            let left = score[i * dim + (j - 1)] - penalty;
+            score[i * dim + j] = diag.max(up).max(left);
+        }
+    }
+    Nw { n, sim, penalty, expect: score }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vecadd_ref() {
+        let w = vecadd(16, 1);
+        assert_eq!(w.expect[3], w.a[3] + w.b[3]);
+    }
+
+    #[test]
+    fn qmul_matches_float() {
+        let a = (2.5f64 * 65536.0) as i32;
+        let b = (-1.25f64 * 65536.0) as i32;
+        let got = qmul(a, b) as f64 / 65536.0;
+        assert!((got - (-3.125)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sgemm_identity() {
+        // A * I = A
+        let mut w = sgemm(4, 4, 4, 3);
+        w.b = (0..16).map(|i| if i % 5 == 0 { 1 } else { 0 }).collect();
+        let mut expect = vec![0i32; 16];
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut acc = 0;
+                for p in 0..4 {
+                    acc += w.a[i * 4 + p] * w.b[p * 4 + j];
+                }
+                expect[i * 4 + j] = acc;
+            }
+        }
+        assert_eq!(expect, {
+            let mut e = vec![0i32; 16];
+            for i in 0..4 {
+                for j in 0..4 {
+                    e[i * 4 + j] = w.a[i * 4 + j];
+                }
+            }
+            e
+        });
+    }
+
+    #[test]
+    fn bfs_source_level_zero_and_connected_positive() {
+        let w = bfs(64, 4, 5);
+        assert_eq!(w.expect[w.source], 0);
+        // at least the source's direct neighbors are reachable
+        let s = w.source;
+        for e in w.row_ptr[s] as usize..w.row_ptr[s + 1] as usize {
+            let u = w.col_idx[e] as usize;
+            assert!(w.expect[u] >= 0);
+        }
+        assert_eq!(w.row_ptr.len(), 65);
+    }
+
+    #[test]
+    fn bfs_levels_are_tight() {
+        // every node at level L>0 has a neighbor-in at level L-1
+        let w = bfs(128, 3, 7);
+        for v in 0..w.nodes {
+            let lv = w.expect[v];
+            if lv > 0 {
+                let mut found = false;
+                for p in 0..w.nodes {
+                    if w.expect[p] == lv - 1 {
+                        for e in w.row_ptr[p] as usize..w.row_ptr[p + 1] as usize {
+                            if w.col_idx[e] as usize == v {
+                                found = true;
+                            }
+                        }
+                    }
+                }
+                assert!(found, "node {v} level {lv} unjustified");
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_is_upper_triangular() {
+        let w = gaussian(8, 11);
+        for i in 0..8 {
+            for j in 0..i.min(7) {
+                assert_eq!(w.expect[i * 8 + j], 0, "below-diagonal ({i},{j})");
+            }
+        }
+        // pivots nonzero and bounded (no runaway growth in Q8)
+        for i in 0..7 {
+            let p = w.expect[i * 8 + i];
+            assert_ne!(p, 0);
+            assert!(p.abs() < 64 << GAUSS_Q, "pivot blow-up: {p}");
+        }
+    }
+
+    #[test]
+    fn kmeans_assigns_to_nearest() {
+        let w = kmeans(100, 4, 13);
+        for (i, &c) in w.expect.iter().enumerate() {
+            let d = |cc: usize| {
+                let dx = w.px[i] - w.cx[cc];
+                let dy = w.py[i] - w.cy[cc];
+                dx * dx + dy * dy
+            };
+            for cc in 0..4 {
+                assert!(d(c as usize) <= d(cc));
+            }
+        }
+    }
+
+    #[test]
+    fn nw_first_row_col_are_gap_penalties() {
+        let w = nw(8, 17);
+        let dim = 9;
+        for i in 1..dim {
+            assert_eq!(w.expect[i * dim], -(i as i32) * w.penalty);
+            assert_eq!(w.expect[i], -(i as i32) * w.penalty);
+        }
+    }
+
+    #[test]
+    fn nearn_argmin_consistent() {
+        let w = nearn(64, 23);
+        for &d in &w.expect {
+            assert!(d >= w.expect[w.argmin]);
+        }
+    }
+
+    #[test]
+    fn generators_are_seed_deterministic() {
+        let a = sgemm(8, 8, 8, 99);
+        let b = sgemm(8, 8, 8, 99);
+        assert_eq!(a.a, b.a);
+        assert_eq!(a.expect, b.expect);
+        let c = sgemm(8, 8, 8, 100);
+        assert_ne!(a.a, c.a);
+    }
+}

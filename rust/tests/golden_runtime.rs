@@ -1,0 +1,64 @@
+//! End-to-end three-layer validation: device kernels run on the cycle
+//! simulator (L3) and their output buffers are checked bit-exactly against
+//! the AOT-compiled JAX/Pallas golden models (L1/L2) executed through PJRT.
+//!
+//! Requires `make artifacts` to have produced `artifacts/*.hlo.txt`; tests
+//! skip (with a loud message) when artifacts are absent so `cargo test`
+//! still works in a fresh checkout.
+
+use vortex::config::MachineConfig;
+use vortex::kernels::Bench;
+use vortex::pocl::Backend;
+use vortex::runtime::GoldenRuntime;
+
+const SEED: u64 = 0xC0FFEE;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime_or_skip() -> Option<GoldenRuntime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(GoldenRuntime::new(dir).expect("PJRT runtime"))
+}
+
+#[test]
+fn golden_models_match_simulator_for_all_benchmarks() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let cfg = MachineConfig::with_wt(4, 4);
+    for bench in Bench::ALL {
+        if !rt.has_artifact(bench) {
+            panic!("artifact missing for {}", bench.name());
+        }
+        let run = bench
+            .run(cfg, SEED, Backend::SimX, true)
+            .unwrap_or_else(|e| panic!("{} device run failed: {e}", bench.name()));
+        assert!(run.verified, "{}: device output != host reference", bench.name());
+        let ok = rt
+            .validate(bench, SEED, &run.output)
+            .unwrap_or_else(|e| panic!("{} golden run failed: {e}", bench.name()));
+        assert!(ok, "{}: golden model disagrees with device", bench.name());
+    }
+}
+
+#[test]
+fn golden_models_are_seed_sensitive() {
+    // guard against a vacuous comparison: a *different* seed's device
+    // output must NOT match the golden model for SEED
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let cfg = MachineConfig::with_wt(2, 4);
+    let other = Bench::VecAdd.run(cfg, SEED + 1, Backend::Emu, false).unwrap();
+    let ok = rt.validate(Bench::VecAdd, SEED, &other.output).unwrap();
+    assert!(!ok, "validation passed against mismatched seed — comparison is vacuous");
+}
+
+#[test]
+fn golden_runtime_reports_length_mismatch() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let err = rt.validate(Bench::VecAdd, SEED, &[1, 2, 3]).unwrap_err();
+    assert!(err.to_string().contains("len"));
+}

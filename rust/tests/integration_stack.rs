@@ -1,0 +1,252 @@
+//! Cross-module integration + failure injection over the full software
+//! stack: mini-POCL device, multi-launch pipelines, config files, console
+//! I/O, and the error paths a real bring-up hits (missing join, divergent
+//! branch without split, wrong barrier count).
+
+use vortex::asm::assemble;
+use vortex::config::MachineConfig;
+use vortex::coordinator::config as cfgfile;
+use vortex::emu::step::EmuError;
+use vortex::emu::Emulator;
+use vortex::kernels::{bodies, Bench};
+use vortex::pocl::{Backend, Kernel, LaunchError, VortexDevice};
+use vortex::stack::spawn::device_program;
+
+const SEED: u64 = 7;
+
+// ---------------------------------------------------------------------
+// happy-path integration
+// ---------------------------------------------------------------------
+
+#[test]
+fn launch_pipeline_on_shared_device_memory() {
+    // gaussian writes in place; a follow-up vecadd consumes the matrix —
+    // device memory must persist across launches (OpenCL buffer semantics)
+    let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 4));
+    let n = 8usize;
+    let w = vortex::workloads::gaussian(n, SEED);
+    let a = dev.create_buffer(n * n * 4);
+    dev.write_buffer_i32(a, &w.a);
+    let k = bodies::gaussian_step();
+    for step in 0..n - 1 {
+        dev.launch(&k, (n - 1 - step) as u32, &[a.addr, n as u32, step as u32], Backend::SimX)
+            .unwrap();
+    }
+    assert_eq!(dev.read_buffer_i32(a, n * n), w.expect);
+
+    // now double the eliminated matrix with vecadd (c = a + a)
+    let c = dev.create_buffer(n * n * 4);
+    dev.launch(
+        &bodies::vecadd(),
+        (n * n) as u32,
+        &[a.addr, a.addr, c.addr],
+        Backend::SimX,
+    )
+    .unwrap();
+    let doubled: Vec<i32> = w.expect.iter().map(|x| x.wrapping_mul(2)).collect();
+    assert_eq!(dev.read_buffer_i32(c, n * n), doubled);
+}
+
+#[test]
+fn config_file_drives_benchmark_run() {
+    let doc = cfgfile::parse(
+        "[machine]\nwarps = 4\nthreads = 8\n[dcache]\nsize = 8192\nbanks = 8\n",
+    )
+    .unwrap();
+    let cfg = cfgfile::machine_from_doc(&doc);
+    assert_eq!((cfg.num_warps, cfg.num_threads, cfg.dcache.size), (4, 8, 8192));
+    let r = Bench::VecAdd.run(cfg, SEED, Backend::SimX, true).unwrap();
+    assert!(r.verified);
+    // bigger D$ than paper default ⇒ fewer misses than paper default
+    let r_paper = Bench::VecAdd
+        .run(MachineConfig::with_wt(4, 8), SEED, Backend::SimX, true)
+        .unwrap();
+    assert!(r.stats.dcache_misses < r_paper.stats.dcache_misses);
+}
+
+#[test]
+fn console_output_flows_from_kernel_to_host() {
+    let k = Kernel {
+        name: "printer",
+        body: r#"
+kernel_body:
+    # only work-item 0 prints (write syscall through the NewLib stub path);
+    # the lane-divergent condition needs the Fig 3 split/join pattern
+    seqz t2, a0
+    split t2
+    beqz t2, skip_print
+    li t0, 0x7F000100
+    lw a1, 0(t0)        # message buffer
+    li a0, 1            # fd
+    li a2, 3            # len
+    li a7, 64
+    ecall
+skip_print:
+    join
+    ret
+"#
+        .to_string(),
+    };
+    let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 2));
+    let msg = dev.create_buffer(4);
+    dev.write_buffer_i32(msg, &[0x00696828]); // "(hi\0" little-endian
+    let r = dev.launch(&k, 4, &[msg.addr], Backend::SimX).unwrap();
+    assert_eq!(r.console, "(hi");
+}
+
+#[test]
+fn scale_parameter_grows_problem() {
+    let cfg = MachineConfig::with_wt(2, 4);
+    let s1 = Bench::Sgemm.run_scaled(cfg, 1, SEED, Backend::SimX, true).unwrap();
+    let s2 = Bench::Sgemm.run_scaled(cfg, 2, SEED, Backend::SimX, true).unwrap();
+    assert!(s2.verified);
+    assert!(s2.cycles > 3 * s1.cycles, "4x the output elements ⇒ ≫ cycles");
+}
+
+// ---------------------------------------------------------------------
+// failure injection
+// ---------------------------------------------------------------------
+
+#[test]
+fn missing_join_is_detected() {
+    // split without matching join: the next join (from the worker loop's
+    // ragged-tail handling) pops the wrong entry and the program either
+    // underflows or corrupts — the machine must fail loudly, not hang
+    let k = Kernel {
+        name: "missing_join",
+        body: r#"
+kernel_body:
+    li t0, 1
+    split t0
+    ret
+"#
+        .to_string(),
+    };
+    let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 4));
+    let err = dev.launch(&k, 8, &[], Backend::Emu);
+    assert!(err.is_err(), "unbalanced split must not pass");
+}
+
+#[test]
+fn stray_join_underflows() {
+    let src = r#"
+        li t0, 2
+        tmc t0
+        join
+    "#;
+    let prog = assemble(src).unwrap();
+    let mut emu = Emulator::new(MachineConfig::with_wt(1, 2));
+    emu.load(&prog);
+    emu.launch(prog.entry());
+    let e = emu.run(1000).unwrap_err();
+    assert!(matches!(e, EmuError::IpdomUnderflow { .. }));
+}
+
+#[test]
+fn divergent_branch_without_split_rejected() {
+    let k = Kernel {
+        name: "divergent_branch",
+        body: r#"
+kernel_body:
+    andi t0, a0, 1
+    bnez t0, odd      # lanes disagree — no split: must be caught
+    addi t1, t1, 1
+odd:
+    ret
+"#
+        .to_string(),
+    };
+    let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 4));
+    let err = dev.launch(&k, 4, &[], Backend::SimX).unwrap_err();
+    match err {
+        LaunchError::Machine(EmuError::DivergentBranch { .. }) => {}
+        other => panic!("expected DivergentBranch, got {other}"),
+    }
+}
+
+#[test]
+fn wrong_barrier_count_deadlocks_with_diagnosis() {
+    let src = r#"
+        li t0, 0
+        li t1, 5       # nobody else will arrive (machine has 2 warps)
+        bar t0, t1
+    "#;
+    let prog = assemble(src).unwrap();
+    let mut emu = Emulator::new(MachineConfig::with_wt(2, 2));
+    emu.load(&prog);
+    emu.launch(prog.entry());
+    let e = emu.run(100_000).unwrap_err();
+    assert!(matches!(e, EmuError::Deadlock { .. }));
+}
+
+#[test]
+fn illegal_instruction_in_kernel_is_reported() {
+    let src = r#"
+        .word 0xffffffff
+    "#;
+    let prog = assemble(src).unwrap();
+    let mut emu = Emulator::new(MachineConfig::with_wt(1, 1));
+    emu.load(&prog);
+    emu.launch(prog.text_base);
+    let e = emu.run(10).unwrap_err();
+    assert!(matches!(e, EmuError::Illegal { .. }));
+}
+
+#[test]
+fn unknown_syscall_is_reported() {
+    let src = r#"
+        li a7, 9999
+        ecall
+    "#;
+    let prog = assemble(src).unwrap();
+    let mut emu = Emulator::new(MachineConfig::with_wt(1, 1));
+    emu.load(&prog);
+    emu.launch(prog.entry());
+    let e = emu.run(10).unwrap_err();
+    assert!(matches!(e, EmuError::UnknownSyscall { num: 9999, .. }));
+}
+
+#[test]
+fn kernel_nonzero_exit_is_a_launch_error() {
+    let k = Kernel {
+        name: "bad_exit",
+        body: r#"
+kernel_body:
+    li a0, 3
+    li a7, 93
+    ecall        # exit(3) from inside a work item
+    ret
+"#
+        .to_string(),
+    };
+    let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 1));
+    let err = dev.launch(&k, 1, &[], Backend::SimX).unwrap_err();
+    // the mid-kernel exit is caught either as a nonzero exit code or as an
+    // unbalanced IPDOM stack (the worker's ragged-tail split is still open)
+    assert!(
+        matches!(err, LaunchError::BadExit(_))
+            || matches!(err, LaunchError::Machine(EmuError::UnbalancedIpdom { .. })),
+        "unexpected error: {err}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// device-program generation sanity across the whole config space
+// ---------------------------------------------------------------------
+
+#[test]
+fn device_programs_assemble_for_every_paper_config() {
+    for (w, t) in MachineConfig::paper_sweep() {
+        let cfg = MachineConfig::with_wt(w, t);
+        for k in [bodies::vecadd(), bodies::bfs_step(), bodies::nw_diag()] {
+            let src = device_program(&k.body, &cfg);
+            assemble(&src).unwrap_or_else(|e| panic!("{} at {w}x{t}: {e}", k.name));
+        }
+    }
+    // multi-core flavor too
+    let mut cfg = MachineConfig::with_wt(4, 4);
+    cfg.num_cores = 4;
+    let src = device_program(&bodies::vecadd().body, &cfg);
+    assert!(src.contains("0x80000002"), "global drain barrier emitted");
+    assemble(&src).unwrap();
+}

@@ -1,0 +1,354 @@
+//! Property-based invariants over the core microarchitectural structures:
+//! ISA encode/decode, IPDOM stack discipline, barrier-table accounting,
+//! scheduler liveness/fairness, cache model conservation laws, and
+//! assembler/disassembler round-trips.
+
+use vortex::asm::assemble;
+use vortex::coordinator::quickcheck::check;
+use vortex::emu::barrier::BarrierTable;
+use vortex::isa::{decode, disasm, encode, AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp};
+use vortex::sim::cache::Cache;
+use vortex::sim::scheduler::WarpScheduler;
+use vortex::workloads::rng::SplitMix64;
+
+// ---------------------------------------------------------------------
+// ISA round-trips
+// ---------------------------------------------------------------------
+
+fn random_instr(r: &mut SplitMix64) -> Instr {
+    let reg = |r: &mut SplitMix64| r.below(32) as u8;
+    let alu = |r: &mut SplitMix64| {
+        [
+            AluOp::Add,
+            AluOp::Sub,
+            AluOp::Sll,
+            AluOp::Slt,
+            AluOp::Sltu,
+            AluOp::Xor,
+            AluOp::Srl,
+            AluOp::Sra,
+            AluOp::Or,
+            AluOp::And,
+            AluOp::Mul,
+            AluOp::Mulh,
+            AluOp::Mulhsu,
+            AluOp::Mulhu,
+            AluOp::Div,
+            AluOp::Divu,
+            AluOp::Rem,
+            AluOp::Remu,
+        ][r.below(18) as usize]
+    };
+    match r.below(16) {
+        0 => Instr::Lui { rd: reg(r), imm: (r.next_u32() & 0xFFFFF000) as i32 },
+        1 => Instr::Auipc { rd: reg(r), imm: (r.next_u32() & 0xFFFFF000) as i32 },
+        2 => Instr::Jal { rd: reg(r), imm: (r.range_i32(-(1 << 19), 1 << 19)) * 2 },
+        3 => Instr::Jalr { rd: reg(r), rs1: reg(r), imm: r.range_i32(-2048, 2048) },
+        4 => Instr::Branch {
+            op: [
+                BranchOp::Beq,
+                BranchOp::Bne,
+                BranchOp::Blt,
+                BranchOp::Bge,
+                BranchOp::Bltu,
+                BranchOp::Bgeu,
+            ][r.below(6) as usize],
+            rs1: reg(r),
+            rs2: reg(r),
+            imm: r.range_i32(-2048, 2048) * 2,
+        },
+        5 => Instr::Load {
+            op: [LoadOp::Lb, LoadOp::Lh, LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu]
+                [r.below(5) as usize],
+            rd: reg(r),
+            rs1: reg(r),
+            imm: r.range_i32(-2048, 2048),
+        },
+        6 => Instr::Store {
+            op: [StoreOp::Sb, StoreOp::Sh, StoreOp::Sw][r.below(3) as usize],
+            rs1: reg(r),
+            rs2: reg(r),
+            imm: r.range_i32(-2048, 2048),
+        },
+        7 => {
+            let op = alu(r);
+            let imm = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => r.range_i32(0, 32),
+                _ => r.range_i32(-2048, 2048),
+            };
+            // OP-IMM exists only for the I-subset ops
+            match op {
+                AluOp::Add
+                | AluOp::Slt
+                | AluOp::Sltu
+                | AluOp::Xor
+                | AluOp::Or
+                | AluOp::And
+                | AluOp::Sll
+                | AluOp::Srl
+                | AluOp::Sra => Instr::OpImm { op, rd: reg(r), rs1: reg(r), imm },
+                _ => Instr::Op { op, rd: reg(r), rs1: reg(r), rs2: reg(r) },
+            }
+        }
+        8 => Instr::Op { op: alu(r), rd: reg(r), rs1: reg(r), rs2: reg(r) },
+        9 => Instr::Fence,
+        10 => Instr::Ecall,
+        11 => Instr::Csr {
+            op: [CsrOp::Rw, CsrOp::Rs, CsrOp::Rc, CsrOp::Rwi, CsrOp::Rsi, CsrOp::Rci]
+                [r.below(6) as usize],
+            rd: reg(r),
+            rs1: reg(r),
+            csr: (r.next_u32() & 0xfff) as u16,
+        },
+        12 => Instr::Wspawn { rs1: reg(r), rs2: reg(r) },
+        13 => Instr::Tmc { rs1: reg(r) },
+        14 => Instr::Split { rs1: reg(r) },
+        _ => {
+            if r.below(2) == 0 {
+                Instr::Join
+            } else {
+                Instr::Bar { rs1: reg(r), rs2: reg(r) }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_encode_decode_roundtrip() {
+    check("encode-decode-roundtrip", 2000, |r| {
+        let i = random_instr(r);
+        let w = encode(i);
+        let d = decode(w).unwrap_or_else(|e| panic!("decode failed for {i:?}: {e}"));
+        assert_eq!(d, i, "word {w:#010x}");
+    });
+}
+
+#[test]
+fn prop_decode_is_stable_under_reencode() {
+    // for arbitrary words: if it decodes, re-encoding the decoded form and
+    // decoding again is a fixed point (don't-care fields normalize)
+    check("decode-reencode-fixpoint", 5000, |r| {
+        let w = r.next_u32();
+        if let Ok(i) = decode(w) {
+            let w2 = encode(i);
+            assert_eq!(decode(w2).unwrap(), i, "w={w:#010x} w2={w2:#010x}");
+        }
+    });
+}
+
+#[test]
+fn prop_disasm_reassembles_to_same_word() {
+    check("disasm-reassemble", 500, |r| {
+        let i = random_instr(r);
+        // skip forms whose disasm is context-dependent (branch/jal print
+        // raw displacements that the assembler treats as relative — fine —
+        // but csr immediate forms print zimm which parses as a register)
+        if matches!(i, Instr::Csr { op: CsrOp::Rwi | CsrOp::Rsi | CsrOp::Rci, .. }) {
+            return;
+        }
+        let text = disasm(i);
+        let prog = assemble(&text).unwrap_or_else(|e| panic!("`{text}` failed: {e}"));
+        let (_, re) = prog.text_instrs()[0];
+        assert_eq!(re, i, "text `{text}`");
+    });
+}
+
+// ---------------------------------------------------------------------
+// IPDOM stack discipline
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_ipdom_masks_shrink_and_reconverge() {
+    use vortex::emu::step::{exec_warp, StepCtx};
+    use vortex::emu::Warp;
+    use vortex::isa::Instr;
+    use vortex::mem::Memory;
+
+    check("ipdom-reconverge", 200, |r| {
+        let threads = 4 + r.below(5); // 4..8
+        let mut warp = Warp::new(0, threads);
+        warp.pc = 0x8000_0000;
+        warp.tmask = (1u32 << threads) - 1;
+        warp.active = true;
+        let full = warp.tmask;
+        let mut mem = Memory::new();
+        let (mut console, mut heap) = (Vec::new(), 0u32);
+        let mut ctx = StepCtx {
+            core_id: 0,
+            num_cores: 1,
+            num_warps: 1,
+            num_threads: threads,
+            cycle: 0,
+            console: &mut console,
+            heap_end: &mut heap,
+        };
+
+        // nested random splits
+        let depth = 1 + r.below(3);
+        let mut mask_stack = vec![full];
+        for _ in 0..depth {
+            for t in 0..threads as usize {
+                warp.write(t, 5, r.below(2));
+            }
+            let before = warp.tmask;
+            exec_warp(&mut warp, Instr::Split { rs1: 5 }, &mut mem, &mut ctx).unwrap();
+            // mask may only shrink (or stay) and stays a subset
+            assert_eq!(warp.tmask & !before, 0, "split grew the mask");
+            assert_ne!(warp.tmask, 0, "split produced empty mask");
+            mask_stack.push(before);
+        }
+        // joins: each pops one level; eventually the warp reconverges
+        let mut join_budget = 2 * depth + 2;
+        while !warp.ipdom.is_empty() && join_budget > 0 {
+            let before_depth = warp.ipdom.len();
+            exec_warp(&mut warp, Instr::Join, &mut mem, &mut ctx).unwrap();
+            assert_eq!(warp.ipdom.len(), before_depth - 1);
+            join_budget -= 1;
+        }
+        assert!(warp.ipdom.is_empty(), "stack drained");
+        assert_eq!(warp.tmask, full, "reconverged to the pre-split mask");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Barrier table accounting
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_barrier_releases_exactly_arrivals() {
+    check("barrier-exact-release", 300, |r| {
+        let mut table = BarrierTable::new();
+        let count = 2 + r.below(7); // barrier size 2..8
+        let id = r.below(4);
+        let mut arrived = Vec::new();
+        for k in 0..count {
+            let who = (0u32, 10 + k);
+            match table.arrive(id, count, who) {
+                Some(released) => {
+                    arrived.push(who);
+                    let mut exp = arrived.clone();
+                    exp.sort();
+                    let mut got = released.clone();
+                    got.sort();
+                    assert_eq!(got, exp, "release set == arrival set");
+                    assert_eq!(k, count - 1, "released only on the last arrival");
+                    assert_eq!(table.live(), 0);
+                    return;
+                }
+                None => {
+                    arrived.push(who);
+                    assert_eq!(table.stalled_participants().len(), arrived.len());
+                }
+            }
+        }
+        panic!("barrier of {count} never released");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Scheduler liveness + fairness
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_is_live_and_fair() {
+    check("scheduler-live-fair", 300, |r| {
+        let nw = 2 + r.below(31); // 2..32
+        let mut s = WarpScheduler::new(nw);
+        let mut eligible = Vec::new();
+        for w in 0..nw {
+            let active = r.below(3) != 0;
+            let stalled = active && r.below(4) == 0;
+            s.set_active(w, active);
+            s.set_stalled(w, stalled);
+            if active && !stalled {
+                eligible.push(w);
+            }
+        }
+        if eligible.is_empty() {
+            assert_eq!(s.schedule(), None);
+            return;
+        }
+        // within 2·|eligible| picks, every eligible warp is scheduled at
+        // least once and nothing ineligible ever is
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..2 * eligible.len() {
+            let w = s.schedule().expect("live");
+            assert!(eligible.contains(&w), "scheduled ineligible warp {w}");
+            seen.insert(w);
+        }
+        for w in &eligible {
+            assert!(seen.contains(w), "warp {w} starved");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Cache model conservation laws
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cache_conservation() {
+    check("cache-conservation", 200, |r| {
+        let mut c = Cache::new(vortex::config::CacheConfig::paper_dcache());
+        for _ in 0..50 {
+            let lanes = 1 + r.below(8) as usize;
+            let addrs: Vec<u32> =
+                (0..lanes).map(|_| 0x9000_0000 + (r.below(4096) & !3)).collect();
+            let a = c.access(&addrs, r.below(2) == 1);
+            // distinct lines ≤ lanes; hits+misses == distinct lines
+            assert!(a.hits + a.misses <= lanes as u32);
+            assert!(a.hits + a.misses >= 1);
+            // conflicts bounded by distinct lines - 1
+            assert!(a.conflict_cycles < (a.hits + a.misses).max(1));
+            // latency ≥ hit latency; miss implies ≥ penalty
+            assert!(a.cycles >= 1);
+            if a.misses > 0 {
+                assert!(a.cycles >= 50);
+            }
+        }
+        // repeat-access of a small region converges to all-hits
+        for _ in 0..2 {
+            for w in 0..64 {
+                c.access_one(0xA000_0000 + w * 4, false);
+            }
+        }
+        let a = c.access_one(0xA000_0000, false);
+        assert_eq!(a.misses, 0, "resident line must hit");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Workload generator sanity under random seeds
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_workloads_well_formed() {
+    use vortex::workloads as wl;
+    check("workloads-well-formed", 40, |r| {
+        let seed = r.next_u64();
+        let b = wl::bfs(64 + r.below(64) as usize, 1 + r.below(6), seed);
+        assert_eq!(*b.row_ptr.last().unwrap() as usize, b.col_idx.len());
+        for &u in &b.col_idx {
+            assert!((u as usize) < b.nodes);
+        }
+        assert_eq!(b.expect[b.source], 0);
+
+        let g = wl::gaussian(6 + r.below(8) as usize, seed);
+        for i in 0..g.n {
+            for j in 0..i {
+                assert_eq!(g.expect[i * g.n + j], 0);
+            }
+        }
+
+        let n = wl::nw(8 + r.below(16) as usize, seed);
+        let dim = n.n + 1;
+        // DP monotonicity guard: every cell obeys the recurrence bound
+        for i in 1..dim {
+            for j in 1..dim {
+                let s = n.expect[i * dim + j];
+                let diag = n.expect[(i - 1) * dim + (j - 1)] + n.sim[i * dim + j];
+                assert!(s >= diag, "cell ({i},{j}) below diag candidate");
+            }
+        }
+    });
+}

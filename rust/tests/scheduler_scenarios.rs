@@ -1,0 +1,197 @@
+//! Paper Fig 6 scheduler scenarios at full-system level: small programs
+//! whose scheduling behaviour (not just architectural result) must match
+//! the paper's described sequences, observed through the simulator's
+//! statistics counters.
+
+use vortex::asm::assemble;
+use vortex::config::MachineConfig;
+use vortex::emu::ExitStatus;
+use vortex::sim::Simulator;
+
+fn run(src: &str, cfg: MachineConfig) -> (Simulator, vortex::sim::RunResult) {
+    let prog = assemble(src).unwrap();
+    let mut sim = Simulator::new(cfg);
+    sim.load(&prog);
+    sim.launch(prog.entry());
+    let res = sim.run(10_000_000).unwrap();
+    (sim, res)
+}
+
+/// Fig 6(a): two active warps share the issue slot via the visible mask —
+/// both make progress, refills happen, and total runtime is ~2× the
+/// single-warp runtime of the same per-warp work (one issue slot).
+#[test]
+fn fig6a_two_warps_share_the_pipeline() {
+    let worker = r#"
+        la t1, worker
+        li t0, 2
+        wspawn t0, t1
+        worker:
+        li t5, 200
+        spin: addi t5, t5, -1
+        bnez t5, spin
+        li t0, 0
+        tmc t0
+    "#;
+    let (_, two) = run(worker, MachineConfig::with_wt(2, 1));
+    // single warp doing the same per-warp work
+    let single = r#"
+        li t5, 200
+        spin: addi t5, t5, -1
+        bnez t5, spin
+        li t0, 0
+        tmc t0
+    "#;
+    let (_, one) = run(single, MachineConfig::with_wt(2, 1));
+    assert_eq!(two.status, ExitStatus::Drained);
+    // two warps share one issue slot, so runtime grows — but by LESS than
+    // 2x, because the second warp fills the first's branch-redirect
+    // bubbles (the whole point of the visible-mask rotation)
+    let ratio = two.cycles as f64 / one.cycles as f64;
+    assert!(
+        (1.05..2.0).contains(&ratio),
+        "two-warp runtime should be >1x but <2x single: {ratio:.2} ({} vs {})",
+        two.cycles,
+        one.cycles
+    );
+    // and the shared pipeline is better utilized
+    assert!(
+        two.stats.ipc() > one.stats.ipc() * 1.3,
+        "interleaving must raise IPC: {:.2} vs {:.2}",
+        two.stats.ipc(),
+        one.stats.ipc()
+    );
+}
+
+/// Fig 6(b): a warp whose instruction "requires a change of state" (here a
+/// load-miss dependency) is stalled while the other warp keeps issuing —
+/// total cycles stay well below the sum of isolated runtimes.
+#[test]
+fn fig6b_stalled_warp_does_not_block_siblings() {
+    // warp0 streams cold loads (long stalls); warp1 is pure ALU
+    let src = r#"
+        la t1, wroute
+        li t0, 2
+        wspawn t0, t1
+        wroute:
+        csrr t2, 0xCC1
+        bnez t2, alu_warp
+        # warp 0: dependent cold loads
+        li t3, 0x90000000
+        li t4, 32
+        mloop:
+        lw t5, 0(t3)
+        add t6, t5, t5
+        addi t3, t3, 64
+        addi t4, t4, -1
+        bnez t4, mloop
+        li t0, 0
+        tmc t0
+        alu_warp:
+        li t4, 400
+        aloop:
+        addi t5, t5, 1
+        addi t4, t4, -1
+        bnez t4, aloop
+        li t0, 0
+        tmc t0
+    "#;
+    let (_, both) = run(src, MachineConfig::with_wt(2, 1));
+    assert_eq!(both.status, ExitStatus::Drained);
+    // the ALU warp should have filled most of the load-miss bubbles:
+    // idle cycles must be far below the raw miss time (32 misses × 50)
+    assert!(
+        both.stats.idle_cycles < 1200,
+        "latency hiding failed: {} idle cycles",
+        both.stats.idle_cycles
+    );
+    assert!(both.stats.dcache_misses >= 30, "loads must miss cold");
+}
+
+/// Fig 6(c): wspawn activates warps which join scheduling at the next
+/// refill; deactivation via tmc 0 removes them.
+#[test]
+fn fig6c_wspawn_activates_then_drains() {
+    let src = r#"
+        la t1, worker
+        li t0, 4
+        wspawn t0, t1
+        worker:
+        csrr t2, 0xCC1          # wid
+        slli t3, t2, 2
+        li t4, 0x90000500
+        add t3, t3, t4
+        addi t5, t2, 1
+        sw t5, 0(t3)            # mark "I ran"
+        li t0, 0
+        tmc t0
+    "#;
+    let (sim, res) = run(src, MachineConfig::with_wt(8, 2));
+    assert_eq!(res.status, ExitStatus::Drained);
+    // warps 0..3 ran (wspawn 4 ⇒ warps 1..3 spawned + warp 0)
+    for w in 0..4u32 {
+        assert_eq!(sim.mem.read_u32(0x9000_0500 + 4 * w), w + 1, "warp {w} ran");
+    }
+    // warps 4..7 never activated
+    for w in 4..8u32 {
+        assert_eq!(sim.mem.read_u32(0x9000_0500 + 4 * w), 0, "warp {w} must not run");
+    }
+}
+
+/// Occupancy accounting: average active warps matches the program shape
+/// (starts at 1, spawns to N, drains back).
+#[test]
+fn occupancy_stat_tracks_wspawn() {
+    let src = r#"
+        la t1, worker
+        li t0, 4
+        wspawn t0, t1
+        worker:
+        li t5, 100
+        spin: addi t5, t5, -1
+        bnez t5, spin
+        li t0, 0
+        tmc t0
+    "#;
+    let (_, res) = run(src, MachineConfig::with_wt(4, 1));
+    let avg = res.stats.avg_active_warps();
+    assert!(avg > 2.0 && avg <= 4.0, "avg active warps {avg:.2} should be ≈4");
+}
+
+/// The barrier-stalled mask excludes warps from scheduling but they resume
+/// after release — and the barrier stall shows up in the counters.
+#[test]
+fn barrier_stall_cycles_accounted() {
+    let src = r#"
+        la t1, worker
+        li t0, 2
+        wspawn t0, t1
+        worker:
+        csrr t2, 0xCC1
+        bnez t2, late
+        # warp0 reaches the barrier immediately
+        li t0, 3
+        li t1, 2
+        bar t0, t1
+        li t0, 0
+        tmc t0
+        late:
+        # warp1 burns 300 instructions first
+        li t5, 300
+        spin: addi t5, t5, -1
+        bnez t5, spin
+        li t0, 3
+        li t1, 2
+        bar t0, t1
+        li t0, 0
+        tmc t0
+    "#;
+    let (_, res) = run(src, MachineConfig::with_wt(2, 1));
+    assert_eq!(res.status, ExitStatus::Drained);
+    assert_eq!(res.stats.barriers, 2);
+    assert!(
+        res.stats.barrier_stall_cycles > 200,
+        "warp0 must visibly wait: {} stall cycles",
+        res.stats.barrier_stall_cycles
+    );
+}
