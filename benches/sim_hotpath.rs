@@ -4,12 +4,13 @@
 
 use vortex::asm::assemble;
 use vortex::config::MachineConfig;
-use vortex::coordinator::benchkit::{throughput, Bencher};
+use vortex::coordinator::benchkit::{speedup, throughput, Bencher};
 use vortex::emu::Emulator;
 use vortex::kernels::Bench;
-use vortex::pocl::Backend;
+use vortex::pocl::{Backend, LaunchQueue, VortexDevice};
 use vortex::sim::cache::Cache;
-use vortex::sim::Simulator;
+use vortex::sim::{ExecMode, Simulator};
+use vortex::workloads as wl;
 
 fn alu_loop_src(iters: u32) -> String {
     format!(
@@ -91,4 +92,65 @@ fn main() {
         acc
     });
     println!("  -> {:.1} M warp-accesses/s", throughput(1_000_000, &m) / 1e6);
+
+    // --- parallel engine: 4-core machine, serial vs parallel stepping ---
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut cfg4 = MachineConfig::with_wt(8, 4);
+    cfg4.num_cores = 4;
+    let prog4 = assemble(&alu_loop_src(60_000)).unwrap();
+    let run_mode = |mode: ExecMode| {
+        let mut sim = Simulator::new(cfg4);
+        sim.exec_mode = mode;
+        // larger chunks amortize the per-chunk fork/join (no barriers in
+        // this workload; identical for both modes, so still bit-identical)
+        sim.chunk_cycles = 16_384;
+        sim.load(&prog4);
+        sim.launch(prog4.entry());
+        sim.run(u64::MAX).unwrap().stats.warp_instrs
+    };
+    // determinism sanity before timing
+    assert_eq!(run_mode(ExecMode::Serial), run_mode(ExecMode::Parallel));
+    let ms = bencher.bench("simx_4core_serial", || run_mode(ExecMode::Serial));
+    let mp = bencher.bench("simx_4core_parallel", || run_mode(ExecMode::Parallel));
+    println!(
+        "  -> 4-core parallel engine speedup: {:.2}x on {hw} host thread(s)\n",
+        speedup(&ms, &mp)
+    );
+
+    // --- launch queue: 8 enqueued kernels vs 8 sequential launches ---
+    let n = 2048usize;
+    let w = wl::vecadd(n, 0xC0FFEE);
+    let make_dev = || {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(8, 4));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        let c = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &w.a);
+        dev.write_buffer_i32(b, &w.b);
+        (dev, [a.addr, b.addr, c.addr])
+    };
+    let kernel = vortex::kernels::bodies::vecadd();
+    let launches = 8usize;
+    let mseq = bencher.bench("launch_8_sequential", || {
+        let mut cycles = 0u64;
+        for _ in 0..launches {
+            let (mut dev, args) = make_dev();
+            cycles += dev.launch(&kernel, n as u32, &args, Backend::SimX).unwrap().cycles;
+        }
+        cycles
+    });
+    let mq = bencher.bench(&format!("launch_8_queued_jobs{hw}"), || {
+        let mut q = LaunchQueue::with_default_jobs();
+        let mut devs = Vec::new();
+        for _ in 0..launches {
+            let (mut dev, args) = make_dev();
+            q.enqueue(&mut dev, &kernel, n as u32, &args, Backend::SimX).unwrap();
+            devs.push(dev);
+        }
+        q.finish().into_iter().map(|r| r.unwrap().result.cycles).sum::<u64>()
+    });
+    println!(
+        "  -> launch-queue aggregate throughput: {:.2}x over sequential ({hw} worker(s))",
+        speedup(&mseq, &mq)
+    );
 }

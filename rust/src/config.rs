@@ -124,6 +124,47 @@ impl MachineConfig {
         }
     }
 
+    /// Validate machine-wide structural limits. The per-warp state the
+    /// machines carry is mask-encoded: thread masks are `u32` (≤ 32 lanes,
+    /// also the `LaneAddrs` capacity on the memory hot path) and scheduler
+    /// masks are `u64` (≤ 64 warps). Every machine constructor
+    /// ([`crate::sim::Simulator`], [`crate::emu::Emulator`],
+    /// [`crate::pocl::VortexDevice`]) enforces this before any warp can
+    /// retire, so a bad configuration fails fast instead of corrupting or
+    /// panicking mid-run.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_threads == 0 || self.num_threads > 32 {
+            return Err(format!(
+                "num_threads must be in 1..=32 (thread masks and lane buffers are 32 wide), got {}",
+                self.num_threads
+            ));
+        }
+        if self.num_warps == 0 || self.num_warps > 64 {
+            return Err(format!(
+                "num_warps must be in 1..=64 (scheduler masks are 64 wide), got {}",
+                self.num_warps
+            ));
+        }
+        if self.num_cores == 0 {
+            return Err("num_cores must be at least 1".into());
+        }
+        for (name, c) in [("icache", &self.icache), ("dcache", &self.dcache)] {
+            if c.line == 0 || !c.line.is_power_of_two() {
+                return Err(format!("{name}.line must be a power of two, got {}", c.line));
+            }
+            // checked: crafted line/ways values must produce Err, never an
+            // arithmetic panic inside the validator itself
+            let way_bytes = c.line.checked_mul(c.ways).unwrap_or(0);
+            if way_bytes == 0 || c.size == 0 || c.size % way_bytes != 0 {
+                return Err(format!(
+                    "{name} geometry invalid: size {} / line {} / ways {}",
+                    c.size, c.line, c.ways
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Total hardware threads in the machine.
     pub fn total_threads(&self) -> u32 {
         self.num_cores * self.num_warps * self.num_threads
@@ -196,5 +237,30 @@ mod tests {
         let mut m = MachineConfig::with_wt(8, 4);
         m.num_cores = 2;
         assert_eq!(m.total_threads(), 64);
+    }
+
+    #[test]
+    fn validate_accepts_paper_sweep() {
+        for (w, t) in MachineConfig::paper_sweep() {
+            MachineConfig::with_wt(w, t).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_rejects_structural_overflows() {
+        assert!(MachineConfig::with_wt(1, 33).validate().is_err());
+        assert!(MachineConfig::with_wt(1, 0).validate().is_err());
+        assert!(MachineConfig::with_wt(65, 1).validate().is_err());
+        let mut m = MachineConfig::with_wt(2, 2);
+        m.num_cores = 0;
+        assert!(m.validate().is_err());
+        let mut m = MachineConfig::with_wt(2, 2);
+        m.dcache.line = 24;
+        assert!(m.validate().is_err());
+        // crafted geometry whose line*ways overflows u32 must Err, not panic
+        let mut m = MachineConfig::with_wt(2, 2);
+        m.dcache.line = 0x8000_0000;
+        m.dcache.ways = 2;
+        assert!(m.validate().is_err());
     }
 }

@@ -85,6 +85,11 @@ pub fn throughput(items: u64, m: &Measurement) -> f64 {
     items as f64 / (m.mean.as_secs_f64().max(1e-12))
 }
 
+/// Speedup of `fast` over `baseline` (mean-over-mean; > 1 means faster).
+pub fn speedup(baseline: &Measurement, fast: &Measurement) -> f64 {
+    baseline.mean.as_secs_f64() / fast.mean.as_secs_f64().max(1e-12)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

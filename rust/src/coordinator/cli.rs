@@ -26,10 +26,15 @@ pub enum Command {
         scale: u32,
         seed: u64,
         warm: bool,
+        /// `--jobs N`: N > 1 enables the parallel multi-core engine
+        /// (workers are capped at the host's available parallelism).
+        jobs: u32,
     },
     Sweep {
         benches: Vec<Bench>,
         seed: u64,
+        /// `--jobs N`: fan the sweep points out over N host threads.
+        jobs: u32,
     },
     Power {
         warps: u32,
@@ -81,6 +86,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut scale = 1u32;
             let mut seed = 0xC0FFEEu64;
             let mut warm = true;
+            let mut jobs = 1u32;
             let mut base: Option<MachineConfig> = None;
             let mut i = 1;
             while i < args.len() {
@@ -97,6 +103,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--cores" => cores = parse_num(take_value(args, &mut i, "--cores")?)?,
                     "--scale" => scale = parse_num(take_value(args, &mut i, "--scale")?)?,
                     "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
+                    "--jobs" => jobs = parse_num(take_value(args, &mut i, "--jobs")?)?.max(1),
                     "--emu" => backend = Backend::Emu,
                     "--no-warm" => warm = false,
                     "--config" => {
@@ -119,11 +126,12 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 cfg.num_threads = threads;
             }
             cfg.num_cores = cores;
-            Ok(Command::Run { bench, cfg, backend, scale, seed, warm })
+            Ok(Command::Run { bench, cfg, backend, scale, seed, warm, jobs })
         }
         "sweep" => {
             let mut benches = Vec::new();
             let mut seed = 0xC0FFEEu64;
+            let mut jobs = 1u32;
             let mut i = 1;
             while i < args.len() {
                 match args[i].as_str() {
@@ -135,6 +143,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                         );
                     }
                     "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
+                    "--jobs" => jobs = parse_num(take_value(args, &mut i, "--jobs")?)?.max(1),
                     other => return Err(CliError(format!("unknown flag `{other}`"))),
                 }
                 i += 1;
@@ -142,7 +151,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             if benches.is_empty() {
                 benches = Bench::ALL.to_vec();
             }
-            Ok(Command::Sweep { benches, seed })
+            Ok(Command::Sweep { benches, seed, jobs })
         }
         "power" => {
             let mut warps = 8u32;
@@ -196,11 +205,16 @@ Vortex: OpenCL-compatible RISC-V GPGPU — full-stack reproduction
 
 USAGE:
   vortex run --bench <name> [--warps W --threads T --cores C] [--emu]
-             [--scale K --seed S --no-warm --config file.toml]
-  vortex sweep [--bench <name>]... [--seed S]     Fig 9 + Fig 10 series
+             [--scale K --seed S --no-warm --config file.toml] [--jobs N]
+  vortex sweep [--bench <name>]... [--seed S] [--jobs N]
+                                                  Fig 9 + Fig 10 series
   vortex power [--warps W --threads T]            Fig 7/8 area/power model
   vortex validate [--artifacts DIR] [--seed S]    golden-model validation
   vortex list                                     benchmarks + paper configs
+
+  --jobs N   run: N > 1 enables the parallel engine (worker threads =
+             min(cores, host threads); bit-identical to serial); sweep:
+             fan configs out over N threads (results unchanged)
 ";
 
 /// Execute a parsed command, writing human-readable output to stdout.
@@ -219,16 +233,27 @@ pub fn execute(cmd: Command) -> i32 {
             }
             0
         }
-        Command::Run { bench, cfg, backend, scale, seed, warm } => {
+        Command::Run { bench, cfg, backend, scale, seed, warm, jobs } => {
+            // reject bad machine configs on the CLI error path, not via the
+            // machine constructors' fail-fast panic
+            if let Err(e) = cfg.validate() {
+                eprintln!("error: invalid machine config: {e}");
+                return 2;
+            }
+            let mode = if jobs > 1 {
+                crate::sim::ExecMode::Parallel
+            } else {
+                crate::sim::ExecMode::Serial
+            };
             println!(
-                "running {} on {}w x {}t x {}c ({:?}, scale {scale}, seed {seed:#x})",
+                "running {} on {}w x {}t x {}c ({:?}, scale {scale}, seed {seed:#x}, {mode:?})",
                 bench.name(),
                 cfg.num_warps,
                 cfg.num_threads,
                 cfg.num_cores,
                 backend
             );
-            match bench.run_scaled(cfg, scale, seed, backend, warm) {
+            match bench.run_scaled_mode(cfg, scale, seed, backend, warm, mode) {
                 Ok(r) => {
                     println!(
                         "cycles {}  launches {}  verified {}",
@@ -249,9 +274,9 @@ pub fn execute(cmd: Command) -> i32 {
                 }
             }
         }
-        Command::Sweep { benches, seed } => {
+        Command::Sweep { benches, seed, jobs } => {
             let configs = sweep::fig9_configs();
-            match sweep::fig9_table(&benches, &configs, seed) {
+            match sweep::fig9_table_jobs(&benches, &configs, seed, jobs as usize) {
                 Ok(table) => {
                     println!("Fig 9 — normalized execution time (norm to 2x2):\n{}", table.render());
                     0
@@ -373,6 +398,27 @@ mod tests {
     #[test]
     fn empty_is_help() {
         assert_eq!(parse(&[]).unwrap(), Command::Help);
+    }
+
+    #[test]
+    fn jobs_flag_parses_and_defaults() {
+        match parse(&argv("run --bench vecadd --jobs 8")).unwrap() {
+            Command::Run { jobs: 8, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("run --bench vecadd")).unwrap() {
+            Command::Run { jobs: 1, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("sweep --jobs 4")).unwrap() {
+            Command::Sweep { jobs: 4, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        // --jobs 0 clamps to 1
+        match parse(&argv("sweep --jobs 0")).unwrap() {
+            Command::Sweep { jobs: 1, .. } => {}
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod pool;
 pub mod quickcheck;
 pub mod report;
 pub mod sweep;

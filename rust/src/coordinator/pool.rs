@@ -1,0 +1,88 @@
+//! Minimal scoped worker pool (in-tree substrate for `rayon`, unavailable
+//! offline): run a vector of independent jobs across up to `jobs` host
+//! threads and return their results **in input order**, so callers stay
+//! deterministic regardless of host scheduling.
+//!
+//! Used by [`crate::pocl::queue::LaunchQueue`] (batched kernel launches)
+//! and [`crate::coordinator::sweep`] (design-space fan-out).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(index, item)` over every item using at most `jobs` threads.
+/// Results come back indexed exactly like the input. `jobs <= 1` runs
+/// inline on the caller's thread (the reference path).
+pub fn run_indexed<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let jobs = jobs.max(1).min(n);
+    if jobs == 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("job taken twice");
+                let r = f(i, item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job never ran"))
+        .collect()
+}
+
+/// A sensible default worker count: the host's available parallelism.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        for jobs in [1usize, 2, 4, 16] {
+            let items: Vec<usize> = (0..37).collect();
+            let out = run_indexed(jobs, items, |i, x| {
+                assert_eq!(i, x);
+                x * x
+            });
+            assert_eq!(out, (0..37).map(|x| x * x).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let out: Vec<u32> = run_indexed(4, Vec::<u32>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_jobs_than_items_is_fine() {
+        let out = run_indexed(64, vec![1, 2, 3], |_, x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

@@ -5,6 +5,7 @@
 //! normalized rows so the bench targets print exactly the series the
 //! paper plots.
 
+use super::pool;
 use super::report::Table;
 use crate::config::MachineConfig;
 use crate::kernels::Bench;
@@ -29,12 +30,23 @@ pub fn fig9_sweep(
     configs: &[(u32, u32)],
     seed: u64,
 ) -> Result<Vec<SweepPoint>, crate::pocl::LaunchError> {
-    let mut rows = Vec::new();
-    for &(w, t) in configs {
+    fig9_sweep_jobs(bench, configs, seed, 1)
+}
+
+/// [`fig9_sweep`] fanned out over up to `jobs` host threads — every sweep
+/// point is an independent device + simulator, so the fan-out changes
+/// wall-clock only, never results (rows come back in config order).
+pub fn fig9_sweep_jobs(
+    bench: Bench,
+    configs: &[(u32, u32)],
+    seed: u64,
+    jobs: usize,
+) -> Result<Vec<SweepPoint>, crate::pocl::LaunchError> {
+    let results = pool::run_indexed(jobs, configs.to_vec(), |_, (w, t)| {
         let cfg = MachineConfig::with_wt(w, t);
         let r = bench.run(cfg, seed, Backend::SimX, true)?;
         assert!(r.verified, "{} failed verification at {w}x{t}", bench.name());
-        rows.push(SweepPoint {
+        Ok(SweepPoint {
             warps: w,
             threads: t,
             cycles: r.cycles,
@@ -42,9 +54,9 @@ pub fn fig9_sweep(
             dcache_hit_rate: r.stats.dcache_hit_rate(),
             divergent_splits: r.stats.divergent_splits,
             barrier_stalls: r.stats.barrier_stall_cycles,
-        });
-    }
-    Ok(rows)
+        })
+    });
+    results.into_iter().collect()
 }
 
 /// Normalize cycles to the `(2, 2)` baseline (the paper's Fig 9 norm).
@@ -81,13 +93,24 @@ pub fn fig9_table(
     configs: &[(u32, u32)],
     seed: u64,
 ) -> Result<Table, crate::pocl::LaunchError> {
+    fig9_table_jobs(benches, configs, seed, 1)
+}
+
+/// [`fig9_table`] with the per-benchmark sweeps fanned out over `jobs`
+/// host threads.
+pub fn fig9_table_jobs(
+    benches: &[Bench],
+    configs: &[(u32, u32)],
+    seed: u64,
+    jobs: usize,
+) -> Result<Table, crate::pocl::LaunchError> {
     let mut header = vec!["config".to_string()];
     header.extend(benches.iter().map(|b| b.name().to_string()));
     let mut table =
         Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
     let mut columns = Vec::new();
     for &b in benches {
-        let rows = fig9_sweep(b, configs, seed)?;
+        let rows = fig9_sweep_jobs(b, configs, seed, jobs)?;
         columns.push(normalize_to_2x2(&rows));
     }
     for (i, &(w, t)) in configs.iter().enumerate() {
@@ -135,5 +158,17 @@ mod tests {
         let s = t.render();
         assert!(s.contains("vecadd"));
         assert!(s.contains("4x4"));
+    }
+
+    #[test]
+    fn sweep_fanout_is_deterministic() {
+        let configs = [(2, 2), (2, 4), (4, 4)];
+        let serial = fig9_sweep_jobs(Bench::VecAdd, &configs, 7, 1).unwrap();
+        let fanned = fig9_sweep_jobs(Bench::VecAdd, &configs, 7, 4).unwrap();
+        assert_eq!(serial.len(), fanned.len());
+        for (a, b) in serial.iter().zip(&fanned) {
+            assert_eq!((a.warps, a.threads, a.cycles, a.warp_instrs),
+                       (b.warps, b.threads, b.cycles, b.warp_instrs));
+        }
     }
 }

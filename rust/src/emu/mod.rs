@@ -56,6 +56,7 @@ pub struct Emulator {
 
 impl Emulator {
     pub fn new(config: MachineConfig) -> Self {
+        config.validate().expect("invalid machine config");
         let cores = (0..config.num_cores)
             .map(|_| EmuCore {
                 warps: (0..config.num_warps)

@@ -6,7 +6,7 @@ use super::exec::{alu, branch_taken, load_extend, store_merge};
 use super::warp::{IpdomEntry, Warp};
 use crate::isa::csr::CsrCtx;
 use crate::isa::{CsrOp, Instr};
-use crate::mem::Memory;
+use crate::mem::MemIo;
 
 /// Newlib-style syscall numbers (RISC-V ABI, matching our NewLib stubs in
 /// [`crate::stack`]).
@@ -44,10 +44,21 @@ impl LaneAddrs {
         LaneAddrs { len: 0, buf: [0; 32] }
     }
 
+    /// Record one lane's address. Capacity is the architectural lane limit
+    /// (32, the thread-mask width); [`crate::config::MachineConfig::validate`]
+    /// rejects wider machines before any warp can retire, so overflow here
+    /// is a machine-invariant violation — flagged in debug builds, dropped
+    /// (never an out-of-bounds write) in release.
     #[inline]
     pub fn push(&mut self, addr: u32) {
-        self.buf[self.len as usize] = addr;
-        self.len += 1;
+        debug_assert!(
+            (self.len as usize) < self.buf.len(),
+            "LaneAddrs overflow: more than 32 lanes in one warp access"
+        );
+        if (self.len as usize) < self.buf.len() {
+            self.buf[self.len as usize] = addr;
+            self.len += 1;
+        }
     }
 
     #[inline]
@@ -166,10 +177,15 @@ pub struct StepCtx<'a> {
 /// Execute one decoded instruction on `warp`, updating architectural state
 /// and memory. `warp.pc` must point at the instruction; on return it holds
 /// the next PC.
-pub fn exec_warp(
+///
+/// Generic over [`MemIo`] so the same semantics serve the functional
+/// emulator (writing [`crate::mem::Memory`] directly) and the multi-core
+/// cycle engine's per-core phase (writing a [`crate::mem::BufferedMem`]
+/// whose stores commit serially at the cycle boundary).
+pub fn exec_warp<M: MemIo>(
     warp: &mut Warp,
     instr: Instr,
-    mem: &mut Memory,
+    mem: &mut M,
     ctx: &mut StepCtx<'_>,
 ) -> Result<StepInfo, EmuError> {
     let pc = warp.pc;
@@ -386,9 +402,9 @@ fn lanes(warp: &Warp) -> impl Iterator<Item = usize> {
 
 /// NewLib-stub syscall dispatch (paper §III-A.2). Arguments follow the
 /// RISC-V ABI: number in `a7`, args in `a0..a2`, result in `a0`.
-fn syscall(
+fn syscall<M: MemIo>(
     warp: &mut Warp,
-    mem: &mut Memory,
+    mem: &mut M,
     ctx: &mut StepCtx<'_>,
     pc: u32,
 ) -> Result<Event, EmuError> {
@@ -436,6 +452,7 @@ fn syscall(
 mod tests {
     use super::*;
     use crate::isa::{csr, AluOp, BranchOp};
+    use crate::mem::Memory;
 
     fn mkctx<'a>(console: &'a mut Vec<u8>, heap: &'a mut u32) -> StepCtx<'a> {
         StepCtx {

@@ -92,8 +92,24 @@ impl Bench {
         backend: Backend,
         warm: bool,
     ) -> Result<BenchResult, LaunchError> {
+        self.run_scaled_mode(cfg, scale, seed, backend, warm, crate::sim::ExecMode::Serial)
+    }
+
+    /// [`Bench::run_scaled`] with an explicit simulator engine — the
+    /// `--jobs` CLI flag routes multi-core machines through
+    /// [`crate::sim::ExecMode::Parallel`].
+    pub fn run_scaled_mode(
+        self,
+        cfg: MachineConfig,
+        scale: u32,
+        seed: u64,
+        backend: Backend,
+        warm: bool,
+        exec_mode: crate::sim::ExecMode,
+    ) -> Result<BenchResult, LaunchError> {
         let mut dev = VortexDevice::new(cfg);
         dev.warm_caches = warm;
+        dev.exec_mode = exec_mode;
         let scale = scale.max(1);
         match self {
             Bench::VecAdd => run_vecadd(&mut dev, scale, seed, backend),

@@ -17,8 +17,10 @@
 //! * [`workloads`] — seeded input generators + host-side references.
 //! * [`power`] — the analytic area/power/energy model standing in for the
 //!   paper's 15 nm Synopsys synthesis flow (Figs 7, 8, 10).
-//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas golden
-//!   models (`artifacts/*.hlo.txt`) for end-to-end output validation.
+//! * [`runtime`] — golden-model runtime executing the AOT-compiled
+//!   JAX/Pallas models (`artifacts/*.hlo.txt`) for end-to-end output
+//!   validation (behind the non-default `golden` feature; tier-1 builds
+//!   offline with it disabled).
 //! * [`coordinator`] — configuration, benchmark driver, design-space sweeps
 //!   and report generation for every table/figure in the paper.
 //!

@@ -6,6 +6,113 @@
 use crate::asm::Program;
 use std::collections::HashMap;
 
+/// The memory operations instruction semantics need ([`crate::emu::step`]).
+///
+/// Implemented directly by [`Memory`] (the functional emulator and the
+/// single-core simulator write through) and by [`BufferedMem`] (the
+/// multi-core engine's per-core phase, which must not mutate the shared
+/// image until the serialized commit).
+pub trait MemIo {
+    fn read_u8(&self, addr: u32) -> u8;
+    fn read_u32(&self, addr: u32) -> u32;
+    fn write_u32(&mut self, addr: u32, v: u32);
+}
+
+impl MemIo for Memory {
+    #[inline]
+    fn read_u8(&self, addr: u32) -> u8 {
+        Memory::read_u8(self, addr)
+    }
+
+    #[inline]
+    fn read_u32(&self, addr: u32) -> u32 {
+        Memory::read_u32(self, addr)
+    }
+
+    #[inline]
+    fn write_u32(&mut self, addr: u32, v: u32) {
+        Memory::write_u32(self, addr, v)
+    }
+}
+
+/// Word-granular store buffer for one core's execution slice: stores are
+/// staged here during the parallel per-core phase and applied to the shared
+/// [`Memory`] in core order at the commit phase, so the final image is
+/// independent of host-thread scheduling.
+#[derive(Debug, Default)]
+pub struct StoreBuffer {
+    /// 4-byte-aligned address → latest word value.
+    pub pending: HashMap<u32, u32>,
+}
+
+impl StoreBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Apply every buffered store to `mem` (within one buffer each address
+    /// holds a single final value, so iteration order is irrelevant).
+    pub fn commit(&self, mem: &mut Memory) {
+        for (&a, &v) in &self.pending {
+            mem.write_u32(a, v);
+        }
+    }
+}
+
+/// Read-through view: reads see the shared base image overlaid with this
+/// core's own pending stores (a warp must observe its earlier stores within
+/// the same slice); writes go to the buffer only.
+pub struct BufferedMem<'a> {
+    pub base: &'a Memory,
+    pub buf: &'a mut StoreBuffer,
+}
+
+impl MemIo for BufferedMem<'_> {
+    #[inline]
+    fn read_u8(&self, addr: u32) -> u8 {
+        if !self.buf.pending.is_empty() {
+            if let Some(v) = self.buf.pending.get(&(addr & !3)) {
+                return (v >> ((addr & 3) * 8)) as u8;
+            }
+        }
+        self.base.read_u8(addr)
+    }
+
+    #[inline]
+    fn read_u32(&self, addr: u32) -> u32 {
+        if addr & 3 == 0 {
+            if !self.buf.pending.is_empty() {
+                if let Some(v) = self.buf.pending.get(&addr) {
+                    return *v;
+                }
+            }
+            return self.base.read_u32(addr);
+        }
+        // unaligned: byte-compose through the buffered view
+        let mut v = 0u32;
+        for i in 0..4 {
+            v |= (MemIo::read_u8(self, addr.wrapping_add(i)) as u32) << (8 * i);
+        }
+        v
+    }
+
+    fn write_u32(&mut self, addr: u32, v: u32) {
+        if addr & 3 == 0 {
+            self.buf.pending.insert(addr, v);
+            return;
+        }
+        // unaligned (never emitted by exec_warp, which aligns first):
+        // read-modify-write the two covering words
+        let lo_a = addr & !3;
+        let hi_a = lo_a.wrapping_add(4);
+        let sh = (addr & 3) * 8;
+        let lo = (MemIo::read_u32(self, lo_a) & !(u32::MAX << sh)) | (v << sh);
+        let hi = (MemIo::read_u32(self, hi_a) & (u32::MAX << sh)) | (v >> (32 - sh));
+        self.buf.pending.insert(lo_a, lo);
+        self.buf.pending.insert(hi_a, hi);
+    }
+}
+
 const PAGE_BITS: u32 = 12;
 const PAGE_SIZE: usize = 1 << PAGE_BITS;
 const PAGE_MASK: u32 = (PAGE_SIZE as u32) - 1;
@@ -184,5 +291,35 @@ mod tests {
         let mut m = Memory::new();
         m.write_u32(0xFFFF_FFFE, 0xAABB_CCDD);
         assert_eq!(m.read_u32(0xFFFF_FFFE), 0xAABB_CCDD);
+    }
+
+    #[test]
+    fn buffered_reads_through_pending_stores() {
+        let mut base = Memory::new();
+        base.write_u32(0x100, 0x1111_1111);
+        base.write_u32(0x104, 0x2222_2222);
+        let mut buf = StoreBuffer::new();
+        let mut bm = BufferedMem { base: &base, buf: &mut buf };
+        // untouched addresses read the base image
+        assert_eq!(MemIo::read_u32(&bm, 0x100), 0x1111_1111);
+        // a buffered store is visible to this view but not to the base
+        MemIo::write_u32(&mut bm, 0x100, 0xDEAD_BEEF);
+        assert_eq!(MemIo::read_u32(&bm, 0x100), 0xDEAD_BEEF);
+        assert_eq!(MemIo::read_u8(&bm, 0x101), 0xBE);
+        assert_eq!(base.read_u32(0x100), 0x1111_1111);
+        // commit applies it
+        let mut shared = base.clone();
+        buf.commit(&mut shared);
+        assert_eq!(shared.read_u32(0x100), 0xDEAD_BEEF);
+        assert_eq!(shared.read_u32(0x104), 0x2222_2222);
+    }
+
+    #[test]
+    fn buffered_unaligned_word_roundtrip() {
+        let base = Memory::new();
+        let mut buf = StoreBuffer::new();
+        let mut bm = BufferedMem { base: &base, buf: &mut buf };
+        MemIo::write_u32(&mut bm, 0x203, 0xCAFE_BABE);
+        assert_eq!(MemIo::read_u32(&bm, 0x203), 0xCAFE_BABE);
     }
 }

@@ -14,15 +14,20 @@
 //!   kernel arguments, generating + assembling the device program, and
 //!   running it on the cycle simulator (or the functional oracle).
 
+pub mod queue;
+
+pub use queue::{LaunchHandle, LaunchQueue, QueuedResult};
+
 use crate::asm::{assemble, Program};
 use crate::config::MachineConfig;
 use crate::emu::step::EmuError;
 use crate::emu::{Emulator, ExitStatus};
 use crate::mem::Memory;
-use crate::sim::{CoreStats, Simulator};
+use crate::sim::{CoreStats, ExecMode, Simulator};
 use crate::stack::spawn::{dcb_words, device_program};
 use crate::stack::{ARGS_ADDR, DCB_ADDR, MAX_ARGS};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Device-buffer handle (`cl_mem` analog).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -99,6 +104,59 @@ impl Platform {
 /// Base of the global-memory buffer arena.
 const BUFFER_BASE: u32 = 0x9000_0000;
 
+/// Run one staged launch to completion on its machine. `mem` is the staged
+/// device memory (DCB + args + buffers); it is moved into the machine for
+/// the run and moved back afterwards, even on error. Shared by
+/// [`VortexDevice::launch`] (in place, on the device's persistent memory)
+/// and [`queue::LaunchQueue`] (on a per-launch snapshot, so many launches
+/// can run concurrently).
+pub(crate) fn execute_launch(
+    config: MachineConfig,
+    mem: &mut Memory,
+    prog: &Program,
+    backend: Backend,
+    warm: Option<(u32, u32)>,
+    exec_mode: ExecMode,
+) -> Result<LaunchResult, LaunchError> {
+    match backend {
+        Backend::SimX => {
+            let mut sim = Simulator::new(config);
+            sim.exec_mode = exec_mode;
+            // move (not clone) device memory into the machine; it moves
+            // back after the run — the clones dominated the launch-path
+            // profile (EXPERIMENTS.md §Perf iteration 1)
+            sim.mem = std::mem::take(mem);
+            sim.load(prog);
+            if let Some((base, len)) = warm {
+                sim.warm_dcache(base, len);
+            }
+            sim.launch(prog.entry());
+            let run = sim.run(u64::MAX);
+            let console = String::from_utf8_lossy(&sim.console).into_owned();
+            *mem = sim.mem; // device memory persists (even on error)
+            let res = run.map_err(LaunchError::Machine)?;
+            if res.status != ExitStatus::Exited(0) {
+                return Err(LaunchError::BadExit(res.status));
+            }
+            Ok(LaunchResult { status: res.status, cycles: res.cycles, stats: res.stats, console })
+        }
+        Backend::Emu => {
+            let mut emu = Emulator::new(config);
+            emu.mem = std::mem::take(mem);
+            emu.load(prog);
+            emu.launch(prog.entry());
+            let run = emu.run(u64::MAX);
+            let console = emu.console_string();
+            *mem = emu.mem; // device memory persists (even on error)
+            let status = run.map_err(LaunchError::Machine)?;
+            if status != ExitStatus::Exited(0) {
+                return Err(LaunchError::BadExit(status));
+            }
+            Ok(LaunchResult { status, cycles: 0, stats: CoreStats::default(), console })
+        }
+    }
+}
+
 /// An OpenCL-style device wrapping one machine configuration.
 pub struct VortexDevice {
     pub config: MachineConfig,
@@ -108,17 +166,22 @@ pub struct VortexDevice {
     /// Pre-warm caches over buffers before each launch (the paper's
     /// evaluation methodology, §V-D).
     pub warm_caches: bool,
-    /// Assembled-program cache keyed by kernel name.
-    program_cache: HashMap<&'static str, Program>,
+    /// Engine for SimX launches run by this device directly.
+    pub exec_mode: ExecMode,
+    /// Assembled-program cache keyed by kernel name (`Arc` so queued
+    /// launches share one immutable image instead of deep-cloning it).
+    program_cache: HashMap<&'static str, Arc<Program>>,
 }
 
 impl VortexDevice {
     pub fn new(config: MachineConfig) -> Self {
+        config.validate().expect("invalid machine config");
         VortexDevice {
             config,
             mem: Memory::new(),
             next_buffer: BUFFER_BASE,
             warm_caches: false,
+            exec_mode: ExecMode::Serial,
             program_cache: HashMap::new(),
         }
     }
@@ -143,6 +206,53 @@ impl VortexDevice {
         self.mem.read_i32_slice(buf.addr, n)
     }
 
+    /// Assemble `kernel` into the program cache if absent. Launches borrow
+    /// the cached image (cloning the Program per launch dominated the
+    /// multi-launch profile — §Perf iteration 4).
+    fn ensure_cached(&mut self, kernel: &Kernel) -> Result<(), LaunchError> {
+        if !self.program_cache.contains_key(kernel.name) {
+            let src = device_program(&kernel.body, &self.config);
+            let p = assemble(&src).map_err(LaunchError::Asm)?;
+            self.program_cache.insert(kernel.name, Arc::new(p));
+        }
+        Ok(())
+    }
+
+    /// Stage launch parameters (DCB + kernel args) into device memory.
+    fn write_launch_params(&mut self, total: u32, args: &[u32]) {
+        self.mem.write_u32_slice(DCB_ADDR, &dcb_words(total, &self.config));
+        for (i, a) in args.iter().enumerate() {
+            self.mem.write_u32(ARGS_ADDR + 4 * i as u32, *a);
+        }
+    }
+
+    /// The buffer-arena range to pre-warm before a launch, if enabled.
+    fn warm_range(&self) -> Option<(u32, u32)> {
+        if self.warm_caches {
+            Some((BUFFER_BASE, self.next_buffer - BUFFER_BASE))
+        } else {
+            None
+        }
+    }
+
+    /// Stage a launch for deferred execution (used by
+    /// [`queue::LaunchQueue::enqueue`]): writes the DCB/args into this
+    /// device's memory and returns a shared handle to the assembled
+    /// program (an `Arc` clone — the image itself is never copied).
+    pub(crate) fn stage(
+        &mut self,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+    ) -> Result<Arc<Program>, LaunchError> {
+        if args.len() > MAX_ARGS as usize {
+            return Err(LaunchError::TooManyArgs(args.len()));
+        }
+        self.ensure_cached(kernel)?;
+        self.write_launch_params(total, args);
+        Ok(Arc::clone(&self.program_cache[kernel.name]))
+    }
+
     /// `clEnqueueNDRangeKernel`: run `kernel` over `total` work items with
     /// the given argument words (buffer addresses or scalars).
     pub fn launch(
@@ -155,68 +265,11 @@ impl VortexDevice {
         if args.len() > MAX_ARGS as usize {
             return Err(LaunchError::TooManyArgs(args.len()));
         }
-        // assemble once per kernel; later launches borrow the cached image
-        // (cloning the Program per launch dominated the multi-launch
-        // profile — §Perf iteration 4)
-        if !self.program_cache.contains_key(kernel.name) {
-            let src = device_program(&kernel.body, &self.config);
-            let p = assemble(&src).map_err(LaunchError::Asm)?;
-            self.program_cache.insert(kernel.name, p);
-        }
-
-        // stage launch parameters into the persistent device memory
-        self.mem.write_u32_slice(DCB_ADDR, &dcb_words(total, &self.config));
-        for (i, a) in args.iter().enumerate() {
-            self.mem.write_u32(ARGS_ADDR + 4 * i as u32, *a);
-        }
-
+        self.ensure_cached(kernel)?;
+        self.write_launch_params(total, args);
+        let warm = self.warm_range();
         let prog = &self.program_cache[kernel.name];
-        match backend {
-            Backend::SimX => {
-                let mut sim = Simulator::new(self.config);
-                // move (not clone) device memory into the machine; it moves
-                // back after the run — the clones dominated the launch-path
-                // profile (EXPERIMENTS.md §Perf iteration 1)
-                sim.mem = std::mem::take(&mut self.mem);
-                sim.load(prog);
-                if self.warm_caches {
-                    let len = self.next_buffer - BUFFER_BASE;
-                    sim.warm_dcache(BUFFER_BASE, len);
-                }
-                sim.launch(prog.entry());
-                let run = sim.run(u64::MAX);
-                self.mem = sim.mem; // device memory persists (even on error)
-                let res = run.map_err(LaunchError::Machine)?;
-                if res.status != ExitStatus::Exited(0) {
-                    return Err(LaunchError::BadExit(res.status));
-                }
-                Ok(LaunchResult {
-                    status: res.status,
-                    cycles: res.cycles,
-                    stats: res.stats,
-                    console: String::from_utf8_lossy(&sim.console).into_owned(),
-                })
-            }
-            Backend::Emu => {
-                let mut emu = Emulator::new(self.config);
-                emu.mem = std::mem::take(&mut self.mem);
-                emu.load(prog);
-                emu.launch(prog.entry());
-                let run = emu.run(u64::MAX);
-                let console = emu.console_string();
-                self.mem = emu.mem; // device memory persists (even on error)
-                let status = run.map_err(LaunchError::Machine)?;
-                if status != ExitStatus::Exited(0) {
-                    return Err(LaunchError::BadExit(status));
-                }
-                Ok(LaunchResult {
-                    status,
-                    cycles: 0,
-                    stats: CoreStats::default(),
-                    console,
-                })
-            }
-        }
+        execute_launch(self.config, &mut self.mem, prog, backend, warm, self.exec_mode)
     }
 }
 

@@ -1,0 +1,208 @@
+//! Batched launch queue: the `clEnqueueNDRangeKernel` + `clFinish` analog
+//! for *many* independent launches.
+//!
+//! [`super::VortexDevice::launch`] serves exactly one launch at a time on
+//! the device's persistent memory. Aggregate throughput (many kernels, many
+//! devices — the ROADMAP's "heavy traffic" scenario) needs launches in
+//! flight concurrently, which is safe because each enqueued launch snapshots
+//! its device memory at enqueue time: the jobs share nothing, so the queue
+//! can schedule them over a pool of `Simulator`/`Emulator` instances and
+//! still return, per launch, exactly what a sequential
+//! [`super::VortexDevice::launch`] would have produced (asserted by
+//! `rust/tests/launch_queue.rs`).
+//!
+//! ```text
+//! let mut q = LaunchQueue::new(jobs);
+//! let h0 = q.enqueue(&mut dev0, &k0, n0, &args0, Backend::SimX)?; // clEnqueueNDRangeKernel
+//! let h1 = q.enqueue(&mut dev1, &k1, n1, &args1, Backend::SimX)?;
+//! let results = q.finish();                                       // clFinish
+//! results[h0.0], results[h1.0]                                    // per-launch LaunchResult + final memory
+//! ```
+
+use super::{execute_launch, Backend, Kernel, LaunchError, LaunchResult, VortexDevice};
+use crate::asm::Program;
+use crate::config::MachineConfig;
+use crate::coordinator::pool;
+use crate::mem::Memory;
+use crate::sim::ExecMode;
+use std::sync::Arc;
+
+/// Index of an enqueued launch; `finish()` returns results at the same
+/// positions (a `cl_event` analog).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaunchHandle(pub usize);
+
+/// One staged, self-contained launch.
+struct QueuedLaunch {
+    config: MachineConfig,
+    /// Snapshot of the device memory with DCB/args/buffers staged.
+    mem: Memory,
+    /// Shared handle to the device's cached program image.
+    prog: Arc<Program>,
+    backend: Backend,
+    warm: Option<(u32, u32)>,
+}
+
+/// Result of one queued launch: the launch outcome plus the final device
+/// memory image (read buffers out of it with
+/// [`Memory::read_i32_slice`]).
+pub struct QueuedResult {
+    pub result: LaunchResult,
+    pub mem: Memory,
+}
+
+/// The queue itself. `jobs` bounds the worker threads used by
+/// [`LaunchQueue::finish`]; results are always returned in enqueue order
+/// and are independent of the worker count.
+pub struct LaunchQueue {
+    jobs: usize,
+    /// Engine used *inside* each launch's simulator. Defaults to serial:
+    /// launch-level parallelism already saturates the host, so nested
+    /// per-core threading usually oversubscribes.
+    pub exec_mode: ExecMode,
+    pending: Vec<QueuedLaunch>,
+}
+
+impl LaunchQueue {
+    pub fn new(jobs: usize) -> Self {
+        LaunchQueue { jobs: jobs.max(1), exec_mode: ExecMode::Serial, pending: Vec::new() }
+    }
+
+    /// A queue sized to the host's available parallelism.
+    pub fn with_default_jobs() -> Self {
+        Self::new(pool::default_jobs())
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// `clEnqueueNDRangeKernel`: stage a launch of `kernel` over `total`
+    /// work items. The device's memory (with the DCB and args written) is
+    /// snapshotted, so later mutations of `device` do not affect this
+    /// launch and many launches from one device may be in flight at once.
+    pub fn enqueue(
+        &mut self,
+        device: &mut VortexDevice,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        backend: Backend,
+    ) -> Result<LaunchHandle, LaunchError> {
+        let prog = device.stage(kernel, total, args)?;
+        self.pending.push(QueuedLaunch {
+            config: device.config,
+            mem: device.mem.clone(),
+            prog,
+            backend,
+            warm: device.warm_range(),
+        });
+        Ok(LaunchHandle(self.pending.len() - 1))
+    }
+
+    /// `clFinish`: run every pending launch to completion (over up to
+    /// `jobs` host threads) and return per-launch results in enqueue order.
+    /// The queue is drained and can be reused.
+    pub fn finish(&mut self) -> Vec<Result<QueuedResult, LaunchError>> {
+        let work = std::mem::take(&mut self.pending);
+        let mode = self.exec_mode;
+        pool::run_indexed(self.jobs, work, move |_i, job| {
+            let mut mem = job.mem;
+            execute_launch(job.config, &mut mem, &job.prog, job.backend, job.warm, mode)
+                .map(|result| QueuedResult { result, mem })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    fn scale_kernel(name: &'static str, factor: u32) -> Kernel {
+        Kernel {
+            name,
+            body: format!(
+                r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)           # in
+    lw t2, 4(t0)           # out
+    slli t3, a0, 2
+    add t4, t1, t3
+    lw t5, 0(t4)
+    li t6, {factor}
+    mul t5, t5, t6
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#
+            ),
+        }
+    }
+
+    #[test]
+    fn queue_matches_sequential_launch() {
+        let n = 24usize;
+        let input: Vec<i32> = (0..n as i32).map(|x| x - 7).collect();
+        let build = || {
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 4));
+            let a = dev.create_buffer(n * 4);
+            let b = dev.create_buffer(n * 4);
+            dev.write_buffer_i32(a, &input);
+            (dev, a, b)
+        };
+        let k3 = scale_kernel("scale3", 3);
+        let k5 = scale_kernel("scale5", 5);
+
+        // sequential reference
+        let (mut d1, a1, b1) = build();
+        let r1 = d1.launch(&k3, n as u32, &[a1.addr, b1.addr], Backend::SimX).unwrap();
+        let (mut d2, a2, b2) = build();
+        let r2 = d2.launch(&k5, n as u32, &[a2.addr, b2.addr], Backend::SimX).unwrap();
+
+        // queued, 4 workers
+        let mut q = LaunchQueue::new(4);
+        let (mut e1, qa1, qb1) = build();
+        let h1 = q.enqueue(&mut e1, &k3, n as u32, &[qa1.addr, qb1.addr], Backend::SimX).unwrap();
+        let (mut e2, qa2, qb2) = build();
+        let h2 = q.enqueue(&mut e2, &k5, n as u32, &[qa2.addr, qb2.addr], Backend::SimX).unwrap();
+        let results = q.finish();
+        assert_eq!(results.len(), 2);
+        assert!(q.is_empty());
+
+        let q1 = results[h1.0].as_ref().unwrap();
+        let q2 = results[h2.0].as_ref().unwrap();
+        assert_eq!(q1.result.cycles, r1.cycles);
+        assert_eq!(q2.result.cycles, r2.cycles);
+        assert_eq!(q1.result.stats, r1.stats);
+        assert_eq!(q1.mem.read_i32_slice(b1.addr, n), d1.read_buffer_i32(b1, n));
+        assert_eq!(q2.mem.read_i32_slice(b2.addr, n), d2.read_buffer_i32(b2, n));
+    }
+
+    #[test]
+    fn queue_errors_stay_per_launch() {
+        let bad = Kernel { name: "bad_asm", body: "kernel_body:\n frobnicate a0\n".into() };
+        let good = scale_kernel("scale2", 2);
+        let mut q = LaunchQueue::new(2);
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 2));
+        let a = dev.create_buffer(16);
+        dev.write_buffer_i32(a, &[1, 2, 3, 4]);
+        let b = dev.create_buffer(16);
+        // the bad kernel fails at enqueue (assembly), not at finish
+        assert!(q.enqueue(&mut dev, &bad, 4, &[a.addr, b.addr], Backend::SimX).is_err());
+        let h = q.enqueue(&mut dev, &good, 4, &[a.addr, b.addr], Backend::SimX).unwrap();
+        let results = q.finish();
+        assert_eq!(results.len(), 1);
+        let out = results[h.0].as_ref().unwrap();
+        assert_eq!(out.mem.read_i32_slice(b.addr, 4), vec![2, 4, 6, 8]);
+    }
+}

@@ -17,7 +17,7 @@ use crate::emu::barrier::{is_global, BarrierTable};
 use crate::emu::step::{exec_warp, EmuError, Event, MemAccess, StepCtx};
 use crate::emu::warp::Warp;
 use crate::isa::{decode, AluOp, Instr};
-use crate::mem::Memory;
+use crate::mem::MemIo;
 
 /// Events the machine (multi-core container) must act on.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -29,9 +29,25 @@ pub enum CoreEvent {
 }
 
 /// Machine-shared mutable context threaded into each core step.
+///
+/// In single-core mode these alias the machine's own console/heap; in the
+/// multi-core engine each core's slice gets private buffers that the
+/// machine merges in core order at the commit phase.
 pub struct MachineShared<'a> {
     pub console: &'a mut Vec<u8>,
     pub heap_end: &'a mut u32,
+}
+
+/// What one core did during an execution slice (`[start, end)` cycles),
+/// reported back to the machine for the serialized commit phase.
+#[derive(Clone, Debug, Default)]
+pub struct SliceReport {
+    /// An `ecall exit` retired: `(cycle, code)`.
+    pub exit: Option<(u64, u32)>,
+    /// Global-barrier arrivals in program order: `(cycle, id, count, warp)`.
+    /// The arriving warp is parked locally; the machine owns the global
+    /// table and releases every participant when the barrier trips (§IV-D).
+    pub barriers: Vec<(u64, u32, u32, u32)>,
 }
 
 /// Fixed syscall cost (rare; host-proxied NewLib stubs).
@@ -168,11 +184,64 @@ impl SimCore {
         next
     }
 
+    /// Run this core alone over cycles `[start, end)` against a read-only
+    /// view of shared memory (stores land in the caller's buffer via `mem`).
+    /// This is the thread-safe half of the two-phase multi-core engine: it
+    /// touches only core-local state plus the `mem`/`shared` buffers handed
+    /// in, so distinct cores' slices can run on distinct host threads.
+    ///
+    /// Returns early on exit, drain, or when every remaining warp is parked
+    /// on a (global) barrier only the machine can release.
+    pub fn run_slice<M: MemIo>(
+        &mut self,
+        start: u64,
+        end: u64,
+        mem: &mut M,
+        shared: &mut MachineShared<'_>,
+    ) -> Result<SliceReport, EmuError> {
+        let mut rep = SliceReport::default();
+        let mut now = start;
+        while now < end {
+            if !self.any_active() {
+                break; // drained
+            }
+            if self.all_blocked_on_barriers() {
+                // only cross-core progress (handled at commit) can wake us
+                self.stats.idle_cycles += end - now;
+                break;
+            }
+            // fast-forward through cycles where no warp of this core can
+            // issue (the machine-level fast-forward only skips whole chunks)
+            if let Some(r) = self.next_ready_cycle() {
+                if r > now {
+                    let target = r.min(end);
+                    self.stats.idle_cycles += target - now;
+                    now = target;
+                    continue;
+                }
+            }
+            match self.step(now, mem, shared)? {
+                Some(CoreEvent::Exit(code)) => {
+                    rep.exit = Some((now, code));
+                    return Ok(rep);
+                }
+                Some(CoreEvent::GlobalBarrier { id, count, warp }) => {
+                    // park until the machine's commit phase releases us
+                    self.scheduler.set_barrier(warp, true);
+                    rep.barriers.push((now, id, count, warp));
+                }
+                None => {}
+            }
+            now += 1;
+        }
+        Ok(rep)
+    }
+
     /// Simulate one cycle. Returns an event the machine must handle.
-    pub fn step(
+    pub fn step<M: MemIo>(
         &mut self,
         now: u64,
-        mem: &mut Memory,
+        mem: &mut M,
         shared: &mut MachineShared<'_>,
     ) -> Result<Option<CoreEvent>, EmuError> {
         self.stats.cycles = now + 1;
@@ -257,8 +326,8 @@ impl SimCore {
             num_warps: self.cfg.num_warps,
             num_threads: self.cfg.num_threads,
             cycle: now,
-            console: shared.console,
-            heap_end: shared.heap_end,
+            console: &mut *shared.console,
+            heap_end: &mut *shared.heap_end,
         };
         let info = exec_warp(&mut self.warps[wi], instr, mem, &mut ctx)?;
         if self.trace.len() < self.trace_limit {

@@ -20,7 +20,7 @@ pub mod scoreboard;
 pub mod smem;
 pub mod stats;
 
-pub use self::core::{CoreEvent, MachineShared, SimCore, TraceEntry};
+pub use self::core::{CoreEvent, MachineShared, SimCore, SliceReport, TraceEntry};
 pub use stats::CoreStats;
 
 use crate::asm::Program;
@@ -28,10 +28,32 @@ use crate::config::MachineConfig;
 use crate::emu::barrier::BarrierTable;
 use crate::emu::step::EmuError;
 use crate::emu::ExitStatus;
-use crate::mem::Memory;
+use crate::mem::{BufferedMem, Memory, StoreBuffer};
+
+/// How the machine steps its cores.
+///
+/// Both modes run the *same* two-phase chunked algorithm on multi-core
+/// machines (per-core phase, then a serialized commit in core-index order),
+/// so they produce bit-identical results; `Parallel` merely runs the
+/// per-core phase on host threads. Single-core machines always use the
+/// classic direct-write stepper (there is nothing to parallelize).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Reference engine: per-core phases run sequentially on one thread.
+    #[default]
+    Serial,
+    /// Per-core phases run concurrently on host threads (scoped).
+    Parallel,
+}
+
+/// Default cycles per chunk between commit points. Large enough to
+/// amortize the per-chunk thread fork/join, small enough that global
+/// barriers release promptly; interacting cores synchronize only at these
+/// boundaries, so both modes share the value for bit-identical timing.
+pub const DEFAULT_CHUNK_CYCLES: u64 = 4096;
 
 /// Result of a simulation run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunResult {
     pub status: ExitStatus,
     /// Total machine cycles.
@@ -52,10 +74,46 @@ pub struct Simulator {
     pub console: Vec<u8>,
     heap_end: u32,
     cycle: u64,
+    /// Serial (reference) or host-parallel per-core stepping.
+    pub exec_mode: ExecMode,
+    /// Cycles per chunk between multi-core commit points.
+    pub chunk_cycles: u64,
+}
+
+/// One core's buffered side effects from an execution slice, merged by the
+/// machine in core-index order so results never depend on host-thread
+/// scheduling.
+struct SliceOut {
+    report: Result<SliceReport, EmuError>,
+    stores: StoreBuffer,
+    console: Vec<u8>,
+    heap_end: u32,
+    heap_touched: bool,
+}
+
+/// The thread-safe per-core phase: run `core` alone over `[start, end)`
+/// against a read-only view of `base`, buffering every shared-state effect.
+fn run_core_slice(
+    core: &mut SimCore,
+    base: &Memory,
+    start: u64,
+    end: u64,
+    heap0: u32,
+) -> SliceOut {
+    let mut stores = StoreBuffer::new();
+    let mut console = Vec::new();
+    let mut heap = heap0;
+    let report = {
+        let mut mem = BufferedMem { base, buf: &mut stores };
+        let mut shared = MachineShared { console: &mut console, heap_end: &mut heap };
+        core.run_slice(start, end, &mut mem, &mut shared)
+    };
+    SliceOut { report, stores, console, heap_end: heap, heap_touched: heap != heap0 }
 }
 
 impl Simulator {
     pub fn new(config: MachineConfig) -> Self {
+        config.validate().expect("invalid machine config");
         Simulator {
             config,
             mem: Memory::new(),
@@ -64,6 +122,8 @@ impl Simulator {
             console: Vec::new(),
             heap_end: 0xC000_0000,
             cycle: 0,
+            exec_mode: ExecMode::Serial,
+            chunk_cycles: DEFAULT_CHUNK_CYCLES,
         }
     }
 
@@ -98,19 +158,49 @@ impl Simulator {
 
     /// Pre-warm every core's D$ over `[base, base+len)` (the paper warmed
     /// caches to reduce simulation time, §V-D).
+    ///
+    /// Iterates by line *count* rather than comparing against `base + len`:
+    /// the naive bound overflows `u32` for ranges near the top of the
+    /// address space (e.g. warming around the `0xC000_0000` heap with a
+    /// large `len`), silently skipping the warm or looping forever.
     pub fn warm_dcache(&mut self, base: u32, len: u32) {
-        let line = self.config.dcache.line;
+        if len == 0 {
+            return;
+        }
+        let line = self.config.dcache.line.max(1);
+        let start = base & !(line - 1);
+        // inclusive last byte, saturated at the top of the address space
+        let last = match base.checked_add(len - 1) {
+            Some(v) => v,
+            None => u32::MAX,
+        };
+        let lines = (last - start) / line + 1;
         for core in &mut self.cores {
-            let mut a = base & !(line - 1);
-            while a < base + len {
+            let mut a = start;
+            for _ in 0..lines {
                 core.dcache.warm(a);
-                a += line;
+                a = a.wrapping_add(line);
             }
         }
     }
 
     /// Run until exit/drain, at most `max_cycles`.
+    ///
+    /// Single-core machines use the classic direct-write stepper; multi-core
+    /// machines use the chunked two-phase engine (identical for
+    /// [`ExecMode::Serial`] and [`ExecMode::Parallel`] up to host threading).
     pub fn run(&mut self, max_cycles: u64) -> Result<RunResult, EmuError> {
+        if self.cores.len() <= 1 {
+            self.run_single(max_cycles)
+        } else {
+            self.run_chunked(max_cycles)
+        }
+    }
+
+    /// Classic single-core engine: one global cycle loop writing shared
+    /// state directly (kept byte-for-byte compatible with the original
+    /// serial semantics and timing).
+    fn run_single(&mut self, max_cycles: u64) -> Result<RunResult, EmuError> {
         let mut exit_code: Option<u32> = None;
         'outer: while self.cycle < max_cycles {
             let any_active = self.cores.iter().any(|c| c.any_active());
@@ -156,6 +246,197 @@ impl Simulator {
             self.cycle += 1;
         }
 
+        Ok(self.finish(exit_code))
+    }
+
+    /// Chunked two-phase multi-core engine.
+    ///
+    /// Each iteration simulates every core independently over a chunk of
+    /// cycles (phase — thread-safe, stores/console/brk buffered), then
+    /// merges the buffered effects and global-barrier arrivals in
+    /// core-index order (commit — serialized). Cores therefore observe each
+    /// other's memory traffic only at chunk boundaries; the warp-level
+    /// primitives (global barriers) are the only cross-core
+    /// synchronization, exactly the contract the generated `pocl_spawn`
+    /// protocol relies on. Serial and Parallel modes share this code path,
+    /// so their results are bit-identical by construction.
+    ///
+    /// Consistency contract (coarser than the old per-cycle multi-core
+    /// loop, but deterministic): (1) cross-core writes that touch the same
+    /// aligned 4-byte *word* within one chunk are resolved by core index —
+    /// this includes byte/halfword stores, which are staged as
+    /// read-modify-writes of their containing word, so cores must not
+    /// share output words between synchronization points (the `pocl_spawn`
+    /// partitioner never does); (2) an `ecall exit` halts the machine at
+    /// the end of its chunk — every core's work through the chunk end is
+    /// committed and counted.
+    fn run_chunked(&mut self, max_cycles: u64) -> Result<RunResult, EmuError> {
+        let chunk = self.chunk_cycles.max(1);
+        let mut exit: Option<(u64, u32)> = None;
+        while self.cycle < max_cycles {
+            if !self.cores.iter().any(|c| c.any_active()) {
+                break;
+            }
+            // deadlock: every active warp everywhere is parked on a barrier
+            // (checked after each commit, when pending releases are applied)
+            if self.cores.iter().all(|c| !c.any_active() || c.all_blocked_on_barriers()) {
+                return Err(EmuError::Deadlock { cycle: self.cycle });
+            }
+            // fast-forward whole chunks where no core can issue
+            if let Some(skip_to) = self.pure_stall_until() {
+                if skip_to > self.cycle {
+                    let skipped = skip_to - self.cycle;
+                    for core in &mut self.cores {
+                        if core.any_active() {
+                            core.stats.idle_cycles += skipped;
+                        }
+                    }
+                    self.cycle = skip_to;
+                    continue;
+                }
+            }
+            let start = self.cycle;
+            let end = (start.saturating_add(chunk)).min(max_cycles);
+            let heap0 = self.heap_end;
+
+            // ---- phase: every core runs its slice against a frozen view ----
+            let (cores, mem_ref) = (&mut self.cores, &self.mem);
+            let outs: Vec<Option<SliceOut>> = match self.exec_mode {
+                ExecMode::Serial => cores
+                    .iter_mut()
+                    .map(|core| {
+                        if core.any_active() {
+                            Some(run_core_slice(core, mem_ref, start, end, heap0))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect(),
+                ExecMode::Parallel => {
+                    // never spawn more workers than the host has threads:
+                    // active cores are dealt round-robin onto worker groups
+                    // (grouping changes scheduling only — each slice is
+                    // independent, so results are unaffected)
+                    let mut outs: Vec<Option<SliceOut>> = Vec::new();
+                    outs.resize_with(cores.len(), || None);
+                    let active: Vec<(usize, &mut SimCore)> = cores
+                        .iter_mut()
+                        .enumerate()
+                        .filter(|(_, c)| c.any_active())
+                        .collect();
+                    let hw = std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1);
+                    let workers = hw.max(1).min(active.len().max(1));
+                    let mut groups: Vec<Vec<(usize, &mut SimCore)>> =
+                        (0..workers).map(|_| Vec::new()).collect();
+                    for (k, item) in active.into_iter().enumerate() {
+                        groups[k % workers].push(item);
+                    }
+                    let buckets: Vec<Vec<(usize, SliceOut)>> = std::thread::scope(|s| {
+                        let handles: Vec<_> = groups
+                            .into_iter()
+                            .map(|group| {
+                                s.spawn(move || {
+                                    group
+                                        .into_iter()
+                                        .map(|(i, core)| {
+                                            (i, run_core_slice(core, mem_ref, start, end, heap0))
+                                        })
+                                        .collect::<Vec<_>>()
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().expect("core worker panicked"))
+                            .collect()
+                    });
+                    for bucket in buckets {
+                        for (i, out) in bucket {
+                            outs[i] = Some(out);
+                        }
+                    }
+                    outs
+                }
+            };
+
+            // ---- commit: merge side effects in core-index order ----
+            let mut first_err: Option<EmuError> = None;
+            // (cycle, core, arrival-seq) orders barrier processing
+            let mut arrivals: Vec<(u64, usize, usize, u32, u32, u32)> = Vec::new();
+            // Program break: a single toucher's value is taken verbatim
+            // (supports shrinking); if several cores moved the break within
+            // one chunk — each bumped from the same chunk-start snapshot —
+            // take the max so the next chunk's allocations stay clear of
+            // every range handed out. Cross-core `brk` races inside one
+            // chunk are outside the engine's contract (the generated
+            // kernels never call sbrk concurrently); serialize via a
+            // global barrier if a workload ever needs it.
+            let mut new_heap: Option<u32> = None;
+            for (c, out) in outs.into_iter().enumerate() {
+                let Some(out) = out else { continue };
+                out.stores.commit(&mut self.mem);
+                self.console.extend_from_slice(&out.console);
+                if out.heap_touched {
+                    new_heap = Some(match new_heap {
+                        None => out.heap_end,
+                        Some(h) => h.max(out.heap_end),
+                    });
+                }
+                match out.report {
+                    Ok(rep) => {
+                        if let Some((cyc, code)) = rep.exit {
+                            let better = match exit {
+                                None => true,
+                                Some((ec, _)) => cyc < ec,
+                            };
+                            if better {
+                                exit = Some((cyc, code));
+                            }
+                        }
+                        for (seq, &(cyc, id, count, warp)) in rep.barriers.iter().enumerate() {
+                            arrivals.push((cyc, c, seq, id, count, warp));
+                        }
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+            }
+            if let Some(h) = new_heap {
+                self.heap_end = h;
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+            arrivals.sort_by_key(|&(cyc, c, seq, ..)| (cyc, c, seq));
+            for (_, c, _, id, count, warp) in arrivals {
+                if let Some(parts) =
+                    self.global_barriers.arrive(id, count, (c as u32, warp))
+                {
+                    for (pc, pw) in parts {
+                        self.cores[pc as usize].release_barrier(pw);
+                    }
+                }
+            }
+            // Every core simulated (and committed) up to the chunk end, so
+            // the machine cycle count covers that work even when a core
+            // exited mid-chunk — otherwise stats like IPC would divide
+            // post-exit instructions by a pre-exit cycle count. Exit timing
+            // is chunk-granular, like every cross-core event here.
+            self.cycle = end;
+            if exit.is_some() {
+                break;
+            }
+        }
+        Ok(self.finish(exit.map(|(_, code)| code)))
+    }
+
+    /// Assemble the machine-wide [`RunResult`] after the run loop stops.
+    fn finish(&self, exit_code: Option<u32>) -> RunResult {
         let status = match exit_code {
             Some(code) => ExitStatus::Exited(code),
             None if self.cores.iter().any(|c| c.any_active()) => ExitStatus::OutOfFuel,
@@ -167,7 +448,7 @@ impl Simulator {
             stats.merge(cs);
         }
         stats.cycles = self.cycle;
-        Ok(RunResult { status, cycles: self.cycle, stats, per_core })
+        RunResult { status, cycles: self.cycle, stats, per_core }
     }
 
     /// If *every* core with active work is only waiting on timers (no warp

@@ -2,7 +2,7 @@
 //! (cycles, instructions, stall breakdown, cache behaviour, occupancy).
 
 /// Counters for one core (aggregated machine-wide by [`super::Simulator`]).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CoreStats {
     /// Cycles this core was powered (same for all cores in lockstep).
     pub cycles: u64,

@@ -10,7 +10,7 @@ use vortex::asm::assemble;
 use vortex::config::MachineConfig;
 use vortex::coordinator::quickcheck::check;
 use vortex::emu::{Emulator, ExitStatus};
-use vortex::sim::Simulator;
+use vortex::sim::{ExecMode, Simulator};
 use vortex::workloads::rng::SplitMix64;
 
 /// Generate a random terminating SIMT program:
@@ -173,6 +173,177 @@ fn benchmarks_agree_between_backends_all_configs() {
             let s = b.run(cfg, 42, Backend::SimX, false).unwrap();
             assert_eq!(e.output, s.output, "{} at {w}x{t}", b.name());
             assert!(e.verified && s.verified);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parallel-engine determinism: ExecMode::Parallel must produce the exact
+// RunResult (status, cycles, stats, per-core stats) and the exact memory
+// image of ExecMode::Serial — the two modes share the chunked two-phase
+// algorithm, differing only in host threading.
+// ---------------------------------------------------------------------
+
+fn run_mode(src: &str, cfg: MachineConfig, mode: ExecMode) -> (Simulator, vortex::sim::RunResult) {
+    let prog = assemble(src).expect("assembles");
+    let mut sim = Simulator::new(cfg);
+    sim.exec_mode = mode;
+    sim.load(&prog);
+    sim.launch(prog.entry());
+    let res = sim.run(100_000_000).expect("runs");
+    (sim, res)
+}
+
+fn assert_modes_agree(src: &str, cfg: MachineConfig, check_region: (u32, usize)) {
+    let (ser_sim, ser) = run_mode(src, cfg, ExecMode::Serial);
+    let (par_sim, par) = run_mode(src, cfg, ExecMode::Parallel);
+    assert_eq!(ser, par, "RunResult must be bit-identical across exec modes");
+    let (base, words) = check_region;
+    assert_eq!(
+        ser_sim.mem.read_u32_slice(base, words),
+        par_sim.mem.read_u32_slice(base, words),
+        "memory image must be bit-identical across exec modes"
+    );
+    assert_eq!(ser_sim.console, par_sim.console);
+}
+
+#[test]
+fn parallel_matches_serial_on_random_multicore_programs() {
+    check("parallel-serial-equivalence", 25, |rng| {
+        let threads = [1u32, 2, 4][rng.below(3) as usize];
+        let warps = [1u32, 2, 4][rng.below(3) as usize];
+        let cores = [2u32, 3, 4][rng.below(3) as usize];
+        let src = random_program(rng, threads);
+        let mut cfg = MachineConfig::with_wt(warps, threads);
+        cfg.num_cores = cores;
+        assert_modes_agree(&src, cfg, (0x9010_0000, (threads << 5) as usize));
+    });
+}
+
+#[test]
+fn parallel_matches_serial_with_global_barriers() {
+    // the Fig 6/§IV-D shape: every core publishes, meets at a global
+    // barrier, core 0 reads the others' data — cross-core memory
+    // visibility plus the machine-owned barrier table
+    let src = r#"
+        csrr t0, 0xCC2
+        slli t1, t0, 2
+        li t2, 0x90000400
+        add t1, t1, t2
+        addi t3, t0, 1
+        sw t3, 0(t1)
+        li t0, 0x80000000
+        csrr t1, 0xFC2
+        bar t0, t1
+        csrr t0, 0xCC2
+        bnez t0, done
+        csrr t1, 0xFC2
+        li t2, 0x90000400
+        li a0, 0
+        sum:
+        lw t3, 0(t2)
+        add a0, a0, t3
+        addi t2, t2, 4
+        addi t1, t1, -1
+        bnez t1, sum
+        li a7, 93
+        ecall
+        done:
+        li t0, 0
+        tmc t0
+    "#;
+    for cores in [2u32, 4] {
+        let mut cfg = MachineConfig::with_wt(2, 2);
+        cfg.num_cores = cores;
+        let (_, ser) = run_mode(src, cfg, ExecMode::Serial);
+        assert_eq!(ser.status, ExitStatus::Exited(cores * (cores + 1) / 2));
+        assert_modes_agree(src, cfg, (0x9000_0400, cores as usize));
+    }
+}
+
+#[test]
+fn parallel_matches_serial_on_scheduler_style_wspawn_scenario() {
+    // the scheduler-scenario shape (wspawn fan-out + per-warp work) on a
+    // multi-core machine
+    let src = r#"
+        la t1, worker
+        li t0, 4
+        wspawn t0, t1
+        worker:
+        csrr t2, 0xCC2          # cid
+        slli t2, t2, 5
+        csrr t3, 0xCC1          # wid
+        slli t4, t3, 2
+        add t2, t2, t4
+        li t4, 0x90000600
+        add t2, t2, t4
+        li t5, 50
+        spin: addi t5, t5, -1
+        bnez t5, spin
+        addi t6, t3, 1
+        sw t6, 0(t2)
+        li t0, 0
+        tmc t0
+    "#;
+    let mut cfg = MachineConfig::with_wt(4, 2);
+    cfg.num_cores = 4;
+    assert_modes_agree(src, cfg, (0x9000_0600, 32));
+}
+
+#[test]
+fn parallel_matches_serial_for_multicore_pocl_benchmarks() {
+    use vortex::kernels::Bench;
+    use vortex::pocl::Backend;
+    for cores in [2u32, 4] {
+        let mut cfg = MachineConfig::with_wt(4, 4);
+        cfg.num_cores = cores;
+        for b in [Bench::VecAdd, Bench::Sgemm] {
+            let s = b
+                .run_scaled_mode(cfg, 1, 42, Backend::SimX, true, ExecMode::Serial)
+                .unwrap();
+            let p = b
+                .run_scaled_mode(cfg, 1, 42, Backend::SimX, true, ExecMode::Parallel)
+                .unwrap();
+            assert!(s.verified && p.verified, "{} at {cores} cores", b.name());
+            assert_eq!(s.output, p.output, "{} output", b.name());
+            assert_eq!(s.cycles, p.cycles, "{} cycles", b.name());
+            assert_eq!(s.stats, p.stats, "{} stats", b.name());
+        }
+    }
+}
+
+#[test]
+fn chunk_size_does_not_change_architectural_results() {
+    // cycle counts legitimately depend on the chunk length (barrier
+    // releases land on chunk boundaries), but architectural results and
+    // serial/parallel agreement must hold for any chunk size
+    let src = r#"
+        csrr t0, 0xCC2
+        slli t1, t0, 2
+        li t2, 0x90000500
+        add t1, t1, t2
+        addi t3, t0, 7
+        sw t3, 0(t1)
+        li t0, 0
+        tmc t0
+    "#;
+    let mut cfg = MachineConfig::with_wt(2, 2);
+    cfg.num_cores = 3;
+    for chunk in [1u64, 7, 64, 100_000] {
+        for mode in [ExecMode::Serial, ExecMode::Parallel] {
+            let prog = assemble(src).unwrap();
+            let mut sim = Simulator::new(cfg);
+            sim.exec_mode = mode;
+            sim.chunk_cycles = chunk;
+            sim.load(&prog);
+            sim.launch(prog.entry());
+            let res = sim.run(1_000_000).unwrap();
+            assert_eq!(res.status, ExitStatus::Drained, "chunk {chunk} {mode:?}");
+            assert_eq!(
+                sim.mem.read_u32_slice(0x9000_0500, 3),
+                vec![7, 8, 9],
+                "chunk {chunk} {mode:?}"
+            );
         }
     }
 }

@@ -5,6 +5,12 @@
 //! Requires `make artifacts` to have produced `artifacts/*.hlo.txt`; tests
 //! skip (with a loud message) when artifacts are absent so `cargo test`
 //! still works in a fresh checkout.
+//!
+//! The whole suite is gated behind the non-default `golden` cargo feature
+//! (`cargo test --features golden`): the default tier-1 build compiles the
+//! runtime but reports it disabled, so no artifacts/PJRT closure is needed
+//! offline. See `rust/src/runtime/mod.rs`.
+#![cfg(feature = "golden")]
 
 use vortex::config::MachineConfig;
 use vortex::kernels::Bench;

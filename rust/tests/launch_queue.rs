@@ -1,0 +1,210 @@
+//! LaunchQueue acceptance: N concurrently-scheduled NDRange launches must
+//! return exactly what N sequential `VortexDevice::launch` calls return —
+//! per-launch status, cycles, stats, console and output buffers — and the
+//! answer must not depend on the worker count.
+
+use vortex::config::MachineConfig;
+use vortex::kernels::bodies;
+use vortex::pocl::{Backend, Kernel, LaunchQueue, VortexDevice};
+use vortex::workloads as wl;
+
+const SEED: u64 = 0xC0FFEE;
+
+/// One self-contained launch: a device with staged buffers, the kernel,
+/// and everything needed to read the output back.
+struct Job {
+    dev: VortexDevice,
+    kernel: Kernel,
+    total: u32,
+    args: Vec<u32>,
+    out_addr: u32,
+    out_len: usize,
+}
+
+/// Eight distinct kernels over distinct data (mix of the Rodinia bodies),
+/// each on its own device: vecadd, saxpy, sgemm, nearn, kmeans, and three
+/// more vecadds at different sizes/seeds.
+fn build_jobs() -> Vec<Job> {
+    let mut jobs = Vec::new();
+
+    let vecadd_job = |n: usize, seed: u64| {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(4, 4));
+        dev.warm_caches = true;
+        let w = wl::vecadd(n, seed);
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        let c = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &w.a);
+        dev.write_buffer_i32(b, &w.b);
+        Job {
+            dev,
+            kernel: bodies::vecadd(),
+            total: n as u32,
+            args: vec![a.addr, b.addr, c.addr],
+            out_addr: c.addr,
+            out_len: n,
+        }
+    };
+
+    jobs.push(vecadd_job(256, SEED));
+
+    {
+        let n = 256usize;
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 4));
+        let w = wl::saxpy(n, SEED);
+        let x = dev.create_buffer(n * 4);
+        let y = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(x, &w.x);
+        dev.write_buffer_i32(y, &w.y);
+        jobs.push(Job {
+            dev,
+            kernel: bodies::saxpy(),
+            total: n as u32,
+            args: vec![x.addr, y.addr, w.alpha as u32],
+            out_addr: y.addr,
+            out_len: n,
+        });
+    }
+
+    {
+        let (m, n, k) = (8usize, 8usize, 8usize);
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(4, 2));
+        let w = wl::sgemm(m, n, k, SEED);
+        let a = dev.create_buffer(m * k * 4);
+        let b = dev.create_buffer(k * n * 4);
+        let c = dev.create_buffer(m * n * 4);
+        dev.write_buffer_i32(a, &w.a);
+        dev.write_buffer_i32(b, &w.b);
+        jobs.push(Job {
+            dev,
+            kernel: bodies::sgemm(),
+            total: (m * n) as u32,
+            args: vec![a.addr, b.addr, c.addr, n as u32, k as u32],
+            out_addr: c.addr,
+            out_len: m * n,
+        });
+    }
+
+    {
+        let n = 128usize;
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 8));
+        let w = wl::nearn(n, SEED);
+        let xs = dev.create_buffer(n * 4);
+        let ys = dev.create_buffer(n * 4);
+        let out = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(xs, &w.xs);
+        dev.write_buffer_i32(ys, &w.ys);
+        jobs.push(Job {
+            dev,
+            kernel: bodies::nearn(),
+            total: n as u32,
+            args: vec![xs.addr, ys.addr, w.qx as u32, w.qy as u32, out.addr],
+            out_addr: out.addr,
+            out_len: n,
+        });
+    }
+
+    {
+        let (n, k) = (128usize, 4usize);
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(4, 4));
+        let w = wl::kmeans(n, k, SEED);
+        let px = dev.create_buffer(n * 4);
+        let py = dev.create_buffer(n * 4);
+        let cx = dev.create_buffer(k * 4);
+        let cy = dev.create_buffer(k * 4);
+        let assign = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(px, &w.px);
+        dev.write_buffer_i32(py, &w.py);
+        dev.write_buffer_i32(cx, &w.cx);
+        dev.write_buffer_i32(cy, &w.cy);
+        jobs.push(Job {
+            dev,
+            kernel: bodies::kmeans_assign(),
+            total: n as u32,
+            args: vec![px.addr, py.addr, cx.addr, cy.addr, k as u32, assign.addr],
+            out_addr: assign.addr,
+            out_len: n,
+        });
+    }
+
+    jobs.push(vecadd_job(512, SEED + 1));
+    jobs.push(vecadd_job(64, SEED + 2));
+    jobs.push(vecadd_job(1024, SEED + 3));
+    jobs
+}
+
+#[test]
+fn eight_queued_launches_match_eight_sequential_launches() {
+    // sequential reference: plain VortexDevice::launch, one at a time
+    let mut seq = Vec::new();
+    for job in &mut build_jobs() {
+        let r = job
+            .dev
+            .launch(&job.kernel, job.total, &job.args, Backend::SimX)
+            .unwrap_or_else(|e| panic!("{}: {e}", job.kernel.name));
+        let out = job.dev.mem.read_i32_slice(job.out_addr, job.out_len);
+        seq.push((r, out));
+    }
+
+    // the same eight launches through the queue, 4 workers
+    let mut q = LaunchQueue::new(4);
+    let mut jobs = build_jobs();
+    let mut handles = Vec::new();
+    for job in &mut jobs {
+        handles.push(
+            q.enqueue(&mut job.dev, &job.kernel, job.total, &job.args, Backend::SimX).unwrap(),
+        );
+    }
+    assert_eq!(q.len(), 8);
+    let results = q.finish();
+    assert_eq!(results.len(), 8);
+
+    for (i, (h, job)) in handles.iter().zip(&jobs).enumerate() {
+        let qr = results[h.0].as_ref().unwrap_or_else(|e| panic!("queued {i}: {e}"));
+        let (ref sr, ref sout) = seq[i];
+        assert_eq!(qr.result.status, sr.status, "status of launch {i}");
+        assert_eq!(qr.result.cycles, sr.cycles, "cycles of launch {i}");
+        assert_eq!(qr.result.stats, sr.stats, "stats of launch {i}");
+        assert_eq!(qr.result.console, sr.console, "console of launch {i}");
+        let qout = qr.mem.read_i32_slice(job.out_addr, job.out_len);
+        assert_eq!(&qout, sout, "output buffer of launch {i}");
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let run_with = |workers: usize| {
+        let mut q = LaunchQueue::new(workers);
+        let mut jobs = build_jobs();
+        for job in &mut jobs {
+            q.enqueue(&mut job.dev, &job.kernel, job.total, &job.args, Backend::SimX).unwrap();
+        }
+        q.finish()
+            .into_iter()
+            .zip(&jobs)
+            .map(|(r, job)| {
+                let r = r.unwrap();
+                (r.result.cycles, r.mem.read_i32_slice(job.out_addr, job.out_len))
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run_with(1), run_with(8));
+}
+
+#[test]
+fn queue_outputs_are_verified_against_host_references() {
+    let n = 256usize;
+    let w = wl::vecadd(n, SEED);
+    let mut dev = VortexDevice::new(MachineConfig::with_wt(4, 4));
+    let a = dev.create_buffer(n * 4);
+    let b = dev.create_buffer(n * 4);
+    let c = dev.create_buffer(n * 4);
+    dev.write_buffer_i32(a, &w.a);
+    dev.write_buffer_i32(b, &w.b);
+    let mut q = LaunchQueue::with_default_jobs();
+    let k = bodies::vecadd();
+    let h = q.enqueue(&mut dev, &k, n as u32, &[a.addr, b.addr, c.addr], Backend::SimX).unwrap();
+    let results = q.finish();
+    let out = results[h.0].as_ref().unwrap().mem.read_i32_slice(c.addr, n);
+    assert_eq!(out, w.expect);
+}

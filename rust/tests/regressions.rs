@@ -1,0 +1,122 @@
+//! Regression tests for the two seed bugfixes shipped with the parallel
+//! engine: the `warm_dcache` address-overflow bug and the missing lane
+//! bound on `LaneAddrs`/`MachineConfig`.
+
+use vortex::asm::assemble;
+use vortex::config::MachineConfig;
+use vortex::sim::Simulator;
+
+// ---------------------------------------------------------------------
+// warm_dcache: `a < base + len` overflowed u32 when the range touched the
+// top of the address space, silently skipping the warm or looping forever.
+// ---------------------------------------------------------------------
+
+#[test]
+fn warm_dcache_survives_address_space_wrap() {
+    // old code: base + len wraps to a tiny value ⇒ `a < base + len` is
+    // false immediately ⇒ nothing warmed (or, for other operand mixes, an
+    // unterminated loop). New code iterates by line count.
+    let mut sim = Simulator::new(MachineConfig::with_wt(1, 1));
+    sim.warm_dcache(0xFFFF_FF00, 0x200); // extends past u32::MAX
+    // the in-range lines really are resident now
+    let acc = sim.cores[0].dcache.access_one(0xFFFF_FF00, false);
+    assert_eq!(acc.misses, 0, "line at the top of the address space must be warm");
+    let acc = sim.cores[0].dcache.access_one(0xFFFF_FFF0, false);
+    assert_eq!(acc.misses, 0);
+}
+
+#[test]
+fn warm_dcache_heap_range_still_warms() {
+    // the motivating case: warming around the 0xC000_0000 heap
+    let mut sim = Simulator::new(MachineConfig::with_wt(1, 4));
+    sim.warm_dcache(0xC000_0000, 4096);
+    let acc = sim.cores[0].dcache.access_one(0xC000_0000, false);
+    assert_eq!(acc.misses, 0);
+}
+
+#[test]
+fn warm_dcache_zero_len_is_noop() {
+    let mut sim = Simulator::new(MachineConfig::with_wt(1, 1));
+    sim.warm_dcache(0x9000_0000, 0);
+    let acc = sim.cores[0].dcache.access_one(0x9000_0000, false);
+    assert_eq!(acc.misses, 1, "nothing should have been warmed");
+}
+
+#[test]
+fn warm_dcache_still_reduces_cycles_end_to_end() {
+    let body = r#"
+        li t2, 0x90000000
+        li t5, 8
+        loop:
+        lw t4, 0(t2)
+        add t6, t4, t4
+        addi t2, t2, 16
+        addi t5, t5, -1
+        bnez t5, loop
+        li t0, 0
+        tmc t0
+    "#;
+    let prog = assemble(body).unwrap();
+    let mut cold = Simulator::new(MachineConfig::with_wt(1, 4));
+    cold.load(&prog);
+    cold.launch(prog.entry());
+    let cold_res = cold.run(100_000).unwrap();
+
+    let mut warm = Simulator::new(MachineConfig::with_wt(1, 4));
+    warm.load(&prog);
+    warm.warm_dcache(0x9000_0000, 256);
+    warm.launch(prog.entry());
+    let warm_res = warm.run(100_000).unwrap();
+    assert!(warm_res.cycles < cold_res.cycles);
+}
+
+// ---------------------------------------------------------------------
+// Lane bound: a config with > 32 lanes used to panic mid-retire in
+// `LaneAddrs::push` (unchecked `buf[self.len]`). Now `MachineConfig::
+// validate` rejects it before any machine is built.
+// ---------------------------------------------------------------------
+
+#[test]
+fn wide_lane_configs_are_rejected_by_validation() {
+    assert!(MachineConfig::with_wt(2, 33).validate().is_err());
+    assert!(MachineConfig::with_wt(2, 64).validate().is_err());
+    // 32 lanes (the paper's maximum sweep point) stays legal
+    assert!(MachineConfig::with_wt(32, 32).validate().is_ok());
+}
+
+#[test]
+#[should_panic(expected = "invalid machine config")]
+fn simulator_refuses_a_64_lane_machine() {
+    let _ = Simulator::new(MachineConfig::with_wt(2, 64));
+}
+
+#[test]
+#[should_panic(expected = "invalid machine config")]
+fn emulator_refuses_a_64_lane_machine() {
+    let _ = vortex::emu::Emulator::new(MachineConfig::with_wt(2, 64));
+}
+
+#[test]
+fn thirty_two_lane_machine_runs_memory_ops_fine() {
+    // the widest legal warp exercises the full LaneAddrs capacity
+    let src = r#"
+        li t0, 32
+        tmc t0
+        csrr t1, 0xCC0
+        slli t2, t1, 2
+        li t3, 0x90000000
+        add t2, t2, t3
+        sw t1, 0(t2)
+        lw t4, 0(t2)
+        li t0, 0
+        tmc t0
+    "#;
+    let prog = assemble(src).unwrap();
+    let mut sim = Simulator::new(MachineConfig::with_wt(1, 32));
+    sim.load(&prog);
+    sim.launch(prog.entry());
+    let res = sim.run(1_000_000).unwrap();
+    assert_eq!(res.status, vortex::emu::ExitStatus::Drained);
+    let got = sim.mem.read_u32_slice(0x9000_0000, 32);
+    assert_eq!(got, (0..32).collect::<Vec<u32>>());
+}
