@@ -1,13 +1,17 @@
 //! §Perf harness: simulator hot-path throughput (simulated instructions
 //! per wall-clock second) plus per-subsystem microbenchmarks. This is the
 //! measurement loop the EXPERIMENTS.md §Perf iteration log is based on.
+//!
+//! `VORTEX_BENCH_SMOKE=1` shrinks workloads and sample counts so CI can
+//! run the whole harness as a fast regression smoke (the determinism
+//! asserts still run at full strength).
 
 use vortex::asm::assemble;
 use vortex::config::MachineConfig;
 use vortex::coordinator::benchkit::{speedup, throughput, Bencher};
 use vortex::emu::Emulator;
 use vortex::kernels::Bench;
-use vortex::pocl::{Backend, LaunchQueue, VortexDevice};
+use vortex::pocl::{Backend, DeviceId, LaunchQueue, VortexDevice};
 use vortex::sim::cache::Cache;
 use vortex::sim::{ExecMode, Simulator};
 use vortex::workloads as wl;
@@ -30,10 +34,15 @@ fn alu_loop_src(iters: u32) -> String {
 }
 
 fn main() {
-    let bencher = Bencher::default();
+    let smoke = std::env::var("VORTEX_BENCH_SMOKE").is_ok();
+    let bencher = if smoke { Bencher::quick() } else { Bencher::default() };
+    if smoke {
+        println!("(smoke mode: reduced workloads, full determinism asserts)");
+    }
 
     // --- end-to-end simulator throughput: ALU-bound warp program ---
-    let prog = assemble(&alu_loop_src(20_000)).unwrap();
+    let alu_iters = if smoke { 2_000 } else { 20_000 };
+    let prog = assemble(&alu_loop_src(alu_iters)).unwrap();
     let cfg = MachineConfig::with_wt(8, 4);
     let m = bencher.bench("simx_alu_loop_8w4t", || {
         let mut sim = Simulator::new(cfg);
@@ -74,6 +83,7 @@ fn main() {
                 .cycles
         });
         let r = bench.run(MachineConfig::with_wt(8, 8), 0xC0FFEE, Backend::SimX, true).unwrap();
+        assert!(r.verified, "{} must verify in the perf harness", bench.name());
         println!(
             "  -> {} simulates {:.2} M cycles/s\n",
             bench.name(),
@@ -82,26 +92,28 @@ fn main() {
     }
 
     // --- subsystem micro: cache access path ---
-    let m = bencher.bench("dcache_warp_access_1M", || {
+    let cache_iters = if smoke { 100_000u32 } else { 1_000_000 };
+    let m = bencher.bench(&format!("dcache_warp_access_{cache_iters}"), || {
         let mut c = Cache::new(vortex::config::CacheConfig::paper_dcache());
         let mut acc = 0u64;
-        for i in 0..1_000_000u32 {
+        for i in 0..cache_iters {
             let a = c.access(&[i * 4, i * 4 + 64, i * 4 + 128, i * 4 + 192], i % 4 == 0);
             acc += a.cycles as u64;
         }
         acc
     });
-    println!("  -> {:.1} M warp-accesses/s", throughput(1_000_000, &m) / 1e6);
+    println!("  -> {:.1} M warp-accesses/s", throughput(cache_iters as u64, &m) / 1e6);
 
     // --- parallel engine: 4-core machine, serial vs parallel stepping ---
+    // (persistent pool: the per-chunk dispatch reuses pinned workers)
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut cfg4 = MachineConfig::with_wt(8, 4);
     cfg4.num_cores = 4;
-    let prog4 = assemble(&alu_loop_src(60_000)).unwrap();
+    let prog4 = assemble(&alu_loop_src(if smoke { 6_000 } else { 60_000 })).unwrap();
     let run_mode = |mode: ExecMode| {
         let mut sim = Simulator::new(cfg4);
         sim.exec_mode = mode;
-        // larger chunks amortize the per-chunk fork/join (no barriers in
+        // larger chunks amortize the per-chunk dispatch (no barriers in
         // this workload; identical for both modes, so still bit-identical)
         sim.chunk_cycles = 16_384;
         sim.load(&prog4);
@@ -118,7 +130,7 @@ fn main() {
     );
 
     // --- launch queue: 8 enqueued kernels vs 8 sequential launches ---
-    let n = 2048usize;
+    let n = if smoke { 512usize } else { 2048 };
     let w = wl::vecadd(n, 0xC0FFEE);
     let make_dev = || {
         let mut dev = VortexDevice::new(MachineConfig::with_wt(8, 4));
@@ -150,7 +162,59 @@ fn main() {
         q.finish().into_iter().map(|r| r.unwrap().result.cycles).sum::<u64>()
     });
     println!(
-        "  -> launch-queue aggregate throughput: {:.2}x over sequential ({hw} worker(s))",
+        "  -> launch-queue aggregate throughput: {:.2}x over sequential ({hw} worker(s))\n",
         speedup(&mseq, &mq)
+    );
+
+    // --- heterogeneous multi-device queue: the Fig 9 mix as one workload ---
+    // One queue owns three distinct (warps × threads) devices; half the
+    // launches are pinned, half go through the deterministic dispatcher.
+    // Every device's stream is bit-identical to sequential launches on it.
+    let het_cfgs = [(2u32, 2u32), (4, 4), (8, 8)];
+    let build_het_dev = |cw: u32, ct: u32| {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(cw, ct));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        let c = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &w.a);
+        dev.write_buffer_i32(b, &w.b);
+        (dev, [a.addr, b.addr, c.addr])
+    };
+    let per_dev = 2usize; // one pinned + one dispatched launch per device
+    let mseq_het = bencher.bench("het_mix_sequential", || {
+        let mut cycles = 0u64;
+        for &(cw, ct) in &het_cfgs {
+            let (mut dev, args) = build_het_dev(cw, ct);
+            for _ in 0..per_dev {
+                cycles += dev.launch(&kernel, n as u32, &args, Backend::SimX).unwrap().cycles;
+            }
+        }
+        cycles
+    });
+    let mq_het = bencher.bench(&format!("het_mix_queued_jobs{hw}"), || {
+        let mut q = LaunchQueue::with_default_jobs();
+        let mut args0 = [0u32; 3];
+        for (i, &(cw, ct)) in het_cfgs.iter().enumerate() {
+            let (dev, args) = build_het_dev(cw, ct);
+            q.add_device(dev);
+            if i == 0 {
+                args0 = args;
+            }
+        }
+        // pinned launch per device (identical buffer layout across devices,
+        // so one argset is valid everywhere)
+        for i in 0..het_cfgs.len() {
+            q.enqueue_on(DeviceId(i), &kernel, n as u32, &args0, Backend::SimX).unwrap();
+        }
+        // dispatcher fills the rest
+        for _ in 0..het_cfgs.len() * (per_dev - 1) {
+            q.enqueue_any(&kernel, n as u32, &args0, Backend::SimX).unwrap();
+        }
+        q.finish().into_iter().map(|r| r.unwrap().result.cycles).sum::<u64>()
+    });
+    println!(
+        "  -> heterogeneous-queue throughput: {:.2}x over sequential ({} devices, {hw} worker(s))",
+        speedup(&mseq_het, &mq_het),
+        het_cfgs.len()
     );
 }

@@ -200,9 +200,30 @@ impl MachineConfig {
     }
 }
 
+/// Validate a host worker count (`--jobs`, [`crate::pocl::LaunchQueue`]).
+///
+/// The same fail-fast contract as [`MachineConfig::validate`]: a zero
+/// worker count used to be silently clamped to 1 by `LaunchQueue::new`,
+/// which hid misconfigured callers (a computed `jobs` underflowing to 0
+/// looked like a deliberate serial run). Constructors `expect` this and
+/// the CLI surfaces it as a clean argument error.
+pub fn validate_jobs(jobs: usize) -> Result<(), String> {
+    if jobs == 0 {
+        return Err("jobs must be at least 1 (0 workers could never drain a queue)".into());
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn validate_jobs_boundary() {
+        assert!(validate_jobs(0).is_err());
+        assert!(validate_jobs(1).is_ok());
+        assert!(validate_jobs(64).is_ok());
+    }
 
     #[test]
     fn paper_cache_geometry() {

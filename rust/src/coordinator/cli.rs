@@ -103,7 +103,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--cores" => cores = parse_num(take_value(args, &mut i, "--cores")?)?,
                     "--scale" => scale = parse_num(take_value(args, &mut i, "--scale")?)?,
                     "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
-                    "--jobs" => jobs = parse_num(take_value(args, &mut i, "--jobs")?)?.max(1),
+                    "--jobs" => jobs = parse_jobs(take_value(args, &mut i, "--jobs")?)?,
                     "--emu" => backend = Backend::Emu,
                     "--no-warm" => warm = false,
                     "--config" => {
@@ -143,7 +143,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                         );
                     }
                     "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
-                    "--jobs" => jobs = parse_num(take_value(args, &mut i, "--jobs")?)?.max(1),
+                    "--jobs" => jobs = parse_jobs(take_value(args, &mut i, "--jobs")?)?,
                     other => return Err(CliError(format!("unknown flag `{other}`"))),
                 }
                 i += 1;
@@ -200,6 +200,14 @@ fn parse_num(s: &str) -> Result<u32, CliError> {
     }
 }
 
+/// `--jobs` shares the machine-config validation path: `--jobs 0` is a
+/// clean argument error (it used to be silently clamped to 1).
+fn parse_jobs(s: &str) -> Result<u32, CliError> {
+    let v = parse_num(s)?;
+    crate::config::validate_jobs(v as usize).map_err(|e| CliError(format!("--jobs: {e}")))?;
+    Ok(v)
+}
+
 pub const HELP: &str = "\
 Vortex: OpenCL-compatible RISC-V GPGPU — full-stack reproduction
 
@@ -214,7 +222,8 @@ USAGE:
 
   --jobs N   run: N > 1 enables the parallel engine (worker threads =
              min(cores, host threads); bit-identical to serial); sweep:
-             fan configs out over N threads (results unchanged)
+             run the configs as one heterogeneous launch queue over N
+             persistent-pool workers (results unchanged). N must be >= 1.
 ";
 
 /// Execute a parsed command, writing human-readable output to stdout.
@@ -414,11 +423,10 @@ mod tests {
             Command::Sweep { jobs: 4, .. } => {}
             other => panic!("{other:?}"),
         }
-        // --jobs 0 clamps to 1
-        match parse(&argv("sweep --jobs 0")).unwrap() {
-            Command::Sweep { jobs: 1, .. } => {}
-            other => panic!("{other:?}"),
-        }
+        // --jobs 0 is a clean argument error, not a silent clamp
+        let err = parse(&argv("sweep --jobs 0")).unwrap_err();
+        assert!(err.0.contains("--jobs"), "error names the flag: {err}");
+        assert!(parse(&argv("run --bench vecadd --jobs 0")).is_err());
     }
 
     #[test]

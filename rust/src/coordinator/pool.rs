@@ -1,17 +1,187 @@
-//! Minimal scoped worker pool (in-tree substrate for `rayon`, unavailable
-//! offline): run a vector of independent jobs across up to `jobs` host
-//! threads and return their results **in input order**, so callers stay
-//! deterministic regardless of host scheduling.
+//! Persistent worker pool (in-tree substrate for `rayon`, unavailable
+//! offline): a fixed set of pinned host threads, spawned once per process,
+//! that executes batches of independent jobs and returns their results
+//! **in input order**, so callers stay deterministic regardless of host
+//! scheduling.
 //!
-//! Used by [`crate::pocl::queue::LaunchQueue`] (batched kernel launches)
-//! and [`crate::coordinator::sweep`] (design-space fan-out).
+//! PR 1 shipped this as a scoped-spawn helper (fresh threads per call);
+//! the chunked simulator engine calls it once per chunk, so thread
+//! creation dominated small-chunk workloads. The pool threads now persist
+//! for the process lifetime and batches are distributed over them.
+//!
+//! Used by [`crate::sim::Simulator`] (per-chunk core slices),
+//! [`crate::pocl::queue::LaunchQueue`] (batched kernel launches) and
+//! [`crate::coordinator::sweep`] (design-space fan-out).
+//!
+//! ## Blocking and nesting
+//!
+//! The submitting thread always participates in draining its own batch,
+//! so a batch completes even when every pool thread is busy (or parked on
+//! another batch). Nested calls — a queued launch whose simulator runs in
+//! [`crate::sim::ExecMode::Parallel`] — therefore cannot deadlock: the
+//! inner call degrades to inline execution if no pool thread is free.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
-/// Run `f(index, item)` over every item using at most `jobs` threads.
-/// Results come back indexed exactly like the input. `jobs <= 1` runs
-/// inline on the caller's thread (the reference path).
+/// A lifetime-erased pool job (see the safety notes in [`run_indexed`]).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    /// Pending tasks + shutdown flag, guarded together.
+    queue: Mutex<(VecDeque<Task>, bool)>,
+    cv: Condvar,
+}
+
+/// A fixed-size set of persistent worker threads.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        });
+        let handles = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("vortex-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    fn submit(&self, task: Task) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.0.push_back(task);
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().1 = true;
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.0.pop_front() {
+                    break t;
+                }
+                if q.1 {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        // A panicking job must not kill the worker; run_indexed records the
+        // panic and re-raises it on the submitting thread.
+        let _ = catch_unwind(AssertUnwindSafe(task));
+    }
+}
+
+/// The process-wide pool, sized to the host's available parallelism.
+/// Spawned lazily on first use and pinned for the process lifetime.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(default_jobs()))
+}
+
+/// Per-batch shared state the helper tasks can touch even after the
+/// submitting call returned (it is reference-counted, not stack-borrowed).
+struct Claim {
+    next: AtomicUsize,
+    n: usize,
+}
+
+/// Stack-borrowed batch state; helper tasks may dereference it **only**
+/// after claiming an unprocessed item (see safety notes below).
+struct Ctx<'a, T, R, F> {
+    slots: &'a [Mutex<Option<T>>],
+    results: &'a [Mutex<Option<R>>],
+    f: &'a F,
+    done: &'a Mutex<usize>,
+    done_cv: &'a Condvar,
+    panicked: &'a AtomicBool,
+    n: usize,
+}
+
+impl<T, R, F> Ctx<'_, T, R, F>
+where
+    F: Fn(usize, T) -> R,
+{
+    /// Process item `i` end to end: take it, run `f`, store the result,
+    /// count completion. Nothing in `self` is touched after the completion
+    /// count is published (that publication is what lets the submitting
+    /// thread return and pop the frame this `Ctx` borrows from).
+    fn run_one(&self, i: usize) {
+        let item = self.slots[i].lock().unwrap().take().expect("job taken twice");
+        match catch_unwind(AssertUnwindSafe(|| (self.f)(i, item))) {
+            Ok(r) => *self.results[i].lock().unwrap() = Some(r),
+            Err(_) => self.panicked.store(true, Ordering::SeqCst),
+        }
+        let mut d = self.done.lock().unwrap();
+        *d += 1;
+        if *d == self.n {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// Entry point for a helper task running on a pool thread.
+///
+/// Claims indices from the shared (ref-counted) counter and processes the
+/// corresponding items. The claim is the liveness gate: `run_indexed`
+/// cannot return before every claimed-and-unfinished item is counted done,
+/// so a successful claim of `i < n` proves the caller's frame — and with
+/// it everything behind `ctx_addr` — is still alive. When the counter is
+/// exhausted the task exits touching only its own `Arc`.
+fn helper_drain<T, R, F>(claim: Arc<Claim>, ctx_addr: usize)
+where
+    F: Fn(usize, T) -> R,
+{
+    loop {
+        let i = claim.next.fetch_add(1, Ordering::Relaxed);
+        if i >= claim.n {
+            return;
+        }
+        // SAFETY: `i < n` was claimed and item `i` is not yet done, so the
+        // submitting thread is still blocked in `run_indexed` and the
+        // `Ctx` it points to outlives this call (argument above).
+        let ctx = unsafe { &*(ctx_addr as *const Ctx<'_, T, R, F>) };
+        ctx.run_one(i);
+    }
+}
+
+/// Run `f(index, item)` over every item using at most `jobs` threads
+/// (the submitting thread plus up to `jobs - 1` pool workers). Results
+/// come back indexed exactly like the input. `jobs <= 1` runs inline on
+/// the caller's thread (the reference path).
 pub fn run_indexed<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,
@@ -26,22 +196,62 @@ where
     if jobs == 1 {
         return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
-    let next = AtomicUsize::new(0);
+
     let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
     let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..jobs {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let item = slots[i].lock().unwrap().take().expect("job taken twice");
-                let r = f(i, item);
-                *results[i].lock().unwrap() = Some(r);
-            });
+    let done = Mutex::new(0usize);
+    let done_cv = Condvar::new();
+    let panicked = AtomicBool::new(false);
+    let claim = Arc::new(Claim { next: AtomicUsize::new(0), n });
+    let ctx = Ctx {
+        slots: &slots,
+        results: &results,
+        f: &f,
+        done: &done,
+        done_cv: &done_cv,
+        panicked: &panicked,
+        n,
+    };
+
+    // Hand up to `jobs - 1` helper tasks to the persistent pool. The task
+    // closure owns only `'static` state (an `Arc` and a raw address); the
+    // stack-borrowed `Ctx` is reached exclusively through `helper_drain`'s
+    // claim-gated dereference, so a straggler task that the pool only
+    // runs *after* this call returned finds the counter exhausted and
+    // exits without touching the dead frame.
+    let ctx_addr = &ctx as *const Ctx<'_, T, R, F> as usize;
+    for _ in 0..jobs - 1 {
+        let claim = Arc::clone(&claim);
+        let task: Box<dyn FnOnce() + Send + '_> =
+            Box::new(move || helper_drain::<T, R, F>(claim, ctx_addr));
+        // SAFETY: erases the closure's lifetime. Sound because the closure
+        // body defers every non-'static access to the claim-gated path
+        // described above.
+        let task: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Task>(task)
+        };
+        global().submit(task);
+    }
+
+    // The submitting thread drains alongside the helpers.
+    loop {
+        let i = claim.next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
         }
-    });
+        ctx.run_one(i);
+    }
+
+    // Wait until every item is done (helpers may still be mid-item).
+    let mut d = done.lock().unwrap();
+    while *d < n {
+        d = done_cv.wait(d).unwrap();
+    }
+    drop(d);
+
+    if panicked.load(Ordering::SeqCst) {
+        panic!("worker pool job panicked");
+    }
     results
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("job never ran"))
@@ -84,5 +294,62 @@ mod tests {
     #[test]
     fn default_jobs_is_positive() {
         assert!(default_jobs() >= 1);
+    }
+
+    #[test]
+    fn pool_persists_across_batches() {
+        // Many small batches over the same global pool; each must complete
+        // and stay ordered (this is the per-chunk simulator pattern).
+        for round in 0..50u64 {
+            let items: Vec<u64> = (0..8).collect();
+            let out = run_indexed(4, items, |_, x| x + round);
+            assert_eq!(out, (0..8).map(|x| x + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn nested_batches_do_not_deadlock() {
+        // Outer batch saturates the pool; each job submits an inner batch.
+        // The submitting thread participates in its own drain, so inner
+        // batches finish even with every pool thread occupied.
+        let items: Vec<u32> = (0..16).collect();
+        let out = run_indexed(default_jobs().max(2), items, |_, x| {
+            let inner: Vec<u32> = (0..5).collect();
+            run_indexed(4, inner, |_, y| y * 2).into_iter().sum::<u32>() + x
+        });
+        let inner_sum: u32 = (0..5).map(|y| y * 2).sum();
+        assert_eq!(out, (0..16).map(|x| inner_sum + x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_job_is_reported_and_pool_survives() {
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_indexed(4, vec![0u32, 1, 2, 3, 4, 5, 6, 7], |_, x| {
+                if x == 3 {
+                    panic!("job 3 exploded");
+                }
+                x
+            })
+        }));
+        assert!(boom.is_err(), "panic must propagate to the submitter");
+        // and the pool still works afterwards
+        let out = run_indexed(4, vec![1, 2, 3], |_, x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn local_pool_shuts_down_cleanly() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.size(), 2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let hits = Arc::clone(&hits);
+            pool.submit(Box::new(move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        // Drop joins the workers after the queue drains.
+        drop(pool);
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
     }
 }

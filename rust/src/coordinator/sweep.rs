@@ -5,11 +5,9 @@
 //! normalized rows so the bench targets print exactly the series the
 //! paper plots.
 
-use super::pool;
 use super::report::Table;
 use crate::config::MachineConfig;
-use crate::kernels::Bench;
-use crate::pocl::Backend;
+use crate::kernels::{plan, Bench};
 use crate::power;
 
 /// One (warps × threads) point of a benchmark sweep.
@@ -33,30 +31,38 @@ pub fn fig9_sweep(
     fig9_sweep_jobs(bench, configs, seed, 1)
 }
 
-/// [`fig9_sweep`] fanned out over up to `jobs` host threads — every sweep
-/// point is an independent device + simulator, so the fan-out changes
-/// wall-clock only, never results (rows come back in config order).
+/// [`fig9_sweep`] as **one heterogeneous-queue workload**: a single
+/// [`crate::pocl::LaunchQueue`] owns one device per `(warps × threads)`
+/// config, every config's launch stream is pinned to its device, and each
+/// round of launches runs over up to `jobs` persistent-pool workers. Each
+/// device's stream executes exactly the sequential launch sequence, so the
+/// fan-out changes wall-clock only, never results (rows come back in
+/// config order, bit-identical for any `jobs`).
 pub fn fig9_sweep_jobs(
     bench: Bench,
     configs: &[(u32, u32)],
     seed: u64,
     jobs: usize,
 ) -> Result<Vec<SweepPoint>, crate::pocl::LaunchError> {
-    let results = pool::run_indexed(jobs, configs.to_vec(), |_, (w, t)| {
-        let cfg = MachineConfig::with_wt(w, t);
-        let r = bench.run(cfg, seed, Backend::SimX, true)?;
-        assert!(r.verified, "{} failed verification at {w}x{t}", bench.name());
-        Ok(SweepPoint {
-            warps: w,
-            threads: t,
-            cycles: r.cycles,
-            warp_instrs: r.stats.warp_instrs,
-            dcache_hit_rate: r.stats.dcache_hit_rate(),
-            divergent_splits: r.stats.divergent_splits,
-            barrier_stalls: r.stats.barrier_stall_cycles,
+    let machine_cfgs: Vec<MachineConfig> =
+        configs.iter().map(|&(w, t)| MachineConfig::with_wt(w, t)).collect();
+    let results = plan::run_sweep_queued(bench, &machine_cfgs, 1, seed, true, jobs)?;
+    Ok(configs
+        .iter()
+        .zip(results)
+        .map(|(&(w, t), r)| {
+            assert!(r.verified, "{} failed verification at {w}x{t}", bench.name());
+            SweepPoint {
+                warps: w,
+                threads: t,
+                cycles: r.cycles,
+                warp_instrs: r.stats.warp_instrs,
+                dcache_hit_rate: r.stats.dcache_hit_rate(),
+                divergent_splits: r.stats.divergent_splits,
+                barrier_stalls: r.stats.barrier_stall_cycles,
+            }
         })
-    });
-    results.into_iter().collect()
+        .collect())
 }
 
 /// Normalize cycles to the `(2, 2)` baseline (the paper's Fig 9 norm).
@@ -169,6 +175,25 @@ mod tests {
         for (a, b) in serial.iter().zip(&fanned) {
             assert_eq!((a.warps, a.threads, a.cycles, a.warp_instrs),
                        (b.warps, b.threads, b.cycles, b.warp_instrs));
+        }
+    }
+
+    #[test]
+    fn queued_sweep_matches_sequential_bench_runs() {
+        // The heterogeneous-queue sweep must report, per config, exactly
+        // what a sequential Bench::run on that config reports — including
+        // an iterative multi-launch benchmark (gaussian: one launch per
+        // pivot, chained through the device's in-order stream).
+        let configs = [(2, 2), (4, 4), (2, 8)];
+        let rows = fig9_sweep_jobs(Bench::Gaussian, &configs, 0xC0FFEE, 4)
+            .unwrap_or_else(|e| panic!("queued sweep failed: {e}"));
+        for (&(w, t), row) in configs.iter().zip(&rows) {
+            let r = Bench::Gaussian
+                .run(MachineConfig::with_wt(w, t), 0xC0FFEE, crate::pocl::Backend::SimX, true)
+                .unwrap();
+            assert!(r.verified);
+            assert_eq!(row.cycles, r.cycles, "{w}x{t} cycles");
+            assert_eq!(row.warp_instrs, r.stats.warp_instrs, "{w}x{t} instrs");
         }
     }
 }

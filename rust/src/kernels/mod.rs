@@ -4,14 +4,18 @@
 //! against the host reference.
 //!
 //! Fig 9/10 of the paper sweep these benchmarks over `(warps × threads)`
-//! design points; [`Bench::run`] is the unit those sweeps invoke.
+//! design points; [`Bench::run`] is the unit those sweeps invoke, and
+//! [`plan::run_sweep_queued`] runs the whole sweep as one
+//! heterogeneous-queue workload. Each benchmark's launch staging lives in
+//! exactly one place — its [`plan::LaunchPlan`] — so both paths issue
+//! identical launch streams.
 
 pub mod bodies;
+pub mod plan;
 
 use crate::config::MachineConfig;
-use crate::pocl::{Backend, Buffer, LaunchError, VortexDevice};
+use crate::pocl::{Backend, LaunchError, VortexDevice};
 use crate::sim::CoreStats;
-use crate::workloads as wl;
 
 /// The benchmark suite (the paper's evaluated subset, §V-B: regular
 /// kernels plus BFS as the irregular one).
@@ -92,12 +96,23 @@ impl Bench {
         backend: Backend,
         warm: bool,
     ) -> Result<BenchResult, LaunchError> {
-        self.run_scaled_mode(cfg, scale, seed, backend, warm, crate::sim::ExecMode::Serial)
+        self.run_scaled_mode(
+            cfg,
+            scale,
+            seed,
+            backend,
+            warm,
+            crate::sim::ExecMode::default_from_env(),
+        )
     }
 
     /// [`Bench::run_scaled`] with an explicit simulator engine — the
     /// `--jobs` CLI flag routes multi-core machines through
     /// [`crate::sim::ExecMode::Parallel`].
+    ///
+    /// Drives the benchmark's [`plan::LaunchPlan`] with direct
+    /// `VortexDevice::launch` calls — the sequential reference the queued
+    /// sweep is asserted bit-identical against.
     pub fn run_scaled_mode(
         self,
         cfg: MachineConfig,
@@ -110,262 +125,39 @@ impl Bench {
         let mut dev = VortexDevice::new(cfg);
         dev.warm_caches = warm;
         dev.exec_mode = exec_mode;
-        let scale = scale.max(1);
-        match self {
-            Bench::VecAdd => run_vecadd(&mut dev, scale, seed, backend),
-            Bench::Saxpy => run_saxpy(&mut dev, scale, seed, backend),
-            Bench::Sgemm => run_sgemm(&mut dev, scale, seed, backend),
-            Bench::Bfs => run_bfs(&mut dev, scale, seed, backend),
-            Bench::Nearn => run_nearn(&mut dev, scale, seed, backend),
-            Bench::Gaussian => run_gaussian(&mut dev, scale, seed, backend),
-            Bench::Kmeans => run_kmeans(&mut dev, scale, seed, backend),
-            Bench::Nw => run_nw(&mut dev, scale, seed, backend),
+        let mut plan = plan::build(self, &mut dev, scale.max(1), seed);
+        let mut acc = Acc::new();
+        while let Some(l) = plan.next(&mut dev) {
+            let r = dev.launch(&l.kernel, l.total, &l.args, backend)?;
+            acc.add(&r);
         }
+        let (verified, output) = plan.verify(&dev);
+        Ok(acc.finish(verified, output))
     }
 }
 
 /// Accumulates multi-launch results (cycles sum; counter merge).
-struct Acc {
+pub(crate) struct Acc {
     cycles: u64,
     stats: CoreStats,
     launches: u32,
 }
 
 impl Acc {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Acc { cycles: 0, stats: CoreStats::default(), launches: 0 }
     }
 
-    fn add(&mut self, r: &crate::pocl::LaunchResult) {
+    pub(crate) fn add(&mut self, r: &crate::pocl::LaunchResult) {
         self.cycles += r.cycles;
         self.stats.merge(&r.stats);
         self.launches += 1;
     }
 
-    fn finish(mut self, verified: bool, output: Vec<i32>) -> BenchResult {
+    pub(crate) fn finish(mut self, verified: bool, output: Vec<i32>) -> BenchResult {
         self.stats.cycles = self.cycles;
         BenchResult { cycles: self.cycles, stats: self.stats, launches: self.launches, verified, output }
     }
-}
-
-fn ibuf(dev: &mut VortexDevice, data: &[i32]) -> Buffer {
-    let b = dev.create_buffer(data.len().max(1) * 4);
-    dev.write_buffer_i32(b, data);
-    b
-}
-
-fn run_vecadd(
-    dev: &mut VortexDevice,
-    scale: u32,
-    seed: u64,
-    backend: Backend,
-) -> Result<BenchResult, LaunchError> {
-    let n = 2048 * scale as usize;
-    let w = wl::vecadd(n, seed);
-    let a = ibuf(dev, &w.a);
-    let b = ibuf(dev, &w.b);
-    let c = dev.create_buffer(n * 4);
-    let mut acc = Acc::new();
-    let r = dev.launch(&bodies::vecadd(), n as u32, &[a.addr, b.addr, c.addr], backend)?;
-    acc.add(&r);
-    let out = dev.read_buffer_i32(c, n);
-    let ok = out == w.expect;
-    Ok(acc.finish(ok, out))
-}
-
-fn run_saxpy(
-    dev: &mut VortexDevice,
-    scale: u32,
-    seed: u64,
-    backend: Backend,
-) -> Result<BenchResult, LaunchError> {
-    let n = 2048 * scale as usize;
-    let w = wl::saxpy(n, seed);
-    let x = ibuf(dev, &w.x);
-    let y = ibuf(dev, &w.y);
-    let mut acc = Acc::new();
-    let r =
-        dev.launch(&bodies::saxpy(), n as u32, &[x.addr, y.addr, w.alpha as u32], backend)?;
-    acc.add(&r);
-    let out = dev.read_buffer_i32(y, n);
-    let ok = out == w.expect;
-    Ok(acc.finish(ok, out))
-}
-
-fn run_sgemm(
-    dev: &mut VortexDevice,
-    scale: u32,
-    seed: u64,
-    backend: Backend,
-) -> Result<BenchResult, LaunchError> {
-    let (m, n, k) = (16 * scale as usize, 16 * scale as usize, 16);
-    let w = wl::sgemm(m, n, k, seed);
-    let a = ibuf(dev, &w.a);
-    let b = ibuf(dev, &w.b);
-    let c = dev.create_buffer(m * n * 4);
-    let mut acc = Acc::new();
-    let r = dev.launch(
-        &bodies::sgemm(),
-        (m * n) as u32,
-        &[a.addr, b.addr, c.addr, n as u32, k as u32],
-        backend,
-    )?;
-    acc.add(&r);
-    let out = dev.read_buffer_i32(c, m * n);
-    let ok = out == w.expect;
-    Ok(acc.finish(ok, out))
-}
-
-fn run_bfs(
-    dev: &mut VortexDevice,
-    scale: u32,
-    seed: u64,
-    backend: Backend,
-) -> Result<BenchResult, LaunchError> {
-    let nodes = 256 * scale as usize;
-    let w = wl::bfs(nodes, 4, seed);
-    let row_ptr = ibuf(dev, &w.row_ptr);
-    let col_idx = ibuf(dev, &w.col_idx);
-    let mut levels_init = vec![-1i32; nodes];
-    levels_init[w.source] = 0;
-    let levels = ibuf(dev, &levels_init);
-    let changed = ibuf(dev, &[0]);
-    let kernel = bodies::bfs_step();
-    let mut acc = Acc::new();
-    let mut cur_level = 0u32;
-    loop {
-        dev.write_buffer_i32(changed, &[0]);
-        let r = dev.launch(
-            &kernel,
-            nodes as u32,
-            &[row_ptr.addr, col_idx.addr, levels.addr, cur_level, changed.addr, w.max_degree],
-            backend,
-        )?;
-        acc.add(&r);
-        if dev.read_buffer_i32(changed, 1)[0] == 0 {
-            break;
-        }
-        cur_level += 1;
-        if cur_level > nodes as u32 {
-            break; // safety: must have converged by now
-        }
-    }
-    let out = dev.read_buffer_i32(levels, nodes);
-    let ok = out == w.expect;
-    Ok(acc.finish(ok, out))
-}
-
-fn run_nearn(
-    dev: &mut VortexDevice,
-    scale: u32,
-    seed: u64,
-    backend: Backend,
-) -> Result<BenchResult, LaunchError> {
-    let n = 2048 * scale as usize;
-    let w = wl::nearn(n, seed);
-    let xs = ibuf(dev, &w.xs);
-    let ys = ibuf(dev, &w.ys);
-    let out_buf = dev.create_buffer(n * 4);
-    let mut acc = Acc::new();
-    let r = dev.launch(
-        &bodies::nearn(),
-        n as u32,
-        &[xs.addr, ys.addr, w.qx as u32, w.qy as u32, out_buf.addr],
-        backend,
-    )?;
-    acc.add(&r);
-    let out = dev.read_buffer_i32(out_buf, n);
-    // host-side final reduce, as in Rodinia nn
-    let argmin = out.iter().enumerate().min_by_key(|(_, &d)| d).map(|(i, _)| i).unwrap_or(0);
-    let ok = out == w.expect && argmin == w.argmin;
-    Ok(acc.finish(ok, out))
-}
-
-fn run_gaussian(
-    dev: &mut VortexDevice,
-    scale: u32,
-    seed: u64,
-    backend: Backend,
-) -> Result<BenchResult, LaunchError> {
-    let n = (8 * scale + 4) as usize;
-    let w = wl::gaussian(n, seed);
-    let a = ibuf(dev, &w.a);
-    let kernel = bodies::gaussian_step();
-    let mut acc = Acc::new();
-    for k in 0..n - 1 {
-        let rows = (n - 1 - k) as u32;
-        let r = dev.launch(&kernel, rows, &[a.addr, n as u32, k as u32], backend)?;
-        acc.add(&r);
-    }
-    let out = dev.read_buffer_i32(a, n * n);
-    let ok = out == w.expect;
-    Ok(acc.finish(ok, out))
-}
-
-fn run_kmeans(
-    dev: &mut VortexDevice,
-    scale: u32,
-    seed: u64,
-    backend: Backend,
-) -> Result<BenchResult, LaunchError> {
-    let n = 1024 * scale as usize;
-    let k = 4usize;
-    let w = wl::kmeans(n, k, seed);
-    let px = ibuf(dev, &w.px);
-    let py = ibuf(dev, &w.py);
-    let cx = ibuf(dev, &w.cx);
-    let cy = ibuf(dev, &w.cy);
-    let assign = dev.create_buffer(n * 4);
-    let mut acc = Acc::new();
-    let r = dev.launch(
-        &bodies::kmeans_assign(),
-        n as u32,
-        &[px.addr, py.addr, cx.addr, cy.addr, k as u32, assign.addr],
-        backend,
-    )?;
-    acc.add(&r);
-    let out = dev.read_buffer_i32(assign, n);
-    let ok = out == w.expect;
-    Ok(acc.finish(ok, out))
-}
-
-fn run_nw(
-    dev: &mut VortexDevice,
-    scale: u32,
-    seed: u64,
-    backend: Backend,
-) -> Result<BenchResult, LaunchError> {
-    let n = 48 * scale as usize;
-    let w = wl::nw(n, seed);
-    let dim = n + 1;
-    // device starts from the gap-penalty initialized score matrix
-    let mut init = vec![0i32; dim * dim];
-    for i in 1..dim {
-        init[i * dim] = -(i as i32) * w.penalty;
-        init[i] = -(i as i32) * w.penalty;
-    }
-    let score = ibuf(dev, &init);
-    let sim = ibuf(dev, &w.sim);
-    let kernel = bodies::nw_diag();
-    let mut acc = Acc::new();
-    for d in 2..=2 * n {
-        let i_start = 1.max(d as i32 - n as i32) as u32;
-        let i_end = n.min(d - 1) as u32; // inclusive
-        if i_end < i_start {
-            continue;
-        }
-        let count = i_end - i_start + 1;
-        let r = dev.launch(
-            &kernel,
-            count,
-            &[score.addr, sim.addr, dim as u32, d as u32, i_start, w.penalty as u32],
-            backend,
-        )?;
-        acc.add(&r);
-    }
-    let out = dev.read_buffer_i32(score, dim * dim);
-    let ok = out == w.expect;
-    Ok(acc.finish(ok, out))
 }
 
 #[cfg(test)]

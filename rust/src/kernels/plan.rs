@@ -1,0 +1,442 @@
+//! Launch plans: each benchmark expressed as a stream of NDRange launches
+//! over one device, staged lazily so the next launch can depend on the
+//! previous one's results (BFS convergence, Gaussian pivots, NW
+//! wavefronts).
+//!
+//! One plan is the single source of truth for a benchmark's staging: the
+//! sequential runner ([`super::Bench::run_scaled_mode`]) drives it with
+//! direct `VortexDevice::launch` calls, and the heterogeneous-queue sweep
+//! ([`run_sweep_queued`]) drives one plan per device through a
+//! [`LaunchQueue`], pinning each config's stream to its device. Both paths
+//! issue the identical launch sequence, so their per-config results are
+//! bit-identical — the property the Fig 9 sweep tests rely on.
+
+use super::{bodies, Acc, Bench, BenchResult};
+use crate::config::MachineConfig;
+use crate::pocl::{Backend, Buffer, Kernel, LaunchError, LaunchQueue, VortexDevice};
+use crate::workloads as wl;
+
+/// One staged NDRange launch.
+pub(crate) struct PlannedLaunch {
+    pub kernel: Kernel,
+    pub total: u32,
+    pub args: Vec<u32>,
+}
+
+/// A benchmark as an in-order launch stream over one device.
+pub(crate) trait LaunchPlan {
+    /// Stage the next launch. Called only after every previously returned
+    /// launch has committed to the device's memory, so the plan may read
+    /// device buffers (convergence flags) to decide. `None` ⇒ stream done.
+    fn next(&mut self, dev: &mut VortexDevice) -> Option<PlannedLaunch>;
+
+    /// Read back the benchmark output and verify it against the host
+    /// reference. Called once, after the stream completed.
+    fn verify(&mut self, dev: &VortexDevice) -> (bool, Vec<i32>);
+}
+
+fn ibuf(dev: &mut VortexDevice, data: &[i32]) -> Buffer {
+    let b = dev.create_buffer(data.len().max(1) * 4);
+    dev.write_buffer_i32(b, data);
+    b
+}
+
+/// Output check beyond bit-equality with `expect`.
+enum Check {
+    Exact,
+    /// Rodinia nn's host-side final reduce: argmin of the distances.
+    NearnArgmin(usize),
+}
+
+/// The regular single-launch kernels.
+struct OneShot {
+    kernel: Kernel,
+    total: u32,
+    args: Vec<u32>,
+    out_addr: u32,
+    out_len: usize,
+    expect: Vec<i32>,
+    check: Check,
+    fired: bool,
+}
+
+impl LaunchPlan for OneShot {
+    fn next(&mut self, _dev: &mut VortexDevice) -> Option<PlannedLaunch> {
+        if self.fired {
+            return None;
+        }
+        self.fired = true;
+        Some(PlannedLaunch {
+            kernel: self.kernel.clone(),
+            total: self.total,
+            args: self.args.clone(),
+        })
+    }
+
+    fn verify(&mut self, dev: &VortexDevice) -> (bool, Vec<i32>) {
+        let out = dev.mem.read_i32_slice(self.out_addr, self.out_len);
+        let extra = match self.check {
+            Check::Exact => true,
+            Check::NearnArgmin(want) => {
+                let argmin = out
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &d)| d)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                argmin == want
+            }
+        };
+        (out == self.expect && extra, out)
+    }
+}
+
+/// Level-synchronous BFS: relaunch while the `changed` flag is set.
+struct BfsPlan {
+    kernel: Kernel,
+    row_ptr: u32,
+    col_idx: u32,
+    levels: u32,
+    changed: Buffer,
+    max_degree: u32,
+    nodes: usize,
+    cur_level: u32,
+    started: bool,
+    expect: Vec<i32>,
+}
+
+impl LaunchPlan for BfsPlan {
+    fn next(&mut self, dev: &mut VortexDevice) -> Option<PlannedLaunch> {
+        if self.started {
+            if dev.read_buffer_i32(self.changed, 1)[0] == 0 {
+                return None;
+            }
+            self.cur_level += 1;
+            if self.cur_level > self.nodes as u32 {
+                return None; // safety: must have converged by now
+            }
+        }
+        self.started = true;
+        dev.write_buffer_i32(self.changed, &[0]);
+        Some(PlannedLaunch {
+            kernel: self.kernel.clone(),
+            total: self.nodes as u32,
+            args: vec![
+                self.row_ptr,
+                self.col_idx,
+                self.levels,
+                self.cur_level,
+                self.changed.addr,
+                self.max_degree,
+            ],
+        })
+    }
+
+    fn verify(&mut self, dev: &VortexDevice) -> (bool, Vec<i32>) {
+        let out = dev.mem.read_i32_slice(self.levels, self.nodes);
+        (out == self.expect, out)
+    }
+}
+
+/// Gaussian elimination: one launch per pivot row.
+struct GaussianPlan {
+    kernel: Kernel,
+    a: u32,
+    n: usize,
+    k: usize,
+    expect: Vec<i32>,
+}
+
+impl LaunchPlan for GaussianPlan {
+    fn next(&mut self, _dev: &mut VortexDevice) -> Option<PlannedLaunch> {
+        if self.k >= self.n - 1 {
+            return None;
+        }
+        let k = self.k;
+        self.k += 1;
+        Some(PlannedLaunch {
+            kernel: self.kernel.clone(),
+            total: (self.n - 1 - k) as u32,
+            args: vec![self.a, self.n as u32, k as u32],
+        })
+    }
+
+    fn verify(&mut self, dev: &VortexDevice) -> (bool, Vec<i32>) {
+        let out = dev.mem.read_i32_slice(self.a, self.n * self.n);
+        (out == self.expect, out)
+    }
+}
+
+/// Needleman–Wunsch: one launch per anti-diagonal wavefront.
+struct NwPlan {
+    kernel: Kernel,
+    score: u32,
+    sim: u32,
+    dim: usize,
+    n: usize,
+    penalty: i32,
+    d: usize,
+    expect: Vec<i32>,
+}
+
+impl LaunchPlan for NwPlan {
+    fn next(&mut self, _dev: &mut VortexDevice) -> Option<PlannedLaunch> {
+        while self.d <= 2 * self.n {
+            let d = self.d;
+            self.d += 1;
+            let i_start = 1.max(d as i32 - self.n as i32) as u32;
+            let i_end = self.n.min(d - 1) as u32; // inclusive
+            if i_end < i_start {
+                continue;
+            }
+            return Some(PlannedLaunch {
+                kernel: self.kernel.clone(),
+                total: i_end - i_start + 1,
+                args: vec![
+                    self.score,
+                    self.sim,
+                    self.dim as u32,
+                    d as u32,
+                    i_start,
+                    self.penalty as u32,
+                ],
+            });
+        }
+        None
+    }
+
+    fn verify(&mut self, dev: &VortexDevice) -> (bool, Vec<i32>) {
+        let out = dev.mem.read_i32_slice(self.score, self.dim * self.dim);
+        (out == self.expect, out)
+    }
+}
+
+/// Build `bench`'s plan on `dev`: allocates and fills the device buffers
+/// (in the same order for every config, so buffer addresses line up across
+/// a heterogeneous device set) and captures the host reference.
+pub(crate) fn build(
+    bench: Bench,
+    dev: &mut VortexDevice,
+    scale: u32,
+    seed: u64,
+) -> Box<dyn LaunchPlan> {
+    match bench {
+        Bench::VecAdd => {
+            let n = 2048 * scale as usize;
+            let w = wl::vecadd(n, seed);
+            let a = ibuf(dev, &w.a);
+            let b = ibuf(dev, &w.b);
+            let c = dev.create_buffer(n * 4);
+            Box::new(OneShot {
+                kernel: bodies::vecadd(),
+                total: n as u32,
+                args: vec![a.addr, b.addr, c.addr],
+                out_addr: c.addr,
+                out_len: n,
+                expect: w.expect,
+                check: Check::Exact,
+                fired: false,
+            })
+        }
+        Bench::Saxpy => {
+            let n = 2048 * scale as usize;
+            let w = wl::saxpy(n, seed);
+            let x = ibuf(dev, &w.x);
+            let y = ibuf(dev, &w.y);
+            Box::new(OneShot {
+                kernel: bodies::saxpy(),
+                total: n as u32,
+                args: vec![x.addr, y.addr, w.alpha as u32],
+                out_addr: y.addr,
+                out_len: n,
+                expect: w.expect,
+                check: Check::Exact,
+                fired: false,
+            })
+        }
+        Bench::Sgemm => {
+            let (m, n, k) = (16 * scale as usize, 16 * scale as usize, 16);
+            let w = wl::sgemm(m, n, k, seed);
+            let a = ibuf(dev, &w.a);
+            let b = ibuf(dev, &w.b);
+            let c = dev.create_buffer(m * n * 4);
+            Box::new(OneShot {
+                kernel: bodies::sgemm(),
+                total: (m * n) as u32,
+                args: vec![a.addr, b.addr, c.addr, n as u32, k as u32],
+                out_addr: c.addr,
+                out_len: m * n,
+                expect: w.expect,
+                check: Check::Exact,
+                fired: false,
+            })
+        }
+        Bench::Bfs => {
+            let nodes = 256 * scale as usize;
+            let w = wl::bfs(nodes, 4, seed);
+            let row_ptr = ibuf(dev, &w.row_ptr);
+            let col_idx = ibuf(dev, &w.col_idx);
+            let mut levels_init = vec![-1i32; nodes];
+            levels_init[w.source] = 0;
+            let levels = ibuf(dev, &levels_init);
+            let changed = ibuf(dev, &[0]);
+            Box::new(BfsPlan {
+                kernel: bodies::bfs_step(),
+                row_ptr: row_ptr.addr,
+                col_idx: col_idx.addr,
+                levels: levels.addr,
+                changed,
+                max_degree: w.max_degree,
+                nodes,
+                cur_level: 0,
+                started: false,
+                expect: w.expect,
+            })
+        }
+        Bench::Nearn => {
+            let n = 2048 * scale as usize;
+            let w = wl::nearn(n, seed);
+            let xs = ibuf(dev, &w.xs);
+            let ys = ibuf(dev, &w.ys);
+            let out_buf = dev.create_buffer(n * 4);
+            Box::new(OneShot {
+                kernel: bodies::nearn(),
+                total: n as u32,
+                args: vec![xs.addr, ys.addr, w.qx as u32, w.qy as u32, out_buf.addr],
+                out_addr: out_buf.addr,
+                out_len: n,
+                expect: w.expect,
+                check: Check::NearnArgmin(w.argmin),
+                fired: false,
+            })
+        }
+        Bench::Gaussian => {
+            let n = (8 * scale + 4) as usize;
+            let w = wl::gaussian(n, seed);
+            let a = ibuf(dev, &w.a);
+            Box::new(GaussianPlan {
+                kernel: bodies::gaussian_step(),
+                a: a.addr,
+                n,
+                k: 0,
+                expect: w.expect,
+            })
+        }
+        Bench::Kmeans => {
+            let n = 1024 * scale as usize;
+            let k = 4usize;
+            let w = wl::kmeans(n, k, seed);
+            let px = ibuf(dev, &w.px);
+            let py = ibuf(dev, &w.py);
+            let cx = ibuf(dev, &w.cx);
+            let cy = ibuf(dev, &w.cy);
+            let assign = dev.create_buffer(n * 4);
+            Box::new(OneShot {
+                kernel: bodies::kmeans_assign(),
+                total: n as u32,
+                args: vec![px.addr, py.addr, cx.addr, cy.addr, k as u32, assign.addr],
+                out_addr: assign.addr,
+                out_len: n,
+                expect: w.expect,
+                check: Check::Exact,
+                fired: false,
+            })
+        }
+        Bench::Nw => {
+            let n = 48 * scale as usize;
+            let w = wl::nw(n, seed);
+            let dim = n + 1;
+            // device starts from the gap-penalty initialized score matrix
+            let mut init = vec![0i32; dim * dim];
+            for i in 1..dim {
+                init[i * dim] = -(i as i32) * w.penalty;
+                init[i] = -(i as i32) * w.penalty;
+            }
+            let score = ibuf(dev, &init);
+            let sim = ibuf(dev, &w.sim);
+            Box::new(NwPlan {
+                kernel: bodies::nw_diag(),
+                score: score.addr,
+                sim: sim.addr,
+                dim,
+                n,
+                penalty: w.penalty,
+                d: 2,
+                expect: w.expect,
+            })
+        }
+    }
+}
+
+/// Run `bench` across `configs` as **one heterogeneous-queue workload**:
+/// a single [`LaunchQueue`] owns one device per config, each config's
+/// launch stream is pinned to its device, and every round of launches is
+/// dispatched over the persistent worker pool by one `finish`. Results
+/// come back per config, in `configs` order, bit-identical to running
+/// `bench` sequentially on each config (same launch streams, same
+/// devices — asserted by the sweep determinism tests).
+pub fn run_sweep_queued(
+    bench: Bench,
+    configs: &[MachineConfig],
+    scale: u32,
+    seed: u64,
+    warm: bool,
+    jobs: usize,
+) -> Result<Vec<BenchResult>, LaunchError> {
+    let scale = scale.max(1);
+    let mut q = LaunchQueue::new(jobs);
+    // Per-launch memory images are never read here (verification reads the
+    // devices' final state), so skip the per-launch snapshot clones.
+    q.stream_snapshots = false;
+    struct Slot {
+        id: crate::pocl::DeviceId,
+        plan: Box<dyn LaunchPlan>,
+        acc: Acc,
+        done: bool,
+    }
+    let mut slots: Vec<Slot> = Vec::with_capacity(configs.len());
+    for &cfg in configs {
+        let mut dev = VortexDevice::new(cfg);
+        dev.warm_caches = warm;
+        let id = q.add_device(dev);
+        let plan = build(bench, q.device_mut(id), scale, seed);
+        slots.push(Slot { id, plan, acc: Acc::new(), done: false });
+    }
+
+    // Rounds: each unfinished config stages its next launch (pinned to its
+    // device); one finish() runs the whole round concurrently. Iterative
+    // benchmarks read their convergence flags from device memory between
+    // rounds — finish() has committed it by then.
+    loop {
+        let mut round: Vec<usize> = Vec::new();
+        for (si, slot) in slots.iter_mut().enumerate() {
+            if slot.done {
+                continue;
+            }
+            match slot.plan.next(q.device_mut(slot.id)) {
+                Some(l) => {
+                    q.enqueue_on(slot.id, &l.kernel, l.total, &l.args, Backend::SimX)?;
+                    round.push(si);
+                }
+                None => slot.done = true,
+            }
+        }
+        if round.is_empty() {
+            break;
+        }
+        let results = q.finish();
+        debug_assert_eq!(results.len(), round.len());
+        for (res, si) in results.into_iter().zip(round) {
+            let qr = res?;
+            slots[si].acc.add(&qr.result);
+        }
+    }
+
+    Ok(slots
+        .into_iter()
+        .map(|mut slot| {
+            let (ok, out) = slot.plan.verify(q.device(slot.id));
+            slot.acc.finish(ok, out)
+        })
+        .collect())
+}

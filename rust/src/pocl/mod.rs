@@ -16,7 +16,7 @@
 
 pub mod queue;
 
-pub use queue::{LaunchHandle, LaunchQueue, QueuedResult};
+pub use queue::{DeviceId, LaunchHandle, LaunchQueue, QueuedResult};
 
 use crate::asm::{assemble, Program};
 use crate::config::MachineConfig;
@@ -71,6 +71,11 @@ pub enum LaunchError {
     Machine(EmuError),
     BadExit(ExitStatus),
     TooManyArgs(usize),
+    /// An unpinned launch was enqueued on a queue that owns no devices.
+    NoDevice,
+    /// An earlier launch on the same in-order device stream failed, so
+    /// this one was not run (its inputs could be inconsistent).
+    Skipped,
 }
 
 impl std::fmt::Display for LaunchError {
@@ -80,6 +85,12 @@ impl std::fmt::Display for LaunchError {
             LaunchError::Machine(e) => write!(f, "device error: {e}"),
             LaunchError::BadExit(s) => write!(f, "kernel did not exit cleanly: {s:?}"),
             LaunchError::TooManyArgs(n) => write!(f, "{n} kernel args (max {MAX_ARGS})"),
+            LaunchError::NoDevice => {
+                write!(f, "queue owns no devices (add_device before enqueue_any)")
+            }
+            LaunchError::Skipped => {
+                write!(f, "launch skipped: an earlier launch on its device stream failed")
+            }
         }
     }
 }
@@ -181,7 +192,7 @@ impl VortexDevice {
             mem: Memory::new(),
             next_buffer: BUFFER_BASE,
             warm_caches: false,
-            exec_mode: ExecMode::Serial,
+            exec_mode: ExecMode::default_from_env(),
             program_cache: HashMap::new(),
         }
     }
@@ -208,8 +219,10 @@ impl VortexDevice {
 
     /// Assemble `kernel` into the program cache if absent. Launches borrow
     /// the cached image (cloning the Program per launch dominated the
-    /// multi-launch profile — §Perf iteration 4).
-    fn ensure_cached(&mut self, kernel: &Kernel) -> Result<(), LaunchError> {
+    /// multi-launch profile — §Perf iteration 4). Also used by
+    /// [`queue::LaunchQueue::enqueue_on`] so assembly errors surface at
+    /// enqueue time, not inside the worker pool.
+    pub(crate) fn ensure_cached(&mut self, kernel: &Kernel) -> Result<(), LaunchError> {
         if !self.program_cache.contains_key(kernel.name) {
             let src = device_program(&kernel.body, &self.config);
             let p = assemble(&src).map_err(LaunchError::Asm)?;

@@ -1,27 +1,47 @@
-//! Batched launch queue: the `clEnqueueNDRangeKernel` + `clFinish` analog
-//! for *many* independent launches.
+//! Multi-device launch queue: the `clEnqueueNDRangeKernel` + `clFinish`
+//! analog over a *heterogeneous* set of devices.
 //!
 //! [`super::VortexDevice::launch`] serves exactly one launch at a time on
-//! the device's persistent memory. Aggregate throughput (many kernels, many
-//! devices — the ROADMAP's "heavy traffic" scenario) needs launches in
-//! flight concurrently, which is safe because each enqueued launch snapshots
-//! its device memory at enqueue time: the jobs share nothing, so the queue
-//! can schedule them over a pool of `Simulator`/`Emulator` instances and
-//! still return, per launch, exactly what a sequential
-//! [`super::VortexDevice::launch`] would have produced (asserted by
-//! `rust/tests/launch_queue.rs`).
+//! the device's persistent memory. Aggregate throughput (many kernels,
+//! many devices — the ROADMAP's "heavy traffic" scenario, and the paper's
+//! Fig 9 sweep viewed as one workload) needs launches in flight
+//! concurrently. The queue supports two kinds of work:
+//!
+//! * **Snapshot launches** ([`LaunchQueue::enqueue`]) — the PR 1 form: the
+//!   caller keeps the device, the queue snapshots its staged memory, and
+//!   every snapshot is an independent job.
+//! * **Owned-device launches** — the queue owns N devices with possibly
+//!   heterogeneous [`MachineConfig`]s ([`LaunchQueue::add_device`]).
+//!   Launches either pin a device ([`LaunchQueue::enqueue_on`]) or let the
+//!   dispatcher place them ([`LaunchQueue::enqueue_any`]). Launches bound
+//!   to one device form an *in-order stream* (the OpenCL in-order command
+//!   queue semantic): each sees its predecessor's memory, and the device's
+//!   memory advances at [`LaunchQueue::finish`] — which is what lets the
+//!   iterative Rodinia benchmarks route through the queue.
+//!
+//! Scheduling invariant: a device stream executes literally by calling
+//! `VortexDevice::launch` in enqueue order, so every launch's result is
+//! **bit-identical** to sequential launches on the device that ran it
+//! (asserted in `rust/tests/launch_queue.rs`). The dispatcher for unpinned
+//! launches is a deterministic work-stealing plan: each launch goes to the
+//! least-loaded device at enqueue time (work items assigned this batch;
+//! ties break to the lowest device index), so placement depends only on
+//! the enqueue sequence — never on host timing — while `finish` workers
+//! steal whole streams from a shared index.
 //!
 //! ```text
 //! let mut q = LaunchQueue::new(jobs);
-//! let h0 = q.enqueue(&mut dev0, &k0, n0, &args0, Backend::SimX)?; // clEnqueueNDRangeKernel
-//! let h1 = q.enqueue(&mut dev1, &k1, n1, &args1, Backend::SimX)?;
-//! let results = q.finish();                                       // clFinish
-//! results[h0.0], results[h1.0]                                    // per-launch LaunchResult + final memory
+//! let d0 = q.add_device(VortexDevice::new(MachineConfig::with_wt(2, 2)));
+//! let d1 = q.add_device(VortexDevice::new(MachineConfig::with_wt(8, 8)));
+//! let h0 = q.enqueue_on(d0, &k0, n0, &args0, Backend::SimX)?;  // pinned
+//! let (h1, dev) = q.enqueue_any(&k1, n1, &args1, Backend::SimX)?; // placed
+//! let results = q.finish();                                    // clFinish
+//! results[h0.0], results[h1.0]   // per-launch result + memory + device
 //! ```
 
 use super::{execute_launch, Backend, Kernel, LaunchError, LaunchResult, VortexDevice};
 use crate::asm::Program;
-use crate::config::MachineConfig;
+use crate::config::{self, MachineConfig};
 use crate::coordinator::pool;
 use crate::mem::Memory;
 use crate::sim::ExecMode;
@@ -32,8 +52,12 @@ use std::sync::Arc;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LaunchHandle(pub usize);
 
-/// One staged, self-contained launch.
-struct QueuedLaunch {
+/// Index of a queue-owned device (a `cl_device_id` analog).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeviceId(pub usize);
+
+/// One staged, self-contained snapshot launch.
+struct SnapshotLaunch {
     config: MachineConfig,
     /// Snapshot of the device memory with DCB/args/buffers staged.
     mem: Memory,
@@ -43,12 +67,46 @@ struct QueuedLaunch {
     warm: Option<(u32, u32)>,
 }
 
-/// Result of one queued launch: the launch outcome plus the final device
-/// memory image (read buffers out of it with
-/// [`Memory::read_i32_slice`]).
+/// One launch bound to an owned device's in-order stream. Staged lazily:
+/// DCB/args are written by `VortexDevice::launch` when the stream reaches
+/// it, so it observes every predecessor's memory effects.
+struct OwnedLaunch {
+    kernel: Kernel,
+    total: u32,
+    args: Vec<u32>,
+    backend: Backend,
+}
+
+enum Pending {
+    Snapshot(SnapshotLaunch),
+    Owned { device: usize, launch: OwnedLaunch },
+}
+
+/// Result of one queued launch: the launch outcome, the device memory
+/// image after it (read buffers out of it with
+/// [`Memory::read_i32_slice`]; empty for owned-stream launches when
+/// [`LaunchQueue::stream_snapshots`] is off), and the owned device that
+/// ran it (`None` for snapshot launches).
 pub struct QueuedResult {
     pub result: LaunchResult,
     pub mem: Memory,
+    pub device: Option<DeviceId>,
+}
+
+/// A unit of parallel work inside `finish`: either one snapshot launch or
+/// one owned device's whole in-order stream.
+enum Stream {
+    Snapshot { idx: usize, job: SnapshotLaunch },
+    Device { di: usize, dev: Box<VortexDevice>, items: Vec<(usize, OwnedLaunch)> },
+}
+
+enum StreamOut {
+    Snapshot { idx: usize, out: Result<QueuedResult, LaunchError> },
+    Device {
+        di: usize,
+        dev: Box<VortexDevice>,
+        outs: Vec<(usize, Result<QueuedResult, LaunchError>)>,
+    },
 }
 
 /// The queue itself. `jobs` bounds the worker threads used by
@@ -56,16 +114,43 @@ pub struct QueuedResult {
 /// and are independent of the worker count.
 pub struct LaunchQueue {
     jobs: usize,
-    /// Engine used *inside* each launch's simulator. Defaults to serial:
-    /// launch-level parallelism already saturates the host, so nested
-    /// per-core threading usually oversubscribes.
+    /// Engine used *inside* each snapshot launch's simulator. Defaults to
+    /// the process-wide [`ExecMode::default_from_env`]: launch-level
+    /// parallelism already saturates the host, so nested per-core
+    /// threading usually oversubscribes. Owned-device launches use the
+    /// device's own `exec_mode` (they must match sequential launches
+    /// exactly).
     pub exec_mode: ExecMode,
-    pending: Vec<QueuedLaunch>,
+    /// Snapshot the device memory into every owned-stream
+    /// [`QueuedResult::mem`]? Defaults to `true`. Set `false` when only
+    /// the stream's *final* state matters (still available from
+    /// [`LaunchQueue::device`] after `finish`) — e.g. the Fig 9 sweep,
+    /// where per-launch images of iterative benchmarks would otherwise be
+    /// cloned dozens of times and dropped unread. When `false`,
+    /// owned-stream results carry an empty `Memory`.
+    pub stream_snapshots: bool,
+    devices: Vec<VortexDevice>,
+    /// Work items (NDRange sizes) assigned per device in the current
+    /// batch — the deterministic dispatcher's load metric.
+    assigned_load: Vec<u64>,
+    pending: Vec<Pending>,
 }
 
 impl LaunchQueue {
+    /// A queue with up to `jobs` finish-time workers. Panics on `jobs ==
+    /// 0` through the same validation path as machine construction
+    /// ([`config::validate_jobs`]); PR 1 silently clamped it to 1, hiding
+    /// callers whose computed worker count underflowed.
     pub fn new(jobs: usize) -> Self {
-        LaunchQueue { jobs: jobs.max(1), exec_mode: ExecMode::Serial, pending: Vec::new() }
+        config::validate_jobs(jobs).expect("invalid launch queue config");
+        LaunchQueue {
+            jobs,
+            exec_mode: ExecMode::default_from_env(),
+            stream_snapshots: true,
+            devices: Vec::new(),
+            assigned_load: Vec::new(),
+            pending: Vec::new(),
+        }
     }
 
     /// A queue sized to the host's available parallelism.
@@ -85,10 +170,34 @@ impl LaunchQueue {
         self.pending.is_empty()
     }
 
-    /// `clEnqueueNDRangeKernel`: stage a launch of `kernel` over `total`
-    /// work items. The device's memory (with the DCB and args written) is
-    /// snapshotted, so later mutations of `device` do not affect this
-    /// launch and many launches from one device may be in flight at once.
+    /// Adopt `dev` into the queue's device set (heterogeneous configs
+    /// welcome) and return its id.
+    pub fn add_device(&mut self, dev: VortexDevice) -> DeviceId {
+        self.devices.push(dev);
+        self.assigned_load.push(0);
+        DeviceId(self.devices.len() - 1)
+    }
+
+    /// Number of owned devices.
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Borrow an owned device (read buffers back after `finish`).
+    pub fn device(&self, id: DeviceId) -> &VortexDevice {
+        &self.devices[id.0]
+    }
+
+    /// Mutably borrow an owned device (stage buffers between batches).
+    pub fn device_mut(&mut self, id: DeviceId) -> &mut VortexDevice {
+        &mut self.devices[id.0]
+    }
+
+    /// `clEnqueueNDRangeKernel` (snapshot form): stage a launch of
+    /// `kernel` over `total` work items on a caller-owned device. The
+    /// device's memory (with the DCB and args written) is snapshotted, so
+    /// later mutations of `device` do not affect this launch and many
+    /// launches from one device may be in flight at once.
     pub fn enqueue(
         &mut self,
         device: &mut VortexDevice,
@@ -98,27 +207,163 @@ impl LaunchQueue {
         backend: Backend,
     ) -> Result<LaunchHandle, LaunchError> {
         let prog = device.stage(kernel, total, args)?;
-        self.pending.push(QueuedLaunch {
+        self.pending.push(Pending::Snapshot(SnapshotLaunch {
             config: device.config,
             mem: device.mem.clone(),
             prog,
             backend,
             warm: device.warm_range(),
+        }));
+        Ok(LaunchHandle(self.pending.len() - 1))
+    }
+
+    /// Enqueue a launch pinned to owned device `id`. Launches pinned to
+    /// the same device run in enqueue order, each observing its
+    /// predecessor's memory (the in-order command-queue semantic); if a
+    /// launch fails, its successors on that stream are not run and report
+    /// [`LaunchError::Skipped`] — exactly where a sequential `launch()?`
+    /// caller would have stopped. Assembly errors surface here, not at
+    /// `finish`.
+    pub fn enqueue_on(
+        &mut self,
+        id: DeviceId,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        backend: Backend,
+    ) -> Result<LaunchHandle, LaunchError> {
+        if args.len() > crate::stack::MAX_ARGS as usize {
+            return Err(LaunchError::TooManyArgs(args.len()));
+        }
+        self.devices[id.0].ensure_cached(kernel)?;
+        self.assigned_load[id.0] += total as u64;
+        self.pending.push(Pending::Owned {
+            device: id.0,
+            launch: OwnedLaunch {
+                kernel: kernel.clone(),
+                total,
+                args: args.to_vec(),
+                backend,
+            },
         });
         Ok(LaunchHandle(self.pending.len() - 1))
     }
 
+    /// Enqueue an unpinned launch: the dispatcher places it on the
+    /// least-loaded owned device (work items assigned this batch; ties to
+    /// the lowest device index). Placement happens at enqueue time, so it
+    /// is a pure function of the enqueue sequence — deterministic across
+    /// runs and worker counts. Returns the handle and the chosen device.
+    pub fn enqueue_any(
+        &mut self,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        backend: Backend,
+    ) -> Result<(LaunchHandle, DeviceId), LaunchError> {
+        if self.devices.is_empty() {
+            return Err(LaunchError::NoDevice);
+        }
+        let di = (0..self.devices.len())
+            .min_by_key(|&i| (self.assigned_load[i], i))
+            .expect("devices is non-empty");
+        let id = DeviceId(di);
+        let h = self.enqueue_on(id, kernel, total, args, backend)?;
+        Ok((h, id))
+    }
+
     /// `clFinish`: run every pending launch to completion (over up to
-    /// `jobs` host threads) and return per-launch results in enqueue order.
-    /// The queue is drained and can be reused.
+    /// `jobs` host threads of the persistent worker pool) and return
+    /// per-launch results in enqueue order. Owned devices' memory advances
+    /// past their streams; the queue is drained and can be reused.
     pub fn finish(&mut self) -> Vec<Result<QueuedResult, LaunchError>> {
-        let work = std::mem::take(&mut self.pending);
+        let pending = std::mem::take(&mut self.pending);
+        let total = pending.len();
+        // The batch is taken: its dispatcher loads are spent. Resetting
+        // here (not after the run) also keeps a queue whose job panicked
+        // mid-run in a sane state for the NoDevice/`add_device` paths.
+        for load in &mut self.assigned_load {
+            *load = 0;
+        }
+
+        // Partition into streams: snapshots are singleton jobs; owned
+        // launches group per device, preserving enqueue order.
+        let mut per_dev: Vec<Vec<(usize, OwnedLaunch)>> =
+            (0..self.devices.len()).map(|_| Vec::new()).collect();
+        let mut streams = Vec::new();
+        for (idx, p) in pending.into_iter().enumerate() {
+            match p {
+                Pending::Snapshot(job) => streams.push(Stream::Snapshot { idx, job }),
+                Pending::Owned { device, launch } => per_dev[device].push((idx, launch)),
+            }
+        }
+        let mut parked: Vec<Option<VortexDevice>> =
+            self.devices.drain(..).map(Some).collect();
+        for (di, items) in per_dev.into_iter().enumerate() {
+            if !items.is_empty() {
+                let dev = Box::new(parked[di].take().expect("device parked"));
+                streams.push(Stream::Device { di, dev, items });
+            }
+        }
+
         let mode = self.exec_mode;
-        pool::run_indexed(self.jobs, work, move |_i, job| {
-            let mut mem = job.mem;
-            execute_launch(job.config, &mut mem, &job.prog, job.backend, job.warm, mode)
-                .map(|result| QueuedResult { result, mem })
-        })
+        let snapshots = self.stream_snapshots;
+        let outs = pool::run_indexed(self.jobs, streams, move |_, s| match s {
+            Stream::Snapshot { idx, job } => {
+                let mut mem = job.mem;
+                let out =
+                    execute_launch(job.config, &mut mem, &job.prog, job.backend, job.warm, mode)
+                        .map(|result| QueuedResult { result, mem, device: None });
+                StreamOut::Snapshot { idx, out }
+            }
+            Stream::Device { di, mut dev, items } => {
+                let mut outs = Vec::with_capacity(items.len());
+                let mut failed = false;
+                for (idx, l) in items {
+                    if failed {
+                        // In-order stream: a successor of a failed launch
+                        // would see inconsistent predecessor memory, which
+                        // a sequential `launch()?` caller never runs.
+                        outs.push((idx, Err(LaunchError::Skipped)));
+                        continue;
+                    }
+                    // Literally the sequential path: bit-identical to a
+                    // caller running these launches on this device.
+                    let r = dev
+                        .launch(&l.kernel, l.total, &l.args, l.backend)
+                        .map(|result| QueuedResult {
+                            result,
+                            mem: if snapshots { dev.mem.clone() } else { Memory::new() },
+                            device: Some(DeviceId(di)),
+                        });
+                    failed = r.is_err();
+                    outs.push((idx, r));
+                }
+                StreamOut::Device { di, dev, outs }
+            }
+        });
+
+        let mut results: Vec<Option<Result<QueuedResult, LaunchError>>> =
+            (0..total).map(|_| None).collect();
+        for so in outs {
+            match so {
+                StreamOut::Snapshot { idx, out } => results[idx] = Some(out),
+                StreamOut::Device { di, dev, outs } => {
+                    parked[di] = Some(*dev);
+                    for (idx, r) in outs {
+                        results[idx] = Some(r);
+                    }
+                }
+            }
+        }
+        self.devices = parked
+            .into_iter()
+            .map(|d| d.expect("device returned from stream"))
+            .collect();
+        results
+            .into_iter()
+            .map(|r| r.expect("every enqueued launch produces a result"))
+            .collect()
     }
 }
 
@@ -184,6 +429,7 @@ kernel_body:
         assert_eq!(q1.result.cycles, r1.cycles);
         assert_eq!(q2.result.cycles, r2.cycles);
         assert_eq!(q1.result.stats, r1.stats);
+        assert_eq!(q1.device, None);
         assert_eq!(q1.mem.read_i32_slice(b1.addr, n), d1.read_buffer_i32(b1, n));
         assert_eq!(q2.mem.read_i32_slice(b2.addr, n), d2.read_buffer_i32(b2, n));
     }
@@ -204,5 +450,134 @@ kernel_body:
         assert_eq!(results.len(), 1);
         let out = results[h.0].as_ref().unwrap();
         assert_eq!(out.mem.read_i32_slice(b.addr, 4), vec![2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn owned_device_stream_chains_memory() {
+        // Two launches pinned to one owned device: the second reads the
+        // first's output (in-order command-queue semantic), and the
+        // device's persistent memory advances at finish.
+        let n = 8usize;
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 2));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &vec![1; n]);
+        let k3 = scale_kernel("scale3", 3);
+
+        let mut q = LaunchQueue::new(4);
+        let d = q.add_device(dev);
+        let h1 = q.enqueue_on(d, &k3, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        let h2 = q.enqueue_on(d, &k3, n as u32, &[b.addr, a.addr], Backend::SimX).unwrap();
+        let results = q.finish();
+        assert_eq!(results.len(), 2);
+        let r1 = results[h1.0].as_ref().unwrap();
+        let r2 = results[h2.0].as_ref().unwrap();
+        assert_eq!(r1.device, Some(d));
+        assert_eq!(r1.mem.read_i32_slice(b.addr, n), vec![3; n]);
+        assert_eq!(r2.mem.read_i32_slice(a.addr, n), vec![9; n]);
+        // device memory persists past the batch
+        assert_eq!(q.device(d).mem.read_i32_slice(a.addr, n), vec![9; n]);
+    }
+
+    #[test]
+    fn unpinned_dispatch_is_deterministic_least_loaded() {
+        let k = scale_kernel("scale2", 2);
+        let build_queue = || {
+            let mut q = LaunchQueue::new(2);
+            for (w, t) in [(2u32, 2u32), (4, 4), (2, 8)] {
+                let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+                let a = dev.create_buffer(64);
+                let b = dev.create_buffer(64);
+                dev.write_buffer_i32(a, &[5; 16]);
+                let _ = b;
+                q.add_device(dev);
+            }
+            q
+        };
+        let place = |q: &mut LaunchQueue, totals: &[u32]| -> Vec<usize> {
+            totals
+                .iter()
+                .map(|&t| {
+                    let (_, d) = q
+                        .enqueue_any(&k, t, &[0x9000_0000, 0x9000_0040], Backend::SimX)
+                        .unwrap();
+                    d.0
+                })
+                .collect()
+        };
+        let totals = [16u32, 4, 4, 8, 16, 2];
+        let mut q1 = build_queue();
+        let p1 = place(&mut q1, &totals);
+        let mut q2 = build_queue();
+        let p2 = place(&mut q2, &totals);
+        // identical enqueue sequence ⇒ identical placement
+        assert_eq!(p1, p2);
+        // least-loaded greedy: 16→d0, 4→d1, 4→d2, 8→d1(4)<d2(4)? ties to
+        // lowest ⇒ d1, 16→d2(4), 2→d1? loads now d0=16,d1=12,d2=20 ⇒ d1
+        assert_eq!(p1, vec![0, 1, 2, 1, 2, 1]);
+        // every device got work
+        for d in 0..3 {
+            assert!(p1.contains(&d), "device {d} unused");
+        }
+    }
+
+    #[test]
+    fn failed_stream_launch_skips_its_successors() {
+        // kernel that exits with a nonzero code ⇒ BadExit at run time
+        let bad = Kernel {
+            name: "bad_exit",
+            body: "kernel_body:\n li a0, 1\n li a7, 93\n ecall\n".into(),
+        };
+        let good = scale_kernel("scale4", 4);
+        let n = 4usize;
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 2));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &[1, 2, 3, 4]);
+
+        let mut q = LaunchQueue::new(2);
+        let d = q.add_device(dev);
+        let h_ok = q.enqueue_on(d, &good, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        let h_bad = q.enqueue_on(d, &bad, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        let h_after = q.enqueue_on(d, &good, n as u32, &[b.addr, a.addr], Backend::SimX).unwrap();
+        let results = q.finish();
+        assert!(results[h_ok.0].is_ok(), "launch before the failure runs normally");
+        assert!(matches!(&results[h_bad.0], Err(LaunchError::BadExit(_))));
+        // the successor must NOT have executed against inconsistent memory
+        assert!(matches!(&results[h_after.0], Err(LaunchError::Skipped)));
+        assert_eq!(q.device(d).mem.read_i32_slice(b.addr, n), vec![4, 8, 12, 16]);
+        // a fresh batch on the same device works again
+        let h2 = q.enqueue_on(d, &good, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        let results = q.finish();
+        assert!(results[h2.0].is_ok());
+    }
+
+    #[test]
+    fn stream_snapshots_off_skips_per_launch_memory() {
+        let n = 4usize;
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 2));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &[1, 2, 3, 4]);
+        let k = scale_kernel("scale6", 6);
+        let mut q = LaunchQueue::new(1);
+        q.stream_snapshots = false;
+        let d = q.add_device(dev);
+        let h = q.enqueue_on(d, &k, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        let results = q.finish();
+        let r = results[h.0].as_ref().unwrap();
+        // no per-launch image, but the device's final state is intact
+        assert_eq!(r.mem.read_i32_slice(b.addr, n), vec![0; n]);
+        assert_eq!(q.device(d).mem.read_i32_slice(b.addr, n), vec![6, 12, 18, 24]);
+    }
+
+    #[test]
+    fn enqueue_any_without_devices_errors() {
+        let k = scale_kernel("scale7", 7);
+        let mut q = LaunchQueue::new(1);
+        match q.enqueue_any(&k, 4, &[0, 0], Backend::SimX) {
+            Err(LaunchError::NoDevice) => {}
+            other => panic!("expected NoDevice, got {:?}", other.map(|(h, d)| (h.0, d.0))),
+        }
     }
 }

@@ -48,6 +48,11 @@ pub struct SliceReport {
     /// The arriving warp is parked locally; the machine owns the global
     /// table and releases every participant when the barrier trips (§IV-D).
     pub barriers: Vec<(u64, u32, u32, u32)>,
+    /// Exclusive end of this core's *work* within the slice: `end` when
+    /// the core stayed busy, or the cycle it drained / parked. Lets the
+    /// machine account the final machine cycle exactly (independent of the
+    /// chunk grid) instead of rounding a drain up to the chunk boundary.
+    pub ran_until: u64,
 }
 
 /// Fixed syscall cost (rare; host-proxied NewLib stubs).
@@ -170,6 +175,13 @@ impl SimCore {
             && (self.scheduler.active & !self.scheduler.barrier_stalled) == 0
     }
 
+    /// Any active warp is parked on a barrier (input to the machine's
+    /// adaptive chunk policy: pending barrier traffic ⇒ commit often for
+    /// tight release latency).
+    pub fn any_barrier_parked(&self) -> bool {
+        self.scheduler.active & self.scheduler.barrier_stalled != 0
+    }
+
     /// Earliest cycle at which any non-barrier warp becomes schedulable
     /// (used by the machine to fast-forward pure-stall stretches).
     pub fn next_ready_cycle(&self) -> Option<u64> {
@@ -223,6 +235,7 @@ impl SimCore {
             match self.step(now, mem, shared)? {
                 Some(CoreEvent::Exit(code)) => {
                     rep.exit = Some((now, code));
+                    rep.ran_until = now + 1;
                     return Ok(rep);
                 }
                 Some(CoreEvent::GlobalBarrier { id, count, warp }) => {
@@ -234,6 +247,7 @@ impl SimCore {
             }
             now += 1;
         }
+        rep.ran_until = now;
         Ok(rep)
     }
 

@@ -25,6 +25,7 @@ pub use stats::CoreStats;
 
 use crate::asm::Program;
 use crate::config::MachineConfig;
+use crate::coordinator::pool;
 use crate::emu::barrier::BarrierTable;
 use crate::emu::step::EmuError;
 use crate::emu::ExitStatus;
@@ -42,15 +43,81 @@ pub enum ExecMode {
     /// Reference engine: per-core phases run sequentially on one thread.
     #[default]
     Serial,
-    /// Per-core phases run concurrently on host threads (scoped).
+    /// Per-core phases run concurrently on the persistent worker pool
+    /// ([`crate::coordinator::pool`]).
     Parallel,
 }
 
+impl ExecMode {
+    /// The default engine for newly built machines: `VORTEX_EXEC_MODE`
+    /// (`serial` | `parallel`, case-insensitive; read once per process) or
+    /// [`ExecMode::Serial`]. Both engines are bit-identical by
+    /// construction; CI runs the whole suite under each value to prove it.
+    pub fn default_from_env() -> ExecMode {
+        static MODE: std::sync::OnceLock<ExecMode> = std::sync::OnceLock::new();
+        *MODE.get_or_init(|| match std::env::var("VORTEX_EXEC_MODE") {
+            Ok(v) if v.eq_ignore_ascii_case("parallel") => ExecMode::Parallel,
+            _ => ExecMode::Serial,
+        })
+    }
+}
+
 /// Default cycles per chunk between commit points. Large enough to
-/// amortize the per-chunk thread fork/join, small enough that global
+/// amortize the per-chunk pool dispatch, small enough that global
 /// barriers release promptly; interacting cores synchronize only at these
 /// boundaries, so both modes share the value for bit-identical timing.
 pub const DEFAULT_CHUNK_CYCLES: u64 = 4096;
+
+/// How the multi-core engine sizes its chunks (ROADMAP "adaptive
+/// `chunk_cycles`").
+///
+/// Chunk boundaries are where cross-core effects commit, so the schedule
+/// of boundaries is part of the machine's *timing* semantics: both
+/// [`ExecMode`]s follow the same schedule and stay bit-identical. The
+/// adaptive policy derives each next chunk length purely from
+/// commit-observable state (barrier arrivals and parked warps), so it is
+/// itself deterministic and mode-independent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ChunkPolicy {
+    /// Every chunk is exactly `chunk_cycles` long (the PR 1 engine).
+    #[default]
+    Fixed,
+    /// Start at `chunk_cycles`; while global-barrier traffic is pending
+    /// (arrivals this chunk, or warps still parked) halve toward `min` so
+    /// releases commit promptly, and through barrier-free stretches double
+    /// toward `max` to amortize commits. Barrier-free programs are
+    /// cycle-exact with [`ChunkPolicy::Fixed`] (the final cycle is
+    /// accounted from per-core drain reports, not the chunk grid);
+    /// barrier-dense programs keep the same architectural results and
+    /// release barriers no later.
+    Adaptive { min: u64, max: u64 },
+}
+
+impl ChunkPolicy {
+    /// The default adaptive window around [`DEFAULT_CHUNK_CYCLES`].
+    pub fn adaptive_default() -> ChunkPolicy {
+        ChunkPolicy::Adaptive { min: 64, max: 4 * DEFAULT_CHUNK_CYCLES }
+    }
+}
+
+/// Telemetry for one `run`'s chunk schedule (observability for the
+/// adaptive policy; asserted by the scheduler conformance suite).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChunkTelemetry {
+    /// Chunks executed (commit points).
+    pub chunks: u64,
+    /// Smallest and largest chunk length used (0 until a chunk ran).
+    pub min_chunk: u64,
+    pub max_chunk: u64,
+}
+
+impl ChunkTelemetry {
+    fn record(&mut self, len: u64) {
+        self.chunks += 1;
+        self.min_chunk = if self.min_chunk == 0 { len } else { self.min_chunk.min(len) };
+        self.max_chunk = self.max_chunk.max(len);
+    }
+}
 
 /// Result of a simulation run.
 #[derive(Clone, Debug, PartialEq)]
@@ -76,8 +143,12 @@ pub struct Simulator {
     cycle: u64,
     /// Serial (reference) or host-parallel per-core stepping.
     pub exec_mode: ExecMode,
-    /// Cycles per chunk between multi-core commit points.
+    /// Base cycles per chunk between multi-core commit points.
     pub chunk_cycles: u64,
+    /// Fixed or adaptive chunk sizing around `chunk_cycles`.
+    pub chunk_policy: ChunkPolicy,
+    /// Chunk-schedule observability for the last `run`.
+    pub chunk_telemetry: ChunkTelemetry,
 }
 
 /// One core's buffered side effects from an execution slice, merged by the
@@ -122,8 +193,10 @@ impl Simulator {
             console: Vec::new(),
             heap_end: 0xC000_0000,
             cycle: 0,
-            exec_mode: ExecMode::Serial,
+            exec_mode: ExecMode::default_from_env(),
             chunk_cycles: DEFAULT_CHUNK_CYCLES,
+            chunk_policy: ChunkPolicy::default(),
+            chunk_telemetry: ChunkTelemetry::default(),
         }
     }
 
@@ -271,10 +344,21 @@ impl Simulator {
     /// the end of its chunk — every core's work through the chunk end is
     /// committed and counted.
     fn run_chunked(&mut self, max_cycles: u64) -> Result<RunResult, EmuError> {
-        let chunk = self.chunk_cycles.max(1);
+        let base = self.chunk_cycles.max(1);
+        let (min_chunk, max_chunk) = match self.chunk_policy {
+            ChunkPolicy::Fixed => (base, base),
+            ChunkPolicy::Adaptive { min, max } => (min.clamp(1, base), max.max(base)),
+        };
+        let mut chunk = base;
+        self.chunk_telemetry = ChunkTelemetry::default();
         let mut exit: Option<(u64, u32)> = None;
+        // Exclusive end of the latest *work* any core reported; the final
+        // machine cycle for a drained run (exact, chunk-grid independent).
+        let mut high_water = self.cycle;
+        let mut drained = false;
         while self.cycle < max_cycles {
             if !self.cores.iter().any(|c| c.any_active()) {
+                drained = true;
                 break;
             }
             // deadlock: every active warp everywhere is parked on a barrier
@@ -297,6 +381,7 @@ impl Simulator {
             }
             let start = self.cycle;
             let end = (start.saturating_add(chunk)).min(max_cycles);
+            self.chunk_telemetry.record(end - start);
             let heap0 = self.heap_end;
 
             // ---- phase: every core runs its slice against a frozen view ----
@@ -313,10 +398,9 @@ impl Simulator {
                     })
                     .collect(),
                 ExecMode::Parallel => {
-                    // never spawn more workers than the host has threads:
-                    // active cores are dealt round-robin onto worker groups
-                    // (grouping changes scheduling only — each slice is
-                    // independent, so results are unaffected)
+                    // active cores are dealt over the persistent worker
+                    // pool (scheduling only — each slice is independent, so
+                    // results are unaffected by the distribution)
                     let mut outs: Vec<Option<SliceOut>> = Vec::new();
                     outs.resize_with(cores.len(), || None);
                     let active: Vec<(usize, &mut SimCore)> = cores
@@ -324,38 +408,12 @@ impl Simulator {
                         .enumerate()
                         .filter(|(_, c)| c.any_active())
                         .collect();
-                    let hw = std::thread::available_parallelism()
-                        .map(|n| n.get())
-                        .unwrap_or(1);
-                    let workers = hw.max(1).min(active.len().max(1));
-                    let mut groups: Vec<Vec<(usize, &mut SimCore)>> =
-                        (0..workers).map(|_| Vec::new()).collect();
-                    for (k, item) in active.into_iter().enumerate() {
-                        groups[k % workers].push(item);
-                    }
-                    let buckets: Vec<Vec<(usize, SliceOut)>> = std::thread::scope(|s| {
-                        let handles: Vec<_> = groups
-                            .into_iter()
-                            .map(|group| {
-                                s.spawn(move || {
-                                    group
-                                        .into_iter()
-                                        .map(|(i, core)| {
-                                            (i, run_core_slice(core, mem_ref, start, end, heap0))
-                                        })
-                                        .collect::<Vec<_>>()
-                                })
-                            })
-                            .collect();
-                        handles
-                            .into_iter()
-                            .map(|h| h.join().expect("core worker panicked"))
-                            .collect()
+                    let workers = pool::global().size().min(active.len().max(1));
+                    let sliced = pool::run_indexed(workers, active, |_, (i, core)| {
+                        (i, run_core_slice(core, mem_ref, start, end, heap0))
                     });
-                    for bucket in buckets {
-                        for (i, out) in bucket {
-                            outs[i] = Some(out);
-                        }
+                    for (i, out) in sliced {
+                        outs[i] = Some(out);
                     }
                     outs
                 }
@@ -386,6 +444,7 @@ impl Simulator {
                 }
                 match out.report {
                     Ok(rep) => {
+                        high_water = high_water.max(rep.ran_until);
                         if let Some((cyc, code)) = rep.exit {
                             let better = match exit {
                                 None => true,
@@ -413,6 +472,7 @@ impl Simulator {
                 return Err(e);
             }
             arrivals.sort_by_key(|&(cyc, c, seq, ..)| (cyc, c, seq));
+            let had_arrivals = !arrivals.is_empty();
             for (_, c, _, id, count, warp) in arrivals {
                 if let Some(parts) =
                     self.global_barriers.arrive(id, count, (c as u32, warp))
@@ -421,6 +481,19 @@ impl Simulator {
                         self.cores[pc as usize].release_barrier(pw);
                     }
                 }
+            }
+            // Adapt the next chunk length from commit-observable barrier
+            // traffic only, so the schedule is deterministic and identical
+            // across ExecModes: pending traffic ⇒ shrink (tight release
+            // latency), barrier-free stretch ⇒ grow (amortized commits).
+            if min_chunk != max_chunk {
+                let pending =
+                    had_arrivals || self.cores.iter().any(|c| c.any_barrier_parked());
+                chunk = if pending {
+                    (chunk / 2).max(min_chunk)
+                } else {
+                    chunk.saturating_mul(2).min(max_chunk)
+                };
             }
             // Every core simulated (and committed) up to the chunk end, so
             // the machine cycle count covers that work even when a core
@@ -431,6 +504,14 @@ impl Simulator {
             if exit.is_some() {
                 break;
             }
+        }
+        if drained && exit.is_none() {
+            // Exact drain time: cores stopped at their reported
+            // `ran_until`, not at the chunk boundary, so the machine cycle
+            // is independent of the chunk schedule (this is what makes the
+            // adaptive policy cycle-exact with the fixed one on
+            // barrier-free programs).
+            self.cycle = high_water;
         }
         Ok(self.finish(exit.map(|(_, code)| code)))
     }

@@ -2,6 +2,11 @@
 //! return exactly what N sequential `VortexDevice::launch` calls return —
 //! per-launch status, cycles, stats, console and output buffers — and the
 //! answer must not depend on the worker count.
+//!
+//! The heterogeneous section locks down the multi-device scheduler: one
+//! queue over ≥ 3 distinct `MachineConfig`s, pinned and dispatcher-placed
+//! launches, bit-identical to sequential launches on whichever device ran
+//! each launch, with deterministic placement.
 
 use vortex::config::MachineConfig;
 use vortex::kernels::bodies;
@@ -189,6 +194,209 @@ fn worker_count_does_not_change_results() {
             .collect::<Vec<_>>()
     };
     assert_eq!(run_with(1), run_with(8));
+}
+
+// ---------------------------------------------------------------------
+// Heterogeneous multi-device scheduling
+// ---------------------------------------------------------------------
+
+/// Three distinct design points — the paper's Fig 9 axis in miniature.
+const HET_CONFIGS: [(u32, u32); 3] = [(2, 2), (4, 4), (2, 8)];
+
+fn scale_kernel(name: &'static str, factor: u32) -> Kernel {
+    Kernel {
+        name,
+        body: format!(
+            r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)           # in
+    lw t2, 4(t0)           # out
+    slli t3, a0, 2
+    add t4, t1, t3
+    lw t5, 0(t4)
+    li t6, {factor}
+    mul t5, t5, t6
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#
+        ),
+    }
+}
+
+/// Acceptance criterion: a heterogeneous queue over three distinct
+/// configs returns, per launch, exactly what sequential
+/// `VortexDevice::launch` calls on that launch's device return — status,
+/// cycles, stats, console, and final device memory.
+#[test]
+fn heterogeneous_queue_matches_sequential_per_device() {
+    let n = 128usize;
+    let w = wl::vecadd(n, SEED);
+    let build = |cw: u32, ct: u32| {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(cw, ct));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        let c = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &w.a);
+        dev.write_buffer_i32(b, &w.b);
+        (dev, [a.addr, b.addr, c.addr], c)
+    };
+    let k = bodies::vecadd();
+
+    // sequential reference: two launches per config, each on its own device
+    let mut seq = Vec::new();
+    for &(cw, ct) in &HET_CONFIGS {
+        let (mut dev, args, c) = build(cw, ct);
+        let r1 = dev.launch(&k, n as u32, &args, Backend::SimX).unwrap();
+        let r2 = dev.launch(&k, n as u32, &args, Backend::SimX).unwrap();
+        seq.push((r1, r2, dev.read_buffer_i32(c, n)));
+    }
+
+    // the same work as one heterogeneous queue with pinned streams
+    let mut q = LaunchQueue::new(4);
+    let mut ids = Vec::new();
+    for &(cw, ct) in &HET_CONFIGS {
+        let (dev, args, c) = build(cw, ct);
+        let id = q.add_device(dev);
+        ids.push((id, args, c));
+    }
+    let mut handles = Vec::new();
+    for &(id, args, _) in &ids {
+        let h1 = q.enqueue_on(id, &k, n as u32, &args, Backend::SimX).unwrap();
+        let h2 = q.enqueue_on(id, &k, n as u32, &args, Backend::SimX).unwrap();
+        handles.push((h1, h2));
+    }
+    assert_eq!(q.len(), HET_CONFIGS.len() * 2);
+    let results = q.finish();
+    assert_eq!(results.len(), HET_CONFIGS.len() * 2);
+
+    for (i, ((h1, h2), (r1, r2, out))) in handles.iter().zip(&seq).enumerate() {
+        let q1 = results[h1.0].as_ref().unwrap_or_else(|e| panic!("config {i}: {e}"));
+        let q2 = results[h2.0].as_ref().unwrap_or_else(|e| panic!("config {i}: {e}"));
+        assert_eq!(q1.result.status, r1.status, "status 1 of config {i}");
+        assert_eq!(q1.result.cycles, r1.cycles, "cycles 1 of config {i}");
+        assert_eq!(q1.result.stats, r1.stats, "stats 1 of config {i}");
+        assert_eq!(q1.result.console, r1.console, "console 1 of config {i}");
+        assert_eq!(q2.result.cycles, r2.cycles, "cycles 2 of config {i}");
+        assert_eq!(q2.result.stats, r2.stats, "stats 2 of config {i}");
+        assert_eq!(q1.device, Some(ids[i].0), "device attribution of config {i}");
+        let qout = q.device(ids[i].0).mem.read_i32_slice(ids[i].2.addr, n);
+        assert_eq!(&qout, out, "final device memory of config {i}");
+        assert_eq!(qout, w.expect, "output correctness of config {i}");
+    }
+}
+
+/// Pinned streams keep per-launch results independent of how enqueues of
+/// *different* devices interleave (device-major vs round-robin order).
+#[test]
+fn shuffled_enqueue_order_is_deterministic_per_stream() {
+    let factors = [2u32, 3, 5];
+    let n = 16usize;
+    let init: Vec<i32> = (0..n as i32).collect();
+    let kernels =
+        [scale_kernel("het_scale2", 2), scale_kernel("het_scale3", 3), scale_kernel("het_scale5", 5)];
+
+    let run_order = |round_robin: bool| -> Vec<Vec<i32>> {
+        let mut q = LaunchQueue::new(3);
+        let mut ids = Vec::new();
+        for &(cw, ct) in &HET_CONFIGS {
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(cw, ct));
+            let a = dev.create_buffer(n * 4);
+            let b = dev.create_buffer(n * 4);
+            dev.write_buffer_i32(a, &init);
+            let id = q.add_device(dev);
+            ids.push((id, a.addr, b.addr));
+        }
+        // per device: two chained launches (a→b, then b→a reads the first)
+        let mut jobs = Vec::new();
+        for (ci, &(_, a, b)) in ids.iter().enumerate() {
+            jobs.push((ci, [a, b]));
+            jobs.push((ci, [b, a]));
+        }
+        let order: [usize; 6] =
+            if round_robin { [0, 2, 4, 1, 3, 5] } else { [0, 1, 2, 3, 4, 5] };
+        for &j in &order {
+            let (ci, io) = jobs[j];
+            q.enqueue_on(ids[ci].0, &kernels[ci], n as u32, &io, Backend::SimX).unwrap();
+        }
+        for r in q.finish() {
+            r.unwrap();
+        }
+        ids.iter().map(|&(id, a, _)| q.device(id).mem.read_i32_slice(a, n)).collect()
+    };
+
+    let device_major = run_order(false);
+    let round_robin = run_order(true);
+    assert_eq!(device_major, round_robin, "cross-device interleaving must not matter");
+    for (ci, out) in device_major.iter().enumerate() {
+        let f = (factors[ci] * factors[ci]) as i32;
+        let want: Vec<i32> = init.iter().map(|x| x * f).collect();
+        assert_eq!(out, &want, "config {ci} chained result");
+    }
+}
+
+/// Dispatcher-placed (unpinned) launches: placement is deterministic and
+/// balanced, and every launch is still bit-identical to a sequential
+/// launch stream on whichever device it landed on (verified by replaying
+/// the recorded placement sequentially).
+#[test]
+fn unpinned_launches_match_sequential_replay_on_assigned_device() {
+    let n = 64usize;
+    let launches = 6usize;
+    let w = wl::vecadd(n, SEED);
+    let build = |cw: u32, ct: u32| {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(cw, ct));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &w.a);
+        dev.write_buffer_i32(b, &w.b);
+        // identical allocation order on every device ⇒ identical addresses,
+        // so unpinned launches are valid anywhere
+        let outs: Vec<u32> = (0..launches).map(|_| dev.create_buffer(n * 4).addr).collect();
+        (dev, [a.addr, b.addr], outs)
+    };
+    let k = bodies::vecadd();
+
+    let mut q = LaunchQueue::new(4);
+    let mut ids = Vec::new();
+    let mut layout = None;
+    for &(cw, ct) in &HET_CONFIGS {
+        let (dev, ab, outs) = build(cw, ct);
+        ids.push(q.add_device(dev));
+        layout = Some((ab, outs));
+    }
+    let (ab, outs) = layout.unwrap();
+
+    let mut placed = Vec::new();
+    for out in outs.iter().take(launches) {
+        let (h, d) =
+            q.enqueue_any(&k, n as u32, &[ab[0], ab[1], *out], Backend::SimX).unwrap();
+        placed.push((h, d, *out));
+    }
+    // equal-size launches over three devices: round-robin balance, 2 each
+    let placement: Vec<usize> = placed.iter().map(|&(_, d, _)| d.0).collect();
+    assert_eq!(placement, vec![0, 1, 2, 0, 1, 2], "deterministic least-loaded placement");
+    let results = q.finish();
+
+    // replay each device's assigned subsequence sequentially and compare
+    for (ci, &id) in ids.iter().enumerate() {
+        let (cw, ct) = HET_CONFIGS[ci];
+        let (mut dev, rab, _) = build(cw, ct);
+        for &(h, d, out_addr) in &placed {
+            if d != id {
+                continue;
+            }
+            let r = dev.launch(&k, n as u32, &[rab[0], rab[1], out_addr], Backend::SimX).unwrap();
+            let qr = results[h.0].as_ref().unwrap();
+            assert_eq!(qr.device, Some(id));
+            assert_eq!(qr.result.cycles, r.cycles, "cycles on device {ci}");
+            assert_eq!(qr.result.stats, r.stats, "stats on device {ci}");
+            let got = qr.mem.read_i32_slice(out_addr, n);
+            assert_eq!(got, dev.mem.read_i32_slice(out_addr, n), "memory on device {ci}");
+            assert_eq!(got, w.expect, "output correctness on device {ci}");
+        }
+    }
 }
 
 #[test]

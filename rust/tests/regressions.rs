@@ -1,9 +1,12 @@
-//! Regression tests for the two seed bugfixes shipped with the parallel
-//! engine: the `warm_dcache` address-overflow bug and the missing lane
-//! bound on `LaneAddrs`/`MachineConfig`.
+//! Regression tests for the seed bugfixes shipped with the parallel
+//! engine — the `warm_dcache` address-overflow bug and the missing lane
+//! bound on `LaneAddrs`/`MachineConfig` — plus the `jobs = 0` silent
+//! clamp in `LaunchQueue::new`.
 
 use vortex::asm::assemble;
-use vortex::config::MachineConfig;
+use vortex::config::{self, MachineConfig};
+use vortex::coordinator::cli;
+use vortex::pocl::LaunchQueue;
 use vortex::sim::Simulator;
 
 // ---------------------------------------------------------------------
@@ -94,6 +97,43 @@ fn simulator_refuses_a_64_lane_machine() {
 #[should_panic(expected = "invalid machine config")]
 fn emulator_refuses_a_64_lane_machine() {
     let _ = vortex::emu::Emulator::new(MachineConfig::with_wt(2, 64));
+}
+
+// ---------------------------------------------------------------------
+// jobs = 0: `LaunchQueue::new(0)` used to silently clamp to one worker,
+// hiding callers whose computed worker count underflowed. It now fails
+// fast through the same validation path as `MachineConfig::validate`,
+// and the CLI turns `--jobs 0` into a clean argument error.
+// ---------------------------------------------------------------------
+
+#[test]
+fn validate_jobs_shares_the_machine_validation_contract() {
+    assert!(config::validate_jobs(0).is_err());
+    assert!(config::validate_jobs(1).is_ok());
+    // the machine-side validator still guards its own axis
+    assert!(MachineConfig::with_wt(2, 2).validate().is_ok());
+}
+
+#[test]
+#[should_panic(expected = "invalid launch queue config")]
+fn launch_queue_refuses_zero_jobs() {
+    let _ = LaunchQueue::new(0);
+}
+
+#[test]
+fn launch_queue_accepts_one_job() {
+    let q = LaunchQueue::new(1);
+    assert_eq!(q.jobs(), 1);
+}
+
+#[test]
+fn cli_rejects_jobs_zero_cleanly() {
+    let argv = |s: &str| s.split_whitespace().map(String::from).collect::<Vec<_>>();
+    let err = cli::parse(&argv("run --bench vecadd --jobs 0")).unwrap_err();
+    assert!(err.0.contains("--jobs"), "error must name the flag: {err}");
+    assert!(cli::parse(&argv("sweep --jobs 0")).is_err());
+    // boundary: 1 is fine
+    assert!(cli::parse(&argv("sweep --jobs 1")).is_ok());
 }
 
 #[test]

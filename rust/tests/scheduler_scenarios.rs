@@ -1,12 +1,13 @@
 //! Paper Fig 6 scheduler scenarios at full-system level: small programs
 //! whose scheduling behaviour (not just architectural result) must match
 //! the paper's described sequences, observed through the simulator's
-//! statistics counters.
+//! statistics counters — plus conformance cases for the adaptive
+//! chunk-sizing policy of the multi-core engine.
 
 use vortex::asm::assemble;
 use vortex::config::MachineConfig;
 use vortex::emu::ExitStatus;
-use vortex::sim::Simulator;
+use vortex::sim::{ChunkPolicy, ChunkTelemetry, ExecMode, RunResult, Simulator};
 
 fn run(src: &str, cfg: MachineConfig) -> (Simulator, vortex::sim::RunResult) {
     let prog = assemble(src).unwrap();
@@ -194,4 +195,124 @@ fn barrier_stall_cycles_accounted() {
         "warp0 must visibly wait: {} stall cycles",
         res.stats.barrier_stall_cycles
     );
+}
+
+// ---------------------------------------------------------------------
+// Adaptive chunk sizing (multi-core engine): conformance against the
+// fixed-chunk reference.
+// ---------------------------------------------------------------------
+
+/// Run `src` on a multi-core machine under a given chunk policy and
+/// engine, returning the result, the chunk telemetry, and a probe of the
+/// output memory region.
+fn run_chunked(
+    src: &str,
+    cores: u32,
+    policy: ChunkPolicy,
+    mode: ExecMode,
+) -> (RunResult, ChunkTelemetry, Vec<u32>) {
+    let prog = assemble(src).unwrap();
+    let mut cfg = MachineConfig::with_wt(2, 2);
+    cfg.num_cores = cores;
+    let mut sim = Simulator::new(cfg);
+    sim.exec_mode = mode;
+    sim.chunk_policy = policy;
+    sim.load(&prog);
+    sim.launch(prog.entry());
+    let res = sim.run(10_000_000).unwrap();
+    let probe = sim.mem.read_u32_slice(0x9000_0600, 8);
+    (res, sim.chunk_telemetry, probe)
+}
+
+/// Barrier-free multi-core program (per-core ALU work of different
+/// lengths, natural drain): the adaptive engine must be **cycle-exact**
+/// with the fixed-chunk engine — per-core simulation is independent of
+/// the chunk grid, and the machine accounts the drain cycle exactly —
+/// while growing its chunks through the barrier-free stretch.
+#[test]
+fn adaptive_chunking_cycle_exact_on_barrier_free_program() {
+    let src = r#"
+        csrr t0, 0xCC2          # core id
+        addi t0, t0, 1
+        li t1, 2000
+        mul t1, t1, t0          # (id + 1) * 2000 iterations
+        spin: addi t1, t1, -1
+        bnez t1, spin
+        li t0, 0
+        tmc t0
+    "#;
+    let (fixed, tel_fixed, _) = run_chunked(src, 4, ChunkPolicy::Fixed, ExecMode::Serial);
+    let (adapt, tel_adapt, _) =
+        run_chunked(src, 4, ChunkPolicy::adaptive_default(), ExecMode::Serial);
+    let (adapt_par, tel_par, _) =
+        run_chunked(src, 4, ChunkPolicy::adaptive_default(), ExecMode::Parallel);
+
+    assert_eq!(fixed.status, ExitStatus::Drained);
+    // cycle-exact equivalence to the fixed-chunk engine
+    assert_eq!(adapt.cycles, fixed.cycles, "adaptive must be cycle-exact here");
+    assert_eq!(adapt.stats, fixed.stats);
+    assert_eq!(adapt.per_core, fixed.per_core);
+    // and bit-identical across engines under the adaptive policy
+    assert_eq!(adapt_par, adapt);
+    assert_eq!(tel_par, tel_adapt, "chunk schedule must not depend on ExecMode");
+    // the barrier-free stretch actually grew chunks past the fixed size
+    assert!(
+        tel_adapt.max_chunk > tel_fixed.max_chunk,
+        "adaptive should grow chunks: {tel_adapt:?} vs fixed {tel_fixed:?}"
+    );
+}
+
+/// Barrier-dense program (two cores ping through six global-barrier
+/// rounds): same architectural results as the fixed-chunk engine, and the
+/// shrunken chunks release each barrier *sooner* — the ROADMAP's "tighter
+/// release latency" — never later.
+#[test]
+fn adaptive_chunking_tightens_global_barrier_release() {
+    let src = r#"
+        li s0, 6                # rounds
+        round:
+        csrr t0, 0xCC2
+        slli t1, t0, 2
+        li t2, 0x90000600
+        add t1, t1, t2
+        lw t3, 0(t1)
+        addi t3, t3, 1
+        sw t3, 0(t1)            # per-core round counter in memory
+        li t0, 0x80000000
+        li t1, 2
+        bar t0, t1              # global barrier over both cores
+        addi s0, s0, -1
+        bnez s0, round
+        li t0, 0
+        tmc t0
+    "#;
+    let (fixed, _, mem_fixed) = run_chunked(src, 2, ChunkPolicy::Fixed, ExecMode::Serial);
+    let (adapt, tel_adapt, mem_adapt) =
+        run_chunked(src, 2, ChunkPolicy::adaptive_default(), ExecMode::Serial);
+    let (adapt_par, tel_par, mem_par) =
+        run_chunked(src, 2, ChunkPolicy::adaptive_default(), ExecMode::Parallel);
+
+    // architectural equivalence: both cores completed all six rounds
+    assert_eq!(fixed.status, ExitStatus::Drained);
+    assert_eq!(adapt.status, ExitStatus::Drained);
+    assert_eq!(mem_fixed[0], 6, "core 0 must complete all rounds");
+    assert_eq!(mem_fixed[1], 6, "core 1 must complete all rounds");
+    assert_eq!(mem_adapt, mem_fixed);
+    assert_eq!(fixed.stats.barriers, adapt.stats.barriers);
+    // the whole point: barrier-granular commits release sooner
+    assert!(
+        adapt.cycles < fixed.cycles,
+        "adaptive ({}) must beat fixed ({}) on barrier-dense code",
+        adapt.cycles,
+        fixed.cycles
+    );
+    // and it really shrank below the base chunk to do it
+    assert!(
+        tel_adapt.min_chunk < tel_adapt.max_chunk && tel_adapt.min_chunk < 4096,
+        "adaptive should shrink chunks: {tel_adapt:?}"
+    );
+    // engine-independence again, under barrier traffic this time
+    assert_eq!(adapt_par, adapt);
+    assert_eq!(mem_par, mem_adapt);
+    assert_eq!(tel_par, tel_adapt);
 }
