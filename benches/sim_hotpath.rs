@@ -5,10 +5,18 @@
 //! `VORTEX_BENCH_SMOKE=1` shrinks workloads and sample counts so CI can
 //! run the whole harness as a fast regression smoke (the determinism
 //! asserts still run at full strength).
+//!
+//! Besides the human-readable report, every run emits a machine-readable
+//! summary — `BENCH_sim_hotpath.json` (path override: env
+//! `VORTEX_BENCH_JSON`) — via the in-tree `coordinator::report::Json`
+//! writer. CI uploads the file as a workflow artifact and fails if it is
+//! missing or unparsable, so the repo accumulates a perf trajectory that
+//! later PRs can diff regressions/gains against.
 
 use vortex::asm::assemble;
 use vortex::config::MachineConfig;
 use vortex::coordinator::benchkit::{speedup, throughput, Bencher};
+use vortex::coordinator::report::Json;
 use vortex::emu::Emulator;
 use vortex::kernels::Bench;
 use vortex::pocl::{Backend, DeviceId, LaunchQueue, VortexDevice};
@@ -39,6 +47,10 @@ fn main() {
     if smoke {
         println!("(smoke mode: reduced workloads, full determinism asserts)");
     }
+    // metrics collected for the machine-readable summary
+    let mut json = Json::obj();
+    json.push("bench", "sim_hotpath".into());
+    json.push("smoke", Json::Bool(smoke));
 
     // --- end-to-end simulator throughput: ALU-bound warp program ---
     let alu_iters = if smoke { 2_000 } else { 20_000 };
@@ -55,10 +67,9 @@ fn main() {
     sim.load(&prog);
     sim.launch(prog.entry());
     let instrs = sim.run(u64::MAX).unwrap().stats.warp_instrs;
-    println!(
-        "  -> simX {:.2} M warp-instrs/s\n",
-        throughput(instrs, &m) / 1e6
-    );
+    let simx_ips = throughput(instrs, &m);
+    println!("  -> simX {:.2} M warp-instrs/s\n", simx_ips / 1e6);
+    json.push("simx_warp_instrs_per_sec", simx_ips.into());
 
     // --- functional emulator throughput (the oracle should be faster) ---
     let m = bencher.bench("emu_alu_loop_8w4t", || {
@@ -72,9 +83,12 @@ fn main() {
     emu.load(&prog);
     emu.launch(prog.entry());
     emu.run(u64::MAX).unwrap();
-    println!("  -> emu {:.2} M instrs/s\n", throughput(emu.instret, &m) / 1e6);
+    let emu_ips = throughput(emu.instret, &m);
+    println!("  -> emu {:.2} M instrs/s\n", emu_ips / 1e6);
+    json.push("emu_instrs_per_sec", emu_ips.into());
 
     // --- full benchmark end-to-end (the Fig 9 unit of work) ---
+    let mut bench_rates = Json::obj();
     for bench in [Bench::VecAdd, Bench::Sgemm, Bench::Bfs] {
         let m = bencher.bench(&format!("bench_{}_8x8", bench.name()), || {
             bench
@@ -84,12 +98,11 @@ fn main() {
         });
         let r = bench.run(MachineConfig::with_wt(8, 8), 0xC0FFEE, Backend::SimX, true).unwrap();
         assert!(r.verified, "{} must verify in the perf harness", bench.name());
-        println!(
-            "  -> {} simulates {:.2} M cycles/s\n",
-            bench.name(),
-            throughput(r.cycles, &m) / 1e6
-        );
+        let rate = throughput(r.cycles, &m);
+        println!("  -> {} simulates {:.2} M cycles/s\n", bench.name(), rate / 1e6);
+        bench_rates.push(bench.name(), rate.into());
     }
+    json.push("simulated_cycles_per_sec", bench_rates);
 
     // --- subsystem micro: cache access path ---
     let cache_iters = if smoke { 100_000u32 } else { 1_000_000 };
@@ -124,10 +137,12 @@ fn main() {
     assert_eq!(run_mode(ExecMode::Serial), run_mode(ExecMode::Parallel));
     let ms = bencher.bench("simx_4core_serial", || run_mode(ExecMode::Serial));
     let mp = bencher.bench("simx_4core_parallel", || run_mode(ExecMode::Parallel));
+    let par_speedup = speedup(&ms, &mp);
     println!(
-        "  -> 4-core parallel engine speedup: {:.2}x on {hw} host thread(s)\n",
-        speedup(&ms, &mp)
+        "  -> 4-core parallel engine speedup: {par_speedup:.2}x on {hw} host thread(s)\n"
     );
+    json.push("serial_vs_parallel_speedup_4core", par_speedup.into());
+    json.push("host_threads", (hw as u64).into());
 
     // --- launch queue: 8 enqueued kernels vs 8 sequential launches ---
     let n = if smoke { 512usize } else { 2048 };
@@ -161,10 +176,11 @@ fn main() {
         }
         q.finish().into_iter().map(|r| r.unwrap().result.cycles).sum::<u64>()
     });
+    let queue_speedup = speedup(&mseq, &mq);
     println!(
-        "  -> launch-queue aggregate throughput: {:.2}x over sequential ({hw} worker(s))\n",
-        speedup(&mseq, &mq)
+        "  -> launch-queue aggregate throughput: {queue_speedup:.2}x over sequential ({hw} worker(s))\n"
     );
+    json.push("launch_queue_speedup", queue_speedup.into());
 
     // --- heterogeneous multi-device queue: the Fig 9 mix as one workload ---
     // One queue owns three distinct (warps × threads) devices; half the
@@ -212,9 +228,16 @@ fn main() {
         }
         q.finish().into_iter().map(|r| r.unwrap().result.cycles).sum::<u64>()
     });
+    let het_speedup = speedup(&mseq_het, &mq_het);
     println!(
-        "  -> heterogeneous-queue throughput: {:.2}x over sequential ({} devices, {hw} worker(s))",
-        speedup(&mseq_het, &mq_het),
+        "  -> heterogeneous-queue throughput: {het_speedup:.2}x over sequential ({} devices, {hw} worker(s))",
         het_cfgs.len()
     );
+    json.push("heterogeneous_queue_speedup", het_speedup.into());
+
+    // --- machine-readable summary (perf-trajectory contract) ---
+    let path = std::env::var("VORTEX_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_sim_hotpath.json".to_string());
+    std::fs::write(&path, json.render()).expect("write bench JSON");
+    println!("\nwrote {path}");
 }

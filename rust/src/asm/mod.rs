@@ -21,7 +21,7 @@ mod lexer;
 mod parser;
 mod program;
 
-pub use program::{Program, Section};
+pub use program::{DecodedImage, Program, Section};
 
 use crate::isa::{encode, Instr};
 use parser::{parse_line_full, Line, Operand};

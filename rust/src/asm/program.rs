@@ -1,9 +1,13 @@
 //! Assembled program image: a sparse byte map plus the symbol table —
 //! the loadable unit both the functional emulator and the cycle simulator
-//! consume (our stand-in for the paper's newlib ELF binaries).
+//! consume (our stand-in for the paper's newlib ELF binaries) — and the
+//! [`DecodedImage`], the predecoded text image built once per program and
+//! `Arc`-shared across cores, devices and launch-queue workers so neither
+//! machine re-decodes instruction words on its per-step hot path.
 
 use crate::isa::{decode, Instr};
 use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, OnceLock};
 
 /// Section discriminator for reporting.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,6 +29,80 @@ pub struct Program {
     pub data_base: u32,
     /// Addresses of assembled instructions, in layout order.
     pub instr_addrs: Vec<u32>,
+    /// Lazily built, `Arc`-shared predecoded text image (see
+    /// [`Program::decoded`]). Cloning a `Program` shares the same image.
+    decoded: OnceLock<Arc<DecodedImage>>,
+}
+
+/// Predecoded text image: one decoded [`Instr`] slot per aligned word of
+/// the program's text span, built **once** at first use and shared via
+/// `Arc` by every machine that loads the program (all cores of a
+/// simulator, every launch of a device, every launch-queue worker).
+///
+/// The image is a pure acceleration of `decode(mem.read_u32(pc))`; the
+/// fetch paths treat it as valid only while the loaded [`crate::mem::
+/// Memory`]'s text generation still matches the snapshot taken at load
+/// (stores into text pages bump the generation) and the executing core
+/// has no pending store buffered over the fetched word — otherwise they
+/// fall back to decoding straight from memory, so self-modifying text
+/// keeps its exact pre-image semantics.
+#[derive(Debug, Default)]
+pub struct DecodedImage {
+    /// Word-aligned base address of slot 0.
+    base: u32,
+    /// Decoded slot per text word; `None` ⇒ fall back to memory decode.
+    slots: Vec<Option<Instr>>,
+}
+
+/// Text spans beyond this many words (4 MiB) skip predecoding — the image
+/// would be allocation-bound and no program in the repo comes close.
+const MAX_IMAGE_WORDS: usize = 1 << 20;
+
+impl DecodedImage {
+    /// Build the image covering `[min(instr_addrs), max(instr_addrs)+4)`.
+    /// Only addresses the assembler emitted instructions at get decoded —
+    /// data words inside the span (and undecodable words) stay `None`.
+    pub fn build(prog: &Program) -> DecodedImage {
+        let (Some(&lo), Some(&hi)) =
+            (prog.instr_addrs.iter().min(), prog.instr_addrs.iter().max())
+        else {
+            return DecodedImage::default();
+        };
+        let base = lo & !3;
+        let span = ((hi.saturating_sub(base)) >> 2) as usize + 1;
+        if span > MAX_IMAGE_WORDS {
+            return DecodedImage::default();
+        }
+        let mut slots: Vec<Option<Instr>> = vec![None; span];
+        for &a in &prog.instr_addrs {
+            if a & 3 != 0 {
+                continue; // misaligned emission: leave to the memory path
+            }
+            let idx = ((a - base) >> 2) as usize;
+            slots[idx] = decode(prog.read_u32(a)).ok();
+        }
+        DecodedImage { base, slots }
+    }
+
+    /// The decoded instruction at `pc`, if `pc` is an aligned, covered,
+    /// decodable text word.
+    #[inline]
+    pub fn get(&self, pc: u32) -> Option<Instr> {
+        if pc & 3 != 0 {
+            return None;
+        }
+        let idx = (pc.wrapping_sub(self.base) >> 2) as usize;
+        self.slots.get(idx).copied().flatten()
+    }
+
+    /// Number of predecoded slots (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
 }
 
 impl Program {
@@ -32,15 +110,19 @@ impl Program {
         Program { text_base, data_base, ..Default::default() }
     }
 
-    /// Place raw bytes at an absolute address.
+    /// Place raw bytes at an absolute address. Drops any memoized decoded
+    /// image — it was built from the pre-mutation bytes.
     pub fn place(&mut self, addr: u32, bytes: &[u8]) {
+        self.decoded.take();
         for (i, b) in bytes.iter().enumerate() {
             self.image.insert(addr.wrapping_add(i as u32), *b);
         }
     }
 
-    /// Record that an instruction was emitted at `addr`.
+    /// Record that an instruction was emitted at `addr` (drops any
+    /// memoized decoded image, which no longer covers the new slot).
     pub fn note_instr(&mut self, addr: u32) {
+        self.decoded.take();
         self.instr_addrs.push(addr);
     }
 
@@ -60,6 +142,13 @@ impl Program {
             .or_else(|| self.symbols.get("main"))
             .copied()
             .unwrap_or(self.text_base)
+    }
+
+    /// The shared predecoded text image: built on first call, then
+    /// `Arc`-cloned — every machine loading this program (or a clone of
+    /// it) reuses one image instead of re-decoding per fetch.
+    pub fn decoded(&self) -> Arc<DecodedImage> {
+        self.decoded.get_or_init(|| Arc::new(DecodedImage::build(self))).clone()
     }
 
     /// Decoded instructions in layout order, with addresses.
@@ -107,5 +196,38 @@ mod tests {
     fn missing_bytes_read_zero() {
         let p = Program::new(0, 0);
         assert_eq!(p.read_u32(0x1234), 0);
+    }
+
+    #[test]
+    fn decoded_image_matches_per_word_decode() {
+        let prog = crate::asm::assemble(
+            "li t0, 4\ntmc t0\ncsrr t1, 0xCC0\nadd t2, t1, t1\nli t0, 0\ntmc t0",
+        )
+        .unwrap();
+        let img = prog.decoded();
+        assert!(!img.is_empty());
+        for &(a, i) in &prog.text_instrs() {
+            assert_eq!(img.get(a), Some(i), "slot at {a:#010x}");
+        }
+        // outside the span / misaligned probes miss
+        assert_eq!(img.get(prog.text_base.wrapping_sub(4)), None);
+        assert_eq!(img.get(prog.instr_addrs[0] + 1), None);
+    }
+
+    #[test]
+    fn decoded_image_is_shared_across_clones() {
+        let prog = crate::asm::assemble("li t0, 1").unwrap();
+        let a = prog.decoded();
+        let b = prog.decoded();
+        assert!(Arc::ptr_eq(&a, &b), "one build per program");
+        let cloned = prog.clone();
+        assert!(Arc::ptr_eq(&a, &cloned.decoded()), "clones share the image");
+    }
+
+    #[test]
+    fn empty_program_has_empty_image() {
+        let p = Program::new(0x8000_0000, 0x9000_0000);
+        assert!(p.decoded().is_empty());
+        assert_eq!(p.decoded().get(0x8000_0000), None);
     }
 }

@@ -268,6 +268,11 @@ pub fn execute(cmd: Command) -> i32 {
                         "cycles {}  launches {}  verified {}",
                         r.cycles, r.launches, r.verified
                     );
+                    println!(
+                        "device memory: {} resident pages ({} KiB high-water)",
+                        r.peak_mem_pages,
+                        r.peak_mem_bytes / 1024
+                    );
                     println!("{}", r.stats.report(cfg.num_threads));
                     let e = power::energy_mj(&cfg, &r.stats);
                     println!("model energy {:.4} mJ  power {:.1} mW", e, power::evaluate(&cfg).power_mw);

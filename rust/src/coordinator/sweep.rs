@@ -20,6 +20,9 @@ pub struct SweepPoint {
     pub dcache_hit_rate: f64,
     pub divergent_splits: u64,
     pub barrier_stalls: u64,
+    /// Peak resident device-memory pages across the benchmark's launch
+    /// stream (footprint diagnostics — must stay sparse).
+    pub mem_pages: u64,
 }
 
 /// Fig 9: execution time of `bench` across the configuration sweep.
@@ -60,6 +63,7 @@ pub fn fig9_sweep_jobs(
                 dcache_hit_rate: r.stats.dcache_hit_rate(),
                 divergent_splits: r.stats.divergent_splits,
                 barrier_stalls: r.stats.barrier_stall_cycles,
+                mem_pages: r.peak_mem_pages,
             }
         })
         .collect())
@@ -103,7 +107,10 @@ pub fn fig9_table(
 }
 
 /// [`fig9_table`] with the per-benchmark sweeps fanned out over `jobs`
-/// host threads.
+/// host threads. The trailing `peak pages` column reports, per config,
+/// the largest resident device-memory footprint any benchmark reached
+/// (the sweep-level surface of the footprint diagnostics — a jump here
+/// means the paged memory stopped being sparse).
 pub fn fig9_table_jobs(
     benches: &[Bench],
     configs: &[(u32, u32)],
@@ -112,11 +119,16 @@ pub fn fig9_table_jobs(
 ) -> Result<Table, crate::pocl::LaunchError> {
     let mut header = vec!["config".to_string()];
     header.extend(benches.iter().map(|b| b.name().to_string()));
+    header.push("peak pages".to_string());
     let mut table =
         Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
     let mut columns = Vec::new();
+    let mut peak_pages = vec![0u64; configs.len()];
     for &b in benches {
         let rows = fig9_sweep_jobs(b, configs, seed, jobs)?;
+        for (i, p) in rows.iter().enumerate() {
+            peak_pages[i] = peak_pages[i].max(p.mem_pages);
+        }
         columns.push(normalize_to_2x2(&rows));
     }
     for (i, &(w, t)) in configs.iter().enumerate() {
@@ -124,6 +136,7 @@ pub fn fig9_table_jobs(
         for col in &columns {
             row.push(format!("{:.3}", col[i].1));
         }
+        row.push(peak_pages[i].to_string());
         table.row(row);
     }
     Ok(table)
@@ -164,6 +177,22 @@ mod tests {
         let s = t.render();
         assert!(s.contains("vecadd"));
         assert!(s.contains("4x4"));
+        assert!(s.contains("peak pages"), "footprint column present:\n{s}");
+    }
+
+    #[test]
+    fn sweep_rows_report_sparse_footprint() {
+        let rows = fig9_sweep(Bench::VecAdd, &[(2, 2), (4, 4)], 7).unwrap();
+        for p in &rows {
+            assert!(p.mem_pages > 0, "{}x{} footprint missing", p.warps, p.threads);
+            assert!(
+                p.mem_pages < 512,
+                "{}x{} footprint not sparse: {} pages",
+                p.warps,
+                p.threads,
+                p.mem_pages
+            );
+        }
     }
 
     #[test]

@@ -14,11 +14,12 @@ pub mod warp;
 pub use step::{EmuError, Event, MemAccess, StepCtx, StepInfo};
 pub use warp::{IpdomEntry, Warp};
 
-use crate::asm::Program;
+use crate::asm::{DecodedImage, Program};
 use crate::config::MachineConfig;
-use crate::isa::decode;
 use crate::mem::Memory;
 use barrier::{is_global, BarrierTable};
+use std::sync::Arc;
+use step::decode_at;
 
 /// Why the machine stopped.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -52,6 +53,11 @@ pub struct Emulator {
     cycle: u64,
     /// Total instructions retired (all warps, all cores).
     pub instret: u64,
+    /// Shared predecoded text image of the loaded program; fetch falls
+    /// back to decoding from memory when absent or stale.
+    decoded: Option<Arc<DecodedImage>>,
+    /// `Memory::text_generation` snapshot the image is valid against.
+    decode_gen: u64,
 }
 
 impl Emulator {
@@ -75,12 +81,18 @@ impl Emulator {
             heap_end: 0xC000_0000,
             cycle: 0,
             instret: 0,
+            decoded: None,
+            decode_gen: 0,
         }
     }
 
-    /// Load a program image into device memory.
+    /// Load a program image into device memory and adopt its shared
+    /// predecoded text image (built once per [`Program`], `Arc`-shared
+    /// with every other machine that loads it).
     pub fn load(&mut self, prog: &Program) {
         self.mem.load_program(prog);
+        self.decoded = Some(prog.decoded());
+        self.decode_gen = self.mem.text_generation();
     }
 
     /// Start warp 0 of every core at `entry` (lane 0 active) — the hardware
@@ -138,8 +150,15 @@ impl Emulator {
     /// on machine exit.
     fn step_warp(&mut self, c: usize, w: usize) -> Result<Option<u32>, EmuError> {
         let pc = self.cores[c].warps[w].pc;
-        let word = self.mem.read_u32(pc);
-        let instr = decode(word).map_err(|_| EmuError::Illegal { pc, word })?;
+        // fetch: predecoded image while text is unwritten, else decode
+        // straight from memory (identical semantics, including Illegal)
+        let instr = match &self.decoded {
+            Some(img) if self.mem.text_generation() == self.decode_gen => match img.get(pc) {
+                Some(i) => i,
+                None => decode_at(&self.mem, pc)?,
+            },
+            _ => decode_at(&self.mem, pc)?,
+        };
 
         let mut ctx = StepCtx {
             core_id: c as u32,

@@ -161,6 +161,16 @@ impl std::fmt::Display for EmuError {
 
 impl std::error::Error for EmuError {}
 
+/// Decode the instruction word at `pc` straight from `mem` — the slow
+/// path behind the shared predecoded image ([`crate::asm::DecodedImage`]),
+/// taken for uncovered/misaligned pcs and whenever text has been written
+/// since the image snapshot.
+#[inline]
+pub fn decode_at<M: MemIo>(mem: &M, pc: u32) -> Result<Instr, EmuError> {
+    let word = mem.read_u32(pc);
+    crate::isa::decode(word).map_err(|_| EmuError::Illegal { pc, word })
+}
+
 /// Machine context surfaced to CSR reads and syscalls.
 pub struct StepCtx<'a> {
     pub core_id: u32,

@@ -45,6 +45,11 @@ pub struct BenchResult {
     pub verified: bool,
     /// The checked output payload (consumed by the golden-model runtime).
     pub output: Vec<i32>,
+    /// Peak resident device-memory pages across the launch stream (the
+    /// footprint high-water mark — see `Memory::resident_pages`).
+    pub peak_mem_pages: u64,
+    /// Peak resident device-memory bytes (pages × 4 KiB).
+    pub peak_mem_bytes: u64,
 }
 
 impl Bench {
@@ -136,27 +141,46 @@ impl Bench {
     }
 }
 
-/// Accumulates multi-launch results (cycles sum; counter merge).
+/// Accumulates multi-launch results (cycles sum; counter merge; footprint
+/// high-water).
 pub(crate) struct Acc {
     cycles: u64,
     stats: CoreStats,
     launches: u32,
+    peak_mem_pages: u64,
+    peak_mem_bytes: u64,
 }
 
 impl Acc {
     pub(crate) fn new() -> Self {
-        Acc { cycles: 0, stats: CoreStats::default(), launches: 0 }
+        Acc {
+            cycles: 0,
+            stats: CoreStats::default(),
+            launches: 0,
+            peak_mem_pages: 0,
+            peak_mem_bytes: 0,
+        }
     }
 
     pub(crate) fn add(&mut self, r: &crate::pocl::LaunchResult) {
         self.cycles += r.cycles;
         self.stats.merge(&r.stats);
         self.launches += 1;
+        self.peak_mem_pages = self.peak_mem_pages.max(r.mem_pages);
+        self.peak_mem_bytes = self.peak_mem_bytes.max(r.mem_bytes);
     }
 
     pub(crate) fn finish(mut self, verified: bool, output: Vec<i32>) -> BenchResult {
         self.stats.cycles = self.cycles;
-        BenchResult { cycles: self.cycles, stats: self.stats, launches: self.launches, verified, output }
+        BenchResult {
+            cycles: self.cycles,
+            stats: self.stats,
+            launches: self.launches,
+            verified,
+            output,
+            peak_mem_pages: self.peak_mem_pages,
+            peak_mem_bytes: self.peak_mem_bytes,
+        }
     }
 }
 

@@ -2,8 +2,26 @@
 //! the functional emulator and the cycle simulator, plus the host-side
 //! buffer helpers the mini-OpenCL runtime uses for `clCreateBuffer`-style
 //! transfers.
+//!
+//! Every simulated load, store and fetch lands here, so this is the
+//! hottest data structure in the repo. The PR 3 substrate replaces the
+//! original `HashMap<page, Box<page>>` with a **two-level direct-index
+//! page directory** (fixed-size top-level table of `Option<Box<Leaf>>`,
+//! each leaf a fixed-size table of `Option<Box<Page>>`): an access is two
+//! shifts, two bounds-free indexes and a null check — no hashing on the
+//! hot path — while keeping the exact sparse semantics (reads of unmapped
+//! pages return zeros, writes map pages on demand, nothing is eagerly
+//! materialized). The original HashMap model survives as the reference
+//! implementation of the differential fuzz suite
+//! (`rust/tests/mem_differential.rs`), which pins the two bit-identical.
+//!
+//! The store buffer the chunked multi-core engine stages into is likewise
+//! page-granular: **shadow pages plus a dirty-word bitmap**, so buffered
+//! reads are O(1) indexing and the serialized commit is a masked word
+//! merge per dirty page instead of a per-word hash walk.
 
 use crate::asm::Program;
+use std::cell::Cell;
 use std::collections::HashMap;
 
 /// The memory operations instruction semantics need ([`crate::emu::step`]).
@@ -16,6 +34,20 @@ pub trait MemIo {
     fn read_u8(&self, addr: u32) -> u8;
     fn read_u32(&self, addr: u32) -> u32;
     fn write_u32(&mut self, addr: u32, v: u32);
+
+    /// The store-buffer overlay for the aligned word at `addr`, if this
+    /// view buffers one (fetch must see a core's own stores into text).
+    #[inline]
+    fn pending_word(&self, _addr: u32) -> Option<u32> {
+        None
+    }
+
+    /// Generation counter of the underlying [`Memory`]'s text range — the
+    /// validity token for a shared [`crate::asm::DecodedImage`] snapshot.
+    #[inline]
+    fn text_gen(&self) -> u64 {
+        0
+    }
 }
 
 impl MemIo for Memory {
@@ -33,16 +65,90 @@ impl MemIo for Memory {
     fn write_u32(&mut self, addr: u32, v: u32) {
         Memory::write_u32(self, addr, v)
     }
+
+    #[inline]
+    fn text_gen(&self) -> u64 {
+        self.text_generation()
+    }
 }
 
-/// Word-granular store buffer for one core's execution slice: stores are
-/// staged here during the parallel per-core phase and applied to the shared
-/// [`Memory`] in core order at the commit phase, so the final image is
-/// independent of host-thread scheduling.
-#[derive(Debug, Default)]
+pub(crate) const PAGE_BITS: u32 = 12;
+pub(crate) const PAGE_SIZE: usize = 1 << PAGE_BITS;
+const PAGE_MASK: u32 = (PAGE_SIZE as u32) - 1;
+/// 32-bit words per page (the store buffer's shadow granularity).
+const PAGE_WORDS: usize = PAGE_SIZE / 4;
+/// u64 bitmap words covering one page's dirty-word mask.
+const DIRTY_WORDS: usize = PAGE_WORDS / 64;
+
+/// Pages per directory leaf (second level of the page table).
+const LEAF_BITS: u32 = 10;
+const LEAF_PAGES: usize = 1 << LEAF_BITS;
+const LEAF_MASK: u32 = (LEAF_PAGES as u32) - 1;
+/// Top-level directory entries: 32-bit space / page / leaf.
+const DIR_ENTRIES: usize = 1 << (32 - PAGE_BITS - LEAF_BITS);
+
+type PageData = [u8; PAGE_SIZE];
+
+/// Second-level table: up to [`LEAF_PAGES`] lazily materialized pages.
+#[derive(Clone)]
+struct Leaf {
+    pages: Vec<Option<Box<PageData>>>,
+}
+
+impl Leaf {
+    fn new() -> Self {
+        Leaf { pages: (0..LEAF_PAGES).map(|_| None).collect() }
+    }
+}
+
+/// Page-shadow store buffer for one core's execution slice: stores are
+/// staged here during the parallel per-core phase and applied to the
+/// shared [`Memory`] in core order at the commit phase, so the final image
+/// is independent of host-thread scheduling.
+///
+/// Each touched page gets a shadow word array plus a dirty bitmap; a
+/// buffered read is a page lookup (memoized for the hot loop) and two
+/// direct indexes. Within one buffer each word holds a single final
+/// value, so commit order across pages is irrelevant.
+#[derive(Debug)]
 pub struct StoreBuffer {
-    /// 4-byte-aligned address → latest word value.
-    pub pending: HashMap<u32, u32>,
+    /// Page number → slot in `shadows` (lookup only; `shadows` keeps
+    /// deterministic insertion order for the commit walk).
+    index: HashMap<u32, u32>,
+    shadows: Vec<ShadowPage>,
+    /// Memo of the most recently touched page (tight kernels hammer one
+    /// output page; `Cell` keeps the read path `&self`).
+    last: Cell<Option<(u32, u32)>>,
+    /// Page-number bounds over all buffered stores — an O(1) reject for
+    /// lookups outside the written region (e.g. instruction fetches while
+    /// only data pages carry stores). `min > max` ⇔ empty.
+    min_page: u32,
+    max_page: u32,
+}
+
+#[derive(Debug)]
+struct ShadowPage {
+    page: u32,
+    words: Box<[u32; PAGE_WORDS]>,
+    dirty: [u64; DIRTY_WORDS],
+}
+
+impl ShadowPage {
+    fn new(page: u32) -> Self {
+        ShadowPage { page, words: Box::new([0u32; PAGE_WORDS]), dirty: [0u64; DIRTY_WORDS] }
+    }
+}
+
+impl Default for StoreBuffer {
+    fn default() -> Self {
+        StoreBuffer {
+            index: HashMap::new(),
+            shadows: Vec::new(),
+            last: Cell::new(None),
+            min_page: u32::MAX,
+            max_page: 0,
+        }
+    }
 }
 
 impl StoreBuffer {
@@ -50,11 +156,88 @@ impl StoreBuffer {
         Self::default()
     }
 
-    /// Apply every buffered store to `mem` (within one buffer each address
-    /// holds a single final value, so iteration order is irrelevant).
+    pub fn is_empty(&self) -> bool {
+        self.shadows.is_empty()
+    }
+
+    /// Shadow slot for `page`, if any (memoized).
+    #[inline]
+    fn slot(&self, page: u32) -> Option<usize> {
+        if page < self.min_page || page > self.max_page {
+            return None;
+        }
+        if let Some((p, s)) = self.last.get() {
+            if p == page {
+                return Some(s as usize);
+            }
+        }
+        let s = *self.index.get(&page)?;
+        self.last.set(Some((page, s)));
+        Some(s as usize)
+    }
+
+    /// Shadow slot for `page`, materializing it on first store.
+    #[inline]
+    fn slot_mut(&mut self, page: u32) -> usize {
+        if let Some((p, s)) = self.last.get() {
+            if p == page {
+                return s as usize;
+            }
+        }
+        let s = match self.index.get(&page) {
+            Some(&s) => s,
+            None => {
+                let s = self.shadows.len() as u32;
+                self.shadows.push(ShadowPage::new(page));
+                self.index.insert(page, s);
+                self.min_page = self.min_page.min(page);
+                self.max_page = self.max_page.max(page);
+                s
+            }
+        };
+        self.last.set(Some((page, s)));
+        s as usize
+    }
+
+    /// Stage the aligned word at `addr`.
+    #[inline]
+    pub fn store_word(&mut self, addr: u32, v: u32) {
+        debug_assert_eq!(addr & 3, 0);
+        let s = self.slot_mut(addr >> PAGE_BITS);
+        let w = ((addr & PAGE_MASK) >> 2) as usize;
+        let sp = &mut self.shadows[s];
+        sp.words[w] = v;
+        sp.dirty[w / 64] |= 1u64 << (w % 64);
+    }
+
+    /// The buffered value of the aligned word at `addr`, if one is staged.
+    #[inline]
+    pub fn word(&self, addr: u32) -> Option<u32> {
+        debug_assert_eq!(addr & 3, 0);
+        let s = self.slot(addr >> PAGE_BITS)?;
+        let sp = &self.shadows[s];
+        let w = ((addr & PAGE_MASK) >> 2) as usize;
+        if sp.dirty[w / 64] & (1u64 << (w % 64)) != 0 {
+            Some(sp.words[w])
+        } else {
+            None
+        }
+    }
+
+    /// Number of distinct buffered words (diagnostics/tests).
+    pub fn staged_words(&self) -> usize {
+        self.shadows
+            .iter()
+            .map(|sp| sp.dirty.iter().map(|m| m.count_ones() as usize).sum::<usize>())
+            .sum()
+    }
+
+    /// Apply every buffered store to `mem`: one masked word merge per
+    /// dirty page (within one buffer each address holds a single final
+    /// value, so page iteration order is irrelevant).
     pub fn commit(&self, mem: &mut Memory) {
-        for (&a, &v) in &self.pending {
-            mem.write_u32(a, v);
+        for sp in &self.shadows {
+            mem.apply_shadow(sp.page, &sp.words, &sp.dirty);
         }
     }
 }
@@ -70,10 +253,8 @@ pub struct BufferedMem<'a> {
 impl MemIo for BufferedMem<'_> {
     #[inline]
     fn read_u8(&self, addr: u32) -> u8 {
-        if !self.buf.pending.is_empty() {
-            if let Some(v) = self.buf.pending.get(&(addr & !3)) {
-                return (v >> ((addr & 3) * 8)) as u8;
-            }
+        if let Some(v) = self.buf.word(addr & !3) {
+            return (v >> ((addr & 3) * 8)) as u8;
         }
         self.base.read_u8(addr)
     }
@@ -81,10 +262,8 @@ impl MemIo for BufferedMem<'_> {
     #[inline]
     fn read_u32(&self, addr: u32) -> u32 {
         if addr & 3 == 0 {
-            if !self.buf.pending.is_empty() {
-                if let Some(v) = self.buf.pending.get(&addr) {
-                    return *v;
-                }
+            if let Some(v) = self.buf.word(addr) {
+                return v;
             }
             return self.base.read_u32(addr);
         }
@@ -98,7 +277,7 @@ impl MemIo for BufferedMem<'_> {
 
     fn write_u32(&mut self, addr: u32, v: u32) {
         if addr & 3 == 0 {
-            self.buf.pending.insert(addr, v);
+            self.buf.store_word(addr, v);
             return;
         }
         // unaligned (never emitted by exec_warp, which aligns first):
@@ -108,21 +287,46 @@ impl MemIo for BufferedMem<'_> {
         let sh = (addr & 3) * 8;
         let lo = (MemIo::read_u32(self, lo_a) & !(u32::MAX << sh)) | (v << sh);
         let hi = (MemIo::read_u32(self, hi_a) & (u32::MAX << sh)) | (v >> (32 - sh));
-        self.buf.pending.insert(lo_a, lo);
-        self.buf.pending.insert(hi_a, hi);
+        self.buf.store_word(lo_a, lo);
+        self.buf.store_word(hi_a, hi);
+    }
+
+    #[inline]
+    fn pending_word(&self, addr: u32) -> Option<u32> {
+        self.buf.word(addr & !3)
+    }
+
+    #[inline]
+    fn text_gen(&self) -> u64 {
+        self.base.text_generation()
     }
 }
 
-const PAGE_BITS: u32 = 12;
-const PAGE_SIZE: usize = 1 << PAGE_BITS;
-const PAGE_MASK: u32 = (PAGE_SIZE as u32) - 1;
-
-/// Sparse paged memory. Reads of unmapped pages return zeros; writes map
-/// pages on demand (the device has no MMU — the paper's cores are
-/// bare-metal newlib targets).
-#[derive(Default, Clone)]
+/// Sparse paged memory over a two-level direct-index page directory.
+/// Reads of unmapped pages return zeros; writes map pages on demand (the
+/// device has no MMU — the paper's cores are bare-metal newlib targets).
+/// The directory itself materializes on the first write, so a fresh
+/// `Memory` owns no heap beyond the empty `Vec`.
+#[derive(Clone)]
 pub struct Memory {
-    pages: HashMap<u32, Box<[u8; PAGE_SIZE]>>,
+    /// Top level: [`DIR_ENTRIES`] slots (empty until the first write).
+    dir: Vec<Option<Box<Leaf>>>,
+    /// Mapped (materialized) pages — the footprint high-water mark, since
+    /// pages are never unmapped.
+    resident: usize,
+    /// Text range of the last loaded program (`[lo, hi)`; `hi == 0` ⇔
+    /// none). Writes overlapping it bump `text_gen`, invalidating any
+    /// shared [`crate::asm::DecodedImage`] snapshot taken against the old
+    /// generation.
+    text_lo: u32,
+    text_hi: u32,
+    text_gen: u64,
+}
+
+impl Default for Memory {
+    fn default() -> Self {
+        Memory { dir: Vec::new(), resident: 0, text_lo: 0, text_hi: 0, text_gen: 0 }
+    }
 }
 
 impl Memory {
@@ -131,15 +335,36 @@ impl Memory {
     }
 
     #[inline]
-    fn page(&self, addr: u32) -> Option<&[u8; PAGE_SIZE]> {
-        self.pages.get(&(addr >> PAGE_BITS)).map(|b| &**b)
+    fn page(&self, addr: u32) -> Option<&PageData> {
+        let pn = addr >> PAGE_BITS;
+        match self.dir.get((pn >> LEAF_BITS) as usize) {
+            Some(Some(leaf)) => leaf.pages[(pn & LEAF_MASK) as usize].as_deref(),
+            _ => None,
+        }
     }
 
     #[inline]
-    fn page_mut(&mut self, addr: u32) -> &mut [u8; PAGE_SIZE] {
-        self.pages
-            .entry(addr >> PAGE_BITS)
-            .or_insert_with(|| Box::new([0u8; PAGE_SIZE]))
+    fn page_mut(&mut self, addr: u32) -> &mut PageData {
+        if self.dir.is_empty() {
+            self.dir = (0..DIR_ENTRIES).map(|_| None).collect();
+        }
+        let pn = addr >> PAGE_BITS;
+        let leaf = self.dir[(pn >> LEAF_BITS) as usize]
+            .get_or_insert_with(|| Box::new(Leaf::new()));
+        let slot = &mut leaf.pages[(pn & LEAF_MASK) as usize];
+        if slot.is_none() {
+            *slot = Some(Box::new([0u8; PAGE_SIZE]));
+            self.resident += 1;
+        }
+        slot.as_deref_mut().expect("page just materialized")
+    }
+
+    /// Bump the decode generation when a write overlaps the text range.
+    #[inline]
+    fn touch(&mut self, addr: u32, len: u32) {
+        if self.text_hi != 0 && addr < self.text_hi && addr.saturating_add(len) > self.text_lo {
+            self.text_gen = self.text_gen.wrapping_add(1);
+        }
     }
 
     #[inline]
@@ -152,6 +377,7 @@ impl Memory {
 
     #[inline]
     pub fn write_u8(&mut self, addr: u32, v: u8) {
+        self.touch(addr, 1);
         self.page_mut(addr)[(addr & PAGE_MASK) as usize] = v;
     }
 
@@ -184,6 +410,7 @@ impl Memory {
     pub fn write_u32(&mut self, addr: u32, v: u32) {
         let off = (addr & PAGE_MASK) as usize;
         if off + 4 <= PAGE_SIZE {
+            self.touch(addr, 4);
             let p = self.page_mut(addr);
             p[off..off + 4].copy_from_slice(&v.to_le_bytes());
             return;
@@ -192,51 +419,178 @@ impl Memory {
         self.write_u16(addr.wrapping_add(2), (v >> 16) as u16);
     }
 
-    /// Load an assembled program image.
+    /// Load an assembled program image (contiguous runs of the sparse byte
+    /// map become per-page bulk copies) and anchor the text range the
+    /// shared decoded image is validated against.
     pub fn load_program(&mut self, prog: &Program) {
-        for (addr, byte) in prog.bytes() {
-            self.write_u8(addr, byte);
+        let mut start: Option<u32> = None;
+        let mut run: Vec<u8> = Vec::new();
+        for (a, b) in prog.bytes() {
+            match start {
+                Some(s) if s.wrapping_add(run.len() as u32) == a => run.push(b),
+                _ => {
+                    if let Some(s) = start {
+                        self.write_block(s, &run);
+                    }
+                    start = Some(a);
+                    run.clear();
+                    run.push(b);
+                }
+            }
         }
+        if let Some(s) = start {
+            self.write_block(s, &run);
+        }
+        // (Re)anchor the watched text range; a load always invalidates any
+        // previously snapshotted decoded image for this memory.
+        self.text_lo = prog.instr_addrs.iter().copied().min().unwrap_or(0);
+        self.text_hi =
+            prog.instr_addrs.iter().copied().max().map_or(0, |a| a.saturating_add(4));
+        self.text_gen = self.text_gen.wrapping_add(1);
     }
 
-    /// Host→device bulk copy (mini-OpenCL `clEnqueueWriteBuffer`).
+    /// Host→device bulk copy (mini-OpenCL `clEnqueueWriteBuffer`): one
+    /// `copy_from_slice` per covered page.
     pub fn write_block(&mut self, addr: u32, data: &[u8]) {
-        for (i, b) in data.iter().enumerate() {
-            self.write_u8(addr.wrapping_add(i as u32), *b);
+        if data.is_empty() {
+            return;
+        }
+        let mut a = addr;
+        let mut rest = data;
+        while !rest.is_empty() {
+            let off = (a & PAGE_MASK) as usize;
+            let n = (PAGE_SIZE - off).min(rest.len());
+            // per-chunk so address-space wraparound still hits the text
+            // range at the chunk's real (wrapped) address
+            self.touch(a, n as u32);
+            self.page_mut(a)[off..off + n].copy_from_slice(&rest[..n]);
+            rest = &rest[n..];
+            a = a.wrapping_add(n as u32);
         }
     }
 
-    /// Device→host bulk copy (mini-OpenCL `clEnqueueReadBuffer`).
+    /// Device→host bulk copy (mini-OpenCL `clEnqueueReadBuffer`): per-page
+    /// copies; unmapped pages read as zeros.
     pub fn read_block(&self, addr: u32, len: usize) -> Vec<u8> {
-        (0..len).map(|i| self.read_u8(addr.wrapping_add(i as u32))).collect()
+        let mut out = vec![0u8; len];
+        let mut a = addr;
+        let mut i = 0usize;
+        while i < len {
+            let off = (a & PAGE_MASK) as usize;
+            let n = (PAGE_SIZE - off).min(len - i);
+            if let Some(p) = self.page(a) {
+                out[i..i + n].copy_from_slice(&p[off..off + n]);
+            }
+            i += n;
+            a = a.wrapping_add(n as u32);
+        }
+        out
     }
 
-    /// Convenience: write a slice of words.
+    /// Convenience: write a slice of words (per-page bulk copies when the
+    /// base address is word-aligned).
     pub fn write_u32_slice(&mut self, addr: u32, data: &[u32]) {
-        for (i, w) in data.iter().enumerate() {
-            self.write_u32(addr.wrapping_add(4 * i as u32), *w);
+        if data.is_empty() {
+            return;
+        }
+        if addr & 3 != 0 {
+            for (i, w) in data.iter().enumerate() {
+                self.write_u32(addr.wrapping_add(4 * i as u32), *w);
+            }
+            return;
+        }
+        let mut a = addr;
+        let mut rest = data;
+        while !rest.is_empty() {
+            let off = (a & PAGE_MASK) as usize;
+            let nw = ((PAGE_SIZE - off) / 4).min(rest.len());
+            // per-chunk touch: see write_block (wraparound correctness)
+            self.touch(a, (nw * 4) as u32);
+            let p = self.page_mut(a);
+            for (j, w) in rest[..nw].iter().enumerate() {
+                let o = off + 4 * j;
+                p[o..o + 4].copy_from_slice(&w.to_le_bytes());
+            }
+            rest = &rest[nw..];
+            a = a.wrapping_add((nw * 4) as u32);
         }
     }
 
-    /// Convenience: read a slice of words.
+    /// Convenience: read a slice of words (per-page bulk when aligned).
     pub fn read_u32_slice(&self, addr: u32, n: usize) -> Vec<u32> {
-        (0..n).map(|i| self.read_u32(addr.wrapping_add(4 * i as u32))).collect()
+        if addr & 3 != 0 {
+            return (0..n).map(|i| self.read_u32(addr.wrapping_add(4 * i as u32))).collect();
+        }
+        let mut out = vec![0u32; n];
+        let mut a = addr;
+        let mut i = 0usize;
+        while i < n {
+            let off = (a & PAGE_MASK) as usize;
+            let nw = ((PAGE_SIZE - off) / 4).min(n - i);
+            if let Some(p) = self.page(a) {
+                for (j, slot) in out[i..i + nw].iter_mut().enumerate() {
+                    let o = off + 4 * j;
+                    *slot = u32::from_le_bytes([p[o], p[o + 1], p[o + 2], p[o + 3]]);
+                }
+            }
+            i += nw;
+            a = a.wrapping_add((nw * 4) as u32);
+        }
+        out
     }
 
     /// Convenience for i32 payloads (our kernels are int/fixed-point).
     pub fn write_i32_slice(&mut self, addr: u32, data: &[i32]) {
+        // i32 → u32 is a bit-level reinterpretation; stage through the
+        // word path without an intermediate Vec for small slices
         for (i, w) in data.iter().enumerate() {
             self.write_u32(addr.wrapping_add(4 * i as u32), *w as u32);
         }
     }
 
     pub fn read_i32_slice(&self, addr: u32, n: usize) -> Vec<i32> {
-        (0..n).map(|i| self.read_u32(addr.wrapping_add(4 * i as u32)) as i32).collect()
+        self.read_u32_slice(addr, n).into_iter().map(|w| w as i32).collect()
     }
 
-    /// Number of resident pages (footprint diagnostics).
+    /// Apply one shadow page's dirty words (the store-buffer commit path):
+    /// a masked word merge into the destination page.
+    pub(crate) fn apply_shadow(
+        &mut self,
+        page: u32,
+        words: &[u32; PAGE_WORDS],
+        dirty: &[u64; DIRTY_WORDS],
+    ) {
+        let base_addr = page << PAGE_BITS;
+        self.touch(base_addr, PAGE_SIZE as u32);
+        let p = self.page_mut(base_addr);
+        for (wi, &mask) in dirty.iter().enumerate() {
+            let mut m = mask;
+            while m != 0 {
+                let bit = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let idx = wi * 64 + bit;
+                p[idx * 4..idx * 4 + 4].copy_from_slice(&words[idx].to_le_bytes());
+            }
+        }
+    }
+
+    /// Number of resident (materialized) pages. Pages are never unmapped,
+    /// so this is also the footprint high-water mark.
     pub fn resident_pages(&self) -> usize {
-        self.pages.len()
+        self.resident
+    }
+
+    /// Resident footprint in bytes (pages × page size).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.resident as u64) << PAGE_BITS
+    }
+
+    /// Generation counter for the watched text range (see
+    /// [`crate::asm::DecodedImage`]): machines snapshot it at program load
+    /// and treat the decoded image as stale once it moves.
+    #[inline]
+    pub fn text_generation(&self) -> u64 {
+        self.text_gen
     }
 }
 
@@ -259,6 +613,7 @@ mod tests {
     fn unmapped_reads_zero() {
         let m = Memory::new();
         assert_eq!(m.read_u32(0xFFFF_0000), 0);
+        assert_eq!(m.resident_pages(), 0, "reads must not materialize pages");
     }
 
     #[test]
@@ -269,6 +624,7 @@ mod tests {
         assert_eq!(m.read_u32(addr), 0x1122_3344);
         assert_eq!(m.read_u8(addr), 0x44);
         assert_eq!(m.read_u8(addr + 3), 0x11);
+        assert_eq!(m.resident_pages(), 2);
     }
 
     #[test]
@@ -280,6 +636,19 @@ mod tests {
     }
 
     #[test]
+    fn block_copies_cross_pages_and_wrap() {
+        let mut m = Memory::new();
+        let data: Vec<u8> = (0..255u32).map(|i| (i * 7) as u8).collect();
+        // crosses a page boundary mid-block
+        m.write_block(0x0000_0F80, &data);
+        assert_eq!(m.read_block(0x0000_0F80, data.len()), data);
+        // wraps the top of the address space
+        m.write_block(0xFFFF_FFF0, &data[..32]);
+        assert_eq!(m.read_block(0xFFFF_FFF0, 32), &data[..32]);
+        assert_eq!(m.read_u8(0), data[16]);
+    }
+
+    #[test]
     fn i32_slices() {
         let mut m = Memory::new();
         m.write_i32_slice(0x100, &[-1, 2, -3]);
@@ -287,10 +656,46 @@ mod tests {
     }
 
     #[test]
+    fn u32_slices_cross_pages() {
+        let mut m = Memory::new();
+        let words: Vec<u32> = (0..2048u32).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+        let base = (1 << PAGE_BITS) - 16; // run crosses two page boundaries
+        m.write_u32_slice(base, &words);
+        assert_eq!(m.read_u32_slice(base, words.len()), words);
+    }
+
+    #[test]
     fn wraparound_addresses_do_not_panic() {
         let mut m = Memory::new();
         m.write_u32(0xFFFF_FFFE, 0xAABB_CCDD);
         assert_eq!(m.read_u32(0xFFFF_FFFE), 0xAABB_CCDD);
+    }
+
+    #[test]
+    fn resident_pages_track_writes_only() {
+        let mut m = Memory::new();
+        assert_eq!(m.resident_pages(), 0);
+        let _ = m.read_block(0x9000_0000, 64 * 1024);
+        assert_eq!(m.resident_pages(), 0, "bulk reads must not materialize");
+        m.write_u8(0x9000_0000, 1);
+        m.write_u8(0x9000_0001, 2); // same page
+        assert_eq!(m.resident_pages(), 1);
+        m.write_u8(0xA000_0000, 3); // distant page, distinct leaf
+        assert_eq!(m.resident_pages(), 2);
+        assert_eq!(m.resident_bytes(), 2 * PAGE_SIZE as u64);
+    }
+
+    #[test]
+    fn text_generation_bumps_only_on_text_writes() {
+        let mut m = Memory::new();
+        let prog = crate::asm::assemble("li t0, 1\nli t1, 2").unwrap();
+        m.load_program(&prog);
+        let g0 = m.text_generation();
+        m.write_u32(0x9000_0000, 7); // data write: no bump
+        assert_eq!(m.text_generation(), g0);
+        let text = prog.instr_addrs[0];
+        m.write_u32(text, 0x13); // text write: bump
+        assert!(m.text_generation() > g0);
     }
 
     #[test]
@@ -321,5 +726,41 @@ mod tests {
         let mut bm = BufferedMem { base: &base, buf: &mut buf };
         MemIo::write_u32(&mut bm, 0x203, 0xCAFE_BABE);
         assert_eq!(MemIo::read_u32(&bm, 0x203), 0xCAFE_BABE);
+    }
+
+    #[test]
+    fn shadow_buffer_commit_merges_only_dirty_words() {
+        let mut base = Memory::new();
+        for i in 0..16u32 {
+            base.write_u32(0x2000 + 4 * i, 0xAAAA_0000 | i);
+        }
+        let mut buf = StoreBuffer::new();
+        {
+            let mut bm = BufferedMem { base: &base, buf: &mut buf };
+            MemIo::write_u32(&mut bm, 0x2004, 1);
+            MemIo::write_u32(&mut bm, 0x2014, 2);
+            // same word twice: last value wins, still one staged word
+            MemIo::write_u32(&mut bm, 0x2014, 3);
+        }
+        assert_eq!(buf.staged_words(), 2);
+        buf.commit(&mut base);
+        assert_eq!(base.read_u32(0x2000), 0xAAAA_0000);
+        assert_eq!(base.read_u32(0x2004), 1);
+        assert_eq!(base.read_u32(0x2014), 3);
+        assert_eq!(base.read_u32(0x2008), 0xAAAA_0002, "clean words untouched");
+    }
+
+    #[test]
+    fn pending_word_surfaces_buffered_stores_only() {
+        let mut base = Memory::new();
+        base.write_u32(0x300, 42);
+        let mut buf = StoreBuffer::new();
+        let mut bm = BufferedMem { base: &base, buf: &mut buf };
+        assert_eq!(MemIo::pending_word(&bm, 0x300), None);
+        MemIo::write_u32(&mut bm, 0x304, 7);
+        assert_eq!(MemIo::pending_word(&bm, 0x304), Some(7));
+        assert_eq!(MemIo::pending_word(&bm, 0x300), None);
+        // unaligned probes resolve to the containing word
+        assert_eq!(MemIo::pending_word(&bm, 0x306), Some(7));
     }
 }

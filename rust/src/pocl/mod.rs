@@ -62,6 +62,12 @@ pub struct LaunchResult {
     /// simX statistics (empty default for the functional backend).
     pub stats: CoreStats,
     pub console: String,
+    /// Resident device-memory pages after the launch (footprint
+    /// high-water: pages are never unmapped). Deterministic, so queued
+    /// launches report exactly the sequential value.
+    pub mem_pages: u64,
+    /// Resident device-memory bytes (pages × 4 KiB).
+    pub mem_bytes: u64,
 }
 
 /// Launch failure.
@@ -149,7 +155,14 @@ pub(crate) fn execute_launch(
             if res.status != ExitStatus::Exited(0) {
                 return Err(LaunchError::BadExit(res.status));
             }
-            Ok(LaunchResult { status: res.status, cycles: res.cycles, stats: res.stats, console })
+            Ok(LaunchResult {
+                status: res.status,
+                cycles: res.cycles,
+                stats: res.stats,
+                console,
+                mem_pages: mem.resident_pages() as u64,
+                mem_bytes: mem.resident_bytes(),
+            })
         }
         Backend::Emu => {
             let mut emu = Emulator::new(config);
@@ -163,7 +176,14 @@ pub(crate) fn execute_launch(
             if status != ExitStatus::Exited(0) {
                 return Err(LaunchError::BadExit(status));
             }
-            Ok(LaunchResult { status, cycles: 0, stats: CoreStats::default(), console })
+            Ok(LaunchResult {
+                status,
+                cycles: 0,
+                stats: CoreStats::default(),
+                console,
+                mem_pages: mem.resident_pages() as u64,
+                mem_bytes: mem.resident_bytes(),
+            })
         }
     }
 }

@@ -23,11 +23,15 @@
 //! `VortexDevice::launch` in enqueue order, so every launch's result is
 //! **bit-identical** to sequential launches on the device that ran it
 //! (asserted in `rust/tests/launch_queue.rs`). The dispatcher for unpinned
-//! launches is a deterministic work-stealing plan: each launch goes to the
-//! least-loaded device at enqueue time (work items assigned this batch;
-//! ties break to the lowest device index), so placement depends only on
-//! the enqueue sequence — never on host timing — while `finish` workers
-//! steal whole streams from a shared index.
+//! launches is a deterministic cost-model plan: each launch goes to the
+//! device with the smallest projected batch cost at enqueue time, where a
+//! launch's cost on a device is estimated from that device's **observed
+//! simulated cycles per work item** over completed launches (so a 32×32
+//! config is no longer scheduled like a 2×2 one), falling back to the raw
+//! work-item count before a device has any history. Ties break to the
+//! lowest device index. Placement depends only on the enqueue sequence
+//! and on deterministic simulation results — never on host timing — while
+//! `finish` workers steal whole streams from a shared index.
 //!
 //! ```text
 //! let mut q = LaunchQueue::new(jobs);
@@ -130,10 +134,26 @@ pub struct LaunchQueue {
     /// owned-stream results carry an empty `Memory`.
     pub stream_snapshots: bool,
     devices: Vec<VortexDevice>,
-    /// Work items (NDRange sizes) assigned per device in the current
-    /// batch — the deterministic dispatcher's load metric.
-    assigned_load: Vec<u64>,
+    /// Per-device dispatcher state (assigned batch cost + observed cost
+    /// model), indexed like `devices`.
+    sched: Vec<DeviceSched>,
     pending: Vec<Pending>,
+}
+
+/// Deterministic per-device cost model for the unpinned dispatcher
+/// (ROADMAP "dispatcher cost model"): completed SimX launches teach the
+/// queue each device's simulated cycles per work item, so heterogeneous
+/// configs are weighted by how fast they actually chew through work
+/// rather than by raw work-item counts.
+#[derive(Clone, Copy, Debug, Default)]
+struct DeviceSched {
+    /// Estimated cost assigned this batch (cycles once the device has
+    /// history, work items before — see [`LaunchQueue::cost_estimate`]).
+    assigned: u64,
+    /// Observed totals from completed launches (cycles > 0 only, so the
+    /// functional backend never poisons the model with zeros).
+    total_cycles: u64,
+    total_items: u64,
 }
 
 impl LaunchQueue {
@@ -148,8 +168,30 @@ impl LaunchQueue {
             exec_mode: ExecMode::default_from_env(),
             stream_snapshots: true,
             devices: Vec::new(),
-            assigned_load: Vec::new(),
+            sched: Vec::new(),
             pending: Vec::new(),
+        }
+    }
+
+    /// Estimated cost of `total` work items on device `di`: observed
+    /// cycles per work item once the device has completed launches. A
+    /// device with no history of its own borrows the fleet-wide average
+    /// cycles/item so estimates stay in one unit (cycles) as soon as any
+    /// device is trained; before any training at all, the raw work-item
+    /// count is the metric (exactly the pre-cost-model least-loaded
+    /// dispatch). Pure integer math — deterministic.
+    fn cost_estimate(&self, di: usize, total: u32) -> u64 {
+        let s = &self.sched[di];
+        if s.total_items > 0 {
+            return ((total as u128 * s.total_cycles as u128) / s.total_items as u128) as u64;
+        }
+        let (cycles, items) = self.sched.iter().fold((0u128, 0u128), |(c, i), s| {
+            (c + s.total_cycles as u128, i + s.total_items as u128)
+        });
+        if items > 0 {
+            ((total as u128 * cycles) / items) as u64
+        } else {
+            total as u64
         }
     }
 
@@ -174,7 +216,7 @@ impl LaunchQueue {
     /// welcome) and return its id.
     pub fn add_device(&mut self, dev: VortexDevice) -> DeviceId {
         self.devices.push(dev);
-        self.assigned_load.push(0);
+        self.sched.push(DeviceSched::default());
         DeviceId(self.devices.len() - 1)
     }
 
@@ -236,7 +278,9 @@ impl LaunchQueue {
             return Err(LaunchError::TooManyArgs(args.len()));
         }
         self.devices[id.0].ensure_cached(kernel)?;
-        self.assigned_load[id.0] += total as u64;
+        let est = self.cost_estimate(id.0, total);
+        let s = &mut self.sched[id.0];
+        s.assigned = s.assigned.saturating_add(est);
         self.pending.push(Pending::Owned {
             device: id.0,
             launch: OwnedLaunch {
@@ -249,11 +293,15 @@ impl LaunchQueue {
         Ok(LaunchHandle(self.pending.len() - 1))
     }
 
-    /// Enqueue an unpinned launch: the dispatcher places it on the
-    /// least-loaded owned device (work items assigned this batch; ties to
+    /// Enqueue an unpinned launch: the dispatcher places it on the device
+    /// with the smallest *projected* batch cost — cost already assigned
+    /// this batch plus this launch's estimated cost on that device
+    /// ([`LaunchQueue::cost_estimate`]: observed cycles per work item,
+    /// falling back to work-item count before first completion; ties to
     /// the lowest device index). Placement happens at enqueue time, so it
-    /// is a pure function of the enqueue sequence — deterministic across
-    /// runs and worker counts. Returns the handle and the chosen device.
+    /// is a pure function of the enqueue sequence and of deterministic
+    /// simulation history — identical across runs and worker counts.
+    /// Returns the handle and the chosen device.
     pub fn enqueue_any(
         &mut self,
         kernel: &Kernel,
@@ -265,7 +313,9 @@ impl LaunchQueue {
             return Err(LaunchError::NoDevice);
         }
         let di = (0..self.devices.len())
-            .min_by_key(|&i| (self.assigned_load[i], i))
+            .min_by_key(|&i| {
+                (self.sched[i].assigned.saturating_add(self.cost_estimate(i, total)), i)
+            })
             .expect("devices is non-empty");
         let id = DeviceId(di);
         let h = self.enqueue_on(id, kernel, total, args, backend)?;
@@ -279,22 +329,29 @@ impl LaunchQueue {
     pub fn finish(&mut self) -> Vec<Result<QueuedResult, LaunchError>> {
         let pending = std::mem::take(&mut self.pending);
         let total = pending.len();
-        // The batch is taken: its dispatcher loads are spent. Resetting
-        // here (not after the run) also keeps a queue whose job panicked
+        // The batch is taken: its dispatcher loads are spent (the cost
+        // model's observed totals persist across batches). Resetting here
+        // (not after the run) also keeps a queue whose job panicked
         // mid-run in a sane state for the NoDevice/`add_device` paths.
-        for load in &mut self.assigned_load {
-            *load = 0;
+        for s in &mut self.sched {
+            s.assigned = 0;
         }
 
         // Partition into streams: snapshots are singleton jobs; owned
-        // launches group per device, preserving enqueue order.
+        // launches group per device, preserving enqueue order. Owned
+        // launches also record `(device, work items)` so completed results
+        // can feed the dispatcher's cost model.
         let mut per_dev: Vec<Vec<(usize, OwnedLaunch)>> =
             (0..self.devices.len()).map(|_| Vec::new()).collect();
+        let mut owned_meta: Vec<Option<(usize, u32)>> = vec![None; total];
         let mut streams = Vec::new();
         for (idx, p) in pending.into_iter().enumerate() {
             match p {
                 Pending::Snapshot(job) => streams.push(Stream::Snapshot { idx, job }),
-                Pending::Owned { device, launch } => per_dev[device].push((idx, launch)),
+                Pending::Owned { device, launch } => {
+                    owned_meta[idx] = Some((device, launch.total));
+                    per_dev[device].push((idx, launch));
+                }
             }
         }
         let mut parked: Vec<Option<VortexDevice>> =
@@ -360,10 +417,24 @@ impl LaunchQueue {
             .into_iter()
             .map(|d| d.expect("device returned from stream"))
             .collect();
-        results
+        let results: Vec<Result<QueuedResult, LaunchError>> = results
             .into_iter()
             .map(|r| r.expect("every enqueued launch produces a result"))
-            .collect()
+            .collect();
+        // Teach the dispatcher's cost model from completed owned launches
+        // (enqueue-index order; simulation cycles are deterministic, so
+        // the model — and future placements — stay deterministic too).
+        for (idx, meta) in owned_meta.iter().enumerate() {
+            let Some((di, items)) = *meta else { continue };
+            if let Ok(qr) = &results[idx] {
+                if qr.result.cycles > 0 && items > 0 {
+                    let s = &mut self.sched[di];
+                    s.total_cycles = s.total_cycles.saturating_add(qr.result.cycles);
+                    s.total_items = s.total_items.saturating_add(items as u64);
+                }
+            }
+        }
+        results
     }
 }
 
@@ -512,13 +583,70 @@ kernel_body:
         let p2 = place(&mut q2, &totals);
         // identical enqueue sequence ⇒ identical placement
         assert_eq!(p1, p2);
-        // least-loaded greedy: 16→d0, 4→d1, 4→d2, 8→d1(4)<d2(4)? ties to
-        // lowest ⇒ d1, 16→d2(4), 2→d1? loads now d0=16,d1=12,d2=20 ⇒ d1
+        // no completions yet ⇒ the cost model falls back to work items and
+        // the projected-cost greedy reduces to least-loaded: 16→d0, 4→d1,
+        // 4→d2, 8→d1 (12 < d2's 12? tie ⇒ lowest), 16→d2, 2→d1
         assert_eq!(p1, vec![0, 1, 2, 1, 2, 1]);
         // every device got work
         for d in 0..3 {
             assert!(p1.contains(&d), "device {d} unused");
         }
+    }
+
+    #[test]
+    fn cost_model_weights_unpinned_dispatch_by_observed_cycles() {
+        // Device 0 is the *slow* config, device 1 the fast one. Before any
+        // history, equal-size launches tie and the dispatcher would pick
+        // device 0 (lowest index). After one observed launch per device,
+        // the cycles-per-item model must route the next unpinned launch to
+        // the fast device instead — and do so deterministically.
+        let n = 64u32;
+        let k = scale_kernel("scale9", 9);
+        let build_queue = || {
+            let mut q = LaunchQueue::new(2);
+            for (w, t) in [(2u32, 2u32), (8, 8)] {
+                let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+                let a = dev.create_buffer(n as usize * 4);
+                let b = dev.create_buffer(n as usize * 4);
+                dev.write_buffer_i32(a, &vec![3; n as usize]);
+                let _ = b;
+                q.add_device(dev);
+            }
+            q
+        };
+        // identical buffer layout on both devices: in at the arena base,
+        // out one 64B-aligned 256-byte buffer later
+        let args = [0x9000_0000u32, 0x9000_0100];
+        let run_once = |q: &mut LaunchQueue| -> Vec<usize> {
+            // train the model: one pinned launch per device
+            let h0 = q.enqueue_on(DeviceId(0), &k, n, &args, Backend::SimX).unwrap();
+            let h1 = q.enqueue_on(DeviceId(1), &k, n, &args, Backend::SimX).unwrap();
+            let train = q.finish();
+            let c0 = train[h0.0].as_ref().unwrap().result.cycles;
+            let c1 = train[h1.0].as_ref().unwrap().result.cycles;
+            assert!(c1 < c0, "premise: 8x8 ({c1}) must beat 2x2 ({c0}) on this kernel");
+            // now dispatch unpinned work
+            let mut placed = Vec::new();
+            for _ in 0..4 {
+                let (_, d) = q.enqueue_any(&k, n, &args, Backend::SimX).unwrap();
+                placed.push(d.0);
+            }
+            for r in q.finish() {
+                r.unwrap();
+            }
+            placed
+        };
+        let mut q1 = build_queue();
+        let p1 = run_once(&mut q1);
+        // the 8x8 device is measurably cheaper per work item, so the first
+        // unpinned launch must land there (pre-model it would tie to d0)
+        assert_eq!(p1[0], 1, "trained model must prefer the fast device: {p1:?}");
+        // and the fast device carries at least as much of the batch
+        let fast = p1.iter().filter(|&&d| d == 1).count();
+        assert!(fast >= 2, "fast device underused: {p1:?}");
+        // identical history + enqueue sequence ⇒ identical placement
+        let mut q2 = build_queue();
+        assert_eq!(run_once(&mut q2), p1);
     }
 
     #[test]

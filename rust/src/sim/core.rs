@@ -12,11 +12,12 @@ use super::scheduler::WarpScheduler;
 use super::scoreboard::Scoreboard;
 use super::smem::SharedMem;
 use super::stats::CoreStats;
+use crate::asm::DecodedImage;
 use crate::config::MachineConfig;
 use crate::emu::barrier::{is_global, BarrierTable};
-use crate::emu::step::{exec_warp, EmuError, Event, MemAccess, StepCtx};
+use crate::emu::step::{decode_at, exec_warp, EmuError, Event, MemAccess, StepCtx};
 use crate::emu::warp::Warp;
-use crate::isa::{decode, AluOp, Instr};
+use crate::isa::{AluOp, Instr};
 use crate::mem::MemIo;
 
 /// Events the machine (multi-core container) must act on.
@@ -55,6 +56,32 @@ pub struct SliceReport {
     pub ran_until: u64,
 }
 
+/// Machine-owned fetch context handed into each core step: the shared
+/// predecoded text image ([`crate::asm::DecodedImage`], one per program,
+/// `Arc`-shared across cores/devices/queue workers) plus the
+/// `Memory::text_generation` snapshot it is valid against. Read-only
+/// during core slices, so concurrently running cores share it freely.
+#[derive(Clone, Copy, Default)]
+pub struct FetchCtx<'a> {
+    pub image: Option<&'a DecodedImage>,
+    pub gen: u64,
+}
+
+impl FetchCtx<'_> {
+    /// The predecoded instruction at `pc`, valid only while (a) text has
+    /// not been written since the snapshot and (b) the executing core has
+    /// no store buffered over the fetched word. `None` ⇒ the caller
+    /// decodes from memory (identical semantics).
+    #[inline]
+    fn lookup<M: MemIo>(&self, pc: u32, mem: &M) -> Option<Instr> {
+        let img = self.image?;
+        if mem.text_gen() != self.gen || mem.pending_word(pc & !3).is_some() {
+            return None;
+        }
+        img.get(pc)
+    }
+}
+
 /// Fixed syscall cost (rare; host-proxied NewLib stubs).
 const SYSCALL_LATENCY: u64 = 20;
 /// Extra bubble for instructions the decode stage must stall on
@@ -75,10 +102,6 @@ pub struct SimCore {
     /// Per-warp fetched-instruction buffer (avoids refetching the I$ on
     /// issue-stage retries; invalidated on redirects).
     ibuf: Vec<Option<(u32, Instr)>>,
-    /// Direct-mapped decoded-instruction cache (tag = pc). Purely a host
-    /// optimization — decode each static instruction once (§Perf iter 3);
-    /// the *modeled* I$ timing is untouched.
-    dec_cache: Vec<(u32, Instr)>,
     /// Load/store unit port busy-until.
     lsu_busy_until: u64,
     /// Non-pipelined divider busy-until.
@@ -133,7 +156,6 @@ impl SimCore {
             smem: SharedMem::new(cfg.smem),
             ready_at: vec![0; cfg.num_warps as usize],
             ibuf: vec![None; cfg.num_warps as usize],
-            dec_cache: vec![(u32::MAX, Instr::Fence); 4096],
             lsu_busy_until: 0,
             div_busy_until: 0,
             local_barriers: BarrierTable::new(),
@@ -210,6 +232,7 @@ impl SimCore {
         end: u64,
         mem: &mut M,
         shared: &mut MachineShared<'_>,
+        fetch: FetchCtx<'_>,
     ) -> Result<SliceReport, EmuError> {
         let mut rep = SliceReport::default();
         let mut now = start;
@@ -232,7 +255,7 @@ impl SimCore {
                     continue;
                 }
             }
-            match self.step(now, mem, shared)? {
+            match self.step(now, mem, shared, fetch)? {
                 Some(CoreEvent::Exit(code)) => {
                     rep.exit = Some((now, code));
                     rep.ran_until = now + 1;
@@ -257,6 +280,7 @@ impl SimCore {
         now: u64,
         mem: &mut M,
         shared: &mut MachineShared<'_>,
+        fetch: FetchCtx<'_>,
     ) -> Result<Option<CoreEvent>, EmuError> {
         self.stats.cycles = now + 1;
         self.stats.active_warp_cycles += self.scheduler.active_count() as u64;
@@ -288,14 +312,10 @@ impl SimCore {
                     return Ok(None);
                 }
                 self.stats.icache_hits += 1;
-                let slot = ((pc >> 2) & 0xFFF) as usize;
-                let i = if self.dec_cache[slot].0 == pc {
-                    self.dec_cache[slot].1
-                } else {
-                    let word = mem.read_u32(pc);
-                    let i = decode(word).map_err(|_| EmuError::Illegal { pc, word })?;
-                    self.dec_cache[slot] = (pc, i);
-                    i
+                // shared predecoded image when valid; memory decode else
+                let i = match fetch.lookup(pc, mem) {
+                    Some(i) => i,
+                    None => decode_at(mem, pc)?,
                 };
                 self.ibuf[wi] = Some((pc, i));
                 i

@@ -20,16 +20,17 @@ pub mod scoreboard;
 pub mod smem;
 pub mod stats;
 
-pub use self::core::{CoreEvent, MachineShared, SimCore, SliceReport, TraceEntry};
+pub use self::core::{CoreEvent, FetchCtx, MachineShared, SimCore, SliceReport, TraceEntry};
 pub use stats::CoreStats;
 
-use crate::asm::Program;
+use crate::asm::{DecodedImage, Program};
 use crate::config::MachineConfig;
 use crate::coordinator::pool;
 use crate::emu::barrier::BarrierTable;
 use crate::emu::step::EmuError;
 use crate::emu::ExitStatus;
 use crate::mem::{BufferedMem, Memory, StoreBuffer};
+use std::sync::Arc;
 
 /// How the machine steps its cores.
 ///
@@ -129,6 +130,11 @@ pub struct RunResult {
     pub stats: CoreStats,
     /// Per-core stats.
     pub per_core: Vec<CoreStats>,
+    /// Resident (materialized) device-memory pages at run end — the
+    /// footprint high-water mark, since pages are never unmapped.
+    pub mem_resident_pages: u64,
+    /// Resident device-memory bytes (pages × 4 KiB).
+    pub mem_resident_bytes: u64,
 }
 
 /// The cycle-level machine: lock-step cores sharing memory and the global
@@ -149,6 +155,11 @@ pub struct Simulator {
     pub chunk_policy: ChunkPolicy,
     /// Chunk-schedule observability for the last `run`.
     pub chunk_telemetry: ChunkTelemetry,
+    /// Shared predecoded text image of the loaded program (one per
+    /// [`Program`], `Arc`-shared across every machine that loads it).
+    decoded: Option<Arc<DecodedImage>>,
+    /// `Memory::text_generation` snapshot the image is valid against.
+    decode_gen: u64,
 }
 
 /// One core's buffered side effects from an execution slice, merged by the
@@ -170,6 +181,7 @@ fn run_core_slice(
     start: u64,
     end: u64,
     heap0: u32,
+    fetch: FetchCtx<'_>,
 ) -> SliceOut {
     let mut stores = StoreBuffer::new();
     let mut console = Vec::new();
@@ -177,7 +189,7 @@ fn run_core_slice(
     let report = {
         let mut mem = BufferedMem { base, buf: &mut stores };
         let mut shared = MachineShared { console: &mut console, heap_end: &mut heap };
-        core.run_slice(start, end, &mut mem, &mut shared)
+        core.run_slice(start, end, &mut mem, &mut shared, fetch)
     };
     SliceOut { report, stores, console, heap_end: heap, heap_touched: heap != heap0 }
 }
@@ -197,11 +209,16 @@ impl Simulator {
             chunk_cycles: DEFAULT_CHUNK_CYCLES,
             chunk_policy: ChunkPolicy::default(),
             chunk_telemetry: ChunkTelemetry::default(),
+            decoded: None,
+            decode_gen: 0,
         }
     }
 
+    /// Load a program image and adopt its shared predecoded text image.
     pub fn load(&mut self, prog: &Program) {
         self.mem.load_program(prog);
+        self.decoded = Some(prog.decoded());
+        self.decode_gen = self.mem.text_generation();
     }
 
     /// Start warp 0 of every core at `entry`.
@@ -303,7 +320,9 @@ impl Simulator {
                 }
                 let mut shared =
                     MachineShared { console: &mut self.console, heap_end: &mut self.heap_end };
-                let event = self.cores[c].step(self.cycle, &mut self.mem, &mut shared)?;
+                let fetch = FetchCtx { image: self.decoded.as_deref(), gen: self.decode_gen };
+                let event =
+                    self.cores[c].step(self.cycle, &mut self.mem, &mut shared, fetch)?;
                 match event {
                     Some(CoreEvent::Exit(code)) => {
                         exit_code = Some(code);
@@ -386,12 +405,13 @@ impl Simulator {
 
             // ---- phase: every core runs its slice against a frozen view ----
             let (cores, mem_ref) = (&mut self.cores, &self.mem);
+            let fetch = FetchCtx { image: self.decoded.as_deref(), gen: self.decode_gen };
             let outs: Vec<Option<SliceOut>> = match self.exec_mode {
                 ExecMode::Serial => cores
                     .iter_mut()
                     .map(|core| {
                         if core.any_active() {
-                            Some(run_core_slice(core, mem_ref, start, end, heap0))
+                            Some(run_core_slice(core, mem_ref, start, end, heap0, fetch))
                         } else {
                             None
                         }
@@ -409,8 +429,8 @@ impl Simulator {
                         .filter(|(_, c)| c.any_active())
                         .collect();
                     let workers = pool::global().size().min(active.len().max(1));
-                    let sliced = pool::run_indexed(workers, active, |_, (i, core)| {
-                        (i, run_core_slice(core, mem_ref, start, end, heap0))
+                    let sliced = pool::run_indexed(workers, active, move |_, (i, core)| {
+                        (i, run_core_slice(core, mem_ref, start, end, heap0, fetch))
                     });
                     for (i, out) in sliced {
                         outs[i] = Some(out);
@@ -529,7 +549,14 @@ impl Simulator {
             stats.merge(cs);
         }
         stats.cycles = self.cycle;
-        RunResult { status, cycles: self.cycle, stats, per_core }
+        RunResult {
+            status,
+            cycles: self.cycle,
+            stats,
+            per_core,
+            mem_resident_pages: self.mem.resident_pages() as u64,
+            mem_resident_bytes: self.mem.resident_bytes(),
+        }
     }
 
     /// If *every* core with active work is only waiting on timers (no warp

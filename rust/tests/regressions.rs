@@ -136,6 +136,61 @@ fn cli_rejects_jobs_zero_cleanly() {
     assert!(cli::parse(&argv("sweep --jobs 1")).is_ok());
 }
 
+// ---------------------------------------------------------------------
+// Memory footprint: the PR 3 direct-index page directory must stay as
+// sparse as the HashMap it replaced — no eager materialization of the
+// directory or pages, and small kernels must stay small.
+// ---------------------------------------------------------------------
+
+#[test]
+fn memory_footprint_stays_sparse_for_small_kernels() {
+    use vortex::kernels::Bench;
+    use vortex::mem::Memory;
+    use vortex::pocl::Backend;
+
+    // a fresh memory owns no pages, and reads never materialize any
+    let m = Memory::new();
+    assert_eq!(m.resident_pages(), 0);
+    assert_eq!(m.read_u32(0x8000_0000), 0);
+    let _ = m.read_block(0x9000_0000, 1 << 20);
+    assert_eq!(m.resident_pages(), 0, "reads must not materialize pages");
+    // one byte maps exactly one 4 KiB page
+    let mut m = m;
+    m.write_u8(0x1234_5678, 1);
+    assert_eq!(m.resident_pages(), 1);
+    assert_eq!(m.resident_bytes(), 4096);
+
+    // a full small-kernel launch (text + DCB/args + 3 buffers + stacks)
+    // stays far below 1 MiB of resident pages in a 4 GiB address space
+    let r = Bench::VecAdd
+        .run(MachineConfig::with_wt(2, 2), 0xC0FFEE, Backend::SimX, true)
+        .unwrap();
+    assert!(r.verified);
+    assert!(r.peak_mem_pages > 0, "footprint must be reported");
+    assert!(
+        r.peak_mem_pages < 256,
+        "vecadd footprint not sparse: {} pages",
+        r.peak_mem_pages
+    );
+    assert_eq!(r.peak_mem_bytes, r.peak_mem_pages * 4096);
+}
+
+#[test]
+fn run_result_reports_the_machine_footprint() {
+    let prog = assemble(
+        "li t1, 0x90000000\nli t2, 7\nsw t2, 0(t1)\nli a0, 0\nli a7, 93\necall",
+    )
+    .unwrap();
+    let mut sim = Simulator::new(MachineConfig::with_wt(1, 1));
+    sim.load(&prog);
+    sim.launch(prog.entry());
+    let res = sim.run(100_000).unwrap();
+    // at least the text page and the stored-to data page are resident
+    assert!(res.mem_resident_pages >= 2, "pages: {}", res.mem_resident_pages);
+    assert!(res.mem_resident_pages < 64);
+    assert_eq!(res.mem_resident_bytes, res.mem_resident_pages * 4096);
+}
+
 #[test]
 fn thirty_two_lane_machine_runs_memory_ops_fine() {
     // the widest legal warp exercises the full LaneAddrs capacity
