@@ -235,6 +235,66 @@ fn main() {
     );
     json.push("heterogeneous_queue_speedup", het_speedup.into());
 
+    // --- event-graph DAG throughput: cross-device producer/consumer ---
+    // One queue over the three heterogeneous devices runs a 7-event DAG:
+    // a pinned producer per device, three dispatcher-placed consumers
+    // each waiting on two producers (cross-device wait= edges hand the
+    // producer image over), and a dispatcher-placed fan-in waiting on all
+    // consumers. jobs=1 is the sequential baseline — the DAG scheduler is
+    // deterministic, so results must be bit-identical at any width.
+    let run_dag = |jobs: usize| -> (u64, usize, usize) {
+        let mut q = LaunchQueue::new(jobs);
+        let mut ids = Vec::new();
+        let mut abc = [0u32; 3];
+        let mut dag_args = [0u32; 3];
+        for &(cw, ct) in &het_cfgs {
+            let (mut dev, args) = build_het_dev(cw, ct);
+            // a fourth buffer for the second-stage output (identical
+            // allocation order ⇒ identical addresses on every device)
+            let d = dev.create_buffer(n * 4);
+            abc = args;
+            dag_args = [args[1], args[2], d.addr];
+            ids.push(q.add_device(dev));
+        }
+        let producers: Vec<_> = ids
+            .iter()
+            .map(|&id| {
+                q.enqueue_on(id, &kernel, n as u32, &abc, Backend::SimX).unwrap()
+            })
+            .collect();
+        let consumers: Vec<_> = (0..het_cfgs.len())
+            .map(|i| {
+                let wait = [producers[i], producers[(i + 1) % producers.len()]];
+                q.enqueue_any_after(&kernel, n as u32, &dag_args, Backend::SimX, &wait)
+                    .unwrap()
+            })
+            .collect();
+        q.enqueue_any_after(&kernel, n as u32, &dag_args, Backend::SimX, &consumers)
+            .unwrap();
+        let events = q.len();
+        let edges = q.wait_edges();
+        let cycles = q
+            .finish()
+            .into_iter()
+            .map(|r| r.unwrap().result.cycles)
+            .sum::<u64>();
+        (cycles, events, edges)
+    };
+    let (dag_ref, dag_events, dag_edges) = run_dag(1);
+    let m1 = bencher.bench("dag_7ev_jobs1", || run_dag(1).0);
+    let mn = bencher.bench(&format!("dag_7ev_jobs{hw}"), || {
+        let (c, _, _) = run_dag(hw);
+        assert_eq!(c, dag_ref, "DAG results must not depend on worker count");
+        c
+    });
+    let dag_speedup = speedup(&m1, &mn);
+    println!(
+        "  -> event-graph DAG throughput: {dag_speedup:.2}x over jobs=1 ({dag_events} events, {dag_edges} wait edges)"
+    );
+    json.push("dag_queue_speedup", dag_speedup.into());
+    json.push("dag_events", (dag_events as u64).into());
+    json.push("dag_wait_edges", (dag_edges as u64).into());
+
     // --- machine-readable summary (perf-trajectory contract) ---
     let path = std::env::var("VORTEX_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_sim_hotpath.json".to_string());

@@ -4,6 +4,8 @@
 //! vortex run --bench sgemm --warps 8 --threads 4 [--cores N] [--emu]
 //!            [--scale K] [--seed S] [--no-warm] [--config file.toml]
 //! vortex sweep [--bench NAME]... [--seed S]       # Fig 9 + Fig 10 rows
+//! vortex queue [--configs 2x2,8x8] [--stages K]   # cross-device event
+//!              [--n N] [--seed S] [--jobs N]      # pipeline (wait= DAG)
 //! vortex power [--warps W --threads T]            # Fig 7/8 model output
 //! vortex validate [--artifacts DIR] [--seed S]    # golden-model check
 //! vortex list                                     # benchmarks + configs
@@ -34,6 +36,16 @@ pub enum Command {
         benches: Vec<Bench>,
         seed: u64,
         /// `--jobs N`: fan the sweep points out over N host threads.
+        jobs: u32,
+    },
+    /// Cross-device event-graph pipeline: `--stages` scale kernels
+    /// round-robined over `--configs` devices, chained by `wait=` events
+    /// (each edge hands the producer's committed image to the consumer).
+    Queue {
+        configs: Vec<(u32, u32)>,
+        stages: u32,
+        n: u32,
+        seed: u64,
         jobs: u32,
     },
     Power {
@@ -153,6 +165,34 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             }
             Ok(Command::Sweep { benches, seed, jobs })
         }
+        "queue" => {
+            let mut configs = vec![(2u32, 2u32), (4, 4), (8, 8)];
+            let mut stages = 6u32;
+            let mut n = 256u32;
+            let mut seed = 0xC0FFEEu64;
+            let mut jobs = 1u32;
+            let mut i = 1;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--configs" => {
+                        configs = parse_config_list(take_value(args, &mut i, "--configs")?)?
+                    }
+                    "--stages" => stages = parse_num(take_value(args, &mut i, "--stages")?)?,
+                    "--n" => n = parse_num(take_value(args, &mut i, "--n")?)?,
+                    "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
+                    "--jobs" => jobs = parse_jobs(take_value(args, &mut i, "--jobs")?)?,
+                    other => return Err(CliError(format!("unknown flag `{other}`"))),
+                }
+                i += 1;
+            }
+            if stages == 0 {
+                return Err(CliError("--stages must be >= 1".into()));
+            }
+            if n == 0 {
+                return Err(CliError("--n must be >= 1".into()));
+            }
+            Ok(Command::Queue { configs, stages, n, seed, jobs })
+        }
         "power" => {
             let mut warps = 8u32;
             let mut threads = 4u32;
@@ -200,6 +240,22 @@ fn parse_num(s: &str) -> Result<u32, CliError> {
     }
 }
 
+/// Parse a `WxT[,WxT...]` device-config list (e.g. `2x2,8x8`); each
+/// entry is validated like any machine config at execution time.
+fn parse_config_list(s: &str) -> Result<Vec<(u32, u32)>, CliError> {
+    let mut configs = Vec::new();
+    for part in s.split(',') {
+        let (w, t) = part
+            .split_once('x')
+            .ok_or_else(|| CliError(format!("bad config `{part}` (expected WxT)")))?;
+        configs.push((parse_num(w)?, parse_num(t)?));
+    }
+    if configs.is_empty() {
+        return Err(CliError("--configs needs at least one WxT entry".into()));
+    }
+    Ok(configs)
+}
+
 /// `--jobs` shares the machine-config validation path: `--jobs 0` is a
 /// clean argument error (it used to be silently clamped to 1).
 fn parse_jobs(s: &str) -> Result<u32, CliError> {
@@ -216,14 +272,21 @@ USAGE:
              [--scale K --seed S --no-warm --config file.toml] [--jobs N]
   vortex sweep [--bench <name>]... [--seed S] [--jobs N]
                                                   Fig 9 + Fig 10 series
+  vortex queue [--configs 2x2,4x4,8x8] [--stages K] [--n N] [--seed S]
+               [--jobs N]                         cross-device event-graph
+                                                  pipeline: each stage
+                                                  waits on its predecessor
+                                                  (wait= edges hand the
+                                                  producer's memory image
+                                                  across devices)
   vortex power [--warps W --threads T]            Fig 7/8 area/power model
   vortex validate [--artifacts DIR] [--seed S]    golden-model validation
   vortex list                                     benchmarks + paper configs
 
   --jobs N   run: N > 1 enables the parallel engine (worker threads =
-             min(cores, host threads); bit-identical to serial); sweep:
-             run the configs as one heterogeneous launch queue over N
-             persistent-pool workers (results unchanged). N must be >= 1.
+             min(cores, host threads); bit-identical to serial); sweep/
+             queue: schedule the event graph over N persistent-pool
+             workers (results unchanged). N must be >= 1.
 ";
 
 /// Execute a parsed command, writing human-readable output to stdout.
@@ -293,10 +356,76 @@ pub fn execute(cmd: Command) -> i32 {
             match sweep::fig9_table_jobs(&benches, &configs, seed, jobs as usize) {
                 Ok(table) => {
                     println!("Fig 9 — normalized execution time (norm to 2x2):\n{}", table.render());
+                    println!(
+                        "(each config's benchmarks run as wait= event chains on one \
+                         heterogeneous queue; see `vortex queue` for the cross-device \
+                         pipeline form)"
+                    );
                     0
                 }
                 Err(e) => {
                     eprintln!("sweep failed: {e}");
+                    1
+                }
+            }
+        }
+        Command::Queue { configs, stages, n, seed, jobs } => {
+            for &(w, t) in &configs {
+                if let Err(e) = MachineConfig::with_wt(w, t).validate() {
+                    eprintln!("error: invalid machine config {w}x{t}: {e}");
+                    return 2;
+                }
+            }
+            match sweep::fig9_pipeline(
+                &configs,
+                stages as usize,
+                n as usize,
+                seed,
+                jobs as usize,
+            ) {
+                Ok(rep) => {
+                    // rows reflect fig9_pipeline's effective stage count
+                    // (it clamps for i32-overflow headroom)
+                    println!(
+                        "event-graph pipeline: {} stages over {} device(s), n={n}, \
+                         seed {seed:#x}, jobs {jobs}",
+                        rep.rows.len(),
+                        configs.len()
+                    );
+                    let mut t = Table::new(&[
+                        "event", "device", "wait", "edge", "factor", "cycles", "commit",
+                    ]);
+                    for row in &rep.rows {
+                        t.row(vec![
+                            format!("e{}", row.event),
+                            format!("{}x{}", row.warps, row.threads),
+                            row.wait.map_or("-".into(), |w| format!("wait=e{w}")),
+                            if row.wait.is_none() {
+                                "-".into()
+                            } else if row.cross_device {
+                                "cross-device".into()
+                            } else {
+                                "same-device".into()
+                            },
+                            format!("x{}", row.factor),
+                            row.cycles.to_string(),
+                            format!("#{}", row.exec_seq),
+                        ]);
+                    }
+                    println!("{}", t.render());
+                    println!(
+                        "verified {} (output == input x {})",
+                        rep.verified,
+                        rep.rows.iter().map(|r| r.factor as u64).product::<u64>()
+                    );
+                    if rep.verified {
+                        0
+                    } else {
+                        2
+                    }
+                }
+                Err(e) => {
+                    eprintln!("pipeline failed: {e}");
                     1
                 }
             }
@@ -440,5 +569,26 @@ mod tests {
             Command::Power { warps: 32, threads: 32 } => {}
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn queue_command_parses_configs_and_stages() {
+        match parse(&argv("queue --configs 2x2,8x8 --stages 4 --n 64 --jobs 2")).unwrap() {
+            Command::Queue { configs, stages: 4, n: 64, jobs: 2, .. } => {
+                assert_eq!(configs, vec![(2, 2), (8, 8)]);
+            }
+            other => panic!("{other:?}"),
+        }
+        // defaults
+        match parse(&argv("queue")).unwrap() {
+            Command::Queue { configs, stages: 6, n: 256, jobs: 1, .. } => {
+                assert_eq!(configs.len(), 3);
+            }
+            other => panic!("{other:?}"),
+        }
+        // malformed config list and zero stages are clean errors
+        assert!(parse(&argv("queue --configs 2y2")).is_err());
+        assert!(parse(&argv("queue --stages 0")).is_err());
+        assert!(parse(&argv("queue --jobs 0")).is_err());
     }
 }

@@ -8,6 +8,7 @@
 use super::report::Table;
 use crate::config::MachineConfig;
 use crate::kernels::{plan, Bench};
+use crate::pocl::{Backend, Event, Kernel, LaunchError, LaunchQueue, VortexDevice};
 use crate::power;
 
 /// One (warps × threads) point of a benchmark sweep.
@@ -23,6 +24,12 @@ pub struct SweepPoint {
     /// Peak resident device-memory pages across the benchmark's launch
     /// stream (footprint diagnostics — must stay sparse).
     pub mem_pages: u64,
+    /// Events in this config's launch graph (= NDRange launches).
+    pub launches: u32,
+    /// `wait=` edges chaining those events (static chains contribute
+    /// length−1; convergence-driven chains stage one event per batch and
+    /// contribute none).
+    pub wait_edges: u32,
 }
 
 /// Fig 9: execution time of `bench` across the configuration sweep.
@@ -64,6 +71,8 @@ pub fn fig9_sweep_jobs(
                 divergent_splits: r.stats.divergent_splits,
                 barrier_stalls: r.stats.barrier_stall_cycles,
                 mem_pages: r.peak_mem_pages,
+                launches: r.launches,
+                wait_edges: r.wait_edges,
             }
         })
         .collect())
@@ -110,7 +119,10 @@ pub fn fig9_table(
 /// host threads. The trailing `peak pages` column reports, per config,
 /// the largest resident device-memory footprint any benchmark reached
 /// (the sweep-level surface of the footprint diagnostics — a jump here
-/// means the paged memory stopped being sparse).
+/// means the paged memory stopped being sparse), and `events (wait=)`
+/// reports the config's event-graph size: total enqueued events across
+/// the benchmarks and how many of them rode a `wait=` edge on their
+/// chain predecessor.
 pub fn fig9_table_jobs(
     benches: &[Bench],
     configs: &[(u32, u32)],
@@ -120,14 +132,19 @@ pub fn fig9_table_jobs(
     let mut header = vec!["config".to_string()];
     header.extend(benches.iter().map(|b| b.name().to_string()));
     header.push("peak pages".to_string());
+    header.push("events (wait=)".to_string());
     let mut table =
         Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
     let mut columns = Vec::new();
     let mut peak_pages = vec![0u64; configs.len()];
+    let mut events = vec![0u64; configs.len()];
+    let mut wait_edges = vec![0u64; configs.len()];
     for &b in benches {
         let rows = fig9_sweep_jobs(b, configs, seed, jobs)?;
         for (i, p) in rows.iter().enumerate() {
             peak_pages[i] = peak_pages[i].max(p.mem_pages);
+            events[i] += p.launches as u64;
+            wait_edges[i] += p.wait_edges as u64;
         }
         columns.push(normalize_to_2x2(&rows));
     }
@@ -137,6 +154,7 @@ pub fn fig9_table_jobs(
             row.push(format!("{:.3}", col[i].1));
         }
         row.push(peak_pages[i].to_string());
+        row.push(format!("{} ({})", events[i], wait_edges[i]));
         table.row(row);
     }
     Ok(table)
@@ -146,6 +164,155 @@ pub fn fig9_table_jobs(
 /// is meaningful for execution: ≥2 warps so barriers/latency-hiding show).
 pub fn fig9_configs() -> Vec<(u32, u32)> {
     vec![(2, 2), (2, 4), (4, 4), (4, 8), (8, 8), (8, 16), (16, 16), (16, 32), (32, 32)]
+}
+
+// ---------------------------------------------------------------------
+// Cross-device producer→consumer pipeline (the event-graph scenario)
+// ---------------------------------------------------------------------
+
+/// One stage of the cross-device pipeline report (a `vortex queue` row).
+#[derive(Clone, Debug)]
+pub struct PipelineRow {
+    /// Event index of this stage's launch.
+    pub event: usize,
+    /// `(warps, threads)` of the device the stage ran on.
+    pub warps: u32,
+    pub threads: u32,
+    /// Event this stage waited on (`wait=` edge; `None` for the source).
+    pub wait: Option<usize>,
+    /// Whether the `wait=` edge crossed devices (image hand-off).
+    pub cross_device: bool,
+    /// Per-stage scale factor applied to the data.
+    pub factor: u32,
+    pub cycles: u64,
+    /// Deterministic commit position ([`crate::pocl::QueuedResult::exec_seq`]).
+    pub exec_seq: u32,
+}
+
+/// Result of [`fig9_pipeline`].
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    pub rows: Vec<PipelineRow>,
+    /// Final output bit-equal to input × Π stage factors?
+    pub verified: bool,
+    pub output: Vec<i32>,
+    pub expect: Vec<i32>,
+}
+
+/// Per-stage scale factors (cycled; small primes so `i32` never
+/// overflows for the supported stage counts).
+const PIPELINE_FACTORS: [u32; 3] = [3, 5, 2];
+
+fn pipeline_kernel(stage: usize) -> (Kernel, u32) {
+    // Kernel names are &'static str (they key the per-device program
+    // cache), so the factor set is a fixed cycle with static names.
+    let (name, factor) = match stage % PIPELINE_FACTORS.len() {
+        0 => ("pipeline_scale3", 3),
+        1 => ("pipeline_scale5", 5),
+        _ => ("pipeline_scale2", 2),
+    };
+    let body = format!(
+        r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)           # src buffer
+    lw t2, 4(t0)           # dst buffer
+    slli t3, a0, 2
+    add t4, t1, t3
+    lw t5, 0(t4)
+    li t6, {factor}
+    mul t5, t5, t6
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#
+    );
+    (Kernel { name, body }, factor)
+}
+
+/// The Fig 9 workload's cross-device scenario (ROADMAP "queue-level
+/// events/dependencies across devices"): a `stages`-deep pipeline of
+/// scale kernels round-robined over one device per config, each stage
+/// waiting on its predecessor's [`Event`]. Consecutive stages usually
+/// land on *different* devices, so the wait edge carries the producer's
+/// committed memory image into the consumer (the `clWaitForEvents`
+/// analog with a data hand-off). Data ping-pongs between two buffers;
+/// the final output must be bit-equal to `input × Π factors` — and, by
+/// the queue's determinism contract, to a sequential hand-off replay of
+/// the same schedule (asserted in the sweep tests).
+///
+/// `stages` is clamped to ≤ 12 so the product of factors stays far from
+/// `i32` overflow on the small inputs used here.
+pub fn fig9_pipeline(
+    configs: &[(u32, u32)],
+    stages: usize,
+    n: usize,
+    seed: u64,
+    jobs: usize,
+) -> Result<PipelineReport, LaunchError> {
+    assert!(!configs.is_empty(), "pipeline needs at least one config");
+    let stages = stages.clamp(1, 12);
+    let n = n.max(1);
+    let mut rng = crate::workloads::rng::SplitMix64::new(seed);
+    let input: Vec<i32> = (0..n).map(|_| rng.range_i32(-8, 9)).collect();
+
+    let mut q = LaunchQueue::new(jobs);
+    let mut ids = Vec::with_capacity(configs.len());
+    // identical allocation order on every device ⇒ identical buffer
+    // addresses, so a hand-off image lines up on any consumer
+    let mut bufs = (0u32, 0u32);
+    for &(w, t) in configs {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &input);
+        // pre-touch the ping-pong partner so every stage's stores land in
+        // mapped (COW-shared) pages
+        dev.write_buffer_i32(b, &vec![0; n]);
+        bufs = (a.addr, b.addr);
+        ids.push(q.add_device(dev));
+    }
+    let (buf_a, buf_b) = bufs;
+
+    let mut rows: Vec<PipelineRow> = Vec::with_capacity(stages);
+    let mut prev: Option<Event> = None;
+    let mut prev_dev: Option<usize> = None;
+    for s in 0..stages {
+        let (kernel, factor) = pipeline_kernel(s);
+        let (src, dst) = if s % 2 == 0 { (buf_a, buf_b) } else { (buf_b, buf_a) };
+        let di = s % ids.len();
+        let wait: Vec<Event> = prev.into_iter().collect();
+        let e = q.enqueue_on_after(ids[di], &kernel, n as u32, &[src, dst], Backend::SimX, &wait)?;
+        rows.push(PipelineRow {
+            event: e.0,
+            warps: configs[di].0,
+            threads: configs[di].1,
+            wait: prev.map(|p| p.0),
+            cross_device: prev_dev.is_some_and(|p| p != di),
+            factor,
+            cycles: 0,
+            exec_seq: 0,
+        });
+        prev = Some(e);
+        prev_dev = Some(di);
+    }
+
+    let results = q.finish();
+    debug_assert_eq!(results.len(), rows.len(), "pipeline events index densely");
+    let mut product: i64 = 1;
+    let mut last_mem = None;
+    for (row, res) in rows.iter_mut().zip(results) {
+        let qr = res?;
+        row.cycles = qr.result.cycles;
+        row.exec_seq = qr.exec_seq;
+        product *= row.factor as i64;
+        last_mem = Some(qr.mem);
+    }
+    let expect: Vec<i32> = input.iter().map(|&x| (x as i64 * product) as i32).collect();
+    let final_dst = if (stages - 1) % 2 == 0 { buf_b } else { buf_a };
+    let output = last_mem.expect("stages >= 1").read_i32_slice(final_dst, n);
+    let verified = output == expect;
+    Ok(PipelineReport { rows, verified, output, expect })
 }
 
 #[cfg(test)]
@@ -178,6 +345,77 @@ mod tests {
         assert!(s.contains("vecadd"));
         assert!(s.contains("4x4"));
         assert!(s.contains("peak pages"), "footprint column present:\n{s}");
+        assert!(s.contains("events (wait=)"), "event-graph column present:\n{s}");
+    }
+
+    #[test]
+    fn pipeline_crosses_devices_and_verifies() {
+        let configs = [(2u32, 2u32), (4, 4), (2, 8)];
+        let rep = fig9_pipeline(&configs, 6, 64, 0xC0FFEE, 4).unwrap();
+        assert_eq!(rep.rows.len(), 6);
+        assert!(rep.verified, "pipeline output mismatch");
+        assert_eq!(rep.output, rep.expect);
+        // every stage after the source waits on its predecessor, and the
+        // round-robin placement makes those edges cross-device
+        for (i, row) in rep.rows.iter().enumerate() {
+            if i == 0 {
+                assert_eq!(row.wait, None);
+            } else {
+                assert_eq!(row.wait, Some(rep.rows[i - 1].event));
+                assert!(row.cross_device, "stage {i} should hop devices");
+                assert!(row.exec_seq > rep.rows[i - 1].exec_seq);
+            }
+            assert!(row.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_handoff_replay() {
+        // The queue's cross-device event pipeline must be bit-identical
+        // to a sequential replay: launch each stage on its device in
+        // order, cloning the producer device's memory into the consumer
+        // before every cross-device hop.
+        let configs = [(2u32, 2u32), (8, 8)];
+        let stages = 5usize;
+        let n = 48usize;
+        let seed = 0xBEEF;
+        let rep = fig9_pipeline(&configs, stages, n, seed, 4).unwrap();
+        assert!(rep.verified);
+
+        // sequential replay with the same inputs and schedule
+        let mut rng = crate::workloads::rng::SplitMix64::new(seed);
+        let input: Vec<i32> = (0..n).map(|_| rng.range_i32(-8, 9)).collect();
+        let mut devs: Vec<VortexDevice> = Vec::new();
+        let mut bufs = (0u32, 0u32);
+        for &(w, t) in &configs {
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+            let a = dev.create_buffer(n * 4);
+            let b = dev.create_buffer(n * 4);
+            dev.write_buffer_i32(a, &input);
+            dev.write_buffer_i32(b, &vec![0; n]);
+            bufs = (a.addr, b.addr);
+            devs.push(dev);
+        }
+        let (buf_a, buf_b) = bufs;
+        let mut prev_dev: Option<usize> = None;
+        for s in 0..stages {
+            let (kernel, _) = super::pipeline_kernel(s);
+            let (src, dst) = if s % 2 == 0 { (buf_a, buf_b) } else { (buf_b, buf_a) };
+            let di = s % devs.len();
+            if let Some(p) = prev_dev {
+                if p != di {
+                    devs[di].mem = devs[p].mem.clone();
+                }
+            }
+            let r = devs[di]
+                .launch(&kernel, n as u32, &[src, dst], Backend::SimX)
+                .unwrap();
+            assert_eq!(r.cycles, rep.rows[s].cycles, "stage {s} cycles diverge");
+            prev_dev = Some(di);
+        }
+        let final_dst = if (stages - 1) % 2 == 0 { buf_b } else { buf_a };
+        let seq_out = devs[prev_dev.unwrap()].mem.read_i32_slice(final_dst, n);
+        assert_eq!(seq_out, rep.output, "sequential hand-off replay diverges");
     }
 
     #[test]

@@ -41,6 +41,11 @@ pub struct BenchResult {
     /// Number of NDRange launches (1 for regular kernels; levels /
     /// pivots / diagonals for the iterative ones).
     pub launches: u32,
+    /// `wait=` event edges the queued sweep chained these launches with
+    /// (one per launch staged behind a predecessor in the same batch; 0
+    /// when driven sequentially or when every launch opened its own
+    /// batch, as convergence-driven chains do).
+    pub wait_edges: u32,
     /// Bit-exact match against the host reference.
     pub verified: bool,
     /// The checked output payload (consumed by the golden-model runtime).
@@ -147,6 +152,8 @@ pub(crate) struct Acc {
     cycles: u64,
     stats: CoreStats,
     launches: u32,
+    /// `wait=` edges staged by the queued driver (stays 0 sequentially).
+    pub(crate) wait_edges: u32,
     peak_mem_pages: u64,
     peak_mem_bytes: u64,
 }
@@ -157,6 +164,7 @@ impl Acc {
             cycles: 0,
             stats: CoreStats::default(),
             launches: 0,
+            wait_edges: 0,
             peak_mem_pages: 0,
             peak_mem_bytes: 0,
         }
@@ -176,6 +184,7 @@ impl Acc {
             cycles: self.cycles,
             stats: self.stats,
             launches: self.launches,
+            wait_edges: self.wait_edges,
             verified,
             output,
             peak_mem_pages: self.peak_mem_pages,

@@ -7,13 +7,19 @@
 //! sequential runner ([`super::Bench::run_scaled_mode`]) drives it with
 //! direct `VortexDevice::launch` calls, and the heterogeneous-queue sweep
 //! ([`run_sweep_queued`]) drives one plan per device through a
-//! [`LaunchQueue`], pinning each config's stream to its device. Both paths
+//! [`LaunchQueue`] as **event chains**: every staged launch waits on the
+//! previous launch of its benchmark via an explicit [`Event`] wait list
+//! (the `clWaitForEvents` analog). Statically known chains — Gaussian's
+//! pivots, NW's wavefronts — are staged in one batch
+//! ([`LaunchPlan::next_batch`]) so a whole chain schedules as one
+//! in-order unit; convergence-driven plans (BFS) stage one launch per
+//! batch because the next launch depends on device results. Both paths
 //! issue the identical launch sequence, so their per-config results are
 //! bit-identical — the property the Fig 9 sweep tests rely on.
 
 use super::{bodies, Acc, Bench, BenchResult};
 use crate::config::MachineConfig;
-use crate::pocl::{Backend, Buffer, Kernel, LaunchError, LaunchQueue, VortexDevice};
+use crate::pocl::{Backend, Buffer, Event, Kernel, LaunchError, LaunchQueue, VortexDevice};
 use crate::workloads as wl;
 
 /// One staged NDRange launch.
@@ -29,6 +35,16 @@ pub(crate) trait LaunchPlan {
     /// launch has committed to the device's memory, so the plan may read
     /// device buffers (convergence flags) to decide. `None` ⇒ stream done.
     fn next(&mut self, dev: &mut VortexDevice) -> Option<PlannedLaunch>;
+
+    /// Stage every launch that can be issued *without observing device
+    /// results* — a statically known chain. The queued sweep enqueues the
+    /// whole batch as one event chain, so it schedules as a single
+    /// in-order unit. Default: one launch (dynamic plans must read device
+    /// memory between launches); overridden by the static multi-launch
+    /// plans (Gaussian, NW).
+    fn next_batch(&mut self, dev: &mut VortexDevice) -> Vec<PlannedLaunch> {
+        self.next(dev).into_iter().collect()
+    }
 
     /// Read back the benchmark output and verify it against the host
     /// reference. Called once, after the stream completed.
@@ -161,6 +177,15 @@ impl LaunchPlan for GaussianPlan {
         })
     }
 
+    fn next_batch(&mut self, dev: &mut VortexDevice) -> Vec<PlannedLaunch> {
+        // every pivot is known up front: stage the whole chain at once
+        let mut batch = Vec::new();
+        while let Some(l) = self.next(dev) {
+            batch.push(l);
+        }
+        batch
+    }
+
     fn verify(&mut self, dev: &VortexDevice) -> (bool, Vec<i32>) {
         let out = dev.mem.read_i32_slice(self.a, self.n * self.n);
         (out == self.expect, out)
@@ -203,6 +228,15 @@ impl LaunchPlan for NwPlan {
             });
         }
         None
+    }
+
+    fn next_batch(&mut self, dev: &mut VortexDevice) -> Vec<PlannedLaunch> {
+        // every anti-diagonal is known up front: one event chain
+        let mut batch = Vec::new();
+        while let Some(l) = self.next(dev) {
+            batch.push(l);
+        }
+        batch
     }
 
     fn verify(&mut self, dev: &VortexDevice) -> (bool, Vec<i32>) {
@@ -369,12 +403,17 @@ pub(crate) fn build(
 }
 
 /// Run `bench` across `configs` as **one heterogeneous-queue workload**:
-/// a single [`LaunchQueue`] owns one device per config, each config's
-/// launch stream is pinned to its device, and every round of launches is
-/// dispatched over the persistent worker pool by one `finish`. Results
-/// come back per config, in `configs` order, bit-identical to running
-/// `bench` sequentially on each config (same launch streams, same
-/// devices — asserted by the sweep determinism tests).
+/// a single [`LaunchQueue`] owns one device per config, and each config's
+/// benchmark runs as an **event chain** — every launch waits on the
+/// previous launch of its chain through an explicit wait list, so a
+/// statically known chain (Gaussian, NW) is enqueued whole and schedules
+/// as one in-order unit, while convergence-driven chains (BFS) stage one
+/// link per batch and read their flags from device memory between
+/// batches. One `finish` dispatches each batch's chains over the
+/// persistent worker pool. Results come back per config, in `configs`
+/// order, bit-identical to running `bench` sequentially on each config
+/// (same launch sequences, same devices — asserted by the sweep
+/// determinism tests).
 pub fn run_sweep_queued(
     bench: Bench,
     configs: &[MachineConfig],
@@ -403,30 +442,47 @@ pub fn run_sweep_queued(
         slots.push(Slot { id, plan, acc: Acc::new(), done: false });
     }
 
-    // Rounds: each unfinished config stages its next launch (pinned to its
-    // device); one finish() runs the whole round concurrently. Iterative
-    // benchmarks read their convergence flags from device memory between
-    // rounds — finish() has committed it by then.
+    // Batches: each unfinished config stages every launch it can commit
+    // to (its static chain prefix), linked by explicit wait-list events;
+    // one finish() runs all the chains concurrently. Convergence-driven
+    // plans read their flags from device memory between batches —
+    // finish() has committed it by then.
     loop {
-        let mut round: Vec<usize> = Vec::new();
+        // (event index → slot) for this batch, in enqueue order
+        let mut staged: Vec<usize> = Vec::new();
         for (si, slot) in slots.iter_mut().enumerate() {
             if slot.done {
                 continue;
             }
-            match slot.plan.next(q.device_mut(slot.id)) {
-                Some(l) => {
-                    q.enqueue_on(slot.id, &l.kernel, l.total, &l.args, Backend::SimX)?;
-                    round.push(si);
-                }
-                None => slot.done = true,
+            let batch = slot.plan.next_batch(q.device_mut(slot.id));
+            if batch.is_empty() {
+                slot.done = true;
+                continue;
+            }
+            // chain the batch: each launch waits on its predecessor
+            slot.acc.wait_edges += (batch.len() as u32).saturating_sub(1);
+            let mut prev: Option<Event> = None;
+            for l in batch {
+                let wait: Vec<Event> = prev.into_iter().collect();
+                let e = q.enqueue_on_after(
+                    slot.id,
+                    &l.kernel,
+                    l.total,
+                    &l.args,
+                    Backend::SimX,
+                    &wait,
+                )?;
+                debug_assert_eq!(e.0, staged.len(), "events index the batch densely");
+                staged.push(si);
+                prev = Some(e);
             }
         }
-        if round.is_empty() {
+        if staged.is_empty() {
             break;
         }
         let results = q.finish();
-        debug_assert_eq!(results.len(), round.len());
-        for (res, si) in results.into_iter().zip(round) {
+        debug_assert_eq!(results.len(), staged.len());
+        for (res, si) in results.into_iter().zip(staged) {
             let qr = res?;
             slots[si].acc.add(&qr.result);
         }

@@ -19,10 +19,20 @@
 //! page-granular: **shadow pages plus a dirty-word bitmap**, so buffered
 //! reads are O(1) indexing and the serialized commit is a masked word
 //! merge per dirty page instead of a per-word hash walk.
+//!
+//! Page frames are **copy-on-write** (PR 4): the directory holds
+//! `Arc`-shared leaves and pages, so `Memory::clone` — the snapshot a
+//! [`crate::pocl::LaunchQueue::enqueue`] takes, and the image a
+//! cross-device event edge hands to its consumer — is O(directory)
+//! pointer copies instead of O(resident bytes). A write through either
+//! side clones just the touched 4 KiB frame (clone-on-first-write);
+//! [`Memory::cow_pages_copied`] counts those copies so tests can pin
+//! snapshot launches to O(touched pages).
 
 use crate::asm::Program;
 use std::cell::Cell;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// The memory operations instruction semantics need ([`crate::emu::step`]).
 ///
@@ -90,9 +100,11 @@ const DIR_ENTRIES: usize = 1 << (32 - PAGE_BITS - LEAF_BITS);
 type PageData = [u8; PAGE_SIZE];
 
 /// Second-level table: up to [`LEAF_PAGES`] lazily materialized pages.
+/// Pages are `Arc`-shared between a memory and its clones (copy-on-write);
+/// cloning a leaf clones only the pointer table, never the frames.
 #[derive(Clone)]
 struct Leaf {
-    pages: Vec<Option<Box<PageData>>>,
+    pages: Vec<Option<Arc<PageData>>>,
 }
 
 impl Leaf {
@@ -307,13 +319,22 @@ impl MemIo for BufferedMem<'_> {
 /// device has no MMU — the paper's cores are bare-metal newlib targets).
 /// The directory itself materializes on the first write, so a fresh
 /// `Memory` owns no heap beyond the empty `Vec`.
-#[derive(Clone)]
+///
+/// Leaves and page frames are `Arc`-shared: [`Memory::clone`] is a
+/// snapshot that copies only the top-level pointer table, and the first
+/// write to a shared frame (from either side) clones that one 4 KiB page
+/// ([`Memory::cow_pages_copied`]).
 pub struct Memory {
     /// Top level: [`DIR_ENTRIES`] slots (empty until the first write).
-    dir: Vec<Option<Box<Leaf>>>,
+    dir: Vec<Option<Arc<Leaf>>>,
     /// Mapped (materialized) pages — the footprint high-water mark, since
-    /// pages are never unmapped.
+    /// pages are never unmapped. Shared frames count for every memory
+    /// that maps them (the address-space view, not unique heap bytes).
     resident: usize,
+    /// Page frames this memory cloned because they were `Arc`-shared with
+    /// a snapshot when written (reset to 0 in every clone, so a
+    /// snapshot's counter reports only its own copy-on-write traffic).
+    cow_copied: u64,
     /// Text range of the last loaded program (`[lo, hi)`; `hi == 0` ⇔
     /// none). Writes overlapping it bump `text_gen`, invalidating any
     /// shared [`crate::asm::DecodedImage`] snapshot taken against the old
@@ -325,7 +346,29 @@ pub struct Memory {
 
 impl Default for Memory {
     fn default() -> Self {
-        Memory { dir: Vec::new(), resident: 0, text_lo: 0, text_hi: 0, text_gen: 0 }
+        Memory {
+            dir: Vec::new(),
+            resident: 0,
+            cow_copied: 0,
+            text_lo: 0,
+            text_hi: 0,
+            text_gen: 0,
+        }
+    }
+}
+
+impl Clone for Memory {
+    /// Copy-on-write snapshot: O(top-level directory) `Arc` bumps — page
+    /// frames are shared and copied only when either side writes them.
+    fn clone(&self) -> Memory {
+        Memory {
+            dir: self.dir.clone(),
+            resident: self.resident,
+            cow_copied: 0,
+            text_lo: self.text_lo,
+            text_hi: self.text_hi,
+            text_gen: self.text_gen,
+        }
     }
 }
 
@@ -349,14 +392,27 @@ impl Memory {
             self.dir = (0..DIR_ENTRIES).map(|_| None).collect();
         }
         let pn = addr >> PAGE_BITS;
-        let leaf = self.dir[(pn >> LEAF_BITS) as usize]
-            .get_or_insert_with(|| Box::new(Leaf::new()));
+        let Memory { dir, resident, cow_copied, .. } = self;
+        let leaf_arc =
+            dir[(pn >> LEAF_BITS) as usize].get_or_insert_with(|| Arc::new(Leaf::new()));
+        // Copy-on-write at the leaf level is a pointer-table clone only
+        // (the pages inside stay shared).
+        let leaf = Arc::make_mut(leaf_arc);
         let slot = &mut leaf.pages[(pn & LEAF_MASK) as usize];
-        if slot.is_none() {
-            *slot = Some(Box::new([0u8; PAGE_SIZE]));
-            self.resident += 1;
+        match slot {
+            Some(page) => {
+                if Arc::strong_count(page) > 1 {
+                    // Clone-on-first-write: this 4 KiB frame is shared
+                    // with a snapshot; copy just it.
+                    *cow_copied += 1;
+                }
+                Arc::make_mut(page)
+            }
+            None => {
+                *resident += 1;
+                Arc::make_mut(slot.insert(Arc::new([0u8; PAGE_SIZE])))
+            }
         }
-        slot.as_deref_mut().expect("page just materialized")
     }
 
     /// Bump the decode generation when a write overlaps the text range.
@@ -585,6 +641,15 @@ impl Memory {
         (self.resident as u64) << PAGE_BITS
     }
 
+    /// Number of page frames this memory cloned because they were shared
+    /// with a snapshot when written (clone-on-first-write). Reset to zero
+    /// on [`Memory::clone`], so a snapshot launch's post-run memory
+    /// reports exactly the pages that launch touched — the COW regression
+    /// guard in `rust/tests/regressions.rs` pins this to O(touched).
+    pub fn cow_pages_copied(&self) -> u64 {
+        self.cow_copied
+    }
+
     /// Generation counter for the watched text range (see
     /// [`crate::asm::DecodedImage`]): machines snapshot it at program load
     /// and treat the decoded image as stale once it moves.
@@ -683,6 +748,69 @@ mod tests {
         m.write_u8(0xA000_0000, 3); // distant page, distinct leaf
         assert_eq!(m.resident_pages(), 2);
         assert_eq!(m.resident_bytes(), 2 * PAGE_SIZE as u64);
+    }
+
+    #[test]
+    fn clone_shares_pages_until_written() {
+        let mut m = Memory::new();
+        for p in 0..64u32 {
+            m.write_u32(p * PAGE_SIZE as u32, p + 1);
+        }
+        assert_eq!(m.resident_pages(), 64);
+        let mut snap = m.clone();
+        assert_eq!(snap.resident_pages(), 64, "snapshot maps the same pages");
+        assert_eq!(snap.cow_pages_copied(), 0, "clone itself copies nothing");
+        // reads never copy
+        for p in 0..64u32 {
+            assert_eq!(snap.read_u32(p * PAGE_SIZE as u32), p + 1);
+        }
+        assert_eq!(snap.cow_pages_copied(), 0);
+        // the first write to a shared frame copies exactly that frame
+        snap.write_u32(0, 999);
+        assert_eq!(snap.cow_pages_copied(), 1);
+        assert_eq!(snap.read_u32(0), 999);
+        assert_eq!(m.read_u32(0), 1, "the original never sees snapshot writes");
+        // further writes to the now-private frame copy nothing
+        snap.write_u32(4, 7);
+        assert_eq!(snap.cow_pages_copied(), 1);
+        // the original side COWs too: its frames are still shared
+        m.write_u32(PAGE_SIZE as u32, 555);
+        assert_eq!(m.cow_pages_copied(), 1);
+        assert_eq!(snap.read_u32(PAGE_SIZE as u32), 2, "snapshot unaffected");
+        // fresh pages materialize without counting as COW copies
+        snap.write_u32(0x4000_0000, 1);
+        assert_eq!(snap.cow_pages_copied(), 1);
+        assert_eq!(snap.resident_pages(), 65);
+        assert_eq!(m.resident_pages(), 64);
+    }
+
+    #[test]
+    fn cow_stops_once_the_snapshot_is_dropped() {
+        let mut m = Memory::new();
+        m.write_u32(0x100, 42);
+        let snap = m.clone();
+        drop(snap);
+        // sole owner again: writes go straight through, no copies
+        m.write_u32(0x104, 43);
+        assert_eq!(m.cow_pages_copied(), 0);
+        assert_eq!(m.read_u32(0x100), 42);
+        assert_eq!(m.read_u32(0x104), 43);
+    }
+
+    #[test]
+    fn store_buffer_commit_cows_shared_pages() {
+        // the chunked engine's commit path writes through page_mut too, so
+        // committing into a snapshotted memory must copy-on-write
+        let mut base = Memory::new();
+        base.write_u32(0x2000, 1);
+        let snap = base.clone();
+        let mut buf = StoreBuffer::new();
+        buf.store_word(0x2004, 9);
+        buf.commit(&mut base);
+        assert_eq!(base.cow_pages_copied(), 1);
+        assert_eq!(base.read_u32(0x2004), 9);
+        assert_eq!(snap.read_u32(0x2004), 0, "snapshot isolated from commit");
+        assert_eq!(snap.read_u32(0x2000), 1);
     }
 
     #[test]

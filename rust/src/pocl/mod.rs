@@ -16,7 +16,7 @@
 
 pub mod queue;
 
-pub use queue::{DeviceId, LaunchHandle, LaunchQueue, QueuedResult};
+pub use queue::{DeviceId, Event, LaunchQueue, QueuedResult};
 
 use crate::asm::{assemble, Program};
 use crate::config::MachineConfig;
@@ -79,9 +79,16 @@ pub enum LaunchError {
     TooManyArgs(usize),
     /// An unpinned launch was enqueued on a queue that owns no devices.
     NoDevice,
-    /// An earlier launch on the same in-order device stream failed, so
-    /// this one was not run (its inputs could be inconsistent).
-    Skipped,
+    /// A wait list named an event that is not part of the current batch
+    /// (a future index, or a stale handle from a finished batch). Wait
+    /// lists may only reference already-enqueued events, which is what
+    /// keeps the event graph acyclic by construction.
+    UnknownEvent(usize),
+    /// A launch this one (transitively) waits on failed, so this one was
+    /// not run (its inputs could be inconsistent). Carries the index of
+    /// the **root** failed event, so callers can tell collateral skips
+    /// apart from root failures.
+    Skipped(usize),
 }
 
 impl std::fmt::Display for LaunchError {
@@ -94,8 +101,11 @@ impl std::fmt::Display for LaunchError {
             LaunchError::NoDevice => {
                 write!(f, "queue owns no devices (add_device before enqueue_any)")
             }
-            LaunchError::Skipped => {
-                write!(f, "launch skipped: an earlier launch on its device stream failed")
+            LaunchError::UnknownEvent(e) => {
+                write!(f, "wait list names unknown event #{e} (not in the current batch)")
+            }
+            LaunchError::Skipped(root) => {
+                write!(f, "launch skipped: transitively depends on failed event #{root}")
             }
         }
     }

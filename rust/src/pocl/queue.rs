@@ -1,46 +1,79 @@
-//! Multi-device launch queue: the `clEnqueueNDRangeKernel` + `clFinish`
-//! analog over a *heterogeneous* set of devices.
+//! Event-graph launch queue: the `clEnqueueNDRangeKernel` +
+//! `clWaitForEvents` + `clFinish` analog over a *heterogeneous* set of
+//! devices.
 //!
-//! [`super::VortexDevice::launch`] serves exactly one launch at a time on
-//! the device's persistent memory. Aggregate throughput (many kernels,
-//! many devices — the ROADMAP's "heavy traffic" scenario, and the paper's
-//! Fig 9 sweep viewed as one workload) needs launches in flight
-//! concurrently. The queue supports two kinds of work:
+//! Every enqueue returns an [`Event`] and accepts a wait list of earlier
+//! events (`*_after` variants), so a batch is a **dependency DAG**, not a
+//! set of independent streams: a launch becomes ready when all of its
+//! predecessors completed, and cross-device edges carry the producer's
+//! committed memory image into the consumer's staging — a producer on one
+//! [`MachineConfig`] feeding a consumer on another is a first-class
+//! pipeline. The queue supports three enqueue forms:
 //!
-//! * **Snapshot launches** ([`LaunchQueue::enqueue`]) — the PR 1 form: the
-//!   caller keeps the device, the queue snapshots its staged memory, and
-//!   every snapshot is an independent job.
-//! * **Owned-device launches** — the queue owns N devices with possibly
-//!   heterogeneous [`MachineConfig`]s ([`LaunchQueue::add_device`]).
-//!   Launches either pin a device ([`LaunchQueue::enqueue_on`]) or let the
-//!   dispatcher place them ([`LaunchQueue::enqueue_any`]). Launches bound
-//!   to one device form an *in-order stream* (the OpenCL in-order command
-//!   queue semantic): each sees its predecessor's memory, and the device's
-//!   memory advances at [`LaunchQueue::finish`] — which is what lets the
-//!   iterative Rodinia benchmarks route through the queue.
+//! * **Snapshot launches** ([`LaunchQueue::enqueue`] /
+//!   [`LaunchQueue::enqueue_after`]) — the caller keeps the device; the
+//!   queue snapshots its staged memory (copy-on-write: O(directory), see
+//!   [`Memory::clone`]). The snapshot is taken at *enqueue* time, so wait
+//!   lists on snapshot launches are ordering-only.
+//! * **Pinned launches** ([`LaunchQueue::enqueue_on`] /
+//!   [`LaunchQueue::enqueue_on_after`]) — bound to a queue-owned device
+//!   ([`LaunchQueue::add_device`]). Pinning is sugar over implicit
+//!   events: each pinned launch automatically waits on the previous
+//!   launch pinned to the same device, which reconstructs the OpenCL
+//!   in-order command-queue semantic (each launch sees its predecessor's
+//!   memory; the device's memory advances at [`LaunchQueue::finish`]).
+//! * **Dispatcher-placed launches** ([`LaunchQueue::enqueue_any`] /
+//!   [`LaunchQueue::enqueue_any_after`]) — placement is **deferred to
+//!   ready time**: the cost model (observed simulated cycles per work
+//!   item, work-item fallback) picks the device only once the launch's
+//!   dependencies completed, so it weighs placements with every
+//!   completion of the current batch already observed — including
+//!   completions of this batch's own earlier DAG levels.
 //!
-//! Scheduling invariant: a device stream executes literally by calling
-//! `VortexDevice::launch` in enqueue order, so every launch's result is
-//! **bit-identical** to sequential launches on the device that ran it
-//! (asserted in `rust/tests/launch_queue.rs`). The dispatcher for unpinned
-//! launches is a deterministic cost-model plan: each launch goes to the
-//! device with the smallest projected batch cost at enqueue time, where a
-//! launch's cost on a device is estimated from that device's **observed
-//! simulated cycles per work item** over completed launches (so a 32×32
-//! config is no longer scheduled like a 2×2 one), falling back to the raw
-//! work-item count before a device has any history. Ties break to the
-//! lowest device index. Placement depends only on the enqueue sequence
-//! and on deterministic simulation results — never on host timing — while
-//! `finish` workers steal whole streams from a shared index.
+//! ## Dependency semantics
+//!
+//! * Wait lists may only name events already returned by an earlier
+//!   enqueue of the current batch, so **the graph is acyclic by
+//!   construction**; an unknown (future, or stale cross-batch) index is
+//!   rejected at enqueue with [`LaunchError::UnknownEvent`].
+//! * An event's **memory-carrying dependency is its highest-indexed
+//!   one**: if that producer ran on the same device, the device's
+//!   in-order memory already reflects it; if it ran elsewhere (another
+//!   device, or a snapshot launch), the consumer's device adopts the
+//!   producer's committed post-launch image (a COW clone — O(touched
+//!   pages)) before staging. Lower wait-list entries are ordering-only.
+//! * A failed launch fails with its own error; every transitive
+//!   dependent reports [`LaunchError::Skipped`] carrying the **root**
+//!   failed event's index, so callers can distinguish root failures from
+//!   collateral skips. Launches that do *not* depend on the failure run
+//!   normally — including later launches pinned to the same device only
+//!   by unrelated explicit waits.
+//!
+//! ## Determinism
+//!
+//! Scheduling runs in deterministic rounds: the ready set is formed in
+//! event order, deferred placements are decided in event order against
+//! the cost model's deterministic history, same-device ready launches
+//! (plus any chain of dependents that wait only on members of the same
+//! slice) execute in event order as one in-order unit, and results commit
+//! in event order. Placement and results are therefore a pure function of
+//! the enqueue sequence — independent of worker count and host timing —
+//! and every launch is **bit-identical** to a sequential
+//! `VortexDevice::launch` replay of the committed schedule: execute the
+//! events in ascending [`QueuedResult::exec_seq`] on their reported
+//! devices, adopting the same highest-dependency images, and every
+//! result, stat and memory image matches (asserted in
+//! `rust/tests/event_graph.rs` and `rust/tests/launch_queue.rs`).
 //!
 //! ```text
 //! let mut q = LaunchQueue::new(jobs);
 //! let d0 = q.add_device(VortexDevice::new(MachineConfig::with_wt(2, 2)));
 //! let d1 = q.add_device(VortexDevice::new(MachineConfig::with_wt(8, 8)));
-//! let h0 = q.enqueue_on(d0, &k0, n0, &args0, Backend::SimX)?;  // pinned
-//! let (h1, dev) = q.enqueue_any(&k1, n1, &args1, Backend::SimX)?; // placed
-//! let results = q.finish();                                    // clFinish
-//! results[h0.0], results[h1.0]   // per-launch result + memory + device
+//! let e0 = q.enqueue_on(d0, &producer, n, &args, Backend::SimX)?;
+//! let e1 = q.enqueue_on_after(d1, &consumer, n, &args, Backend::SimX, &[e0])?;
+//! let e2 = q.enqueue_any_after(&reducer, n, &args, Backend::SimX, &[e1])?;
+//! let results = q.finish();               // clFinish
+//! results[e2.0]                           // per-event result + memory
 //! ```
 
 use super::{execute_launch, Backend, Kernel, LaunchError, LaunchResult, VortexDevice};
@@ -49,12 +82,15 @@ use crate::config::{self, MachineConfig};
 use crate::coordinator::pool;
 use crate::mem::Memory;
 use crate::sim::ExecMode;
+use crate::stack::MAX_ARGS;
 use std::sync::Arc;
 
-/// Index of an enqueued launch; `finish()` returns results at the same
-/// positions (a `cl_event` analog).
+/// Handle of an enqueued launch (a `cl_event` analog): the index of the
+/// launch in the current batch. `finish()` returns results at the same
+/// positions. Events are batch-scoped: after `finish`, handles from the
+/// drained batch are stale and must not be used in new wait lists.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct LaunchHandle(pub usize);
+pub struct Event(pub usize);
 
 /// Index of a queue-owned device (a `cl_device_id` analog).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,7 +99,7 @@ pub struct DeviceId(pub usize);
 /// One staged, self-contained snapshot launch.
 struct SnapshotLaunch {
     config: MachineConfig,
-    /// Snapshot of the device memory with DCB/args/buffers staged.
+    /// COW snapshot of the device memory with DCB/args/buffers staged.
     mem: Memory,
     /// Shared handle to the device's cached program image.
     prog: Arc<Program>,
@@ -71,9 +107,9 @@ struct SnapshotLaunch {
     warm: Option<(u32, u32)>,
 }
 
-/// One launch bound to an owned device's in-order stream. Staged lazily:
-/// DCB/args are written by `VortexDevice::launch` when the stream reaches
-/// it, so it observes every predecessor's memory effects.
+/// One launch bound to an owned device. Staged lazily: DCB/args are
+/// written by `VortexDevice::launch` when the schedule reaches it, so it
+/// observes every predecessor's memory effects.
 struct OwnedLaunch {
     kernel: Kernel,
     total: u32,
@@ -81,35 +117,79 @@ struct OwnedLaunch {
     backend: Backend,
 }
 
-enum Pending {
+enum NodeKind {
     Snapshot(SnapshotLaunch),
-    Owned { device: usize, launch: OwnedLaunch },
+    /// `device: None` ⇔ placement deferred to ready time (`enqueue_any`).
+    Owned { device: Option<usize>, launch: OwnedLaunch },
+}
+
+/// One event of the current batch: its launch plus the events it waits
+/// on (explicit wait list ∪ the implicit same-device stream predecessor).
+struct Node {
+    deps: Vec<usize>,
+    kind: NodeKind,
 }
 
 /// Result of one queued launch: the launch outcome, the device memory
 /// image after it (read buffers out of it with
-/// [`Memory::read_i32_slice`]; empty for owned-stream launches when
-/// [`LaunchQueue::stream_snapshots`] is off), and the owned device that
-/// ran it (`None` for snapshot launches).
+/// [`Memory::read_i32_slice`]; empty for owned-device launches when
+/// [`LaunchQueue::stream_snapshots`] is off), the owned device that ran
+/// it (`None` for snapshot launches), and the launch's position in the
+/// deterministic commit order.
 pub struct QueuedResult {
     pub result: LaunchResult,
     pub mem: Memory,
     pub device: Option<DeviceId>,
+    /// Position of this launch in `finish`'s deterministic commit order
+    /// (rounds in order, event index within a round). Replaying completed
+    /// events sequentially in ascending `exec_seq` on their reported
+    /// devices reproduces every result bit-identically — the order the
+    /// event-graph property tests replay.
+    pub exec_seq: u32,
 }
 
-/// A unit of parallel work inside `finish`: either one snapshot launch or
-/// one owned device's whole in-order stream.
-enum Stream {
-    Snapshot { idx: usize, job: SnapshotLaunch },
-    Device { di: usize, dev: Box<VortexDevice>, items: Vec<(usize, OwnedLaunch)> },
+/// A unit of parallel work inside one `finish` round: one snapshot
+/// launch, or one device's in-order slice of the round.
+enum Unit {
+    Snap { idx: usize, job: SnapshotLaunch, keep_image: bool },
+    Dev { di: usize, dev: Box<VortexDevice>, items: Vec<Item> },
 }
 
-enum StreamOut {
-    Snapshot { idx: usize, out: Result<QueuedResult, LaunchError> },
-    Device {
+/// One owned launch inside a device unit.
+struct Item {
+    idx: usize,
+    launch: OwnedLaunch,
+    /// Committed image of the highest-indexed dependency when that
+    /// producer ran elsewhere (another device, or a snapshot launch):
+    /// adopted into this device before staging — the cross-device edge's
+    /// memory hand-off (a COW clone, O(touched pages)).
+    adopt: Option<Memory>,
+    /// Dependencies that execute earlier in this same unit (ascending);
+    /// if one fails, this item is skipped with the failure's root.
+    unit_deps: Vec<usize>,
+    /// Clone the post-launch image (dependents and/or
+    /// [`LaunchQueue::stream_snapshots`] need it).
+    keep_image: bool,
+}
+
+/// Per-item outcome inside a device unit.
+enum ItemOut {
+    Done(LaunchResult, Option<Memory>),
+    Fail(LaunchError),
+    /// Skipped inside the unit; carries the root failed event index.
+    Skip(usize),
+}
+
+enum UnitOut {
+    Snap {
+        idx: usize,
+        /// `(result, post-launch memory, committed image for dependents)`.
+        out: Result<(LaunchResult, Memory, Option<Memory>), LaunchError>,
+    },
+    Dev {
         di: usize,
         dev: Box<VortexDevice>,
-        outs: Vec<(usize, Result<QueuedResult, LaunchError>)>,
+        outs: Vec<(usize, ItemOut)>,
     },
 }
 
@@ -125,31 +205,30 @@ pub struct LaunchQueue {
     /// device's own `exec_mode` (they must match sequential launches
     /// exactly).
     pub exec_mode: ExecMode,
-    /// Snapshot the device memory into every owned-stream
-    /// [`QueuedResult::mem`]? Defaults to `true`. Set `false` when only
-    /// the stream's *final* state matters (still available from
-    /// [`LaunchQueue::device`] after `finish`) — e.g. the Fig 9 sweep,
-    /// where per-launch images of iterative benchmarks would otherwise be
-    /// cloned dozens of times and dropped unread. When `false`,
-    /// owned-stream results carry an empty `Memory`.
+    /// Snapshot the device memory into every owned-device
+    /// [`QueuedResult::mem`]? Defaults to `true`. With COW memory the
+    /// per-launch clone is O(directory), but sweep-style consumers that
+    /// only read the devices' *final* state (still available from
+    /// [`LaunchQueue::device`] after `finish`) can set `false` to elide
+    /// it entirely; owned-device results then carry an empty `Memory`.
     pub stream_snapshots: bool,
     devices: Vec<VortexDevice>,
-    /// Per-device dispatcher state (assigned batch cost + observed cost
-    /// model), indexed like `devices`.
+    /// Observed cost model per device, indexed like `devices`.
     sched: Vec<DeviceSched>,
-    pending: Vec<Pending>,
+    /// The current batch's event DAG.
+    nodes: Vec<Node>,
+    /// Last event pinned to each device in the current batch — the
+    /// implicit stream predecessor `enqueue_on` waits on.
+    last_on_device: Vec<Option<usize>>,
 }
 
-/// Deterministic per-device cost model for the unpinned dispatcher
+/// Deterministic per-device cost model for the deferred dispatcher
 /// (ROADMAP "dispatcher cost model"): completed SimX launches teach the
 /// queue each device's simulated cycles per work item, so heterogeneous
 /// configs are weighted by how fast they actually chew through work
 /// rather than by raw work-item counts.
 #[derive(Clone, Copy, Debug, Default)]
 struct DeviceSched {
-    /// Estimated cost assigned this batch (cycles once the device has
-    /// history, work items before — see [`LaunchQueue::cost_estimate`]).
-    assigned: u64,
     /// Observed totals from completed launches (cycles > 0 only, so the
     /// functional backend never poisons the model with zeros).
     total_cycles: u64,
@@ -169,7 +248,8 @@ impl LaunchQueue {
             stream_snapshots: true,
             devices: Vec::new(),
             sched: Vec::new(),
-            pending: Vec::new(),
+            nodes: Vec::new(),
+            last_on_device: Vec::new(),
         }
     }
 
@@ -204,12 +284,20 @@ impl LaunchQueue {
         self.jobs
     }
 
+    /// Number of events in the current (unfinished) batch.
     pub fn len(&self) -> usize {
-        self.pending.len()
+        self.nodes.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.pending.is_empty()
+        self.nodes.is_empty()
+    }
+
+    /// Total wait-list edges in the current batch (explicit waits plus
+    /// the implicit in-order stream edges) — the DAG's edge count,
+    /// surfaced by the CLI and the DAG bench section.
+    pub fn wait_edges(&self) -> usize {
+        self.nodes.iter().map(|n| n.deps.len()).sum()
     }
 
     /// Adopt `dev` into the queue's device set (heterogeneous configs
@@ -217,6 +305,7 @@ impl LaunchQueue {
     pub fn add_device(&mut self, dev: VortexDevice) -> DeviceId {
         self.devices.push(dev);
         self.sched.push(DeviceSched::default());
+        self.last_on_device.push(None);
         DeviceId(self.devices.len() - 1)
     }
 
@@ -235,11 +324,29 @@ impl LaunchQueue {
         &mut self.devices[id.0]
     }
 
+    /// Validate a wait list against the current batch: every entry must
+    /// name an already-enqueued event (which is what makes the graph a
+    /// DAG by construction — no forward or stale references, hence no
+    /// cycles). Returns the deduplicated dependency list.
+    fn check_wait_list(&self, wait_list: &[Event]) -> Result<Vec<usize>, LaunchError> {
+        let n = self.nodes.len();
+        let mut deps = Vec::with_capacity(wait_list.len());
+        for e in wait_list {
+            if e.0 >= n {
+                return Err(LaunchError::UnknownEvent(e.0));
+            }
+            if !deps.contains(&e.0) {
+                deps.push(e.0);
+            }
+        }
+        Ok(deps)
+    }
+
     /// `clEnqueueNDRangeKernel` (snapshot form): stage a launch of
     /// `kernel` over `total` work items on a caller-owned device. The
-    /// device's memory (with the DCB and args written) is snapshotted, so
-    /// later mutations of `device` do not affect this launch and many
-    /// launches from one device may be in flight at once.
+    /// device's memory (with the DCB and args written) is snapshotted via
+    /// COW, so later mutations of `device` do not affect this launch and
+    /// many launches from one device may be in flight at once.
     pub fn enqueue(
         &mut self,
         device: &mut VortexDevice,
@@ -247,25 +354,45 @@ impl LaunchQueue {
         total: u32,
         args: &[u32],
         backend: Backend,
-    ) -> Result<LaunchHandle, LaunchError> {
-        let prog = device.stage(kernel, total, args)?;
-        self.pending.push(Pending::Snapshot(SnapshotLaunch {
-            config: device.config,
-            mem: device.mem.clone(),
-            prog,
-            backend,
-            warm: device.warm_range(),
-        }));
-        Ok(LaunchHandle(self.pending.len() - 1))
+    ) -> Result<Event, LaunchError> {
+        self.enqueue_after(device, kernel, total, args, backend, &[])
     }
 
-    /// Enqueue a launch pinned to owned device `id`. Launches pinned to
-    /// the same device run in enqueue order, each observing its
-    /// predecessor's memory (the in-order command-queue semantic); if a
-    /// launch fails, its successors on that stream are not run and report
-    /// [`LaunchError::Skipped`] — exactly where a sequential `launch()?`
-    /// caller would have stopped. Assembly errors surface here, not at
-    /// `finish`.
+    /// [`LaunchQueue::enqueue`] with a wait list: the snapshot still
+    /// captures the device memory *now*, but execution is deferred until
+    /// every event in `wait_list` completed (ordering-only edges; a
+    /// failed dependency skips this launch).
+    pub fn enqueue_after(
+        &mut self,
+        device: &mut VortexDevice,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        backend: Backend,
+        wait_list: &[Event],
+    ) -> Result<Event, LaunchError> {
+        let deps = self.check_wait_list(wait_list)?;
+        let prog = device.stage(kernel, total, args)?;
+        self.nodes.push(Node {
+            deps,
+            kind: NodeKind::Snapshot(SnapshotLaunch {
+                config: device.config,
+                mem: device.mem.clone(),
+                prog,
+                backend,
+                warm: device.warm_range(),
+            }),
+        });
+        Ok(Event(self.nodes.len() - 1))
+    }
+
+    /// Enqueue a launch pinned to owned device `id`. Sugar over implicit
+    /// events: the launch waits on the previous launch pinned to the same
+    /// device, so per-device launches form the OpenCL in-order stream
+    /// (each observing its predecessor's memory); if a predecessor fails,
+    /// its dependents report [`LaunchError::Skipped`] with the root event
+    /// — exactly where a sequential `launch()?` caller would have
+    /// stopped. Assembly errors surface here, not at `finish`.
     pub fn enqueue_on(
         &mut self,
         id: DeviceId,
@@ -273,168 +400,533 @@ impl LaunchQueue {
         total: u32,
         args: &[u32],
         backend: Backend,
-    ) -> Result<LaunchHandle, LaunchError> {
-        if args.len() > crate::stack::MAX_ARGS as usize {
+    ) -> Result<Event, LaunchError> {
+        self.enqueue_on_after(id, kernel, total, args, backend, &[])
+    }
+
+    /// [`LaunchQueue::enqueue_on`] with an explicit wait list on top of
+    /// the implicit stream edge. A cross-device entry that is the
+    /// launch's highest-indexed dependency carries that producer's
+    /// committed memory image into this device (see the module docs).
+    pub fn enqueue_on_after(
+        &mut self,
+        id: DeviceId,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        backend: Backend,
+        wait_list: &[Event],
+    ) -> Result<Event, LaunchError> {
+        let mut deps = self.check_wait_list(wait_list)?;
+        if args.len() > MAX_ARGS as usize {
             return Err(LaunchError::TooManyArgs(args.len()));
         }
         self.devices[id.0].ensure_cached(kernel)?;
-        let est = self.cost_estimate(id.0, total);
-        let s = &mut self.sched[id.0];
-        s.assigned = s.assigned.saturating_add(est);
-        self.pending.push(Pending::Owned {
-            device: id.0,
-            launch: OwnedLaunch {
-                kernel: kernel.clone(),
-                total,
-                args: args.to_vec(),
-                backend,
+        if let Some(prev) = self.last_on_device[id.0] {
+            if !deps.contains(&prev) {
+                deps.push(prev);
+            }
+        }
+        let idx = self.nodes.len();
+        self.last_on_device[id.0] = Some(idx);
+        self.nodes.push(Node {
+            deps,
+            kind: NodeKind::Owned {
+                device: Some(id.0),
+                launch: OwnedLaunch {
+                    kernel: kernel.clone(),
+                    total,
+                    args: args.to_vec(),
+                    backend,
+                },
             },
         });
-        Ok(LaunchHandle(self.pending.len() - 1))
+        Ok(Event(idx))
     }
 
-    /// Enqueue an unpinned launch: the dispatcher places it on the device
-    /// with the smallest *projected* batch cost — cost already assigned
-    /// this batch plus this launch's estimated cost on that device
-    /// ([`LaunchQueue::cost_estimate`]: observed cycles per work item,
-    /// falling back to work-item count before first completion; ties to
-    /// the lowest device index). Placement happens at enqueue time, so it
-    /// is a pure function of the enqueue sequence and of deterministic
-    /// simulation history — identical across runs and worker counts.
-    /// Returns the handle and the chosen device.
+    /// Enqueue a dispatcher-placed launch: the device is chosen at
+    /// **ready time** (when the wait list has completed), on the device
+    /// with the smallest projected round cost — load already scheduled
+    /// this round plus this launch's estimated cost
+    /// ([`LaunchQueue::cost_estimate`]; ties to the lowest device index).
+    /// Deferring placement lets the cost model see every completion of
+    /// the current batch's earlier DAG levels. The placement is reported
+    /// in [`QueuedResult::device`] and is a pure function of the enqueue
+    /// sequence.
     pub fn enqueue_any(
         &mut self,
         kernel: &Kernel,
         total: u32,
         args: &[u32],
         backend: Backend,
-    ) -> Result<(LaunchHandle, DeviceId), LaunchError> {
+    ) -> Result<Event, LaunchError> {
+        self.enqueue_any_after(kernel, total, args, backend, &[])
+    }
+
+    /// [`LaunchQueue::enqueue_any`] with a wait list (the dependency
+    /// semantics of [`LaunchQueue::enqueue_on_after`] apply, with the
+    /// device chosen at ready time).
+    pub fn enqueue_any_after(
+        &mut self,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        backend: Backend,
+        wait_list: &[Event],
+    ) -> Result<Event, LaunchError> {
         if self.devices.is_empty() {
             return Err(LaunchError::NoDevice);
         }
-        let di = (0..self.devices.len())
-            .min_by_key(|&i| {
-                (self.sched[i].assigned.saturating_add(self.cost_estimate(i, total)), i)
-            })
-            .expect("devices is non-empty");
-        let id = DeviceId(di);
-        let h = self.enqueue_on(id, kernel, total, args, backend)?;
-        Ok((h, id))
+        let deps = self.check_wait_list(wait_list)?;
+        if args.len() > MAX_ARGS as usize {
+            return Err(LaunchError::TooManyArgs(args.len()));
+        }
+        // Cache the assembly on every device now (placement is deferred),
+        // so assembly errors still surface at enqueue time.
+        for dev in &mut self.devices {
+            dev.ensure_cached(kernel)?;
+        }
+        self.nodes.push(Node {
+            deps,
+            kind: NodeKind::Owned {
+                device: None,
+                launch: OwnedLaunch {
+                    kernel: kernel.clone(),
+                    total,
+                    args: args.to_vec(),
+                    backend,
+                },
+            },
+        });
+        Ok(Event(self.nodes.len() - 1))
     }
 
-    /// `clFinish`: run every pending launch to completion (over up to
-    /// `jobs` host threads of the persistent worker pool) and return
-    /// per-launch results in enqueue order. Owned devices' memory advances
-    /// past their streams; the queue is drained and can be reused.
+    /// `clFinish`: run the batch's dependency DAG to completion (over up
+    /// to `jobs` host threads of the persistent worker pool) and return
+    /// per-event results in enqueue order. Owned devices' memory advances
+    /// past their launches; the queue is drained and can be reused.
+    ///
+    /// Per-event statuses distinguish root failures (the launch's own
+    /// error) from collateral damage ([`LaunchError::Skipped`] with the
+    /// root event index). Scheduling proceeds in deterministic rounds —
+    /// see the module docs for the full determinism contract.
     pub fn finish(&mut self) -> Vec<Result<QueuedResult, LaunchError>> {
-        let pending = std::mem::take(&mut self.pending);
-        let total = pending.len();
-        // The batch is taken: its dispatcher loads are spent (the cost
-        // model's observed totals persist across batches). Resetting here
-        // (not after the run) also keeps a queue whose job panicked
-        // mid-run in a sane state for the NoDevice/`add_device` paths.
-        for s in &mut self.sched {
-            s.assigned = 0;
+        /// Completion state of an event during scheduling.
+        #[derive(Clone, Copy, PartialEq, Eq)]
+        enum Done {
+            Ok,
+            Failed,
+            Skipped,
         }
 
-        // Partition into streams: snapshots are singleton jobs; owned
-        // launches group per device, preserving enqueue order. Owned
-        // launches also record `(device, work items)` so completed results
-        // can feed the dispatcher's cost model.
-        let mut per_dev: Vec<Vec<(usize, OwnedLaunch)>> =
-            (0..self.devices.len()).map(|_| Vec::new()).collect();
-        let mut owned_meta: Vec<Option<(usize, u32)>> = vec![None; total];
-        let mut streams = Vec::new();
-        for (idx, p) in pending.into_iter().enumerate() {
-            match p {
-                Pending::Snapshot(job) => streams.push(Stream::Snapshot { idx, job }),
-                Pending::Owned { device, launch } => {
-                    owned_meta[idx] = Some((device, launch.total));
-                    per_dev[device].push((idx, launch));
-                }
-            }
+        let taken = std::mem::take(&mut self.nodes);
+        for l in &mut self.last_on_device {
+            *l = None;
         }
-        let mut parked: Vec<Option<VortexDevice>> =
-            self.devices.drain(..).map(Some).collect();
-        for (di, items) in per_dev.into_iter().enumerate() {
-            if !items.is_empty() {
-                let dev = Box::new(parked[di].take().expect("device parked"));
-                streams.push(Stream::Device { di, dev, items });
+        let total = taken.len();
+        let mut deps: Vec<Vec<usize>> = Vec::with_capacity(total);
+        let mut kinds: Vec<Option<NodeKind>> = Vec::with_capacity(total);
+        for n in taken {
+            let mut d = n.deps;
+            d.sort_unstable();
+            deps.push(d);
+            kinds.push(Some(n.kind));
+        }
+
+        let mut indeg: Vec<usize> = deps.iter().map(|d| d.len()).collect();
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); total];
+        for (i, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                dependents[d].push(i);
             }
         }
 
-        let mode = self.exec_mode;
-        let snapshots = self.stream_snapshots;
-        let outs = pool::run_indexed(self.jobs, streams, move |_, s| match s {
-            Stream::Snapshot { idx, job } => {
-                let mut mem = job.mem;
-                let out =
-                    execute_launch(job.config, &mut mem, &job.prog, job.backend, job.warm, mode)
-                        .map(|result| QueuedResult { result, mem, device: None });
-                StreamOut::Snapshot { idx, out }
-            }
-            Stream::Device { di, mut dev, items } => {
-                let mut outs = Vec::with_capacity(items.len());
-                let mut failed = false;
-                for (idx, l) in items {
-                    if failed {
-                        // In-order stream: a successor of a failed launch
-                        // would see inconsistent predecessor memory, which
-                        // a sequential `launch()?` caller never runs.
-                        outs.push((idx, Err(LaunchError::Skipped)));
-                        continue;
-                    }
-                    // Literally the sequential path: bit-identical to a
-                    // caller running these launches on this device.
-                    let r = dev
-                        .launch(&l.kernel, l.total, &l.args, l.backend)
-                        .map(|result| QueuedResult {
-                            result,
-                            mem: if snapshots { dev.mem.clone() } else { Memory::new() },
-                            device: Some(DeviceId(di)),
-                        });
-                    failed = r.is_err();
-                    outs.push((idx, r));
-                }
-                StreamOut::Device { di, dev, outs }
-            }
-        });
-
+        let mut state: Vec<Option<Done>> = vec![None; total];
+        // Root failed event for skipped nodes (indexed like `state`).
+        let mut skip_root: Vec<usize> = vec![0; total];
         let mut results: Vec<Option<Result<QueuedResult, LaunchError>>> =
             (0..total).map(|_| None).collect();
-        for so in outs {
-            match so {
-                StreamOut::Snapshot { idx, out } => results[idx] = Some(out),
-                StreamOut::Device { di, dev, outs } => {
-                    parked[di] = Some(*dev);
-                    for (idx, r) in outs {
-                        results[idx] = Some(r);
+        // Committed post-launch images — the cross-device hand-off
+        // source. Kept only while a dependent that can adopt one is
+        // still unfinished (see `want_commit` / `live_dependents`).
+        let mut committed: Vec<Option<Memory>> = (0..total).map(|_| None).collect();
+        // Device each completed owned event ran on (`None` ⇔ snapshot).
+        let mut exec_dev: Vec<Option<usize>> = vec![None; total];
+        // Work items per owned event (cost-model teaching after launch
+        // payloads moved into the workers).
+        let mut work_items: Vec<u32> = vec![0; total];
+        // Keep a committed image for this event? Decided at schedule
+        // time: true only when some dependent's memory-carrying (highest)
+        // dependency is this event and that dependent may run elsewhere
+        // — same-device chains never pay an image clone.
+        let mut want_commit: Vec<bool> = vec![false; total];
+        // Unfinished dependents per event: when it hits zero the
+        // committed image (if any) is dropped, so hand-off images live
+        // only as long as a consumer can still adopt them.
+        let mut live_dependents: Vec<usize> = dependents.iter().map(|d| d.len()).collect();
+
+        let mut parked: Vec<Option<VortexDevice>> =
+            self.devices.drain(..).map(Some).collect();
+        let ndev = parked.len();
+        let mode = self.exec_mode;
+        let snapshots_on = self.stream_snapshots;
+
+        let mut exec_seq: u32 = 0;
+        let mut remaining = total;
+        while remaining > 0 {
+            // 1. Ready set: unfinished events whose dependencies all
+            // completed, in event order.
+            let ready: Vec<usize> =
+                (0..total).filter(|&i| state[i].is_none() && indeg[i] == 0).collect();
+            assert!(!ready.is_empty(), "event graph is acyclic by construction");
+
+            // 2. Skip propagation: a ready event with a failed or skipped
+            // dependency completes as Skipped(root) without running. The
+            // root is the lowest-indexed bad dependency's root.
+            let mut run_set: Vec<usize> = Vec::new();
+            for i in ready {
+                let bad = deps[i].iter().copied().find(|&d| {
+                    matches!(state[d], Some(Done::Failed) | Some(Done::Skipped))
+                });
+                if let Some(d) = bad {
+                    let root =
+                        if state[d] == Some(Done::Skipped) { skip_root[d] } else { d };
+                    state[i] = Some(Done::Skipped);
+                    skip_root[i] = root;
+                    results[i] = Some(Err(LaunchError::Skipped(root)));
+                    kinds[i] = None;
+                    for &j in &dependents[i] {
+                        indeg[j] -= 1;
+                    }
+                    for &p in &deps[i] {
+                        live_dependents[p] -= 1;
+                        if live_dependents[p] == 0 {
+                            committed[p] = None;
+                        }
+                    }
+                    remaining -= 1;
+                } else {
+                    run_set.push(i);
+                }
+            }
+            if run_set.is_empty() {
+                continue; // skips above unblocked the next wave
+            }
+
+            // 3. Deferred placement + per-device round load, in event
+            // order: pinned launches charge their estimate to their
+            // device; a deferred launch goes to the device with the
+            // smallest projected load (ties to the lowest index).
+            let mut assigned: Vec<u64> = vec![0; ndev];
+            for &i in &run_set {
+                if let Some(NodeKind::Owned { device, launch }) = kinds[i].as_mut() {
+                    let total_items = launch.total;
+                    let di = match *device {
+                        Some(d) => d,
+                        None => {
+                            let d = (0..ndev)
+                                .min_by_key(|&d| {
+                                    (
+                                        assigned[d]
+                                            .saturating_add(self.cost_estimate(d, total_items)),
+                                        d,
+                                    )
+                                })
+                                .expect("enqueue_any checked the queue owns devices");
+                            *device = Some(d);
+                            d
+                        }
+                    };
+                    assigned[di] =
+                        assigned[di].saturating_add(self.cost_estimate(di, total_items));
+                }
+            }
+
+            // 4. Group the round into units: snapshots are singletons;
+            // owned launches group per device in event order.
+            let mut snaps: Vec<usize> = Vec::new();
+            let mut groups: Vec<Vec<usize>> = vec![Vec::new(); ndev];
+            // Device group (if any) each node is scheduled into this round.
+            let mut round_dev: Vec<Option<usize>> = vec![None; total];
+            for &i in &run_set {
+                match kinds[i].as_ref().expect("scheduled node still pending") {
+                    NodeKind::Snapshot(_) => snaps.push(i),
+                    NodeKind::Owned { device, .. } => {
+                        let di = device.expect("placed above");
+                        round_dev[i] = Some(di);
+                        groups[di].push(i);
                     }
                 }
             }
-        }
-        self.devices = parked
-            .into_iter()
-            .map(|d| d.expect("device returned from stream"))
-            .collect();
-        let results: Vec<Result<QueuedResult, LaunchError>> = results
-            .into_iter()
-            .map(|r| r.expect("every enqueued launch produces a result"))
-            .collect();
-        // Teach the dispatcher's cost model from completed owned launches
-        // (enqueue-index order; simulation cycles are deterministic, so
-        // the model — and future placements — stay deterministic too).
-        for (idx, meta) in owned_meta.iter().enumerate() {
-            let Some((di, items)) = *meta else { continue };
-            if let Ok(qr) = &results[idx] {
-                if qr.result.cycles > 0 && items > 0 {
-                    let s = &mut self.sched[di];
-                    s.total_cycles = s.total_cycles.saturating_add(qr.result.cycles);
-                    s.total_items = s.total_items.saturating_add(items as u64);
+            // 5. Chain extension: a pinned, not-yet-ready event whose
+            // dependencies are all either completed-Ok or earlier members
+            // of the same device group can ride the group's in-order
+            // unit. One ascending pass reaches the fixpoint because every
+            // dependency has a smaller event index. This recovers
+            // whole-stream parallelism for pure in-order streams (one
+            // unit per device, no per-launch barrier).
+            for i in 0..total {
+                if state[i].is_some() || round_dev[i].is_some() || indeg[i] == 0 {
+                    continue;
+                }
+                let Some(NodeKind::Owned { device: Some(di), .. }) = kinds[i].as_ref()
+                else {
+                    continue;
+                };
+                let di = *di;
+                if deps[i].iter().all(|&d| {
+                    state[d] == Some(Done::Ok) || round_dev[d] == Some(di)
+                }) {
+                    round_dev[i] = Some(di);
+                    groups[di].push(i);
                 }
             }
+            // Restore event order inside each group: chain extension may
+            // have appended a lower-indexed pinned event after a
+            // dispatcher-placed one from the ready set. Dependencies
+            // always have smaller indices, so ascending order satisfies
+            // every in-unit edge — and makes per-device execution order
+            // equal commit (`exec_seq`) order, which the sequential-
+            // replay contract relies on.
+            for g in &mut groups {
+                g.sort_unstable();
+            }
+
+            // 6. Build the units (moving launch payloads out of `kinds`).
+            // A committed image is worth keeping only if some unfinished
+            // dependent's highest dependency is this event and that
+            // dependent can adopt it: any owned dependent, for a snapshot
+            // producer (snapshots have no device); an owned dependent on
+            // another device — or still unplaced — for an owned producer.
+            let mut units: Vec<Unit> = Vec::new();
+            for idx in snaps {
+                let Some(NodeKind::Snapshot(job)) = kinds[idx].take() else {
+                    unreachable!("snapshot node scheduled twice");
+                };
+                want_commit[idx] = dependents[idx].iter().any(|&j| {
+                    deps[j].last() == Some(&idx)
+                        && matches!(kinds[j].as_ref(), Some(NodeKind::Owned { .. }))
+                });
+                units.push(Unit::Snap { idx, job, keep_image: want_commit[idx] });
+            }
+            for (di, group) in groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let mut items = Vec::with_capacity(group.len());
+                for &idx in group {
+                    let Some(NodeKind::Owned { launch, .. }) = kinds[idx].take() else {
+                        unreachable!("owned node scheduled twice");
+                    };
+                    work_items[idx] = launch.total;
+                    // The memory-carrying dependency is the highest-
+                    // indexed one; adopt its committed image when it ran
+                    // elsewhere. (An in-unit max dependency is same-
+                    // device by construction and carries nothing.)
+                    let adopt = match deps[idx].last() {
+                        Some(&maxd)
+                            if state[maxd] == Some(Done::Ok)
+                                && exec_dev[maxd] != Some(di) =>
+                        {
+                            Some(
+                                committed[maxd]
+                                    .clone()
+                                    .expect("committed image kept for dependents"),
+                            )
+                        }
+                        _ => None,
+                    };
+                    let unit_deps: Vec<usize> = deps[idx]
+                        .iter()
+                        .copied()
+                        .filter(|&d| round_dev[d] == Some(di))
+                        .collect();
+                    want_commit[idx] = dependents[idx].iter().any(|&j| {
+                        deps[j].last() == Some(&idx)
+                            && match kinds[j].as_ref() {
+                                Some(NodeKind::Owned { device, .. }) => {
+                                    device.map_or(true, |dj| dj != di)
+                                }
+                                _ => false,
+                            }
+                    });
+                    items.push(Item {
+                        idx,
+                        launch,
+                        adopt,
+                        unit_deps,
+                        keep_image: snapshots_on || want_commit[idx],
+                    });
+                }
+                let dev = Box::new(parked[di].take().expect("device parked"));
+                units.push(Unit::Dev { di, dev, items });
+            }
+
+            // 7. Run the round's units over the worker pool.
+            let outs = pool::run_indexed(self.jobs, units, move |_, u| match u {
+                Unit::Snap { idx, job, keep_image } => {
+                    let mut mem = job.mem;
+                    let out = execute_launch(
+                        job.config, &mut mem, &job.prog, job.backend, job.warm, mode,
+                    )
+                    .map(|result| {
+                        let img = if keep_image { Some(mem.clone()) } else { None };
+                        (result, mem, img)
+                    });
+                    UnitOut::Snap { idx, out }
+                }
+                Unit::Dev { di, mut dev, items } => {
+                    let mut outs: Vec<(usize, ItemOut)> = Vec::with_capacity(items.len());
+                    // (event, failure root) for failed/skipped unit items
+                    let mut bad: Vec<(usize, usize)> = Vec::new();
+                    for it in items {
+                        let skip = it.unit_deps.iter().find_map(|d| {
+                            bad.iter().find(|(j, _)| j == d).map(|&(_, r)| r)
+                        });
+                        if let Some(root) = skip {
+                            bad.push((it.idx, root));
+                            outs.push((it.idx, ItemOut::Skip(root)));
+                            continue;
+                        }
+                        if let Some(img) = it.adopt {
+                            // Cross-device edge: start from the
+                            // producer's committed image (COW clone).
+                            dev.mem = img;
+                        }
+                        // Literally the sequential path: bit-identical to
+                        // a caller running this launch on this device.
+                        match dev.launch(
+                            &it.launch.kernel,
+                            it.launch.total,
+                            &it.launch.args,
+                            it.launch.backend,
+                        ) {
+                            Ok(result) => {
+                                let img = if it.keep_image {
+                                    Some(dev.mem.clone())
+                                } else {
+                                    None
+                                };
+                                outs.push((it.idx, ItemOut::Done(result, img)));
+                            }
+                            Err(e) => {
+                                bad.push((it.idx, it.idx));
+                                outs.push((it.idx, ItemOut::Fail(e)));
+                            }
+                        }
+                    }
+                    UnitOut::Dev { di, dev, outs }
+                }
+            });
+
+            // 8. Commit in event order (deterministic: teaches the cost
+            // model and releases dependents identically for any worker
+            // count).
+            let mut round_out: Vec<(usize, Option<usize>, ItemOut)> = Vec::new();
+            for u in outs {
+                match u {
+                    UnitOut::Snap { idx, out } => match out {
+                        Ok((result, mem, img)) => {
+                            // Snapshot results always carry their memory;
+                            // park the committed image via `round_out` by
+                            // reusing the owned plumbing.
+                            committed[idx] = img;
+                            round_out.push((
+                                idx,
+                                None,
+                                ItemOut::Done(result, Some(mem)),
+                            ));
+                        }
+                        Err(e) => round_out.push((idx, None, ItemOut::Fail(e))),
+                    },
+                    UnitOut::Dev { di, dev, outs } => {
+                        parked[di] = Some(*dev);
+                        for (idx, o) in outs {
+                            round_out.push((idx, Some(di), o));
+                        }
+                    }
+                }
+            }
+            round_out.sort_by_key(|&(idx, _, _)| idx);
+            for (idx, di, out) in round_out {
+                match out {
+                    ItemOut::Done(result, img) => {
+                        state[idx] = Some(Done::Ok);
+                        exec_dev[idx] = di;
+                        let mem = match di {
+                            // Owned launch: per-event image if requested.
+                            Some(d) => {
+                                if result.cycles > 0 && work_items[idx] > 0 {
+                                    let s = &mut self.sched[d];
+                                    s.total_cycles =
+                                        s.total_cycles.saturating_add(result.cycles);
+                                    s.total_items =
+                                        s.total_items.saturating_add(work_items[idx] as u64);
+                                }
+                                match (snapshots_on, want_commit[idx]) {
+                                    (true, true) => {
+                                        let m = img
+                                            .clone()
+                                            .expect("image kept when stream_snapshots");
+                                        committed[idx] = img;
+                                        m
+                                    }
+                                    (true, false) => {
+                                        img.expect("image kept when stream_snapshots")
+                                    }
+                                    (false, true) => {
+                                        committed[idx] = img;
+                                        Memory::new()
+                                    }
+                                    (false, false) => Memory::new(),
+                                }
+                            }
+                            // Snapshot launch: the post-run memory itself
+                            // (committed image already stored above).
+                            None => img.expect("snapshot memory always returned"),
+                        };
+                        results[idx] = Some(Ok(QueuedResult {
+                            result,
+                            mem,
+                            device: di.map(DeviceId),
+                            exec_seq,
+                        }));
+                    }
+                    ItemOut::Fail(e) => {
+                        state[idx] = Some(Done::Failed);
+                        exec_dev[idx] = di;
+                        results[idx] = Some(Err(e));
+                    }
+                    ItemOut::Skip(root) => {
+                        state[idx] = Some(Done::Skipped);
+                        skip_root[idx] = root;
+                        results[idx] = Some(Err(LaunchError::Skipped(root)));
+                    }
+                }
+                for &j in &dependents[idx] {
+                    indeg[j] -= 1;
+                }
+                // This event no longer needs its producers' hand-off
+                // images once it completed (it adopted at schedule time).
+                for &p in &deps[idx] {
+                    live_dependents[p] -= 1;
+                    if live_dependents[p] == 0 {
+                        committed[p] = None;
+                    }
+                }
+                remaining -= 1;
+                exec_seq += 1;
+            }
         }
+
+        self.devices = parked
+            .into_iter()
+            .map(|d| d.expect("device returned from its unit"))
+            .collect();
         results
+            .into_iter()
+            .map(|r| r.expect("every enqueued event produces a result"))
+            .collect()
     }
 }
 
@@ -526,7 +1018,7 @@ kernel_body:
     #[test]
     fn owned_device_stream_chains_memory() {
         // Two launches pinned to one owned device: the second reads the
-        // first's output (in-order command-queue semantic), and the
+        // first's output (the implicit-event in-order stream), and the
         // device's persistent memory advances at finish.
         let n = 8usize;
         let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 2));
@@ -539,11 +1031,14 @@ kernel_body:
         let d = q.add_device(dev);
         let h1 = q.enqueue_on(d, &k3, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
         let h2 = q.enqueue_on(d, &k3, n as u32, &[b.addr, a.addr], Backend::SimX).unwrap();
+        // pinning is sugar over one implicit wait edge per successor
+        assert_eq!(q.wait_edges(), 1);
         let results = q.finish();
         assert_eq!(results.len(), 2);
         let r1 = results[h1.0].as_ref().unwrap();
         let r2 = results[h2.0].as_ref().unwrap();
         assert_eq!(r1.device, Some(d));
+        assert!(r1.exec_seq < r2.exec_seq, "stream order is the commit order");
         assert_eq!(r1.mem.read_i32_slice(b.addr, n), vec![3; n]);
         assert_eq!(r2.mem.read_i32_slice(a.addr, n), vec![9; n]);
         // device memory persists past the batch
@@ -566,14 +1061,16 @@ kernel_body:
             q
         };
         let place = |q: &mut LaunchQueue, totals: &[u32]| -> Vec<usize> {
-            totals
+            let events: Vec<Event> = totals
                 .iter()
                 .map(|&t| {
-                    let (_, d) = q
-                        .enqueue_any(&k, t, &[0x9000_0000, 0x9000_0040], Backend::SimX)
-                        .unwrap();
-                    d.0
+                    q.enqueue_any(&k, t, &[0x9000_0000, 0x9000_0040], Backend::SimX).unwrap()
                 })
+                .collect();
+            let results = q.finish();
+            events
+                .iter()
+                .map(|e| results[e.0].as_ref().unwrap().device.unwrap().0)
                 .collect()
         };
         let totals = [16u32, 4, 4, 8, 16, 2];
@@ -583,9 +1080,10 @@ kernel_body:
         let p2 = place(&mut q2, &totals);
         // identical enqueue sequence ⇒ identical placement
         assert_eq!(p1, p2);
-        // no completions yet ⇒ the cost model falls back to work items and
-        // the projected-cost greedy reduces to least-loaded: 16→d0, 4→d1,
-        // 4→d2, 8→d1 (12 < d2's 12? tie ⇒ lowest), 16→d2, 2→d1
+        // independent launches all become ready in round one, so the
+        // untrained cost model falls back to work items and the
+        // projected-cost greedy reduces to least-loaded: 16→d0, 4→d1,
+        // 4→d2, 8→d1 (tie ⇒ lowest), 16→d2, 2→d1
         assert_eq!(p1, vec![0, 1, 2, 1, 2, 1]);
         // every device got work
         for d in 0..3 {
@@ -626,15 +1124,14 @@ kernel_body:
             let c1 = train[h1.0].as_ref().unwrap().result.cycles;
             assert!(c1 < c0, "premise: 8x8 ({c1}) must beat 2x2 ({c0}) on this kernel");
             // now dispatch unpinned work
-            let mut placed = Vec::new();
-            for _ in 0..4 {
-                let (_, d) = q.enqueue_any(&k, n, &args, Backend::SimX).unwrap();
-                placed.push(d.0);
-            }
-            for r in q.finish() {
-                r.unwrap();
-            }
-            placed
+            let events: Vec<Event> = (0..4)
+                .map(|_| q.enqueue_any(&k, n, &args, Backend::SimX).unwrap())
+                .collect();
+            let results = q.finish();
+            events
+                .iter()
+                .map(|e| results[e.0].as_ref().unwrap().device.unwrap().0)
+                .collect()
         };
         let mut q1 = build_queue();
         let p1 = run_once(&mut q1);
@@ -647,6 +1144,88 @@ kernel_body:
         // identical history + enqueue sequence ⇒ identical placement
         let mut q2 = build_queue();
         assert_eq!(run_once(&mut q2), p1);
+    }
+
+    #[test]
+    fn deferred_placement_sees_history_from_the_same_batch() {
+        // One batch: two pinned training launches, then an unpinned
+        // launch that waits on both. Because placement happens at ready
+        // time — after the training events committed — the cost model
+        // already knows the fast device, within a single finish().
+        let n = 64u32;
+        let k = scale_kernel("scale9", 9);
+        let mut q = LaunchQueue::new(4);
+        for (w, t) in [(2u32, 2u32), (8, 8)] {
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+            let a = dev.create_buffer(n as usize * 4);
+            let b = dev.create_buffer(n as usize * 4);
+            dev.write_buffer_i32(a, &vec![3; n as usize]);
+            let _ = b;
+            q.add_device(dev);
+        }
+        let args = [0x9000_0000u32, 0x9000_0100];
+        let t0 = q.enqueue_on(DeviceId(0), &k, n, &args, Backend::SimX).unwrap();
+        let t1 = q.enqueue_on(DeviceId(1), &k, n, &args, Backend::SimX).unwrap();
+        let e = q.enqueue_any_after(&k, n, &args, Backend::SimX, &[t0, t1]).unwrap();
+        let results = q.finish();
+        let c0 = results[t0.0].as_ref().unwrap().result.cycles;
+        let c1 = results[t1.0].as_ref().unwrap().result.cycles;
+        assert!(c1 < c0, "premise: 8x8 must beat 2x2");
+        let qr = results[e.0].as_ref().unwrap();
+        assert_eq!(
+            qr.device,
+            Some(DeviceId(1)),
+            "in-batch history must steer the deferred placement"
+        );
+        assert!(qr.exec_seq > results[t1.0].as_ref().unwrap().exec_seq);
+    }
+
+    #[test]
+    fn cross_device_wait_carries_producer_image() {
+        // Producer on a 2x2 device, consumer on a 4x4 device: the wait
+        // edge hands the producer's committed memory to the consumer, so
+        // the consumer reads buffers the producer wrote — and the whole
+        // pipeline is bit-identical to a sequential hand-off replay.
+        let n = 16usize;
+        let input: Vec<i32> = (1..=n as i32).collect();
+        let build = |w: u32, t: u32| {
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+            let a = dev.create_buffer(n * 4);
+            let b = dev.create_buffer(n * 4);
+            let c = dev.create_buffer(n * 4);
+            dev.write_buffer_i32(a, &input);
+            (dev, a, b, c)
+        };
+        let k3 = scale_kernel("pipe3", 3);
+        let k5 = scale_kernel("pipe5", 5);
+
+        let mut q = LaunchQueue::new(4);
+        let (dev0, a, b, c) = build(2, 2);
+        let (dev1, _, _, _) = build(4, 4);
+        let d0 = q.add_device(dev0);
+        let d1 = q.add_device(dev1);
+        let e0 = q.enqueue_on(d0, &k3, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        let e1 = q
+            .enqueue_on_after(d1, &k5, n as u32, &[b.addr, c.addr], Backend::SimX, &[e0])
+            .unwrap();
+        let results = q.finish();
+        let r0 = results[e0.0].as_ref().unwrap();
+        let r1 = results[e1.0].as_ref().unwrap();
+        assert!(r0.exec_seq < r1.exec_seq);
+        let want: Vec<i32> = input.iter().map(|x| x * 15).collect();
+        assert_eq!(r1.mem.read_i32_slice(c.addr, n), want);
+        assert_eq!(q.device(d1).mem.read_i32_slice(c.addr, n), want);
+
+        // sequential hand-off replay: bit-identical cycles and memory
+        let (mut s0, sa, sb, sc) = build(2, 2);
+        let (mut s1, _, _, _) = build(4, 4);
+        let sr0 = s0.launch(&k3, n as u32, &[sa.addr, sb.addr], Backend::SimX).unwrap();
+        s1.mem = s0.mem.clone();
+        let sr1 = s1.launch(&k5, n as u32, &[sb.addr, sc.addr], Backend::SimX).unwrap();
+        assert_eq!(r0.result.cycles, sr0.cycles);
+        assert_eq!(r1.result.cycles, sr1.cycles);
+        assert_eq!(r1.result.stats, sr1.stats);
+        assert_eq!(s1.mem.read_i32_slice(sc.addr, n), want);
     }
 
     #[test]
@@ -671,8 +1250,12 @@ kernel_body:
         let results = q.finish();
         assert!(results[h_ok.0].is_ok(), "launch before the failure runs normally");
         assert!(matches!(&results[h_bad.0], Err(LaunchError::BadExit(_))));
-        // the successor must NOT have executed against inconsistent memory
-        assert!(matches!(&results[h_after.0], Err(LaunchError::Skipped)));
+        // the successor must NOT have executed against inconsistent
+        // memory, and its skip names the root failure
+        match &results[h_after.0] {
+            Err(LaunchError::Skipped(root)) => assert_eq!(*root, h_bad.0),
+            other => panic!("expected Skipped, got {:?}", other.is_ok()),
+        }
         assert_eq!(q.device(d).mem.read_i32_slice(b.addr, n), vec![4, 8, 12, 16]);
         // a fresh batch on the same device works again
         let h2 = q.enqueue_on(d, &good, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
@@ -705,7 +1288,64 @@ kernel_body:
         let mut q = LaunchQueue::new(1);
         match q.enqueue_any(&k, 4, &[0, 0], Backend::SimX) {
             Err(LaunchError::NoDevice) => {}
-            other => panic!("expected NoDevice, got {:?}", other.map(|(h, d)| (h.0, d.0))),
+            other => panic!("expected NoDevice, got {:?}", other.map(|e| e.0)),
         }
+    }
+
+    #[test]
+    fn wait_lists_reject_unknown_and_stale_events() {
+        let k = scale_kernel("scale8", 8);
+        let n = 4usize;
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 2));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &[1, 2, 3, 4]);
+        let mut q = LaunchQueue::new(1);
+        let d = q.add_device(dev);
+        // future index: never enqueued
+        match q.enqueue_on_after(d, &k, n as u32, &[a.addr, b.addr], Backend::SimX, &[Event(0)])
+        {
+            Err(LaunchError::UnknownEvent(0)) => {}
+            other => panic!("expected UnknownEvent, got ok={:?}", other.is_ok()),
+        }
+        let e = q.enqueue_on(d, &k, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        // valid within the batch
+        q.enqueue_on_after(d, &k, n as u32, &[b.addr, a.addr], Backend::SimX, &[e]).unwrap();
+        for r in q.finish() {
+            r.unwrap();
+        }
+        // stale after finish: events are batch-scoped
+        match q.enqueue_on_after(d, &k, n as u32, &[a.addr, b.addr], Backend::SimX, &[e]) {
+            Err(LaunchError::UnknownEvent(0)) => {}
+            other => panic!("expected UnknownEvent for stale handle, got ok={:?}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn snapshot_wait_list_is_ordering_only() {
+        // A snapshot launch captures its memory at enqueue time; a wait
+        // list defers execution but never re-stages.
+        let n = 4usize;
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 2));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &[1, 2, 3, 4]);
+        let k2 = scale_kernel("snap2", 2);
+        let k3 = scale_kernel("snap3", 3);
+        let mut q = LaunchQueue::new(2);
+        let e0 = q.enqueue(&mut dev, &k2, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        // mutate the caller's device after the snapshot, then enqueue a
+        // dependent snapshot: it sees the *new* staging (captured at its
+        // own enqueue), and runs after e0
+        dev.write_buffer_i32(a, &[10, 20, 30, 40]);
+        let e1 = q
+            .enqueue_after(&mut dev, &k3, n as u32, &[a.addr, b.addr], Backend::SimX, &[e0])
+            .unwrap();
+        let results = q.finish();
+        let r0 = results[e0.0].as_ref().unwrap();
+        let r1 = results[e1.0].as_ref().unwrap();
+        assert!(r0.exec_seq < r1.exec_seq, "wait list orders execution");
+        assert_eq!(r0.mem.read_i32_slice(b.addr, n), vec![2, 4, 6, 8]);
+        assert_eq!(r1.mem.read_i32_slice(b.addr, n), vec![30, 60, 90, 120]);
     }
 }

@@ -1,0 +1,412 @@
+//! Event-graph acceptance + property suite: random dependency DAGs over
+//! 2–4 heterogeneous devices must produce results **bit-identical** to a
+//! sequential replay of the committed schedule (launch every event in
+//! ascending `exec_seq` on its reported device, adopting the committed
+//! image of its highest-indexed dependency when that producer ran
+//! elsewhere), independent of worker count; and a failure must propagate
+//! `Skipped(root)` to exactly the failed event's transitive descendants.
+
+use vortex::config::MachineConfig;
+use vortex::mem::Memory;
+use vortex::pocl::{Backend, Event, Kernel, LaunchError, LaunchQueue, VortexDevice};
+use vortex::workloads::rng::SplitMix64;
+
+/// Heterogeneous config pool (the paper's Fig 9 axis in miniature).
+const CFG_POOL: [(u32, u32); 4] = [(2, 2), (4, 4), (2, 8), (8, 8)];
+
+/// Work items per launch.
+const N: usize = 16;
+
+/// Upper bound on nodes per random DAG (fixes the buffer layout).
+const MAX_NODES: usize = 14;
+
+fn scale_kernel(factor: u32) -> Kernel {
+    // kernel names key the per-device program cache, so the factor set is
+    // a fixed pool with static names
+    let name = match factor {
+        2 => "eg_scale2",
+        3 => "eg_scale3",
+        5 => "eg_scale5",
+        _ => "eg_scale7",
+    };
+    Kernel {
+        name,
+        body: format!(
+            r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)           # src
+    lw t2, 4(t0)           # dst
+    slli t3, a0, 2
+    add t4, t1, t3
+    lw t5, 0(t4)
+    li t6, {factor}
+    mul t5, t5, t6
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#
+        ),
+    }
+}
+
+fn factor_from(rng: &mut SplitMix64) -> u32 {
+    [2u32, 3, 5, 7][rng.below(4) as usize]
+}
+
+/// Build one device with the shared buffer layout: an input buffer plus
+/// one output buffer per potential node — identical allocation order on
+/// every device, so addresses line up and hand-off images stay valid.
+fn build_device(w: u32, t: u32, input: &[i32]) -> (VortexDevice, u32, Vec<u32>) {
+    let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+    let inp = dev.create_buffer(N * 4);
+    dev.write_buffer_i32(inp, input);
+    let outs: Vec<u32> = (0..MAX_NODES)
+        .map(|_| {
+            let b = dev.create_buffer(N * 4);
+            // pre-touch so every node's stores land in mapped pages on
+            // every device (keeps images comparable page-for-page)
+            dev.write_buffer_i32(b, &[0; N]);
+            b.addr
+        })
+        .collect();
+    (dev, inp.addr, outs)
+}
+
+/// One launch of a DAG scenario.
+struct NodeSpec {
+    /// Pinned device index, or `None` for `enqueue_any`.
+    device: Option<usize>,
+    /// Explicit wait list (event indices).
+    wait: Vec<usize>,
+    factor: u32,
+    /// `[src, dst]` argument words.
+    args: [u32; 2],
+}
+
+/// Enqueue every node; returns the events (dense, index == node index).
+fn enqueue_all(q: &mut LaunchQueue, specs: &[NodeSpec]) -> Vec<Event> {
+    let ids: Vec<vortex::pocl::DeviceId> =
+        (0..q.num_devices()).map(vortex::pocl::DeviceId).collect();
+    specs
+        .iter()
+        .enumerate()
+        .map(|(j, s)| {
+            let wait: Vec<Event> = s.wait.iter().map(|&w| Event(w)).collect();
+            let k = scale_kernel(s.factor);
+            let e = match s.device {
+                Some(d) => q
+                    .enqueue_on_after(ids[d], &k, N as u32, &s.args, Backend::SimX, &wait)
+                    .unwrap(),
+                None => q
+                    .enqueue_any_after(&k, N as u32, &s.args, Backend::SimX, &wait)
+                    .unwrap(),
+            };
+            assert_eq!(e.0, j, "events index the batch densely");
+            e
+        })
+        .collect()
+}
+
+/// The full dependency list the queue sees for each node: the explicit
+/// wait list plus the implicit previous-launch-on-same-device edge that
+/// pinning adds (`enqueue_any` nodes add no implicit edges).
+fn full_deps(specs: &[NodeSpec], ndev: usize) -> Vec<Vec<usize>> {
+    let mut last: Vec<Option<usize>> = vec![None; ndev];
+    specs
+        .iter()
+        .enumerate()
+        .map(|(j, s)| {
+            let mut deps = s.wait.clone();
+            deps.sort_unstable();
+            deps.dedup();
+            if let Some(d) = s.device {
+                if let Some(prev) = last[d] {
+                    if !deps.contains(&prev) {
+                        deps.push(prev);
+                        deps.sort_unstable();
+                    }
+                }
+                last[d] = Some(j);
+            }
+            deps
+        })
+        .collect()
+}
+
+/// Sequential replay of a committed all-Ok schedule: launch every event
+/// in ascending `exec_seq` on its reported device, adopting the
+/// committed image of its highest-indexed dependency when that producer
+/// ran on another device. Returns per-node cycles and the final device
+/// memories.
+fn replay(
+    specs: &[NodeSpec],
+    configs: &[(u32, u32)],
+    input: &[i32],
+    placements: &[usize],
+    exec_seq: &[u32],
+) -> (Vec<u64>, Vec<VortexDevice>) {
+    let deps = full_deps(specs, configs.len());
+    let mut devs: Vec<VortexDevice> = configs
+        .iter()
+        .map(|&(w, t)| build_device(w, t, input).0)
+        .collect();
+    let mut order: Vec<usize> = (0..specs.len()).collect();
+    order.sort_by_key(|&j| exec_seq[j]);
+    let mut committed: Vec<Option<Memory>> = (0..specs.len()).map(|_| None).collect();
+    let mut cycles = vec![0u64; specs.len()];
+    for &j in &order {
+        let di = placements[j];
+        if let Some(&maxd) = deps[j].last() {
+            if placements[maxd] != di {
+                devs[di].mem =
+                    committed[maxd].clone().expect("producer committed before consumer");
+            }
+        }
+        let r = devs[di]
+            .launch(&scale_kernel(specs[j].factor), N as u32, &specs[j].args, Backend::SimX)
+            .unwrap_or_else(|e| panic!("replay of node {j}: {e}"));
+        cycles[j] = r.cycles;
+        committed[j] = Some(devs[di].mem.clone());
+    }
+    (cycles, devs)
+}
+
+/// Run the specs through a queue with `jobs` workers; panics on any
+/// launch error. Returns (cycles, placements, exec_seq, final devices).
+#[allow(clippy::type_complexity)]
+fn run_queue(
+    specs: &[NodeSpec],
+    configs: &[(u32, u32)],
+    input: &[i32],
+    jobs: usize,
+) -> (Vec<u64>, Vec<usize>, Vec<u32>, Vec<Vec<i32>>) {
+    let mut q = LaunchQueue::new(jobs);
+    let mut outs_addr = Vec::new();
+    for &(w, t) in configs {
+        let (dev, _, outs) = build_device(w, t, input);
+        outs_addr = outs;
+        q.add_device(dev);
+    }
+    let events = enqueue_all(&mut q, specs);
+    let results = q.finish();
+    let mut cycles = Vec::new();
+    let mut placements = Vec::new();
+    let mut seqs = Vec::new();
+    for e in &events {
+        let qr = results[e.0].as_ref().unwrap_or_else(|err| panic!("event {}: {err}", e.0));
+        cycles.push(qr.result.cycles);
+        placements.push(qr.device.expect("owned launch").0);
+        seqs.push(qr.exec_seq);
+    }
+    // final out-buffer state per device
+    let finals: Vec<Vec<i32>> = (0..configs.len())
+        .map(|d| {
+            let dev = q.device(vortex::pocl::DeviceId(d));
+            outs_addr.iter().flat_map(|&a| dev.mem.read_i32_slice(a, N)).collect()
+        })
+        .collect();
+    (cycles, placements, seqs, finals)
+}
+
+/// Random pinned DAG: node j pinned to a random device, waiting on a
+/// random subset of earlier nodes; its source buffer is the output of
+/// its highest-indexed **full** dependency (explicit waits ∪ the
+/// implicit same-device stream edge) — exactly the memory-carrying
+/// dependency under the adoption rule, so every generated edge moves
+/// real producer data. Source nodes read the input buffer. Nodes 0/1
+/// are pinned to devices 0/1 with an explicit 0→1 edge so at least one
+/// cross-device hand-off always occurs.
+fn random_specs(seed: u64) -> (Vec<NodeSpec>, Vec<(u32, u32)>, Vec<i32>) {
+    let mut rng = SplitMix64::new(seed);
+    let ndev = 2 + rng.below(3) as usize; // 2..=4
+    let configs: Vec<(u32, u32)> = (0..ndev).map(|i| CFG_POOL[i % CFG_POOL.len()]).collect();
+    let input: Vec<i32> = (0..N).map(|_| rng.range_i32(-4, 5)).collect();
+    let nnodes = 8 + rng.below((MAX_NODES - 8) as u32 + 1) as usize; // 8..=14
+
+    // buffer layout is deterministic: in at arena base, outs after it
+    let (_, inp, outs) = build_device(configs[0].0, configs[0].1, &input);
+
+    let mut specs: Vec<NodeSpec> = Vec::with_capacity(nnodes);
+    let mut last: Vec<Option<usize>> = vec![None; ndev]; // implicit-edge mirror
+    for j in 0..nnodes {
+        let di = match j {
+            0 => 0,
+            1 => 1,
+            _ => rng.below(ndev as u32) as usize,
+        };
+        let mut wait: Vec<usize> = Vec::new();
+        for d in 0..j {
+            if rng.below(4) == 0 && wait.len() < 3 {
+                wait.push(d);
+            }
+        }
+        if j == 1 && !wait.contains(&0) {
+            wait.push(0); // guaranteed cross-device data edge 0 → 1
+        }
+        // highest full dependency = max(explicit waits, implicit stream
+        // predecessor) — the producer whose memory this node will see
+        let full_max = wait.iter().copied().max().max(last[di]);
+        let src = full_max.map_or(inp, |m| outs[m]);
+        last[di] = Some(j);
+        specs.push(NodeSpec {
+            device: Some(di),
+            wait,
+            factor: factor_from(&mut rng),
+            args: [src, outs[j]],
+        });
+    }
+    (specs, configs, input)
+}
+
+#[test]
+fn random_dags_match_sequential_topological_replay() {
+    for seed in [0x11u64, 0x22, 0x33, 0x44] {
+        let (specs, configs, input) = random_specs(seed);
+        let (cycles, placements, seqs, finals) = run_queue(&specs, &configs, &input, 4);
+        // pinned nodes must run where they were pinned
+        for (j, s) in specs.iter().enumerate() {
+            assert_eq!(Some(placements[j]), s.device, "seed {seed:#x} node {j}");
+        }
+        // the adoption-carrying source is visible: every dependency's
+        // dataflow is bit-identical to the sequential replay
+        let (ref_cycles, ref_devs) = replay(&specs, &configs, &input, &placements, &seqs);
+        assert_eq!(cycles, ref_cycles, "seed {seed:#x}: cycles diverge from replay");
+        for (d, fin) in finals.iter().enumerate() {
+            let (_, _, outs) = build_device(configs[d].0, configs[d].1, &input);
+            let ref_fin: Vec<i32> =
+                outs.iter().flat_map(|&a| ref_devs[d].mem.read_i32_slice(a, N)).collect();
+            assert_eq!(fin, &ref_fin, "seed {seed:#x}: device {d} memory diverges");
+        }
+    }
+}
+
+#[test]
+fn worker_count_never_changes_dag_results() {
+    for seed in [0x55u64, 0x66] {
+        let (specs, configs, input) = random_specs(seed);
+        let r1 = run_queue(&specs, &configs, &input, 1);
+        let r8 = run_queue(&specs, &configs, &input, 8);
+        assert_eq!(r1, r8, "seed {seed:#x}: jobs=1 vs jobs=8 diverge");
+    }
+}
+
+#[test]
+fn deferred_any_nodes_replay_on_their_reported_devices() {
+    // two pinned producers, three dispatcher-placed consumers waiting on
+    // both, one pinned fan-in waiting on all three
+    let configs = [(2u32, 2u32), (4, 4), (2, 8)];
+    let mut rng = SplitMix64::new(0xABCD);
+    let input: Vec<i32> = (0..N).map(|_| rng.range_i32(-4, 5)).collect();
+    let (_, inp, outs) = build_device(2, 2, &input);
+    let specs = vec![
+        NodeSpec { device: Some(0), wait: vec![], factor: 3, args: [inp, outs[0]] },
+        NodeSpec { device: Some(1), wait: vec![], factor: 5, args: [inp, outs[1]] },
+        NodeSpec { device: None, wait: vec![0, 1], factor: 2, args: [outs[1], outs[2]] },
+        NodeSpec { device: None, wait: vec![0, 1], factor: 7, args: [outs[1], outs[3]] },
+        NodeSpec { device: None, wait: vec![0, 1], factor: 3, args: [outs[1], outs[4]] },
+        NodeSpec { device: Some(2), wait: vec![2, 3, 4], factor: 2, args: [outs[4], outs[5]] },
+    ];
+    let (cycles, placements, seqs, finals) = run_queue(&specs, &configs, &input, 4);
+    // determinism across worker counts, including placement
+    let (c1, p1, s1, f1) = run_queue(&specs, &configs, &input, 1);
+    assert_eq!((&cycles, &placements, &seqs, &finals), (&c1, &p1, &s1, &f1));
+    // and the committed schedule replays sequentially, bit-identically
+    let (ref_cycles, _) = replay(&specs, &configs, &input, &placements, &seqs);
+    assert_eq!(cycles, ref_cycles);
+    // the fan-in consumed producer data end to end through the hand-off
+    // images: in → x5 (e1) → x3 (e4) → x2 (e5), landing in outs[5] on d2
+    let want: Vec<i32> = input.iter().map(|x| x * 5 * 3 * 2).collect();
+    assert_eq!(finals[2][5 * N..6 * N].to_vec(), want, "fan-in dataflow broken");
+}
+
+#[test]
+fn skipped_propagates_exactly_to_descendants() {
+    let configs = [(2u32, 2u32), (4, 4)];
+    let input: Vec<i32> = (1..=N as i32).collect();
+    let mut q = LaunchQueue::new(4);
+    let mut snap_dev = VortexDevice::new(MachineConfig::with_wt(2, 2));
+    let snap_a = snap_dev.create_buffer(N * 4);
+    let snap_b = snap_dev.create_buffer(N * 4);
+    snap_dev.write_buffer_i32(snap_a, &input);
+    let mut ids = Vec::new();
+    let mut layout = (0u32, vec![]);
+    for &(w, t) in &configs {
+        let (dev, inp, outs) = build_device(w, t, &input);
+        layout = (inp, outs);
+        ids.push(q.add_device(dev));
+    }
+    let (inp, outs) = layout;
+    let ok = scale_kernel(2);
+    let bad = Kernel {
+        name: "eg_bad_exit",
+        body: "kernel_body:\n li a0, 1\n li a7, 93\n ecall\n".into(),
+    };
+
+    // e0 ok(d0); e1 FAIL(d0, implicit e0); e2 ok(d1, wait e0);
+    // e3 skipped(d0, implicit e1); e4 skipped(d1, wait e3, implicit e2);
+    // e5 skipped(d1, wait e2 but implicit e4)
+    let e0 = q.enqueue_on(ids[0], &ok, N as u32, &[inp, outs[0]], Backend::SimX).unwrap();
+    let e1 = q.enqueue_on(ids[0], &bad, N as u32, &[inp, outs[1]], Backend::SimX).unwrap();
+    let e2 = q
+        .enqueue_on_after(ids[1], &ok, N as u32, &[inp, outs[2]], Backend::SimX, &[e0])
+        .unwrap();
+    let e3 = q.enqueue_on(ids[0], &ok, N as u32, &[inp, outs[3]], Backend::SimX).unwrap();
+    let e4 = q
+        .enqueue_on_after(ids[1], &ok, N as u32, &[inp, outs[4]], Backend::SimX, &[e3])
+        .unwrap();
+    let e5 = q
+        .enqueue_on_after(ids[1], &ok, N as u32, &[inp, outs[5]], Backend::SimX, &[e2])
+        .unwrap();
+    // snapshot nodes: e6 waits on the failure (skipped), e7 on e2 (runs)
+    let snap_args = [snap_a.addr, snap_b.addr];
+    let e6 = q
+        .enqueue_after(&mut snap_dev, &ok, N as u32, &snap_args, Backend::SimX, &[e1])
+        .unwrap();
+    let e7 = q
+        .enqueue_after(&mut snap_dev, &ok, N as u32, &snap_args, Backend::SimX, &[e2])
+        .unwrap();
+
+    let results = q.finish();
+    assert!(results[e0.0].is_ok(), "e0 precedes the failure");
+    assert!(matches!(&results[e1.0], Err(LaunchError::BadExit(_))), "e1 is the root failure");
+    assert!(results[e2.0].is_ok(), "e2 does not depend on the failure");
+    for (e, label) in [(e3, "e3"), (e4, "e4"), (e5, "e5"), (e6, "e6")] {
+        match &results[e.0] {
+            Err(LaunchError::Skipped(root)) => {
+                assert_eq!(*root, e1.0, "{label} must name the root failure")
+            }
+            other => panic!("{label}: expected Skipped, got ok={}", other.is_ok()),
+        }
+    }
+    let r7 = results[e7.0].as_ref().expect("e7 does not depend on the failure");
+    let want: Vec<i32> = input.iter().map(|x| x * 2).collect();
+    assert_eq!(r7.mem.read_i32_slice(snap_b.addr, N), want);
+    // a device is not poisoned by a skipped stream: fresh batch runs
+    let e = q.enqueue_on(ids[0], &ok, N as u32, &[inp, outs[6]], Backend::SimX).unwrap();
+    let results = q.finish();
+    assert!(results[e.0].is_ok());
+}
+
+#[test]
+fn wait_list_cycle_surface_is_unrepresentable() {
+    // The DAG is acyclic by construction: a wait list can only name
+    // already-enqueued events, so "cycles" are rejected at enqueue as
+    // unknown events (the forward reference that would close a loop).
+    let mut q = LaunchQueue::new(1);
+    let (dev, inp, outs) = build_device(2, 2, &[1; N]);
+    let d = q.add_device(dev);
+    let k = scale_kernel(2);
+    let e0 = q.enqueue_on(d, &k, N as u32, &[inp, outs[0]], Backend::SimX).unwrap();
+    // self/forward edge: the next event would be #1, naming it is an error
+    match q.enqueue_on_after(d, &k, N as u32, &[inp, outs[1]], Backend::SimX, &[Event(1)]) {
+        Err(LaunchError::UnknownEvent(1)) => {}
+        other => panic!("expected UnknownEvent(1), got ok={}", other.is_ok()),
+    }
+    // the queue stays consistent: the valid chain still runs
+    let e1 = q
+        .enqueue_on_after(d, &k, N as u32, &[outs[0], outs[1]], Backend::SimX, &[e0])
+        .unwrap();
+    let results = q.finish();
+    assert!(results[e0.0].is_ok() && results[e1.0].is_ok());
+}

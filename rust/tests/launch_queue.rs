@@ -368,16 +368,20 @@ fn unpinned_launches_match_sequential_replay_on_assigned_device() {
     }
     let (ab, outs) = layout.unwrap();
 
-    let mut placed = Vec::new();
+    let mut events = Vec::new();
     for out in outs.iter().take(launches) {
-        let (h, d) =
-            q.enqueue_any(&k, n as u32, &[ab[0], ab[1], *out], Backend::SimX).unwrap();
-        placed.push((h, d, *out));
+        let h = q.enqueue_any(&k, n as u32, &[ab[0], ab[1], *out], Backend::SimX).unwrap();
+        events.push((h, *out));
     }
-    // equal-size launches over three devices: round-robin balance, 2 each
+    let results = q.finish();
+    // placement is decided at ready time and reported per event:
+    // equal-size launches over three devices round-robin, 2 each
+    let placed: Vec<(vortex::pocl::Event, vortex::pocl::DeviceId, u32)> = events
+        .iter()
+        .map(|&(h, out)| (h, results[h.0].as_ref().unwrap().device.unwrap(), out))
+        .collect();
     let placement: Vec<usize> = placed.iter().map(|&(_, d, _)| d.0).collect();
     assert_eq!(placement, vec![0, 1, 2, 0, 1, 2], "deterministic least-loaded placement");
-    let results = q.finish();
 
     // replay each device's assigned subsequence sequentially and compare
     for (ci, &id) in ids.iter().enumerate() {
@@ -397,6 +401,61 @@ fn unpinned_launches_match_sequential_replay_on_assigned_device() {
             assert_eq!(got, w.expect, "output correctness on device {ci}");
         }
     }
+}
+
+/// Acceptance: a cross-device producer→consumer pipeline expressed with
+/// `wait_list` events is bit-identical to sequential launches with a
+/// manual memory hand-off — the `clWaitForEvents` analog carrying data
+/// across heterogeneous configs.
+#[test]
+fn cross_device_pipeline_matches_sequential_handoff() {
+    let n = 192usize;
+    let w = wl::vecadd(n, SEED);
+    let build = |cw: u32, ct: u32| {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(cw, ct));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        let c = dev.create_buffer(n * 4);
+        let d = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &w.a);
+        dev.write_buffer_i32(b, &w.b);
+        (dev, [a.addr, b.addr, c.addr, d.addr])
+    };
+    let k = bodies::vecadd();
+
+    // queued: producer on 2x2 computes c = a + b; consumer on 8x8 waits
+    // on the producer's event and computes d = c + c on *its* device,
+    // reading c through the hand-off image
+    let mut q = LaunchQueue::new(4);
+    let (p_dev, ab) = build(2, 2);
+    let (c_dev, _) = build(8, 8);
+    let pid = q.add_device(p_dev);
+    let cid = q.add_device(c_dev);
+    let e0 = q.enqueue_on(pid, &k, n as u32, &[ab[0], ab[1], ab[2]], Backend::SimX).unwrap();
+    let e1 = q
+        .enqueue_on_after(cid, &k, n as u32, &[ab[2], ab[2], ab[3]], Backend::SimX, &[e0])
+        .unwrap();
+    let results = q.finish();
+    let r0 = results[e0.0].as_ref().unwrap();
+    let r1 = results[e1.0].as_ref().unwrap();
+
+    // sequential reference with a manual device-to-device memory hand-off
+    let (mut sp, sab) = build(2, 2);
+    let (mut sc, _) = build(8, 8);
+    let s0 = sp.launch(&k, n as u32, &[sab[0], sab[1], sab[2]], Backend::SimX).unwrap();
+    sc.mem = sp.mem.clone();
+    let s1 = sc.launch(&k, n as u32, &[sab[2], sab[2], sab[3]], Backend::SimX).unwrap();
+
+    assert_eq!(r0.result.cycles, s0.cycles, "producer cycles");
+    assert_eq!(r0.result.stats, s0.stats, "producer stats");
+    assert_eq!(r1.result.cycles, s1.cycles, "consumer cycles");
+    assert_eq!(r1.result.stats, s1.stats, "consumer stats");
+    let want: Vec<i32> = w.expect.iter().map(|x| x.wrapping_add(*x)).collect();
+    assert_eq!(r1.mem.read_i32_slice(ab[3], n), want, "consumer output");
+    assert_eq!(q.device(cid).mem.read_i32_slice(ab[3], n), want);
+    assert_eq!(sc.mem.read_i32_slice(sab[3], n), want);
+    // the producer's own device never saw the consumer's writes
+    assert_eq!(q.device(pid).mem.read_i32_slice(ab[3], n), vec![0; n]);
 }
 
 #[test]

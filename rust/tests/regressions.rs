@@ -1,7 +1,9 @@
 //! Regression tests for the seed bugfixes shipped with the parallel
 //! engine — the `warm_dcache` address-overflow bug and the missing lane
 //! bound on `LaneAddrs`/`MachineConfig` — plus the `jobs = 0` silent
-//! clamp in `LaunchQueue::new`.
+//! clamp in `LaunchQueue::new`, the sparse-footprint guards, and the
+//! copy-on-write snapshot guard (a snapshot enqueue must clone O(touched
+//! pages), never the resident set).
 
 use vortex::asm::assemble;
 use vortex::config::{self, MachineConfig};
@@ -189,6 +191,70 @@ fn run_result_reports_the_machine_footprint() {
     assert!(res.mem_resident_pages >= 2, "pages: {}", res.mem_resident_pages);
     assert!(res.mem_resident_pages < 64);
     assert_eq!(res.mem_resident_bytes, res.mem_resident_pages * 4096);
+}
+
+// ---------------------------------------------------------------------
+// Copy-on-write snapshots: `LaunchQueue::enqueue` used to deep-clone the
+// staged device memory per snapshot launch — O(resident bytes). With
+// Arc-shared page frames the snapshot is O(directory) and the launch
+// itself copies only the pages it writes, counted by
+// `Memory::cow_pages_copied`.
+// ---------------------------------------------------------------------
+
+#[test]
+fn snapshot_enqueue_clones_only_touched_pages() {
+    use vortex::pocl::{Backend, Kernel, VortexDevice};
+
+    let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 2));
+    // large staged memory: a 4 MiB buffer, every page touched ⇒ >= 1024
+    // resident pages before the launch
+    let big = dev.create_buffer(4 << 20);
+    for p in 0..(4 << 20) / 4096u32 {
+        dev.mem.write_u32(big.addr + p * 4096, p);
+    }
+    // small kernel I/O: one page in, one page out
+    let n = 16usize;
+    let a = dev.create_buffer(n * 4);
+    let b = dev.create_buffer(n * 4);
+    dev.write_buffer_i32(a, &(0..n as i32).collect::<Vec<_>>());
+    dev.write_buffer_i32(b, &vec![0; n]); // map the out page pre-snapshot
+    let staged_pages = dev.mem.resident_pages() as u64;
+    assert!(staged_pages >= 1024, "premise: large staged memory ({staged_pages} pages)");
+
+    let k = Kernel {
+        name: "cow_scale2",
+        body: r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)
+    lw t2, 4(t0)
+    slli t3, a0, 2
+    add t4, t1, t3
+    lw t5, 0(t4)
+    slli t5, t5, 1
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#
+        .to_string(),
+    };
+    let mut q = LaunchQueue::new(1);
+    let e = q.enqueue(&mut dev, &k, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+    let results = q.finish();
+    let qr = results[e.0].as_ref().unwrap();
+    assert_eq!(qr.mem.read_i32_slice(b.addr, n), (0..n as i32).map(|x| 2 * x).collect::<Vec<_>>());
+    // the snapshot shares the staged frames (same address-space view)...
+    assert!(qr.result.mem_pages >= staged_pages, "snapshot lost staged pages");
+    // ...and the launch cloned only the frames it wrote — not the 4 MiB
+    // of staged data (the old deep-clone copied every resident page)
+    let copied = qr.mem.cow_pages_copied();
+    assert!(copied > 0, "the out-page store must trigger one COW copy");
+    assert!(
+        copied < 64,
+        "snapshot launch must clone O(touched) pages, copied {copied} of {staged_pages}"
+    );
+    // the caller's device is untouched by the launch
+    assert_eq!(dev.mem.read_i32_slice(b.addr, n), vec![0; n]);
 }
 
 #[test]

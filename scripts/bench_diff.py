@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Diff a BENCH_sim_hotpath.json run against a checked-in baseline.
+
+Compares every numeric metric present in both files (recursively; rates
+and speedups alike — for all of them, higher is better) and flags any
+that regressed by more than --threshold (default 0.20, i.e. >20%).
+
+Exit code:
+  0  no regression beyond the threshold (or --warn-only)
+  1  at least one flagged regression (without --warn-only)
+  2  usage / unreadable input
+
+CI runs this step with `continue-on-error: true`, so a flagged
+regression marks the step red (with ::warning annotations) without
+gating the build — absolute rates are machine-dependent, and the
+checked-in baseline documents its reference host. Promote the gate by
+dropping `continue-on-error` once baselines are recorded from the CI
+runners themselves (see docs/bench_baselines/README.md).
+"""
+
+import argparse
+import json
+import sys
+
+# Non-metric keys: identity/config values where a comparison is noise.
+EXCLUDE = {"bench", "smoke", "host_threads", "dag_events", "dag_wait_edges"}
+
+
+def numeric_leaves(obj, prefix=""):
+    """Yield (dotted-path, value) for every numeric leaf."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if k in EXCLUDE:
+                continue
+            yield from numeric_leaves(v, f"{prefix}{k}." if prefix else f"{k}.")
+    elif isinstance(obj, bool):
+        return
+    elif isinstance(obj, (int, float)):
+        yield prefix.rstrip("."), float(obj)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("current", help="freshly produced BENCH json")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="flag drops larger than this fraction (default 0.20)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="always exit 0, still printing the flags")
+    args = ap.parse_args()
+
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        with open(args.current) as f:
+            cur = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read inputs: {e}", file=sys.stderr)
+        return 2
+
+    base_vals = dict(numeric_leaves(base))
+    cur_vals = dict(numeric_leaves(cur))
+    if not base_vals:
+        print("bench_diff: baseline has no numeric metrics; nothing to compare")
+        return 0
+
+    flags = []
+    print(f"bench_diff: {args.baseline} -> {args.current} "
+          f"(threshold {args.threshold:.0%})")
+    for key in sorted(base_vals):
+        if key not in cur_vals:
+            print(f"  MISSING  {key} (in baseline, absent from current run)")
+            flags.append(key)
+            continue
+        b, c = base_vals[key], cur_vals[key]
+        if b <= 0:
+            continue
+        ratio = c / b
+        marker = "  ok     "
+        if ratio < 1.0 - args.threshold:
+            marker = "  REGRESS"
+            flags.append(key)
+            # GitHub annotation so the flag is visible on the workflow run
+            print(f"::warning title=bench regression::{key} dropped to "
+                  f"{ratio:.2f}x of baseline ({c:.3g} vs {b:.3g})")
+        print(f"{marker} {key}: {ratio:6.2f}x of baseline ({c:.3g} vs {b:.3g})")
+
+    if flags:
+        print(f"bench_diff: {len(flags)} metric(s) flagged: {', '.join(flags)}")
+        return 0 if args.warn_only else 1
+    print("bench_diff: no regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
