@@ -20,6 +20,7 @@ use vortex::coordinator::report::Json;
 use vortex::emu::Emulator;
 use vortex::kernels::Bench;
 use vortex::pocl::{Backend, DeviceId, LaunchQueue, VortexDevice};
+use vortex::server::{run_bombard, BombardConfig, ServeConfig, Server};
 use vortex::sim::cache::Cache;
 use vortex::sim::{ExecMode, Simulator};
 use vortex::workloads as wl;
@@ -294,6 +295,55 @@ fn main() {
     json.push("dag_queue_speedup", dag_speedup.into());
     json.push("dag_events", (dag_events as u64).into());
     json.push("dag_wait_edges", (dag_edges as u64).into());
+
+    // --- server throughput: the multi-tenant device service under load ---
+    // A real serve instance on an ephemeral TCP port, 4 concurrent client
+    // sessions bombarding the 2-device heterogeneous fleet. Every request
+    // is verified end to end (enqueue → finish/wait_event → read_result),
+    // so req/s counts only correct answers; the latency percentiles are
+    // the full wire-round-trip including simulation.
+    // full mode: 4 x 8 = 32 requests — the acceptance-criteria shape
+    let bombard_requests = if smoke { 2usize } else { 8 };
+    let bombard_clients = 4usize;
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig { configs: het_cfgs[..2].to_vec(), ..ServeConfig::default() },
+    )
+    .expect("spawn bench server");
+    let rep = run_bombard(&BombardConfig {
+        addr: server.addr().to_string(),
+        clients: bombard_clients,
+        requests: bombard_requests,
+        n: if smoke { 128 } else { 256 },
+        seed: 0xC0FFEE,
+        shutdown: true,
+    });
+    // idempotent with the shutdown frame: guarantees the drain even if
+    // the control connection was refused
+    server.shutdown();
+    server.wait();
+    assert!(
+        rep.clean(),
+        "bench bombard must answer + verify every request: {:?}",
+        rep.errors
+    );
+    println!(
+        "bench {:<40} {:.2} verified req/s, p50 {:.2?}, p99 {:.2?}",
+        format!("server_throughput_{bombard_clients}clients"),
+        rep.req_per_sec,
+        rep.p50,
+        rep.p99
+    );
+    println!(
+        "  -> {} clients x {} requests over 2 devices: {} launches, {} busy-retries\n",
+        bombard_clients, bombard_requests, rep.launches, rep.busy_retries
+    );
+    json.push("server_requests_per_sec", rep.req_per_sec.into());
+    json.push("server_p50_ms", (rep.p50.as_secs_f64() * 1e3).into());
+    json.push("server_p99_ms", (rep.p99.as_secs_f64() * 1e3).into());
+    json.push("server_clients", (rep.clients as u64).into());
+    json.push("server_requests", (rep.clients as u64 * bombard_requests as u64).into());
+    json.push("server_launches", rep.launches.into());
 
     // --- machine-readable summary (perf-trajectory contract) ---
     let path = std::env::var("VORTEX_BENCH_JSON")

@@ -9,14 +9,23 @@
 //! vortex power [--warps W --threads T]            # Fig 7/8 model output
 //! vortex validate [--artifacts DIR] [--seed S]    # golden-model check
 //! vortex list                                     # benchmarks + configs
+//! vortex serve [--addr H:P] [--configs 2x2,8x8]   # multi-tenant device
+//!              [--jobs N] [--max-sessions N]      # service (line-JSON/TCP)
+//!              [--session-inflight N] [--global-inflight N]
+//!              [--port-file PATH]
+//! vortex bombard [--addr H:P] [--clients N]       # concurrent load
+//!                [--requests M] [--n SIZE]        # generator (self-hosts
+//!                [--configs 2x2,8x8] [--jobs N]   # a server without
+//!                [--seed S] [--shutdown]          # --addr)
 //! ```
 
-use super::{config as cfgfile, report::Table, sweep};
+use super::{config as cfgfile, pool, report::Table, sweep};
 use crate::config::MachineConfig;
 use crate::kernels::Bench;
 use crate::pocl::Backend;
 use crate::power;
 use crate::runtime::GoldenRuntime;
+use crate::server::{BombardConfig, ServeConfig, Server, SessionLimits};
 
 /// Parsed command line.
 #[derive(Debug, Clone, PartialEq)]
@@ -55,6 +64,30 @@ pub enum Command {
     Validate {
         artifacts: String,
         seed: u64,
+    },
+    /// Run the multi-tenant device service (`vortex::server`).
+    Serve {
+        addr: String,
+        configs: Vec<(u32, u32)>,
+        /// `None` ⇒ the host's available parallelism.
+        jobs: Option<u32>,
+        max_sessions: u32,
+        session_inflight: u32,
+        global_inflight: u32,
+        /// Write the bound port here once listening (ephemeral-port CI).
+        port_file: Option<String>,
+    },
+    /// Load-generate against a serve instance (self-hosts one on an
+    /// ephemeral port when `addr` is `None`).
+    Bombard {
+        addr: Option<String>,
+        clients: u32,
+        requests: u32,
+        n: u32,
+        configs: Vec<(u32, u32)>,
+        jobs: Option<u32>,
+        seed: u64,
+        shutdown: bool,
     },
     List,
     Help,
@@ -193,6 +226,92 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             }
             Ok(Command::Queue { configs, stages, n, seed, jobs })
         }
+        "serve" => {
+            let mut addr = "127.0.0.1:9717".to_string();
+            let mut configs = vec![(2u32, 2u32), (8, 8)];
+            let mut jobs: Option<u32> = None;
+            let mut max_sessions = 32u32;
+            let mut session_inflight = 64u32;
+            let mut global_inflight = 256u32;
+            let mut port_file: Option<String> = None;
+            let mut i = 1;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--addr" => addr = take_value(args, &mut i, "--addr")?.to_string(),
+                    "--configs" => {
+                        configs = parse_config_list(take_value(args, &mut i, "--configs")?)?
+                    }
+                    "--jobs" => jobs = Some(parse_jobs(take_value(args, &mut i, "--jobs")?)?),
+                    "--max-sessions" => {
+                        max_sessions = parse_num(take_value(args, &mut i, "--max-sessions")?)?
+                    }
+                    "--session-inflight" => {
+                        session_inflight =
+                            parse_num(take_value(args, &mut i, "--session-inflight")?)?
+                    }
+                    "--global-inflight" => {
+                        global_inflight =
+                            parse_num(take_value(args, &mut i, "--global-inflight")?)?
+                    }
+                    "--port-file" => {
+                        port_file = Some(take_value(args, &mut i, "--port-file")?.to_string())
+                    }
+                    other => return Err(CliError(format!("unknown flag `{other}`"))),
+                }
+                i += 1;
+            }
+            if max_sessions == 0 {
+                return Err(CliError("--max-sessions must be >= 1".into()));
+            }
+            if session_inflight == 0 || global_inflight == 0 {
+                return Err(CliError("in-flight caps must be >= 1".into()));
+            }
+            Ok(Command::Serve {
+                addr,
+                configs,
+                jobs,
+                max_sessions,
+                session_inflight,
+                global_inflight,
+                port_file,
+            })
+        }
+        "bombard" => {
+            let mut addr: Option<String> = None;
+            let mut clients = 4u32;
+            let mut requests = 8u32;
+            let mut n = 256u32;
+            let mut configs = vec![(2u32, 2u32), (8, 8)];
+            let mut jobs: Option<u32> = None;
+            let mut seed = 0xC0FFEEu64;
+            let mut shutdown = false;
+            let mut i = 1;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--addr" => addr = Some(take_value(args, &mut i, "--addr")?.to_string()),
+                    "--clients" => clients = parse_num(take_value(args, &mut i, "--clients")?)?,
+                    "--requests" => {
+                        requests = parse_num(take_value(args, &mut i, "--requests")?)?
+                    }
+                    "--n" => n = parse_num(take_value(args, &mut i, "--n")?)?,
+                    "--configs" => {
+                        configs = parse_config_list(take_value(args, &mut i, "--configs")?)?
+                    }
+                    "--jobs" => jobs = Some(parse_jobs(take_value(args, &mut i, "--jobs")?)?),
+                    "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
+                    "--shutdown" => shutdown = true,
+                    other => return Err(CliError(format!("unknown flag `{other}`"))),
+                }
+                i += 1;
+            }
+            if clients == 0 || requests == 0 {
+                return Err(CliError("--clients and --requests must be >= 1".into()));
+            }
+            if n == 0 {
+                return Err(CliError("--n must be >= 1".into()));
+            }
+            Ok(Command::Bombard { addr, clients, requests, n, configs, jobs, seed, shutdown })
+        }
         "power" => {
             let mut warps = 8u32;
             let mut threads = 4u32;
@@ -282,11 +401,30 @@ USAGE:
   vortex power [--warps W --threads T]            Fig 7/8 area/power model
   vortex validate [--artifacts DIR] [--seed S]    golden-model validation
   vortex list                                     benchmarks + paper configs
+  vortex serve [--addr HOST:PORT] [--configs 2x2,8x8] [--jobs N]
+               [--max-sessions N] [--session-inflight N]
+               [--global-inflight N] [--port-file PATH]
+                                                  multi-tenant device service
+                                                  (line-delimited JSON over
+                                                  TCP; per-client sessions on
+                                                  the event-graph queue;
+                                                  explicit busy backpressure;
+                                                  graceful drain on shutdown)
+  vortex bombard [--addr HOST:PORT] [--clients N] [--requests M] [--n SIZE]
+                 [--configs 2x2,8x8] [--jobs N] [--seed S] [--shutdown]
+                                                  concurrent load generator:
+                                                  verifies every response and
+                                                  reports req/s + p50/p99
+                                                  latency; without --addr it
+                                                  self-hosts a server on an
+                                                  ephemeral port
 
   --jobs N   run: N > 1 enables the parallel engine (worker threads =
              min(cores, host threads); bit-identical to serial); sweep/
              queue: schedule the event graph over N persistent-pool
-             workers (results unchanged). N must be >= 1.
+             workers (results unchanged); serve/bombard: worker share of
+             each session's finish (default: host parallelism). N must
+             be >= 1.
 ";
 
 /// Execute a parsed command, writing human-readable output to stdout.
@@ -430,6 +568,130 @@ pub fn execute(cmd: Command) -> i32 {
                 }
             }
         }
+        Command::Serve {
+            addr,
+            configs,
+            jobs,
+            max_sessions,
+            session_inflight,
+            global_inflight,
+            port_file,
+        } => {
+            let jobs = jobs.map_or_else(pool::default_jobs, |j| j as usize);
+            let cfg = ServeConfig {
+                configs: configs.clone(),
+                jobs,
+                max_sessions: max_sessions as usize,
+                limits: SessionLimits {
+                    session_inflight: session_inflight as usize,
+                    global_inflight: global_inflight as u64,
+                    ..SessionLimits::default()
+                },
+                ..ServeConfig::default()
+            };
+            let srv = match Server::spawn(&addr, cfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("serve failed: {e}");
+                    return 1;
+                }
+            };
+            let local = srv.addr();
+            let fleet: Vec<String> =
+                configs.iter().map(|&(w, t)| format!("{w}x{t}")).collect();
+            println!(
+                "vortex serve: listening on {local} — fleet [{}], jobs {jobs}, caps: \
+                 {max_sessions} sessions, {session_inflight}/session + \
+                 {global_inflight} global in-flight",
+                fleet.join(", ")
+            );
+            println!("(line-delimited JSON; send {{\"op\":\"shutdown\"}} to drain)");
+            if let Some(pf) = port_file {
+                if let Err(e) = std::fs::write(&pf, format!("{}\n", local.port())) {
+                    eprintln!("serve: cannot write port file {pf}: {e}");
+                    srv.shutdown();
+                    srv.wait();
+                    return 1;
+                }
+            }
+            srv.wait();
+            println!("vortex serve: drained, exiting");
+            0
+        }
+        Command::Bombard { addr, clients, requests, n, configs, jobs, seed, shutdown } => {
+            // self-host a server on an ephemeral port unless --addr given
+            let (target, local) = match addr {
+                Some(a) => (a, None),
+                None => {
+                    let cfg = ServeConfig {
+                        configs,
+                        jobs: jobs.map_or_else(pool::default_jobs, |j| j as usize),
+                        ..ServeConfig::default()
+                    };
+                    match Server::spawn("127.0.0.1:0", cfg) {
+                        Ok(s) => (s.addr().to_string(), Some(s)),
+                        Err(e) => {
+                            eprintln!("bombard: self-hosted serve failed: {e}");
+                            return 1;
+                        }
+                    }
+                }
+            };
+            println!(
+                "bombarding {target}: {clients} client(s) x {requests} request(s), n={n}, \
+                 seed {seed:#x}"
+            );
+            let rep = crate::server::run_bombard(&BombardConfig {
+                addr: target,
+                clients: clients as usize,
+                requests: requests as usize,
+                n: n as usize,
+                seed,
+                // a self-hosted server always drains at the end
+                shutdown: shutdown || local.is_some(),
+            });
+            let dropped = rep.requests_sent - rep.answered;
+            println!(
+                "requests: {} sent, {} answered, {} verified, {dropped} dropped \
+                 ({} busy-retries, {} launches)",
+                rep.requests_sent, rep.answered, rep.verified, rep.busy_retries, rep.launches
+            );
+            println!(
+                "throughput: {:.2} verified req/s over {:.2?}; latency p50 {:.2?} p99 {:.2?}",
+                rep.req_per_sec, rep.elapsed, rep.p50, rep.p99
+            );
+            if let Some(stats) = &rep.stats {
+                println!(
+                    "server: {} session(s) opened, {} accepted, {} busy-rejected, \
+                     {} completed / {} failed launches, {} in-flight, device cycles {:?}",
+                    stats.sessions_opened,
+                    stats.requests_accepted,
+                    stats.requests_rejected,
+                    stats.launches_completed,
+                    stats.launches_failed,
+                    stats.in_flight,
+                    stats.device_cycles
+                );
+            }
+            for e in rep.errors.iter().take(8) {
+                eprintln!("anomaly: {e}");
+            }
+            if rep.errors.len() > 8 {
+                eprintln!("... and {} more", rep.errors.len() - 8);
+            }
+            if let Some(local) = local {
+                // idempotent with the shutdown frame bombard sent; makes
+                // the drain unconditional even if that frame was refused
+                local.shutdown();
+                local.wait();
+            }
+            if rep.clean() {
+                0
+            } else {
+                eprintln!("bombard: FAILED (drops, mismatches or transport errors)");
+                1
+            }
+        }
         Command::Power { warps, threads } => {
             let cfg = MachineConfig::with_wt(warps, threads);
             let b = power::evaluate(&cfg);
@@ -569,6 +831,82 @@ mod tests {
             Command::Power { warps: 32, threads: 32 } => {}
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn serve_command_parses_flags_and_defaults() {
+        match parse(&argv(
+            "serve --addr 0.0.0.0:7000 --configs 2x2,4x4 --jobs 2 --max-sessions 8 \
+             --session-inflight 16 --global-inflight 64 --port-file p.txt",
+        ))
+        .unwrap()
+        {
+            Command::Serve {
+                addr,
+                configs,
+                jobs: Some(2),
+                max_sessions: 8,
+                session_inflight: 16,
+                global_inflight: 64,
+                port_file: Some(pf),
+            } => {
+                assert_eq!(addr, "0.0.0.0:7000");
+                assert_eq!(configs, vec![(2, 2), (4, 4)]);
+                assert_eq!(pf, "p.txt");
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("serve")).unwrap() {
+            Command::Serve {
+                jobs: None,
+                max_sessions: 32,
+                session_inflight: 64,
+                global_inflight: 256,
+                port_file: None,
+                ..
+            } => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("serve --max-sessions 0")).is_err());
+        assert!(parse(&argv("serve --session-inflight 0")).is_err());
+        assert!(parse(&argv("serve --jobs 0")).is_err());
+        assert!(parse(&argv("serve --frobnicate")).is_err());
+    }
+
+    #[test]
+    fn bombard_command_parses_flags_and_defaults() {
+        match parse(&argv(
+            "bombard --addr 127.0.0.1:7000 --clients 6 --requests 12 --n 64 --seed 0x2 \
+             --shutdown",
+        ))
+        .unwrap()
+        {
+            Command::Bombard {
+                addr: Some(a),
+                clients: 6,
+                requests: 12,
+                n: 64,
+                seed: 2,
+                shutdown: true,
+                ..
+            } => assert_eq!(a, "127.0.0.1:7000"),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("bombard")).unwrap() {
+            Command::Bombard {
+                addr: None,
+                clients: 4,
+                requests: 8,
+                n: 256,
+                shutdown: false,
+                ..
+            } => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("bombard --clients 0")).is_err());
+        assert!(parse(&argv("bombard --requests 0")).is_err());
+        assert!(parse(&argv("bombard --n 0")).is_err());
+        assert!(parse(&argv("bombard --configs 2y2")).is_err());
     }
 
     #[test]

@@ -1,6 +1,12 @@
 //! Report formatting: aligned text tables for the figure/table
-//! regenerators, plus a minimal JSON writer for machine-readable output
-//! (in-tree substrate for `serde_json`).
+//! regenerators, plus a minimal JSON value type with a writer **and a
+//! hand-rolled parser** (in-tree substrate for `serde_json`). The parser
+//! exists for the `vortex serve` wire protocol
+//! ([`crate::server::protocol`]), whose frames are line-delimited JSON:
+//! `Json::parse(render(v))` is a fixed point for every value the writer
+//! can produce (pinned by the protocol property suite), and malformed
+//! input is rejected with a byte offset instead of a panic, so one bad
+//! frame never kills a connection.
 
 /// A simple aligned table.
 pub struct Table {
@@ -48,7 +54,7 @@ impl Table {
 }
 
 /// Minimal JSON value + writer (objects preserve insertion order).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
     Bool(bool),
@@ -97,6 +103,353 @@ impl Json {
             }
         }
     }
+
+    /// Parse a JSON document (one value, optionally surrounded by
+    /// whitespace). Strict on structure — trailing garbage, unterminated
+    /// strings/collections, raw control characters inside strings, lone
+    /// surrogates and over-deep nesting (> [`MAX_DEPTH`]) are all errors
+    /// carrying the byte offset — and a fixed point of [`Json::render`]:
+    /// `parse(render(v))` reproduces `v` for every value the writer emits.
+    pub fn parse(s: &str) -> Result<Json, JsonError> {
+        let mut p = Parser { s: s.as_bytes(), src: s, i: 0, depth: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.s.len() {
+            return Err(p.err("trailing characters after the JSON value"));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (first entry with `key`); `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Integral, non-negative number (wire ids, counters, addresses).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Integral signed number (payload words).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(n)
+                if n.fract() == 0.0 && *n >= i64::MIN as f64 && *n <= i64::MAX as f64 =>
+            {
+                Some(*n as i64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+}
+
+/// Maximum nesting depth [`Json::parse`] accepts: deep enough for every
+/// report/protocol frame, shallow enough that a hostile `[[[[…` line
+/// cannot blow the parser's stack.
+pub const MAX_DEPTH: u32 = 64;
+
+/// Parse failure: what went wrong and the byte offset it was noticed at.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JsonError {
+    pub offset: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid JSON at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// Recursive-descent JSON parser over the raw bytes (`src` is the same
+/// data as `&str`, kept for valid zero-copy slicing of string spans —
+/// span boundaries are always ASCII bytes, so slices stay valid UTF-8).
+struct Parser<'a> {
+    s: &'a [u8],
+    src: &'a str,
+    i: usize,
+    depth: u32,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError { offset: self.i, msg: msg.into() }
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.s.get(self.i) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.s.get(self.i) == Some(&b) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected `{}`", b as char)))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        if self.src[self.i..].starts_with(word) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(format!("expected `{word}`")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        match self.s.get(self.i) {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(&b) => Err(self.err(format!("unexpected byte 0x{b:02x}"))),
+        }
+    }
+
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(format!("nesting deeper than {MAX_DEPTH}")));
+        }
+        Ok(())
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.s.get(self.i) == Some(&b']') {
+            self.i += 1;
+            self.depth -= 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.s.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return Err(self.err("expected `,` or `]` in array")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        self.expect(b'{')?;
+        let mut entries = Vec::new();
+        self.skip_ws();
+        if self.s.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            self.depth -= 1;
+            return Ok(Json::Obj(entries));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            entries.push((key, v));
+            self.skip_ws();
+            match self.s.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(Json::Obj(entries));
+                }
+                _ => return Err(self.err("expected `,` or `}` in object")),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let end = self.i + 4;
+        if end > self.s.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let mut v = 0u32;
+        for k in self.i..end {
+            let d = match self.s[k] {
+                b @ b'0'..=b'9' => (b - b'0') as u32,
+                b @ b'a'..=b'f' => (b - b'a' + 10) as u32,
+                b @ b'A'..=b'F' => (b - b'A' + 10) as u32,
+                _ => return Err(self.err("non-hex digit in \\u escape")),
+            };
+            v = (v << 4) | d;
+        }
+        self.i = end;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        let mut span = self.i; // start of the current raw (escape-free) run
+        loop {
+            match self.s.get(self.i) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    out.push_str(&self.src[span..self.i]);
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    out.push_str(&self.src[span..self.i]);
+                    self.i += 1;
+                    let c = match self.s.get(self.i) {
+                        None => return Err(self.err("truncated escape")),
+                        Some(b'"') => '"',
+                        Some(b'\\') => '\\',
+                        Some(b'/') => '/',
+                        Some(b'b') => '\u{8}',
+                        Some(b'f') => '\u{c}',
+                        Some(b'n') => '\n',
+                        Some(b'r') => '\r',
+                        Some(b't') => '\t',
+                        Some(b'u') => {
+                            self.i += 1;
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair: a low half must follow
+                                if self.s.get(self.i) != Some(&b'\\')
+                                    || self.s.get(self.i + 1) != Some(&b'u')
+                                {
+                                    return Err(self.err("lone high surrogate"));
+                                }
+                                self.i += 2;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.err("invalid low surrogate"));
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                return Err(self.err("lone low surrogate"));
+                            } else {
+                                hi
+                            };
+                            let c = char::from_u32(cp)
+                                .ok_or_else(|| self.err("escape is not a scalar value"))?;
+                            out.push(c);
+                            span = self.i;
+                            continue;
+                        }
+                        Some(&b) => {
+                            return Err(self.err(format!("unknown escape `\\{}`", b as char)))
+                        }
+                    };
+                    out.push(c);
+                    self.i += 1;
+                    span = self.i;
+                }
+                Some(&b) if b < 0x20 => {
+                    return Err(self.err("raw control character in string (must be escaped)"))
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.i;
+        if self.s.get(self.i) == Some(&b'-') {
+            self.i += 1;
+        }
+        // integer part: 0, or a nonzero-led digit run
+        match self.s.get(self.i) {
+            Some(b'0') => self.i += 1,
+            Some(b'1'..=b'9') => {
+                while matches!(self.s.get(self.i), Some(b'0'..=b'9')) {
+                    self.i += 1;
+                }
+            }
+            _ => return Err(self.err("expected digit")),
+        }
+        if self.s.get(self.i) == Some(&b'.') {
+            self.i += 1;
+            if !matches!(self.s.get(self.i), Some(b'0'..=b'9')) {
+                return Err(self.err("expected digit after `.`"));
+            }
+            while matches!(self.s.get(self.i), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.s.get(self.i), Some(b'e') | Some(b'E')) {
+            self.i += 1;
+            if matches!(self.s.get(self.i), Some(b'+') | Some(b'-')) {
+                self.i += 1;
+            }
+            if !matches!(self.s.get(self.i), Some(b'0'..=b'9')) {
+                return Err(self.err("expected digit in exponent"));
+            }
+            while matches!(self.s.get(self.i), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        let text = &self.src[start..self.i];
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| JsonError { offset: start, msg: format!("bad number `{text}`") })
+    }
 }
 
 fn escape(s: &str) -> String {
@@ -105,6 +458,7 @@ fn escape(s: &str) -> String {
             '"' => "\\\"".chars().collect::<Vec<_>>(),
             '\\' => "\\\\".chars().collect(),
             '\n' => "\\n".chars().collect(),
+            '\r' => "\\r".chars().collect(),
             '\t' => "\\t".chars().collect(),
             c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
             c => vec![c],
@@ -165,5 +519,104 @@ mod tests {
     fn json_escapes_strings() {
         let j = Json::Str("a\"b\nc".into());
         assert_eq!(j.render(), "\"a\\\"b\\nc\"");
+    }
+
+    #[test]
+    fn json_escapes_every_control_character() {
+        // The wire protocol ships user-controlled strings (kernel bodies,
+        // error messages); every control character must leave the writer
+        // escaped — named escapes for the common ones, \u00XX for the
+        // rest — and survive a parse round trip.
+        let j = Json::Str("tab\there\rcr\nnl\u{8}bs\u{c}ff\u{1}one\u{1f}last".into());
+        let s = j.render();
+        assert_eq!(
+            s,
+            "\"tab\\there\\rcr\\nnl\\u0008bs\\u000cff\\u0001one\\u001flast\""
+        );
+        for b in s.bytes() {
+            assert!(b >= 0x20, "raw control byte 0x{b:02x} escaped the writer");
+        }
+        assert_eq!(Json::parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn parse_accepts_documents_and_rejects_garbage() {
+        let v = Json::parse(r#" {"a":[1,-2.5,1e3,true,false,null,"xA"],"b":{}} "#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 7);
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[6].as_str(), Some("xA"));
+        assert_eq!(v.get("b"), Some(&Json::obj()));
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "[1 2]",
+            "{\"a\" 1}",
+            "{\"a\":}",
+            "nul",
+            "truex",
+            "\"unterminated",
+            "\"bad \\q escape\"",
+            "\"raw \u{1} control\"",
+            "01",
+            "1.",
+            "1e",
+            "-",
+            "[1]]",
+            "{} {}",
+            "\"lone \\ud800 surrogate\"",
+        ] {
+            let e = Json::parse(bad).unwrap_err();
+            assert!(!e.msg.is_empty(), "`{bad}` must fail with a message");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_hostile_nesting_depth() {
+        let deep = format!("{}{}", "[".repeat(512), "]".repeat(512));
+        let e = Json::parse(&deep).unwrap_err();
+        assert!(e.msg.contains("nesting"), "{e}");
+        // ... while sane nesting parses
+        let ok = format!("{}{}", "[".repeat(32), "]".repeat(32));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn parse_render_is_a_fixed_point_on_writer_output() {
+        let mut j = Json::obj();
+        j.push("s", "esc\"\\\n\r\t\u{7f}μ∀\u{1F600}".into());
+        j.push("n", Json::Num(-12345.675));
+        j.push("big", Json::Num(9_007_199_254_740_991.0));
+        j.push("neg", Json::Num(-17.0));
+        j.push(
+            "arr",
+            Json::Arr(vec![Json::Null, Json::Bool(false), Json::Str(String::new()), Json::obj()]),
+        );
+        let s1 = j.render();
+        let parsed = Json::parse(&s1).unwrap();
+        assert_eq!(parsed, j);
+        assert_eq!(parsed.render(), s1);
+    }
+
+    #[test]
+    fn parse_surrogate_pairs_combine() {
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+    }
+
+    #[test]
+    fn accessors_are_type_strict() {
+        assert_eq!(Json::Num(3.0).as_u64(), Some(3));
+        assert_eq!(Json::Num(3.5).as_u64(), None);
+        assert_eq!(Json::Num(-3.0).as_u64(), None);
+        assert_eq!(Json::Num(-3.0).as_i64(), Some(-3));
+        assert_eq!(Json::Str("3".into()).as_u64(), None);
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Null.as_str(), None);
+        let mut o = Json::obj();
+        o.push("k", 7u64.into());
+        assert_eq!(o.get("k").and_then(Json::as_u64), Some(7));
+        assert_eq!(o.get("missing"), None);
     }
 }

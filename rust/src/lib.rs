@@ -12,6 +12,9 @@
 //! * [`stack`] — the Vortex native runtime analog: intrinsics, NewLib-style
 //!   syscall stubs, and `pocl_spawn` work-group mapping (paper §III-A).
 //! * [`pocl`] — a mini-OpenCL host API with a Vortex device target (§III-B).
+//! * [`server`] — a multi-tenant device *service* over the event-graph
+//!   launch queue: line-delimited JSON protocol on TCP, per-client
+//!   sessions, admission control, `vortex serve`/`vortex bombard`.
 //! * [`kernels`] — the Rodinia-subset device kernels, authored with a
 //!   kernel-builder DSL that mirrors POCL's generated structure.
 //! * [`workloads`] — seeded input generators + host-side references.
@@ -36,6 +39,7 @@ pub mod mem;
 pub mod pocl;
 pub mod power;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod stack;
 pub mod workloads;

@@ -79,11 +79,19 @@ pub enum LaunchError {
     TooManyArgs(usize),
     /// An unpinned launch was enqueued on a queue that owns no devices.
     NoDevice,
-    /// A wait list named an event that is not part of the current batch
-    /// (a future index, or a stale handle from a finished batch). Wait
-    /// lists may only reference already-enqueued events, which is what
-    /// keeps the event graph acyclic by construction.
+    /// A wait list named an event index that is not part of the current
+    /// batch (a future index that has not been enqueued yet). Wait lists
+    /// may only reference already-enqueued events, which is what keeps
+    /// the event graph acyclic by construction.
     UnknownEvent(usize),
+    /// A wait list named an event handle minted by an already-finished
+    /// batch, or by a different queue. Events are batch-scoped (the
+    /// ROADMAP "cross-batch events" follow-up would lift this); until
+    /// then a stale handle is its own error instead of aliasing
+    /// [`LaunchError::UnknownEvent`], so callers holding a retired
+    /// handle get told *why* it no longer resolves. Carries the handle's
+    /// batch-local index.
+    StaleEvent(usize),
     /// A launch this one (transitively) waits on failed, so this one was
     /// not run (its inputs could be inconsistent). Carries the index of
     /// the **root** failed event, so callers can tell collateral skips
@@ -103,6 +111,13 @@ impl std::fmt::Display for LaunchError {
             }
             LaunchError::UnknownEvent(e) => {
                 write!(f, "wait list names unknown event #{e} (not in the current batch)")
+            }
+            LaunchError::StaleEvent(e) => {
+                write!(
+                    f,
+                    "wait list names stale event #{e} (its batch already finished, or it \
+                     belongs to another queue; events are batch-scoped)"
+                )
             }
             LaunchError::Skipped(root) => {
                 write!(f, "launch skipped: transitively depends on failed event #{root}")

@@ -34,8 +34,11 @@
 //!
 //! * Wait lists may only name events already returned by an earlier
 //!   enqueue of the current batch, so **the graph is acyclic by
-//!   construction**; an unknown (future, or stale cross-batch) index is
-//!   rejected at enqueue with [`LaunchError::UnknownEvent`].
+//!   construction**; an unknown (future) index is rejected at enqueue
+//!   with [`LaunchError::UnknownEvent`], and a handle from an already
+//!   finished batch or a different queue with the dedicated
+//!   [`LaunchError::StaleEvent`] (handles carry their batch's
+//!   process-unique id).
 //! * An event's **memory-carrying dependency is its highest-indexed
 //!   one**: if that producer ran on the same device, the device's
 //!   in-order memory already reflects it; if it ran elsewhere (another
@@ -88,9 +91,12 @@ use std::sync::Arc;
 /// Handle of an enqueued launch (a `cl_event` analog): the index of the
 /// launch in the current batch. `finish()` returns results at the same
 /// positions. Events are batch-scoped: after `finish`, handles from the
-/// drained batch are stale and must not be used in new wait lists.
+/// drained batch are stale; using one in a new wait list is rejected with
+/// the dedicated [`LaunchError::StaleEvent`] (not aliased to
+/// `UnknownEvent`), because every handle carries the process-unique id of
+/// the batch that minted it — including handles from a *different* queue.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Event(pub usize);
+pub struct Event(pub usize, pub(crate) u64);
 
 /// Index of a queue-owned device (a `cl_device_id` analog).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -220,6 +226,20 @@ pub struct LaunchQueue {
     /// Last event pinned to each device in the current batch — the
     /// implicit stream predecessor `enqueue_on` waits on.
     last_on_device: Vec<Option<usize>>,
+    /// Process-unique id of the current batch, stamped into every
+    /// [`Event`] this queue mints. `finish` retires it and draws a fresh
+    /// one, which is what lets `check_wait_list` tell a *stale* handle
+    /// (previous batch, or a foreign queue) apart from a merely unknown
+    /// (future) index.
+    batch: u64,
+}
+
+/// Draw a process-unique batch id (shared counter across all queues, so
+/// handles from one queue can never masquerade as another's).
+fn next_batch_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
 /// Deterministic per-device cost model for the deferred dispatcher
@@ -250,7 +270,16 @@ impl LaunchQueue {
             sched: Vec::new(),
             nodes: Vec::new(),
             last_on_device: Vec::new(),
+            batch: next_batch_id(),
         }
+    }
+
+    /// Mint a handle for event `idx` of the **current** batch, without
+    /// having enqueued it through this call site (tests and tools that
+    /// track indices themselves). An index that has not been enqueued yet
+    /// is still rejected at use time with [`LaunchError::UnknownEvent`].
+    pub fn handle(&self, idx: usize) -> Event {
+        Event(idx, self.batch)
     }
 
     /// Estimated cost of `total` work items on device `di`: observed
@@ -327,11 +356,18 @@ impl LaunchQueue {
     /// Validate a wait list against the current batch: every entry must
     /// name an already-enqueued event (which is what makes the graph a
     /// DAG by construction — no forward or stale references, hence no
-    /// cycles). Returns the deduplicated dependency list.
+    /// cycles). A handle minted by a previous batch (or a different
+    /// queue) is rejected with the dedicated [`LaunchError::StaleEvent`];
+    /// an in-batch index that has not been enqueued yet is
+    /// [`LaunchError::UnknownEvent`]. Returns the deduplicated
+    /// dependency list.
     fn check_wait_list(&self, wait_list: &[Event]) -> Result<Vec<usize>, LaunchError> {
         let n = self.nodes.len();
         let mut deps = Vec::with_capacity(wait_list.len());
         for e in wait_list {
+            if e.1 != self.batch {
+                return Err(LaunchError::StaleEvent(e.0));
+            }
             if e.0 >= n {
                 return Err(LaunchError::UnknownEvent(e.0));
             }
@@ -383,7 +419,7 @@ impl LaunchQueue {
                 warm: device.warm_range(),
             }),
         });
-        Ok(Event(self.nodes.len() - 1))
+        Ok(Event(self.nodes.len() - 1, self.batch))
     }
 
     /// Enqueue a launch pinned to owned device `id`. Sugar over implicit
@@ -441,7 +477,7 @@ impl LaunchQueue {
                 },
             },
         });
-        Ok(Event(idx))
+        Ok(Event(idx, self.batch))
     }
 
     /// Enqueue a dispatcher-placed launch: the device is chosen at
@@ -498,7 +534,7 @@ impl LaunchQueue {
                 },
             },
         });
-        Ok(Event(self.nodes.len() - 1))
+        Ok(Event(self.nodes.len() - 1, self.batch))
     }
 
     /// `clFinish`: run the batch's dependency DAG to completion (over up
@@ -523,6 +559,9 @@ impl LaunchQueue {
         for l in &mut self.last_on_device {
             *l = None;
         }
+        // Retire the batch: handles minted so far become stale (detected
+        // by id, not index — see `check_wait_list`).
+        self.batch = next_batch_id();
         let total = taken.len();
         let mut deps: Vec<Vec<usize>> = Vec::with_capacity(total);
         let mut kinds: Vec<Option<NodeKind>> = Vec::with_capacity(total);
@@ -1303,7 +1342,7 @@ kernel_body:
         let mut q = LaunchQueue::new(1);
         let d = q.add_device(dev);
         // future index: never enqueued
-        match q.enqueue_on_after(d, &k, n as u32, &[a.addr, b.addr], Backend::SimX, &[Event(0)])
+        match q.enqueue_on_after(d, &k, n as u32, &[a.addr, b.addr], Backend::SimX, &[q.handle(0)])
         {
             Err(LaunchError::UnknownEvent(0)) => {}
             other => panic!("expected UnknownEvent, got ok={:?}", other.is_ok()),
@@ -1314,10 +1353,59 @@ kernel_body:
         for r in q.finish() {
             r.unwrap();
         }
-        // stale after finish: events are batch-scoped
+        // stale after finish: events are batch-scoped, and the retired
+        // handle gets the dedicated error (not aliased to UnknownEvent,
+        // even though index 0 would also be out of range here)
         match q.enqueue_on_after(d, &k, n as u32, &[a.addr, b.addr], Backend::SimX, &[e]) {
-            Err(LaunchError::UnknownEvent(0)) => {}
-            other => panic!("expected UnknownEvent for stale handle, got ok={:?}", other.is_ok()),
+            Err(LaunchError::StaleEvent(0)) => {}
+            other => panic!("expected StaleEvent for stale handle, got ok={:?}", other.is_ok()),
+        }
+        // ... including when the new batch has an event at the same index
+        // (the stale handle must not silently alias the new event #0)
+        let e2 = q.enqueue_on(d, &k, n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        assert_eq!(e2.0, 0, "fresh batch indexes from zero again");
+        match q.enqueue_on_after(d, &k, n as u32, &[b.addr, a.addr], Backend::SimX, &[e]) {
+            Err(LaunchError::StaleEvent(0)) => {}
+            other => panic!("expected StaleEvent, got ok={:?}", other.is_ok()),
+        }
+        for r in q.finish() {
+            r.unwrap();
+        }
+    }
+
+    #[test]
+    fn foreign_queue_events_are_stale_not_unknown() {
+        // A handle minted by one queue is rejected by another with
+        // StaleEvent even while both batches are open: batch ids are
+        // process-unique, so a foreign index can never alias a local one.
+        let k = scale_kernel("scale11", 11);
+        let n = 4usize;
+        let build = || {
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(1, 2));
+            let a = dev.create_buffer(n * 4);
+            let b = dev.create_buffer(n * 4);
+            dev.write_buffer_i32(a, &[1, 2, 3, 4]);
+            (dev, a, b)
+        };
+        let mut qa = LaunchQueue::new(1);
+        let (dev_a, aa, ab) = build();
+        let da = qa.add_device(dev_a);
+        let ea = qa.enqueue_on(da, &k, n as u32, &[aa.addr, ab.addr], Backend::SimX).unwrap();
+
+        let mut qb = LaunchQueue::new(1);
+        let (dev_b, ba, bb) = build();
+        let db = qb.add_device(dev_b);
+        // qb also has an event #0 of its own, so index aliasing is live
+        qb.enqueue_on(db, &k, n as u32, &[ba.addr, bb.addr], Backend::SimX).unwrap();
+        match qb.enqueue_on_after(db, &k, n as u32, &[bb.addr, ba.addr], Backend::SimX, &[ea]) {
+            Err(LaunchError::StaleEvent(0)) => {}
+            other => panic!("expected StaleEvent for foreign handle, got ok={:?}", other.is_ok()),
+        }
+        for r in qa.finish() {
+            r.unwrap();
+        }
+        for r in qb.finish() {
+            r.unwrap();
         }
     }
 

@@ -1,0 +1,217 @@
+//! Blocking client for the `vortex serve` wire protocol — the library
+//! the CLI (`vortex bombard`), the integration tests and the bench
+//! harness all drive the service through, so every consumer speaks the
+//! exact same frames.
+//!
+//! One request ↔ one response line; the transport never pipelines, so a
+//! [`ClientError::Server`] leaves the connection synchronized and usable
+//! (`busy` backpressure is an ordinary error value here — callers drain
+//! and retry).
+
+use crate::pocl::Backend;
+use crate::server::protocol::{
+    ErrorCode, EventSummary, ProtoError, Request, Response, StatsReport,
+};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// Client-side failure.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport failure (connect/read/write); the connection is dead.
+    Io(std::io::Error),
+    /// The server closed the connection or sent an undecodable frame.
+    Protocol(String),
+    /// The server answered `ok:false`; the connection stays usable.
+    Server { code: ErrorCode, message: String },
+}
+
+impl ClientError {
+    /// Is this the explicit `busy` backpressure answer?
+    pub fn is_busy(&self) -> bool {
+        matches!(self, ClientError::Server { code: ErrorCode::Busy, .. })
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "transport: {e}"),
+            ClientError::Protocol(m) => write!(f, "protocol: {m}"),
+            ClientError::Server { code, message } => {
+                write!(f, "server [{}]: {message}", code.as_str())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+impl From<ProtoError> for ClientError {
+    fn from(e: ProtoError) -> Self {
+        ClientError::Protocol(e.0)
+    }
+}
+
+fn unexpected(resp: &Response) -> ClientError {
+    ClientError::Protocol(format!("unexpected response frame: {resp:?}"))
+}
+
+/// A connected protocol client (one session per connection).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Default per-response read timeout: generous enough for any sane
+    /// simulation batch, but bounded — a wedged or half-open server
+    /// surfaces as an [`ClientError::Io`] (which bombard counts as a
+    /// drop and the CI smoke turns into a nonzero exit) instead of
+    /// hanging the caller forever.
+    pub const DEFAULT_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(120);
+
+    pub fn connect(addr: &str) -> Result<Client, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Self::DEFAULT_TIMEOUT))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Override the per-response read timeout (`None` ⇒ block forever).
+    pub fn set_read_timeout(
+        &mut self,
+        timeout: Option<std::time::Duration>,
+    ) -> Result<(), ClientError> {
+        self.writer.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Send one frame, read one frame. `ok:false` becomes
+    /// [`ClientError::Server`].
+    pub fn request(&mut self, req: &Request) -> Result<Response, ClientError> {
+        let mut line = req.encode();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        if n == 0 {
+            return Err(ClientError::Protocol("server closed the connection".into()));
+        }
+        match Response::decode(resp.trim())? {
+            Response::Error { code, message } => Err(ClientError::Server { code, message }),
+            other => Ok(other),
+        }
+    }
+
+    /// `open_session` (empty `devices` ⇒ the server's fleet); returns
+    /// the session id and the actual device configs.
+    pub fn open_session(
+        &mut self,
+        devices: &[(u32, u32)],
+    ) -> Result<(u64, Vec<(u32, u32)>), ClientError> {
+        match self.request(&Request::OpenSession { devices: devices.to_vec() })? {
+            Response::Session { session, devices } => Ok((session, devices)),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    pub fn stage_kernel(&mut self, name: &str, body: &str) -> Result<(), ClientError> {
+        match self
+            .request(&Request::StageKernel { name: name.into(), body: body.into() })?
+        {
+            Response::Ack => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Returns the buffer's device address.
+    pub fn create_buffer(&mut self, len: u32) -> Result<u32, ClientError> {
+        match self.request(&Request::CreateBuffer { len })? {
+            Response::Buffer { addr } => Ok(addr),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    pub fn write_buffer(&mut self, addr: u32, data: &[i32]) -> Result<(), ClientError> {
+        match self.request(&Request::WriteBuffer { addr, data: data.to_vec() })? {
+            Response::Ack => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Returns the session-scoped event id.
+    pub fn enqueue(
+        &mut self,
+        kernel: &str,
+        total: u32,
+        args: &[u32],
+        device: Option<u32>,
+        backend: Backend,
+        wait: &[u64],
+    ) -> Result<u64, ClientError> {
+        let req = Request::Enqueue {
+            kernel: kernel.into(),
+            total,
+            args: args.to_vec(),
+            device,
+            backend,
+            wait: wait.to_vec(),
+        };
+        match self.request(&req)? {
+            Response::Enqueued { event } => Ok(event),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// `clFinish`: per-event statuses of the drained batch.
+    pub fn finish(&mut self) -> Result<Vec<EventSummary>, ClientError> {
+        match self.request(&Request::Finish)? {
+            Response::Finished { results } => Ok(results),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    pub fn wait_event(&mut self, event: u64) -> Result<EventSummary, ClientError> {
+        match self.request(&Request::WaitEvent { event })? {
+            Response::EventStatus { result } => Ok(result),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    pub fn read_result(
+        &mut self,
+        event: u64,
+        addr: u32,
+        count: u32,
+    ) -> Result<Vec<i32>, ClientError> {
+        match self.request(&Request::ReadResult { event, addr, count })? {
+            Response::Data { data } => Ok(data),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<StatsReport, ClientError> {
+        match self.request(&Request::Stats)? {
+            Response::Stats { stats } => Ok(stats),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Ask the service to drain and stop (the server closes this
+    /// connection after acking).
+    pub fn shutdown(&mut self) -> Result<(), ClientError> {
+        match self.request(&Request::Shutdown)? {
+            Response::Ack => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+}

@@ -1,0 +1,363 @@
+//! `vortex bombard`: a concurrent load generator for the device service.
+//!
+//! N client threads connect, open isolated sessions, stage a scale
+//! kernel, and fire M requests each: mostly single-launch batches
+//! (alternating pinned devices with dispatcher-placed `device:null`
+//! launches), every fourth request a two-launch chain wired by a wait
+//! list — so the generator exercises pinned, deferred *and*
+//! event-dependent paths over the wire. Every request reads its result
+//! back and verifies it against the host-side expectation
+//! (`input × factor`), so throughput numbers only count **correct**
+//! answers; `busy` backpressure is retried after a drain and counted,
+//! never dropped.
+//!
+//! The report (sustained req/s + p50/p99 latency) feeds the
+//! `server_throughput` section of `benches/sim_hotpath.rs` and the CI
+//! serve/bombard smoke step.
+
+use crate::pocl::Backend;
+use crate::server::client::{Client, ClientError};
+use crate::server::protocol::StatsReport;
+use crate::workloads::rng::SplitMix64;
+use std::time::{Duration, Instant};
+
+/// The factor pool (kernel names are static: they key program caches).
+pub const SCALE_FACTORS: [u32; 4] = [2, 3, 5, 7];
+
+/// Static kernel name for a factor from [`SCALE_FACTORS`].
+pub fn scale_kernel_name(factor: u32) -> &'static str {
+    match factor {
+        2 => "bombard_scale2",
+        3 => "bombard_scale3",
+        5 => "bombard_scale5",
+        _ => "bombard_scale7",
+    }
+}
+
+/// `dst[i] = src[i] * factor` over the `pocl_spawn` ABI — args:
+/// `[src, dst]`. Shared with the bit-identity integration test so the
+/// wire and the direct replay stage byte-identical sources.
+pub fn scale_kernel_body(factor: u32) -> String {
+    format!(
+        r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)           # src
+    lw t2, 4(t0)           # dst
+    slli t3, a0, 2
+    add t4, t1, t3
+    lw t5, 0(t4)
+    li t6, {factor}
+    mul t5, t5, t6
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#
+    )
+}
+
+/// Load-generator parameters (`vortex bombard` flags map onto this).
+#[derive(Clone, Debug)]
+pub struct BombardConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Concurrent client sessions.
+    pub clients: usize,
+    /// Requests per client.
+    pub requests: usize,
+    /// Work items (= words) per launch.
+    pub n: usize,
+    /// Input seed (per-client streams derive from it).
+    pub seed: u64,
+    /// Send a `shutdown` frame once every client finished.
+    pub shutdown: bool,
+}
+
+impl Default for BombardConfig {
+    fn default() -> Self {
+        BombardConfig {
+            addr: String::new(),
+            clients: 4,
+            requests: 8,
+            n: 256,
+            seed: 0xC0FFEE,
+            shutdown: false,
+        }
+    }
+}
+
+/// Aggregated outcome of a bombard run.
+#[derive(Debug)]
+pub struct BombardReport {
+    pub clients: usize,
+    /// Requests attempted (clients × requests when no client died early).
+    pub requests_sent: u64,
+    /// Requests whose every frame got a response (including error
+    /// frames) — `requests_sent - answered` is the **dropped** count.
+    pub answered: u64,
+    /// Answered requests whose read-back matched the host expectation.
+    pub verified: u64,
+    /// Launches executed (chained requests run two).
+    pub launches: u64,
+    /// `busy` answers that were retried after a drain.
+    pub busy_retries: u64,
+    /// Wall-clock of the whole fan-out.
+    pub elapsed: Duration,
+    /// Verified requests per second of wall-clock.
+    pub req_per_sec: f64,
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Anomalies (transport failures, mismatches, launch errors).
+    pub errors: Vec<String>,
+    /// Server counters sampled after the run (when reachable).
+    pub stats: Option<StatsReport>,
+}
+
+impl BombardReport {
+    /// Zero drops, zero mismatches, zero transport anomalies?
+    pub fn clean(&self) -> bool {
+        self.errors.is_empty()
+            && self.answered == self.requests_sent
+            && self.verified == self.requests_sent
+    }
+}
+
+/// Per-client tally.
+struct ClientOutcome {
+    latencies: Vec<Duration>,
+    sent: u64,
+    answered: u64,
+    verified: u64,
+    launches: u64,
+    busy_retries: u64,
+    errors: Vec<String>,
+}
+
+/// One request: enqueue (+ chain), drain, read back, verify. Returns
+/// `(verified, launches)`.
+#[allow(clippy::too_many_arguments)]
+fn try_request(
+    cl: &mut Client,
+    kernel: &str,
+    n: usize,
+    dev: Option<u32>,
+    chained: bool,
+    use_wait_event: bool,
+    bufs: (u32, u32, u32),
+    expect: (&[i32], &[i32]),
+) -> Result<(bool, u64), ClientError> {
+    let (inp, out, out2) = bufs;
+    let (want_single, want_chained) = expect;
+    if chained {
+        let e1 = cl.enqueue(kernel, n as u32, &[inp, out], dev, Backend::SimX, &[])?;
+        let e2 = cl.enqueue(kernel, n as u32, &[out, out2], dev, Backend::SimX, &[e1])?;
+        let results = cl.finish()?;
+        let all_ok = results.len() == 2 && results.iter().all(|r| r.ok);
+        if !all_ok {
+            return Ok((false, 2));
+        }
+        let data = cl.read_result(e2, out2, n as u32)?;
+        Ok((data == want_chained, 2))
+    } else {
+        let e = cl.enqueue(kernel, n as u32, &[inp, out], dev, Backend::SimX, &[])?;
+        let ok = if use_wait_event {
+            cl.wait_event(e)?.ok
+        } else {
+            let results = cl.finish()?;
+            results.len() == 1 && results[0].ok
+        };
+        if !ok {
+            return Ok((false, 1));
+        }
+        let data = cl.read_result(e, out, n as u32)?;
+        Ok((data == want_single, 1))
+    }
+}
+
+fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
+    let mut out = ClientOutcome {
+        latencies: Vec::with_capacity(cfg.requests),
+        sent: 0,
+        answered: 0,
+        verified: 0,
+        launches: 0,
+        busy_retries: 0,
+        errors: Vec::new(),
+    };
+    let fail = |out: &mut ClientOutcome, msg: String| {
+        out.errors.push(format!("client {c}: {msg}"));
+    };
+    let mut cl = match Client::connect(&cfg.addr) {
+        Ok(cl) => cl,
+        Err(e) => {
+            out.sent = cfg.requests as u64; // all dropped
+            fail(&mut out, format!("connect: {e}"));
+            return out;
+        }
+    };
+    let setup = (|| -> Result<(usize, u32, u32, u32), ClientError> {
+        let (_, devices) = cl.open_session(&[])?;
+        let factor = SCALE_FACTORS[c % SCALE_FACTORS.len()];
+        cl.stage_kernel(scale_kernel_name(factor), &scale_kernel_body(factor))?;
+        let inp = cl.create_buffer((cfg.n * 4) as u32)?;
+        let outb = cl.create_buffer((cfg.n * 4) as u32)?;
+        let out2 = cl.create_buffer((cfg.n * 4) as u32)?;
+        Ok((devices.len(), inp, outb, out2))
+    })();
+    let (ndev, inp, outb, out2) = match setup {
+        Ok(v) => v,
+        Err(e) => {
+            out.sent = cfg.requests as u64;
+            fail(&mut out, format!("session setup: {e}"));
+            return out;
+        }
+    };
+    let factor = SCALE_FACTORS[c % SCALE_FACTORS.len()];
+    let mut rng = SplitMix64::new(cfg.seed ^ (0x1000 + c as u64));
+    let input: Vec<i32> = (0..cfg.n).map(|_| rng.range_i32(-100, 100)).collect();
+    if let Err(e) = cl.write_buffer(inp, &input) {
+        out.sent = cfg.requests as u64;
+        fail(&mut out, format!("write_buffer: {e}"));
+        return out;
+    }
+    let want_single: Vec<i32> = input.iter().map(|x| x * factor as i32).collect();
+    let want_chained: Vec<i32> =
+        input.iter().map(|x| x * (factor * factor) as i32).collect();
+    let kernel = scale_kernel_name(factor);
+
+    for r in 0..cfg.requests {
+        out.sent += 1;
+        let chained = r % 4 == 3;
+        // cycle pinned devices and the deferred dispatcher (`None`)
+        let dev_pick = r % (ndev + 1);
+        let dev = if dev_pick == ndev { None } else { Some(dev_pick as u32) };
+        let use_wait_event = !chained && r % 3 == 0;
+        let t0 = Instant::now();
+        let mut attempt = 0u32;
+        let verdict = loop {
+            match try_request(
+                &mut cl,
+                kernel,
+                cfg.n,
+                dev,
+                chained,
+                use_wait_event,
+                (inp, outb, out2),
+                (want_single.as_slice(), want_chained.as_slice()),
+            ) {
+                Err(e) if e.is_busy() && attempt < 16 => {
+                    // explicit backpressure: drain our batch and retry
+                    attempt += 1;
+                    out.busy_retries += 1;
+                    if let Err(e) = cl.finish() {
+                        break Err(e);
+                    }
+                }
+                other => break other,
+            }
+        };
+        match verdict {
+            Ok((verified, launches)) => {
+                out.answered += 1;
+                out.launches += launches;
+                if verified {
+                    out.verified += 1;
+                } else {
+                    fail(&mut out, format!("request {r}: result mismatch"));
+                }
+                out.latencies.push(t0.elapsed());
+            }
+            Err(e) => {
+                fail(&mut out, format!("request {r}: {e}"));
+                if matches!(e, ClientError::Io(_) | ClientError::Protocol(_)) {
+                    // dead transport: the remaining requests are dropped
+                    out.sent += (cfg.requests - r - 1) as u64;
+                    break;
+                }
+                out.answered += 1; // server answered, just with an error
+            }
+        }
+    }
+    out
+}
+
+fn percentile(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run the full fan-out against `cfg.addr`. Blocks until every client
+/// finished (and the optional shutdown frame is acked).
+pub fn run_bombard(cfg: &BombardConfig) -> BombardReport {
+    let t0 = Instant::now();
+    let outcomes: Vec<ClientOutcome> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|c| scope.spawn(move || run_client(cfg, c)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| ClientOutcome {
+                    latencies: Vec::new(),
+                    sent: cfg.requests as u64,
+                    answered: 0,
+                    verified: 0,
+                    launches: 0,
+                    busy_retries: 0,
+                    errors: vec!["client thread panicked".into()],
+                })
+            })
+            .collect()
+    });
+    let elapsed = t0.elapsed();
+
+    let mut latencies: Vec<Duration> = Vec::new();
+    let mut report = BombardReport {
+        clients: cfg.clients,
+        requests_sent: 0,
+        answered: 0,
+        verified: 0,
+        launches: 0,
+        busy_retries: 0,
+        elapsed,
+        req_per_sec: 0.0,
+        p50: Duration::ZERO,
+        p99: Duration::ZERO,
+        errors: Vec::new(),
+        stats: None,
+    };
+    for o in outcomes {
+        report.requests_sent += o.sent;
+        report.answered += o.answered;
+        report.verified += o.verified;
+        report.launches += o.launches;
+        report.busy_retries += o.busy_retries;
+        report.errors.extend(o.errors);
+        latencies.extend(o.latencies);
+    }
+    latencies.sort_unstable();
+    report.p50 = percentile(&latencies, 0.50);
+    report.p99 = percentile(&latencies, 0.99);
+    report.req_per_sec = report.verified as f64 / elapsed.as_secs_f64().max(1e-9);
+
+    // post-run counters + optional drain, over a fresh control client
+    match Client::connect(&cfg.addr) {
+        Ok(mut ctl) => {
+            report.stats = ctl.stats().ok();
+            if cfg.shutdown {
+                if let Err(e) = ctl.shutdown() {
+                    report.errors.push(format!("shutdown: {e}"));
+                }
+            }
+        }
+        Err(e) => {
+            if cfg.shutdown {
+                report.errors.push(format!("shutdown connect: {e}"));
+            }
+        }
+    }
+    report
+}

@@ -1,0 +1,117 @@
+//! Service-wide counters, served to clients through the `stats` frame.
+//!
+//! One [`Metrics`] instance is shared (via `Arc`) by the accept loop and
+//! every connection thread. Counters are lock-free atomics; the only lock
+//! is around the per-device-slot cycle totals, touched once per finished
+//! batch. `in_flight` doubles as the **global admission-control gauge**:
+//! [`Metrics::try_acquire_inflight`] is the single compare-and-swap that
+//! decides whether an enqueue is admitted or answered with an explicit
+//! `busy` backpressure error (see [`crate::server::session`]).
+
+use crate::server::protocol::StatsReport;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared counters for one serve instance.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Sessions ever opened.
+    pub sessions_opened: AtomicU64,
+    /// Sessions currently open.
+    pub sessions_active: AtomicU64,
+    /// Requests answered with a non-error or error-but-processed frame.
+    pub requests_accepted: AtomicU64,
+    /// Requests answered with `busy` (admission control) — the explicit
+    /// backpressure signal; never silently dropped.
+    pub requests_rejected: AtomicU64,
+    /// Launches admitted into some session's current batch.
+    pub launches_enqueued: AtomicU64,
+    /// Launches that completed successfully at a `finish`.
+    pub launches_completed: AtomicU64,
+    /// Launches that finished with an error (root failures and skips).
+    pub launches_failed: AtomicU64,
+    /// Enqueued-but-not-yet-finished launches across every session — the
+    /// service's queue depth.
+    pub in_flight: AtomicU64,
+    /// Simulated cycles retired per session-device slot (index = the
+    /// device's position in its session's config list; heterogeneous
+    /// fleets accumulate per slot across sessions).
+    device_cycles: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Try to admit one launch under the global in-flight cap. Atomic
+    /// (compare-and-swap loop), so concurrent sessions can never
+    /// collectively overshoot `cap`.
+    pub fn try_acquire_inflight(&self, cap: u64) -> bool {
+        self.in_flight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                if v < cap {
+                    Some(v + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// Release `n` admitted launches (batch finished, or the session
+    /// died with launches still staged).
+    pub fn release_inflight(&self, n: u64) {
+        self.in_flight.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Account `cycles` simulated by device slot `slot`.
+    pub fn add_device_cycles(&self, slot: usize, cycles: u64) {
+        let mut v = self.device_cycles.lock().unwrap();
+        if v.len() <= slot {
+            v.resize(slot + 1, 0);
+        }
+        v[slot] += cycles;
+    }
+
+    /// Snapshot every counter into the wire-protocol report.
+    pub fn snapshot(&self) -> StatsReport {
+        StatsReport {
+            sessions_opened: self.sessions_opened.load(Ordering::SeqCst),
+            sessions_active: self.sessions_active.load(Ordering::SeqCst),
+            requests_accepted: self.requests_accepted.load(Ordering::SeqCst),
+            requests_rejected: self.requests_rejected.load(Ordering::SeqCst),
+            launches_enqueued: self.launches_enqueued.load(Ordering::SeqCst),
+            launches_completed: self.launches_completed.load(Ordering::SeqCst),
+            launches_failed: self.launches_failed.load(Ordering::SeqCst),
+            in_flight: self.in_flight.load(Ordering::SeqCst),
+            device_cycles: self.device_cycles.lock().unwrap().clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inflight_cap_is_atomic_and_exact() {
+        let m = Metrics::new();
+        assert!(m.try_acquire_inflight(2));
+        assert!(m.try_acquire_inflight(2));
+        assert!(!m.try_acquire_inflight(2), "cap reached");
+        m.release_inflight(1);
+        assert!(m.try_acquire_inflight(2));
+        m.release_inflight(2);
+        assert_eq!(m.snapshot().in_flight, 0);
+    }
+
+    #[test]
+    fn device_cycles_grow_per_slot() {
+        let m = Metrics::new();
+        m.add_device_cycles(2, 10);
+        m.add_device_cycles(0, 5);
+        m.add_device_cycles(2, 1);
+        assert_eq!(m.snapshot().device_cycles, vec![5, 0, 11]);
+    }
+}

@@ -1,0 +1,45 @@
+//! `vortex::server` — a **multi-tenant OpenCL-style device service**
+//! over the event-graph launch queue.
+//!
+//! The paper's host story (§IV: applications drive the Vortex device
+//! through a POCL host runtime) is in-process everywhere else in this
+//! crate; this subsystem is the missing serving layer: a long-running
+//! TCP service that multiplexes many concurrent clients onto the
+//! heterogeneous device fleet, speaking a line-delimited JSON protocol
+//! whose frames mirror the OpenCL host API
+//! (`open_session`/`stage_kernel`/`enqueue` with wait lists/`finish`/
+//! `wait_event`/`read_result`/`stats`/`shutdown`).
+//!
+//! * [`protocol`] — the wire frames + canonical encode/decode over the
+//!   in-tree JSON writer/parser ([`crate::coordinator::report::Json`]).
+//! * [`session`] — per-tenant isolation: each session owns its own
+//!   [`crate::pocl::LaunchQueue`], devices, kernels, buffers and event
+//!   namespace; batches repeat over the batch-scoped queue.
+//! * [`service`] — the accept loop, connection shepherds, admission
+//!   control (explicit `busy` backpressure at three gates) and graceful
+//!   drain; simulation work multiplexes over the process-wide persistent
+//!   worker pool.
+//! * [`client`] — the blocking client library (CLI, tests and benches
+//!   all reuse it).
+//! * [`metrics`] — service counters, served via the `stats` frame.
+//! * [`load`] — the `vortex bombard` concurrent load generator
+//!   (throughput + latency percentiles, result verification).
+//!
+//! Everything is `std`-only — no new dependencies — and launch results
+//! are **bit-identical** to driving the same enqueue sequence through a
+//! `LaunchQueue` directly (the service adds multiplexing, not
+//! scheduling), pinned by `rust/tests/server_service.rs`.
+
+pub mod client;
+pub mod load;
+pub mod metrics;
+pub mod protocol;
+pub mod service;
+pub mod session;
+
+pub use client::{Client, ClientError};
+pub use load::{run_bombard, BombardConfig, BombardReport};
+pub use metrics::Metrics;
+pub use protocol::{ErrorCode, EventSummary, Request, Response, StatsReport};
+pub use service::{ServeConfig, Server};
+pub use session::{Session, SessionLimits};

@@ -1,0 +1,679 @@
+//! Wire protocol of the `vortex serve` device service: **one JSON object
+//! per line** (`\n`-delimited) in each direction, encoded with the
+//! in-tree [`Json`] writer and decoded with its hand-rolled parser
+//! ([`Json::parse`]) — no framing bytes, no external crates, trivially
+//! inspectable with `nc`.
+//!
+//! Every request carries an `"op"` tag; every response carries `"ok"`.
+//! The frame set mirrors the OpenCL host API the in-process
+//! [`crate::pocl`] layer exposes:
+//!
+//! | op              | OpenCL analog                  | response payload |
+//! |-----------------|--------------------------------|------------------|
+//! | `open_session`  | `clCreateContext` + devices    | `session`, `devices` |
+//! | `stage_kernel`  | `clCreateProgramWithSource`    | ack |
+//! | `create_buffer` | `clCreateBuffer`               | `addr` |
+//! | `write_buffer`  | `clEnqueueWriteBuffer`         | ack |
+//! | `enqueue`       | `clEnqueueNDRangeKernel` (+ wait list) | `event` |
+//! | `finish`        | `clFinish`                     | `results[]` |
+//! | `wait_event`    | `clWaitForEvents`              | `result` |
+//! | `read_result`   | `clEnqueueReadBuffer`          | `data[]` |
+//! | `stats`         | —                              | `stats{}` |
+//! | `shutdown`      | —                              | ack (server drains) |
+//!
+//! Encoding is **canonical** (fixed key order, `null` for absent
+//! options), so `decode(encode(f))` is the identity and
+//! `encode(decode(encode(f)))` is byte-stable — pinned by the protocol
+//! property suite in `rust/tests/server_service.rs`. A malformed line is
+//! answered with an `ok:false` frame and the connection stays up.
+
+use crate::coordinator::report::Json;
+use crate::pocl::Backend;
+
+/// Frame-decode failure (parse error, missing/ill-typed field, bad tag).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError(pub String);
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "protocol: {}", self.0)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+fn field<'a>(obj: &'a Json, key: &str) -> Result<&'a Json, ProtoError> {
+    obj.get(key).ok_or_else(|| ProtoError(format!("missing field `{key}`")))
+}
+
+fn u64_field(obj: &Json, key: &str) -> Result<u64, ProtoError> {
+    field(obj, key)?
+        .as_u64()
+        .ok_or_else(|| ProtoError(format!("field `{key}` must be a non-negative integer")))
+}
+
+fn u32_field(obj: &Json, key: &str) -> Result<u32, ProtoError> {
+    let v = u64_field(obj, key)?;
+    u32::try_from(v).map_err(|_| ProtoError(format!("field `{key}` exceeds u32")))
+}
+
+fn str_field<'a>(obj: &'a Json, key: &str) -> Result<&'a str, ProtoError> {
+    field(obj, key)?
+        .as_str()
+        .ok_or_else(|| ProtoError(format!("field `{key}` must be a string")))
+}
+
+fn arr_field<'a>(obj: &'a Json, key: &str) -> Result<&'a [Json], ProtoError> {
+    field(obj, key)?
+        .as_arr()
+        .ok_or_else(|| ProtoError(format!("field `{key}` must be an array")))
+}
+
+fn u32_arr(obj: &Json, key: &str) -> Result<Vec<u32>, ProtoError> {
+    arr_field(obj, key)?
+        .iter()
+        .map(|j| {
+            j.as_u64()
+                .and_then(|v| u32::try_from(v).ok())
+                .ok_or_else(|| ProtoError(format!("`{key}` entries must be u32")))
+        })
+        .collect()
+}
+
+fn u64_arr(obj: &Json, key: &str) -> Result<Vec<u64>, ProtoError> {
+    arr_field(obj, key)?
+        .iter()
+        .map(|j| j.as_u64().ok_or_else(|| ProtoError(format!("`{key}` entries must be u64"))))
+        .collect()
+}
+
+fn i32_arr(obj: &Json, key: &str) -> Result<Vec<i32>, ProtoError> {
+    arr_field(obj, key)?
+        .iter()
+        .map(|j| {
+            j.as_i64()
+                .and_then(|v| i32::try_from(v).ok())
+                .ok_or_else(|| ProtoError(format!("`{key}` entries must be i32")))
+        })
+        .collect()
+}
+
+/// `(warps, threads)` pair lists: `[[2,2],[8,8]]`.
+fn devices_json(devices: &[(u32, u32)]) -> Json {
+    Json::Arr(
+        devices
+            .iter()
+            .map(|&(w, t)| Json::Arr(vec![(w as u64).into(), (t as u64).into()]))
+            .collect(),
+    )
+}
+
+fn devices_field(obj: &Json, key: &str) -> Result<Vec<(u32, u32)>, ProtoError> {
+    arr_field(obj, key)?
+        .iter()
+        .map(|j| {
+            let pair = j
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| ProtoError(format!("`{key}` entries must be [warps,threads]")))?;
+            let w = pair[0]
+                .as_u64()
+                .and_then(|v| u32::try_from(v).ok())
+                .ok_or_else(|| ProtoError(format!("`{key}` warps must be u32")))?;
+            let t = pair[1]
+                .as_u64()
+                .and_then(|v| u32::try_from(v).ok())
+                .ok_or_else(|| ProtoError(format!("`{key}` threads must be u32")))?;
+            Ok((w, t))
+        })
+        .collect()
+}
+
+fn backend_str(b: Backend) -> &'static str {
+    match b {
+        Backend::SimX => "simx",
+        Backend::Emu => "emu",
+    }
+}
+
+fn backend_from(s: &str) -> Result<Backend, ProtoError> {
+    match s {
+        "simx" => Ok(Backend::SimX),
+        "emu" => Ok(Backend::Emu),
+        other => Err(ProtoError(format!("unknown backend `{other}` (simx|emu)"))),
+    }
+}
+
+/// Client → server frames.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Open the connection's session. `devices` empty ⇒ the server's
+    /// configured fleet.
+    OpenSession { devices: Vec<(u32, u32)> },
+    /// Register kernel source under `name` in this session's namespace.
+    StageKernel { name: String, body: String },
+    /// Allocate `len` bytes of device memory on **every** session device
+    /// (identical allocation order ⇒ identical addresses fleet-wide).
+    CreateBuffer { len: u32 },
+    /// Write `data` into the buffer at `addr` on every session device.
+    WriteBuffer { addr: u32, data: Vec<i32> },
+    /// Enqueue a launch into the session's current batch. `device:null`
+    /// defers placement to the queue's cost-model dispatcher
+    /// (`enqueue_any`); `wait` lists session event ids.
+    Enqueue {
+        kernel: String,
+        total: u32,
+        args: Vec<u32>,
+        device: Option<u32>,
+        backend: Backend,
+        wait: Vec<u64>,
+    },
+    /// `clFinish` the session's current batch; per-event statuses back.
+    Finish,
+    /// Block until `event` completed (finishing its batch if needed) and
+    /// return its status.
+    WaitEvent { event: u64 },
+    /// Read `count` i32 words at `addr` from `event`'s post-launch
+    /// memory image (retained for the most recent finished batch).
+    ReadResult { event: u64, addr: u32, count: u32 },
+    /// Service-wide counters.
+    Stats,
+    /// Initiate graceful drain: in-flight requests complete, new work is
+    /// refused, the listener closes.
+    Shutdown,
+}
+
+impl Request {
+    /// Canonical single-line encoding (no interior newlines: every string
+    /// escape keeps control characters out of the wire — see
+    /// `coordinator::report::tests::json_escapes_every_control_character`).
+    pub fn encode(&self) -> String {
+        let mut j = Json::obj();
+        match self {
+            Request::OpenSession { devices } => {
+                j.push("op", "open_session".into());
+                j.push("devices", devices_json(devices));
+            }
+            Request::StageKernel { name, body } => {
+                j.push("op", "stage_kernel".into());
+                j.push("name", name.as_str().into());
+                j.push("body", body.as_str().into());
+            }
+            Request::CreateBuffer { len } => {
+                j.push("op", "create_buffer".into());
+                j.push("len", (*len as u64).into());
+            }
+            Request::WriteBuffer { addr, data } => {
+                j.push("op", "write_buffer".into());
+                j.push("addr", (*addr as u64).into());
+                j.push("data", Json::Arr(data.iter().map(|&v| Json::Num(v as f64)).collect()));
+            }
+            Request::Enqueue { kernel, total, args, device, backend, wait } => {
+                j.push("op", "enqueue".into());
+                j.push("kernel", kernel.as_str().into());
+                j.push("total", (*total as u64).into());
+                j.push("args", Json::Arr(args.iter().map(|&a| (a as u64).into()).collect()));
+                j.push("device", device.map_or(Json::Null, |d| (d as u64).into()));
+                j.push("backend", backend_str(*backend).into());
+                j.push("wait", Json::Arr(wait.iter().map(|&w| w.into()).collect()));
+            }
+            Request::Finish => {
+                j.push("op", "finish".into());
+            }
+            Request::WaitEvent { event } => {
+                j.push("op", "wait_event".into());
+                j.push("event", (*event).into());
+            }
+            Request::ReadResult { event, addr, count } => {
+                j.push("op", "read_result".into());
+                j.push("event", (*event).into());
+                j.push("addr", (*addr as u64).into());
+                j.push("count", (*count as u64).into());
+            }
+            Request::Stats => {
+                j.push("op", "stats".into());
+            }
+            Request::Shutdown => {
+                j.push("op", "shutdown".into());
+            }
+        }
+        j.render()
+    }
+
+    pub fn decode(line: &str) -> Result<Request, ProtoError> {
+        let j = Json::parse(line).map_err(|e| ProtoError(e.to_string()))?;
+        let op = str_field(&j, "op")?;
+        match op {
+            "open_session" => Ok(Request::OpenSession { devices: devices_field(&j, "devices")? }),
+            "stage_kernel" => Ok(Request::StageKernel {
+                name: str_field(&j, "name")?.to_string(),
+                body: str_field(&j, "body")?.to_string(),
+            }),
+            "create_buffer" => Ok(Request::CreateBuffer { len: u32_field(&j, "len")? }),
+            "write_buffer" => Ok(Request::WriteBuffer {
+                addr: u32_field(&j, "addr")?,
+                data: i32_arr(&j, "data")?,
+            }),
+            "enqueue" => {
+                let device = match field(&j, "device")? {
+                    Json::Null => None,
+                    d => Some(
+                        d.as_u64().and_then(|v| u32::try_from(v).ok()).ok_or_else(|| {
+                            ProtoError("`device` must be a u32 index or null".into())
+                        })?,
+                    ),
+                };
+                Ok(Request::Enqueue {
+                    kernel: str_field(&j, "kernel")?.to_string(),
+                    total: u32_field(&j, "total")?,
+                    args: u32_arr(&j, "args")?,
+                    device,
+                    backend: backend_from(str_field(&j, "backend")?)?,
+                    wait: u64_arr(&j, "wait")?,
+                })
+            }
+            "finish" => Ok(Request::Finish),
+            "wait_event" => Ok(Request::WaitEvent { event: u64_field(&j, "event")? }),
+            "read_result" => Ok(Request::ReadResult {
+                event: u64_field(&j, "event")?,
+                addr: u32_field(&j, "addr")?,
+                count: u32_field(&j, "count")?,
+            }),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(ProtoError(format!("unknown op `{other}`"))),
+        }
+    }
+}
+
+/// Machine-readable error class on `ok:false` frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed frame, unknown name/event/buffer, invalid parameter.
+    BadRequest,
+    /// Admission control: the per-session or global in-flight cap is
+    /// reached. Retry after draining (`finish`) — never a silent drop.
+    Busy,
+    /// The launch itself failed (assembly, device error, bad exit, skip).
+    Launch,
+    /// A wait list named an event whose batch already finished
+    /// ([`crate::pocl::LaunchError::StaleEvent`]).
+    StaleEvent,
+    /// The service is draining; no new sessions or work.
+    ShuttingDown,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::Busy => "busy",
+            ErrorCode::Launch => "launch",
+            ErrorCode::StaleEvent => "stale_event",
+            ErrorCode::ShuttingDown => "shutting_down",
+        }
+    }
+
+    /// Inverse of [`ErrorCode::as_str`] (not `FromStr`: the error type
+    /// is protocol-specific).
+    pub fn parse(s: &str) -> Result<ErrorCode, ProtoError> {
+        match s {
+            "bad_request" => Ok(ErrorCode::BadRequest),
+            "busy" => Ok(ErrorCode::Busy),
+            "launch" => Ok(ErrorCode::Launch),
+            "stale_event" => Ok(ErrorCode::StaleEvent),
+            "shutting_down" => Ok(ErrorCode::ShuttingDown),
+            other => Err(ProtoError(format!("unknown error code `{other}`"))),
+        }
+    }
+}
+
+/// Status of one launch, as reported by `finish`/`wait_event`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventSummary {
+    /// Session-scoped event id (the id `enqueue` returned).
+    pub event: u64,
+    pub ok: bool,
+    /// Simulated cycles (0 for the functional backend and for failures).
+    pub cycles: u64,
+    /// Device slot that ran it (`None`: failed before placement).
+    pub device: Option<u32>,
+    /// Deterministic commit position within its batch (failures: 0).
+    pub exec_seq: u32,
+    /// Failure rendering (`None` when `ok`).
+    pub error: Option<String>,
+}
+
+impl EventSummary {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push("event", self.event.into());
+        j.push("ok", Json::Bool(self.ok));
+        j.push("cycles", self.cycles.into());
+        j.push("device", self.device.map_or(Json::Null, |d| (d as u64).into()));
+        j.push("exec_seq", (self.exec_seq as u64).into());
+        j.push("error", self.error.as_deref().map_or(Json::Null, |e| e.into()));
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<EventSummary, ProtoError> {
+        let device = match field(j, "device")? {
+            Json::Null => None,
+            d => Some(d.as_u64().and_then(|v| u32::try_from(v).ok()).ok_or_else(|| {
+                ProtoError("summary `device` must be a u32 index or null".into())
+            })?),
+        };
+        let error = match field(j, "error")? {
+            Json::Null => None,
+            e => Some(
+                e.as_str()
+                    .ok_or_else(|| ProtoError("summary `error` must be a string".into()))?
+                    .to_string(),
+            ),
+        };
+        Ok(EventSummary {
+            event: u64_field(j, "event")?,
+            ok: field(j, "ok")?
+                .as_bool()
+                .ok_or_else(|| ProtoError("summary `ok` must be a bool".into()))?,
+            cycles: u64_field(j, "cycles")?,
+            device,
+            exec_seq: u32_field(j, "exec_seq")?,
+            error,
+        })
+    }
+}
+
+/// Counters served by the `stats` frame (see [`crate::server::metrics`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StatsReport {
+    pub sessions_opened: u64,
+    pub sessions_active: u64,
+    pub requests_accepted: u64,
+    pub requests_rejected: u64,
+    pub launches_enqueued: u64,
+    pub launches_completed: u64,
+    pub launches_failed: u64,
+    pub in_flight: u64,
+    pub device_cycles: Vec<u64>,
+}
+
+impl StatsReport {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push("sessions_opened", self.sessions_opened.into());
+        j.push("sessions_active", self.sessions_active.into());
+        j.push("requests_accepted", self.requests_accepted.into());
+        j.push("requests_rejected", self.requests_rejected.into());
+        j.push("launches_enqueued", self.launches_enqueued.into());
+        j.push("launches_completed", self.launches_completed.into());
+        j.push("launches_failed", self.launches_failed.into());
+        j.push("in_flight", self.in_flight.into());
+        j.push(
+            "device_cycles",
+            Json::Arr(self.device_cycles.iter().map(|&c| c.into()).collect()),
+        );
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<StatsReport, ProtoError> {
+        Ok(StatsReport {
+            sessions_opened: u64_field(j, "sessions_opened")?,
+            sessions_active: u64_field(j, "sessions_active")?,
+            requests_accepted: u64_field(j, "requests_accepted")?,
+            requests_rejected: u64_field(j, "requests_rejected")?,
+            launches_enqueued: u64_field(j, "launches_enqueued")?,
+            launches_completed: u64_field(j, "launches_completed")?,
+            launches_failed: u64_field(j, "launches_failed")?,
+            in_flight: u64_field(j, "in_flight")?,
+            device_cycles: u64_arr(j, "device_cycles")?,
+        })
+    }
+}
+
+/// Server → client frames. The variant is recovered from the payload key
+/// (`session`/`addr`/`event`/`results`/`result`/`data`/`stats`; a bare
+/// `{"ok":true}` is [`Response::Ack`]), so the encoding needs no second
+/// tag field.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// `ok:false`: the request failed; the connection stays usable.
+    Error { code: ErrorCode, message: String },
+    /// `open_session` succeeded.
+    Session { session: u64, devices: Vec<(u32, u32)> },
+    /// Generic success (stage_kernel, write_buffer, shutdown).
+    Ack,
+    /// `create_buffer` succeeded.
+    Buffer { addr: u32 },
+    /// `enqueue` succeeded: the session-scoped event id.
+    Enqueued { event: u64 },
+    /// `finish`: per-event statuses in enqueue order.
+    Finished { results: Vec<EventSummary> },
+    /// `wait_event`: this event's status.
+    EventStatus { result: EventSummary },
+    /// `read_result`: the words read.
+    Data { data: Vec<i32> },
+    /// `stats`.
+    Stats { stats: StatsReport },
+}
+
+impl Response {
+    pub fn encode(&self) -> String {
+        let mut j = Json::obj();
+        match self {
+            Response::Error { code, message } => {
+                j.push("ok", Json::Bool(false));
+                j.push("code", code.as_str().into());
+                j.push("error", message.as_str().into());
+            }
+            Response::Session { session, devices } => {
+                j.push("ok", Json::Bool(true));
+                j.push("session", (*session).into());
+                j.push("devices", devices_json(devices));
+            }
+            Response::Ack => {
+                j.push("ok", Json::Bool(true));
+            }
+            Response::Buffer { addr } => {
+                j.push("ok", Json::Bool(true));
+                j.push("addr", (*addr as u64).into());
+            }
+            Response::Enqueued { event } => {
+                j.push("ok", Json::Bool(true));
+                j.push("event", (*event).into());
+            }
+            Response::Finished { results } => {
+                j.push("ok", Json::Bool(true));
+                j.push("results", Json::Arr(results.iter().map(|r| r.to_json()).collect()));
+            }
+            Response::EventStatus { result } => {
+                j.push("ok", Json::Bool(true));
+                j.push("result", result.to_json());
+            }
+            Response::Data { data } => {
+                j.push("ok", Json::Bool(true));
+                j.push("data", Json::Arr(data.iter().map(|&v| Json::Num(v as f64)).collect()));
+            }
+            Response::Stats { stats } => {
+                j.push("ok", Json::Bool(true));
+                j.push("stats", stats.to_json());
+            }
+        }
+        j.render()
+    }
+
+    pub fn decode(line: &str) -> Result<Response, ProtoError> {
+        let j = Json::parse(line).map_err(|e| ProtoError(e.to_string()))?;
+        let ok = field(&j, "ok")?
+            .as_bool()
+            .ok_or_else(|| ProtoError("`ok` must be a bool".into()))?;
+        if !ok {
+            return Ok(Response::Error {
+                code: ErrorCode::parse(str_field(&j, "code")?)?,
+                message: str_field(&j, "error")?.to_string(),
+            });
+        }
+        if j.get("session").is_some() {
+            return Ok(Response::Session {
+                session: u64_field(&j, "session")?,
+                devices: devices_field(&j, "devices")?,
+            });
+        }
+        if j.get("results").is_some() {
+            return Ok(Response::Finished {
+                results: arr_field(&j, "results")?
+                    .iter()
+                    .map(EventSummary::from_json)
+                    .collect::<Result<_, _>>()?,
+            });
+        }
+        if let Some(r) = j.get("result") {
+            return Ok(Response::EventStatus { result: EventSummary::from_json(r)? });
+        }
+        if j.get("data").is_some() {
+            return Ok(Response::Data { data: i32_arr(&j, "data")? });
+        }
+        if let Some(s) = j.get("stats") {
+            return Ok(Response::Stats { stats: StatsReport::from_json(s)? });
+        }
+        if j.get("event").is_some() {
+            return Ok(Response::Enqueued { event: u64_field(&j, "event")? });
+        }
+        if j.get("addr").is_some() {
+            return Ok(Response::Buffer { addr: u32_field(&j, "addr")? });
+        }
+        Ok(Response::Ack)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_every_variant() {
+        let frames = vec![
+            Request::OpenSession { devices: vec![(2, 2), (8, 8)] },
+            Request::OpenSession { devices: vec![] },
+            Request::StageKernel {
+                name: "k\"quoted\"".into(),
+                body: "kernel_body:\n\tret # tab\r\n".into(),
+            },
+            Request::CreateBuffer { len: 4096 },
+            Request::WriteBuffer { addr: 0x9000_0000, data: vec![i32::MIN, -1, 0, 1, i32::MAX] },
+            Request::Enqueue {
+                kernel: "scale".into(),
+                total: 64,
+                args: vec![0x9000_0000, 0x9000_0040],
+                device: None,
+                backend: Backend::SimX,
+                wait: vec![],
+            },
+            Request::Enqueue {
+                kernel: "scale".into(),
+                total: 1,
+                args: vec![],
+                device: Some(1),
+                backend: Backend::Emu,
+                wait: vec![3, 7],
+            },
+            Request::Finish,
+            Request::WaitEvent { event: 9 },
+            Request::ReadResult { event: 2, addr: 0x9000_0040, count: 16 },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for f in frames {
+            let line = f.encode();
+            assert!(!line.contains('\n'), "frames are single lines: {line}");
+            let back = Request::decode(&line).unwrap();
+            assert_eq!(back, f);
+            assert_eq!(back.encode(), line, "canonical encoding is a fixed point");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_every_variant() {
+        let summary_ok = EventSummary {
+            event: 4,
+            ok: true,
+            cycles: 1234,
+            device: Some(1),
+            exec_seq: 2,
+            error: None,
+        };
+        let summary_err = EventSummary {
+            event: 5,
+            ok: false,
+            cycles: 0,
+            device: None,
+            exec_seq: 0,
+            error: Some("launch skipped: transitively depends on failed event #0".into()),
+        };
+        let frames = vec![
+            Response::Error { code: ErrorCode::Busy, message: "in-flight cap reached".into() },
+            Response::Error { code: ErrorCode::StaleEvent, message: "stale #3".into() },
+            Response::Session { session: 7, devices: vec![(2, 2), (4, 4)] },
+            Response::Ack,
+            Response::Buffer { addr: 0x9000_0000 },
+            Response::Enqueued { event: 12 },
+            Response::Finished { results: vec![summary_ok.clone(), summary_err.clone()] },
+            Response::Finished { results: vec![] },
+            Response::EventStatus { result: summary_err },
+            Response::Data { data: vec![-5, 0, 5] },
+            Response::Stats {
+                stats: StatsReport {
+                    sessions_opened: 3,
+                    sessions_active: 1,
+                    requests_accepted: 40,
+                    requests_rejected: 2,
+                    launches_enqueued: 20,
+                    launches_completed: 18,
+                    launches_failed: 2,
+                    in_flight: 0,
+                    device_cycles: vec![100, 2000],
+                },
+            },
+        ];
+        for f in frames {
+            let line = f.encode();
+            assert!(!line.contains('\n'));
+            let back = Response::decode(&line).unwrap();
+            assert_eq!(back, f);
+            assert_eq!(back.encode(), line);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_frames_cleanly() {
+        for bad in [
+            "",
+            "not json",
+            "{}",
+            r#"{"op":"frobnicate"}"#,
+            r#"{"op":"enqueue","kernel":"k"}"#,
+            r#"{"op":"create_buffer","len":-4}"#,
+            r#"{"op":"create_buffer","len":4294967296}"#,
+            r#"{"op":"write_buffer","addr":0,"data":[1.5]}"#,
+            r#"{"op":"enqueue","kernel":"k","total":1,"args":[],"device":0,"backend":"cuda","wait":[]}"#,
+        ] {
+            assert!(Request::decode(bad).is_err(), "`{bad}` must not decode");
+        }
+        assert!(Response::decode(r#"{"code":"busy"}"#).is_err(), "response needs `ok`");
+        assert!(Response::decode(r#"{"ok":false,"code":"nope","error":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn kernel_bodies_with_every_control_char_survive_the_wire() {
+        // the wire depends on the hardened Json escaping: a body holding
+        // each control char round-trips the line protocol unharmed
+        let body: String = (1u8..0x20).map(|b| b as char).chain("ret".chars()).collect();
+        let f = Request::StageKernel { name: "ctl".into(), body: body.clone() };
+        let line = f.encode();
+        assert!(!line.bytes().any(|b| b < 0x20), "no raw control bytes on the wire");
+        match Request::decode(&line).unwrap() {
+            Request::StageKernel { body: b, .. } => assert_eq!(b, body),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,567 @@
+//! The serve loop: a TCP listener multiplexing many tenant sessions onto
+//! the shared host.
+//!
+//! ## Threading model
+//!
+//! The accept thread hands each connection to a lightweight shepherd
+//! thread that does nothing but line I/O and session bookkeeping; all
+//! *simulation* work a request triggers runs inside the session queue's
+//! `finish`, which schedules over the process-wide persistent worker
+//! pool ([`crate::coordinator::pool::global`]) — so the heavy compute of
+//! every tenant shares one fixed set of pinned workers instead of
+//! spawning per connection, and `ServeConfig::jobs` bounds how much of
+//! the pool one session's batch may occupy.
+//!
+//! ## Admission control
+//!
+//! Three explicit gates, all answered with `busy` frames (never a silent
+//! drop): connections beyond `max_sessions` are refused at accept;
+//! enqueues beyond the per-session cap or the global in-flight cap are
+//! refused at enqueue (see [`crate::server::session`]). Clients recover
+//! by draining (`finish`) and retrying.
+//!
+//! ## Graceful drain
+//!
+//! A `shutdown` frame (or [`Server::shutdown`]) flips the service into
+//! draining: the accept loop stops, new sessions and new work get
+//! `shutting_down` errors, while in-flight requests — including a
+//! tenant finishing and reading an already-admitted batch — run to
+//! completion and are answered. Connections end when their client hangs
+//! up; [`Server::wait`] returns once the listener is down and every
+//! connection thread has exited (bounded, so a wedged client cannot
+//! hold the drain hostage).
+//!
+//! ## Robustness
+//!
+//! A malformed frame is answered with `ok:false` and the connection
+//! stays up. An oversized line (> `max_line` bytes) is discarded up to
+//! its terminating newline and answered with one error frame — a
+//! misbehaving tenant cannot balloon server memory or kill its
+//! connection, let alone the service.
+
+use crate::config::MachineConfig;
+use crate::coordinator::pool;
+use crate::server::metrics::Metrics;
+use crate::server::protocol::{ErrorCode, Request, Response};
+use crate::server::session::{Session, SessionLimits};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serve-instance configuration (`vortex serve` flags map onto this).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// The fleet: device configs a default session gets (a session may
+    /// request its own list in `open_session`).
+    pub configs: Vec<(u32, u32)>,
+    /// Worker threads each session's `finish` may use.
+    pub jobs: usize,
+    /// Max concurrently open connections/sessions.
+    pub max_sessions: usize,
+    /// Per-session / global admission caps and resource limits.
+    pub limits: SessionLimits,
+    /// Max bytes per request line (oversized lines are rejected without
+    /// killing the connection).
+    pub max_line: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            configs: vec![(2, 2), (8, 8)],
+            jobs: pool::default_jobs(),
+            max_sessions: 32,
+            limits: SessionLimits::default(),
+            max_line: 4 << 20,
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection thread.
+struct Shared {
+    cfg: ServeConfig,
+    addr: SocketAddr,
+    metrics: Arc<Metrics>,
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+    next_session: AtomicU64,
+}
+
+impl Shared {
+    /// Flip into draining (idempotent) and wake the accept loop so it
+    /// observes the flag instead of blocking in `accept` forever.
+    fn begin_shutdown(&self) {
+        if !self.shutdown.swap(true, Ordering::SeqCst) {
+            let mut wake = self.addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+            }
+            let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        }
+    }
+}
+
+/// Decrements the active-connection gauge however the shepherd exits.
+struct ActiveGuard(Arc<Shared>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A running serve instance. Dropping the handle does **not** stop the
+/// service; call [`Server::shutdown`] + [`Server::wait`] (or send a
+/// `shutdown` frame).
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// the accept loop. Validates every device config and the worker
+    /// count up front.
+    pub fn spawn(addr: &str, cfg: ServeConfig) -> std::io::Result<Server> {
+        let bad = |msg: String| std::io::Error::new(ErrorKind::InvalidInput, msg);
+        if cfg.configs.is_empty() {
+            return Err(bad("serve needs at least one device config".into()));
+        }
+        for &(w, t) in &cfg.configs {
+            MachineConfig::with_wt(w, t)
+                .validate()
+                .map_err(|e| bad(format!("device config {w}x{t}: {e}")))?;
+        }
+        crate::config::validate_jobs(cfg.jobs).map_err(bad)?;
+        if cfg.max_sessions == 0 {
+            return Err(bad("max_sessions must be at least 1".into()));
+        }
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            cfg,
+            addr: local,
+            metrics: Arc::new(Metrics::new()),
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            next_session: AtomicU64::new(1),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("vortex-serve-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))?;
+        Ok(Server { addr: local, shared, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The live service counters (what the `stats` frame reports).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.shared.metrics)
+    }
+
+    /// Initiate graceful drain (same path as a client `shutdown` frame).
+    pub fn shutdown(&self) {
+        self.shared.begin_shutdown();
+    }
+
+    /// Block until the accept loop exited and every connection thread
+    /// drained (bounded at 30 s — a wedged client cannot hold the
+    /// process hostage forever).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let t0 = Instant::now();
+        while self.shared.active.load(Ordering::SeqCst) > 0
+            && t0.elapsed() < Duration::from_secs(30)
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break; // listener drops: new connects are refused outright
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        if shared.active.load(Ordering::SeqCst) >= shared.cfg.max_sessions {
+            // explicit busy frame, then drop: connection-level admission
+            shared.metrics.requests_rejected.fetch_add(1, Ordering::SeqCst);
+            let mut s = stream;
+            let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
+            let resp = Response::Error {
+                code: ErrorCode::Busy,
+                message: format!(
+                    "connection cap reached ({}); retry later",
+                    shared.cfg.max_sessions
+                ),
+            };
+            let _ = s.write_all(format!("{}\n", resp.encode()).as_bytes());
+            continue;
+        }
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        let conn_shared = Arc::clone(&shared);
+        let spawned = std::thread::Builder::new()
+            .name("vortex-serve-conn".into())
+            .spawn(move || {
+                let _guard = ActiveGuard(Arc::clone(&conn_shared));
+                serve_conn(stream, conn_shared);
+            });
+        if spawned.is_err() {
+            shared.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Write one response line; `false` ⇒ the connection is dead.
+fn send(writer: &mut TcpStream, resp: &Response) -> bool {
+    let mut s = resp.encode();
+    s.push('\n');
+    writer.write_all(s.as_bytes()).and_then(|_| writer.flush()).is_ok()
+}
+
+/// Outcome of one bounded read step (see [`read_step`]).
+enum ReadStep {
+    /// A full line landed in `buf` (newline consumed, not included).
+    Line,
+    /// Peer closed; `buf` may hold an unterminated final frame.
+    Eof,
+    /// Read timeout fired (the liveness tick); partial bytes stay in
+    /// `buf` for the next step.
+    Idle,
+    /// `buf` crossed `cap`. `terminated` says whether the line's `\n`
+    /// was already consumed in the same chunk: if not, the caller must
+    /// discard until the next [`ReadStep::Line`]; if so, the oversized
+    /// frame is already over and the next line is a fresh frame.
+    Overflow { terminated: bool },
+}
+
+/// Accumulate raw bytes into `buf` up to the next `\n`, **checking the
+/// cap as bytes arrive** — a fast sender streaming an endless unframed
+/// line is cut off at `cap`, not buffered whole (`BufRead::read_line`
+/// would grow unboundedly inside one call, and its UTF-8 guard kills
+/// split multi-byte characters; working on bytes sidesteps both).
+fn read_step(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    cap: usize,
+) -> std::io::Result<ReadStep> {
+    loop {
+        let (used, found_newline) = {
+            let available = match reader.fill_buf() {
+                Ok(a) => a,
+                Err(e)
+                    if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) =>
+                {
+                    return Ok(ReadStep::Idle)
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if available.is_empty() {
+                return Ok(ReadStep::Eof);
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    buf.extend_from_slice(&available[..pos]);
+                    (pos + 1, true)
+                }
+                None => {
+                    buf.extend_from_slice(available);
+                    (available.len(), false)
+                }
+            }
+        };
+        reader.consume(used);
+        if buf.len() > cap {
+            return Ok(ReadStep::Overflow { terminated: found_newline });
+        }
+        if found_newline {
+            return Ok(ReadStep::Line);
+        }
+    }
+}
+
+/// One connection's shepherd: accumulate lines (the short read timeout
+/// doubles as the drain tick), decode, dispatch, answer.
+fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    // liveness tick only (line accumulation is byte-driven, drain does
+    // not force-close): long enough not to busy-wake idle tenants
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut session: Option<Session> = None;
+    let mut buf: Vec<u8> = Vec::new();
+    // an oversized line is being discarded up to its newline
+    let mut discarding = false;
+    loop {
+        let step = match read_step(&mut reader, &mut buf, shared.cfg.max_line) {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        // is this the connection's final frame?
+        let last = matches!(step, ReadStep::Eof);
+        match step {
+            ReadStep::Idle => {
+                // drain tick: draining does NOT force-close the
+                // connection — a tenant with an admitted batch may still
+                // finish and read it (new work is refused in
+                // `handle_line`); the connection ends when the client
+                // hangs up, and `Server::wait` bounds the overall drain
+                continue;
+            }
+            ReadStep::Overflow { terminated } => {
+                buf.clear();
+                if !discarding {
+                    let resp = Response::Error {
+                        code: ErrorCode::BadRequest,
+                        message: format!(
+                            "line exceeds max_line ({} bytes)",
+                            shared.cfg.max_line
+                        ),
+                    };
+                    if !send(&mut writer, &resp) {
+                        return;
+                    }
+                }
+                // if the newline was already consumed the oversized
+                // frame is over — do NOT swallow the next (valid) line
+                discarding = !terminated;
+                continue;
+            }
+            ReadStep::Line if discarding => {
+                // the oversized frame's terminating newline arrived
+                discarding = false;
+                buf.clear();
+                continue;
+            }
+            ReadStep::Eof if discarding => {
+                // the unterminated tail belongs to the discarded frame
+                return;
+            }
+            ReadStep::Line | ReadStep::Eof => {
+                let raw = std::mem::take(&mut buf);
+                if raw.is_empty() && last {
+                    return; // clean EOF (Session's Drop releases state)
+                }
+                // frames are JSON: they must be UTF-8, but a bad frame
+                // is *answered*, not a reason to kill the connection
+                let resp = match String::from_utf8(raw) {
+                    Ok(text) if text.trim().is_empty() => {
+                        if last {
+                            return;
+                        }
+                        continue;
+                    }
+                    Ok(text) => {
+                        let (resp, close) = handle_line(text.trim(), &mut session, &shared);
+                        match &resp {
+                            Response::Error { code: ErrorCode::Busy, .. } => {
+                                shared
+                                    .metrics
+                                    .requests_rejected
+                                    .fetch_add(1, Ordering::SeqCst);
+                            }
+                            _ => {
+                                shared
+                                    .metrics
+                                    .requests_accepted
+                                    .fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                        if !send(&mut writer, &resp) || close || last {
+                            return;
+                        }
+                        continue;
+                    }
+                    Err(_) => Response::Error {
+                        code: ErrorCode::BadRequest,
+                        message: "frame is not valid UTF-8".into(),
+                    },
+                };
+                if !send(&mut writer, &resp) || last {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Decode + dispatch one frame. Returns the response and whether the
+/// connection should close afterwards (only after acking `shutdown`).
+fn handle_line(
+    text: &str,
+    session: &mut Option<Session>,
+    shared: &Shared,
+) -> (Response, bool) {
+    let req = match Request::decode(text) {
+        Ok(r) => r,
+        Err(e) => {
+            // malformed frame: answer and keep the connection
+            return (
+                Response::Error { code: ErrorCode::BadRequest, message: e.to_string() },
+                false,
+            );
+        }
+    };
+    let draining = shared.shutdown.load(Ordering::SeqCst);
+    match req {
+        Request::Stats => (Response::Stats { stats: shared.metrics.snapshot() }, false),
+        Request::Shutdown => {
+            shared.begin_shutdown();
+            (Response::Ack, true)
+        }
+        Request::OpenSession { devices } => {
+            if draining {
+                return (
+                    Response::Error {
+                        code: ErrorCode::ShuttingDown,
+                        message: "service is draining; no new sessions".into(),
+                    },
+                    false,
+                );
+            }
+            if session.is_some() {
+                return (
+                    Response::Error {
+                        code: ErrorCode::BadRequest,
+                        message: "session already open on this connection".into(),
+                    },
+                    false,
+                );
+            }
+            let configs =
+                if devices.is_empty() { shared.cfg.configs.clone() } else { devices };
+            let id = shared.next_session.fetch_add(1, Ordering::SeqCst);
+            match Session::new(
+                id,
+                &configs,
+                shared.cfg.jobs,
+                shared.cfg.limits,
+                Arc::clone(&shared.metrics),
+            ) {
+                Ok(s) => {
+                    let resp =
+                        Response::Session { session: id, devices: s.configs().to_vec() };
+                    *session = Some(s);
+                    (resp, false)
+                }
+                Err(e) => {
+                    (Response::Error { code: ErrorCode::BadRequest, message: e }, false)
+                }
+            }
+        }
+        // draining refuses *new work*; finish/wait/read still complete
+        Request::StageKernel { .. }
+        | Request::CreateBuffer { .. }
+        | Request::WriteBuffer { .. }
+        | Request::Enqueue { .. }
+            if draining =>
+        {
+            (
+                Response::Error {
+                    code: ErrorCode::ShuttingDown,
+                    message: "service is draining; no new work".into(),
+                },
+                false,
+            )
+        }
+        other => match session.as_mut() {
+            Some(s) => (s.handle(other), false),
+            None => (
+                Response::Error {
+                    code: ErrorCode::BadRequest,
+                    message: "open_session first".into(),
+                },
+                false,
+            ),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ServeConfig {
+        ServeConfig {
+            configs: vec![(1, 2)],
+            jobs: 1,
+            max_sessions: 2,
+            limits: SessionLimits::default(),
+            max_line: 1 << 16,
+        }
+    }
+
+    fn send_line(s: &mut TcpStream, line: &str) {
+        s.write_all(format!("{line}\n").as_bytes()).unwrap();
+    }
+
+    fn read_resp(r: &mut BufReader<TcpStream>) -> Response {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        Response::decode(line.trim()).unwrap()
+    }
+
+    #[test]
+    fn spawn_rejects_invalid_configs() {
+        assert!(Server::spawn("127.0.0.1:0", ServeConfig { configs: vec![], ..tiny() }).is_err());
+        assert!(
+            Server::spawn("127.0.0.1:0", ServeConfig { configs: vec![(0, 4)], ..tiny() })
+                .is_err()
+        );
+        assert!(Server::spawn("127.0.0.1:0", ServeConfig { jobs: 0, ..tiny() }).is_err());
+        assert!(
+            Server::spawn("127.0.0.1:0", ServeConfig { max_sessions: 0, ..tiny() }).is_err()
+        );
+    }
+
+    #[test]
+    fn stats_and_shutdown_over_a_raw_socket() {
+        let server = Server::spawn("127.0.0.1:0", tiny()).unwrap();
+        let addr = server.addr();
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        send_line(&mut w, r#"{"op":"stats"}"#);
+        match read_resp(&mut r) {
+            Response::Stats { stats } => assert_eq!(stats.sessions_active, 0),
+            other => panic!("{other:?}"),
+        }
+        // garbage does not kill the connection
+        send_line(&mut w, "certainly { not json");
+        match read_resp(&mut r) {
+            Response::Error { code: ErrorCode::BadRequest, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        send_line(&mut w, r#"{"op":"shutdown"}"#);
+        assert_eq!(read_resp(&mut r), Response::Ack);
+        server.wait();
+        // the listener is gone: connecting now fails (or is reset before
+        // a response ever arrives)
+        let late = TcpStream::connect(addr);
+        if let Ok(s) = late {
+            let mut r = BufReader::new(s);
+            let mut buf = String::new();
+            assert_eq!(r.read_line(&mut buf).unwrap_or(0), 0, "no service behind the port");
+        }
+    }
+}

@@ -1,0 +1,723 @@
+//! Per-client session state: **one tenant, one event-graph queue**.
+//!
+//! Each connection that opens a session gets its own
+//! [`LaunchQueue`] with freshly instantiated devices, its own staged
+//! kernels/buffers, and its own event-id namespace — so one tenant's
+//! handles, memory and failures can never leak into another's (the
+//! isolation the multi-tenant service promises). What *is* shared is the
+//! host: every session's `finish` schedules its DAG over the process-wide
+//! persistent worker pool ([`crate::coordinator::pool::global`]), which
+//! is where concurrent tenants actually multiplex onto host parallelism,
+//! and the global in-flight cap ([`Metrics::try_acquire_inflight`])
+//! backpressures the fleet as a whole.
+//!
+//! Sessions run **repeated batches** over the batch-scoped queue: each
+//! `enqueue` joins the current batch, `finish`/`wait_event` drains it,
+//! and the next `enqueue` opens a new one. Session event ids are
+//! monotonic across batches; an id from a finished batch still resolves
+//! for `wait_event`/`read_result`, but naming it in a wait list surfaces
+//! the queue's dedicated [`LaunchError::StaleEvent`] as a `stale_event`
+//! error frame (events are batch-scoped — the ROADMAP "cross-batch
+//! events" follow-up would lift this).
+//!
+//! Launch results stay bit-identical to driving the same enqueue
+//! sequence through a [`LaunchQueue`] directly — the session adds no
+//! scheduling of its own (pinned by
+//! `server_service::bombard_matches_direct_launch_queue_bit_identically`).
+
+use crate::config::{self, MachineConfig};
+use crate::mem::Memory;
+use crate::pocl::{Buffer, DeviceId, Event, Kernel, LaunchError, LaunchQueue, VortexDevice};
+use crate::server::metrics::Metrics;
+use crate::server::protocol::{ErrorCode, EventSummary, Request, Response};
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Admission-control and resource caps, service-wide (see
+/// [`crate::server::service::ServeConfig`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionLimits {
+    /// Max enqueued-but-unfinished launches per session.
+    pub session_inflight: usize,
+    /// Max enqueued-but-unfinished launches across every session.
+    pub global_inflight: u64,
+    /// Max work items per launch.
+    pub max_items: u32,
+    /// Max staged kernels per session.
+    pub max_kernels: usize,
+    /// Max buffers per session.
+    pub max_buffers: usize,
+    /// Max bytes per buffer.
+    pub max_buffer_len: u32,
+    /// Max i32 words per `read_result`.
+    pub max_read_words: u32,
+}
+
+impl Default for SessionLimits {
+    fn default() -> Self {
+        SessionLimits {
+            session_inflight: 64,
+            global_inflight: 256,
+            max_items: 1 << 20,
+            max_kernels: 64,
+            max_buffers: 256,
+            max_buffer_len: 16 << 20,
+            max_read_words: 1 << 20,
+        }
+    }
+}
+
+/// Process-wide cap on distinct interned kernel names: interning leaks
+/// (deliberately — `Kernel::name` is `&'static str`), so without a cap a
+/// tenant reconnecting with fresh random names could grow process memory
+/// without bound over the life of the service.
+const INTERN_CAP: usize = 4096;
+
+/// Intern a kernel name: [`Kernel::name`] is `&'static str` (it keys the
+/// per-device program cache), so wire-supplied names are leaked **once
+/// per distinct name** into a process-wide set. Sessions staging the
+/// same name share one allocation; `None` once [`INTERN_CAP`] distinct
+/// names exist (the caller answers with a clean error).
+fn intern_name(name: &str) -> Option<&'static str> {
+    static NAMES: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let mut set = NAMES.get_or_init(|| Mutex::new(HashSet::new())).lock().unwrap();
+    if let Some(&s) = set.get(name) {
+        return Some(s);
+    }
+    if set.len() >= INTERN_CAP {
+        return None;
+    }
+    let s: &'static str = Box::leak(name.to_string().into_boxed_str());
+    set.insert(s);
+    Some(s)
+}
+
+fn err(code: ErrorCode, msg: impl Into<String>) -> Response {
+    Response::Error { code, message: msg.into() }
+}
+
+/// Map a queue rejection onto a wire error: stale handles get their
+/// dedicated code, everything else is a launch-class failure.
+fn launch_err(e: &LaunchError) -> Response {
+    let code = match e {
+        LaunchError::StaleEvent(_) => ErrorCode::StaleEvent,
+        _ => ErrorCode::Launch,
+    };
+    Response::Error { code, message: e.to_string() }
+}
+
+/// A finished event: its wire summary, the queue handle that produced it
+/// (kept so a stale wait on it reaches the queue's `StaleEvent` check),
+/// and — for the most recent finished batch only — its post-launch
+/// memory image for `read_result`.
+struct Completed {
+    summary: EventSummary,
+    qevent: Event,
+    mem: Option<Memory>,
+}
+
+/// Retained completed-event summaries per session (older ids are evicted
+/// oldest-first; ids are monotonic so the cutoff is a simple compare).
+const COMPLETED_CAP: u64 = 4096;
+
+/// One tenant of the device service.
+pub struct Session {
+    id: u64,
+    queue: LaunchQueue,
+    devices: Vec<DeviceId>,
+    configs: Vec<(u32, u32)>,
+    kernels: HashMap<String, Kernel>,
+    buffers: Vec<Buffer>,
+    /// Next session-scoped event id.
+    next_event: u64,
+    /// Current batch: (wire id, queue event), in enqueue order.
+    pending: Vec<(u64, Event)>,
+    completed: HashMap<u64, Completed>,
+    /// Wire ids of the most recent finished batch (whose memories are
+    /// retained for `read_result`).
+    last_batch: Vec<u64>,
+    limits: SessionLimits,
+    metrics: Arc<Metrics>,
+}
+
+impl Session {
+    /// Open a session over its own fresh device fleet. `configs` must be
+    /// non-empty and valid; `jobs` sizes the session queue's share of
+    /// the worker pool.
+    pub fn new(
+        id: u64,
+        configs: &[(u32, u32)],
+        jobs: usize,
+        limits: SessionLimits,
+        metrics: Arc<Metrics>,
+    ) -> Result<Session, String> {
+        if configs.is_empty() {
+            return Err("session needs at least one device config".into());
+        }
+        if configs.len() > 16 {
+            return Err(format!("too many devices ({} > 16)", configs.len()));
+        }
+        config::validate_jobs(jobs)?;
+        for &(w, t) in configs {
+            MachineConfig::with_wt(w, t)
+                .validate()
+                .map_err(|e| format!("device config {w}x{t}: {e}"))?;
+        }
+        let mut queue = LaunchQueue::new(jobs);
+        let devices = configs
+            .iter()
+            .map(|&(w, t)| queue.add_device(VortexDevice::new(MachineConfig::with_wt(w, t))))
+            .collect();
+        metrics.sessions_opened.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        metrics.sessions_active.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        Ok(Session {
+            id,
+            queue,
+            devices,
+            configs: configs.to_vec(),
+            kernels: HashMap::new(),
+            buffers: Vec::new(),
+            next_event: 0,
+            pending: Vec::new(),
+            completed: HashMap::new(),
+            last_batch: Vec::new(),
+            limits,
+            metrics,
+        })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The session's device configs (the fleet `open_session` reported).
+    pub fn configs(&self) -> &[(u32, u32)] {
+        &self.configs
+    }
+
+    /// Handle one session-scoped request. `open_session`/`stats`/
+    /// `shutdown` are connection-level and routed by the service before
+    /// this point.
+    pub fn handle(&mut self, req: Request) -> Response {
+        match req {
+            Request::OpenSession { .. } => {
+                err(ErrorCode::BadRequest, "session already open on this connection")
+            }
+            Request::Stats | Request::Shutdown => {
+                err(ErrorCode::BadRequest, "connection-level op routed to a session")
+            }
+            Request::StageKernel { name, body } => self.stage_kernel(name, body),
+            Request::CreateBuffer { len } => self.create_buffer(len),
+            Request::WriteBuffer { addr, data } => self.write_buffer(addr, &data),
+            Request::Enqueue { kernel, total, args, device, backend, wait } => {
+                self.enqueue(&kernel, total, &args, device, backend, &wait)
+            }
+            Request::Finish => Response::Finished { results: self.drain_batch() },
+            Request::WaitEvent { event } => self.wait_event(event),
+            Request::ReadResult { event, addr, count } => self.read_result(event, addr, count),
+        }
+    }
+
+    fn stage_kernel(&mut self, name: String, body: String) -> Response {
+        if name.is_empty() || name.len() > 128 {
+            return err(ErrorCode::BadRequest, "kernel name must be 1..=128 bytes");
+        }
+        if body.len() > 512 * 1024 {
+            return err(ErrorCode::BadRequest, "kernel body exceeds 512 KiB");
+        }
+        if let Some(existing) = self.kernels.get(&name) {
+            if existing.body == body {
+                return Response::Ack; // idempotent re-stage
+            }
+            // the per-device program cache is keyed by name, so silently
+            // swapping the body would alias the already-cached image
+            return err(
+                ErrorCode::BadRequest,
+                format!("kernel `{name}` already staged with a different body"),
+            );
+        }
+        if self.kernels.len() >= self.limits.max_kernels {
+            return err(
+                ErrorCode::BadRequest,
+                format!("kernel cap reached ({})", self.limits.max_kernels),
+            );
+        }
+        let Some(interned) = intern_name(&name) else {
+            return err(
+                ErrorCode::BadRequest,
+                format!("kernel-name interner full ({INTERN_CAP} distinct names); reuse names"),
+            );
+        };
+        let kernel = Kernel { name: interned, body };
+        self.kernels.insert(name, kernel);
+        Response::Ack
+    }
+
+    fn create_buffer(&mut self, len: u32) -> Response {
+        if len == 0 || len > self.limits.max_buffer_len {
+            return err(
+                ErrorCode::BadRequest,
+                format!("buffer len must be 1..={} bytes", self.limits.max_buffer_len),
+            );
+        }
+        if self.buffers.len() >= self.limits.max_buffers {
+            return err(
+                ErrorCode::BadRequest,
+                format!("buffer cap reached ({})", self.limits.max_buffers),
+            );
+        }
+        // identical allocation order on every device ⇒ identical
+        // addresses, so one buffer handle is valid fleet-wide (the same
+        // layout convention the in-process consumers rely on)
+        let mut buf: Option<Buffer> = None;
+        for &d in &self.devices {
+            let b = self.queue.device_mut(d).create_buffer(len as usize);
+            if let Some(first) = buf {
+                debug_assert_eq!(first.addr, b.addr, "device arenas must stay in lockstep");
+            } else {
+                buf = Some(b);
+            }
+        }
+        let b = buf.expect("session owns at least one device");
+        self.buffers.push(b);
+        Response::Buffer { addr: b.addr }
+    }
+
+    /// The session buffer starting exactly at `addr`.
+    fn buffer_at(&self, addr: u32) -> Option<Buffer> {
+        self.buffers.iter().copied().find(|b| b.addr == addr)
+    }
+
+    fn write_buffer(&mut self, addr: u32, data: &[i32]) -> Response {
+        let Some(b) = self.buffer_at(addr) else {
+            return err(ErrorCode::BadRequest, format!("no buffer at {addr:#x}"));
+        };
+        if data.len() * 4 > b.len {
+            return err(
+                ErrorCode::BadRequest,
+                format!("{} words overflow the {}-byte buffer", data.len(), b.len),
+            );
+        }
+        for &d in &self.devices {
+            self.queue.device_mut(d).write_buffer_i32(b, data);
+        }
+        Response::Ack
+    }
+
+    fn enqueue(
+        &mut self,
+        kernel: &str,
+        total: u32,
+        args: &[u32],
+        device: Option<u32>,
+        backend: crate::pocl::Backend,
+        wait: &[u64],
+    ) -> Response {
+        let Some(k) = self.kernels.get(kernel).cloned() else {
+            return err(
+                ErrorCode::BadRequest,
+                format!("unknown kernel `{kernel}` (stage_kernel first)"),
+            );
+        };
+        if total == 0 || total > self.limits.max_items {
+            return err(
+                ErrorCode::BadRequest,
+                format!("total must be 1..={} work items", self.limits.max_items),
+            );
+        }
+        let device = match device {
+            Some(d) if (d as usize) < self.devices.len() => Some(self.devices[d as usize]),
+            Some(d) => {
+                return err(
+                    ErrorCode::BadRequest,
+                    format!("device index {d} out of range ({} devices)", self.devices.len()),
+                )
+            }
+            None => None,
+        };
+        // resolve session event ids to queue handles; a finished batch's
+        // handle is passed through so the queue reports it stale
+        let mut wait_events = Vec::with_capacity(wait.len());
+        for &wid in wait {
+            let ev = self
+                .pending
+                .iter()
+                .find(|(w, _)| *w == wid)
+                .map(|&(_, e)| e)
+                .or_else(|| self.completed.get(&wid).map(|c| c.qevent));
+            match ev {
+                Some(e) => wait_events.push(e),
+                None => {
+                    return err(ErrorCode::BadRequest, format!("unknown event id {wid}"));
+                }
+            }
+        }
+        // admission control: session cap, then the global gauge — both
+        // answered with an explicit `busy` frame, never a silent drop
+        if self.pending.len() >= self.limits.session_inflight {
+            return err(
+                ErrorCode::Busy,
+                format!(
+                    "session in-flight cap reached ({}); finish the batch and retry",
+                    self.limits.session_inflight
+                ),
+            );
+        }
+        if !self.metrics.try_acquire_inflight(self.limits.global_inflight) {
+            return err(
+                ErrorCode::Busy,
+                format!(
+                    "service in-flight cap reached ({}); retry after a finish",
+                    self.limits.global_inflight
+                ),
+            );
+        }
+        let enq = match device {
+            Some(d) => self.queue.enqueue_on_after(d, &k, total, args, backend, &wait_events),
+            None => self.queue.enqueue_any_after(&k, total, args, backend, &wait_events),
+        };
+        match enq {
+            Ok(ev) => {
+                let wid = self.next_event;
+                self.next_event += 1;
+                self.pending.push((wid, ev));
+                self.metrics
+                    .launches_enqueued
+                    .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                Response::Enqueued { event: wid }
+            }
+            Err(e) => {
+                self.metrics.release_inflight(1);
+                launch_err(&e)
+            }
+        }
+    }
+
+    /// `clFinish` the current batch: run the DAG, convert per-event
+    /// outcomes to wire summaries, retain result memories (last batch
+    /// only) and release the admission gauge.
+    fn drain_batch(&mut self) -> Vec<EventSummary> {
+        let batch = std::mem::take(&mut self.pending);
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let results = self.queue.finish();
+        debug_assert_eq!(results.len(), batch.len(), "session owns every queue event");
+        self.metrics.release_inflight(batch.len() as u64);
+        // only the most recent batch's memories stay readable
+        for wid in self.last_batch.drain(..) {
+            if let Some(c) = self.completed.get_mut(&wid) {
+                c.mem = None;
+            }
+        }
+        let mut summaries = Vec::with_capacity(batch.len());
+        for ((wid, ev), res) in batch.into_iter().zip(results) {
+            let (summary, mem) = match res {
+                Ok(qr) => {
+                    self.metrics
+                        .launches_completed
+                        .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    if let Some(d) = qr.device {
+                        self.metrics.add_device_cycles(d.0, qr.result.cycles);
+                    }
+                    (
+                        EventSummary {
+                            event: wid,
+                            ok: true,
+                            cycles: qr.result.cycles,
+                            device: qr.device.map(|d| d.0 as u32),
+                            exec_seq: qr.exec_seq,
+                            error: None,
+                        },
+                        Some(qr.mem),
+                    )
+                }
+                Err(e) => {
+                    self.metrics
+                        .launches_failed
+                        .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    (
+                        EventSummary {
+                            event: wid,
+                            ok: false,
+                            cycles: 0,
+                            device: None,
+                            exec_seq: 0,
+                            error: Some(e.to_string()),
+                        },
+                        None,
+                    )
+                }
+            };
+            self.completed.insert(wid, Completed { summary: summary.clone(), qevent: ev, mem });
+            self.last_batch.push(wid);
+            summaries.push(summary);
+        }
+        // evict old summaries (ids are monotonic: cutoff by id) — but
+        // never any of the batch just reported, even when a session's
+        // in-flight cap exceeds COMPLETED_CAP
+        if self.completed.len() as u64 > COMPLETED_CAP {
+            let keep_from = self.last_batch.first().copied().unwrap_or(0);
+            let cutoff = self.next_event.saturating_sub(COMPLETED_CAP).min(keep_from);
+            self.completed.retain(|&wid, _| wid >= cutoff);
+        }
+        summaries
+    }
+
+    fn wait_event(&mut self, event: u64) -> Response {
+        if self.pending.iter().any(|&(w, _)| w == event) {
+            // `clWaitForEvents` semantics over a batch-scoped queue:
+            // waiting on a pending event drains the whole current batch
+            self.drain_batch();
+        }
+        match self.completed.get(&event) {
+            Some(c) => Response::EventStatus { result: c.summary.clone() },
+            None => err(ErrorCode::BadRequest, format!("unknown event id {event}")),
+        }
+    }
+
+    fn read_result(&self, event: u64, addr: u32, count: u32) -> Response {
+        let Some(c) = self.completed.get(&event) else {
+            if self.pending.iter().any(|&(w, _)| w == event) {
+                return err(
+                    ErrorCode::BadRequest,
+                    format!("event {event} is still pending (finish or wait_event first)"),
+                );
+            }
+            return err(ErrorCode::BadRequest, format!("unknown event id {event}"));
+        };
+        let Some(mem) = &c.mem else {
+            let why = if c.summary.ok {
+                "its batch is no longer the most recent finished one"
+            } else {
+                "it failed (no post-launch image)"
+            };
+            return err(
+                ErrorCode::BadRequest,
+                format!("event {event} has no readable result memory: {why}"),
+            );
+        };
+        if count == 0 || count > self.limits.max_read_words {
+            return err(
+                ErrorCode::BadRequest,
+                format!("count must be 1..={} words", self.limits.max_read_words),
+            );
+        }
+        if addr % 4 != 0 {
+            return err(ErrorCode::BadRequest, "addr must be 4-byte aligned");
+        }
+        let fits = self.buffers.iter().any(|b| {
+            addr >= b.addr && (addr as u64) + (count as u64) * 4 <= b.addr as u64 + b.len as u64
+        });
+        if !fits {
+            return err(
+                ErrorCode::BadRequest,
+                format!("[{addr:#x}, +{count} words) is not inside a session buffer"),
+            );
+        }
+        Response::Data { data: mem.read_i32_slice(addr, count as usize) }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // a tenant disconnecting mid-batch releases its admission slots
+        // and its active-session count, whatever state it left behind
+        self.metrics.release_inflight(self.pending.len() as u64);
+        self.metrics.sessions_active.fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pocl::Backend;
+
+    const SCALE3_BODY: &str = r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)
+    lw t2, 4(t0)
+    slli t3, a0, 2
+    add t4, t1, t3
+    lw t5, 0(t4)
+    li t6, 3
+    mul t5, t5, t6
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#;
+
+    fn open(limits: SessionLimits) -> Session {
+        Session::new(1, &[(2, 2), (4, 4)], 2, limits, Arc::new(Metrics::new())).unwrap()
+    }
+
+    fn expect_event(r: Response) -> u64 {
+        match r {
+            Response::Enqueued { event } => event,
+            other => panic!("expected Enqueued, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn session_runs_a_batch_end_to_end() {
+        let mut s = open(SessionLimits::default());
+        assert_eq!(
+            s.handle(Request::StageKernel { name: "s3".into(), body: SCALE3_BODY.into() }),
+            Response::Ack
+        );
+        let a = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        let b = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        assert_ne!(a, b);
+        assert_eq!(
+            s.handle(Request::WriteBuffer { addr: a, data: vec![1, 2, 3, 4] }),
+            Response::Ack
+        );
+        let e0 = expect_event(s.handle(Request::Enqueue {
+            kernel: "s3".into(),
+            total: 4,
+            args: vec![a, b],
+            device: Some(0),
+            backend: Backend::SimX,
+            wait: vec![],
+        }));
+        let e1 = expect_event(s.handle(Request::Enqueue {
+            kernel: "s3".into(),
+            total: 4,
+            args: vec![b, a],
+            device: Some(0),
+            backend: Backend::SimX,
+            wait: vec![e0],
+        }));
+        let results = match s.handle(Request::Finish) {
+            Response::Finished { results } => results,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.ok), "{results:?}");
+        assert_eq!(results[0].event, e0);
+        assert_eq!(results[1].event, e1);
+        match s.handle(Request::ReadResult { event: e1, addr: a, count: 4 }) {
+            Response::Data { data } => assert_eq!(data, vec![9, 18, 27, 36]),
+            other => panic!("{other:?}"),
+        }
+        // wait_event on a completed id returns its summary
+        match s.handle(Request::WaitEvent { event: e0 }) {
+            Response::EventStatus { result } => assert!(result.ok && result.event == e0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stale_wait_ids_surface_the_dedicated_code() {
+        let mut s = open(SessionLimits::default());
+        s.handle(Request::StageKernel { name: "s3".into(), body: SCALE3_BODY.into() });
+        let a = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        let b = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        s.handle(Request::WriteBuffer { addr: a, data: vec![1; 4] });
+        let enq = |wait: Vec<u64>| Request::Enqueue {
+            kernel: "s3".into(),
+            total: 4,
+            args: vec![a, b],
+            device: Some(0),
+            backend: Backend::SimX,
+            wait,
+        };
+        let e0 = expect_event(s.handle(enq(vec![])));
+        s.handle(Request::Finish);
+        // e0's batch is finished: waiting on it is the stale-event error
+        match s.handle(enq(vec![e0])) {
+            Response::Error { code: ErrorCode::StaleEvent, message } => {
+                assert!(message.contains("stale"), "{message}");
+            }
+            other => panic!("expected stale_event, got {other:?}"),
+        }
+        // a never-issued id is bad_request, not stale
+        match s.handle(enq(vec![999])) {
+            Response::Error { code: ErrorCode::BadRequest, .. } => {}
+            other => panic!("expected bad_request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn session_inflight_cap_backpressures_with_busy() {
+        let mut s = open(SessionLimits { session_inflight: 2, ..SessionLimits::default() });
+        s.handle(Request::StageKernel { name: "s3".into(), body: SCALE3_BODY.into() });
+        let a = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        let b = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        s.handle(Request::WriteBuffer { addr: a, data: vec![2; 4] });
+        let enq = || Request::Enqueue {
+            kernel: "s3".into(),
+            total: 4,
+            args: vec![a, b],
+            device: Some(1),
+            backend: Backend::SimX,
+            wait: vec![],
+        };
+        expect_event(s.handle(enq()));
+        expect_event(s.handle(enq()));
+        match s.handle(enq()) {
+            Response::Error { code: ErrorCode::Busy, .. } => {}
+            other => panic!("expected busy, got {other:?}"),
+        }
+        assert_eq!(s.metrics.snapshot().in_flight, 2);
+        // draining recovers admission
+        s.handle(Request::Finish);
+        assert_eq!(s.metrics.snapshot().in_flight, 0);
+        expect_event(s.handle(enq()));
+        s.handle(Request::Finish);
+    }
+
+    #[test]
+    fn dropping_a_session_releases_its_admission_slots() {
+        let metrics = Arc::new(Metrics::new());
+        let mut s = Session::new(
+            9,
+            &[(2, 2)],
+            1,
+            SessionLimits::default(),
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        s.handle(Request::StageKernel { name: "s3".into(), body: SCALE3_BODY.into() });
+        let a = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        let b = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        expect_event(s.handle(Request::Enqueue {
+            kernel: "s3".into(),
+            total: 4,
+            args: vec![a, b],
+            device: Some(0),
+            backend: Backend::SimX,
+            wait: vec![],
+        }));
+        assert_eq!(metrics.snapshot().in_flight, 1);
+        assert_eq!(metrics.snapshot().sessions_active, 1);
+        drop(s);
+        assert_eq!(metrics.snapshot().in_flight, 0);
+        assert_eq!(metrics.snapshot().sessions_active, 0);
+    }
+}

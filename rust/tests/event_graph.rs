@@ -92,7 +92,7 @@ fn enqueue_all(q: &mut LaunchQueue, specs: &[NodeSpec]) -> Vec<Event> {
         .iter()
         .enumerate()
         .map(|(j, s)| {
-            let wait: Vec<Event> = s.wait.iter().map(|&w| Event(w)).collect();
+            let wait: Vec<Event> = s.wait.iter().map(|&w| q.handle(w)).collect();
             let k = scale_kernel(s.factor);
             let e = match s.device {
                 Some(d) => q
@@ -399,7 +399,7 @@ fn wait_list_cycle_surface_is_unrepresentable() {
     let k = scale_kernel(2);
     let e0 = q.enqueue_on(d, &k, N as u32, &[inp, outs[0]], Backend::SimX).unwrap();
     // self/forward edge: the next event would be #1, naming it is an error
-    match q.enqueue_on_after(d, &k, N as u32, &[inp, outs[1]], Backend::SimX, &[Event(1)]) {
+    match q.enqueue_on_after(d, &k, N as u32, &[inp, outs[1]], Backend::SimX, &[q.handle(1)]) {
         Err(LaunchError::UnknownEvent(1)) => {}
         other => panic!("expected UnknownEvent(1), got ok={}", other.is_ok()),
     }

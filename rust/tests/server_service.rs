@@ -1,0 +1,573 @@
+//! `vortex::server` acceptance suite.
+//!
+//! * **Protocol properties** — random frames satisfy
+//!   `decode(encode(f)) == f` and `encode(decode(encode(f))) ==
+//!   encode(f)` (the canonical-encoding fixed point), and malformed /
+//!   truncated / oversized lines are answered with error frames without
+//!   killing the connection.
+//! * **Bit-identity** — a 4-client bombard against a 2-device serve
+//!   instance returns, per request, results (cycles, placement, commit
+//!   order, read-back bytes) identical to driving the same enqueue
+//!   sequence through a [`LaunchQueue`] directly: the service adds
+//!   multiplexing, not scheduling.
+//! * **Admission + lifecycle** — the global in-flight cap backpressures
+//!   across sessions with explicit `busy` frames; stale event handles
+//!   surface the dedicated `stale_event` code over the wire; shutdown
+//!   drains gracefully and refuses new work.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+use vortex::config::MachineConfig;
+use vortex::coordinator::quickcheck;
+use vortex::pocl::{Backend, LaunchQueue, VortexDevice};
+use vortex::server::load::{scale_kernel_body, scale_kernel_name, SCALE_FACTORS};
+use vortex::server::{
+    run_bombard, BombardConfig, Client, ClientError, ErrorCode, EventSummary, Request,
+    Response, ServeConfig, Server, SessionLimits,
+};
+use vortex::workloads::rng::SplitMix64;
+
+// ---------------------------------------------------------------- protocol
+
+fn rand_string(rng: &mut SplitMix64) -> String {
+    const POOL: &[char] = &[
+        'a', 'B', '0', '_', '"', '\\', '/', '\n', '\r', '\t', '\u{1}', '\u{1f}', '\u{7f}',
+        'µ', '∀', '\u{1F600}', ' ', '{', '}', '[', ']', ':', ',',
+    ];
+    let len = rng.below(16) as usize;
+    (0..len).map(|_| POOL[rng.below(POOL.len() as u32) as usize]).collect()
+}
+
+fn rand_devices(rng: &mut SplitMix64) -> Vec<(u32, u32)> {
+    (0..rng.below(4)).map(|_| (1 + rng.below(32), 1 + rng.below(32))).collect()
+}
+
+/// 52-bit ids: exact in the JSON number representation.
+fn rand_id(rng: &mut SplitMix64) -> u64 {
+    rng.next_u64() >> 12
+}
+
+fn rand_request(rng: &mut SplitMix64) -> Request {
+    match rng.below(10) {
+        0 => Request::OpenSession { devices: rand_devices(rng) },
+        1 => Request::StageKernel { name: rand_string(rng), body: rand_string(rng) },
+        2 => Request::CreateBuffer { len: rng.next_u32() },
+        3 => Request::WriteBuffer {
+            addr: rng.next_u32(),
+            data: (0..rng.below(8)).map(|_| rng.next_u32() as i32).collect(),
+        },
+        4 => Request::Enqueue {
+            kernel: rand_string(rng),
+            total: rng.next_u32(),
+            args: (0..rng.below(5)).map(|_| rng.next_u32()).collect(),
+            device: if rng.below(2) == 0 { None } else { Some(rng.below(16)) },
+            backend: if rng.below(2) == 0 { Backend::SimX } else { Backend::Emu },
+            wait: (0..rng.below(4)).map(|_| rand_id(rng)).collect(),
+        },
+        5 => Request::Finish,
+        6 => Request::WaitEvent { event: rand_id(rng) },
+        7 => Request::ReadResult {
+            event: rand_id(rng),
+            addr: rng.next_u32(),
+            count: rng.next_u32(),
+        },
+        8 => Request::Stats,
+        _ => Request::Shutdown,
+    }
+}
+
+fn rand_summary(rng: &mut SplitMix64) -> EventSummary {
+    let ok = rng.below(2) == 0;
+    EventSummary {
+        event: rand_id(rng),
+        ok,
+        cycles: rand_id(rng),
+        device: if rng.below(2) == 0 { None } else { Some(rng.below(16)) },
+        exec_seq: rng.below(1 << 16),
+        error: if ok { None } else { Some(rand_string(rng)) },
+    }
+}
+
+fn rand_response(rng: &mut SplitMix64) -> Response {
+    const CODES: [ErrorCode; 5] = [
+        ErrorCode::BadRequest,
+        ErrorCode::Busy,
+        ErrorCode::Launch,
+        ErrorCode::StaleEvent,
+        ErrorCode::ShuttingDown,
+    ];
+    match rng.below(9) {
+        0 => Response::Error {
+            code: CODES[rng.below(5) as usize],
+            message: rand_string(rng),
+        },
+        1 => Response::Session { session: rand_id(rng), devices: rand_devices(rng) },
+        2 => Response::Ack,
+        3 => Response::Buffer { addr: rng.next_u32() },
+        4 => Response::Enqueued { event: rand_id(rng) },
+        5 => Response::Finished {
+            results: (0..rng.below(4)).map(|_| rand_summary(rng)).collect(),
+        },
+        6 => Response::EventStatus { result: rand_summary(rng) },
+        7 => Response::Data {
+            data: (0..rng.below(8)).map(|_| rng.next_u32() as i32).collect(),
+        },
+        _ => Response::Stats {
+            stats: vortex::server::StatsReport {
+                sessions_opened: rand_id(rng),
+                sessions_active: rand_id(rng),
+                requests_accepted: rand_id(rng),
+                requests_rejected: rand_id(rng),
+                launches_enqueued: rand_id(rng),
+                launches_completed: rand_id(rng),
+                launches_failed: rand_id(rng),
+                in_flight: rand_id(rng),
+                device_cycles: (0..rng.below(4)).map(|_| rand_id(rng)).collect(),
+            },
+        },
+    }
+}
+
+#[test]
+fn protocol_random_frames_encode_parse_encode_fixed_point() {
+    quickcheck::check_default("request-roundtrip", |rng| {
+        let f = rand_request(rng);
+        let line = f.encode();
+        assert!(!line.contains('\n'), "one frame, one line: {line}");
+        let g = Request::decode(&line)
+            .unwrap_or_else(|e| panic!("decode of {line} failed: {e}"));
+        assert_eq!(g, f);
+        assert_eq!(g.encode(), line, "canonical encoding fixed point");
+    });
+    quickcheck::check_default("response-roundtrip", |rng| {
+        let f = rand_response(rng);
+        let line = f.encode();
+        assert!(!line.contains('\n'));
+        let g = Response::decode(&line)
+            .unwrap_or_else(|e| panic!("decode of {line} failed: {e}"));
+        assert_eq!(g, f);
+        assert_eq!(g.encode(), line);
+    });
+}
+
+// ----------------------------------------------------------- wire hygiene
+
+fn tiny_server(max_line: usize) -> Server {
+    Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: vec![(1, 2)],
+            jobs: 1,
+            max_sessions: 8,
+            limits: SessionLimits::default(),
+            max_line,
+        },
+    )
+    .unwrap()
+}
+
+fn raw_conn(server: &Server) -> (TcpStream, BufReader<TcpStream>) {
+    let s = TcpStream::connect(server.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let r = BufReader::new(s.try_clone().unwrap());
+    (s, r)
+}
+
+fn read_frame(r: &mut BufReader<TcpStream>) -> Response {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(!line.is_empty(), "server closed the connection");
+    Response::decode(line.trim()).unwrap()
+}
+
+#[test]
+fn malformed_truncated_oversized_lines_do_not_kill_the_connection() {
+    let server = tiny_server(1024);
+    let (mut w, mut r) = raw_conn(&server);
+
+    // malformed: answered with bad_request, connection survives
+    w.write_all(b"certainly not json\n").unwrap();
+    match read_frame(&mut r) {
+        Response::Error { code: ErrorCode::BadRequest, .. } => {}
+        other => panic!("{other:?}"),
+    }
+
+    // raw non-UTF-8 bytes: answered, not a dead connection
+    w.write_all(&[0xFF, 0xFE, 0x80, b'\n']).unwrap();
+    match read_frame(&mut r) {
+        Response::Error { code: ErrorCode::BadRequest, message } => {
+            assert!(message.contains("UTF-8"), "{message}");
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // truncated: a frame split across writes (with a pause longer than
+    // the server's read-timeout tick) is reassembled, not rejected
+    w.write_all(br#"{"op":"sta"#).unwrap();
+    w.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(150));
+    w.write_all(b"ts\"}\n").unwrap();
+    match read_frame(&mut r) {
+        Response::Stats { .. } => {}
+        other => panic!("split frame not reassembled: {other:?}"),
+    }
+
+    // oversized: one error frame, the tail is discarded, and the next
+    // well-formed frame still gets served
+    let huge = format!("{{\"op\":\"stats\",\"pad\":\"{}\"}}\n", "x".repeat(4096));
+    w.write_all(huge.as_bytes()).unwrap();
+    match read_frame(&mut r) {
+        Response::Error { code: ErrorCode::BadRequest, message } => {
+            assert!(message.contains("max_line"), "{message}");
+        }
+        other => panic!("{other:?}"),
+    }
+    w.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    match read_frame(&mut r) {
+        Response::Stats { .. } => {}
+        other => panic!("connection died after oversized line: {other:?}"),
+    }
+
+    server.shutdown();
+    drop(w);
+    drop(r);
+    server.wait();
+}
+
+// ------------------------------------------------------------ bit-identity
+
+const FLEET: [(u32, u32); 2] = [(2, 2), (8, 8)];
+const N: usize = 16;
+const BATCHES: usize = 3;
+
+/// One client's deterministic request schedule (batch index → pinned
+/// device / deferred, chained or single).
+fn batch_plan(r: usize) -> (Option<u32>, bool) {
+    match r {
+        0 => (Some(0), false),
+        1 => (Some(1), true), // two-launch chain via a wait list
+        _ => (None, false),   // dispatcher-placed
+    }
+}
+
+/// Per-event observation, comparable across the wire and the direct
+/// queue: (cycles, device slot, exec_seq, read-back of the dst buffer).
+type Observed = (u64, Option<u32>, u32, Vec<i32>);
+
+/// Drive the schedule over the wire; returns observations per batch.
+fn run_via_server(addr: &str, c: usize, input: &[i32]) -> Vec<Vec<Observed>> {
+    let mut cl = Client::connect(addr).unwrap();
+    let (_, devices) = cl.open_session(&[]).unwrap();
+    assert_eq!(devices, FLEET.to_vec());
+    let factor = SCALE_FACTORS[c % SCALE_FACTORS.len()];
+    cl.stage_kernel(scale_kernel_name(factor), &scale_kernel_body(factor)).unwrap();
+    let a = cl.create_buffer((N * 4) as u32).unwrap();
+    let b = cl.create_buffer((N * 4) as u32).unwrap();
+    let d = cl.create_buffer((N * 4) as u32).unwrap();
+    cl.write_buffer(a, input).unwrap();
+    let kernel = scale_kernel_name(factor);
+    let mut out = Vec::new();
+    for r in 0..BATCHES {
+        let (dev, chained) = batch_plan(r);
+        let mut events = vec![(
+            cl.enqueue(kernel, N as u32, &[a, b], dev, Backend::SimX, &[]).unwrap(),
+            b,
+        )];
+        if chained {
+            let e1 = events[0].0;
+            events.push((
+                cl.enqueue(kernel, N as u32, &[b, d], dev, Backend::SimX, &[e1]).unwrap(),
+                d,
+            ));
+        }
+        let results = cl.finish().unwrap();
+        assert_eq!(results.len(), events.len());
+        let mut batch = Vec::new();
+        for (i, &(ev, dst)) in events.iter().enumerate() {
+            let s = &results[i];
+            assert_eq!(s.event, ev);
+            assert!(s.ok, "client {c} batch {r} event {ev}: {:?}", s.error);
+            let data = cl.read_result(ev, dst, N as u32).unwrap();
+            batch.push((s.cycles, s.device, s.exec_seq, data));
+        }
+        out.push(batch);
+    }
+    out
+}
+
+/// Drive the *same* schedule through a LaunchQueue directly.
+fn run_direct(c: usize, input: &[i32]) -> Vec<Vec<Observed>> {
+    let factor = SCALE_FACTORS[c % SCALE_FACTORS.len()];
+    let kernel = vortex::pocl::Kernel {
+        name: scale_kernel_name(factor),
+        body: scale_kernel_body(factor),
+    };
+    let mut q = LaunchQueue::new(2);
+    let mut ids = Vec::new();
+    let mut bufs = (0, 0, 0);
+    for &(w, t) in &FLEET {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+        let a = dev.create_buffer(N * 4);
+        let b = dev.create_buffer(N * 4);
+        let d = dev.create_buffer(N * 4);
+        dev.write_buffer_i32(a, input);
+        bufs = (a.addr, b.addr, d.addr);
+        ids.push(q.add_device(dev));
+    }
+    let (a, b, d) = bufs;
+    let mut out = Vec::new();
+    for r in 0..BATCHES {
+        let (dev, chained) = batch_plan(r);
+        let enqueue = |q: &mut LaunchQueue, args: &[u32], wait: &[vortex::pocl::Event]| {
+            match dev {
+                Some(di) => q
+                    .enqueue_on_after(ids[di as usize], &kernel, N as u32, args, Backend::SimX, wait)
+                    .unwrap(),
+                None => q
+                    .enqueue_any_after(&kernel, N as u32, args, Backend::SimX, wait)
+                    .unwrap(),
+            }
+        };
+        let mut events = vec![(enqueue(&mut q, &[a, b], &[]), b)];
+        if chained {
+            let e1 = events[0].0;
+            events.push((enqueue(&mut q, &[b, d], &[e1]), d));
+        }
+        let results = q.finish();
+        let mut batch = Vec::new();
+        for &(ev, dst) in &events {
+            let qr = results[ev.0].as_ref().unwrap();
+            batch.push((
+                qr.result.cycles,
+                qr.device.map(|x| x.0 as u32),
+                qr.exec_seq,
+                qr.mem.read_i32_slice(dst, N),
+            ));
+        }
+        out.push(batch);
+    }
+    out
+}
+
+#[test]
+fn bombard_matches_direct_launch_queue_bit_identically() {
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: FLEET.to_vec(),
+            jobs: 2,
+            max_sessions: 8,
+            limits: SessionLimits::default(),
+            max_line: 1 << 20,
+        },
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    // 4 concurrent tenants, distinct kernels/inputs per tenant
+    let observed: Vec<(usize, Vec<Vec<Observed>>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|c| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut rng = SplitMix64::new(0xB0B + c as u64);
+                    let input: Vec<i32> = (0..N).map(|_| rng.range_i32(-50, 50)).collect();
+                    (c, run_via_server(&addr, c, &input))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // the exact same schedules through the queue directly, sequentially
+    for (c, via_server) in observed {
+        let mut rng = SplitMix64::new(0xB0B + c as u64);
+        let input: Vec<i32> = (0..N).map(|_| rng.range_i32(-50, 50)).collect();
+        let direct = run_direct(c, &input);
+        assert_eq!(
+            via_server, direct,
+            "client {c}: serve results must be bit-identical to the direct queue"
+        );
+        // and the data is actually the expected product
+        let factor = SCALE_FACTORS[c % SCALE_FACTORS.len()] as i32;
+        let want: Vec<i32> = input.iter().map(|x| x * factor).collect();
+        assert_eq!(via_server[0][0].3, want);
+        let want2: Vec<i32> = input.iter().map(|x| x * factor * factor).collect();
+        assert_eq!(via_server[1][1].3, want2, "chained batch dataflow");
+    }
+
+    // the service observed 4 isolated tenants and drained to zero depth
+    let m = server.metrics().snapshot();
+    assert_eq!(m.sessions_opened, 4);
+    assert_eq!(m.in_flight, 0);
+    assert_eq!(m.launches_failed, 0);
+    assert_eq!(m.launches_completed, 4 * 4); // 3 batches = 4 launches each
+
+    server.shutdown();
+    server.wait();
+}
+
+#[test]
+fn bombard_load_generator_is_clean_against_a_two_device_fleet() {
+    // the acceptance-criteria shape: >= 4 concurrent clients, >= 32
+    // total requests, 2 heterogeneous devices, zero dropped/unanswered
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: FLEET.to_vec(),
+            jobs: 2,
+            max_sessions: 16,
+            limits: SessionLimits::default(),
+            max_line: 1 << 20,
+        },
+    )
+    .unwrap();
+    let rep = run_bombard(&BombardConfig {
+        addr: server.addr().to_string(),
+        clients: 4,
+        requests: 8,
+        n: 32,
+        seed: 0xC0FFEE,
+        shutdown: true,
+    });
+    assert_eq!(rep.requests_sent, 32);
+    assert_eq!(rep.answered, 32, "no request may go unanswered: {:?}", rep.errors);
+    assert_eq!(rep.verified, 32, "every response verifies: {:?}", rep.errors);
+    assert!(rep.clean(), "{:?}", rep.errors);
+    assert!(rep.req_per_sec > 0.0);
+    assert!(rep.p50 <= rep.p99);
+    let stats = rep.stats.as_ref().expect("stats sampled before shutdown");
+    assert_eq!(stats.launches_failed, 0);
+    assert_eq!(stats.in_flight, 0);
+    server.shutdown(); // idempotent with bombard's shutdown frame
+    server.wait();
+}
+
+// ----------------------------------------------------- admission + events
+
+#[test]
+fn global_inflight_cap_backpressures_across_sessions() {
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: vec![(1, 2)],
+            jobs: 1,
+            max_sessions: 8,
+            limits: SessionLimits {
+                session_inflight: 8,
+                global_inflight: 1,
+                ..SessionLimits::default()
+            },
+            max_line: 1 << 20,
+        },
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+    let setup = |cl: &mut Client| {
+        cl.open_session(&[]).unwrap();
+        cl.stage_kernel(scale_kernel_name(2), &scale_kernel_body(2)).unwrap();
+        let a = cl.create_buffer(64).unwrap();
+        let b = cl.create_buffer(64).unwrap();
+        cl.write_buffer(a, &[1, 2, 3, 4]).unwrap();
+        (a, b)
+    };
+    let mut c1 = Client::connect(&addr).unwrap();
+    let (a1, b1) = setup(&mut c1);
+    let mut c2 = Client::connect(&addr).unwrap();
+    let (a2, b2) = setup(&mut c2);
+    // c1 takes the single global slot
+    let e1 = c1
+        .enqueue(scale_kernel_name(2), 4, &[a1, b1], Some(0), Backend::SimX, &[])
+        .unwrap();
+    // c2 is explicitly backpressured, not dropped
+    match c2.enqueue(scale_kernel_name(2), 4, &[a2, b2], Some(0), Backend::SimX, &[]) {
+        Err(e) if e.is_busy() => {}
+        other => panic!("expected busy, got {other:?}"),
+    }
+    // c1 drains; c2 recovers
+    assert!(c1.finish().unwrap().iter().all(|s| s.ok));
+    assert!(c1.read_result(e1, b1, 4).unwrap() == vec![2, 4, 6, 8]);
+    let e2 = c2
+        .enqueue(scale_kernel_name(2), 4, &[a2, b2], Some(0), Backend::SimX, &[])
+        .unwrap();
+    assert!(c2.wait_event(e2).unwrap().ok);
+    let m = server.metrics().snapshot();
+    assert!(m.requests_rejected >= 1, "busy answers are counted: {m:?}");
+    server.shutdown();
+    drop(c1);
+    drop(c2);
+    server.wait();
+}
+
+#[test]
+fn stale_event_handles_surface_the_dedicated_code_over_the_wire() {
+    let server = tiny_server(1 << 20);
+    let mut cl = Client::connect(&server.addr().to_string()).unwrap();
+    cl.open_session(&[]).unwrap();
+    cl.stage_kernel(scale_kernel_name(3), &scale_kernel_body(3)).unwrap();
+    let a = cl.create_buffer(64).unwrap();
+    let b = cl.create_buffer(64).unwrap();
+    cl.write_buffer(a, &[5; 4]).unwrap();
+    let e0 = cl
+        .enqueue(scale_kernel_name(3), 4, &[a, b], Some(0), Backend::SimX, &[])
+        .unwrap();
+    cl.finish().unwrap();
+    // e0's batch is retired: its id still answers wait_event/read_result…
+    assert!(cl.wait_event(e0).unwrap().ok);
+    assert_eq!(cl.read_result(e0, b, 4).unwrap(), vec![15; 4]);
+    // …but a wait list naming it gets the dedicated stale_event code
+    match cl.enqueue(scale_kernel_name(3), 4, &[b, a], Some(0), Backend::SimX, &[e0]) {
+        Err(ClientError::Server { code: ErrorCode::StaleEvent, message }) => {
+            assert!(message.contains("stale"), "{message}");
+        }
+        other => panic!("expected stale_event, got {other:?}"),
+    }
+    // the session is still healthy after the rejection
+    let e1 = cl
+        .enqueue(scale_kernel_name(3), 4, &[b, a], Some(0), Backend::SimX, &[])
+        .unwrap();
+    assert!(cl.wait_event(e1).unwrap().ok);
+    server.shutdown();
+    drop(cl);
+    server.wait();
+}
+
+#[test]
+fn shutdown_drains_gracefully_and_refuses_new_work() {
+    let server = tiny_server(1 << 20);
+    let addr = server.addr().to_string();
+    let mut worker = Client::connect(&addr).unwrap();
+    worker.open_session(&[]).unwrap();
+    worker.stage_kernel(scale_kernel_name(2), &scale_kernel_body(2)).unwrap();
+    let a = worker.create_buffer(64).unwrap();
+    let b = worker.create_buffer(64).unwrap();
+    worker.write_buffer(a, &[3; 4]).unwrap();
+    let e = worker
+        .enqueue(scale_kernel_name(2), 4, &[a, b], Some(0), Backend::SimX, &[])
+        .unwrap();
+
+    let mut ctl = Client::connect(&addr).unwrap();
+    ctl.shutdown().unwrap();
+
+    // the in-flight tenant may still drain its batch and read results…
+    assert!(worker.wait_event(e).unwrap().ok);
+    assert_eq!(worker.read_result(e, b, 4).unwrap(), vec![6; 4]);
+    // …but new work is refused with shutting_down
+    match worker.enqueue(scale_kernel_name(2), 4, &[a, b], Some(0), Backend::SimX, &[]) {
+        Err(ClientError::Server { code: ErrorCode::ShuttingDown, .. }) => {}
+        other => panic!("expected shutting_down, got {other:?}"),
+    }
+    drop(worker);
+    drop(ctl);
+    server.wait();
+    // the listener is gone
+    match TcpStream::connect(&addr) {
+        Err(_) => {}
+        Ok(s) => {
+            let mut r = BufReader::new(s);
+            let mut buf = String::new();
+            assert_eq!(r.read_line(&mut buf).unwrap_or(0), 0, "no service behind the port");
+        }
+    }
+}
