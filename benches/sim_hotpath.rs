@@ -19,7 +19,7 @@ use vortex::coordinator::benchkit::{speedup, throughput, Bencher};
 use vortex::coordinator::report::Json;
 use vortex::emu::Emulator;
 use vortex::kernels::Bench;
-use vortex::pocl::{Backend, DeviceId, LaunchQueue, VortexDevice};
+use vortex::pocl::{Backend, DeviceId, Event, LaunchQueue, SchedMode, VortexDevice};
 use vortex::server::{run_bombard, BombardConfig, ServeConfig, Server};
 use vortex::sim::cache::Cache;
 use vortex::sim::{ExecMode, Simulator};
@@ -296,12 +296,73 @@ fn main() {
     json.push("dag_events", (dag_events as u64).into());
     json.push("dag_wait_edges", (dag_edges as u64).into());
 
+    // --- reactive vs round-sync: anti-correlated cross-device chains ---
+    // Two pinned 8-stage chains, each alternating between its own pair of
+    // devices; chain A's heavy stages line up with chain B's light ones.
+    // The round-synchronous scheduler pays max(heavy, light) at every
+    // level (≈ 8 heavy stages of wall-clock); the reactive scheduler
+    // retires each chain independently (≈ 4 heavy + 4 light), so the
+    // speedup approaches 2x with enough workers. Results stay identical:
+    // the commit ledger, not the dispatch order, is authoritative.
+    let (heavy, light) = if smoke { (512u32, 16u32) } else { (4096, 64) };
+    let stages = 8usize;
+    let chain_jobs = hw.clamp(2, 4);
+    let w_heavy = wl::vecadd(heavy as usize, 0xBEEF);
+    let run_chains = |sched: SchedMode| -> u64 {
+        let mut q = LaunchQueue::new(chain_jobs);
+        q.sched_mode = sched;
+        let mut ids = Vec::new();
+        let mut chain_args = [0u32; 3];
+        for _ in 0..4 {
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(4, 4));
+            let a = dev.create_buffer(heavy as usize * 4);
+            let b = dev.create_buffer(heavy as usize * 4);
+            let c = dev.create_buffer(heavy as usize * 4);
+            dev.write_buffer_i32(a, &w_heavy.a);
+            dev.write_buffer_i32(b, &w_heavy.b);
+            chain_args = [a.addr, b.addr, c.addr];
+            ids.push(q.add_device(dev));
+        }
+        let mut prev: [Option<Event>; 2] = [None, None];
+        for s in 0..stages {
+            for (chain, base) in [(0usize, 0usize), (1, 2)] {
+                let id = ids[base + s % 2];
+                // chain 0 goes heavy on even stages, chain 1 on odd ones
+                let n_items = if (s + chain) % 2 == 0 { heavy } else { light };
+                let wait: Vec<Event> = prev[chain].into_iter().collect();
+                prev[chain] = Some(
+                    q.enqueue_on_after(id, &kernel, n_items, &chain_args, Backend::SimX, &wait)
+                        .unwrap(),
+                );
+            }
+        }
+        q.finish().into_iter().map(|r| r.unwrap().result.cycles).sum::<u64>()
+    };
+    let chains_ref = run_chains(SchedMode::RoundSync);
+    assert_eq!(
+        chains_ref,
+        run_chains(SchedMode::Reactive),
+        "sched modes must agree on committed results"
+    );
+    let mrs = bencher.bench("chains_round_sync", || run_chains(SchedMode::RoundSync));
+    let mre = bencher
+        .bench(&format!("chains_reactive_jobs{chain_jobs}"), || run_chains(SchedMode::Reactive));
+    let reactive_speedup = speedup(&mrs, &mre);
+    println!(
+        "  -> reactive scheduler speedup: {reactive_speedup:.2}x over round-sync \
+         (2 anti-correlated chains x {stages} stages, {chain_jobs} workers)\n"
+    );
+    json.push("dag_reactive_speedup", reactive_speedup.into());
+
     // --- server throughput: the multi-tenant device service under load ---
     // A real serve instance on an ephemeral TCP port, 4 concurrent client
-    // sessions bombarding the 2-device heterogeneous fleet. Every request
-    // is verified end to end (enqueue → finish/wait_event → read_result),
-    // so req/s counts only correct answers; the latency percentiles are
-    // the full wire-round-trip including simulation.
+    // sessions bombarding the 2-device heterogeneous fleet with the
+    // **streaming** scenario: each request chains two launches into an
+    // open batch (the second enqueue joins while the first runs), waits
+    // on each event individually, and reads results mid-stream. Every
+    // request is verified end to end, so req/s counts only correct
+    // answers; the latency percentiles are the full wire-round-trip
+    // including simulation.
     // full mode: 4 x 8 = 32 requests — the acceptance-criteria shape
     let bombard_requests = if smoke { 2usize } else { 8 };
     let bombard_clients = 4usize;
@@ -317,6 +378,7 @@ fn main() {
         n: if smoke { 128 } else { 256 },
         seed: 0xC0FFEE,
         shutdown: true,
+        stream: true,
     });
     // idempotent with the shutdown frame: guarantees the drain even if
     // the control connection was refused
@@ -344,6 +406,9 @@ fn main() {
     json.push("server_clients", (rep.clients as u64).into());
     json.push("server_requests", (rep.clients as u64 * bombard_requests as u64).into());
     json.push("server_launches", rep.launches.into());
+    if let Some(stats) = &rep.stats {
+        json.push("server_launches_streamed", stats.launches_streamed.into());
+    }
 
     // --- machine-readable summary (perf-trajectory contract) ---
     let path = std::env::var("VORTEX_BENCH_JSON")

@@ -6,6 +6,7 @@
 //! vortex sweep [--bench NAME]... [--seed S]       # Fig 9 + Fig 10 rows
 //! vortex queue [--configs 2x2,8x8] [--stages K]   # cross-device event
 //!              [--n N] [--seed S] [--jobs N]      # pipeline (wait= DAG)
+//!              [--sched reactive|round-sync]
 //! vortex power [--warps W --threads T]            # Fig 7/8 model output
 //! vortex validate [--artifacts DIR] [--seed S]    # golden-model check
 //! vortex list                                     # benchmarks + configs
@@ -16,13 +17,14 @@
 //! vortex bombard [--addr H:P] [--clients N]       # concurrent load
 //!                [--requests M] [--n SIZE]        # generator (self-hosts
 //!                [--configs 2x2,8x8] [--jobs N]   # a server without
-//!                [--seed S] [--shutdown]          # --addr)
+//!                [--seed S] [--shutdown]          # --addr); --stream
+//!                [--stream]                       # enqueues while running
 //! ```
 
 use super::{config as cfgfile, pool, report::Table, sweep};
 use crate::config::MachineConfig;
 use crate::kernels::Bench;
-use crate::pocl::Backend;
+use crate::pocl::{Backend, SchedMode};
 use crate::power;
 use crate::runtime::GoldenRuntime;
 use crate::server::{BombardConfig, ServeConfig, Server, SessionLimits};
@@ -56,6 +58,9 @@ pub enum Command {
         n: u32,
         seed: u64,
         jobs: u32,
+        /// `--sched reactive|round-sync`: scheduling discipline (results
+        /// are bit-identical; only wall-clock differs).
+        sched: SchedMode,
     },
     Power {
         warps: u32,
@@ -88,6 +93,9 @@ pub enum Command {
         jobs: Option<u32>,
         seed: u64,
         shutdown: bool,
+        /// `--stream`: clients enqueue while the queue is running and
+        /// harvest per-event (`wait_event`) instead of batching.
+        stream: bool,
     },
     List,
     Help,
@@ -204,6 +212,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut n = 256u32;
             let mut seed = 0xC0FFEEu64;
             let mut jobs = 1u32;
+            let mut sched = SchedMode::Reactive;
             let mut i = 1;
             while i < args.len() {
                 match args[i].as_str() {
@@ -214,6 +223,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--n" => n = parse_num(take_value(args, &mut i, "--n")?)?,
                     "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
                     "--jobs" => jobs = parse_jobs(take_value(args, &mut i, "--jobs")?)?,
+                    "--sched" => sched = parse_sched(take_value(args, &mut i, "--sched")?)?,
                     other => return Err(CliError(format!("unknown flag `{other}`"))),
                 }
                 i += 1;
@@ -224,7 +234,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             if n == 0 {
                 return Err(CliError("--n must be >= 1".into()));
             }
-            Ok(Command::Queue { configs, stages, n, seed, jobs })
+            Ok(Command::Queue { configs, stages, n, seed, jobs, sched })
         }
         "serve" => {
             let mut addr = "127.0.0.1:9717".to_string();
@@ -285,6 +295,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut jobs: Option<u32> = None;
             let mut seed = 0xC0FFEEu64;
             let mut shutdown = false;
+            let mut stream = false;
             let mut i = 1;
             while i < args.len() {
                 match args[i].as_str() {
@@ -300,6 +311,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--jobs" => jobs = Some(parse_jobs(take_value(args, &mut i, "--jobs")?)?),
                     "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
                     "--shutdown" => shutdown = true,
+                    "--stream" => stream = true,
                     other => return Err(CliError(format!("unknown flag `{other}`"))),
                 }
                 i += 1;
@@ -310,7 +322,17 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             if n == 0 {
                 return Err(CliError("--n must be >= 1".into()));
             }
-            Ok(Command::Bombard { addr, clients, requests, n, configs, jobs, seed, shutdown })
+            Ok(Command::Bombard {
+                addr,
+                clients,
+                requests,
+                n,
+                configs,
+                jobs,
+                seed,
+                shutdown,
+                stream,
+            })
         }
         "power" => {
             let mut warps = 8u32;
@@ -375,6 +397,18 @@ fn parse_config_list(s: &str) -> Result<Vec<(u32, u32)>, CliError> {
     Ok(configs)
 }
 
+/// `--sched reactive|round-sync` (the old level-synchronous discipline
+/// stays reachable for A/B timing; results are identical either way).
+fn parse_sched(s: &str) -> Result<SchedMode, CliError> {
+    match s {
+        "reactive" => Ok(SchedMode::Reactive),
+        "round-sync" => Ok(SchedMode::RoundSync),
+        other => Err(CliError(format!(
+            "bad --sched `{other}` (expected reactive or round-sync)"
+        ))),
+    }
+}
+
 /// `--jobs` shares the machine-config validation path: `--jobs 0` is a
 /// clean argument error (it used to be silently clamped to 1).
 fn parse_jobs(s: &str) -> Result<u32, CliError> {
@@ -392,12 +426,17 @@ USAGE:
   vortex sweep [--bench <name>]... [--seed S] [--jobs N]
                                                   Fig 9 + Fig 10 series
   vortex queue [--configs 2x2,4x4,8x8] [--stages K] [--n N] [--seed S]
-               [--jobs N]                         cross-device event-graph
+               [--jobs N] [--sched reactive|round-sync]
+                                                  cross-device event-graph
                                                   pipeline: each stage
                                                   waits on its predecessor
                                                   (wait= edges hand the
                                                   producer's memory image
-                                                  across devices)
+                                                  across devices); --sched
+                                                  picks reactive (default)
+                                                  or the round-synchronous
+                                                  baseline — results are
+                                                  bit-identical either way
   vortex power [--warps W --threads T]            Fig 7/8 area/power model
   vortex validate [--artifacts DIR] [--seed S]    golden-model validation
   vortex list                                     benchmarks + paper configs
@@ -412,12 +451,15 @@ USAGE:
                                                   graceful drain on shutdown)
   vortex bombard [--addr HOST:PORT] [--clients N] [--requests M] [--n SIZE]
                  [--configs 2x2,8x8] [--jobs N] [--seed S] [--shutdown]
-                                                  concurrent load generator:
+                 [--stream]                       concurrent load generator:
                                                   verifies every response and
                                                   reports req/s + p50/p99
                                                   latency; without --addr it
                                                   self-hosts a server on an
-                                                  ephemeral port
+                                                  ephemeral port; --stream
+                                                  chains enqueues into the
+                                                  running queue and harvests
+                                                  per-event via wait_event
 
   --jobs N   run: N > 1 enables the parallel engine (worker threads =
              min(cores, host threads); bit-identical to serial); sweep/
@@ -507,26 +549,27 @@ pub fn execute(cmd: Command) -> i32 {
                 }
             }
         }
-        Command::Queue { configs, stages, n, seed, jobs } => {
+        Command::Queue { configs, stages, n, seed, jobs, sched } => {
             for &(w, t) in &configs {
                 if let Err(e) = MachineConfig::with_wt(w, t).validate() {
                     eprintln!("error: invalid machine config {w}x{t}: {e}");
                     return 2;
                 }
             }
-            match sweep::fig9_pipeline(
+            match sweep::fig9_pipeline_sched(
                 &configs,
                 stages as usize,
                 n as usize,
                 seed,
                 jobs as usize,
+                sched,
             ) {
                 Ok(rep) => {
                     // rows reflect fig9_pipeline's effective stage count
                     // (it clamps for i32-overflow headroom)
                     println!(
                         "event-graph pipeline: {} stages over {} device(s), n={n}, \
-                         seed {seed:#x}, jobs {jobs}",
+                         seed {seed:#x}, jobs {jobs}, sched {sched:?}",
                         rep.rows.len(),
                         configs.len()
                     );
@@ -618,7 +661,7 @@ pub fn execute(cmd: Command) -> i32 {
             println!("vortex serve: drained, exiting");
             0
         }
-        Command::Bombard { addr, clients, requests, n, configs, jobs, seed, shutdown } => {
+        Command::Bombard { addr, clients, requests, n, configs, jobs, seed, shutdown, stream } => {
             // self-host a server on an ephemeral port unless --addr given
             let (target, local) = match addr {
                 Some(a) => (a, None),
@@ -639,7 +682,8 @@ pub fn execute(cmd: Command) -> i32 {
             };
             println!(
                 "bombarding {target}: {clients} client(s) x {requests} request(s), n={n}, \
-                 seed {seed:#x}"
+                 seed {seed:#x}{}",
+                if stream { ", streaming" } else { "" }
             );
             let rep = crate::server::run_bombard(&BombardConfig {
                 addr: target,
@@ -649,6 +693,7 @@ pub fn execute(cmd: Command) -> i32 {
                 seed,
                 // a self-hosted server always drains at the end
                 shutdown: shutdown || local.is_some(),
+                stream,
             });
             let dropped = rep.requests_sent - rep.answered;
             println!(
@@ -888,6 +933,7 @@ mod tests {
                 n: 64,
                 seed: 2,
                 shutdown: true,
+                stream: false,
                 ..
             } => assert_eq!(a, "127.0.0.1:7000"),
             other => panic!("{other:?}"),
@@ -899,8 +945,13 @@ mod tests {
                 requests: 8,
                 n: 256,
                 shutdown: false,
+                stream: false,
                 ..
             } => {}
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("bombard --stream --clients 2")).unwrap() {
+            Command::Bombard { stream: true, clients: 2, .. } => {}
             other => panic!("{other:?}"),
         }
         assert!(parse(&argv("bombard --clients 0")).is_err());
@@ -917,16 +968,23 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
-        // defaults
+        // defaults (reactive scheduling unless --sched overrides)
         match parse(&argv("queue")).unwrap() {
-            Command::Queue { configs, stages: 6, n: 256, jobs: 1, .. } => {
+            Command::Queue {
+                configs, stages: 6, n: 256, jobs: 1, sched: SchedMode::Reactive, ..
+            } => {
                 assert_eq!(configs.len(), 3);
             }
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("queue --sched round-sync")).unwrap() {
+            Command::Queue { sched: SchedMode::RoundSync, .. } => {}
             other => panic!("{other:?}"),
         }
         // malformed config list and zero stages are clean errors
         assert!(parse(&argv("queue --configs 2y2")).is_err());
         assert!(parse(&argv("queue --stages 0")).is_err());
         assert!(parse(&argv("queue --jobs 0")).is_err());
+        assert!(parse(&argv("queue --sched eager")).is_err());
     }
 }

@@ -73,6 +73,18 @@ impl WorkerPool {
         drop(q);
         self.shared.cv.notify_one();
     }
+
+    /// Fire-and-forget execution of a self-contained job on the pool.
+    ///
+    /// Unlike [`run_indexed`] this never blocks the submitting thread and
+    /// imposes no batch barrier: the job runs whenever a worker frees up,
+    /// and completion must be observed through whatever channel the job
+    /// itself reports on. Spawned jobs must not block on other pool jobs
+    /// (the reactive launch-queue engine keeps this invariant by making
+    /// every job a leaf that only sends on an `mpsc` channel).
+    pub fn spawn(&self, f: impl FnOnce() + Send + 'static) {
+        self.submit(Box::new(f));
+    }
 }
 
 impl Drop for WorkerPool {

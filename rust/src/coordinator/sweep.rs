@@ -8,7 +8,7 @@
 use super::report::Table;
 use crate::config::MachineConfig;
 use crate::kernels::{plan, Bench};
-use crate::pocl::{Backend, Event, Kernel, LaunchError, LaunchQueue, VortexDevice};
+use crate::pocl::{Backend, Event, Kernel, LaunchError, LaunchQueue, SchedMode, VortexDevice};
 use crate::power;
 
 /// One (warps × threads) point of a benchmark sweep.
@@ -250,6 +250,21 @@ pub fn fig9_pipeline(
     seed: u64,
     jobs: usize,
 ) -> Result<PipelineReport, LaunchError> {
+    fig9_pipeline_sched(configs, stages, n, seed, jobs, SchedMode::Reactive)
+}
+
+/// [`fig9_pipeline`] with an explicit scheduling discipline. The report is
+/// bit-identical in both modes (the queue's determinism contract); the
+/// `--sched` CLI flag exists so the round-synchronous baseline stays
+/// reachable for A/B timing.
+pub fn fig9_pipeline_sched(
+    configs: &[(u32, u32)],
+    stages: usize,
+    n: usize,
+    seed: u64,
+    jobs: usize,
+    sched: SchedMode,
+) -> Result<PipelineReport, LaunchError> {
     assert!(!configs.is_empty(), "pipeline needs at least one config");
     let stages = stages.clamp(1, 12);
     let n = n.max(1);
@@ -257,6 +272,7 @@ pub fn fig9_pipeline(
     let input: Vec<i32> = (0..n).map(|_| rng.range_i32(-8, 9)).collect();
 
     let mut q = LaunchQueue::new(jobs);
+    q.sched_mode = sched;
     let mut ids = Vec::with_capacity(configs.len());
     // identical allocation order on every device ⇒ identical buffer
     // addresses, so a hand-off image lines up on any consumer
@@ -416,6 +432,20 @@ mod tests {
         let final_dst = if (stages - 1) % 2 == 0 { buf_b } else { buf_a };
         let seq_out = devs[prev_dev.unwrap()].mem.read_i32_slice(final_dst, n);
         assert_eq!(seq_out, rep.output, "sequential hand-off replay diverges");
+    }
+
+    #[test]
+    fn pipeline_sched_modes_are_bit_identical() {
+        let configs = [(2u32, 2u32), (4, 4), (2, 8)];
+        let reactive =
+            fig9_pipeline_sched(&configs, 6, 48, 0xFACE, 4, SchedMode::Reactive).unwrap();
+        let round =
+            fig9_pipeline_sched(&configs, 6, 48, 0xFACE, 4, SchedMode::RoundSync).unwrap();
+        assert!(reactive.verified && round.verified);
+        assert_eq!(reactive.output, round.output);
+        for (a, b) in reactive.rows.iter().zip(&round.rows) {
+            assert_eq!((a.cycles, a.exec_seq), (b.cycles, b.exec_seq));
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 pub mod queue;
 
-pub use queue::{DeviceId, Event, LaunchQueue, QueuedResult};
+pub use queue::{DeviceId, Event, LaunchQueue, Occupancy, QueuedResult, SchedMode};
 
 use crate::asm::{assemble, Program};
 use crate::config::MachineConfig;
@@ -71,7 +71,7 @@ pub struct LaunchResult {
 }
 
 /// Launch failure.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub enum LaunchError {
     Asm(crate::asm::AsmError),
     Machine(EmuError),
@@ -211,6 +211,17 @@ pub(crate) fn execute_launch(
             })
         }
     }
+}
+
+/// Assemble `kernel` against `cfg` and discard the image: surfaces
+/// assembly errors at enqueue time without needing `&mut` access to the
+/// target device. The reactive queue uses this when the device itself is
+/// in flight (its program cache is unreachable); the device re-assembles
+/// lazily inside `launch`, hitting its own cache on later launches.
+pub(crate) fn validate_kernel(kernel: &Kernel, cfg: &MachineConfig) -> Result<(), LaunchError> {
+    let src = device_program(&kernel.body, cfg);
+    assemble(&src).map_err(LaunchError::Asm)?;
+    Ok(())
 }
 
 /// An OpenCL-style device wrapping one machine configuration.

@@ -52,21 +52,54 @@
 //!   normally — including later launches pinned to the same device only
 //!   by unrelated explicit waits.
 //!
-//! ## Determinism
+//! ## Scheduling and determinism
 //!
-//! Scheduling runs in deterministic rounds: the ready set is formed in
-//! event order, deferred placements are decided in event order against
-//! the cost model's deterministic history, same-device ready launches
-//! (plus any chain of dependents that wait only on members of the same
-//! slice) execute in event order as one in-order unit, and results commit
-//! in event order. Placement and results are therefore a pure function of
-//! the enqueue sequence — independent of worker count and host timing —
-//! and every launch is **bit-identical** to a sequential
-//! `VortexDevice::launch` replay of the committed schedule: execute the
-//! events in ascending [`QueuedResult::exec_seq`] on their reported
-//! devices, adopting the same highest-dependency images, and every
-//! result, stat and memory image matches (asserted in
-//! `rust/tests/event_graph.rs` and `rust/tests/launch_queue.rs`).
+//! The scheduler is **reactive** ([`SchedMode::Reactive`], the default):
+//! every event retires individually on the worker pool and each
+//! retirement immediately unlocks and dispatches its ready successors —
+//! there is no inter-round barrier, so a long chain on one device never
+//! idles the others. Determinism stays the load-bearing invariant:
+//!
+//! * Results, placements and [`QueuedResult::exec_seq`] are a pure
+//!   function of the enqueue sequence — independent of worker count and
+//!   host timing. `finish` commits events along a deterministic *logical
+//!   ledger* (the order strict dependency-release would produce: initial
+//!   dependency-free events ascending, then each commit appending its
+//!   newly released dependents ascending). Execution runs out of order
+//!   underneath; the ledger only sequences commits, cost-model teaching
+//!   and `exec_seq`.
+//! * Deferred (`enqueue_any`) placements resolve at **ready time** on the
+//!   ledger, against the live cost model plus the outstanding estimates
+//!   of released-but-uncommitted launches. A batch containing deferred
+//!   placements gates owned dispatch on the ledger so the model state
+//!   each placement observes is deterministic; pinned/snapshot-only
+//!   batches (the pipeline shape) dispatch the moment their inputs
+//!   retire.
+//! * Every launch is **bit-identical** to a sequential
+//!   `VortexDevice::launch` replay of the committed schedule: execute the
+//!   events in ascending [`QueuedResult::exec_seq`] on their reported
+//!   devices, adopting the same highest-dependency images, and every
+//!   result, stat and memory image matches (asserted in
+//!   `rust/tests/event_graph.rs` and `rust/tests/launch_queue.rs`).
+//!
+//! [`SchedMode::RoundSync`] keeps the PR-4 level-synchronous scheduler as
+//! an explicit mode for ablation (`benches/ablation_scheduler.rs`).
+//!
+//! ## Streaming submission
+//!
+//! Enqueue is legal while the queue is running. [`LaunchQueue::flush`]
+//! starts executing the graph enqueued so far and returns immediately;
+//! later `enqueue*` calls join the in-flight graph (their wait lists may
+//! name events that already retired — those edges are simply satisfied).
+//! [`LaunchQueue::poll`] harvests newly retired events without blocking,
+//! [`LaunchQueue::wait`] blocks for one event and returns its result as
+//! soon as *that event* retires, and [`LaunchQueue::finish`] becomes
+//! "drain": run whatever is still in flight to completion, retire the
+//! batch, and return every result in enqueue order. In streaming mode
+//! commits follow dispatch order (dispatch reacts to retirements, so
+//! deferred placements may observe host timing); dependent chains and the
+//! sequential-replay contract stay exact. [`LaunchQueue::occupancy`]
+//! reports in-flight and ready depths for the server's `stats` surface.
 //!
 //! ```text
 //! let mut q = LaunchQueue::new(jobs);
@@ -79,14 +112,44 @@
 //! results[e2.0]                           // per-event result + memory
 //! ```
 
-use super::{execute_launch, Backend, Kernel, LaunchError, LaunchResult, VortexDevice};
+use super::{
+    execute_launch, validate_kernel, Backend, Kernel, LaunchError, LaunchResult, VortexDevice,
+};
 use crate::asm::Program;
 use crate::config::{self, MachineConfig};
 use crate::coordinator::pool;
 use crate::mem::Memory;
 use crate::sim::ExecMode;
 use crate::stack::MAX_ARGS;
+use std::collections::VecDeque;
+use std::sync::mpsc;
 use std::sync::Arc;
+
+/// Scheduling discipline for [`LaunchQueue::finish`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Reactive out-of-order scheduler (the default): events retire
+    /// individually and immediately release their successors; streaming
+    /// submission ([`LaunchQueue::flush`] / [`LaunchQueue::poll`] /
+    /// [`LaunchQueue::wait`]) is available.
+    #[default]
+    Reactive,
+    /// PR-4 level-synchronous rounds, kept as an explicit mode for the
+    /// scheduler ablation bench. Streaming calls are rejected (panic) in
+    /// this mode; `finish` behaves exactly as before.
+    RoundSync,
+}
+
+/// Scheduler occupancy snapshot ([`LaunchQueue::occupancy`]): how much
+/// work is in flight on the pool and how much is released but queued
+/// behind busy devices / the worker throttle.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Occupancy {
+    /// Events dispatched to the pool and not yet retired.
+    pub in_flight: usize,
+    /// Events ready to run but waiting for a device or a worker slot.
+    pub ready: usize,
+}
 
 /// Handle of an enqueued launch (a `cl_event` analog): the index of the
 /// launch in the current batch. `finish()` returns results at the same
@@ -142,6 +205,7 @@ struct Node {
 /// [`LaunchQueue::stream_snapshots`] is off), the owned device that ran
 /// it (`None` for snapshot launches), and the launch's position in the
 /// deterministic commit order.
+#[derive(Clone)]
 pub struct QueuedResult {
     pub result: LaunchResult,
     pub mem: Memory,
@@ -218,10 +282,26 @@ pub struct LaunchQueue {
     /// [`LaunchQueue::device`] after `finish`) can set `false` to elide
     /// it entirely; owned-device results then carry an empty `Memory`.
     pub stream_snapshots: bool,
+    /// Scheduling discipline (see [`SchedMode`]).
+    pub sched_mode: SchedMode,
+    /// Seeded random-latency fault injection for the reactive engine:
+    /// `Some((seed, max_ms))` sleeps each launch for a per-event
+    /// pseudo-random delay in `0..max_ms` milliseconds before it runs.
+    /// Test-only hook (`tests/event_graph.rs`): delays must never change
+    /// results, placements or `exec_seq` in `finish` mode.
+    pub fault_latency: Option<(u64, u64)>,
     devices: Vec<VortexDevice>,
     /// Observed cost model per device, indexed like `devices`.
     sched: Vec<DeviceSched>,
-    /// The current batch's event DAG.
+    /// Per-device machine configs (mirror of `devices`): still readable
+    /// while a device itself is in flight inside the reactive engine.
+    configs: Vec<MachineConfig>,
+    /// Reactive engine for the in-flight batch. `Some` between
+    /// [`LaunchQueue::flush`] and [`LaunchQueue::finish`] in streaming
+    /// use; `finish` on an idle queue creates and drains one internally.
+    engine: Option<Engine>,
+    /// The current batch's event DAG (events not yet handed to an
+    /// engine; empty while a streaming engine is active).
     nodes: Vec<Node>,
     /// Last event pinned to each device in the current batch — the
     /// implicit stream predecessor `enqueue_on` waits on.
@@ -232,6 +312,28 @@ pub struct LaunchQueue {
     /// (previous batch, or a foreign queue) apart from a merely unknown
     /// (future) index.
     batch: u64,
+}
+
+/// Estimated cost of `total` work items on device `di` against the
+/// observed cost model: cycles per work item once the device has
+/// completed launches; a device with no history borrows the fleet-wide
+/// average; before any training the raw work-item count is the metric.
+/// Pure integer math — deterministic. (Free function so the reactive
+/// engine, which owns the model while a batch is in flight, shares it
+/// with [`LaunchQueue::cost_estimate`].)
+fn estimate(sched: &[DeviceSched], di: usize, total: u32) -> u64 {
+    let s = &sched[di];
+    if s.total_items > 0 {
+        return ((total as u128 * s.total_cycles as u128) / s.total_items as u128) as u64;
+    }
+    let (cycles, items) = sched.iter().fold((0u128, 0u128), |(c, i), s| {
+        (c + s.total_cycles as u128, i + s.total_items as u128)
+    });
+    if items > 0 {
+        ((total as u128 * cycles) / items) as u64
+    } else {
+        total as u64
+    }
 }
 
 /// Draw a process-unique batch id (shared counter across all queues, so
@@ -266,8 +368,12 @@ impl LaunchQueue {
             jobs,
             exec_mode: ExecMode::default_from_env(),
             stream_snapshots: true,
+            sched_mode: SchedMode::default(),
+            fault_latency: None,
             devices: Vec::new(),
             sched: Vec::new(),
+            configs: Vec::new(),
+            engine: None,
             nodes: Vec::new(),
             last_on_device: Vec::new(),
             batch: next_batch_id(),
@@ -290,18 +396,7 @@ impl LaunchQueue {
     /// count is the metric (exactly the pre-cost-model least-loaded
     /// dispatch). Pure integer math — deterministic.
     fn cost_estimate(&self, di: usize, total: u32) -> u64 {
-        let s = &self.sched[di];
-        if s.total_items > 0 {
-            return ((total as u128 * s.total_cycles as u128) / s.total_items as u128) as u64;
-        }
-        let (cycles, items) = self.sched.iter().fold((0u128, 0u128), |(c, i), s| {
-            (c + s.total_cycles as u128, i + s.total_items as u128)
-        });
-        if items > 0 {
-            ((total as u128 * cycles) / items) as u64
-        } else {
-            total as u64
-        }
+        estimate(&self.sched, di, total)
     }
 
     /// A queue sized to the host's available parallelism.
@@ -313,44 +408,69 @@ impl LaunchQueue {
         self.jobs
     }
 
-    /// Number of events in the current (unfinished) batch.
+    /// Number of events in the current (unfinished) batch, including
+    /// events already in flight in a streaming engine.
     pub fn len(&self) -> usize {
-        self.nodes.len()
+        self.engine.as_ref().map_or(0, |e| e.total()) + self.nodes.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
+        self.len() == 0
     }
 
     /// Total wait-list edges in the current batch (explicit waits plus
     /// the implicit in-order stream edges) — the DAG's edge count,
     /// surfaced by the CLI and the DAG bench section.
     pub fn wait_edges(&self) -> usize {
-        self.nodes.iter().map(|n| n.deps.len()).sum()
+        self.engine.as_ref().map_or(0, |e| e.wait_edges())
+            + self.nodes.iter().map(|n| n.deps.len()).sum::<usize>()
     }
 
     /// Adopt `dev` into the queue's device set (heterogeneous configs
-    /// welcome) and return its id.
+    /// welcome) and return its id. Legal mid-stream: the device joins the
+    /// in-flight engine's fleet.
     pub fn add_device(&mut self, dev: VortexDevice) -> DeviceId {
-        self.devices.push(dev);
-        self.sched.push(DeviceSched::default());
+        self.configs.push(dev.config);
         self.last_on_device.push(None);
-        DeviceId(self.devices.len() - 1)
+        if let Some(eng) = &mut self.engine {
+            eng.add_device(dev);
+            DeviceId(self.configs.len() - 1)
+        } else {
+            self.devices.push(dev);
+            self.sched.push(DeviceSched::default());
+            DeviceId(self.devices.len() - 1)
+        }
     }
 
     /// Number of owned devices.
     pub fn num_devices(&self) -> usize {
-        self.devices.len()
+        self.configs.len()
     }
 
-    /// Borrow an owned device (read buffers back after `finish`).
+    /// Borrow an owned device (read buffers back after `finish`). While a
+    /// streaming batch is in flight the device must be idle — call
+    /// [`LaunchQueue::quiesce`] (or [`LaunchQueue::finish`]) first.
     pub fn device(&self, id: DeviceId) -> &VortexDevice {
-        &self.devices[id.0]
+        match &self.engine {
+            Some(eng) => eng
+                .parked(id.0)
+                .expect("device is in flight — quiesce() or finish() first"),
+            None => &self.devices[id.0],
+        }
     }
 
     /// Mutably borrow an owned device (stage buffers between batches).
+    /// While a streaming batch is in flight this quiesces the engine
+    /// first, so the caller never observes (or mutates) a device that a
+    /// queued launch is still using.
     pub fn device_mut(&mut self, id: DeviceId) -> &mut VortexDevice {
-        &mut self.devices[id.0]
+        if self.engine.is_some() {
+            self.quiesce();
+        }
+        match &mut self.engine {
+            Some(eng) => eng.parked_mut(id.0).expect("engine quiesced"),
+            None => &mut self.devices[id.0],
+        }
     }
 
     /// Validate a wait list against the current batch: every entry must
@@ -362,7 +482,7 @@ impl LaunchQueue {
     /// [`LaunchError::UnknownEvent`]. Returns the deduplicated
     /// dependency list.
     fn check_wait_list(&self, wait_list: &[Event]) -> Result<Vec<usize>, LaunchError> {
-        let n = self.nodes.len();
+        let n = self.len();
         let mut deps = Vec::with_capacity(wait_list.len());
         for e in wait_list {
             if e.1 != self.batch {
@@ -409,7 +529,7 @@ impl LaunchQueue {
     ) -> Result<Event, LaunchError> {
         let deps = self.check_wait_list(wait_list)?;
         let prog = device.stage(kernel, total, args)?;
-        self.nodes.push(Node {
+        Ok(self.push_node(Node {
             deps,
             kind: NodeKind::Snapshot(SnapshotLaunch {
                 config: device.config,
@@ -418,8 +538,21 @@ impl LaunchQueue {
                 backend,
                 warm: device.warm_range(),
             }),
-        });
-        Ok(Event(self.nodes.len() - 1, self.batch))
+        }))
+    }
+
+    /// Append a node to the current batch: into the in-flight engine when
+    /// one is active (streaming submission joins the running graph), else
+    /// into the staging list `finish`/`flush` will consume.
+    fn push_node(&mut self, node: Node) -> Event {
+        let idx = match &mut self.engine {
+            Some(eng) => eng.push_node(node),
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        Event(idx, self.batch)
     }
 
     /// Enqueue a launch pinned to owned device `id`. Sugar over implicit
@@ -457,15 +590,13 @@ impl LaunchQueue {
         if args.len() > MAX_ARGS as usize {
             return Err(LaunchError::TooManyArgs(args.len()));
         }
-        self.devices[id.0].ensure_cached(kernel)?;
+        self.cache_or_validate(id.0, kernel)?;
         if let Some(prev) = self.last_on_device[id.0] {
             if !deps.contains(&prev) {
                 deps.push(prev);
             }
         }
-        let idx = self.nodes.len();
-        self.last_on_device[id.0] = Some(idx);
-        self.nodes.push(Node {
+        let e = self.push_node(Node {
             deps,
             kind: NodeKind::Owned {
                 device: Some(id.0),
@@ -477,7 +608,23 @@ impl LaunchQueue {
                 },
             },
         });
-        Ok(Event(idx, self.batch))
+        self.last_on_device[id.0] = Some(e.0);
+        Ok(e)
+    }
+
+    /// Surface assembly errors at enqueue time: cache the program on the
+    /// device when it is parked, or assemble-and-discard against its
+    /// config when the device itself is in flight inside the engine (it
+    /// re-assembles lazily — and caches — at launch).
+    fn cache_or_validate(&mut self, di: usize, kernel: &Kernel) -> Result<(), LaunchError> {
+        if let Some(eng) = &mut self.engine {
+            match eng.parked_mut(di) {
+                Some(dev) => dev.ensure_cached(kernel),
+                None => validate_kernel(kernel, &self.configs[di]),
+            }
+        } else {
+            self.devices[di].ensure_cached(kernel)
+        }
     }
 
     /// Enqueue a dispatcher-placed launch: the device is chosen at
@@ -510,7 +657,7 @@ impl LaunchQueue {
         backend: Backend,
         wait_list: &[Event],
     ) -> Result<Event, LaunchError> {
-        if self.devices.is_empty() {
+        if self.configs.is_empty() {
             return Err(LaunchError::NoDevice);
         }
         let deps = self.check_wait_list(wait_list)?;
@@ -519,10 +666,10 @@ impl LaunchQueue {
         }
         // Cache the assembly on every device now (placement is deferred),
         // so assembly errors still surface at enqueue time.
-        for dev in &mut self.devices {
-            dev.ensure_cached(kernel)?;
+        for di in 0..self.configs.len() {
+            self.cache_or_validate(di, kernel)?;
         }
-        self.nodes.push(Node {
+        Ok(self.push_node(Node {
             deps,
             kind: NodeKind::Owned {
                 device: None,
@@ -533,20 +680,149 @@ impl LaunchQueue {
                     backend,
                 },
             },
-        });
-        Ok(Event(self.nodes.len() - 1, self.batch))
+        }))
     }
 
-    /// `clFinish`: run the batch's dependency DAG to completion (over up
-    /// to `jobs` host threads of the persistent worker pool) and return
-    /// per-event results in enqueue order. Owned devices' memory advances
-    /// past their launches; the queue is drained and can be reused.
+    /// `clFinish`, now **drain**: run everything enqueued (including an
+    /// in-flight streaming batch) to completion over up to `jobs` pool
+    /// workers and return per-event results in enqueue order. Owned
+    /// devices' memory advances past their launches; the batch retires
+    /// (handles become stale) and the queue can be reused.
     ///
     /// Per-event statuses distinguish root failures (the launch's own
     /// error) from collateral damage ([`LaunchError::Skipped`] with the
-    /// root event index). Scheduling proceeds in deterministic rounds —
-    /// see the module docs for the full determinism contract.
+    /// root event index). See the module docs for the scheduling and
+    /// determinism contract of each [`SchedMode`].
     pub fn finish(&mut self) -> Vec<Result<QueuedResult, LaunchError>> {
+        match self.sched_mode {
+            SchedMode::RoundSync => {
+                assert!(
+                    self.engine.is_none(),
+                    "cannot round-sync drain a streaming batch — finish before switching modes"
+                );
+                self.finish_round_sync()
+            }
+            SchedMode::Reactive => {
+                self.ensure_engine(false);
+                self.drain_engine()
+            }
+        }
+    }
+
+    /// `clFlush`: start executing the graph enqueued so far and return
+    /// immediately. Later `enqueue*` calls join the running graph
+    /// (streaming submission); harvest with [`LaunchQueue::poll`] /
+    /// [`LaunchQueue::wait`], drain with [`LaunchQueue::finish`].
+    /// Requires [`SchedMode::Reactive`].
+    pub fn flush(&mut self) {
+        assert!(
+            self.sched_mode == SchedMode::Reactive,
+            "streaming submission requires SchedMode::Reactive"
+        );
+        self.ensure_engine(true);
+        if let Some(eng) = &mut self.engine {
+            eng.pump_nonblocking();
+        }
+    }
+
+    /// Non-blocking harvest: process any completions that arrived and
+    /// return the events that retired since the last `poll` (in commit
+    /// order). Events returned by [`LaunchQueue::wait`] still show up
+    /// here once — callers tracking per-event completion should dedup.
+    /// Returns an empty list when nothing is in flight.
+    pub fn poll(&mut self) -> Vec<Event> {
+        let batch = self.batch;
+        match &mut self.engine {
+            Some(eng) => {
+                eng.pump_nonblocking();
+                eng.take_retired().into_iter().map(|i| Event(i, batch)).collect()
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// `clWaitForEvents` for one event: block until `e` retires and
+    /// return a copy of its result. Returns as soon as *that event*
+    /// commits — unrelated in-flight work keeps running. Starts the
+    /// graph (an implicit [`LaunchQueue::flush`]) if it is not running
+    /// yet. Results stay stored until [`LaunchQueue::finish`] drains the
+    /// batch, so `finish` still returns every result afterwards.
+    pub fn wait(&mut self, e: Event) -> Result<QueuedResult, LaunchError> {
+        if e.1 != self.batch {
+            return Err(LaunchError::StaleEvent(e.0));
+        }
+        if e.0 >= self.len() {
+            return Err(LaunchError::UnknownEvent(e.0));
+        }
+        self.flush();
+        let eng = self.engine.as_mut().expect("flush started the engine");
+        eng.wait_for(e.0)
+    }
+
+    /// Peek at a retired event's stored result without blocking: `None`
+    /// while the event is still pending (or `e` is stale / nothing is in
+    /// flight).
+    pub fn result(&self, e: Event) -> Option<&Result<QueuedResult, LaunchError>> {
+        if e.1 != self.batch {
+            return None;
+        }
+        self.engine.as_ref().and_then(|eng| eng.result(e.0))
+    }
+
+    /// Scheduler occupancy of the in-flight batch (zeros when idle).
+    pub fn occupancy(&self) -> Occupancy {
+        self.engine.as_ref().map_or(Occupancy::default(), |e| e.occupancy())
+    }
+
+    /// Block until nothing is executing or queued on a device, without
+    /// retiring the batch: results and event handles stay valid and
+    /// streaming can continue. Used before touching owned devices
+    /// mid-stream ([`LaunchQueue::device_mut`]).
+    pub fn quiesce(&mut self) {
+        if let Some(eng) = &mut self.engine {
+            eng.quiesce();
+        }
+    }
+
+    /// Hand the staged batch to a reactive engine if none is active.
+    fn ensure_engine(&mut self, streaming: bool) {
+        if self.engine.is_some() {
+            return;
+        }
+        let nodes = std::mem::take(&mut self.nodes);
+        let devices = std::mem::take(&mut self.devices);
+        let sched = std::mem::take(&mut self.sched);
+        self.engine = Some(Engine::new(
+            nodes,
+            devices,
+            sched,
+            EngineCfg {
+                jobs: self.jobs,
+                exec_mode: self.exec_mode,
+                snapshots_on: self.stream_snapshots,
+                streaming,
+                fault: self.fault_latency,
+            },
+        ));
+    }
+
+    /// Run the active engine to completion, retire the batch, and take
+    /// the devices + cost model back.
+    fn drain_engine(&mut self) -> Vec<Result<QueuedResult, LaunchError>> {
+        let mut eng = self.engine.take().expect("drain follows ensure_engine");
+        let (results, devices, sched) = eng.drain();
+        self.devices = devices;
+        self.sched = sched;
+        for l in &mut self.last_on_device {
+            *l = None;
+        }
+        self.batch = next_batch_id();
+        results
+    }
+
+    /// The PR-4 level-synchronous scheduler ([`SchedMode::RoundSync`]),
+    /// kept verbatim for the round-sync-vs-reactive ablation.
+    fn finish_round_sync(&mut self) -> Vec<Result<QueuedResult, LaunchError>> {
         /// Completion state of an event during scheduling.
         #[derive(Clone, Copy, PartialEq, Eq)]
         enum Done {
@@ -966,6 +1242,720 @@ impl LaunchQueue {
             .into_iter()
             .map(|r| r.expect("every enqueued event produces a result"))
             .collect()
+    }
+}
+
+/// Completion state of an event in the reactive engine's logical layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LogState {
+    Ok,
+    Failed,
+    Skipped,
+}
+
+/// Configuration snapshot handed to an [`Engine`] at creation.
+struct EngineCfg {
+    jobs: usize,
+    exec_mode: ExecMode,
+    snapshots_on: bool,
+    streaming: bool,
+    fault: Option<(u64, u64)>,
+}
+
+/// Execution payload sent back by a pool worker.
+enum ExecOut {
+    /// Owned launch: the result plus the post-launch image when any
+    /// dependent (or `stream_snapshots`) needs it.
+    Owned(Result<(LaunchResult, Option<Memory>), LaunchError>),
+    /// Snapshot launch: the result, the post-run working memory, and the
+    /// committed image when a dependent needs it.
+    Snap(Result<(LaunchResult, Memory, Option<Memory>), LaunchError>),
+}
+
+/// One completion message from the pool back to the coordinator.
+struct Msg {
+    idx: usize,
+    /// An owned launch returns its device to the fleet here.
+    dev: Option<(usize, Box<VortexDevice>)>,
+    out: Result<ExecOut, Box<dyn std::any::Any + Send>>,
+}
+
+/// Deterministic per-event artificial latency in milliseconds for the
+/// fault-injection hook: a SplitMix64-style hash of `(seed, idx)`. The
+/// determinism property suite uses this to prove retirement *timing*
+/// never leaks into results.
+fn fault_delay(fault: Option<(u64, u64)>, idx: usize) -> u64 {
+    match fault {
+        Some((seed, max_ms)) if max_ms > 0 => {
+            let mut z = seed ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            (z ^ (z >> 31)) % max_ms
+        }
+        _ => 0,
+    }
+}
+
+/// The reactive scheduler: a physical dispatch layer that issues work the
+/// moment its inputs physically retire, decoupled from a logical commit
+/// ledger that owns every observable effect (results, `exec_seq`,
+/// deferred placement, cost-model teaching, hand-off images) in a
+/// timing-independent order. See the module docs for the contract.
+struct Engine {
+    jobs: usize,
+    exec_mode: ExecMode,
+    snapshots_on: bool,
+    streaming: bool,
+    /// Classic (non-streaming) batches containing deferred placements
+    /// gate owned dispatch on the ledger so placement reads a
+    /// deterministic cost-model state.
+    strict: bool,
+    fault: Option<(u64, u64)>,
+    started: bool,
+
+    // Graph (parallel arrays; grow via streaming enqueues).
+    deps: Vec<Vec<usize>>,
+    dependents: Vec<Vec<usize>>,
+    kinds: Vec<Option<NodeKind>>,
+    is_owned: Vec<bool>,
+    pinned: Vec<Option<usize>>,
+    placed: Vec<Option<usize>>,
+    work_items: Vec<u32>,
+    want_commit: Vec<bool>,
+
+    // Physical layer: execution readiness and completion.
+    pend_phys: Vec<usize>,
+    phys_resolved: Vec<bool>,
+    /// Root failed event when this event failed or was skip-resolved.
+    phys_root: Vec<Option<usize>>,
+    admitted: Vec<bool>,
+    exec_out: Vec<Option<ExecOut>>,
+
+    // Logical layer: deterministic commit bookkeeping.
+    pend_log: Vec<usize>,
+    state: Vec<Option<LogState>>,
+    skip_root: Vec<usize>,
+    results: Vec<Option<Result<QueuedResult, LaunchError>>>,
+    committed: Vec<Option<Memory>>,
+    live_dependents: Vec<usize>,
+    ledger: VecDeque<usize>,
+    exec_seq: u32,
+    resolved: usize,
+    retired_unreported: Vec<usize>,
+
+    // Devices, dispatch queues, and the live cost model.
+    parked: Vec<Option<VortexDevice>>,
+    dev_fifo: Vec<VecDeque<usize>>,
+    snap_fifo: VecDeque<usize>,
+    sched: Vec<DeviceSched>,
+    outstanding: Vec<u64>,
+    charged: Vec<u64>,
+    running: usize,
+    inflight: usize,
+
+    tx: mpsc::Sender<Msg>,
+    rx: mpsc::Receiver<Msg>,
+}
+
+impl Engine {
+    fn new(
+        nodes: Vec<Node>,
+        devices: Vec<VortexDevice>,
+        sched: Vec<DeviceSched>,
+        cfg: EngineCfg,
+    ) -> Self {
+        let ndev = devices.len();
+        let (tx, rx) = mpsc::channel();
+        let mut eng = Engine {
+            jobs: cfg.jobs.max(1),
+            exec_mode: cfg.exec_mode,
+            snapshots_on: cfg.snapshots_on,
+            streaming: cfg.streaming,
+            strict: false,
+            fault: cfg.fault,
+            started: false,
+            deps: Vec::new(),
+            dependents: Vec::new(),
+            kinds: Vec::new(),
+            is_owned: Vec::new(),
+            pinned: Vec::new(),
+            placed: Vec::new(),
+            work_items: Vec::new(),
+            want_commit: Vec::new(),
+            pend_phys: Vec::new(),
+            phys_resolved: Vec::new(),
+            phys_root: Vec::new(),
+            admitted: Vec::new(),
+            exec_out: Vec::new(),
+            pend_log: Vec::new(),
+            state: Vec::new(),
+            skip_root: Vec::new(),
+            results: Vec::new(),
+            committed: Vec::new(),
+            live_dependents: Vec::new(),
+            ledger: VecDeque::new(),
+            exec_seq: 0,
+            resolved: 0,
+            retired_unreported: Vec::new(),
+            parked: devices.into_iter().map(Some).collect(),
+            dev_fifo: vec![VecDeque::new(); ndev],
+            snap_fifo: VecDeque::new(),
+            sched,
+            outstanding: vec![0; ndev],
+            charged: Vec::new(),
+            running: 0,
+            inflight: 0,
+            tx,
+            rx,
+        };
+        for node in nodes {
+            eng.push_node(node);
+        }
+        eng.start();
+        eng
+    }
+
+    fn total(&self) -> usize {
+        self.deps.len()
+    }
+
+    fn wait_edges(&self) -> usize {
+        self.deps.iter().map(|d| d.len()).sum()
+    }
+
+    fn add_device(&mut self, dev: VortexDevice) {
+        self.parked.push(Some(dev));
+        self.dev_fifo.push(VecDeque::new());
+        self.sched.push(DeviceSched::default());
+        self.outstanding.push(0);
+    }
+
+    fn parked(&self, di: usize) -> Option<&VortexDevice> {
+        self.parked.get(di).and_then(|d| d.as_ref())
+    }
+
+    fn parked_mut(&mut self, di: usize) -> Option<&mut VortexDevice> {
+        self.parked.get_mut(di).and_then(|d| d.as_mut())
+    }
+
+    fn result(&self, idx: usize) -> Option<&Result<QueuedResult, LaunchError>> {
+        self.results.get(idx).and_then(|r| r.as_ref())
+    }
+
+    fn take_retired(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.retired_unreported)
+    }
+
+    fn occupancy(&self) -> Occupancy {
+        Occupancy {
+            in_flight: self.inflight,
+            ready: self.snap_fifo.len() + self.dev_fifo.iter().map(|f| f.len()).sum::<usize>(),
+        }
+    }
+
+    /// Append one event to the (possibly running) graph.
+    fn push_node(&mut self, node: Node) -> usize {
+        let idx = self.deps.len();
+        let mut d = node.deps;
+        d.sort_unstable();
+        let (owned, pin, items) = match &node.kind {
+            NodeKind::Owned { device, launch } => (true, *device, launch.total),
+            NodeKind::Snapshot(_) => (false, None, 0),
+        };
+        for &p in &d {
+            self.dependents[p].push(idx);
+            self.live_dependents[p] += 1;
+        }
+        self.pend_phys.push(d.iter().filter(|&&p| !self.phys_resolved[p]).count());
+        self.pend_log.push(d.iter().filter(|&&p| self.state[p].is_none()).count());
+        self.deps.push(d);
+        self.dependents.push(Vec::new());
+        self.live_dependents.push(0);
+        self.kinds.push(Some(node.kind));
+        self.is_owned.push(owned);
+        self.pinned.push(pin);
+        self.placed.push(None);
+        self.work_items.push(items);
+        self.want_commit.push(false);
+        self.phys_resolved.push(false);
+        self.phys_root.push(None);
+        self.admitted.push(false);
+        self.exec_out.push(None);
+        self.state.push(None);
+        self.skip_root.push(0);
+        self.results.push(None);
+        self.committed.push(None);
+        self.charged.push(0);
+        if self.started {
+            debug_assert!(self.streaming, "classic batches are closed before start");
+            if self.pend_phys[idx] == 0 {
+                self.phys_release(idx);
+                self.drain_dispatch();
+            }
+        }
+        idx
+    }
+
+    /// Flush initial readiness once the whole staged batch is in.
+    fn start(&mut self) {
+        self.started = true;
+        if !self.streaming {
+            self.strict =
+                (0..self.total()).any(|i| self.is_owned[i] && self.pinned[i].is_none());
+            // Logical flush: dep-free events enter the ledger in
+            // ascending enqueue order — the deterministic base order.
+            for i in 0..self.total() {
+                if self.pend_log[i] == 0 && self.state[i].is_none() {
+                    self.logical_release(i);
+                }
+            }
+        }
+        for i in 0..self.total() {
+            if self.pend_phys[i] == 0 && !self.phys_resolved[i] && !self.admitted[i] {
+                self.phys_release(i);
+            }
+        }
+        self.drain_dispatch();
+    }
+
+    /// Mark `i` physically resolved (executed or skip-resolved) and
+    /// cascade readiness to its dependents in ascending index order.
+    fn phys_resolve(&mut self, i: usize, root: Option<usize>) {
+        self.phys_resolved[i] = true;
+        self.phys_root[i] = root;
+        let mut ready = Vec::new();
+        for j in self.dependents[i].clone() {
+            self.pend_phys[j] -= 1;
+            if self.pend_phys[j] == 0 {
+                ready.push(j);
+            }
+        }
+        ready.sort_unstable();
+        for j in ready {
+            if !self.phys_resolved[j] && !self.admitted[j] {
+                self.phys_release(j);
+            }
+        }
+    }
+
+    /// All of `i`'s inputs physically retired: admit it for execution,
+    /// or skip-resolve it if an input failed upstream.
+    fn phys_release(&mut self, i: usize) {
+        let bad = self.deps[i].iter().copied().find(|&d| self.phys_root[d].is_some());
+        if let Some(bad) = bad {
+            let root = self.phys_root[bad].expect("bad dep carries its root");
+            if self.streaming {
+                // Streaming resolves skips at physical release: there is
+                // no pending ledger slot for an event that never runs.
+                self.state[i] = Some(LogState::Skipped);
+                self.skip_root[i] = root;
+                self.results[i] = Some(Err(LaunchError::Skipped(root)));
+                self.kinds[i] = None;
+                self.resolved += 1;
+                self.retired_unreported.push(i);
+            }
+            self.phys_resolve(i, Some(root));
+            return;
+        }
+        if self.is_owned[i] && !self.streaming && self.strict {
+            // Strict classic mode: the ledger admits owned work so that
+            // deferred placement reads deterministic model state.
+            return;
+        }
+        self.admit(i);
+    }
+
+    fn admit(&mut self, i: usize) {
+        debug_assert!(!self.admitted[i], "event admitted twice");
+        self.admitted[i] = true;
+        if self.is_owned[i] {
+            self.dispatch_owned(i);
+        } else {
+            self.dispatch_snap(i);
+        }
+    }
+
+    /// Queue an owned launch on its device, resolving a deferred
+    /// placement against the live cost model if needed.
+    fn dispatch_owned(&mut self, i: usize) {
+        let items = self.work_items[i];
+        let di = match self.placed[i].or(self.pinned[i]) {
+            Some(d) => d,
+            None => (0..self.parked.len())
+                .min_by_key(|&d| {
+                    (self.outstanding[d].saturating_add(estimate(&self.sched, d, items)), d)
+                })
+                .expect("enqueue_any checked the queue owns devices"),
+        };
+        self.placed[i] = Some(di);
+        if self.streaming {
+            // Streaming commits follow dispatch order, and charges the
+            // model at dispatch (classic charges at logical release).
+            let est = estimate(&self.sched, di, items);
+            self.charged[i] = est;
+            self.outstanding[di] = self.outstanding[di].saturating_add(est);
+            self.ledger.push_back(i);
+        }
+        self.dev_fifo[di].push_back(i);
+    }
+
+    fn dispatch_snap(&mut self, i: usize) {
+        if self.streaming {
+            self.ledger.push_back(i);
+        }
+        self.snap_fifo.push_back(i);
+    }
+
+    /// Logical readiness for `i` (classic mode): all inputs logically
+    /// resolved. Skip on a bad input, otherwise place, charge, enter the
+    /// ledger, and (strict) admit.
+    fn logical_release(&mut self, i: usize) {
+        debug_assert!(!self.streaming);
+        debug_assert!(self.state[i].is_none());
+        let bad = self.deps[i].iter().copied().find(|&d| {
+            matches!(self.state[d], Some(LogState::Failed) | Some(LogState::Skipped))
+        });
+        if let Some(d) = bad {
+            let root = if self.state[d] == Some(LogState::Skipped) { self.skip_root[d] } else { d };
+            self.state[i] = Some(LogState::Skipped);
+            self.skip_root[i] = root;
+            self.results[i] = Some(Err(LaunchError::Skipped(root)));
+            self.kinds[i] = None;
+            self.resolved += 1;
+            self.retired_unreported.push(i);
+            for p in self.deps[i].clone() {
+                self.live_dependents[p] -= 1;
+                if self.live_dependents[p] == 0 {
+                    self.committed[p] = None;
+                }
+            }
+            self.cascade_logical(i);
+            return;
+        }
+        if self.is_owned[i] {
+            let items = self.work_items[i];
+            let di = match self.pinned[i] {
+                Some(d) => d,
+                None => (0..self.parked.len())
+                    .min_by_key(|&d| {
+                        (self.outstanding[d].saturating_add(estimate(&self.sched, d, items)), d)
+                    })
+                    .expect("enqueue_any checked the queue owns devices"),
+            };
+            self.placed[i] = Some(di);
+            let est = estimate(&self.sched, di, items);
+            self.charged[i] = est;
+            self.outstanding[di] = self.outstanding[di].saturating_add(est);
+        }
+        self.ledger.push_back(i);
+        if self.is_owned[i] && self.strict {
+            self.admit(i);
+        }
+    }
+
+    /// Propagate a logical resolution of `i` to its dependents, releasing
+    /// newly-ready ones in ascending index order.
+    fn cascade_logical(&mut self, i: usize) {
+        let mut ready = Vec::new();
+        for j in self.dependents[i].clone() {
+            self.pend_log[j] -= 1;
+            if self.pend_log[j] == 0 {
+                ready.push(j);
+            }
+        }
+        ready.sort_unstable();
+        for j in ready {
+            if self.state[j].is_none() {
+                self.logical_release(j);
+            }
+        }
+    }
+
+    /// Spawn queued work onto free pool slots / devices: snapshots first
+    /// (no device constraint), then devices in ascending index order.
+    fn drain_dispatch(&mut self) {
+        loop {
+            if self.running >= self.jobs {
+                return;
+            }
+            if let Some(idx) = self.snap_fifo.pop_front() {
+                self.spawn_snap(idx);
+                continue;
+            }
+            let Some(di) = (0..self.parked.len())
+                .find(|&d| self.parked[d].is_some() && !self.dev_fifo[d].is_empty())
+            else {
+                return;
+            };
+            let idx = self.dev_fifo[di].pop_front().expect("fifo checked non-empty");
+            self.spawn_owned(di, idx);
+        }
+    }
+
+    /// Does any dependent of `idx` need its post-launch image? Mirrors
+    /// the round-sync `want_commit` rule; only sound for classic batches
+    /// whose graph is complete (streaming conservatively keeps images).
+    fn classic_want_commit(&self, idx: usize, di_opt: Option<usize>) -> bool {
+        self.dependents[idx].iter().any(|&j| {
+            self.deps[j].last() == Some(&idx)
+                && self.is_owned[j]
+                && self.pinned[j].map_or(true, |dj| di_opt != Some(dj))
+        })
+    }
+
+    /// The committed image of producer `maxd`, for adoption by a consumer
+    /// on a different device. The producer retired Ok before its consumer
+    /// dispatched, so the image is either committed or still in its
+    /// execution payload.
+    fn producer_image(&self, maxd: usize) -> Memory {
+        if let Some(m) = &self.committed[maxd] {
+            return m.clone();
+        }
+        match self.exec_out[maxd].as_ref() {
+            Some(ExecOut::Owned(Ok((_, img)))) => {
+                img.clone().expect("image kept for its dependents")
+            }
+            Some(ExecOut::Snap(Ok((_, _, img)))) => {
+                img.clone().expect("image kept for its dependents")
+            }
+            _ => unreachable!("failed producers skip their consumers before dispatch"),
+        }
+    }
+
+    fn spawn_owned(&mut self, di: usize, idx: usize) {
+        let Some(NodeKind::Owned { launch, .. }) = self.kinds[idx].take() else {
+            unreachable!("owned node spawned twice");
+        };
+        let adopt = match self.deps[idx].last() {
+            Some(&maxd) => {
+                let src = if self.is_owned[maxd] { self.placed[maxd] } else { None };
+                if src != Some(di) { Some(self.producer_image(maxd)) } else { None }
+            }
+            None => None,
+        };
+        let want = if self.streaming { true } else { self.classic_want_commit(idx, Some(di)) };
+        self.want_commit[idx] = want;
+        let keep = self.snapshots_on || want;
+        let mut dev = Box::new(self.parked[di].take().expect("device free at spawn"));
+        let tx = self.tx.clone();
+        let delay = fault_delay(self.fault, idx);
+        pool::global().spawn(move || {
+            let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if delay > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(delay));
+                }
+                if let Some(img) = adopt {
+                    dev.mem = img;
+                }
+                let res = dev
+                    .launch(&launch.kernel, launch.total, &launch.args, launch.backend)
+                    .map(|result| {
+                        let img = if keep { Some(dev.mem.clone()) } else { None };
+                        (result, img)
+                    });
+                (res, dev)
+            }));
+            let msg = match payload {
+                Ok((res, dev)) => Msg { idx, dev: Some((di, dev)), out: Ok(ExecOut::Owned(res)) },
+                Err(p) => Msg { idx, dev: None, out: Err(p) },
+            };
+            let _ = tx.send(msg);
+        });
+        self.running += 1;
+        self.inflight += 1;
+    }
+
+    fn spawn_snap(&mut self, idx: usize) {
+        let Some(NodeKind::Snapshot(job)) = self.kinds[idx].take() else {
+            unreachable!("snapshot node spawned twice");
+        };
+        let want = if self.streaming { true } else { self.classic_want_commit(idx, None) };
+        self.want_commit[idx] = want;
+        let mode = self.exec_mode;
+        let tx = self.tx.clone();
+        let delay = fault_delay(self.fault, idx);
+        pool::global().spawn(move || {
+            let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if delay > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(delay));
+                }
+                let mut mem = job.mem;
+                match execute_launch(job.config, &mut mem, &job.prog, job.backend, job.warm, mode) {
+                    Ok(result) => {
+                        let img = if want { Some(mem.clone()) } else { None };
+                        Ok((result, mem, img))
+                    }
+                    Err(e) => Err(e),
+                }
+            }));
+            let msg = match payload {
+                Ok(res) => Msg { idx, dev: None, out: Ok(ExecOut::Snap(res)) },
+                Err(p) => Msg { idx, dev: None, out: Err(p) },
+            };
+            let _ = tx.send(msg);
+        });
+        self.running += 1;
+        self.inflight += 1;
+    }
+
+    /// Process one completion message: park the device, record the
+    /// payload, cascade physical readiness, commit ledger heads, and
+    /// refill free pool slots.
+    fn on_msg(&mut self, msg: Msg) {
+        self.running -= 1;
+        if let Some((di, dev)) = msg.dev {
+            self.parked[di] = Some(*dev);
+        }
+        let out = match msg.out {
+            Ok(o) => o,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        let failed = matches!(&out, ExecOut::Owned(Err(_)) | ExecOut::Snap(Err(_)));
+        self.exec_out[msg.idx] = Some(out);
+        self.phys_resolve(msg.idx, if failed { Some(msg.idx) } else { None });
+        self.try_commit();
+        self.drain_dispatch();
+    }
+
+    /// Commit every ledger head whose execution payload has arrived.
+    fn try_commit(&mut self) {
+        while let Some(h) = self.ledger.front().copied() {
+            if self.exec_out[h].is_none() {
+                break;
+            }
+            self.ledger.pop_front();
+            self.commit(h);
+        }
+    }
+
+    /// Retire one executed event in deterministic commit order: assign
+    /// `exec_seq`, teach the cost model, materialise the result memory
+    /// and hand-off image — exactly the round-sync bookkeeping.
+    fn commit(&mut self, idx: usize) {
+        let out = self.exec_out[idx].take().expect("commit follows execution");
+        let seq = self.exec_seq;
+        self.exec_seq += 1;
+        self.inflight -= 1;
+        match out {
+            ExecOut::Snap(res) => match res {
+                Ok((result, mem, img)) => {
+                    self.committed[idx] = img;
+                    self.state[idx] = Some(LogState::Ok);
+                    self.results[idx] =
+                        Some(Ok(QueuedResult { result, mem, device: None, exec_seq: seq }));
+                }
+                Err(e) => {
+                    self.state[idx] = Some(LogState::Failed);
+                    self.results[idx] = Some(Err(e));
+                }
+            },
+            ExecOut::Owned(res) => {
+                let di = self.placed[idx].expect("owned launch was placed at dispatch");
+                self.outstanding[di] = self.outstanding[di].saturating_sub(self.charged[idx]);
+                match res {
+                    Ok((result, img)) => {
+                        if result.cycles > 0 && self.work_items[idx] > 0 {
+                            let s = &mut self.sched[di];
+                            s.total_cycles = s.total_cycles.saturating_add(result.cycles);
+                            s.total_items =
+                                s.total_items.saturating_add(u64::from(self.work_items[idx]));
+                        }
+                        let mem = match (self.snapshots_on, self.want_commit[idx]) {
+                            (true, true) => {
+                                let m = img.clone().expect("image kept when stream_snapshots");
+                                self.committed[idx] = img;
+                                m
+                            }
+                            (true, false) => img.expect("image kept when stream_snapshots"),
+                            (false, true) => {
+                                self.committed[idx] = img;
+                                Memory::new()
+                            }
+                            (false, false) => Memory::new(),
+                        };
+                        self.state[idx] = Some(LogState::Ok);
+                        self.results[idx] = Some(Ok(QueuedResult {
+                            result,
+                            mem,
+                            device: Some(DeviceId(di)),
+                            exec_seq: seq,
+                        }));
+                    }
+                    Err(e) => {
+                        self.state[idx] = Some(LogState::Failed);
+                        self.results[idx] = Some(Err(e));
+                    }
+                }
+            }
+        }
+        self.resolved += 1;
+        self.retired_unreported.push(idx);
+        if !self.streaming {
+            // The committed event adopted at spawn time: its producers'
+            // hand-off images may now be droppable.
+            for p in self.deps[idx].clone() {
+                self.live_dependents[p] -= 1;
+                if self.live_dependents[p] == 0 {
+                    self.committed[p] = None;
+                }
+            }
+            self.cascade_logical(idx);
+        }
+    }
+
+    fn pump_nonblocking(&mut self) {
+        while let Ok(msg) = self.rx.try_recv() {
+            self.on_msg(msg);
+        }
+    }
+
+    /// Block until `idx` retires; a copy of its stored result.
+    fn wait_for(&mut self, idx: usize) -> Result<QueuedResult, LaunchError> {
+        self.pump_nonblocking();
+        while self.results[idx].is_none() {
+            let msg = self.rx.recv().expect("launch worker channel stays open");
+            self.on_msg(msg);
+        }
+        self.results[idx].as_ref().expect("event just retired").clone()
+    }
+
+    /// Block until no launch is executing or queued, without retiring
+    /// the batch: every enqueued event has resolved, results and handles
+    /// stay valid, devices are all parked.
+    fn quiesce(&mut self) {
+        self.pump_nonblocking();
+        while self.running > 0
+            || !self.snap_fifo.is_empty()
+            || self.dev_fifo.iter().any(|f| !f.is_empty())
+        {
+            let msg = self.rx.recv().expect("launch worker channel stays open");
+            self.on_msg(msg);
+        }
+    }
+
+    /// Run to completion and hand back results (enqueue order), the
+    /// device fleet, and the trained cost model.
+    #[allow(clippy::type_complexity)]
+    fn drain(
+        &mut self,
+    ) -> (Vec<Result<QueuedResult, LaunchError>>, Vec<VortexDevice>, Vec<DeviceSched>) {
+        while self.resolved < self.total() {
+            let msg = self.rx.recv().expect("launch worker channel stays open");
+            self.on_msg(msg);
+        }
+        debug_assert_eq!(self.running, 0, "all events resolved implies the pool drained");
+        let results = self
+            .results
+            .drain(..)
+            .map(|r| r.expect("every enqueued event produces a result"))
+            .collect();
+        let devices = self
+            .parked
+            .drain(..)
+            .map(|d| d.expect("every device parked after drain"))
+            .collect();
+        let sched = std::mem::take(&mut self.sched);
+        (results, devices, sched)
     }
 }
 
@@ -1435,5 +2425,181 @@ kernel_body:
         assert!(r0.exec_seq < r1.exec_seq, "wait list orders execution");
         assert_eq!(r0.mem.read_i32_slice(b.addr, n), vec![2, 4, 6, 8]);
         assert_eq!(r1.mem.read_i32_slice(b.addr, n), vec![30, 60, 90, 120]);
+    }
+
+    /// A two-device queue with an `n`-element input buffer staged on
+    /// each; returns the queue plus per-device (in, out) addresses.
+    fn streaming_fixture(n: usize, jobs: usize) -> (LaunchQueue, Vec<(DeviceId, u32, u32)>) {
+        let mut q = LaunchQueue::new(jobs);
+        let mut devs = Vec::new();
+        for (w, t) in [(2u32, 2u32), (4u32, 4u32)] {
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+            let a = dev.create_buffer(n * 4);
+            let b = dev.create_buffer(n * 4);
+            dev.write_buffer_i32(a, &vec![1; n]);
+            dev.write_buffer_i32(b, &vec![0; n]);
+            let id = q.add_device(dev);
+            devs.push((id, a.addr, b.addr));
+        }
+        (q, devs)
+    }
+
+    #[test]
+    fn round_sync_mode_matches_reactive_results() {
+        // The ablation contract: both schedulers produce identical
+        // results, placements and exec_seq on a pinned cross-device DAG.
+        let n = 8usize;
+        let k2 = scale_kernel("mode2", 2);
+        let k3 = scale_kernel("mode3", 3);
+        let run = |mode: SchedMode| {
+            let (mut q, devs) = streaming_fixture(n, 4);
+            q.sched_mode = mode;
+            let (d0, a0, b0) = devs[0];
+            let (d1, a1, b1) = devs[1];
+            let e0 = q.enqueue_on(d0, &k2, n as u32, &[a0, b0], Backend::SimX).unwrap();
+            let e1 = q.enqueue_on(d1, &k3, n as u32, &[a1, b1], Backend::SimX).unwrap();
+            let e2 = q
+                .enqueue_on_after(d0, &k3, n as u32, &[b0, a0], Backend::SimX, &[e1])
+                .unwrap();
+            let _ = (e0, e2);
+            q.finish()
+                .into_iter()
+                .map(|r| {
+                    let r = r.unwrap();
+                    (r.result.cycles, r.device, r.exec_seq, r.mem.read_i32_slice(b0, n))
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(SchedMode::Reactive), run(SchedMode::RoundSync));
+    }
+
+    #[test]
+    fn streaming_enqueues_join_the_running_batch() {
+        let n = 8usize;
+        let k2 = scale_kernel("stream2", 2);
+        let k3 = scale_kernel("stream3", 3);
+        let (mut q, devs) = streaming_fixture(n, 2);
+        let (d0, a0, b0) = devs[0];
+        let (d1, a1, b1) = devs[1];
+        let e0 = q.enqueue_on(d0, &k2, n as u32, &[a0, b0], Backend::SimX).unwrap();
+        q.flush();
+        // enqueue while running: same-device chain + a cross-device
+        // consumer of e0's committed image
+        let e1 = q.enqueue_on(d0, &k3, n as u32, &[b0, a0], Backend::SimX).unwrap();
+        let e2 = q
+            .enqueue_on_after(d1, &k2, n as u32, &[b0, b1], Backend::SimX, &[e0])
+            .unwrap();
+        let _ = q.enqueue_on(d1, &k3, n as u32, &[a1, b1], Backend::SimX).unwrap();
+        assert_eq!(q.len(), 4);
+        let results = q.finish();
+        assert_eq!(results.len(), 4);
+        let r1 = results[e1.0].as_ref().unwrap();
+        let r2 = results[e2.0].as_ref().unwrap();
+        // chain on d0: ones * 2 into b0, then * 3 back into a0
+        assert_eq!(r1.mem.read_i32_slice(a0, n), vec![6; n]);
+        // e2 adopted e0's committed image cross-device: b0 held 2s
+        assert_eq!(r2.mem.read_i32_slice(b1, n), vec![4; n]);
+        let mut seqs: Vec<u32> =
+            results.iter().map(|r| r.as_ref().unwrap().exec_seq).collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        assert_eq!(seqs.len(), 4, "exec_seq stays a total order under streaming");
+    }
+
+    #[test]
+    fn wait_returns_results_mid_stream() {
+        let n = 8usize;
+        let k2 = scale_kernel("wait2", 2);
+        let k3 = scale_kernel("wait3", 3);
+        let (mut q, devs) = streaming_fixture(n, 2);
+        let (d0, a0, b0) = devs[0];
+        let (d1, a1, b1) = devs[1];
+        // a long chain on d1 that wait(e0) must not block on
+        let mut last = q.enqueue_on(d1, &k3, n as u32, &[a1, b1], Backend::SimX).unwrap();
+        for _ in 0..4 {
+            last = q.enqueue_on(d1, &k3, n as u32, &[b1, b1], Backend::SimX).unwrap();
+        }
+        let e0 = q.enqueue_on(d0, &k2, n as u32, &[a0, b0], Backend::SimX).unwrap();
+        // wait() implicitly flushes, returns e0's result as it retires,
+        // and leaves the batch in flight
+        let r0 = q.wait(e0).unwrap();
+        assert_eq!(r0.mem.read_i32_slice(b0, n), vec![2; n]);
+        assert_eq!(r0.device, Some(d0));
+        // the stored result stays readable and the drain still returns it
+        assert!(q.result(e0).is_some());
+        let results = q.finish();
+        assert_eq!(results[e0.0].as_ref().unwrap().result.cycles, r0.result.cycles);
+        assert!(results[last.0].is_ok());
+    }
+
+    #[test]
+    fn poll_harvests_each_retirement_once() {
+        let n = 4usize;
+        let k2 = scale_kernel("poll2", 2);
+        let (mut q, devs) = streaming_fixture(n, 2);
+        let (d0, a0, b0) = devs[0];
+        let (d1, a1, b1) = devs[1];
+        let e0 = q.enqueue_on(d0, &k2, n as u32, &[a0, b0], Backend::SimX).unwrap();
+        let e1 = q.enqueue_on(d1, &k2, n as u32, &[a1, b1], Backend::SimX).unwrap();
+        q.flush();
+        let mut seen = Vec::new();
+        while seen.len() < 2 {
+            for e in q.poll() {
+                assert!(!seen.contains(&e.0), "poll reports each event once");
+                seen.push(e.0);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![e0.0, e1.0]);
+        assert!(q.poll().is_empty(), "nothing left to harvest");
+        // quiesce is idle now; occupancy is drained
+        q.quiesce();
+        assert_eq!(q.occupancy(), Occupancy { in_flight: 0, ready: 0 });
+        for r in q.finish() {
+            r.unwrap();
+        }
+        assert_eq!(q.occupancy(), Occupancy::default());
+    }
+
+    #[test]
+    fn wait_rejects_stale_and_unknown_events() {
+        let n = 4usize;
+        let k2 = scale_kernel("stale2", 2);
+        let (mut q, devs) = streaming_fixture(n, 2);
+        let (d0, a0, b0) = devs[0];
+        let e0 = q.enqueue_on(d0, &k2, n as u32, &[a0, b0], Backend::SimX).unwrap();
+        assert!(matches!(q.wait(q.handle(7)), Err(LaunchError::UnknownEvent(7))));
+        q.finish();
+        // the drained batch's handle is stale, for wait and result alike
+        assert!(matches!(q.wait(e0), Err(LaunchError::StaleEvent(0))));
+        assert!(q.result(e0).is_none());
+    }
+
+    #[test]
+    fn fault_latency_never_changes_classic_results() {
+        // Per-launch artificial delays reorder physical retirements but
+        // must not leak into results, placements or exec_seq.
+        let n = 8usize;
+        let k2 = scale_kernel("fault2", 2);
+        let k3 = scale_kernel("fault3", 3);
+        let run = |fault: Option<(u64, u64)>| {
+            let (mut q, devs) = streaming_fixture(n, 4);
+            q.fault_latency = fault;
+            let (d0, a0, b0) = devs[0];
+            let (d1, a1, b1) = devs[1];
+            let e0 = q.enqueue_on(d0, &k2, n as u32, &[a0, b0], Backend::SimX).unwrap();
+            let e1 = q.enqueue_on(d1, &k3, n as u32, &[a1, b1], Backend::SimX).unwrap();
+            let _ = q
+                .enqueue_any_after(&k2, n as u32, &[b1, a1], Backend::SimX, &[e0, e1])
+                .unwrap();
+            q.finish()
+                .into_iter()
+                .map(|r| {
+                    let r = r.unwrap();
+                    (r.result.cycles, r.device, r.exec_seq)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(None), run(Some((0xFEED, 12))));
     }
 }

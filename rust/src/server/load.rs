@@ -11,6 +11,15 @@
 //! answers; `busy` backpressure is retried after a drain and counted,
 //! never dropped.
 //!
+//! With [`BombardConfig::stream`] the generator switches to the
+//! **streaming scenario**: every request chains two launches into the
+//! session's *open* batch (the second enqueue joins while the first is
+//! already running), harvests both individually with `wait_event`
+//! (never `finish` on the hot path) and reads the chain result back
+//! mid-stream; the batch is only rotated with a `finish` every fourth
+//! request. Verification is unchanged — a drop or a wrong answer under
+//! streaming fails the run just like under batching.
+//!
 //! The report (sustained req/s + p50/p99 latency) feeds the
 //! `server_throughput` section of `benches/sim_hotpath.rs` and the CI
 //! serve/bombard smoke step.
@@ -71,6 +80,9 @@ pub struct BombardConfig {
     pub seed: u64,
     /// Send a `shutdown` frame once every client finished.
     pub shutdown: bool,
+    /// Streaming scenario: enqueue into the running batch and harvest
+    /// per-event with `wait_event` instead of batching on `finish`.
+    pub stream: bool,
 }
 
 impl Default for BombardConfig {
@@ -82,6 +94,7 @@ impl Default for BombardConfig {
             n: 256,
             seed: 0xC0FFEE,
             shutdown: false,
+            stream: false,
         }
     }
 }
@@ -143,11 +156,27 @@ fn try_request(
     dev: Option<u32>,
     chained: bool,
     use_wait_event: bool,
+    stream: bool,
     bufs: (u32, u32, u32),
     expect: (&[i32], &[i32]),
 ) -> Result<(bool, u64), ClientError> {
     let (inp, out, out2) = bufs;
     let (want_single, want_chained) = expect;
+    if stream {
+        // streaming: both launches join the session's open batch (the
+        // second enqueue arrives while the first is already running) and
+        // are harvested individually — no finish on the hot path, the
+        // batch stays open for the next request
+        let e1 = cl.enqueue(kernel, n as u32, &[inp, out], dev, Backend::SimX, &[])?;
+        let e2 = cl.enqueue(kernel, n as u32, &[out, out2], dev, Backend::SimX, &[e1])?;
+        let s1 = cl.wait_event(e1)?;
+        let s2 = cl.wait_event(e2)?;
+        if !(s1.ok && s2.ok) {
+            return Ok((false, 2));
+        }
+        let data = cl.read_result(e2, out2, n as u32)?;
+        return Ok((data == want_chained, 2));
+    }
     if chained {
         let e1 = cl.enqueue(kernel, n as u32, &[inp, out], dev, Backend::SimX, &[])?;
         let e2 = cl.enqueue(kernel, n as u32, &[out, out2], dev, Backend::SimX, &[e1])?;
@@ -242,6 +271,7 @@ fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
                 dev,
                 chained,
                 use_wait_event,
+                cfg.stream,
                 (inp, outb, out2),
                 (want_single.as_slice(), want_chained.as_slice()),
             ) {
@@ -275,6 +305,18 @@ fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
                     break;
                 }
                 out.answered += 1; // server answered, just with an error
+            }
+        }
+        // streaming batches grow until a rotation: drain every fourth
+        // request (everything is already harvested, so this reports
+        // nothing twice — it only retires the batch)
+        if cfg.stream && r % 4 == 3 {
+            if let Err(e) = cl.finish() {
+                fail(&mut out, format!("request {r}: batch rotation: {e}"));
+                if matches!(e, ClientError::Io(_) | ClientError::Protocol(_)) {
+                    out.sent += (cfg.requests - r - 1) as u64;
+                    break;
+                }
             }
         }
     }

@@ -33,6 +33,18 @@ pub struct Metrics {
     /// Enqueued-but-not-yet-finished launches across every session — the
     /// service's queue depth.
     pub in_flight: AtomicU64,
+    /// Launches that joined an already-running graph (streaming
+    /// submission: the enqueue arrived after its session's batch had
+    /// started executing).
+    pub launches_streamed: AtomicU64,
+    /// Scheduler occupancy gauge: events dispatched to the worker pool
+    /// and not yet retired, summed across sessions (each session
+    /// publishes diffs — see `Session::publish_occupancy`).
+    pub sched_in_flight: AtomicU64,
+    /// Scheduler occupancy gauge: events released by their dependencies
+    /// but queued behind a busy device or the worker throttle, summed
+    /// across sessions.
+    pub sched_ready: AtomicU64,
     /// Simulated cycles retired per session-device slot (index = the
     /// device's position in its session's config list; heterogeneous
     /// fleets accumulate per slot across sessions).
@@ -85,6 +97,9 @@ impl Metrics {
             launches_completed: self.launches_completed.load(Ordering::SeqCst),
             launches_failed: self.launches_failed.load(Ordering::SeqCst),
             in_flight: self.in_flight.load(Ordering::SeqCst),
+            launches_streamed: self.launches_streamed.load(Ordering::SeqCst),
+            sched_in_flight: self.sched_in_flight.load(Ordering::SeqCst),
+            sched_ready: self.sched_ready.load(Ordering::SeqCst),
             device_cycles: self.device_cycles.lock().unwrap().clone(),
         }
     }

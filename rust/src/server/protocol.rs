@@ -395,6 +395,15 @@ pub struct StatsReport {
     pub launches_completed: u64,
     pub launches_failed: u64,
     pub in_flight: u64,
+    /// Launches that joined an already-running graph (streaming
+    /// submission).
+    pub launches_streamed: u64,
+    /// Scheduler occupancy: events on the worker pool right now, summed
+    /// across sessions.
+    pub sched_in_flight: u64,
+    /// Scheduler occupancy: dependency-released events queued behind
+    /// busy devices / the worker throttle, summed across sessions.
+    pub sched_ready: u64,
     pub device_cycles: Vec<u64>,
 }
 
@@ -409,6 +418,9 @@ impl StatsReport {
         j.push("launches_completed", self.launches_completed.into());
         j.push("launches_failed", self.launches_failed.into());
         j.push("in_flight", self.in_flight.into());
+        j.push("launches_streamed", self.launches_streamed.into());
+        j.push("sched_in_flight", self.sched_in_flight.into());
+        j.push("sched_ready", self.sched_ready.into());
         j.push(
             "device_cycles",
             Json::Arr(self.device_cycles.iter().map(|&c| c.into()).collect()),
@@ -426,6 +438,9 @@ impl StatsReport {
             launches_completed: u64_field(j, "launches_completed")?,
             launches_failed: u64_field(j, "launches_failed")?,
             in_flight: u64_field(j, "in_flight")?,
+            launches_streamed: u64_field(j, "launches_streamed")?,
+            sched_in_flight: u64_field(j, "sched_in_flight")?,
+            sched_ready: u64_field(j, "sched_ready")?,
             device_cycles: u64_arr(j, "device_cycles")?,
         })
     }
@@ -631,6 +646,9 @@ mod tests {
                     launches_completed: 18,
                     launches_failed: 2,
                     in_flight: 0,
+                    launches_streamed: 7,
+                    sched_in_flight: 3,
+                    sched_ready: 1,
                     device_cycles: vec![100, 2000],
                 },
             },

@@ -11,14 +11,20 @@
 //! and the global in-flight cap ([`Metrics::try_acquire_inflight`])
 //! backpressures the fleet as a whole.
 //!
-//! Sessions run **repeated batches** over the batch-scoped queue: each
-//! `enqueue` joins the current batch, `finish`/`wait_event` drains it,
-//! and the next `enqueue` opens a new one. Session event ids are
-//! monotonic across batches; an id from a finished batch still resolves
-//! for `wait_event`/`read_result`, but naming it in a wait list surfaces
-//! the queue's dedicated [`LaunchError::StaleEvent`] as a `stale_event`
+//! Sessions run **streaming batches** over the batch-scoped queue: each
+//! `enqueue` joins the current batch *and starts executing immediately*
+//! ([`LaunchQueue::flush`] — the simulation runs while the client is
+//! still submitting), `wait_event` on an in-flight id blocks for **that
+//! event only** ([`LaunchQueue::wait`]; unrelated chains keep running
+//! and the batch stays open), and `finish` drains whatever is still
+//! unreported and retires the batch. Session event ids are monotonic
+//! across batches; an id from a finished batch still resolves for
+//! `wait_event`/`read_result`, but naming it in a wait list surfaces the
+//! queue's dedicated [`LaunchError::StaleEvent`] as a `stale_event`
 //! error frame (events are batch-scoped — the ROADMAP "cross-batch
-//! events" follow-up would lift this).
+//! events" follow-up would lift this). Harvesting an event mid-stream
+//! releases its admission slot, so a client can keep a rolling window
+//! of work in flight indefinitely.
 //!
 //! Launch results stay bit-identical to driving the same enqueue
 //! sequence through a [`LaunchQueue`] directly — the session adds no
@@ -130,12 +136,20 @@ pub struct Session {
     buffers: Vec<Buffer>,
     /// Next session-scoped event id.
     next_event: u64,
-    /// Current batch: (wire id, queue event), in enqueue order.
+    /// Unharvested events of the current batch: (wire id, queue event),
+    /// in enqueue order. A mid-stream `wait_event` removes its entry;
+    /// `finish` drains the rest.
     pending: Vec<(u64, Event)>,
+    /// Every wire id of the current (possibly in-flight) batch, in
+    /// enqueue order — the batch-rotation bookkeeping.
+    current_batch: Vec<u64>,
     completed: HashMap<u64, Completed>,
     /// Wire ids of the most recent finished batch (whose memories are
-    /// retained for `read_result`).
+    /// retained for `read_result`, alongside the in-flight batch's).
     last_batch: Vec<u64>,
+    /// Last occupancy this session published into the shared gauges
+    /// (`(in_flight, ready)`); diffs keep the fleet-wide sums exact.
+    published: (u64, u64),
     limits: SessionLimits,
     metrics: Arc<Metrics>,
 }
@@ -179,8 +193,10 @@ impl Session {
             buffers: Vec::new(),
             next_event: 0,
             pending: Vec::new(),
+            current_batch: Vec::new(),
             completed: HashMap::new(),
             last_batch: Vec::new(),
+            published: (0, 0),
             limits,
             metrics,
         })
@@ -372,6 +388,7 @@ impl Session {
                 ),
             );
         }
+        let was_running = self.queue.occupancy().in_flight > 0;
         let enq = match device {
             Some(d) => self.queue.enqueue_on_after(d, &k, total, args, backend, &wait_events),
             None => self.queue.enqueue_any_after(&k, total, args, backend, &wait_events),
@@ -381,9 +398,19 @@ impl Session {
                 let wid = self.next_event;
                 self.next_event += 1;
                 self.pending.push((wid, ev));
+                self.current_batch.push(wid);
                 self.metrics
                     .launches_enqueued
                     .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                // streaming submission: execution starts now, not at
+                // finish — later enqueues join the running graph
+                self.queue.flush();
+                if was_running {
+                    self.metrics
+                        .launches_streamed
+                        .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                }
+                self.publish_occupancy();
                 Response::Enqueued { event: wid }
             }
             Err(e) => {
@@ -393,66 +420,108 @@ impl Session {
         }
     }
 
-    /// `clFinish` the current batch: run the DAG, convert per-event
-    /// outcomes to wire summaries, retain result memories (last batch
-    /// only) and release the admission gauge.
+    /// Convert one retired event's queue result into its wire summary,
+    /// retain it (and its memory image) for `read_result`, and release
+    /// its admission slot — exactly once per event, whether it was
+    /// harvested mid-stream (`wait_event`) or at `finish`.
+    fn harvest(
+        &mut self,
+        wid: u64,
+        qevent: Event,
+        res: Result<crate::pocl::QueuedResult, LaunchError>,
+    ) -> EventSummary {
+        self.metrics.release_inflight(1);
+        let (summary, mem) = match res {
+            Ok(qr) => {
+                self.metrics
+                    .launches_completed
+                    .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if let Some(d) = qr.device {
+                    self.metrics.add_device_cycles(d.0, qr.result.cycles);
+                }
+                (
+                    EventSummary {
+                        event: wid,
+                        ok: true,
+                        cycles: qr.result.cycles,
+                        device: qr.device.map(|d| d.0 as u32),
+                        exec_seq: qr.exec_seq,
+                        error: None,
+                    },
+                    Some(qr.mem),
+                )
+            }
+            Err(e) => {
+                self.metrics
+                    .launches_failed
+                    .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                (
+                    EventSummary {
+                        event: wid,
+                        ok: false,
+                        cycles: 0,
+                        device: None,
+                        exec_seq: 0,
+                        error: Some(e.to_string()),
+                    },
+                    None,
+                )
+            }
+        };
+        self.completed.insert(wid, Completed { summary: summary.clone(), qevent, mem });
+        summary
+    }
+
+    /// Re-publish this session's scheduler occupancy into the shared
+    /// gauges as a diff against what it last published, so the gauges
+    /// stay exact sums across concurrent sessions.
+    fn publish_occupancy(&mut self) {
+        use std::sync::atomic::Ordering;
+        let o = self.queue.occupancy();
+        let (fl, rd) = (o.in_flight as u64, o.ready as u64);
+        let (pf, pr) = self.published;
+        if fl >= pf {
+            self.metrics.sched_in_flight.fetch_add(fl - pf, Ordering::SeqCst);
+        } else {
+            self.metrics.sched_in_flight.fetch_sub(pf - fl, Ordering::SeqCst);
+        }
+        if rd >= pr {
+            self.metrics.sched_ready.fetch_add(rd - pr, Ordering::SeqCst);
+        } else {
+            self.metrics.sched_ready.fetch_sub(pr - rd, Ordering::SeqCst);
+        }
+        self.published = (fl, rd);
+    }
+
+    /// `clFinish` the current batch: drain the in-flight graph, convert
+    /// the outcomes of every event not already reported by a mid-stream
+    /// `wait_event` to wire summaries (in enqueue order), retain result
+    /// memories (this batch + none older) and retire the batch.
     fn drain_batch(&mut self) -> Vec<EventSummary> {
-        let batch = std::mem::take(&mut self.pending);
-        if batch.is_empty() {
+        if self.current_batch.is_empty() {
             return Vec::new();
         }
+        let pending = std::mem::take(&mut self.pending);
         let results = self.queue.finish();
-        debug_assert_eq!(results.len(), batch.len(), "session owns every queue event");
-        self.metrics.release_inflight(batch.len() as u64);
-        // only the most recent batch's memories stay readable
+        debug_assert_eq!(
+            results.len(),
+            self.current_batch.len(),
+            "session owns every queue event"
+        );
+        // the previous finished batch's memories lapse; the batch
+        // retiring now (including events harvested mid-stream) stays
+        // readable until the next finish
         for wid in self.last_batch.drain(..) {
             if let Some(c) = self.completed.get_mut(&wid) {
                 c.mem = None;
             }
         }
-        let mut summaries = Vec::with_capacity(batch.len());
-        for ((wid, ev), res) in batch.into_iter().zip(results) {
-            let (summary, mem) = match res {
-                Ok(qr) => {
-                    self.metrics
-                        .launches_completed
-                        .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                    if let Some(d) = qr.device {
-                        self.metrics.add_device_cycles(d.0, qr.result.cycles);
-                    }
-                    (
-                        EventSummary {
-                            event: wid,
-                            ok: true,
-                            cycles: qr.result.cycles,
-                            device: qr.device.map(|d| d.0 as u32),
-                            exec_seq: qr.exec_seq,
-                            error: None,
-                        },
-                        Some(qr.mem),
-                    )
-                }
-                Err(e) => {
-                    self.metrics
-                        .launches_failed
-                        .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                    (
-                        EventSummary {
-                            event: wid,
-                            ok: false,
-                            cycles: 0,
-                            device: None,
-                            exec_seq: 0,
-                            error: Some(e.to_string()),
-                        },
-                        None,
-                    )
-                }
-            };
-            self.completed.insert(wid, Completed { summary: summary.clone(), qevent: ev, mem });
-            self.last_batch.push(wid);
-            summaries.push(summary);
+        let mut summaries = Vec::with_capacity(pending.len());
+        for (wid, ev) in pending {
+            summaries.push(self.harvest(wid, ev, results[ev.0].clone()));
         }
+        self.last_batch = std::mem::take(&mut self.current_batch);
+        self.publish_occupancy();
         // evict old summaries (ids are monotonic: cutoff by id) — but
         // never any of the batch just reported, even when a session's
         // in-flight cap exceeds COMPLETED_CAP
@@ -465,10 +534,15 @@ impl Session {
     }
 
     fn wait_event(&mut self, event: u64) -> Response {
-        if self.pending.iter().any(|&(w, _)| w == event) {
-            // `clWaitForEvents` semantics over a batch-scoped queue:
-            // waiting on a pending event drains the whole current batch
-            self.drain_batch();
+        if let Some(pos) = self.pending.iter().position(|&(w, _)| w == event) {
+            // `clWaitForEvents` for one event: block until *this* event
+            // retires — the rest of the batch keeps running and stays
+            // open for more streaming enqueues
+            let (wid, qe) = self.pending.remove(pos);
+            let res = self.queue.wait(qe);
+            let summary = self.harvest(wid, qe, res);
+            self.publish_occupancy();
+            return Response::EventStatus { result: summary };
         }
         match self.completed.get(&event) {
             Some(c) => Response::EventStatus { result: c.summary.clone() },
@@ -521,9 +595,13 @@ impl Session {
 
 impl Drop for Session {
     fn drop(&mut self) {
-        // a tenant disconnecting mid-batch releases its admission slots
-        // and its active-session count, whatever state it left behind
+        // a tenant disconnecting mid-batch releases its admission slots,
+        // its published occupancy and its active-session count, whatever
+        // state it left behind
         self.metrics.release_inflight(self.pending.len() as u64);
+        let (pf, pr) = self.published;
+        self.metrics.sched_in_flight.fetch_sub(pf, std::sync::atomic::Ordering::SeqCst);
+        self.metrics.sched_ready.fetch_sub(pr, std::sync::atomic::Ordering::SeqCst);
         self.metrics.sessions_active.fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
     }
 }
@@ -684,6 +762,67 @@ kernel_body:
         assert_eq!(s.metrics.snapshot().in_flight, 0);
         expect_event(s.handle(enq()));
         s.handle(Request::Finish);
+    }
+
+    #[test]
+    fn wait_event_harvests_one_event_and_keeps_the_batch_open() {
+        let mut s = open(SessionLimits::default());
+        s.handle(Request::StageKernel { name: "s3".into(), body: SCALE3_BODY.into() });
+        let a = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        let b = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        s.handle(Request::WriteBuffer { addr: a, data: vec![1, 2, 3, 4] });
+        let enq = |dev: u32, wait: Vec<u64>| Request::Enqueue {
+            kernel: "s3".into(),
+            total: 4,
+            args: vec![a, b],
+            device: Some(dev),
+            backend: Backend::SimX,
+            wait,
+        };
+        let e0 = expect_event(s.handle(enq(0, vec![])));
+        let e1 = expect_event(s.handle(enq(1, vec![])));
+        // waiting on e0 reports e0 only; e1 stays pending and the batch
+        // stays open (its admission slot is released, though)
+        match s.handle(Request::WaitEvent { event: e0 }) {
+            Response::EventStatus { result } => {
+                assert!(result.ok && result.event == e0, "{result:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.pending.len(), 1);
+        assert_eq!(s.metrics.snapshot().in_flight, 1);
+        // e0's result memory is readable mid-stream
+        match s.handle(Request::ReadResult { event: e0, addr: b, count: 4 }) {
+            Response::Data { data } => assert_eq!(data, vec![3, 6, 9, 12]),
+            other => panic!("{other:?}"),
+        }
+        // a streaming enqueue chained on the harvested event still works
+        let e2 = expect_event(s.handle(enq(0, vec![e0])));
+        // finish reports only the events not already harvested
+        let results = match s.handle(Request::Finish) {
+            Response::Finished { results } => results,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(
+            results.iter().map(|r| r.event).collect::<Vec<_>>(),
+            vec![e1, e2]
+        );
+        assert!(results.iter().all(|r| r.ok), "{results:?}");
+        assert_eq!(s.metrics.snapshot().in_flight, 0);
+        assert_eq!(s.metrics.snapshot().sched_in_flight, 0);
+        assert_eq!(s.metrics.snapshot().sched_ready, 0);
+        // harvested-mid-stream e0 belongs to the just-finished batch, so
+        // its memory stays readable after the drain too
+        match s.handle(Request::ReadResult { event: e0, addr: b, count: 4 }) {
+            Response::Data { data } => assert_eq!(data, vec![3, 6, 9, 12]),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

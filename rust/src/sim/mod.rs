@@ -83,14 +83,17 @@ pub enum ChunkPolicy {
     /// Every chunk is exactly `chunk_cycles` long (the PR 1 engine).
     #[default]
     Fixed,
-    /// Start at `chunk_cycles`; while global-barrier traffic is pending
-    /// (arrivals this chunk, or warps still parked) halve toward `min` so
-    /// releases commit promptly, and through barrier-free stretches double
-    /// toward `max` to amortize commits. Barrier-free programs are
-    /// cycle-exact with [`ChunkPolicy::Fixed`] (the final cycle is
-    /// accounted from per-core drain reports, not the chunk grid);
-    /// barrier-dense programs keep the same architectural results and
-    /// release barriers no later.
+    /// Start at `chunk_cycles`; the policy is **predictive**: when a chunk
+    /// commits barrier arrivals, the next chunk jumps straight to the
+    /// observed inter-arrival cadence (clamped to `min..=max`) instead of
+    /// walking down by halving, so release latency tightens in one step.
+    /// Parked warps with no fresh arrivals halve toward `min` (latency
+    /// still matters but there is no cadence to read); barrier-free
+    /// stretches double toward `max` to amortize commits. Barrier-free
+    /// programs are cycle-exact with [`ChunkPolicy::Fixed`] (the final
+    /// cycle is accounted from per-core drain reports, not the chunk
+    /// grid); barrier-dense programs keep the same architectural results
+    /// and release barriers no later.
     Adaptive { min: u64, max: u64 },
 }
 
@@ -493,6 +496,19 @@ impl Simulator {
             }
             arrivals.sort_by_key(|&(cyc, c, seq, ..)| (cyc, c, seq));
             let had_arrivals = !arrivals.is_empty();
+            // Observed barrier cadence in this chunk: the smallest spacing
+            // between consecutive distinct arrival cycles, seeded by the
+            // first arrival's offset from the chunk start. `None` when
+            // every arrival landed on the chunk's first cycle.
+            let mut cadence: Option<u64> = None;
+            let mut prev_arrival = start;
+            for &(cyc, ..) in &arrivals {
+                if cyc > prev_arrival {
+                    let gap = cyc - prev_arrival;
+                    cadence = Some(cadence.map_or(gap, |g: u64| g.min(gap)));
+                    prev_arrival = cyc;
+                }
+            }
             for (_, c, _, id, count, warp) in arrivals {
                 if let Some(parts) =
                     self.global_barriers.arrive(id, count, (c as u32, warp))
@@ -504,12 +520,15 @@ impl Simulator {
             }
             // Adapt the next chunk length from commit-observable barrier
             // traffic only, so the schedule is deterministic and identical
-            // across ExecModes: pending traffic ⇒ shrink (tight release
-            // latency), barrier-free stretch ⇒ grow (amortized commits).
+            // across ExecModes. The arrival stamps make it predictive:
+            // fresh arrivals ⇒ jump straight to the observed cadence (one
+            // step instead of a halving walk); parked-but-quiet ⇒ halve
+            // (latency matters, no cadence to read); barrier-free stretch
+            // ⇒ double (amortized commits).
             if min_chunk != max_chunk {
-                let pending =
-                    had_arrivals || self.cores.iter().any(|c| c.any_barrier_parked());
-                chunk = if pending {
+                chunk = if had_arrivals {
+                    cadence.unwrap_or(min_chunk).clamp(min_chunk, max_chunk)
+                } else if self.cores.iter().any(|c| c.any_barrier_parked()) {
                     (chunk / 2).max(min_chunk)
                 } else {
                     chunk.saturating_mul(2).min(max_chunk)

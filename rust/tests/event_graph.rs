@@ -181,7 +181,21 @@ fn run_queue(
     input: &[i32],
     jobs: usize,
 ) -> (Vec<u64>, Vec<usize>, Vec<u32>, Vec<Vec<i32>>) {
+    run_queue_opts(specs, configs, input, jobs, None)
+}
+
+/// [`run_queue`] with seeded random per-launch latency injected into the
+/// worker pool (`fault = Some((seed, max_ms))`).
+#[allow(clippy::type_complexity)]
+fn run_queue_opts(
+    specs: &[NodeSpec],
+    configs: &[(u32, u32)],
+    input: &[i32],
+    jobs: usize,
+    fault: Option<(u64, u64)>,
+) -> (Vec<u64>, Vec<usize>, Vec<u32>, Vec<Vec<i32>>) {
     let mut q = LaunchQueue::new(jobs);
+    q.fault_latency = fault;
     let mut outs_addr = Vec::new();
     for &(w, t) in configs {
         let (dev, _, outs) = build_device(w, t, input);
@@ -409,4 +423,115 @@ fn wait_list_cycle_surface_is_unrepresentable() {
         .unwrap();
     let results = q.finish();
     assert!(results[e0.0].is_ok() && results[e1.0].is_ok());
+}
+
+/// Expected per-node output vector under the adoption rule: every node
+/// scales the value vector of its highest **full** dependency (or the
+/// raw input for source nodes) by its own factor.
+fn expected_values(specs: &[NodeSpec], ndev: usize, input: &[i32]) -> Vec<Vec<i32>> {
+    let deps = full_deps(specs, ndev);
+    let mut vals: Vec<Vec<i32>> = Vec::with_capacity(specs.len());
+    for (j, s) in specs.iter().enumerate() {
+        let src: Vec<i32> = match deps[j].last() {
+            Some(&m) => vals[m].clone(),
+            None => input.to_vec(),
+        };
+        vals.push(src.iter().map(|x| x * s.factor as i32).collect());
+    }
+    vals
+}
+
+#[test]
+fn seeded_fault_latency_never_changes_results() {
+    // Satellite: artificial per-launch delays (seeded, up to 12 ms) must
+    // never change the committed schedule or its data at any worker
+    // count — the commit ledger, not wall-clock arrival, is authoritative.
+    for seed in [0x77u64, 0x88] {
+        let (specs, configs, input) = random_specs(seed);
+        let base = run_queue(&specs, &configs, &input, 4);
+        for jobs in [1usize, 2, 8] {
+            let faulted = run_queue_opts(&specs, &configs, &input, jobs, Some((seed, 12)));
+            assert_eq!(
+                faulted, base,
+                "seed {seed:#x} jobs {jobs}: fault latency changed committed results"
+            );
+        }
+        // and the committed schedule still replays sequentially,
+        // bit-identically, under the same adoption rule
+        let (cycles, placements, seqs, _) = base;
+        let (ref_cycles, _) = replay(&specs, &configs, &input, &placements, &seqs);
+        assert_eq!(cycles, ref_cycles, "seed {seed:#x}: fault run diverges from replay");
+    }
+}
+
+#[test]
+fn streaming_harvest_matches_classic_finish() {
+    // Out-of-order interleaving property: stream the DAG in (flush while
+    // enqueueing so execution overlaps submission), harvest one event
+    // early with `wait`, sample retirements with `poll`, then drain.
+    // Whatever schedule the reactive engine commits must replay
+    // bit-identically, and every node's data must equal the pure
+    // dataflow expectation.
+    for seed in [0x99u64, 0xAA] {
+        let (specs, configs, input) = random_specs(seed);
+        let ids: Vec<vortex::pocl::DeviceId> =
+            (0..configs.len()).map(vortex::pocl::DeviceId).collect();
+        let mut q = LaunchQueue::new(3);
+        let mut outs_addr = Vec::new();
+        for &(w, t) in &configs {
+            let (dev, _, outs) = build_device(w, t, &input);
+            outs_addr = outs;
+            q.add_device(dev);
+        }
+        let mut events: Vec<Event> = Vec::with_capacity(specs.len());
+        for (j, s) in specs.iter().enumerate() {
+            let wait: Vec<Event> = s.wait.iter().map(|&w| q.handle(w)).collect();
+            let k = scale_kernel(s.factor);
+            let e = match s.device {
+                Some(d) => q
+                    .enqueue_on_after(ids[d], &k, N as u32, &s.args, Backend::SimX, &wait)
+                    .unwrap(),
+                None => q
+                    .enqueue_any_after(&k, N as u32, &s.args, Backend::SimX, &wait)
+                    .unwrap(),
+            };
+            events.push(e);
+            if j % 3 == 2 {
+                q.flush(); // execution is already running while we submit
+            }
+        }
+        // harvest one mid-graph event before the drain
+        let early = q.wait(events[1]).unwrap_or_else(|e| panic!("seed {seed:#x} wait: {e}"));
+        let polled = q.poll();
+        let results = q.finish();
+        assert_eq!(results.len(), specs.len(), "seed {seed:#x}: drain returns the batch");
+        for e in &polled {
+            assert!(results[e.0].is_ok(), "seed {seed:#x}: polled event {} retired ok", e.0);
+        }
+        // the per-event wait returned the same committed record finish reports
+        let r1 = results[1].as_ref().unwrap();
+        assert_eq!(early.exec_seq, r1.exec_seq, "seed {seed:#x}: wait clone diverges");
+        assert_eq!(early.result.cycles, r1.result.cycles, "seed {seed:#x}: wait clone diverges");
+        // every node carries the pure dataflow value in its committed image
+        let vals = expected_values(&specs, configs.len(), &input);
+        let mut cycles = Vec::new();
+        let mut placements = Vec::new();
+        let mut seqs = Vec::new();
+        for (j, e) in events.iter().enumerate() {
+            let qr = results[e.0].as_ref().unwrap_or_else(|err| panic!("event {j}: {err}"));
+            assert_eq!(
+                qr.mem.read_i32_slice(outs_addr[j], N),
+                vals[j],
+                "seed {seed:#x}: node {j} data diverges from dataflow"
+            );
+            cycles.push(qr.result.cycles);
+            placements.push(qr.device.expect("owned launch").0);
+            seqs.push(qr.exec_seq);
+        }
+        // and the streamed commit order still replays bit-identically
+        let (ref_cycles, _) = replay(&specs, &configs, &input, &placements, &seqs);
+        assert_eq!(cycles, ref_cycles, "seed {seed:#x}: streamed run diverges from replay");
+        let occ = q.occupancy();
+        assert_eq!((occ.in_flight, occ.ready), (0, 0), "seed {seed:#x}: queue left busy");
+    }
 }

@@ -316,3 +316,52 @@ fn adaptive_chunking_tightens_global_barrier_release() {
     assert_eq!(mem_par, mem_adapt);
     assert_eq!(tel_par, tel_adapt);
 }
+
+/// Predictive convergence: with a steady barrier cadence the adaptive
+/// policy reads the arrival spacing committed by the previous chunk
+/// (`SliceReport::barriers` carries the cycle stamps) and jumps straight
+/// to it. A halving walk down from the 4096-cycle base would spend more
+/// than 8000 cycles reaching the floor, so the runtime bound below pins
+/// the jump, not just "adaptive beats fixed".
+#[test]
+fn adaptive_chunking_jumps_to_observed_barrier_cadence() {
+    let src = r#"
+        li s0, 8                # rounds
+        round:
+        csrr t0, 0xCC2
+        slli t1, t0, 2
+        li t2, 0x90000600
+        add t1, t1, t2
+        lw t3, 0(t1)
+        addi t3, t3, 1
+        sw t3, 0(t1)            # per-core round counter in memory
+        li t0, 0x80000000
+        li t1, 2
+        bar t0, t1              # global barrier over both cores
+        addi s0, s0, -1
+        bnez s0, round
+        li t0, 0
+        tmc t0
+    "#;
+    let (adapt, tel, mem) =
+        run_chunked(src, 2, ChunkPolicy::adaptive_default(), ExecMode::Serial);
+    let (adapt_par, tel_par, mem_par) =
+        run_chunked(src, 2, ChunkPolicy::adaptive_default(), ExecMode::Parallel);
+    assert_eq!(adapt.status, ExitStatus::Drained);
+    assert_eq!(mem[0], 8, "core 0 must complete all rounds");
+    assert_eq!(mem[1], 8, "core 1 must complete all rounds");
+    // one base chunk discovers the cadence; every later round rides a
+    // floor-sized chunk, so the whole ladder fits well under the cost of
+    // the halving walk alone
+    assert!(
+        adapt.cycles < 6144,
+        "predictive jump missing: {} cycles over {} chunks ({tel:?})",
+        adapt.cycles,
+        tel.chunks
+    );
+    assert_eq!(tel.min_chunk, 64, "sub-floor cadence clamps to min: {tel:?}");
+    // mode-independence holds for the predictive schedule too
+    assert_eq!(adapt_par, adapt);
+    assert_eq!(tel_par, tel);
+    assert_eq!(mem_par, mem);
+}

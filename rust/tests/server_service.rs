@@ -123,6 +123,9 @@ fn rand_response(rng: &mut SplitMix64) -> Response {
                 launches_completed: rand_id(rng),
                 launches_failed: rand_id(rng),
                 in_flight: rand_id(rng),
+                launches_streamed: rand_id(rng),
+                sched_in_flight: rand_id(rng),
+                sched_ready: rand_id(rng),
                 device_cycles: (0..rng.below(4)).map(|_| rand_id(rng)).collect(),
             },
         },
@@ -430,6 +433,7 @@ fn bombard_load_generator_is_clean_against_a_two_device_fleet() {
         n: 32,
         seed: 0xC0FFEE,
         shutdown: true,
+        stream: false,
     });
     assert_eq!(rep.requests_sent, 32);
     assert_eq!(rep.answered, 32, "no request may go unanswered: {:?}", rep.errors);
@@ -441,6 +445,48 @@ fn bombard_load_generator_is_clean_against_a_two_device_fleet() {
     assert_eq!(stats.launches_failed, 0);
     assert_eq!(stats.in_flight, 0);
     server.shutdown(); // idempotent with bombard's shutdown frame
+    server.wait();
+}
+
+#[test]
+fn bombard_streaming_scenario_is_clean() {
+    // the streaming load shape: chains join the open batch while it
+    // runs, harvested per-event via wait_event — zero drops, every
+    // response verified, and the service drains to zero depth
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: FLEET.to_vec(),
+            jobs: 2,
+            max_sessions: 16,
+            limits: SessionLimits::default(),
+            max_line: 1 << 20,
+        },
+    )
+    .unwrap();
+    let rep = run_bombard(&BombardConfig {
+        addr: server.addr().to_string(),
+        clients: 4,
+        requests: 8,
+        n: 32,
+        seed: 0xFEED,
+        shutdown: true,
+        stream: true,
+    });
+    assert_eq!(rep.requests_sent, 32);
+    assert_eq!(rep.answered, 32, "no request may go unanswered: {:?}", rep.errors);
+    assert_eq!(rep.verified, 32, "every response verifies: {:?}", rep.errors);
+    assert!(rep.clean(), "{:?}", rep.errors);
+    let stats = rep.stats.as_ref().expect("stats sampled before shutdown");
+    assert_eq!(stats.launches_failed, 0);
+    assert_eq!(stats.in_flight, 0, "per-event harvest released every slot");
+    assert_eq!(stats.sched_in_flight, 0, "occupancy gauges drained to zero");
+    assert_eq!(stats.sched_ready, 0);
+    assert!(
+        stats.launches_streamed <= stats.launches_enqueued,
+        "streamed is a subset of enqueued: {stats:?}"
+    );
+    server.shutdown();
     server.wait();
 }
 
@@ -528,6 +574,59 @@ fn stale_event_handles_surface_the_dedicated_code_over_the_wire() {
         .enqueue(scale_kernel_name(3), 4, &[b, a], Some(0), Backend::SimX, &[])
         .unwrap();
     assert!(cl.wait_event(e1).unwrap().ok);
+    server.shutdown();
+    drop(cl);
+    server.wait();
+}
+
+#[test]
+fn wait_event_returns_per_event_while_an_unrelated_chain_runs() {
+    // satellite regression for the old wire semantics gap: blocking on
+    // one event used to drain the *whole* batch. Now `wait_event`
+    // returns at that event's retirement and the batch stays open.
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: vec![(2, 2), (4, 4)],
+            jobs: 2,
+            max_sessions: 4,
+            limits: SessionLimits::default(),
+            max_line: 1 << 20,
+        },
+    )
+    .unwrap();
+    let mut cl = Client::connect(&server.addr().to_string()).unwrap();
+    cl.open_session(&[]).unwrap();
+    cl.stage_kernel(scale_kernel_name(2), &scale_kernel_body(2)).unwrap();
+    let a = cl.create_buffer(4096).unwrap();
+    let b = cl.create_buffer(4096).unwrap();
+    cl.write_buffer(a, &vec![1; 1024]).unwrap();
+    let k = scale_kernel_name(2);
+    // a long chain on device 1…
+    let mut tail = cl.enqueue(k, 1024, &[a, b], Some(1), Backend::SimX, &[]).unwrap();
+    for _ in 0..5 {
+        tail = cl.enqueue(k, 1024, &[a, b], Some(1), Backend::SimX, &[tail]).unwrap();
+    }
+    // …and one small unrelated event on device 0
+    let quick = cl.enqueue(k, 4, &[a, b], Some(0), Backend::SimX, &[]).unwrap();
+    // waiting on the quick event reports it alone
+    let s = cl.wait_event(quick).unwrap();
+    assert!(s.ok && s.event == quick, "{s:?}");
+    // the batch is still open: chaining on the tail is legal (the old
+    // batch-draining wait_event would answer stale_event here)
+    let extra = cl.enqueue(k, 1024, &[a, b], Some(1), Backend::SimX, &[tail]).unwrap();
+    let results = cl.finish().unwrap();
+    assert_eq!(results.len(), 7, "chain (6) + extra; quick was already reported");
+    assert!(results.iter().all(|r| r.ok), "{results:?}");
+    assert!(results.iter().all(|r| r.event != quick), "no double report");
+    assert_eq!(results.last().unwrap().event, extra);
+    // stale handles from the drained batch still answer the dedicated code
+    match cl.enqueue(k, 4, &[a, b], Some(0), Backend::SimX, &[quick]) {
+        Err(ClientError::Server { code: ErrorCode::StaleEvent, message }) => {
+            assert!(message.contains("stale"), "{message}");
+        }
+        other => panic!("expected stale_event, got {other:?}"),
+    }
     server.shutdown();
     drop(cl);
     server.wait();
