@@ -379,6 +379,7 @@ fn main() {
         seed: 0xC0FFEE,
         shutdown: true,
         stream: true,
+        fleet: None,
     });
     // idempotent with the shutdown frame: guarantees the drain even if
     // the control connection was refused
@@ -409,6 +410,56 @@ fn main() {
     if let Some(stats) = &rep.stats {
         json.push("server_launches_streamed", stats.launches_streamed.into());
     }
+
+    // --- shared-fleet throughput: tenants contending for ONE fleet ---
+    // Same service, but every client attaches to a single named fleet:
+    // all tenants' launches interleave on the same two devices under
+    // per-tenant page-table protection. Placement is always pinned, so
+    // every tenant's answers are bit-identical to a solo replay, and
+    // `clean()` additionally asserts the run finished with zero
+    // cross-tenant protection faults.
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            fleets: vec![("bench".to_string(), het_cfgs[..2].to_vec())],
+            ..ServeConfig::default()
+        },
+    )
+    .expect("spawn shared-fleet bench server");
+    let rep = run_bombard(&BombardConfig {
+        addr: server.addr().to_string(),
+        clients: bombard_clients,
+        requests: bombard_requests,
+        n: if smoke { 128 } else { 256 },
+        seed: 0xC0FFEE,
+        shutdown: true,
+        stream: false,
+        fleet: Some("bench".to_string()),
+    });
+    server.shutdown();
+    server.wait();
+    assert!(
+        rep.clean(),
+        "shared-fleet bombard must verify every request with zero protection \
+         faults: {:?}",
+        rep.errors
+    );
+    println!(
+        "bench {:<40} {:.2} verified req/s, p50 {:.2?}, p99 {:.2?}",
+        format!("server_shared_fleet_{bombard_clients}tenants"),
+        rep.req_per_sec,
+        rep.p50,
+        rep.p99
+    );
+    println!(
+        "  -> {} tenants x {} requests on 1 shared fleet (2 devices): {} launches, \
+         {} busy-retries\n",
+        bombard_clients, bombard_requests, rep.launches, rep.busy_retries
+    );
+    json.push("server_shared_fleet_requests_per_sec", rep.req_per_sec.into());
+    json.push("server_shared_fleet_p50_ms", (rep.p50.as_secs_f64() * 1e3).into());
+    json.push("server_shared_fleet_p99_ms", (rep.p99.as_secs_f64() * 1e3).into());
+    json.push("server_shared_fleet_launches", rep.launches.into());
 
     // --- machine-readable summary (perf-trajectory contract) ---
     let path = std::env::var("VORTEX_BENCH_JSON")

@@ -13,12 +13,13 @@
 //! vortex serve [--addr H:P] [--configs 2x2,8x8]   # multi-tenant device
 //!              [--jobs N] [--max-sessions N]      # service (line-JSON/TCP)
 //!              [--session-inflight N] [--global-inflight N]
-//!              [--port-file PATH]
+//!              [--port-file PATH]                 # --fleet hosts a named
+//!              [--fleet NAME=2x2,8x8]...          # SHARED tenant fleet
 //! vortex bombard [--addr H:P] [--clients N]       # concurrent load
 //!                [--requests M] [--n SIZE]        # generator (self-hosts
 //!                [--configs 2x2,8x8] [--jobs N]   # a server without
 //!                [--seed S] [--shutdown]          # --addr); --stream
-//!                [--stream]                       # enqueues while running
+//!                [--stream] [--fleet NAME]        # enqueues while running
 //! ```
 
 use super::{config as cfgfile, pool, report::Table, sweep};
@@ -81,6 +82,10 @@ pub enum Command {
         global_inflight: u32,
         /// Write the bound port here once listening (ephemeral-port CI).
         port_file: Option<String>,
+        /// `--fleet NAME=WxT,...` (repeatable): persistent shared fleets
+        /// many tenants attach to by name, isolated per-tenant by
+        /// page-table roots over shared COW frames.
+        fleets: Vec<(String, Vec<(u32, u32)>)>,
     },
     /// Load-generate against a serve instance (self-hosts one on an
     /// ephemeral port when `addr` is `None`).
@@ -96,6 +101,10 @@ pub enum Command {
         /// `--stream`: clients enqueue while the queue is running and
         /// harvest per-event (`wait_event`) instead of batching.
         stream: bool,
+        /// `--fleet NAME`: every client attaches to this shared fleet
+        /// (self-hosted servers host it over `--configs`); the run also
+        /// asserts zero cross-tenant protection faults.
+        fleet: Option<String>,
     },
     List,
     Help,
@@ -244,6 +253,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut session_inflight = 64u32;
             let mut global_inflight = 256u32;
             let mut port_file: Option<String> = None;
+            let mut fleets: Vec<(String, Vec<(u32, u32)>)> = Vec::new();
             let mut i = 1;
             while i < args.len() {
                 match args[i].as_str() {
@@ -266,6 +276,9 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--port-file" => {
                         port_file = Some(take_value(args, &mut i, "--port-file")?.to_string())
                     }
+                    "--fleet" => {
+                        fleets.push(parse_fleet_spec(take_value(args, &mut i, "--fleet")?)?)
+                    }
                     other => return Err(CliError(format!("unknown flag `{other}`"))),
                 }
                 i += 1;
@@ -284,6 +297,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 session_inflight,
                 global_inflight,
                 port_file,
+                fleets,
             })
         }
         "bombard" => {
@@ -296,6 +310,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut seed = 0xC0FFEEu64;
             let mut shutdown = false;
             let mut stream = false;
+            let mut fleet: Option<String> = None;
             let mut i = 1;
             while i < args.len() {
                 match args[i].as_str() {
@@ -312,6 +327,9 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
                     "--shutdown" => shutdown = true,
                     "--stream" => stream = true,
+                    "--fleet" => {
+                        fleet = Some(take_value(args, &mut i, "--fleet")?.to_string())
+                    }
                     other => return Err(CliError(format!("unknown flag `{other}`"))),
                 }
                 i += 1;
@@ -332,6 +350,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 seed,
                 shutdown,
                 stream,
+                fleet,
             })
         }
         "power" => {
@@ -397,6 +416,17 @@ fn parse_config_list(s: &str) -> Result<Vec<(u32, u32)>, CliError> {
     Ok(configs)
 }
 
+/// Parse a `--fleet NAME=WxT[,WxT...]` shared-fleet spec.
+fn parse_fleet_spec(s: &str) -> Result<(String, Vec<(u32, u32)>), CliError> {
+    let (name, cfgs) = s
+        .split_once('=')
+        .ok_or_else(|| CliError(format!("bad fleet `{s}` (expected NAME=WxT,...)")))?;
+    if name.is_empty() {
+        return Err(CliError("fleet name must be non-empty".into()));
+    }
+    Ok((name.to_string(), parse_config_list(cfgs)?))
+}
+
 /// `--sched reactive|round-sync` (the old level-synchronous discipline
 /// stays reachable for A/B timing; results are identical either way).
 fn parse_sched(s: &str) -> Result<SchedMode, CliError> {
@@ -443,15 +473,24 @@ USAGE:
   vortex serve [--addr HOST:PORT] [--configs 2x2,8x8] [--jobs N]
                [--max-sessions N] [--session-inflight N]
                [--global-inflight N] [--port-file PATH]
+               [--fleet NAME=2x2,8x8]...
                                                   multi-tenant device service
                                                   (line-delimited JSON over
                                                   TCP; per-client sessions on
                                                   the event-graph queue;
                                                   explicit busy backpressure;
-                                                  graceful drain on shutdown)
+                                                  graceful drain on shutdown);
+                                                  each --fleet hosts a named
+                                                  SHARED device fleet tenants
+                                                  attach to by name, isolated
+                                                  by per-tenant page-table
+                                                  roots over shared COW frames
+                                                  (cross-tenant access is a
+                                                  deterministic protection
+                                                  error, never corruption)
   vortex bombard [--addr HOST:PORT] [--clients N] [--requests M] [--n SIZE]
                  [--configs 2x2,8x8] [--jobs N] [--seed S] [--shutdown]
-                 [--stream]                       concurrent load generator:
+                 [--stream] [--fleet NAME]        concurrent load generator:
                                                   verifies every response and
                                                   reports req/s + p50/p99
                                                   latency; without --addr it
@@ -459,7 +498,12 @@ USAGE:
                                                   ephemeral port; --stream
                                                   chains enqueues into the
                                                   running queue and harvests
-                                                  per-event via wait_event
+                                                  per-event via wait_event;
+                                                  --fleet attaches every
+                                                  client to the named shared
+                                                  fleet and also asserts zero
+                                                  cross-tenant protection
+                                                  faults
 
   --jobs N   run: N > 1 enables the parallel engine (worker threads =
              min(cores, host threads); bit-identical to serial); sweep/
@@ -619,6 +663,7 @@ pub fn execute(cmd: Command) -> i32 {
             session_inflight,
             global_inflight,
             port_file,
+            fleets,
         } => {
             let jobs = jobs.map_or_else(pool::default_jobs, |j| j as usize);
             let cfg = ServeConfig {
@@ -630,6 +675,7 @@ pub fn execute(cmd: Command) -> i32 {
                     global_inflight: global_inflight as u64,
                     ..SessionLimits::default()
                 },
+                fleets: fleets.clone(),
                 ..ServeConfig::default()
             };
             let srv = match Server::spawn(&addr, cfg) {
@@ -640,14 +686,19 @@ pub fn execute(cmd: Command) -> i32 {
                 }
             };
             let local = srv.addr();
-            let fleet: Vec<String> =
+            let devs: Vec<String> =
                 configs.iter().map(|&(w, t)| format!("{w}x{t}")).collect();
             println!(
-                "vortex serve: listening on {local} — fleet [{}], jobs {jobs}, caps: \
+                "vortex serve: listening on {local} — devices [{}], jobs {jobs}, caps: \
                  {max_sessions} sessions, {session_inflight}/session + \
                  {global_inflight} global in-flight",
-                fleet.join(", ")
+                devs.join(", ")
             );
+            for (name, cfgs) in &fleets {
+                let cfgs: Vec<String> =
+                    cfgs.iter().map(|&(w, t)| format!("{w}x{t}")).collect();
+                println!("shared fleet `{name}`: [{}]", cfgs.join(", "));
+            }
             println!("(line-delimited JSON; send {{\"op\":\"shutdown\"}} to drain)");
             if let Some(pf) = port_file {
                 if let Err(e) = std::fs::write(&pf, format!("{}\n", local.port())) {
@@ -661,12 +712,29 @@ pub fn execute(cmd: Command) -> i32 {
             println!("vortex serve: drained, exiting");
             0
         }
-        Command::Bombard { addr, clients, requests, n, configs, jobs, seed, shutdown, stream } => {
+        Command::Bombard {
+            addr,
+            clients,
+            requests,
+            n,
+            configs,
+            jobs,
+            seed,
+            shutdown,
+            stream,
+            fleet,
+        } => {
             // self-host a server on an ephemeral port unless --addr given
             let (target, local) = match addr {
                 Some(a) => (a, None),
                 None => {
                     let cfg = ServeConfig {
+                        // a self-hosted fleet run hosts the named fleet
+                        // over the --configs devices
+                        fleets: fleet
+                            .as_ref()
+                            .map(|name| vec![(name.clone(), configs.clone())])
+                            .unwrap_or_default(),
                         configs,
                         jobs: jobs.map_or_else(pool::default_jobs, |j| j as usize),
                         ..ServeConfig::default()
@@ -682,8 +750,12 @@ pub fn execute(cmd: Command) -> i32 {
             };
             println!(
                 "bombarding {target}: {clients} client(s) x {requests} request(s), n={n}, \
-                 seed {seed:#x}{}",
-                if stream { ", streaming" } else { "" }
+                 seed {seed:#x}{}{}",
+                if stream { ", streaming" } else { "" },
+                fleet
+                    .as_deref()
+                    .map(|f| format!(", shared fleet `{f}`"))
+                    .unwrap_or_default()
             );
             let rep = crate::server::run_bombard(&BombardConfig {
                 addr: target,
@@ -694,6 +766,7 @@ pub fn execute(cmd: Command) -> i32 {
                 // a self-hosted server always drains at the end
                 shutdown: shutdown || local.is_some(),
                 stream,
+                fleet,
             });
             let dropped = rep.requests_sent - rep.answered;
             println!(
@@ -708,15 +781,23 @@ pub fn execute(cmd: Command) -> i32 {
             if let Some(stats) = &rep.stats {
                 println!(
                     "server: {} session(s) opened, {} accepted, {} busy-rejected, \
-                     {} completed / {} failed launches, {} in-flight, device cycles {:?}",
+                     {} completed / {} failed launches, {} in-flight, \
+                     {} protection fault(s), device cycles {:?}",
                     stats.sessions_opened,
                     stats.requests_accepted,
                     stats.requests_rejected,
                     stats.launches_completed,
                     stats.launches_failed,
                     stats.in_flight,
+                    stats.protection_faults,
                     stats.device_cycles
                 );
+                for f in &stats.fleets {
+                    println!(
+                        "fleet `{}`: {} session(s), {} in-flight, {} ready, {} launches",
+                        f.name, f.sessions, f.in_flight, f.ready, f.launches
+                    );
+                }
             }
             for e in rep.errors.iter().take(8) {
                 eprintln!("anomaly: {e}");
@@ -894,10 +975,12 @@ mod tests {
                 session_inflight: 16,
                 global_inflight: 64,
                 port_file: Some(pf),
+                fleets,
             } => {
                 assert_eq!(addr, "0.0.0.0:7000");
                 assert_eq!(configs, vec![(2, 2), (4, 4)]);
                 assert_eq!(pf, "p.txt");
+                assert!(fleets.is_empty());
             }
             other => panic!("{other:?}"),
         }
@@ -958,6 +1041,40 @@ mod tests {
         assert!(parse(&argv("bombard --requests 0")).is_err());
         assert!(parse(&argv("bombard --n 0")).is_err());
         assert!(parse(&argv("bombard --configs 2y2")).is_err());
+    }
+
+    #[test]
+    fn fleet_flags_parse_on_serve_and_bombard() {
+        // --fleet is repeatable on serve; each spec is NAME=WxT,...
+        match parse(&argv("serve --fleet shared=2x2,8x8 --fleet big=16x16")).unwrap() {
+            Command::Serve { fleets, .. } => {
+                assert_eq!(
+                    fleets,
+                    vec![
+                        ("shared".to_string(), vec![(2, 2), (8, 8)]),
+                        ("big".to_string(), vec![(16, 16)]),
+                    ]
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        // bombard takes a bare fleet name (the self-hosted server hosts
+        // it over --configs)
+        match parse(&argv("bombard --fleet shared --clients 2")).unwrap() {
+            Command::Bombard { fleet: Some(f), clients: 2, .. } => {
+                assert_eq!(f, "shared");
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("bombard")).unwrap() {
+            Command::Bombard { fleet: None, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        // malformed fleet specs are clean errors
+        assert!(parse(&argv("serve --fleet shared")).is_err());
+        assert!(parse(&argv("serve --fleet =2x2")).is_err());
+        assert!(parse(&argv("serve --fleet shared=2y2")).is_err());
+        assert!(parse(&argv("serve --fleet shared=")).is_err());
     }
 
     #[test]

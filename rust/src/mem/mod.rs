@@ -32,6 +32,7 @@
 use crate::asm::Program;
 use std::cell::Cell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// The memory operations instruction semantics need ([`crate::emu::step`]).
@@ -279,7 +280,12 @@ impl MemIo for BufferedMem<'_> {
             }
             return self.base.read_u32(addr);
         }
-        // unaligned: byte-compose through the buffered view
+        // unaligned: span-check once against the base domain (mirrors the
+        // direct path's whole-access suppression), then byte-compose
+        // through the buffered view
+        if !self.base.prot_ok(addr, 4) {
+            return 0;
+        }
         let mut v = 0u32;
         for i in 0..4 {
             v |= (MemIo::read_u8(self, addr.wrapping_add(i)) as u32) << (8 * i);
@@ -288,6 +294,13 @@ impl MemIo for BufferedMem<'_> {
     }
 
     fn write_u32(&mut self, addr: u32, v: u32) {
+        // Denied stores are suppressed *before staging*, so the serialized
+        // commit never carries another tenant's pages a dirty word — and
+        // the buffered engine's image stays bit-identical to the serial
+        // engine's (which suppresses at the same access).
+        if !self.base.prot_ok(addr, 4) {
+            return;
+        }
         if addr & 3 == 0 {
             self.buf.store_word(addr, v);
             return;
@@ -342,6 +355,61 @@ pub struct Memory {
     text_lo: u32,
     text_hi: u32,
     text_gen: u64,
+    /// Per-tenant protection domain over a shared arena window (`None` ⇔
+    /// unprotected — the default, zero-cost path). See [`Protection`].
+    prot: Option<Box<Protection>>,
+}
+
+/// Per-tenant page-table protection for shared device fleets: this root's
+/// view of the arena window `[lo, hi)` only contains the page ranges
+/// granted to it. Simulated accesses (through [`MemIo`], in either
+/// engine) that land inside the window but outside a granted range are
+/// *suppressed* — stores do not land, loads return zero — and counted, so
+/// the launch deterministically fails with a protection fault instead of
+/// silently corrupting (or observing) another tenant's pages. Host-side
+/// bulk transfers ([`Memory::write_block`] and the slice helpers) are not
+/// checked: the serving layer validates buffer ownership before issuing
+/// them.
+///
+/// The fault counter is atomic because the parallel engine's per-core
+/// phases read the shared base image concurrently; suppressed accesses
+/// behave identically in both engines, so fault *presence* (what the
+/// launch outcome keys on) is deterministic.
+#[derive(Debug)]
+struct Protection {
+    lo: u32,
+    hi: u32,
+    /// Granted `[lo, hi)` ranges — sorted, disjoint, merged when adjacent.
+    granted: Vec<(u32, u32)>,
+    faults: AtomicU64,
+}
+
+impl Protection {
+    /// Is `addr` accessible to this root? (Outside the window ⇒ yes.)
+    #[inline]
+    fn allows(&self, addr: u32) -> bool {
+        if addr < self.lo || addr >= self.hi {
+            return true;
+        }
+        match self.granted.binary_search_by(|&(lo, _)| lo.cmp(&addr)) {
+            Ok(_) => true,
+            Err(0) => false,
+            Err(i) => addr < self.granted[i - 1].1,
+        }
+    }
+
+    /// Span check for one access of `len` bytes (`len <= 4`, so the two
+    /// endpoints suffice — grants are page-granular). Counts a fault when
+    /// denied; an access touching *any* protected byte is denied whole,
+    /// in both engines.
+    #[inline]
+    fn check(&self, addr: u32, len: u32) -> bool {
+        let ok = self.allows(addr) && (len <= 1 || self.allows(addr.wrapping_add(len - 1)));
+        if !ok {
+            self.faults.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
 }
 
 impl Default for Memory {
@@ -353,6 +421,7 @@ impl Default for Memory {
             text_lo: 0,
             text_hi: 0,
             text_gen: 0,
+            prot: None,
         }
     }
 }
@@ -360,6 +429,9 @@ impl Default for Memory {
 impl Clone for Memory {
     /// Copy-on-write snapshot: O(top-level directory) `Arc` bumps — page
     /// frames are shared and copied only when either side writes them.
+    /// The protection domain is inherited (a tenant's launch images keep
+    /// its page-table view) with the fault counter reset, so each launch
+    /// reports only its own protection faults.
     fn clone(&self) -> Memory {
         Memory {
             dir: self.dir.clone(),
@@ -368,6 +440,14 @@ impl Clone for Memory {
             text_lo: self.text_lo,
             text_hi: self.text_hi,
             text_gen: self.text_gen,
+            prot: self.prot.as_ref().map(|p| {
+                Box::new(Protection {
+                    lo: p.lo,
+                    hi: p.hi,
+                    granted: p.granted.clone(),
+                    faults: AtomicU64::new(0),
+                })
+            }),
         }
     }
 }
@@ -423,8 +503,76 @@ impl Memory {
         }
     }
 
+    /// Enable per-tenant protection over the arena window `[lo, hi)` with
+    /// an initially empty grant set. Both bounds must be page-aligned
+    /// (grants are page-granular, so a ≤4-byte access can only change
+    /// protection status at a page boundary).
+    pub fn protect(&mut self, lo: u32, hi: u32) {
+        assert!(lo < hi, "protection window must be non-empty");
+        assert!(lo & PAGE_MASK == 0 && hi & PAGE_MASK == 0, "protection window must be page-aligned");
+        self.prot = Some(Box::new(Protection {
+            lo,
+            hi,
+            granted: Vec::new(),
+            faults: AtomicU64::new(0),
+        }));
+    }
+
+    /// Grant this root access to `[addr, addr + len)` inside the protected
+    /// window. Page-aligned, merged into the sorted disjoint grant set.
+    /// Panics if [`Memory::protect`] was never called.
+    pub fn grant(&mut self, addr: u32, len: u32) {
+        let p = self.prot.as_mut().expect("grant() requires protect()");
+        let hi = addr.checked_add(len).expect("grant range overflows the address space");
+        assert!(addr & PAGE_MASK == 0 && hi & PAGE_MASK == 0, "grants are page-granular");
+        let i = p.granted.partition_point(|&(l, _)| l < addr);
+        p.granted.insert(i, (addr, hi));
+        let mut merged: Vec<(u32, u32)> = Vec::with_capacity(p.granted.len());
+        for &(l, h) in p.granted.iter() {
+            match merged.last_mut() {
+                Some(last) if l <= last.1 => last.1 = last.1.max(h),
+                _ => merged.push((l, h)),
+            }
+        }
+        p.granted = merged;
+    }
+
+    /// Whether a protection domain is installed on this root.
+    pub fn protection_enabled(&self) -> bool {
+        self.prot.is_some()
+    }
+
+    /// Protection faults recorded on this image since the last reset
+    /// (0 when unprotected). Each denied ≤4-byte access counts once at the
+    /// level it was suppressed.
+    pub fn protection_faults(&self) -> u64 {
+        self.prot.as_ref().map_or(0, |p| p.faults.load(Ordering::Relaxed))
+    }
+
+    /// Clear the fault counter (shared-reference: the launch path resets
+    /// it on an image already handed to the execution engine).
+    pub fn reset_protection_faults(&self) {
+        if let Some(p) = &self.prot {
+            p.faults.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Access check for one simulated load/store of `len` bytes; counts a
+    /// fault and returns `false` when denied. `pub(crate)` so
+    /// [`BufferedMem`] can consult the base image's domain before staging.
+    #[inline]
+    pub(crate) fn prot_ok(&self, addr: u32, len: u32) -> bool {
+        match &self.prot {
+            None => true,
+            Some(p) => p.check(addr, len),
+        }
+    }
+
     #[inline]
     pub fn read_u8(&self, addr: u32) -> u8 {
+        if !self.prot_ok(addr, 1) {
+            return 0;
+        }
         match self.page(addr) {
             Some(p) => p[(addr & PAGE_MASK) as usize],
             None => 0,
@@ -433,6 +581,9 @@ impl Memory {
 
     #[inline]
     pub fn write_u8(&mut self, addr: u32, v: u8) {
+        if !self.prot_ok(addr, 1) {
+            return;
+        }
         self.touch(addr, 1);
         self.page_mut(addr)[(addr & PAGE_MASK) as usize] = v;
     }
@@ -452,6 +603,9 @@ impl Memory {
 
     #[inline]
     pub fn read_u32(&self, addr: u32) -> u32 {
+        if !self.prot_ok(addr, 4) {
+            return 0;
+        }
         let off = (addr & PAGE_MASK) as usize;
         if off + 4 <= PAGE_SIZE {
             if let Some(p) = self.page(addr) {
@@ -464,6 +618,9 @@ impl Memory {
 
     #[inline]
     pub fn write_u32(&mut self, addr: u32, v: u32) {
+        if !self.prot_ok(addr, 4) {
+            return;
+        }
         let off = (addr & PAGE_MASK) as usize;
         if off + 4 <= PAGE_SIZE {
             self.touch(addr, 4);
@@ -890,5 +1047,91 @@ mod tests {
         assert_eq!(MemIo::pending_word(&bm, 0x300), None);
         // unaligned probes resolve to the containing word
         assert_eq!(MemIo::pending_word(&bm, 0x306), Some(7));
+    }
+
+    const WIN_LO: u32 = 0x9000_0000;
+    const WIN_HI: u32 = 0x9400_0000;
+
+    #[test]
+    fn protection_denies_ungranted_window_access() {
+        let mut m = Memory::new();
+        // plant data through the unchecked host bulk path, then protect
+        m.write_block(WIN_LO, &[0x11, 0x22, 0x33, 0x44]);
+        m.protect(WIN_LO, WIN_HI);
+        assert!(m.protection_enabled());
+        // reads inside the window with no grant are suppressed to zero
+        assert_eq!(m.read_u32(WIN_LO), 0);
+        assert_eq!(m.read_u8(WIN_LO + 1), 0);
+        // stores are suppressed — the page keeps its planted bytes
+        m.write_u32(WIN_LO, 0xDEAD_BEEF);
+        assert_eq!(m.protection_faults(), 3);
+        assert_eq!(m.read_block(WIN_LO, 4), vec![0x11, 0x22, 0x33, 0x44]);
+        // outside the window, access is unrestricted and uncounted
+        m.write_u32(0x7F00_0100, 5);
+        assert_eq!(m.read_u32(0x7F00_0100), 5);
+        assert_eq!(m.read_u32(WIN_HI), 0);
+        assert_eq!(m.protection_faults(), 3);
+        m.reset_protection_faults();
+        assert_eq!(m.protection_faults(), 0);
+    }
+
+    #[test]
+    fn protection_grants_open_exact_page_ranges() {
+        let mut m = Memory::new();
+        m.protect(WIN_LO, WIN_HI);
+        m.grant(WIN_LO, PAGE_SIZE as u32);
+        m.grant(WIN_LO + 2 * PAGE_SIZE as u32, PAGE_SIZE as u32);
+        // granted pages behave normally
+        m.write_u32(WIN_LO + 8, 77);
+        assert_eq!(m.read_u32(WIN_LO + 8), 77);
+        m.write_u32(WIN_LO + 2 * PAGE_SIZE as u32, 88);
+        assert_eq!(m.read_u32(WIN_LO + 2 * PAGE_SIZE as u32), 88);
+        assert_eq!(m.protection_faults(), 0);
+        // the hole between the grants still faults
+        m.write_u32(WIN_LO + PAGE_SIZE as u32, 99);
+        assert_eq!(m.read_u32(WIN_LO + PAGE_SIZE as u32), 0);
+        assert_eq!(m.protection_faults(), 2);
+        // adjacent grant merges and closes the hole
+        m.grant(WIN_LO + PAGE_SIZE as u32, PAGE_SIZE as u32);
+        m.write_u32(WIN_LO + PAGE_SIZE as u32, 99);
+        assert_eq!(m.read_u32(WIN_LO + PAGE_SIZE as u32), 99);
+        assert_eq!(m.protection_faults(), 2);
+    }
+
+    #[test]
+    fn protection_clone_inherits_domain_and_resets_faults() {
+        let mut m = Memory::new();
+        m.protect(WIN_LO, WIN_HI);
+        m.grant(WIN_LO, PAGE_SIZE as u32);
+        m.write_u32(WIN_LO + PAGE_SIZE as u32, 1); // fault on the original
+        assert_eq!(m.protection_faults(), 1);
+        let snap = m.clone();
+        assert!(snap.protection_enabled());
+        assert_eq!(snap.protection_faults(), 0, "clone starts with a clean counter");
+        // the cloned domain still enforces the same window and grants
+        assert_eq!(snap.read_u32(WIN_LO + PAGE_SIZE as u32), 0);
+        assert_eq!(snap.protection_faults(), 1);
+        assert_eq!(m.protection_faults(), 1, "counters are per-image");
+    }
+
+    #[test]
+    fn buffered_stores_to_protected_pages_never_stage() {
+        let mut base = Memory::new();
+        base.write_block(WIN_LO, &7i32.to_le_bytes());
+        base.protect(WIN_LO, WIN_HI);
+        base.grant(WIN_LO + PAGE_SIZE as u32, PAGE_SIZE as u32);
+        let mut buf = StoreBuffer::new();
+        {
+            let mut bm = BufferedMem { base: &base, buf: &mut buf };
+            MemIo::write_u32(&mut bm, WIN_LO, 0xBAD);
+            assert_eq!(MemIo::read_u32(&bm, WIN_LO), 0, "suppressed store is not visible");
+            MemIo::write_u32(&mut bm, WIN_LO + PAGE_SIZE as u32, 5);
+            assert_eq!(MemIo::read_u32(&bm, WIN_LO + PAGE_SIZE as u32), 5);
+        }
+        assert_eq!(buf.staged_words(), 1, "denied store must not reach the buffer");
+        assert_eq!(base.protection_faults(), 2);
+        buf.commit(&mut base);
+        assert_eq!(base.read_block(WIN_LO, 4), 7i32.to_le_bytes());
+        assert_eq!(base.read_u32(WIN_LO + PAGE_SIZE as u32), 5);
     }
 }

@@ -97,6 +97,14 @@ pub enum LaunchError {
     /// the **root** failed event, so callers can tell collateral skips
     /// apart from root failures.
     Skipped(usize),
+    /// The kernel accessed arena pages outside its tenant's page-table
+    /// grants (shared-fleet mode). The offending accesses were suppressed
+    /// — loads read zero, stores never landed, so another tenant's pages
+    /// are unreachable — and the launch is failed deterministically
+    /// instead of silently corrupting. Carries no count: the per-access
+    /// tally is an engine-level diagnostic, the launch outcome is the
+    /// contract.
+    Protection,
 }
 
 impl std::fmt::Display for LaunchError {
@@ -121,6 +129,13 @@ impl std::fmt::Display for LaunchError {
             }
             LaunchError::Skipped(root) => {
                 write!(f, "launch skipped: transitively depends on failed event #{root}")
+            }
+            LaunchError::Protection => {
+                write!(
+                    f,
+                    "memory protection fault: the kernel accessed arena pages outside \
+                     its tenant's grants (accesses were suppressed)"
+                )
             }
         }
     }
@@ -172,10 +187,18 @@ pub(crate) fn execute_launch(
             if let Some((base, len)) = warm {
                 sim.warm_dcache(base, len);
             }
+            // launches account only their own protection faults (staging
+            // and program load happened on this image before the run)
+            sim.mem.reset_protection_faults();
             sim.launch(prog.entry());
             let run = sim.run(u64::MAX);
             let console = String::from_utf8_lossy(&sim.console).into_owned();
             *mem = sim.mem; // device memory persists (even on error)
+            // protection dominates: a kernel that trips the tenant domain
+            // fails the same way whether or not it also exited cleanly
+            if mem.protection_faults() > 0 {
+                return Err(LaunchError::Protection);
+            }
             let res = run.map_err(LaunchError::Machine)?;
             if res.status != ExitStatus::Exited(0) {
                 return Err(LaunchError::BadExit(res.status));
@@ -193,10 +216,14 @@ pub(crate) fn execute_launch(
             let mut emu = Emulator::new(config);
             emu.mem = std::mem::take(mem);
             emu.load(prog);
+            emu.mem.reset_protection_faults();
             emu.launch(prog.entry());
             let run = emu.run(u64::MAX);
             let console = emu.console_string();
             *mem = emu.mem; // device memory persists (even on error)
+            if mem.protection_faults() > 0 {
+                return Err(LaunchError::Protection);
+            }
             let status = run.map_err(LaunchError::Machine)?;
             if status != ExitStatus::Exited(0) {
                 return Err(LaunchError::BadExit(status));

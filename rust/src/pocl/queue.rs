@@ -121,7 +121,7 @@ use crate::coordinator::pool;
 use crate::mem::Memory;
 use crate::sim::ExecMode;
 use crate::stack::MAX_ARGS;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -197,6 +197,57 @@ enum NodeKind {
 struct Node {
     deps: Vec<usize>,
     kind: NodeKind,
+    /// Tenant tag for shared-fleet launches (0 ⇔ untagged — the classic
+    /// single-tenant path). Tenant launches always adopt their producer's
+    /// committed image (even same-device), so a tenant's lineage never
+    /// observes another tenant's device-resident memory; see
+    /// [`LaunchQueue::enqueue_tenant_on_after`].
+    tenant: u64,
+    /// The tenant's root image at enqueue time (COW clone): the memory a
+    /// dependency-free tenant launch starts from, since the shared
+    /// device's resident memory belongs to whichever tenant ran last.
+    base: Option<Memory>,
+}
+
+/// Per-device ready queue with one FIFO lane per tenant and round-robin
+/// pop across lanes: the fair cross-tenant interleave on a shared-fleet
+/// device. With a single lane (every classic, untagged workload) this
+/// degenerates to exactly the plain FIFO it replaced.
+#[derive(Clone, Default)]
+struct TenantFifo {
+    lanes: Vec<(u64, VecDeque<usize>)>,
+    /// Lane the next pop starts scanning from (advances past the lane it
+    /// popped, so a busy tenant cannot starve the others).
+    next: usize,
+}
+
+impl TenantFifo {
+    fn push(&mut self, tenant: u64, idx: usize) {
+        match self.lanes.iter_mut().find(|(t, _)| *t == tenant) {
+            Some((_, q)) => q.push_back(idx),
+            None => self.lanes.push((tenant, VecDeque::from([idx]))),
+        }
+    }
+
+    fn pop(&mut self) -> Option<usize> {
+        let n = self.lanes.len();
+        for k in 0..n {
+            let slot = (self.next + k) % n;
+            if let Some(idx) = self.lanes[slot].1.pop_front() {
+                self.next = (slot + 1) % n;
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    fn len(&self) -> usize {
+        self.lanes.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|(_, q)| q.is_empty())
+    }
 }
 
 /// Result of one queued launch: the launch outcome, the device memory
@@ -306,6 +357,11 @@ pub struct LaunchQueue {
     /// Last event pinned to each device in the current batch — the
     /// implicit stream predecessor `enqueue_on` waits on.
     last_on_device: Vec<Option<usize>>,
+    /// Per-`(device, tenant)` stream predecessors for shared-fleet
+    /// launches: each tenant gets its own in-order stream on a shared
+    /// device, independent of the other tenants' streams (and of the
+    /// untagged `last_on_device` stream).
+    last_tenant_on_device: HashMap<(usize, u64), usize>,
     /// Process-unique id of the current batch, stamped into every
     /// [`Event`] this queue mints. `finish` retires it and draws a fresh
     /// one, which is what lets `check_wait_list` tell a *stale* handle
@@ -376,6 +432,7 @@ impl LaunchQueue {
             engine: None,
             nodes: Vec::new(),
             last_on_device: Vec::new(),
+            last_tenant_on_device: HashMap::new(),
             batch: next_batch_id(),
         }
     }
@@ -538,6 +595,8 @@ impl LaunchQueue {
                 backend,
                 warm: device.warm_range(),
             }),
+            tenant: 0,
+            base: None,
         }))
     }
 
@@ -607,9 +666,123 @@ impl LaunchQueue {
                     backend,
                 },
             },
+            tenant: 0,
+            base: None,
         });
         self.last_on_device[id.0] = Some(e.0);
         Ok(e)
+    }
+
+    /// Tenant-tagged [`LaunchQueue::enqueue_on_after`] for shared device
+    /// fleets. Differences from the untagged form:
+    ///
+    /// * The implicit in-order stream edge is **per `(device, tenant)`**:
+    ///   each tenant runs its own OpenCL-style in-order stream on the
+    ///   shared device, interleaved fairly with the other tenants'
+    ///   streams (see [`TenantFifo`]).
+    /// * A tenant launch **always adopts** its highest-indexed
+    ///   dependency's committed image — even when that producer ran on
+    ///   the same device — and a dependency-free tenant launch starts
+    ///   from `base`, the tenant's root image at enqueue time (a COW
+    ///   clone). The shared device's resident memory (whatever tenant
+    ///   ran last) is therefore never observable: per-tenant results are
+    ///   bit-identical to a solo replay of that tenant's stream on an
+    ///   idle fleet, at any worker count.
+    ///
+    /// `tenant` must be non-zero (0 is the untagged classic path), and
+    /// the queue must be in [`SchedMode::Reactive`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn enqueue_tenant_on_after(
+        &mut self,
+        id: DeviceId,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        backend: Backend,
+        wait_list: &[Event],
+        tenant: u64,
+        base: Memory,
+    ) -> Result<Event, LaunchError> {
+        assert!(tenant != 0, "tenant 0 is reserved for untagged launches");
+        assert!(
+            self.sched_mode == SchedMode::Reactive,
+            "tenant-tagged launches require SchedMode::Reactive"
+        );
+        let mut deps = self.check_wait_list(wait_list)?;
+        if args.len() > MAX_ARGS as usize {
+            return Err(LaunchError::TooManyArgs(args.len()));
+        }
+        self.cache_or_validate(id.0, kernel)?;
+        if let Some(&prev) = self.last_tenant_on_device.get(&(id.0, tenant)) {
+            if !deps.contains(&prev) {
+                deps.push(prev);
+            }
+        }
+        let e = self.push_node(Node {
+            deps,
+            kind: NodeKind::Owned {
+                device: Some(id.0),
+                launch: OwnedLaunch {
+                    kernel: kernel.clone(),
+                    total,
+                    args: args.to_vec(),
+                    backend,
+                },
+            },
+            tenant,
+            base: Some(base),
+        });
+        self.last_tenant_on_device.insert((id.0, tenant), e.0);
+        Ok(e)
+    }
+
+    /// Tenant-tagged [`LaunchQueue::enqueue_any_after`]: deferred
+    /// placement against the shared cost model (a genuinely cross-tenant
+    /// scheduling input — every tenant's completed launches teach it),
+    /// with the adoption semantics of
+    /// [`LaunchQueue::enqueue_tenant_on_after`]. Placement weighs the
+    /// *live* fleet load, so it is contention-dependent by design; pin
+    /// devices where per-tenant placement determinism matters.
+    #[allow(clippy::too_many_arguments)]
+    pub fn enqueue_tenant_any_after(
+        &mut self,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        backend: Backend,
+        wait_list: &[Event],
+        tenant: u64,
+        base: Memory,
+    ) -> Result<Event, LaunchError> {
+        assert!(tenant != 0, "tenant 0 is reserved for untagged launches");
+        assert!(
+            self.sched_mode == SchedMode::Reactive,
+            "tenant-tagged launches require SchedMode::Reactive"
+        );
+        if self.configs.is_empty() {
+            return Err(LaunchError::NoDevice);
+        }
+        let deps = self.check_wait_list(wait_list)?;
+        if args.len() > MAX_ARGS as usize {
+            return Err(LaunchError::TooManyArgs(args.len()));
+        }
+        for di in 0..self.configs.len() {
+            self.cache_or_validate(di, kernel)?;
+        }
+        Ok(self.push_node(Node {
+            deps,
+            kind: NodeKind::Owned {
+                device: None,
+                launch: OwnedLaunch {
+                    kernel: kernel.clone(),
+                    total,
+                    args: args.to_vec(),
+                    backend,
+                },
+            },
+            tenant,
+            base: Some(base),
+        }))
     }
 
     /// Surface assembly errors at enqueue time: cache the program on the
@@ -680,6 +853,8 @@ impl LaunchQueue {
                     backend,
                 },
             },
+            tenant: 0,
+            base: None,
         }))
     }
 
@@ -816,6 +991,7 @@ impl LaunchQueue {
         for l in &mut self.last_on_device {
             *l = None;
         }
+        self.last_tenant_on_device.clear();
         self.batch = next_batch_id();
         results
     }
@@ -835,6 +1011,7 @@ impl LaunchQueue {
         for l in &mut self.last_on_device {
             *l = None;
         }
+        self.last_tenant_on_device.clear();
         // Retire the batch: handles minted so far become stale (detected
         // by id, not index — see `check_wait_list`).
         self.batch = next_batch_id();
@@ -842,6 +1019,12 @@ impl LaunchQueue {
         let mut deps: Vec<Vec<usize>> = Vec::with_capacity(total);
         let mut kinds: Vec<Option<NodeKind>> = Vec::with_capacity(total);
         for n in taken {
+            // Tenant enqueues assert Reactive mode; this guards flipping
+            // the mode after staging tenant nodes.
+            assert!(
+                n.tenant == 0 && n.base.is_none(),
+                "tenant-tagged launches require SchedMode::Reactive"
+            );
             let mut d = n.deps;
             d.sort_unstable();
             deps.push(d);
@@ -1322,6 +1505,11 @@ struct Engine {
     placed: Vec<Option<usize>>,
     work_items: Vec<u32>,
     want_commit: Vec<bool>,
+    /// Tenant tag per event (0 ⇔ untagged).
+    tenant: Vec<u64>,
+    /// Enqueue-time tenant root image — the starting memory of a
+    /// dependency-free tenant launch (taken at spawn; cleared on skip).
+    base: Vec<Option<Memory>>,
 
     // Physical layer: execution readiness and completion.
     pend_phys: Vec<usize>,
@@ -1345,7 +1533,7 @@ struct Engine {
 
     // Devices, dispatch queues, and the live cost model.
     parked: Vec<Option<VortexDevice>>,
-    dev_fifo: Vec<VecDeque<usize>>,
+    dev_fifo: Vec<TenantFifo>,
     snap_fifo: VecDeque<usize>,
     sched: Vec<DeviceSched>,
     outstanding: Vec<u64>,
@@ -1382,6 +1570,8 @@ impl Engine {
             placed: Vec::new(),
             work_items: Vec::new(),
             want_commit: Vec::new(),
+            tenant: Vec::new(),
+            base: Vec::new(),
             pend_phys: Vec::new(),
             phys_resolved: Vec::new(),
             phys_root: Vec::new(),
@@ -1398,7 +1588,7 @@ impl Engine {
             resolved: 0,
             retired_unreported: Vec::new(),
             parked: devices.into_iter().map(Some).collect(),
-            dev_fifo: vec![VecDeque::new(); ndev],
+            dev_fifo: vec![TenantFifo::default(); ndev],
             snap_fifo: VecDeque::new(),
             sched,
             outstanding: vec![0; ndev],
@@ -1425,7 +1615,7 @@ impl Engine {
 
     fn add_device(&mut self, dev: VortexDevice) {
         self.parked.push(Some(dev));
-        self.dev_fifo.push(VecDeque::new());
+        self.dev_fifo.push(TenantFifo::default());
         self.sched.push(DeviceSched::default());
         self.outstanding.push(0);
     }
@@ -1477,6 +1667,8 @@ impl Engine {
         self.placed.push(None);
         self.work_items.push(items);
         self.want_commit.push(false);
+        self.tenant.push(node.tenant);
+        self.base.push(node.base);
         self.phys_resolved.push(false);
         self.phys_root.push(None);
         self.admitted.push(false);
@@ -1551,6 +1743,7 @@ impl Engine {
                 self.skip_root[i] = root;
                 self.results[i] = Some(Err(LaunchError::Skipped(root)));
                 self.kinds[i] = None;
+                self.base[i] = None;
                 self.resolved += 1;
                 self.retired_unreported.push(i);
             }
@@ -1596,7 +1789,7 @@ impl Engine {
             self.outstanding[di] = self.outstanding[di].saturating_add(est);
             self.ledger.push_back(i);
         }
-        self.dev_fifo[di].push_back(i);
+        self.dev_fifo[di].push(self.tenant[i], i);
     }
 
     fn dispatch_snap(&mut self, i: usize) {
@@ -1621,6 +1814,7 @@ impl Engine {
             self.skip_root[i] = root;
             self.results[i] = Some(Err(LaunchError::Skipped(root)));
             self.kinds[i] = None;
+            self.base[i] = None;
             self.resolved += 1;
             self.retired_unreported.push(i);
             for p in self.deps[i].clone() {
@@ -1687,7 +1881,7 @@ impl Engine {
             else {
                 return;
             };
-            let idx = self.dev_fifo[di].pop_front().expect("fifo checked non-empty");
+            let idx = self.dev_fifo[di].pop().expect("fifo checked non-empty");
             self.spawn_owned(di, idx);
         }
     }
@@ -1699,7 +1893,10 @@ impl Engine {
         self.dependents[idx].iter().any(|&j| {
             self.deps[j].last() == Some(&idx)
                 && self.is_owned[j]
-                && self.pinned[j].map_or(true, |dj| di_opt != Some(dj))
+                // tenant consumers adopt even same-device (their lineage
+                // must never observe the shared device's resident memory)
+                && (self.tenant[j] != 0
+                    || self.pinned[j].map_or(true, |dj| di_opt != Some(dj)))
         })
     }
 
@@ -1726,12 +1923,22 @@ impl Engine {
         let Some(NodeKind::Owned { launch, .. }) = self.kinds[idx].take() else {
             unreachable!("owned node spawned twice");
         };
+        let base = self.base[idx].take();
         let adopt = match self.deps[idx].last() {
+            // A tenant launch adopts its producer's committed image even
+            // same-device: the shared device's resident memory is another
+            // tenant's (or stale) state, never part of this lineage.
             Some(&maxd) => {
                 let src = if self.is_owned[maxd] { self.placed[maxd] } else { None };
-                if src != Some(di) { Some(self.producer_image(maxd)) } else { None }
+                if src != Some(di) || self.tenant[idx] != 0 {
+                    Some(self.producer_image(maxd))
+                } else {
+                    None
+                }
             }
-            None => None,
+            // Dependency-free tenant launches start from the tenant's
+            // enqueue-time root image instead of device-resident memory.
+            None => base,
         };
         let want = if self.streaming { true } else { self.classic_want_commit(idx, Some(di)) };
         self.want_commit[idx] = want;
@@ -2601,5 +2808,170 @@ kernel_body:
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(None), run(Some((0xFEED, 12))));
+    }
+
+    // ---- shared-fleet tenant launches ----
+
+    const ARENA_LO: u32 = 0x9000_0000;
+    const ARENA_HI: u32 = 0x9400_0000;
+    const PAGE: u32 = 4096;
+
+    /// A tenant root: protected arena window, one page granted (and
+    /// filled) per `(addr, data)` pair.
+    fn tenant_root(grants: &[(u32, &[i32])]) -> Memory {
+        let mut m = Memory::new();
+        m.protect(ARENA_LO, ARENA_HI);
+        for &(addr, data) in grants {
+            m.grant(addr, PAGE);
+            m.write_i32_slice(addr, data);
+        }
+        m
+    }
+
+    fn fleet_queue(jobs: usize) -> (LaunchQueue, DeviceId, DeviceId) {
+        let mut q = LaunchQueue::new(jobs);
+        let d0 = q.add_device(VortexDevice::new(MachineConfig::with_wt(2, 2)));
+        let d1 = q.add_device(VortexDevice::new(MachineConfig::with_wt(4, 4)));
+        (q, d0, d1)
+    }
+
+    #[test]
+    fn tenant_fifo_round_robins_lanes_and_degenerates_to_fifo() {
+        // single lane: exact FIFO (the classic untagged path)
+        let mut f = TenantFifo::default();
+        for i in 0..4 {
+            f.push(0, i);
+        }
+        assert_eq!(f.len(), 4);
+        assert_eq!((0..4).map_while(|_| f.pop()).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(f.is_empty() && f.pop().is_none());
+        // two lanes: strict alternation, and a drained lane is skipped
+        let mut f = TenantFifo::default();
+        f.push(1, 10);
+        f.push(1, 11);
+        f.push(2, 20);
+        f.push(1, 12);
+        let order: Vec<usize> = std::iter::from_fn(|| f.pop()).collect();
+        assert_eq!(order, vec![10, 20, 11, 12]);
+    }
+
+    #[test]
+    fn tenant_streams_interleave_and_match_solo_replay() {
+        // Two tenants share two devices; each tenant's chain crosses both
+        // devices. Per-tenant results (cycles + data) must be
+        // bit-identical to a solo replay of that tenant alone on a fresh
+        // identical fleet, at every worker count.
+        let n = 8usize;
+        let input: Vec<i32> = (0..n as i32).map(|x| x + 1).collect();
+        let (a1, b1) = (ARENA_LO, ARENA_LO + PAGE);
+        let (a2, b2) = (ARENA_LO + 2 * PAGE, ARENA_LO + 3 * PAGE);
+        let k1 = scale_kernel("tenant1_scale3", 3);
+        let k2 = scale_kernel("tenant2_scale5", 5);
+
+        // one tenant's two-launch cross-device chain; returns (cycles,
+        // final data) per launch
+        type Chain = Vec<(u64, Vec<i32>)>;
+        let chain = |q: &mut LaunchQueue,
+                     t: u64,
+                     k: &Kernel,
+                     (a, b): (u32, u32),
+                     (df, ds): (DeviceId, DeviceId),
+                     root: &Memory|
+         -> Vec<Event> {
+            let e0 = q
+                .enqueue_tenant_on_after(df, k, n as u32, &[a, b], Backend::SimX, &[], t, root.clone())
+                .unwrap();
+            let e1 = q
+                .enqueue_tenant_on_after(ds, k, n as u32, &[b, a], Backend::SimX, &[e0], t, root.clone())
+                .unwrap();
+            vec![e0, e1]
+        };
+        let observe = |results: &[Result<QueuedResult, LaunchError>], evs: &[Event], buf: &[u32]| -> Chain {
+            evs.iter()
+                .zip(buf)
+                .map(|(e, &addr)| {
+                    let r = results[e.0].as_ref().unwrap();
+                    (r.result.cycles, r.mem.read_i32_slice(addr, n))
+                })
+                .collect()
+        };
+
+        let solo = |jobs: usize, t: u64, k: &Kernel, bufs: (u32, u32), devs_swapped: bool| -> Chain {
+            let (mut q, d0, d1) = fleet_queue(jobs);
+            let root = tenant_root(&[(bufs.0, &input)]);
+            let order = if devs_swapped { (d1, d0) } else { (d0, d1) };
+            let evs = chain(&mut q, t, k, bufs, order, &root);
+            let results = q.finish();
+            observe(&results, &evs, &[bufs.1, bufs.0])
+        };
+
+        let mut reference: Option<(Chain, Chain)> = None;
+        for jobs in [1usize, 2, 4] {
+            let (mut q, d0, d1) = fleet_queue(jobs);
+            let root1 = tenant_root(&[(a1, &input)]);
+            let root2 = tenant_root(&[(a2, &input)]);
+            // interleaved enqueues, opposite device orders → both devices
+            // carry both tenants
+            let t1 = chain(&mut q, 1, &k1, (a1, b1), (d0, d1), &root1);
+            let t2 = chain(&mut q, 2, &k2, (a2, b2), (d1, d0), &root2);
+            let results = q.finish();
+            let o1 = observe(&results, &t1, &[b1, a1]);
+            let o2 = observe(&results, &t2, &[b2, a2]);
+            // data: chain applies the factor twice
+            assert_eq!(o1[1].1, input.iter().map(|x| 9 * x).collect::<Vec<_>>());
+            assert_eq!(o2[1].1, input.iter().map(|x| 25 * x).collect::<Vec<_>>());
+            // isolation: tenant 1's image cannot see tenant 2's pages
+            let r = results[t1[1].0].as_ref().unwrap();
+            assert_eq!(r.mem.read_i32_slice(a2, n), vec![0; n]);
+            // per-tenant shared-run results ≡ solo replay, any worker count
+            assert_eq!(o1, solo(jobs, 1, &k1, (a1, b1), false));
+            assert_eq!(o2, solo(jobs, 2, &k2, (a2, b2), true));
+            match &reference {
+                None => reference = Some((o1, o2)),
+                Some((r1, r2)) => {
+                    assert_eq!((&o1, &o2), (r1, r2), "worker count leaked into results");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tenant_cross_access_is_a_deterministic_protection_fault() {
+        // Tenant 2 passes tenant 1's buffer as its output: the stores are
+        // suppressed (tenant 1's page survives untouched) and the launch
+        // fails with LaunchError::Protection; tenant 2's dependent is
+        // skipped; tenant 1 is unaffected. Same outcome on every run.
+        let n = 8usize;
+        let input = vec![7i32; n];
+        let (a1, b1) = (ARENA_LO, ARENA_LO + PAGE);
+        let a2 = ARENA_LO + 2 * PAGE;
+        let k1 = scale_kernel("prot_t1_scale3", 3);
+        let k2 = scale_kernel("prot_t2_scale5", 5);
+        for _ in 0..2 {
+            let (mut q, d0, _d1) = fleet_queue(2);
+            let root1 = tenant_root(&[(a1, &input), (b1, &[0; 8])]);
+            let root2 = tenant_root(&[(a2, &input)]);
+            let bad = q
+                .enqueue_tenant_on_after(
+                    d0, &k2, n as u32, &[a2, b1], Backend::SimX, &[], 2, root2.clone(),
+                )
+                .unwrap();
+            // same tenant, same device: implicit stream edge → skipped
+            let collateral = q
+                .enqueue_tenant_on_after(
+                    d0, &k2, n as u32, &[a2, a2], Backend::SimX, &[], 2, root2.clone(),
+                )
+                .unwrap();
+            let ok = q
+                .enqueue_tenant_on_after(
+                    d0, &k1, n as u32, &[a1, b1], Backend::SimX, &[], 1, root1.clone(),
+                )
+                .unwrap();
+            let results = q.finish();
+            assert!(matches!(results[bad.0], Err(LaunchError::Protection)));
+            assert!(matches!(results[collateral.0], Err(LaunchError::Skipped(r)) if r == bad.0));
+            let r = results[ok.0].as_ref().unwrap();
+            assert_eq!(r.mem.read_i32_slice(b1, n), vec![21; n]);
+        }
     }
 }

@@ -112,13 +112,27 @@ impl Client {
         }
     }
 
-    /// `open_session` (empty `devices` ⇒ the server's fleet); returns
-    /// the session id and the actual device configs.
+    /// `open_session` with private devices (empty `devices` ⇒ the
+    /// server's defaults); returns the session id and the actual device
+    /// configs.
     pub fn open_session(
         &mut self,
         devices: &[(u32, u32)],
     ) -> Result<(u64, Vec<(u32, u32)>), ClientError> {
-        match self.request(&Request::OpenSession { devices: devices.to_vec() })? {
+        match self.request(&Request::OpenSession { devices: devices.to_vec(), fleet: None })? {
+            Response::Session { session, devices } => Ok((session, devices)),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// `open_session` as a tenant of the named shared fleet; returns the
+    /// session id and the fleet's device configs.
+    pub fn open_session_fleet(
+        &mut self,
+        fleet: &str,
+    ) -> Result<(u64, Vec<(u32, u32)>), ClientError> {
+        let req = Request::OpenSession { devices: Vec::new(), fleet: Some(fleet.to_string()) };
+        match self.request(&req)? {
             Response::Session { session, devices } => Ok((session, devices)),
             other => Err(unexpected(&other)),
         }

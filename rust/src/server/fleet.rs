@@ -1,0 +1,346 @@
+//! Named shared device fleets: **one queue, many tenants**.
+//!
+//! A [`Fleet`] is a persistent set of devices behind a single
+//! event-graph [`LaunchQueue`], hosted for the lifetime of the server
+//! (`vortex serve --fleet name=2x2,8x8`). Sessions attach as *tenants*
+//! (`open_session {fleet:"name"}`) instead of spawning private devices,
+//! so concurrent clients genuinely contend for the same hardware: the
+//! reactive scheduler interleaves their launches per device through
+//! fair per-tenant ready lanes
+//! ([`LaunchQueue::enqueue_tenant_on_after`]), the per-device cost
+//! model arbitrates unpinned placement across tenants, and the global
+//! in-flight cap backpressures them as a group.
+//!
+//! **Isolation is a memory-system property, not device duplication.**
+//! Every tenant gets its own page-table root over shared copy-on-write
+//! frames: a clone of the fleet's pristine base [`Memory`] whose buffer
+//! arena (`[ARENA_LO, ARENA_TOP)`) is protected, with page-granular
+//! grants opened only for the tenant's own buffers
+//! ([`Memory::protect`]/[`Memory::grant`]). Buffers allocate from a
+//! fleet-global page-aligned bump arena, so two tenants' buffers never
+//! share a page and an address uniquely names its owner. A launch that
+//! touches arena pages outside its grants has those accesses suppressed
+//! (stores dropped, loads read zero) and fails with the deterministic
+//! [`LaunchError::Protection`] — never silent corruption.
+//!
+//! **Determinism.** Tenant launches always adopt their producer's
+//! committed image and dep-free launches start from the enqueue-time
+//! snapshot of the tenant's root, so a tenant's results are
+//! bit-identical to replaying its launches alone on a fresh identical
+//! fleet — at every worker count — as long as placement is pinned
+//! (unpinned `enqueue_any` placement is contention-dependent by
+//! design). Pinned by the queue's tenant tests and the shared-fleet
+//! suite in `rust/tests/server_service.rs`.
+//!
+//! **Locking.** One mutex guards the fleet state. It is never held
+//! across a blocking wait: harvesting polls the queue
+//! ([`LaunchQueue::poll`]) in short critical sections so other tenants
+//! keep enqueueing while one waits. Launch effects are *batch-scoped*
+//! (like private sessions): the shared batch rotates only when the
+//! fleet is quiescent — zero unharvested launches and zero sessions
+//! holding live handles.
+
+use crate::config::{self, MachineConfig};
+use crate::mem::Memory;
+use crate::pocl::{
+    Backend, DeviceId, Event, Kernel, LaunchError, LaunchQueue, QueuedResult, VortexDevice,
+};
+use crate::server::protocol::FleetStat;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Base of the fleet-global buffer arena (the same base private device
+/// arenas use, so kernels and address-validity checks are identical in
+/// both modes).
+pub const ARENA_LO: u32 = 0x9000_0000;
+/// End of the protected arena window: 64 MiB of shared buffer space.
+pub const ARENA_TOP: u32 = 0x9400_0000;
+/// Tenant buffers are page-aligned so protection grants (page-granular)
+/// never cover a neighbour's bytes.
+const ARENA_PAGE: u32 = 4096;
+
+struct FleetState {
+    queue: LaunchQueue,
+    /// Pristine protected root: every tenant root is a COW clone of
+    /// this (empty arena, no grants), so tenants share frames but never
+    /// a page-table path into each other's stores.
+    base: Memory,
+    /// Fleet-global arena bump pointer (page-aligned).
+    next_buffer: u32,
+    /// Next tenant tag (starts at 1 — tag 0 is the untagged classic
+    /// path; never reused, so per-device program-cache entries keyed by
+    /// tenant-qualified kernel names can never alias across sessions).
+    next_tenant: u64,
+    /// Tenant sessions currently attached.
+    attached: usize,
+    /// Sessions holding live event handles into the current shared
+    /// batch (rotation would invalidate them).
+    open_refs: usize,
+    /// Launches enqueued and not yet harvested.
+    outstanding: usize,
+    /// Launches ever enqueued on this fleet.
+    launches: u64,
+    /// The current batch has events (rotation would retire something).
+    dirty: bool,
+}
+
+/// A named shared device fleet (see the module docs).
+pub struct Fleet {
+    name: String,
+    configs: Vec<(u32, u32)>,
+    /// Device handles, in config order (stable for the fleet's life).
+    devices: Vec<DeviceId>,
+    state: Mutex<FleetState>,
+}
+
+impl Fleet {
+    /// Build a fleet named `name` over fresh devices. Validation
+    /// mirrors private-session device spawning.
+    pub fn new(name: &str, configs: &[(u32, u32)], jobs: usize) -> Result<Fleet, String> {
+        if name.is_empty() || name.len() > 64 {
+            return Err("fleet name must be 1..=64 bytes".into());
+        }
+        if configs.is_empty() {
+            return Err(format!("fleet `{name}` needs at least one device config"));
+        }
+        if configs.len() > 16 {
+            return Err(format!("fleet `{name}`: too many devices ({} > 16)", configs.len()));
+        }
+        config::validate_jobs(jobs)?;
+        for &(w, t) in configs {
+            MachineConfig::with_wt(w, t)
+                .validate()
+                .map_err(|e| format!("fleet `{name}` device config {w}x{t}: {e}"))?;
+        }
+        let mut queue = LaunchQueue::new(jobs);
+        let devices = configs
+            .iter()
+            .map(|&(w, t)| queue.add_device(VortexDevice::new(MachineConfig::with_wt(w, t))))
+            .collect();
+        let mut base = Memory::new();
+        base.protect(ARENA_LO, ARENA_TOP);
+        Ok(Fleet {
+            name: name.to_string(),
+            configs: configs.to_vec(),
+            devices,
+            state: Mutex::new(FleetState {
+                queue,
+                base,
+                next_buffer: ARENA_LO,
+                next_tenant: 1,
+                attached: 0,
+                open_refs: 0,
+                outstanding: 0,
+                launches: 0,
+                dirty: false,
+            }),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn configs(&self) -> &[(u32, u32)] {
+        &self.configs
+    }
+
+    pub fn devices(&self) -> &[DeviceId] {
+        &self.devices
+    }
+
+    /// Attach a new tenant: a fresh tag and a private page-table root
+    /// (protected arena, zero grants) over the shared COW frames.
+    pub fn attach(&self) -> (u64, Memory) {
+        let mut st = self.state.lock().unwrap();
+        let tenant = st.next_tenant;
+        st.next_tenant += 1;
+        st.attached += 1;
+        (tenant, st.base.clone())
+    }
+
+    /// Detach a tenant, abandoning `pending` unharvested launches and
+    /// its batch ref (if any). May rotate the batch if the fleet went
+    /// quiescent.
+    pub fn detach(&self, holds_ref: bool, pending: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.attached -= 1;
+        st.outstanding -= pending;
+        if holds_ref {
+            st.open_refs -= 1;
+        }
+        Self::maybe_rotate(&mut st);
+    }
+
+    /// Allocate `len` bytes from the fleet-global arena, page-rounded.
+    /// Returns `(addr, rounded_len)` — the caller grants exactly the
+    /// rounded span on the owning tenant's root.
+    pub fn alloc_buffer(&self, len: u32) -> Result<(u32, u32), String> {
+        let rounded = len
+            .checked_add(ARENA_PAGE - 1)
+            .map(|v| v & !(ARENA_PAGE - 1))
+            .ok_or_else(|| "buffer length overflows the arena".to_string())?;
+        let mut st = self.state.lock().unwrap();
+        let addr = st.next_buffer;
+        let top = addr
+            .checked_add(rounded)
+            .filter(|&t| t <= ARENA_TOP)
+            .ok_or_else(|| {
+                format!(
+                    "fleet `{}` arena exhausted ({} MiB): {} bytes do not fit",
+                    self.name,
+                    (ARENA_TOP - ARENA_LO) >> 20,
+                    len
+                )
+            })?;
+        st.next_buffer = top;
+        Ok((addr, rounded))
+    }
+
+    /// Enqueue one tenant launch into the shared batch and start it
+    /// (streaming submission). `take_ref` marks the calling session as
+    /// holding live handles from here on (its first pending event).
+    /// Returns the queue event and whether the graph was already
+    /// running (the `launches_streamed` signal).
+    #[allow(clippy::too_many_arguments)]
+    pub fn enqueue(
+        &self,
+        tenant: u64,
+        root: &Memory,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        device: Option<DeviceId>,
+        backend: Backend,
+        wait: &[Event],
+        take_ref: bool,
+    ) -> Result<(Event, bool), LaunchError> {
+        let mut st = self.state.lock().unwrap();
+        let was_running = st.queue.occupancy().in_flight > 0;
+        let enq = match device {
+            Some(d) => st.queue.enqueue_tenant_on_after(
+                d,
+                kernel,
+                total,
+                args,
+                backend,
+                wait,
+                tenant,
+                root.clone(),
+            ),
+            None => st.queue.enqueue_tenant_any_after(
+                kernel,
+                total,
+                args,
+                backend,
+                wait,
+                tenant,
+                root.clone(),
+            ),
+        };
+        let ev = enq?;
+        st.outstanding += 1;
+        st.launches += 1;
+        st.dirty = true;
+        if take_ref {
+            st.open_refs += 1;
+        }
+        st.queue.flush();
+        Ok((ev, was_running))
+    }
+
+    /// Block until `qe` retires and return its result, without ever
+    /// holding the fleet lock across the wait: short poll-pump critical
+    /// sections, 200 µs naps between. Callers only wait on events of
+    /// the current batch (they hold a batch ref, so rotation cannot
+    /// invalidate `qe` underneath them).
+    pub fn wait_harvest(&self, qe: Event) -> Result<QueuedResult, LaunchError> {
+        loop {
+            {
+                let mut st = self.state.lock().unwrap();
+                let _ = st.queue.poll();
+                if let Some(res) = st.queue.result(qe) {
+                    let res = res.clone();
+                    st.outstanding -= 1;
+                    return res;
+                }
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Drop one session's batch ref (its last pending event was
+    /// harvested, or its batch drained). May rotate.
+    pub fn release_ref(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open_refs -= 1;
+        Self::maybe_rotate(&mut st);
+    }
+
+    /// Retire the shared batch once the fleet is quiescent: nothing
+    /// unharvested, nobody holding handles. Every result was already
+    /// harvested (`outstanding == 0`), so the drain returns instantly
+    /// and only resets the batch-scoped event namespace — exactly the
+    /// rotation private sessions perform at `finish`.
+    fn maybe_rotate(st: &mut FleetState) {
+        if st.dirty && st.outstanding == 0 && st.open_refs == 0 {
+            let _ = st.queue.finish();
+            st.dirty = false;
+        }
+    }
+
+    /// Occupancy snapshot for the `stats` frame.
+    pub fn stat(&self) -> FleetStat {
+        let mut st = self.state.lock().unwrap();
+        let _ = st.queue.poll();
+        let o = st.queue.occupancy();
+        FleetStat {
+            name: self.name.clone(),
+            sessions: st.attached as u64,
+            in_flight: o.in_flight as u64,
+            ready: o.ready as u64,
+            launches: st.launches,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_validates_like_a_session() {
+        assert!(Fleet::new("", &[(2, 2)], 1).is_err());
+        assert!(Fleet::new("f", &[], 1).is_err());
+        assert!(Fleet::new("f", &[(0, 2)], 1).is_err());
+        assert!(Fleet::new("f", &[(2, 2)], 0).is_err());
+        assert!(Fleet::new("f", &[(2, 2), (4, 4)], 2).is_ok());
+    }
+
+    #[test]
+    fn arena_is_page_aligned_shared_and_bounded() {
+        let f = Fleet::new("f", &[(2, 2)], 1).unwrap();
+        let (a, ra) = f.alloc_buffer(64).unwrap();
+        let (b, rb) = f.alloc_buffer(4097).unwrap();
+        assert_eq!(a, ARENA_LO);
+        assert_eq!(ra, 4096);
+        assert_eq!(b, ARENA_LO + 4096, "tenant buffers never share a page");
+        assert_eq!(rb, 8192);
+        assert!(f.alloc_buffer(ARENA_TOP - ARENA_LO).is_err(), "arena is bounded");
+    }
+
+    #[test]
+    fn tenant_tags_are_unique_and_roots_are_protected() {
+        let f = Fleet::new("f", &[(2, 2)], 1).unwrap();
+        let (t1, r1) = f.attach();
+        let (t2, mut r2) = f.attach();
+        assert_ne!(t1, t2);
+        assert!(r1.protection_enabled() && r2.protection_enabled());
+        // a fresh root has no grants: arena stores are suppressed
+        r2.write_u32(ARENA_LO, 7);
+        assert_eq!(r2.read_u32(ARENA_LO), 0);
+        assert!(r2.protection_faults() > 0);
+        f.detach(false, 0);
+        f.detach(false, 0);
+    }
+}

@@ -20,6 +20,16 @@
 //! request. Verification is unchanged — a drop or a wrong answer under
 //! streaming fails the run just like under batching.
 //!
+//! With [`BombardConfig::fleet`] every client attaches to the named
+//! **shared fleet** instead of opening private devices: all tenants
+//! contend for the same queue and the same devices, isolated only by
+//! their per-tenant page-table roots. Placement is always pinned
+//! (cycling the fleet's devices) so every tenant's answers stay
+//! bit-identical to a sequential solo replay, and the post-run stats
+//! sample must report **zero protection faults** for the run to count
+//! as [`BombardReport::clean`] — the smoke proves both that sharing
+//! works and that no tenant's stores leaked into another's pages.
+//!
 //! The report (sustained req/s + p50/p99 latency) feeds the
 //! `server_throughput` section of `benches/sim_hotpath.rs` and the CI
 //! serve/bombard smoke step.
@@ -83,6 +93,13 @@ pub struct BombardConfig {
     /// Streaming scenario: enqueue into the running batch and harvest
     /// per-event with `wait_event` instead of batching on `finish`.
     pub stream: bool,
+    /// Shared-fleet contention scenario: every client attaches to this
+    /// named fleet instead of opening private devices. Placement is
+    /// always pinned (cycling the fleet's devices) so each tenant's
+    /// results are bit-identical to a sequential solo replay, and
+    /// `clean()` additionally requires zero cross-tenant protection
+    /// faults.
+    pub fleet: Option<String>,
 }
 
 impl Default for BombardConfig {
@@ -95,6 +112,7 @@ impl Default for BombardConfig {
             seed: 0xC0FFEE,
             shutdown: false,
             stream: false,
+            fleet: None,
         }
     }
 }
@@ -124,14 +142,20 @@ pub struct BombardReport {
     pub errors: Vec<String>,
     /// Server counters sampled after the run (when reachable).
     pub stats: Option<StatsReport>,
+    /// Was this a shared-fleet run? (Tightens [`Self::clean`].)
+    pub fleet_mode: bool,
 }
 
 impl BombardReport {
-    /// Zero drops, zero mismatches, zero transport anomalies?
+    /// Zero drops, zero mismatches, zero transport anomalies — and, for
+    /// a shared-fleet run, a post-run stats sample proving zero
+    /// cross-tenant protection faults (no sample ⇒ not clean).
     pub fn clean(&self) -> bool {
         self.errors.is_empty()
             && self.answered == self.requests_sent
             && self.verified == self.requests_sent
+            && (!self.fleet_mode
+                || self.stats.as_ref().is_some_and(|s| s.protection_faults == 0))
     }
 }
 
@@ -225,7 +249,10 @@ fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
         }
     };
     let setup = (|| -> Result<(usize, u32, u32, u32), ClientError> {
-        let (_, devices) = cl.open_session(&[])?;
+        let (_, devices) = match &cfg.fleet {
+            Some(name) => cl.open_session_fleet(name)?,
+            None => cl.open_session(&[])?,
+        };
         let factor = SCALE_FACTORS[c % SCALE_FACTORS.len()];
         cl.stage_kernel(scale_kernel_name(factor), &scale_kernel_body(factor))?;
         let inp = cl.create_buffer((cfg.n * 4) as u32)?;
@@ -257,9 +284,16 @@ fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
     for r in 0..cfg.requests {
         out.sent += 1;
         let chained = r % 4 == 3;
-        // cycle pinned devices and the deferred dispatcher (`None`)
-        let dev_pick = r % (ndev + 1);
-        let dev = if dev_pick == ndev { None } else { Some(dev_pick as u32) };
+        // cycle pinned devices and the deferred dispatcher (`None`) —
+        // except in fleet mode, where placement is always pinned so a
+        // tenant's results are reproducible under contention (`None`
+        // placement is contention-dependent by design)
+        let dev = if cfg.fleet.is_some() {
+            Some((r % ndev) as u32)
+        } else {
+            let dev_pick = r % (ndev + 1);
+            if dev_pick == ndev { None } else { Some(dev_pick as u32) }
+        };
         let use_wait_event = !chained && r % 3 == 0;
         let t0 = Instant::now();
         let mut attempt = 0u32;
@@ -370,6 +404,7 @@ pub fn run_bombard(cfg: &BombardConfig) -> BombardReport {
         p99: Duration::ZERO,
         errors: Vec::new(),
         stats: None,
+        fleet_mode: cfg.fleet.is_some(),
     };
     for o in outcomes {
         report.requests_sent += o.sent;

@@ -24,6 +24,15 @@ pub struct Metrics {
     /// Requests answered with `busy` (admission control) — the explicit
     /// backpressure signal; never silently dropped.
     pub requests_rejected: AtomicU64,
+    /// Connections turned away at the accept loop because the session cap
+    /// was reached. Connection-level busy, kept separate from the
+    /// request-level `requests_rejected` so saturation at the front door
+    /// is distinguishable from admission-control pushback inside open
+    /// sessions.
+    pub sessions_rejected: AtomicU64,
+    /// Launches that failed with a memory-protection fault: a tenant on a
+    /// shared fleet touched arena pages outside its own grants.
+    pub protection_faults: AtomicU64,
     /// Launches admitted into some session's current batch.
     pub launches_enqueued: AtomicU64,
     /// Launches that completed successfully at a `finish`.
@@ -93,6 +102,8 @@ impl Metrics {
             sessions_active: self.sessions_active.load(Ordering::SeqCst),
             requests_accepted: self.requests_accepted.load(Ordering::SeqCst),
             requests_rejected: self.requests_rejected.load(Ordering::SeqCst),
+            sessions_rejected: self.sessions_rejected.load(Ordering::SeqCst),
+            protection_faults: self.protection_faults.load(Ordering::SeqCst),
             launches_enqueued: self.launches_enqueued.load(Ordering::SeqCst),
             launches_completed: self.launches_completed.load(Ordering::SeqCst),
             launches_failed: self.launches_failed.load(Ordering::SeqCst),
@@ -101,6 +112,9 @@ impl Metrics {
             sched_in_flight: self.sched_in_flight.load(Ordering::SeqCst),
             sched_ready: self.sched_ready.load(Ordering::SeqCst),
             device_cycles: self.device_cycles.lock().unwrap().clone(),
+            // per-fleet occupancy is owned by the fleet registry, not the
+            // counters; the service fills it in (see `Service::serve_stats`)
+            fleets: Vec::new(),
         }
     }
 }

@@ -12,9 +12,15 @@
 //!
 //! * [`protocol`] — the wire frames + canonical encode/decode over the
 //!   in-tree JSON writer/parser ([`crate::coordinator::report::Json`]).
-//! * [`session`] — per-tenant isolation: each session owns its own
-//!   [`crate::pocl::LaunchQueue`], devices, kernels, buffers and event
-//!   namespace; batches repeat over the batch-scoped queue.
+//! * [`session`] — per-tenant isolation: a session either owns its own
+//!   [`crate::pocl::LaunchQueue`] + devices (private mode), or attaches
+//!   as a tenant of a shared named fleet; kernels, buffers and the
+//!   event namespace are per-session in both modes.
+//! * [`fleet`] — named **shared** device fleets (`--fleet name=cfgs`):
+//!   many tenants contend for one queue's devices, isolated by
+//!   per-tenant page-table roots over shared COW frames with
+//!   page-granular grants — a cross-tenant access is a deterministic
+//!   `protection` error, never silent corruption.
 //! * [`service`] — the accept loop, connection shepherds, admission
 //!   control (explicit `busy` backpressure at three gates) and graceful
 //!   drain; simulation work multiplexes over the process-wide persistent
@@ -31,6 +37,7 @@
 //! scheduling), pinned by `rust/tests/server_service.rs`.
 
 pub mod client;
+pub mod fleet;
 pub mod load;
 pub mod metrics;
 pub mod protocol;
@@ -38,8 +45,9 @@ pub mod service;
 pub mod session;
 
 pub use client::{Client, ClientError};
+pub use fleet::Fleet;
 pub use load::{run_bombard, BombardConfig, BombardReport};
 pub use metrics::Metrics;
-pub use protocol::{ErrorCode, EventSummary, Request, Response, StatsReport};
+pub use protocol::{ErrorCode, EventSummary, FleetStat, Request, Response, StatsReport};
 pub use service::{ServeConfig, Server};
 pub use session::{Session, SessionLimits};

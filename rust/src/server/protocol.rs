@@ -147,9 +147,12 @@ fn backend_from(s: &str) -> Result<Backend, ProtoError> {
 /// Client → server frames.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// Open the connection's session. `devices` empty ⇒ the server's
-    /// configured fleet.
-    OpenSession { devices: Vec<(u32, u32)> },
+    /// Open the connection's session. `fleet:null` spawns private
+    /// devices (`devices` empty ⇒ the server's configured defaults);
+    /// `fleet:"name"` attaches the session as a tenant of that named
+    /// shared fleet (`devices` must then be empty — the fleet owns its
+    /// device set).
+    OpenSession { devices: Vec<(u32, u32)>, fleet: Option<String> },
     /// Register kernel source under `name` in this session's namespace.
     StageKernel { name: String, body: String },
     /// Allocate `len` bytes of device memory on **every** session device
@@ -190,9 +193,10 @@ impl Request {
     pub fn encode(&self) -> String {
         let mut j = Json::obj();
         match self {
-            Request::OpenSession { devices } => {
+            Request::OpenSession { devices, fleet } => {
                 j.push("op", "open_session".into());
                 j.push("devices", devices_json(devices));
+                j.push("fleet", fleet.as_deref().map_or(Json::Null, |f| f.into()));
             }
             Request::StageKernel { name, body } => {
                 j.push("op", "stage_kernel".into());
@@ -244,7 +248,18 @@ impl Request {
         let j = Json::parse(line).map_err(|e| ProtoError(e.to_string()))?;
         let op = str_field(&j, "op")?;
         match op {
-            "open_session" => Ok(Request::OpenSession { devices: devices_field(&j, "devices")? }),
+            "open_session" => {
+                // `fleet` tolerates absence: pre-fleet clients never send it
+                let fleet = match j.get("fleet") {
+                    None | Some(Json::Null) => None,
+                    Some(f) => Some(
+                        f.as_str()
+                            .ok_or_else(|| ProtoError("`fleet` must be a string or null".into()))?
+                            .to_string(),
+                    ),
+                };
+                Ok(Request::OpenSession { devices: devices_field(&j, "devices")?, fleet })
+            }
             "stage_kernel" => Ok(Request::StageKernel {
                 name: str_field(&j, "name")?.to_string(),
                 body: str_field(&j, "body")?.to_string(),
@@ -299,6 +314,10 @@ pub enum ErrorCode {
     /// A wait list named an event whose batch already finished
     /// ([`crate::pocl::LaunchError::StaleEvent`]).
     StaleEvent,
+    /// A shared-fleet tenant's launch touched arena pages outside its
+    /// own grants ([`crate::pocl::LaunchError::Protection`]). The
+    /// offending accesses were suppressed — never silent corruption.
+    Protection,
     /// The service is draining; no new sessions or work.
     ShuttingDown,
 }
@@ -310,6 +329,7 @@ impl ErrorCode {
             ErrorCode::Busy => "busy",
             ErrorCode::Launch => "launch",
             ErrorCode::StaleEvent => "stale_event",
+            ErrorCode::Protection => "protection",
             ErrorCode::ShuttingDown => "shutting_down",
         }
     }
@@ -322,6 +342,7 @@ impl ErrorCode {
             "busy" => Ok(ErrorCode::Busy),
             "launch" => Ok(ErrorCode::Launch),
             "stale_event" => Ok(ErrorCode::StaleEvent),
+            "protection" => Ok(ErrorCode::Protection),
             "shutting_down" => Ok(ErrorCode::ShuttingDown),
             other => Err(ProtoError(format!("unknown error code `{other}`"))),
         }
@@ -391,6 +412,13 @@ pub struct StatsReport {
     pub sessions_active: u64,
     pub requests_accepted: u64,
     pub requests_rejected: u64,
+    /// Connections turned away at the accept loop (session cap) —
+    /// connection-level busy, distinct from request-level
+    /// `requests_rejected`.
+    pub sessions_rejected: u64,
+    /// Launches failed with a memory-protection fault (cross-tenant
+    /// access on a shared fleet).
+    pub protection_faults: u64,
     pub launches_enqueued: u64,
     pub launches_completed: u64,
     pub launches_failed: u64,
@@ -405,6 +433,45 @@ pub struct StatsReport {
     /// busy devices / the worker throttle, summed across sessions.
     pub sched_ready: u64,
     pub device_cycles: Vec<u64>,
+    /// Per-fleet occupancy, sorted by fleet name (empty when the server
+    /// hosts no named fleets).
+    pub fleets: Vec<FleetStat>,
+}
+
+/// One named fleet's occupancy snapshot inside [`StatsReport`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetStat {
+    pub name: String,
+    /// Tenant sessions currently attached.
+    pub sessions: u64,
+    /// Events dispatched to the fleet's worker pool and not yet retired.
+    pub in_flight: u64,
+    /// Dependency-released events queued behind busy fleet devices.
+    pub ready: u64,
+    /// Launches ever enqueued on this fleet.
+    pub launches: u64,
+}
+
+impl FleetStat {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push("name", self.name.as_str().into());
+        j.push("sessions", self.sessions.into());
+        j.push("in_flight", self.in_flight.into());
+        j.push("ready", self.ready.into());
+        j.push("launches", self.launches.into());
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<FleetStat, ProtoError> {
+        Ok(FleetStat {
+            name: str_field(j, "name")?.to_string(),
+            sessions: u64_field(j, "sessions")?,
+            in_flight: u64_field(j, "in_flight")?,
+            ready: u64_field(j, "ready")?,
+            launches: u64_field(j, "launches")?,
+        })
+    }
 }
 
 impl StatsReport {
@@ -414,6 +481,8 @@ impl StatsReport {
         j.push("sessions_active", self.sessions_active.into());
         j.push("requests_accepted", self.requests_accepted.into());
         j.push("requests_rejected", self.requests_rejected.into());
+        j.push("sessions_rejected", self.sessions_rejected.into());
+        j.push("protection_faults", self.protection_faults.into());
         j.push("launches_enqueued", self.launches_enqueued.into());
         j.push("launches_completed", self.launches_completed.into());
         j.push("launches_failed", self.launches_failed.into());
@@ -425,6 +494,7 @@ impl StatsReport {
             "device_cycles",
             Json::Arr(self.device_cycles.iter().map(|&c| c.into()).collect()),
         );
+        j.push("fleets", Json::Arr(self.fleets.iter().map(|f| f.to_json()).collect()));
         j
     }
 
@@ -434,6 +504,8 @@ impl StatsReport {
             sessions_active: u64_field(j, "sessions_active")?,
             requests_accepted: u64_field(j, "requests_accepted")?,
             requests_rejected: u64_field(j, "requests_rejected")?,
+            sessions_rejected: u64_field(j, "sessions_rejected")?,
+            protection_faults: u64_field(j, "protection_faults")?,
             launches_enqueued: u64_field(j, "launches_enqueued")?,
             launches_completed: u64_field(j, "launches_completed")?,
             launches_failed: u64_field(j, "launches_failed")?,
@@ -442,6 +514,10 @@ impl StatsReport {
             sched_in_flight: u64_field(j, "sched_in_flight")?,
             sched_ready: u64_field(j, "sched_ready")?,
             device_cycles: u64_arr(j, "device_cycles")?,
+            fleets: arr_field(j, "fleets")?
+                .iter()
+                .map(FleetStat::from_json)
+                .collect::<Result<_, _>>()?,
         })
     }
 }
@@ -568,8 +644,9 @@ mod tests {
     #[test]
     fn request_roundtrip_every_variant() {
         let frames = vec![
-            Request::OpenSession { devices: vec![(2, 2), (8, 8)] },
-            Request::OpenSession { devices: vec![] },
+            Request::OpenSession { devices: vec![(2, 2), (8, 8)], fleet: None },
+            Request::OpenSession { devices: vec![], fleet: None },
+            Request::OpenSession { devices: vec![], fleet: Some("shared".into()) },
             Request::StageKernel {
                 name: "k\"quoted\"".into(),
                 body: "kernel_body:\n\tret # tab\r\n".into(),
@@ -628,6 +705,7 @@ mod tests {
         let frames = vec![
             Response::Error { code: ErrorCode::Busy, message: "in-flight cap reached".into() },
             Response::Error { code: ErrorCode::StaleEvent, message: "stale #3".into() },
+            Response::Error { code: ErrorCode::Protection, message: "cross-tenant access".into() },
             Response::Session { session: 7, devices: vec![(2, 2), (4, 4)] },
             Response::Ack,
             Response::Buffer { addr: 0x9000_0000 },
@@ -642,6 +720,8 @@ mod tests {
                     sessions_active: 1,
                     requests_accepted: 40,
                     requests_rejected: 2,
+                    sessions_rejected: 1,
+                    protection_faults: 4,
                     launches_enqueued: 20,
                     launches_completed: 18,
                     launches_failed: 2,
@@ -650,6 +730,16 @@ mod tests {
                     sched_in_flight: 3,
                     sched_ready: 1,
                     device_cycles: vec![100, 2000],
+                    fleets: vec![
+                        FleetStat {
+                            name: "shared".into(),
+                            sessions: 2,
+                            in_flight: 1,
+                            ready: 3,
+                            launches: 17,
+                        },
+                        FleetStat::default(),
+                    ],
                 },
             },
         ];
@@ -679,6 +769,18 @@ mod tests {
         }
         assert!(Response::decode(r#"{"code":"busy"}"#).is_err(), "response needs `ok`");
         assert!(Response::decode(r#"{"ok":false,"code":"nope","error":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn open_session_tolerates_pre_fleet_frames() {
+        // pre-fleet clients never send the `fleet` key; decode must treat
+        // absence exactly like an explicit null
+        let legacy = r#"{"op":"open_session","devices":[[2,2]]}"#;
+        assert_eq!(
+            Request::decode(legacy).unwrap(),
+            Request::OpenSession { devices: vec![(2, 2)], fleet: None },
+        );
+        assert!(Request::decode(r#"{"op":"open_session","devices":[],"fleet":3}"#).is_err());
     }
 
     #[test]

@@ -41,13 +41,15 @@
 
 use crate::config::MachineConfig;
 use crate::coordinator::pool;
+use crate::server::fleet::Fleet;
 use crate::server::metrics::Metrics;
 use crate::server::protocol::{ErrorCode, Request, Response};
 use crate::server::session::{Session, SessionLimits};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
-use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -66,6 +68,11 @@ pub struct ServeConfig {
     /// Max bytes per request line (oversized lines are rejected without
     /// killing the connection).
     pub max_line: usize,
+    /// Named shared fleets hosted for the server's lifetime
+    /// (`--fleet name=2x2,8x8`, repeatable): sessions attach as tenants
+    /// via `open_session {fleet:"name"}` and contend for the fleet's
+    /// devices under per-tenant page-table protection.
+    pub fleets: Vec<(String, Vec<(u32, u32)>)>,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +83,7 @@ impl Default for ServeConfig {
             max_sessions: 32,
             limits: SessionLimits::default(),
             max_line: 4 << 20,
+            fleets: Vec::new(),
         }
     }
 }
@@ -87,7 +95,29 @@ struct Shared {
     metrics: Arc<Metrics>,
     shutdown: AtomicBool,
     active: AtomicUsize,
+    /// Signals `active` reaching zero: [`Server::wait`] blocks here
+    /// (instead of sleep-polling) and every [`ActiveGuard`] drop
+    /// notifies. `active` itself stays atomic — the accept loop reads
+    /// it lock-free for the connection cap.
+    drained: (Mutex<()>, Condvar),
     next_session: AtomicU64,
+    /// The named shared fleets, immutable for the server's life.
+    fleets: HashMap<String, Arc<Fleet>>,
+}
+
+/// The address `begin_shutdown` connects to in order to wake a blocking
+/// `accept`: an unspecified bind IP (`0.0.0.0` / `[::]`) is not
+/// connectable, so substitute the loopback **of the same address
+/// family** — an `[::]` bind woken at `127.0.0.1` would never see the
+/// connection on a v6-only listener.
+fn wake_addr(mut addr: SocketAddr) -> SocketAddr {
+    if addr.ip().is_unspecified() {
+        addr.set_ip(match addr.ip() {
+            IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        });
+    }
+    addr
 }
 
 impl Shared {
@@ -95,12 +125,17 @@ impl Shared {
     /// observes the flag instead of blocking in `accept` forever.
     fn begin_shutdown(&self) {
         if !self.shutdown.swap(true, Ordering::SeqCst) {
-            let mut wake = self.addr;
-            if wake.ip().is_unspecified() {
-                wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
-            }
-            let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+            let _ = TcpStream::connect_timeout(&wake_addr(self.addr), Duration::from_secs(1));
         }
+    }
+
+    /// Decrement `active` and signal a waiter; the decrement happens
+    /// under the drain mutex so a concurrent [`Server::wait`] can never
+    /// miss the final wakeup.
+    fn release_active(&self) {
+        let _lock = self.drained.0.lock().unwrap();
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        self.drained.1.notify_all();
     }
 }
 
@@ -109,7 +144,7 @@ struct ActiveGuard(Arc<Shared>);
 
 impl Drop for ActiveGuard {
     fn drop(&mut self) {
-        self.0.active.fetch_sub(1, Ordering::SeqCst);
+        self.0.release_active();
     }
 }
 
@@ -140,6 +175,14 @@ impl Server {
         if cfg.max_sessions == 0 {
             return Err(bad("max_sessions must be at least 1".into()));
         }
+        let mut fleets = HashMap::new();
+        for (name, configs) in &cfg.fleets {
+            if fleets.contains_key(name) {
+                return Err(bad(format!("duplicate fleet name `{name}`")));
+            }
+            let fleet = Fleet::new(name, configs, cfg.jobs).map_err(bad)?;
+            fleets.insert(name.clone(), Arc::new(fleet));
+        }
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let shared = Arc::new(Shared {
@@ -148,7 +191,9 @@ impl Server {
             metrics: Arc::new(Metrics::new()),
             shutdown: AtomicBool::new(false),
             active: AtomicUsize::new(0),
+            drained: (Mutex::new(()), Condvar::new()),
             next_session: AtomicU64::new(1),
+            fleets,
         });
         let accept_shared = Arc::clone(&shared);
         let accept = std::thread::Builder::new()
@@ -179,11 +224,16 @@ impl Server {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let t0 = Instant::now();
-        while self.shared.active.load(Ordering::SeqCst) > 0
-            && t0.elapsed() < Duration::from_secs(30)
-        {
-            std::thread::sleep(Duration::from_millis(10));
+        // block on the drain condvar (signaled by every ActiveGuard
+        // drop) instead of sleep-polling; the 30 s wedge bound stays
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let (lock, cvar) = (&self.shared.drained.0, &self.shared.drained.1);
+        let mut guard = lock.lock().unwrap();
+        while self.shared.active.load(Ordering::SeqCst) > 0 {
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                break;
+            };
+            guard = cvar.wait_timeout(guard, left).unwrap().0;
         }
     }
 }
@@ -199,7 +249,9 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         };
         if shared.active.load(Ordering::SeqCst) >= shared.cfg.max_sessions {
             // explicit busy frame, then drop: connection-level admission
-            shared.metrics.requests_rejected.fetch_add(1, Ordering::SeqCst);
+            // counts on its own gauge — request-level rejections
+            // (`requests_rejected`) stay a distinct saturation signal
+            shared.metrics.sessions_rejected.fetch_add(1, Ordering::SeqCst);
             let mut s = stream;
             let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
             let resp = Response::Error {
@@ -221,7 +273,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
                 serve_conn(stream, conn_shared);
             });
         if spawned.is_err() {
-            shared.active.fetch_sub(1, Ordering::SeqCst);
+            shared.release_active();
         }
     }
 }
@@ -424,12 +476,17 @@ fn handle_line(
     };
     let draining = shared.shutdown.load(Ordering::SeqCst);
     match req {
-        Request::Stats => (Response::Stats { stats: shared.metrics.snapshot() }, false),
+        Request::Stats => {
+            let mut stats = shared.metrics.snapshot();
+            stats.fleets = shared.fleets.values().map(|f| f.stat()).collect();
+            stats.fleets.sort_by(|a, b| a.name.cmp(&b.name));
+            (Response::Stats { stats }, false)
+        }
         Request::Shutdown => {
             shared.begin_shutdown();
             (Response::Ack, true)
         }
-        Request::OpenSession { devices } => {
+        Request::OpenSession { devices, fleet } => {
             if draining {
                 return (
                     Response::Error {
@@ -447,6 +504,36 @@ fn handle_line(
                     },
                     false,
                 );
+            }
+            if let Some(name) = fleet {
+                if !devices.is_empty() {
+                    return (
+                        Response::Error {
+                            code: ErrorCode::BadRequest,
+                            message: "fleet sessions cannot request private devices".into(),
+                        },
+                        false,
+                    );
+                }
+                let Some(f) = shared.fleets.get(&name) else {
+                    return (
+                        Response::Error {
+                            code: ErrorCode::BadRequest,
+                            message: format!("unknown fleet `{name}`"),
+                        },
+                        false,
+                    );
+                };
+                let id = shared.next_session.fetch_add(1, Ordering::SeqCst);
+                let s = Session::attach(
+                    id,
+                    Arc::clone(f),
+                    shared.cfg.limits,
+                    Arc::clone(&shared.metrics),
+                );
+                let resp = Response::Session { session: id, devices: s.configs().to_vec() };
+                *session = Some(s);
+                return (resp, false);
             }
             let configs =
                 if devices.is_empty() { shared.cfg.configs.clone() } else { devices };
@@ -508,6 +595,7 @@ mod tests {
             max_sessions: 2,
             limits: SessionLimits::default(),
             max_line: 1 << 16,
+            fleets: Vec::new(),
         }
     }
 
@@ -519,6 +607,75 @@ mod tests {
         let mut line = String::new();
         r.read_line(&mut line).unwrap();
         Response::decode(line.trim()).unwrap()
+    }
+
+    #[test]
+    fn wake_addr_matches_the_bound_address_family() {
+        let v4_any: SocketAddr = "0.0.0.0:8080".parse().unwrap();
+        assert_eq!(wake_addr(v4_any), "127.0.0.1:8080".parse().unwrap());
+        let v6_any: SocketAddr = "[::]:8080".parse().unwrap();
+        assert_eq!(wake_addr(v6_any), "[::1]:8080".parse().unwrap());
+        // concrete binds pass through untouched
+        let v4: SocketAddr = "192.0.2.1:9".parse().unwrap();
+        assert_eq!(wake_addr(v4), v4);
+        let v6: SocketAddr = "[2001:db8::1]:9".parse().unwrap();
+        assert_eq!(wake_addr(v6), v6);
+    }
+
+    #[test]
+    fn ipv6_bind_drains_via_its_own_loopback() {
+        // the shutdown wake must reach an unspecified IPv6 bind; before
+        // the family-matching fix this wedged until the wait() bound.
+        // Skip quietly on hosts without IPv6.
+        let Ok(server) = Server::spawn("[::]:0", tiny()) else {
+            return;
+        };
+        let t0 = Instant::now();
+        server.shutdown();
+        server.wait();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "drain of an idle [::] server must be prompt, took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn wait_returns_promptly_with_zero_live_connections() {
+        let server = Server::spawn("127.0.0.1:0", tiny()).unwrap();
+        // one short-lived connection so the drain path exercises an
+        // ActiveGuard drop → condvar notify
+        {
+            let stream = TcpStream::connect(server.addr()).unwrap();
+            let mut w = stream.try_clone().unwrap();
+            let mut r = BufReader::new(stream);
+            send_line(&mut w, r#"{"op":"stats"}"#);
+            let _ = read_resp(&mut r);
+        }
+        let t0 = Instant::now();
+        server.shutdown();
+        server.wait();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "condvar-signaled drain must not sleep-poll its way out, took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn spawn_rejects_duplicate_or_invalid_fleets() {
+        let fleets = vec![("shared".to_string(), vec![(2u32, 2u32)])];
+        let dup = ServeConfig {
+            fleets: vec![fleets[0].clone(), fleets[0].clone()],
+            ..tiny()
+        };
+        assert!(Server::spawn("127.0.0.1:0", dup).is_err());
+        let bad = ServeConfig { fleets: vec![("f".into(), vec![(0, 2)])], ..tiny() };
+        assert!(Server::spawn("127.0.0.1:0", bad).is_err());
+        let ok = ServeConfig { fleets, ..tiny() };
+        let server = Server::spawn("127.0.0.1:0", ok).unwrap();
+        server.shutdown();
+        server.wait();
     }
 
     #[test]

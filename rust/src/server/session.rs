@@ -34,6 +34,7 @@
 use crate::config::{self, MachineConfig};
 use crate::mem::Memory;
 use crate::pocl::{Buffer, DeviceId, Event, Kernel, LaunchError, LaunchQueue, VortexDevice};
+use crate::server::fleet::Fleet;
 use crate::server::metrics::Metrics;
 use crate::server::protocol::{ErrorCode, EventSummary, Request, Response};
 use std::collections::{HashMap, HashSet};
@@ -107,6 +108,7 @@ fn err(code: ErrorCode, msg: impl Into<String>) -> Response {
 fn launch_err(e: &LaunchError) -> Response {
     let code = match e {
         LaunchError::StaleEvent(_) => ErrorCode::StaleEvent,
+        LaunchError::Protection => ErrorCode::Protection,
         _ => ErrorCode::Launch,
     };
     Response::Error { code, message: e.to_string() }
@@ -126,11 +128,29 @@ struct Completed {
 /// oldest-first; ids are monotonic so the cutoff is a simple compare).
 const COMPLETED_CAP: u64 = 4096;
 
+/// How a session reaches devices: its own private instances, or a
+/// tenancy on a shared named fleet.
+enum Exec {
+    /// PR-5 isolation-by-duplication: the session owns queue + devices.
+    Private { queue: LaunchQueue, devices: Vec<DeviceId> },
+    /// Shared-fleet tenancy: launches go through the fleet's single
+    /// queue, tagged with `tenant`; isolation is `root` — this
+    /// session's private page-table root over the fleet's shared COW
+    /// frames, with grants only for its own buffers.
+    Fleet {
+        fleet: Arc<Fleet>,
+        tenant: u64,
+        root: Memory,
+        /// Whether this session currently holds a batch ref on the
+        /// fleet (it has unharvested pending events).
+        holds_ref: bool,
+    },
+}
+
 /// One tenant of the device service.
 pub struct Session {
     id: u64,
-    queue: LaunchQueue,
-    devices: Vec<DeviceId>,
+    exec: Exec,
     configs: Vec<(u32, u32)>,
     kernels: HashMap<String, Kernel>,
     buffers: Vec<Buffer>,
@@ -186,8 +206,7 @@ impl Session {
         metrics.sessions_active.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         Ok(Session {
             id,
-            queue,
-            devices,
+            exec: Exec::Private { queue, devices },
             configs: configs.to_vec(),
             kernels: HashMap::new(),
             buffers: Vec::new(),
@@ -200,6 +219,36 @@ impl Session {
             limits,
             metrics,
         })
+    }
+
+    /// Attach a session as a tenant of a shared named fleet: no devices
+    /// are spawned — the session gets a tenant tag and a private
+    /// page-table root over the fleet's shared frames.
+    pub fn attach(
+        id: u64,
+        fleet: Arc<Fleet>,
+        limits: SessionLimits,
+        metrics: Arc<Metrics>,
+    ) -> Session {
+        let (tenant, root) = fleet.attach();
+        let configs = fleet.configs().to_vec();
+        metrics.sessions_opened.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        metrics.sessions_active.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        Session {
+            id,
+            exec: Exec::Fleet { fleet, tenant, root, holds_ref: false },
+            configs,
+            kernels: HashMap::new(),
+            buffers: Vec::new(),
+            next_event: 0,
+            pending: Vec::new(),
+            current_batch: Vec::new(),
+            completed: HashMap::new(),
+            last_batch: Vec::new(),
+            published: (0, 0),
+            limits,
+            metrics,
+        }
     }
 
     pub fn id(&self) -> u64 {
@@ -258,7 +307,15 @@ impl Session {
                 format!("kernel cap reached ({})", self.limits.max_kernels),
             );
         }
-        let Some(interned) = intern_name(&name) else {
+        // shared-fleet tenants intern a tenant-qualified name: the
+        // per-device program cache is keyed by name, so two tenants
+        // staging the same name with different bodies must never alias
+        // (tenant tags are fleet-unique and never reused)
+        let cache_name = match &self.exec {
+            Exec::Private { .. } => name.clone(),
+            Exec::Fleet { tenant, .. } => format!("{name}#t{tenant}"),
+        };
+        let Some(interned) = intern_name(&cache_name) else {
             return err(
                 ErrorCode::BadRequest,
                 format!("kernel-name interner full ({INTERN_CAP} distinct names); reuse names"),
@@ -282,19 +339,34 @@ impl Session {
                 format!("buffer cap reached ({})", self.limits.max_buffers),
             );
         }
-        // identical allocation order on every device ⇒ identical
-        // addresses, so one buffer handle is valid fleet-wide (the same
-        // layout convention the in-process consumers rely on)
-        let mut buf: Option<Buffer> = None;
-        for &d in &self.devices {
-            let b = self.queue.device_mut(d).create_buffer(len as usize);
-            if let Some(first) = buf {
-                debug_assert_eq!(first.addr, b.addr, "device arenas must stay in lockstep");
-            } else {
-                buf = Some(b);
+        let b = match &mut self.exec {
+            // identical allocation order on every device ⇒ identical
+            // addresses, so one buffer handle is valid fleet-wide (the
+            // same layout convention the in-process consumers rely on)
+            Exec::Private { queue, devices } => {
+                let mut buf: Option<Buffer> = None;
+                for &d in devices.iter() {
+                    let b = queue.device_mut(d).create_buffer(len as usize);
+                    if let Some(first) = buf {
+                        debug_assert_eq!(first.addr, b.addr, "device arenas must stay in lockstep");
+                    } else {
+                        buf = Some(b);
+                    }
+                }
+                buf.expect("session owns at least one device")
             }
-        }
-        let b = buf.expect("session owns at least one device");
+            // shared fleet: allocate from the fleet-global page-aligned
+            // arena, then open exactly this span on *this* tenant's
+            // page-table root — no other tenant ever gets a grant here
+            Exec::Fleet { fleet, root, .. } => {
+                let (addr, rounded) = match fleet.alloc_buffer(len) {
+                    Ok(a) => a,
+                    Err(m) => return err(ErrorCode::BadRequest, m),
+                };
+                root.grant(addr, rounded);
+                Buffer { addr, len: len as usize }
+            }
+        };
         self.buffers.push(b);
         Response::Buffer { addr: b.addr }
     }
@@ -314,8 +386,16 @@ impl Session {
                 format!("{} words overflow the {}-byte buffer", data.len(), b.len),
             );
         }
-        for &d in &self.devices {
-            self.queue.device_mut(d).write_buffer_i32(b, data);
+        match &mut self.exec {
+            Exec::Private { queue, devices } => {
+                for &d in devices.iter() {
+                    queue.device_mut(d).write_buffer_i32(b, data);
+                }
+            }
+            // host writes land on the tenant's root; launches snapshot
+            // the root at enqueue time, so (as everywhere else) a write
+            // is visible to launches enqueued after it
+            Exec::Fleet { root, .. } => root.write_i32_slice(b.addr, data),
         }
         Response::Ack
     }
@@ -341,12 +421,12 @@ impl Session {
                 format!("total must be 1..={} work items", self.limits.max_items),
             );
         }
-        let device = match device {
-            Some(d) if (d as usize) < self.devices.len() => Some(self.devices[d as usize]),
+        let slot = match device {
+            Some(d) if (d as usize) < self.configs.len() => Some(d as usize),
             Some(d) => {
                 return err(
                     ErrorCode::BadRequest,
-                    format!("device index {d} out of range ({} devices)", self.devices.len()),
+                    format!("device index {d} out of range ({} devices)", self.configs.len()),
                 )
             }
             None => None,
@@ -388,13 +468,43 @@ impl Session {
                 ),
             );
         }
-        let was_running = self.queue.occupancy().in_flight > 0;
-        let enq = match device {
-            Some(d) => self.queue.enqueue_on_after(d, &k, total, args, backend, &wait_events),
-            None => self.queue.enqueue_any_after(&k, total, args, backend, &wait_events),
+        let enq = match &mut self.exec {
+            Exec::Private { queue, devices } => {
+                let dev = slot.map(|s| devices[s]);
+                let was_running = queue.occupancy().in_flight > 0;
+                let r = match dev {
+                    Some(d) => queue.enqueue_on_after(d, &k, total, args, backend, &wait_events),
+                    None => queue.enqueue_any_after(&k, total, args, backend, &wait_events),
+                };
+                r.map(|ev| {
+                    // streaming submission: execution starts now, not
+                    // at finish — later enqueues join the running graph
+                    queue.flush();
+                    (ev, was_running)
+                })
+            }
+            Exec::Fleet { fleet, tenant, root, holds_ref } => {
+                let dev = slot.map(|s| fleet.devices()[s]);
+                let take_ref = !*holds_ref;
+                let r = fleet.enqueue(
+                    *tenant,
+                    root,
+                    &k,
+                    total,
+                    args,
+                    dev,
+                    backend,
+                    &wait_events,
+                    take_ref,
+                );
+                if r.is_ok() {
+                    *holds_ref = true;
+                }
+                r
+            }
         };
         match enq {
-            Ok(ev) => {
+            Ok((ev, was_running)) => {
                 let wid = self.next_event;
                 self.next_event += 1;
                 self.pending.push((wid, ev));
@@ -402,9 +512,6 @@ impl Session {
                 self.metrics
                     .launches_enqueued
                     .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                // streaming submission: execution starts now, not at
-                // finish — later enqueues join the running graph
-                self.queue.flush();
                 if was_running {
                     self.metrics
                         .launches_streamed
@@ -455,6 +562,11 @@ impl Session {
                 self.metrics
                     .launches_failed
                     .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if matches!(e, LaunchError::Protection) {
+                    self.metrics
+                        .protection_faults
+                        .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                }
                 (
                     EventSummary {
                         event: wid,
@@ -477,7 +589,13 @@ impl Session {
     /// stay exact sums across concurrent sessions.
     fn publish_occupancy(&mut self) {
         use std::sync::atomic::Ordering;
-        let o = self.queue.occupancy();
+        // fleet tenants don't publish into the service-wide gauges:
+        // shared-queue occupancy is reported per fleet (`stats.fleets`),
+        // where it isn't double-counted across tenants
+        let Exec::Private { queue, .. } = &self.exec else {
+            return;
+        };
+        let o = queue.occupancy();
         let (fl, rd) = (o.in_flight as u64, o.ready as u64);
         let (pf, pr) = self.published;
         if fl >= pf {
@@ -502,12 +620,35 @@ impl Session {
             return Vec::new();
         }
         let pending = std::mem::take(&mut self.pending);
-        let results = self.queue.finish();
-        debug_assert_eq!(
-            results.len(),
-            self.current_batch.len(),
-            "session owns every queue event"
-        );
+        let outcomes: Vec<(u64, Event, Result<crate::pocl::QueuedResult, LaunchError>)> =
+            match &mut self.exec {
+                Exec::Private { queue, .. } => {
+                    let results = queue.finish();
+                    debug_assert_eq!(
+                        results.len(),
+                        self.current_batch.len(),
+                        "session owns every queue event"
+                    );
+                    pending.into_iter().map(|(wid, ev)| (wid, ev, results[ev.0].clone())).collect()
+                }
+                // the fleet batch is shared: harvest this tenant's
+                // events (in enqueue order) without retiring it — the
+                // fleet rotates once every tenant has drained
+                Exec::Fleet { fleet, holds_ref, .. } => {
+                    let outcomes = pending
+                        .into_iter()
+                        .map(|(wid, ev)| {
+                            let r = fleet.wait_harvest(ev);
+                            (wid, ev, r)
+                        })
+                        .collect();
+                    if *holds_ref {
+                        *holds_ref = false;
+                        fleet.release_ref();
+                    }
+                    outcomes
+                }
+            };
         // the previous finished batch's memories lapse; the batch
         // retiring now (including events harvested mid-stream) stays
         // readable until the next finish
@@ -516,9 +657,9 @@ impl Session {
                 c.mem = None;
             }
         }
-        let mut summaries = Vec::with_capacity(pending.len());
-        for (wid, ev) in pending {
-            summaries.push(self.harvest(wid, ev, results[ev.0].clone()));
+        let mut summaries = Vec::with_capacity(outcomes.len());
+        for (wid, ev, res) in outcomes {
+            summaries.push(self.harvest(wid, ev, res));
         }
         self.last_batch = std::mem::take(&mut self.current_batch);
         self.publish_occupancy();
@@ -539,7 +680,13 @@ impl Session {
             // retires — the rest of the batch keeps running and stays
             // open for more streaming enqueues
             let (wid, qe) = self.pending.remove(pos);
-            let res = self.queue.wait(qe);
+            let res = match &mut self.exec {
+                Exec::Private { queue, .. } => queue.wait(qe),
+                // the batch ref is NOT released even if this was the
+                // last pending event: completed handles must stay valid
+                // for wait lists until this tenant's `finish`
+                Exec::Fleet { fleet, .. } => fleet.wait_harvest(qe),
+            };
             let summary = self.harvest(wid, qe, res);
             self.publish_occupancy();
             return Response::EventStatus { result: summary };
@@ -603,6 +750,11 @@ impl Drop for Session {
         self.metrics.sched_in_flight.fetch_sub(pf, std::sync::atomic::Ordering::SeqCst);
         self.metrics.sched_ready.fetch_sub(pr, std::sync::atomic::Ordering::SeqCst);
         self.metrics.sessions_active.fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+        if let Exec::Fleet { fleet, holds_ref, .. } = &self.exec {
+            // abandoned pending launches finish on the fleet's workers;
+            // the detach lets the shared batch rotate once quiescent
+            fleet.detach(*holds_ref, self.pending.len());
+        }
     }
 }
 

@@ -11,9 +11,14 @@
 //!   sequence through a [`LaunchQueue`] directly: the service adds
 //!   multiplexing, not scheduling.
 //! * **Admission + lifecycle** — the global in-flight cap backpressures
-//!   across sessions with explicit `busy` frames; stale event handles
-//!   surface the dedicated `stale_event` code over the wire; shutdown
-//!   drains gracefully and refuses new work.
+//!   across sessions with explicit `busy` frames (connection-cap
+//!   refusals count on their own `sessions_rejected` gauge); stale
+//!   event handles surface the dedicated `stale_event` code over the
+//!   wire; shutdown drains gracefully and refuses new work.
+//! * **Shared fleets** — tenants of one named fleet run concurrently on
+//!   shared devices yet observe per-tenant results bit-identical to a
+//!   sequential solo replay, and a cross-tenant access is answered with
+//!   a deterministic `protection` fault, never silent corruption.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -23,8 +28,8 @@ use vortex::coordinator::quickcheck;
 use vortex::pocl::{Backend, LaunchQueue, VortexDevice};
 use vortex::server::load::{scale_kernel_body, scale_kernel_name, SCALE_FACTORS};
 use vortex::server::{
-    run_bombard, BombardConfig, Client, ClientError, ErrorCode, EventSummary, Request,
-    Response, ServeConfig, Server, SessionLimits,
+    run_bombard, BombardConfig, Client, ClientError, ErrorCode, EventSummary, FleetStat,
+    Request, Response, ServeConfig, Server, SessionLimits,
 };
 use vortex::workloads::rng::SplitMix64;
 
@@ -50,7 +55,10 @@ fn rand_id(rng: &mut SplitMix64) -> u64 {
 
 fn rand_request(rng: &mut SplitMix64) -> Request {
     match rng.below(10) {
-        0 => Request::OpenSession { devices: rand_devices(rng) },
+        0 => Request::OpenSession {
+            devices: rand_devices(rng),
+            fleet: if rng.below(2) == 0 { None } else { Some(rand_string(rng)) },
+        },
         1 => Request::StageKernel { name: rand_string(rng), body: rand_string(rng) },
         2 => Request::CreateBuffer { len: rng.next_u32() },
         3 => Request::WriteBuffer {
@@ -90,16 +98,17 @@ fn rand_summary(rng: &mut SplitMix64) -> EventSummary {
 }
 
 fn rand_response(rng: &mut SplitMix64) -> Response {
-    const CODES: [ErrorCode; 5] = [
+    const CODES: [ErrorCode; 6] = [
         ErrorCode::BadRequest,
         ErrorCode::Busy,
         ErrorCode::Launch,
         ErrorCode::StaleEvent,
+        ErrorCode::Protection,
         ErrorCode::ShuttingDown,
     ];
     match rng.below(9) {
         0 => Response::Error {
-            code: CODES[rng.below(5) as usize],
+            code: CODES[rng.below(6) as usize],
             message: rand_string(rng),
         },
         1 => Response::Session { session: rand_id(rng), devices: rand_devices(rng) },
@@ -119,6 +128,8 @@ fn rand_response(rng: &mut SplitMix64) -> Response {
                 sessions_active: rand_id(rng),
                 requests_accepted: rand_id(rng),
                 requests_rejected: rand_id(rng),
+                sessions_rejected: rand_id(rng),
+                protection_faults: rand_id(rng),
                 launches_enqueued: rand_id(rng),
                 launches_completed: rand_id(rng),
                 launches_failed: rand_id(rng),
@@ -127,6 +138,15 @@ fn rand_response(rng: &mut SplitMix64) -> Response {
                 sched_in_flight: rand_id(rng),
                 sched_ready: rand_id(rng),
                 device_cycles: (0..rng.below(4)).map(|_| rand_id(rng)).collect(),
+                fleets: (0..rng.below(3))
+                    .map(|_| FleetStat {
+                        name: rand_string(rng),
+                        sessions: rand_id(rng),
+                        in_flight: rand_id(rng),
+                        ready: rand_id(rng),
+                        launches: rand_id(rng),
+                    })
+                    .collect(),
             },
         },
     }
@@ -165,6 +185,7 @@ fn tiny_server(max_line: usize) -> Server {
             max_sessions: 8,
             limits: SessionLimits::default(),
             max_line,
+            fleets: Vec::new(),
         },
     )
     .unwrap()
@@ -363,6 +384,7 @@ fn bombard_matches_direct_launch_queue_bit_identically() {
             max_sessions: 8,
             limits: SessionLimits::default(),
             max_line: 1 << 20,
+            fleets: Vec::new(),
         },
     )
     .unwrap();
@@ -423,6 +445,7 @@ fn bombard_load_generator_is_clean_against_a_two_device_fleet() {
             max_sessions: 16,
             limits: SessionLimits::default(),
             max_line: 1 << 20,
+            fleets: Vec::new(),
         },
     )
     .unwrap();
@@ -434,6 +457,7 @@ fn bombard_load_generator_is_clean_against_a_two_device_fleet() {
         seed: 0xC0FFEE,
         shutdown: true,
         stream: false,
+        fleet: None,
     });
     assert_eq!(rep.requests_sent, 32);
     assert_eq!(rep.answered, 32, "no request may go unanswered: {:?}", rep.errors);
@@ -461,6 +485,7 @@ fn bombard_streaming_scenario_is_clean() {
             max_sessions: 16,
             limits: SessionLimits::default(),
             max_line: 1 << 20,
+            fleets: Vec::new(),
         },
     )
     .unwrap();
@@ -472,6 +497,7 @@ fn bombard_streaming_scenario_is_clean() {
         seed: 0xFEED,
         shutdown: true,
         stream: true,
+        fleet: None,
     });
     assert_eq!(rep.requests_sent, 32);
     assert_eq!(rep.answered, 32, "no request may go unanswered: {:?}", rep.errors);
@@ -506,6 +532,7 @@ fn global_inflight_cap_backpressures_across_sessions() {
                 ..SessionLimits::default()
             },
             max_line: 1 << 20,
+            fleets: Vec::new(),
         },
     )
     .unwrap();
@@ -543,6 +570,44 @@ fn global_inflight_cap_backpressures_across_sessions() {
     server.shutdown();
     drop(c1);
     drop(c2);
+    server.wait();
+}
+
+#[test]
+fn connection_cap_rejections_count_as_sessions_not_requests() {
+    // satellite regression: refusing a connection at the accept loop
+    // must increment the dedicated `sessions_rejected` gauge and leave
+    // `requests_rejected` (request-level saturation) untouched
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: vec![(1, 2)],
+            jobs: 1,
+            max_sessions: 1,
+            limits: SessionLimits::default(),
+            max_line: 1 << 16,
+            fleets: Vec::new(),
+        },
+    )
+    .unwrap();
+    // the single connection slot is taken…
+    let mut held = Client::connect(&server.addr().to_string()).unwrap();
+    held.open_session(&[]).unwrap();
+    // …so the next connection is refused with one explicit busy frame
+    let (w, mut r) = raw_conn(&server);
+    match read_frame(&mut r) {
+        Response::Error { code: ErrorCode::Busy, message } => {
+            assert!(message.contains("connection cap"), "{message}");
+        }
+        other => panic!("expected busy, got {other:?}"),
+    }
+    drop(w);
+    drop(r);
+    let stats = held.stats().unwrap();
+    assert_eq!(stats.sessions_rejected, 1, "{stats:?}");
+    assert_eq!(stats.requests_rejected, 0, "{stats:?}");
+    server.shutdown();
+    drop(held);
     server.wait();
 }
 
@@ -592,6 +657,7 @@ fn wait_event_returns_per_event_while_an_unrelated_chain_runs() {
             max_sessions: 4,
             limits: SessionLimits::default(),
             max_line: 1 << 20,
+            fleets: Vec::new(),
         },
     )
     .unwrap();
@@ -629,6 +695,192 @@ fn wait_event_returns_per_event_while_an_unrelated_chain_runs() {
     }
     server.shutdown();
     drop(cl);
+    server.wait();
+}
+
+// ------------------------------------------------------------ shared fleets
+
+/// A server hosting one shared fleet over the usual two devices (its
+/// private default configs stay a single tiny device so a stray
+/// non-fleet session is obvious).
+fn fleet_server() -> Server {
+    Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: vec![(1, 2)],
+            jobs: 2,
+            max_sessions: 8,
+            limits: SessionLimits::default(),
+            max_line: 1 << 20,
+            fleets: vec![("shared".to_string(), FLEET.to_vec())],
+        },
+    )
+    .unwrap()
+}
+
+/// Per-event fleet observation: (cycles, device slot, read-back).
+/// `exec_seq` is excluded on purpose — the shared batch's commit order
+/// interleaves *other tenants'* launches, so it is contention-dependent
+/// even though every per-tenant result is not.
+type FleetObserved = (u64, Option<u32>, Vec<i32>);
+
+/// Attach to the shared fleet and set up kernel + buffers + input.
+/// Setup is done sequentially (caller's thread) in both the shared run
+/// and the solo replay so every tenant gets the same tenant tag and the
+/// same arena addresses in both runs.
+fn fleet_setup(addr: &str, c: usize, input: &[i32]) -> (Client, u32, u32, u32) {
+    let mut cl = Client::connect(addr).unwrap();
+    let (_, devices) = cl.open_session_fleet("shared").unwrap();
+    assert_eq!(devices, FLEET.to_vec());
+    let factor = SCALE_FACTORS[c % SCALE_FACTORS.len()];
+    cl.stage_kernel(scale_kernel_name(factor), &scale_kernel_body(factor)).unwrap();
+    let a = cl.create_buffer((N * 4) as u32).unwrap();
+    let b = cl.create_buffer((N * 4) as u32).unwrap();
+    let d = cl.create_buffer((N * 4) as u32).unwrap();
+    cl.write_buffer(a, input).unwrap();
+    (cl, a, b, d)
+}
+
+/// Drive one tenant's deterministic schedule: always-pinned placement
+/// (alternating devices), every second batch a two-launch chain.
+fn fleet_drive(cl: &mut Client, c: usize, bufs: (u32, u32, u32)) -> Vec<Vec<FleetObserved>> {
+    let (a, b, d) = bufs;
+    let kernel = scale_kernel_name(SCALE_FACTORS[c % SCALE_FACTORS.len()]);
+    let mut out = Vec::new();
+    for r in 0..BATCHES {
+        let dev = Some((r % FLEET.len()) as u32);
+        let chained = r % 2 == 1;
+        let mut events = vec![(
+            cl.enqueue(kernel, N as u32, &[a, b], dev, Backend::SimX, &[]).unwrap(),
+            b,
+        )];
+        if chained {
+            let e1 = events[0].0;
+            events.push((
+                cl.enqueue(kernel, N as u32, &[b, d], dev, Backend::SimX, &[e1]).unwrap(),
+                d,
+            ));
+        }
+        let results = cl.finish().unwrap();
+        assert_eq!(results.len(), events.len());
+        let mut batch = Vec::new();
+        for (i, &(ev, dst)) in events.iter().enumerate() {
+            let s = &results[i];
+            assert_eq!(s.event, ev);
+            assert!(s.ok, "tenant {c} batch {r} event {ev}: {:?}", s.error);
+            batch.push((s.cycles, s.device, cl.read_result(ev, dst, N as u32).unwrap()));
+        }
+        out.push(batch);
+    }
+    out
+}
+
+#[test]
+fn shared_fleet_tenants_match_a_sequential_solo_replay_bit_identically() {
+    const TENANTS: usize = 3;
+    let inputs: Vec<Vec<i32>> = (0..TENANTS)
+        .map(|c| {
+            let mut rng = SplitMix64::new(0xF1EE7 + c as u64);
+            (0..N).map(|_| rng.range_i32(-50, 50)).collect()
+        })
+        .collect();
+
+    // shared run: sequential setup (deterministic tags + addresses),
+    // then all tenants drive their schedules concurrently on the one
+    // fleet
+    let server = fleet_server();
+    let addr = server.addr().to_string();
+    let sessions: Vec<_> =
+        (0..TENANTS).map(|c| fleet_setup(&addr, c, &inputs[c])).collect();
+    let shared: Vec<Vec<Vec<FleetObserved>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = sessions
+            .into_iter()
+            .enumerate()
+            .map(|(c, (mut cl, a, b, d))| {
+                scope.spawn(move || fleet_drive(&mut cl, c, (a, b, d)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // the data is the expected per-tenant product (no cross-tenant leak)
+    for (c, obs) in shared.iter().enumerate() {
+        let factor = SCALE_FACTORS[c % SCALE_FACTORS.len()] as i32;
+        let want: Vec<i32> = inputs[c].iter().map(|x| x * factor).collect();
+        assert_eq!(obs[0][0].2, want, "tenant {c}");
+        let want2: Vec<i32> = inputs[c].iter().map(|x| x * factor * factor).collect();
+        assert_eq!(obs[1][1].2, want2, "tenant {c} chained batch");
+    }
+
+    // the fleet is visible in stats, with zero protection faults
+    let mut ctl = Client::connect(&addr).unwrap();
+    let stats = ctl.stats().unwrap();
+    assert_eq!(stats.protection_faults, 0, "{stats:?}");
+    assert_eq!(stats.fleets.len(), 1, "{stats:?}");
+    assert_eq!(stats.fleets[0].name, "shared");
+    assert_eq!(stats.fleets[0].in_flight, 0);
+    assert!(stats.fleets[0].launches >= (TENANTS * BATCHES) as u64, "{stats:?}");
+    drop(ctl);
+    server.shutdown();
+    server.wait();
+
+    // solo replay: a fresh identical fleet, same sequential setup, each
+    // tenant's schedule driven alone — per-tenant results must be
+    // bit-identical to what that tenant observed under contention
+    let server2 = fleet_server();
+    let addr2 = server2.addr().to_string();
+    let sessions2: Vec<_> =
+        (0..TENANTS).map(|c| fleet_setup(&addr2, c, &inputs[c])).collect();
+    for (c, (mut cl, a, b, d)) in sessions2.into_iter().enumerate() {
+        let solo = fleet_drive(&mut cl, c, (a, b, d));
+        assert_eq!(
+            shared[c], solo,
+            "tenant {c}: shared-fleet results must match the solo replay"
+        );
+    }
+    server2.shutdown();
+    server2.wait();
+}
+
+#[test]
+fn cross_tenant_access_is_a_protection_fault_over_the_wire() {
+    let server = fleet_server();
+    let addr = server.addr().to_string();
+    // tenant A holds the payload
+    let mut a = Client::connect(&addr).unwrap();
+    a.open_session_fleet("shared").unwrap();
+    a.stage_kernel(scale_kernel_name(2), &scale_kernel_body(2)).unwrap();
+    let a_in = a.create_buffer(64).unwrap();
+    let a_out = a.create_buffer(64).unwrap();
+    a.write_buffer(a_in, &[7; 4]).unwrap();
+    // tenant B aims its destination at A's pages
+    let mut b = Client::connect(&addr).unwrap();
+    b.open_session_fleet("shared").unwrap();
+    b.stage_kernel(scale_kernel_name(3), &scale_kernel_body(3)).unwrap();
+    let b_in = b.create_buffer(64).unwrap();
+    b.write_buffer(b_in, &[9; 4]).unwrap();
+    let e = b
+        .enqueue(scale_kernel_name(3), 4, &[b_in, a_in], Some(0), Backend::SimX, &[])
+        .unwrap();
+    let s = b.wait_event(e).unwrap();
+    assert!(!s.ok, "cross-tenant store must fail: {s:?}");
+    assert!(
+        s.error.as_deref().unwrap_or("").contains("protection"),
+        "the failure names the protection fault: {s:?}"
+    );
+    // A's pages were never touched: the offending stores were
+    // suppressed, not applied — A's own launch still sees [7; 4]
+    let ea = a
+        .enqueue(scale_kernel_name(2), 4, &[a_in, a_out], Some(1), Backend::SimX, &[])
+        .unwrap();
+    assert!(a.wait_event(ea).unwrap().ok);
+    assert_eq!(a.read_result(ea, a_out, 4).unwrap(), vec![14; 4]);
+    // and the fault is visible in the service counters
+    let stats = a.stats().unwrap();
+    assert!(stats.protection_faults >= 1, "{stats:?}");
+    server.shutdown();
+    drop(a);
+    drop(b);
     server.wait();
 }
 
