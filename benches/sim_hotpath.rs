@@ -19,7 +19,9 @@ use vortex::coordinator::benchkit::{speedup, throughput, Bencher};
 use vortex::coordinator::report::Json;
 use vortex::emu::Emulator;
 use vortex::kernels::Bench;
-use vortex::pocl::{Backend, DeviceId, Event, LaunchQueue, SchedMode, VortexDevice};
+use vortex::pocl::{
+    Backend, DeviceId, Event, LaunchQueue, LaunchStep, SchedMode, VortexDevice,
+};
 use vortex::server::{run_bombard, BombardConfig, ServeConfig, Server};
 use vortex::sim::cache::Cache;
 use vortex::sim::{ExecMode, Simulator};
@@ -460,6 +462,100 @@ fn main() {
     json.push("server_shared_fleet_p50_ms", (rep.p50.as_secs_f64() * 1e3).into());
     json.push("server_shared_fleet_p99_ms", (rep.p99.as_secs_f64() * 1e3).into());
     json.push("server_shared_fleet_launches", rep.launches.into());
+
+    // --- resilience: snapshot capture/restore + preemption round trip ---
+    // Checkpoint-per-batch journaling (serve --state-dir) and preemptive
+    // scheduling are only viable if their latencies stay bounded:
+    // snapshots are COW (O(page-directory), no page copies), restore is
+    // the inverse, and a preempt → suspend → resume round trip must cost
+    // little over the uninterrupted launch. The *_ms keys below are
+    // lower-is-better ceilings in the CI baseline.
+    let snap_n = if smoke { 2048usize } else { 8192 };
+    let w_snap = wl::vecadd(snap_n, 0xC0FFEE);
+    let mut snap_dev = VortexDevice::new(MachineConfig::with_wt(4, 4));
+    let sa = snap_dev.create_buffer(snap_n * 4);
+    let sb = snap_dev.create_buffer(snap_n * 4);
+    let sc = snap_dev.create_buffer(snap_n * 4);
+    snap_dev.write_buffer_i32(sa, &w_snap.a);
+    snap_dev.write_buffer_i32(sb, &w_snap.b);
+    // one launch first, so the checkpoint covers a live working set
+    snap_dev
+        .launch(&kernel, snap_n as u32, &[sa.addr, sb.addr, sc.addr], Backend::SimX)
+        .unwrap();
+    let pages = snap_dev.mem.resident_pages();
+    let mcap = bencher.bench(&format!("snapshot_capture_{pages}pages"), || {
+        snap_dev.snapshot().fingerprint
+    });
+    let snap = snap_dev.snapshot();
+    let mrest = bencher.bench(&format!("snapshot_restore_{pages}pages"), || {
+        snap_dev.restore_snapshot(&snap).unwrap();
+        snap_dev.mem.resident_pages()
+    });
+    assert_eq!(
+        snap_dev.snapshot().fingerprint,
+        snap.fingerprint,
+        "restore must reproduce the captured state exactly"
+    );
+    let (cap_ms, rest_ms) = (mcap.mean.as_secs_f64() * 1e3, mrest.mean.as_secs_f64() * 1e3);
+    println!(
+        "  -> checkpoint a {pages}-page device: capture {cap_ms:.3} ms, restore {rest_ms:.3} ms\n"
+    );
+    json.push("snapshot_capture_ms", cap_ms.into());
+    json.push("snapshot_restore_ms", rest_ms.into());
+
+    // preemption round trip: the flag is pre-set, so the launch suspends
+    // at its first commit boundary and resumes to completion — the
+    // worst-case scheduling detour, which must still commit the exact
+    // cycle count of the uninterrupted run
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    let pre_n = if smoke { 256usize } else { 1024 };
+    let w_pre = wl::vecadd(pre_n, 0xC0FFEE);
+    let pre_dev = || {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(4, 4));
+        let a = dev.create_buffer(pre_n * 4);
+        let b = dev.create_buffer(pre_n * 4);
+        let c = dev.create_buffer(pre_n * 4);
+        dev.write_buffer_i32(a, &w_pre.a);
+        dev.write_buffer_i32(b, &w_pre.b);
+        (dev, [a.addr, b.addr, c.addr])
+    };
+    let mplain = bencher.bench("launch_uninterrupted", || {
+        let (mut dev, args) = pre_dev();
+        dev.launch(&kernel, pre_n as u32, &args, Backend::SimX).unwrap().cycles
+    });
+    let (mut dev, args) = pre_dev();
+    let plain_cycles = dev.launch(&kernel, pre_n as u32, &args, Backend::SimX).unwrap().cycles;
+    let mpre = bencher.bench("launch_preempt_roundtrip", || {
+        let (mut dev, args) = pre_dev();
+        let step = dev
+            .launch_preemptible(
+                &kernel,
+                pre_n as u32,
+                &args,
+                Backend::SimX,
+                Arc::new(AtomicBool::new(true)),
+            )
+            .unwrap();
+        let cycles = match step {
+            LaunchStep::Yield(s) => {
+                match dev.resume_launch(*s, Arc::new(AtomicBool::new(false))).unwrap() {
+                    LaunchStep::Done(r) => r.cycles,
+                    LaunchStep::Yield(_) => unreachable!("cleared flag runs to completion"),
+                }
+            }
+            LaunchStep::Done(r) => r.cycles,
+        };
+        assert_eq!(cycles, plain_cycles, "preemption must not perturb the committed run");
+        cycles
+    });
+    let pre_ms = mpre.mean.as_secs_f64() * 1e3;
+    println!(
+        "  -> preempt->suspend->resume round trip: {pre_ms:.3} ms ({:.2}x the \
+         uninterrupted launch)\n",
+        mpre.mean.as_secs_f64() / mplain.mean.as_secs_f64().max(1e-12)
+    );
+    json.push("preemption_roundtrip_ms", pre_ms.into());
 
     // --- machine-readable summary (perf-trajectory contract) ---
     let path = std::env::var("VORTEX_BENCH_JSON")

@@ -28,7 +28,7 @@ use crate::kernels::Bench;
 use crate::pocl::{Backend, SchedMode};
 use crate::power;
 use crate::runtime::GoldenRuntime;
-use crate::server::{BombardConfig, ServeConfig, Server, SessionLimits};
+use crate::server::{BombardConfig, Client, ClientError, ServeConfig, Server, SessionLimits};
 
 /// Parsed command line.
 #[derive(Debug, Clone, PartialEq)]
@@ -86,6 +86,19 @@ pub enum Command {
         /// many tenants attach to by name, isolated per-tenant by
         /// page-table roots over shared COW frames.
         fleets: Vec<(String, Vec<(u32, u32)>)>,
+        /// `--state-dir DIR`: journal private sessions here so a killed
+        /// server can be restarted and sessions resumed by token.
+        state_dir: Option<String>,
+    },
+    /// End-to-end crash-recovery smoke: SIGKILL a journaled serve child
+    /// mid-run, restart it over the same state dir, resume the session,
+    /// and require results + determinism fingerprint bit-identical to an
+    /// uninterrupted run.
+    CrashSmoke {
+        /// State dir (default: a scratch dir under the system temp dir).
+        dir: Option<String>,
+        n: u32,
+        seed: u64,
     },
     /// Load-generate against a serve instance (self-hosts one on an
     /// ephemeral port when `addr` is `None`).
@@ -254,6 +267,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut global_inflight = 256u32;
             let mut port_file: Option<String> = None;
             let mut fleets: Vec<(String, Vec<(u32, u32)>)> = Vec::new();
+            let mut state_dir: Option<String> = None;
             let mut i = 1;
             while i < args.len() {
                 match args[i].as_str() {
@@ -279,6 +293,9 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--fleet" => {
                         fleets.push(parse_fleet_spec(take_value(args, &mut i, "--fleet")?)?)
                     }
+                    "--state-dir" => {
+                        state_dir = Some(take_value(args, &mut i, "--state-dir")?.to_string())
+                    }
                     other => return Err(CliError(format!("unknown flag `{other}`"))),
                 }
                 i += 1;
@@ -298,7 +315,27 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 global_inflight,
                 port_file,
                 fleets,
+                state_dir,
             })
+        }
+        "crash-smoke" => {
+            let mut dir: Option<String> = None;
+            let mut n = 64u32;
+            let mut seed = 0xC0FFEEu64;
+            let mut i = 1;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--dir" => dir = Some(take_value(args, &mut i, "--dir")?.to_string()),
+                    "--n" => n = parse_num(take_value(args, &mut i, "--n")?)?,
+                    "--seed" => seed = parse_num(take_value(args, &mut i, "--seed")?)? as u64,
+                    other => return Err(CliError(format!("unknown flag `{other}`"))),
+                }
+                i += 1;
+            }
+            if n == 0 {
+                return Err(CliError("--n must be >= 1".into()));
+            }
+            Ok(Command::CrashSmoke { dir, n, seed })
         }
         "bombard" => {
             let mut addr: Option<String> = None;
@@ -473,7 +510,7 @@ USAGE:
   vortex serve [--addr HOST:PORT] [--configs 2x2,8x8] [--jobs N]
                [--max-sessions N] [--session-inflight N]
                [--global-inflight N] [--port-file PATH]
-               [--fleet NAME=2x2,8x8]...
+               [--fleet NAME=2x2,8x8]... [--state-dir DIR]
                                                   multi-tenant device service
                                                   (line-delimited JSON over
                                                   TCP; per-client sessions on
@@ -487,7 +524,14 @@ USAGE:
                                                   roots over shared COW frames
                                                   (cross-tenant access is a
                                                   deterministic protection
-                                                  error, never corruption)
+                                                  error, never corruption);
+                                                  --state-dir journals every
+                                                  private session so a killed
+                                                  server can restart and
+                                                  clients can reattach via
+                                                  open_session {resume: token}
+                                                  with zero committed results
+                                                  lost
   vortex bombard [--addr HOST:PORT] [--clients N] [--requests M] [--n SIZE]
                  [--configs 2x2,8x8] [--jobs N] [--seed S] [--shutdown]
                  [--stream] [--fleet NAME]        concurrent load generator:
@@ -504,6 +548,14 @@ USAGE:
                                                   fleet and also asserts zero
                                                   cross-tenant protection
                                                   faults
+  vortex crash-smoke [--dir DIR] [--n SIZE] [--seed S]
+                                                  end-to-end crash-recovery
+                                                  proof: SIGKILL a journaled
+                                                  serve child mid-run, restart
+                                                  it, resume the session, and
+                                                  require results + determinism
+                                                  fingerprint bit-identical to
+                                                  an uninterrupted run
 
   --jobs N   run: N > 1 enables the parallel engine (worker threads =
              min(cores, host threads); bit-identical to serial); sweep/
@@ -664,6 +716,7 @@ pub fn execute(cmd: Command) -> i32 {
             global_inflight,
             port_file,
             fleets,
+            state_dir,
         } => {
             let jobs = jobs.map_or_else(pool::default_jobs, |j| j as usize);
             let cfg = ServeConfig {
@@ -676,6 +729,7 @@ pub fn execute(cmd: Command) -> i32 {
                     ..SessionLimits::default()
                 },
                 fleets: fleets.clone(),
+                state_dir: state_dir.clone().map(std::path::PathBuf::from),
                 ..ServeConfig::default()
             };
             let srv = match Server::spawn(&addr, cfg) {
@@ -698,6 +752,12 @@ pub fn execute(cmd: Command) -> i32 {
                 let cfgs: Vec<String> =
                     cfgs.iter().map(|&(w, t)| format!("{w}x{t}")).collect();
                 println!("shared fleet `{name}`: [{}]", cfgs.join(", "));
+            }
+            if let Some(sd) = &state_dir {
+                println!(
+                    "crash recovery: journaling private sessions under {sd} \
+                     (resume with open_session {{\"resume\": token}})"
+                );
             }
             println!("(line-delimited JSON; send {{\"op\":\"shutdown\"}} to drain)");
             if let Some(pf) = port_file {
@@ -818,6 +878,7 @@ pub fn execute(cmd: Command) -> i32 {
                 1
             }
         }
+        Command::CrashSmoke { dir, n, seed } => run_crash_smoke(dir, n as usize, seed),
         Command::Power { warps, threads } => {
             let cfg = MachineConfig::with_wt(warps, threads);
             let b = power::evaluate(&cfg);
@@ -880,6 +941,267 @@ pub fn execute(cmd: Command) -> i32 {
                 eprintln!("{failures} validation failure(s)");
                 1
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// crash-smoke: the end-to-end kill -9 / restart / resume proof
+// ---------------------------------------------------------------------------
+
+/// Device pair + committed batch count the smoke drives. Two devices so
+/// the pinned ping-pong exercises cross-device recovery; 3 committed
+/// batches so the journal holds several checkpoints before the kill.
+const SMOKE_CONFIGS: [(u32, u32); 2] = [(2, 2), (4, 4)];
+const SMOKE_BATCHES: usize = 3;
+const SMOKE_FACTOR: u32 = 3;
+
+/// What the deterministic smoke sequence leaves behind after its
+/// committed prefix: the seeded input, the buffer the chain ends in, and
+/// the two launches left *pending* (enqueued + journaled, not drained).
+struct SmokeState {
+    input: Vec<i32>,
+    final_addr: u32,
+    tail_event: u64,
+}
+
+/// Drive the committed prefix: stage the scale kernel, seed the input,
+/// run `SMOKE_BATCHES` single-launch ping-pong batches (each `finish`
+/// commits a checkpoint), then leave a two-launch chain pending so the
+/// kill lands mid-run with acknowledged-but-unexecuted work in flight.
+fn smoke_prefix(cl: &mut Client, n: usize, seed: u64) -> Result<SmokeState, ClientError> {
+    use crate::server::load::{scale_kernel_body, scale_kernel_name};
+    let kernel = scale_kernel_name(SMOKE_FACTOR);
+    cl.stage_kernel(kernel, &scale_kernel_body(SMOKE_FACTOR))?;
+    let inp = cl.create_buffer((n * 4) as u32)?;
+    let out = cl.create_buffer((n * 4) as u32)?;
+    let mut rng = crate::workloads::rng::SplitMix64::new(seed);
+    let input: Vec<i32> = (0..n).map(|_| rng.range_i32(-50, 50)).collect();
+    cl.write_buffer(inp, &input)?;
+    let (mut src, mut dst) = (inp, out);
+    for b in 0..SMOKE_BATCHES {
+        cl.enqueue(
+            kernel,
+            n as u32,
+            &[src, dst],
+            Some((b % SMOKE_CONFIGS.len()) as u32),
+            crate::pocl::Backend::SimX,
+            &[],
+        )?;
+        let results = cl.finish()?;
+        if !(results.len() == 1 && results[0].ok) {
+            return Err(ClientError::Protocol(format!("batch {b} failed: {results:?}")));
+        }
+        std::mem::swap(&mut src, &mut dst);
+    }
+    // pending chain: src -> dst on device 1, then dst -> src on device 0
+    // (the wait edge makes the overwrite of src safe)
+    let e4 = cl.enqueue(kernel, n as u32, &[src, dst], Some(1), crate::pocl::Backend::SimX, &[])?;
+    let e5 =
+        cl.enqueue(kernel, n as u32, &[dst, src], Some(0), crate::pocl::Backend::SimX, &[e4])?;
+    Ok(SmokeState { input, final_addr: src, tail_event: e5 })
+}
+
+/// Drain the pending chain and collapse the session's end state to
+/// `(fingerprint, final buffer contents)`.
+fn smoke_tail(cl: &mut Client, st: &SmokeState, n: usize) -> Result<(u64, Vec<i32>), ClientError> {
+    let results = cl.finish()?;
+    if !(results.len() == 2 && results.iter().all(|r| r.ok)) {
+        return Err(ClientError::Protocol(format!("pending chain failed: {results:?}")));
+    }
+    let (fp, _events) = cl.fingerprint()?;
+    let data = cl.read_result(st.tail_event, st.final_addr, n as u32)?;
+    Ok((fp, data))
+}
+
+/// The uninterrupted reference: the identical enqueue sequence against
+/// an in-process server (no state dir, no kill). Its fingerprint + data
+/// are what the killed-and-resumed run must reproduce bit-for-bit.
+fn smoke_reference(n: usize, seed: u64) -> Result<(u64, Vec<i32>, Vec<i32>), String> {
+    let cfg = ServeConfig { configs: SMOKE_CONFIGS.to_vec(), ..ServeConfig::default() };
+    let srv = Server::spawn("127.0.0.1:0", cfg).map_err(|e| format!("reference spawn: {e}"))?;
+    let run = (|| -> Result<(u64, Vec<i32>, Vec<i32>), ClientError> {
+        let mut cl = Client::connect(&srv.addr().to_string())?;
+        cl.open_session(&[])?;
+        let st = smoke_prefix(&mut cl, n, seed)?;
+        let (fp, data) = smoke_tail(&mut cl, &st, n)?;
+        Ok((fp, data, st.input))
+    })();
+    srv.shutdown();
+    srv.wait();
+    run.map_err(|e| format!("reference run: {e}"))
+}
+
+/// Start a `vortex serve --state-dir` child on an ephemeral port and
+/// wait for its port file. The child is killed if it never comes up.
+fn spawn_serve_child(
+    dir: &std::path::Path,
+    port_file: &std::path::Path,
+) -> Result<(std::process::Child, String), String> {
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    let _ = std::fs::remove_file(port_file);
+    let configs: Vec<String> =
+        SMOKE_CONFIGS.iter().map(|&(w, t)| format!("{w}x{t}")).collect();
+    let mut child = std::process::Command::new(exe)
+        .args(["serve", "--addr", "127.0.0.1:0", "--configs", &configs.join(",")])
+        .arg("--port-file")
+        .arg(port_file)
+        .arg("--state-dir")
+        .arg(dir)
+        .stdout(std::process::Stdio::null())
+        .spawn()
+        .map_err(|e| format!("spawn serve child: {e}"))?;
+    for _ in 0..200 {
+        if let Ok(s) = std::fs::read_to_string(port_file) {
+            if let Ok(port) = s.trim().parse::<u16>() {
+                return Ok((child, format!("127.0.0.1:{port}")));
+            }
+        }
+        if let Ok(Some(status)) = child.try_wait() {
+            return Err(format!("serve child exited early: {status}"));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let _ = child.kill();
+    let _ = child.wait();
+    Err("serve child never wrote its port file".into())
+}
+
+/// `vortex crash-smoke`: prove the acknowledged-⇒-durable contract end
+/// to end across a real SIGKILL. Exit 0 only if the resumed run matches
+/// the uninterrupted reference bit-for-bit.
+fn run_crash_smoke(dir: Option<String>, n: usize, seed: u64) -> i32 {
+    let owned_tmp = dir.is_none();
+    let dir = dir.map(std::path::PathBuf::from).unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("vortex-crash-smoke-{}", std::process::id()))
+    });
+    if owned_tmp {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    println!(
+        "crash-smoke: state dir {}, n={n}, seed {seed:#x}, {SMOKE_BATCHES} committed \
+         batches + 2 pending launches at kill time",
+        dir.display()
+    );
+
+    let (ref_fp, ref_data, input) = match smoke_reference(n, seed) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("crash-smoke: {e}");
+            return 1;
+        }
+    };
+    // total chain: SMOKE_BATCHES committed + 2 pending = factor^(batches+2)
+    let total = SMOKE_FACTOR.pow(SMOKE_BATCHES as u32 + 2) as i32;
+    let want: Vec<i32> = input.iter().map(|x| x * total).collect();
+    if ref_data != want {
+        eprintln!("crash-smoke: reference run miscomputed (expected input x {total})");
+        return 1;
+    }
+    println!(
+        "crash-smoke: reference fingerprint {} (input x {total})",
+        crate::fingerprint::to_hex(ref_fp)
+    );
+
+    // phase 1: journaled child, committed prefix, pending chain, SIGKILL
+    let port_file = dir.join("port");
+    let (mut child, addr) = match spawn_serve_child(&dir, &port_file) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("crash-smoke: {e}");
+            return 1;
+        }
+    };
+    let phase1 = (|| -> Result<(String, SmokeState, u64), String> {
+        let mut cl = Client::connect(&addr).map_err(|e| format!("connect: {e}"))?;
+        cl.open_session(&[]).map_err(|e| format!("open_session: {e}"))?;
+        let token = cl.resume_token().to_string();
+        if token.is_empty() {
+            return Err("server issued no resume token (journaling off?)".into());
+        }
+        let st = smoke_prefix(&mut cl, n, seed).map_err(|e| format!("prefix: {e}"))?;
+        let (fp, events) = cl.fingerprint().map_err(|e| format!("fingerprint: {e}"))?;
+        if events != SMOKE_BATCHES as u64 {
+            return Err(format!("expected {SMOKE_BATCHES} committed events, got {events}"));
+        }
+        Ok((token, st, fp))
+    })();
+    // SIGKILL — no drain, no flush beyond what each ack already synced
+    let _ = child.kill();
+    let _ = child.wait();
+    let (token, st, committed_fp) = match phase1 {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("crash-smoke: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "crash-smoke: killed serve with committed fingerprint {} and 2 launches in flight",
+        crate::fingerprint::to_hex(committed_fp)
+    );
+
+    // phase 2: restart over the same state dir, resume, finish, compare
+    let (mut child2, addr2) = match spawn_serve_child(&dir, &port_file) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("crash-smoke: restart: {e}");
+            return 1;
+        }
+    };
+    let phase2 = (|| -> Result<(), String> {
+        let mut cl = Client::connect(&addr2).map_err(|e| format!("reconnect: {e}"))?;
+        let (_, devices) =
+            cl.open_session_resume(&token).map_err(|e| format!("resume: {e}"))?;
+        if devices != SMOKE_CONFIGS.to_vec() {
+            return Err(format!("resumed devices diverged: {devices:?}"));
+        }
+        let (fp0, ev0) = cl.fingerprint().map_err(|e| format!("fingerprint: {e}"))?;
+        if fp0 != committed_fp || ev0 != SMOKE_BATCHES as u64 {
+            return Err(format!(
+                "committed state lost across the crash: fingerprint {} ({ev0} events) \
+                 vs {} ({SMOKE_BATCHES} events)",
+                crate::fingerprint::to_hex(fp0),
+                crate::fingerprint::to_hex(committed_fp)
+            ));
+        }
+        // the two acknowledged launches were re-staged from the journal
+        let (fp, data) = smoke_tail(&mut cl, &st, n).map_err(|e| format!("tail: {e}"))?;
+        if fp != ref_fp {
+            return Err(format!(
+                "resumed fingerprint {} != uninterrupted {}",
+                crate::fingerprint::to_hex(fp),
+                crate::fingerprint::to_hex(ref_fp)
+            ));
+        }
+        if data != ref_data {
+            return Err("resumed result data != uninterrupted run".into());
+        }
+        cl.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+        Ok(())
+    })();
+    if phase2.is_ok() {
+        // the acked shutdown frame drains the child; reap it
+        let _ = child2.wait();
+    } else {
+        let _ = child2.kill();
+        let _ = child2.wait();
+    }
+    if owned_tmp {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    match phase2 {
+        Ok(()) => {
+            println!(
+                "crash-smoke: OK — zero committed results lost; resumed run bit-identical \
+                 to the uninterrupted reference ({})",
+                crate::fingerprint::to_hex(ref_fp)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("crash-smoke: FAILED: {e}");
+            1
         }
     }
 }
@@ -976,6 +1298,7 @@ mod tests {
                 global_inflight: 64,
                 port_file: Some(pf),
                 fleets,
+                state_dir: None,
             } => {
                 assert_eq!(addr, "0.0.0.0:7000");
                 assert_eq!(configs, vec![(2, 2), (4, 4)]);
@@ -1041,6 +1364,29 @@ mod tests {
         assert!(parse(&argv("bombard --requests 0")).is_err());
         assert!(parse(&argv("bombard --n 0")).is_err());
         assert!(parse(&argv("bombard --configs 2y2")).is_err());
+    }
+
+    #[test]
+    fn state_dir_and_crash_smoke_parse() {
+        match parse(&argv("serve --state-dir /tmp/vx-state")).unwrap() {
+            Command::Serve { state_dir: Some(d), .. } => assert_eq!(d, "/tmp/vx-state"),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("serve")).unwrap() {
+            Command::Serve { state_dir: None, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("serve --state-dir")).is_err());
+        match parse(&argv("crash-smoke --dir d --n 32 --seed 0x7")).unwrap() {
+            Command::CrashSmoke { dir: Some(d), n: 32, seed: 7 } => assert_eq!(d, "d"),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("crash-smoke")).unwrap() {
+            Command::CrashSmoke { dir: None, n: 64, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("crash-smoke --n 0")).is_err());
+        assert!(parse(&argv("crash-smoke --frobnicate")).is_err());
     }
 
     #[test]

@@ -69,6 +69,31 @@ impl BarrierTable {
         all.sort_unstable();
         all
     }
+
+    /// Serializable view of every armed entry, sorted by barrier id:
+    /// `(id, stalled participants in arrival order)`. Arrival order is
+    /// preserved because `arrive` pushes in program order and release
+    /// iterates the stored vector — a restored table must release
+    /// identically.
+    pub fn snapshot(&self) -> Vec<(u32, Vec<Participant>)> {
+        let mut all: Vec<(u32, Vec<Participant>)> = self
+            .entries
+            .iter()
+            .map(|(&id, e)| (id, e.stalled.clone()))
+            .collect();
+        all.sort_unstable_by_key(|&(id, _)| id);
+        all
+    }
+
+    /// Rebuild a table from [`BarrierTable::snapshot`] output.
+    pub fn restore(entries: Vec<(u32, Vec<Participant>)>) -> Self {
+        BarrierTable {
+            entries: entries
+                .into_iter()
+                .map(|(id, stalled)| (id, Entry { stalled }))
+                .collect(),
+        }
+    }
 }
 
 /// True if `id` addresses the global (cross-core) table.

@@ -17,7 +17,8 @@ pub use warp::{IpdomEntry, Warp};
 use crate::asm::{DecodedImage, Program};
 use crate::config::MachineConfig;
 use crate::mem::Memory;
-use barrier::{is_global, BarrierTable};
+use barrier::{is_global, BarrierTable, Participant};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use step::decode_at;
 
@@ -58,6 +59,51 @@ pub struct Emulator {
     decoded: Option<Arc<DecodedImage>>,
     /// `Memory::text_generation` snapshot the image is valid against.
     decode_gen: u64,
+    /// Cooperative preemption request, polled once per round-robin round
+    /// (the emulator's natural commit boundary). When set mid-run with
+    /// warps still active, [`Emulator::run`] returns
+    /// [`ExitStatus::OutOfFuel`] with the complete machine state
+    /// preserved in `self`; calling `run` again resumes bit-identically.
+    pub preempt: Option<Arc<AtomicBool>>,
+}
+
+/// Exact serialized architectural state of one warp
+/// ([`Emulator::capture_state`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WarpState {
+    pub id: u32,
+    pub pc: u32,
+    pub tmask: u32,
+    pub active: bool,
+    pub instret: u64,
+    /// `regs[thread][reg]`, lane count = the machine's `num_threads`.
+    pub regs: Vec<[u32; 32]>,
+    /// `(pc, tmask, fallthrough)` per IPDOM stack entry, bottom first.
+    pub ipdom: Vec<(u32, u32, bool)>,
+}
+
+/// Serialized state of one emulated core.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreState {
+    pub warps: Vec<WarpState>,
+    pub barrier_stalled: Vec<bool>,
+    pub local_barriers: Vec<(u32, Vec<Participant>)>,
+}
+
+/// Complete mid-kernel machine state of the functional emulator, minus
+/// device memory (captured separately — it is COW and orders of magnitude
+/// larger). [`Emulator::restore_state`] onto a fresh machine of the same
+/// config, with the memory restored alongside, continues the run
+/// bit-identically; the versioned on-disk encoding lives in
+/// [`crate::pocl::snapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MachineState {
+    pub cycle: u64,
+    pub instret: u64,
+    pub heap_end: u32,
+    pub console: Vec<u8>,
+    pub cores: Vec<CoreState>,
+    pub global_barriers: Vec<(u32, Vec<Participant>)>,
 }
 
 impl Emulator {
@@ -83,6 +129,7 @@ impl Emulator {
             instret: 0,
             decoded: None,
             decode_gen: 0,
+            preempt: None,
         }
     }
 
@@ -122,6 +169,13 @@ impl Emulator {
     pub fn run(&mut self, max_steps: u64) -> Result<ExitStatus, EmuError> {
         let mut steps = 0u64;
         while self.any_active() {
+            // Cooperative preemption at the round boundary: state stays
+            // complete in `self`, so a later `run` resumes exactly here.
+            if let Some(flag) = &self.preempt {
+                if flag.load(Ordering::Relaxed) {
+                    return Ok(ExitStatus::OutOfFuel);
+                }
+            }
             if !self.any_runnable() {
                 return Err(EmuError::Deadlock { cycle: self.cycle });
             }
@@ -228,6 +282,79 @@ impl Emulator {
     /// Console output decoded as UTF-8 (lossy).
     pub fn console_string(&self) -> String {
         String::from_utf8_lossy(&self.console).into_owned()
+    }
+
+    /// Capture the complete mid-kernel machine state (device memory is
+    /// captured separately). Pure read — the machine keeps running.
+    pub fn capture_state(&self) -> MachineState {
+        MachineState {
+            cycle: self.cycle,
+            instret: self.instret,
+            heap_end: self.heap_end,
+            console: self.console.clone(),
+            cores: self
+                .cores
+                .iter()
+                .map(|c| CoreState {
+                    warps: c
+                        .warps
+                        .iter()
+                        .map(|w| WarpState {
+                            id: w.id,
+                            pc: w.pc,
+                            tmask: w.tmask,
+                            active: w.active,
+                            instret: w.instret,
+                            regs: w.regs.clone(),
+                            ipdom: w
+                                .ipdom
+                                .iter()
+                                .map(|e| (e.pc, e.tmask, e.fallthrough))
+                                .collect(),
+                        })
+                        .collect(),
+                    barrier_stalled: c.barrier_stalled.clone(),
+                    local_barriers: c.local_barriers.snapshot(),
+                })
+                .collect(),
+            global_barriers: self.global_barriers.snapshot(),
+        }
+    }
+
+    /// Install a captured state onto this machine (same config shape:
+    /// core/warp/thread counts must match — checked). The predecoded text
+    /// image is not part of the state; fetch falls back to decoding from
+    /// the restored memory, which is semantically identical.
+    pub fn restore_state(&mut self, s: MachineState) {
+        assert_eq!(s.cores.len(), self.cores.len(), "core count mismatch");
+        self.cycle = s.cycle;
+        self.instret = s.instret;
+        self.heap_end = s.heap_end;
+        self.console = s.console;
+        self.global_barriers = BarrierTable::restore(s.global_barriers);
+        for (core, cs) in self.cores.iter_mut().zip(s.cores) {
+            assert_eq!(cs.warps.len(), core.warps.len(), "warp count mismatch");
+            for (warp, ws) in core.warps.iter_mut().zip(cs.warps) {
+                assert_eq!(
+                    ws.regs.len(),
+                    warp.regs.len(),
+                    "thread count mismatch"
+                );
+                warp.id = ws.id;
+                warp.pc = ws.pc;
+                warp.tmask = ws.tmask;
+                warp.active = ws.active;
+                warp.instret = ws.instret;
+                warp.regs = ws.regs;
+                warp.ipdom = ws
+                    .ipdom
+                    .into_iter()
+                    .map(|(pc, tmask, fallthrough)| IpdomEntry { pc, tmask, fallthrough })
+                    .collect();
+            }
+            core.barrier_stalled = cs.barrier_stalled;
+            core.local_barriers = BarrierTable::restore(cs.local_barriers);
+        }
     }
 }
 

@@ -1,0 +1,133 @@
+//! Rolling determinism fingerprints (PR 8).
+//!
+//! A [`Fingerprint`] is a cheap order-sensitive 64-bit rolling hash
+//! (FNV-1a) folded over observable execution effects — committed result
+//! summaries, console bytes, cycle counts, resident memory pages. Two
+//! runs that fold the same sequence of observations produce the same
+//! value, so fingerprint equality is the verification gate for the three
+//! snapshot/restore paths: suspend→resume preemption, device migration,
+//! and crash-recovery replay. The hash is *not* cryptographic — it
+//! detects divergence, it does not authenticate state.
+//!
+//! Values cross the wire as `0x`-prefixed hex strings (the JSON layer's
+//! numbers are f64, which cannot carry 64 bits losslessly).
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// An order-sensitive rolling hash over execution observations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fingerprint(u64);
+
+impl Default for Fingerprint {
+    fn default() -> Self {
+        Fingerprint(FNV_OFFSET)
+    }
+}
+
+impl Fingerprint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resume folding from a previously extracted [`Fingerprint::value`]
+    /// (crash-recovery restores the session fingerprint this way).
+    pub fn from_value(v: u64) -> Self {
+        Fingerprint(v)
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    pub fn fold_bytes(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+
+    #[inline]
+    pub fn fold_u64(&mut self, v: u64) {
+        self.fold_bytes(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn fold_u32(&mut self, v: u32) {
+        self.fold_bytes(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn fold_str(&mut self, s: &str) {
+        // length-prefixed so ("ab","c") never collides with ("a","bc")
+        self.fold_u64(s.len() as u64);
+        self.fold_bytes(s.as_bytes());
+    }
+}
+
+/// Render a fingerprint value as the canonical `0x%016x` wire form.
+pub fn to_hex(v: u64) -> String {
+    format!("0x{v:016x}")
+}
+
+/// Parse the canonical wire form (with or without the `0x` prefix).
+pub fn from_hex(s: &str) -> Option<u64> {
+    let t = s.strip_prefix("0x").unwrap_or(s);
+    if t.is_empty() || t.len() > 16 {
+        return None;
+    }
+    u64::from_str_radix(t, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folding_is_order_sensitive() {
+        let mut a = Fingerprint::new();
+        a.fold_u64(1);
+        a.fold_u64(2);
+        let mut b = Fingerprint::new();
+        b.fold_u64(2);
+        b.fold_u64(1);
+        assert_ne!(a.value(), b.value());
+    }
+
+    #[test]
+    fn str_folding_is_length_prefixed() {
+        let mut a = Fingerprint::new();
+        a.fold_str("ab");
+        a.fold_str("c");
+        let mut b = Fingerprint::new();
+        b.fold_str("a");
+        b.fold_str("bc");
+        assert_ne!(a.value(), b.value());
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        for v in [0u64, 1, u64::MAX, 0xdead_beef_0123_4567] {
+            assert_eq!(from_hex(&to_hex(v)), Some(v));
+        }
+        assert_eq!(from_hex("xyz"), None);
+        assert_eq!(from_hex(""), None);
+        assert_eq!(from_hex("0x"), None);
+        assert_eq!(from_hex("0x11111111111111111"), None);
+    }
+
+    #[test]
+    fn from_value_resumes_the_stream() {
+        let mut whole = Fingerprint::new();
+        whole.fold_str("first");
+        whole.fold_str("second");
+        let mut part = Fingerprint::new();
+        part.fold_str("first");
+        let mut resumed = Fingerprint::from_value(part.value());
+        resumed.fold_str("second");
+        assert_eq!(whole.value(), resumed.value());
+    }
+}

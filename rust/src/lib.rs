@@ -33,6 +33,7 @@ pub mod asm;
 pub mod config;
 pub mod coordinator;
 pub mod emu;
+pub mod fingerprint;
 pub mod isa;
 pub mod kernels;
 pub mod mem;

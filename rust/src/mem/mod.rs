@@ -814,6 +814,67 @@ impl Memory {
     pub fn text_generation(&self) -> u64 {
         self.text_gen
     }
+
+    /// Visit every resident page in ascending address order:
+    /// `f(page_base_addr, page_bytes)`. The snapshot encoder and the
+    /// content fingerprint walk the directory this way, so two memories
+    /// with the same resident page set and bytes are observationally
+    /// identical to both.
+    pub fn for_each_resident_page(&self, mut f: impl FnMut(u32, &[u8])) {
+        for (li, leaf) in self.dir.iter().enumerate() {
+            let Some(leaf) = leaf else { continue };
+            for (pi, page) in leaf.pages.iter().enumerate() {
+                let Some(page) = page else { continue };
+                let pn = (li as u32) << LEAF_BITS | pi as u32;
+                f(pn << PAGE_BITS, page.as_ref());
+            }
+        }
+    }
+
+    /// Order-sensitive FNV-1a hash over `(page_base, bytes)` of every
+    /// resident page, ascending — the memory half of a device's
+    /// determinism fingerprint. Page-restore ([`Memory::restore_pages`])
+    /// reproduces the exact resident set, so a faithful restore hashes
+    /// equal by construction.
+    pub fn content_fingerprint(&self) -> u64 {
+        let mut fp = crate::fingerprint::Fingerprint::new();
+        self.for_each_resident_page(|base, bytes| {
+            fp.fold_u32(base);
+            fp.fold_bytes(bytes);
+        });
+        fp.value()
+    }
+
+    /// The installed protection domain as `(window_lo, window_hi,
+    /// granted_ranges)`, or `None` when unprotected — the serializable
+    /// view the device snapshot encodes (the fault counter is transient
+    /// per-launch state and is never persisted).
+    pub fn protection_windows(&self) -> Option<(u32, u32, Vec<(u32, u32)>)> {
+        self.prot.as_ref().map(|p| (p.lo, p.hi, p.granted.clone()))
+    }
+
+    /// Rebuild a memory from a snapshot: materialize each `(base, bytes)`
+    /// page, then reinstall the protection domain. Host-side writes are
+    /// not protection-checked, so restore order is immaterial; pages must
+    /// arrive page-aligned and page-sized (the encoder's invariant).
+    pub fn restore_pages(
+        pages: impl IntoIterator<Item = (u32, Vec<u8>)>,
+        protection: Option<(u32, u32, Vec<(u32, u32)>)>,
+    ) -> Memory {
+        let mut mem = Memory::new();
+        for (base, bytes) in pages {
+            assert!(base & PAGE_MASK == 0, "snapshot page base must be page-aligned");
+            assert_eq!(bytes.len(), PAGE_SIZE, "snapshot page must be page-sized");
+            mem.write_block(base, &bytes);
+        }
+        if let Some((lo, hi, granted)) = protection {
+            mem.protect(lo, hi);
+            for (glo, ghi) in granted {
+                mem.grant(glo, ghi - glo);
+            }
+        }
+        mem
+    }
 }
 
 #[cfg(test)]

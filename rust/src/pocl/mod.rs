@@ -15,18 +15,23 @@
 //!   running it on the cycle simulator (or the functional oracle).
 
 pub mod queue;
+pub mod snapshot;
 
-pub use queue::{DeviceId, Event, LaunchQueue, Occupancy, QueuedResult, SchedMode};
+pub use queue::{
+    results_fingerprint, DeviceId, Event, LaunchQueue, Occupancy, QueuedResult, SchedMode,
+};
+pub use snapshot::{DeviceSnapshot, SNAPSHOT_VERSION};
 
 use crate::asm::{assemble, Program};
 use crate::config::MachineConfig;
 use crate::emu::step::EmuError;
 use crate::emu::{Emulator, ExitStatus};
 use crate::mem::Memory;
-use crate::sim::{CoreStats, ExecMode, Simulator};
+use crate::sim::{CoreStats, ExecMode, RunResult, Simulator};
 use crate::stack::spawn::{dcb_words, device_program};
 use crate::stack::{ARGS_ADDR, DCB_ADDR, MAX_ARGS};
 use std::collections::HashMap;
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 /// Device-buffer handle (`cl_mem` analog).
@@ -105,6 +110,10 @@ pub enum LaunchError {
     /// tally is an engine-level diagnostic, the launch outcome is the
     /// contract.
     Protection,
+    /// A snapshot could not be taken, decoded, or restored (version newer
+    /// than supported, shape mismatch, fingerprint divergence, or a
+    /// mid-kernel SimX machine that has no serializable form).
+    Snapshot(String),
 }
 
 impl std::fmt::Display for LaunchError {
@@ -137,6 +146,7 @@ impl std::fmt::Display for LaunchError {
                      its tenant's grants (accesses were suppressed)"
                 )
             }
+            LaunchError::Snapshot(why) => write!(f, "snapshot error: {why}"),
         }
     }
 }
@@ -236,6 +246,246 @@ pub(crate) fn execute_launch(
                 mem_pages: mem.resident_pages() as u64,
                 mem_bytes: mem.resident_bytes(),
             })
+        }
+    }
+}
+
+/// One step of a preemptible launch: either it ran to completion, or the
+/// preempt flag tripped at a safe commit boundary and the launch is
+/// suspended with its complete machine state held for later resumption.
+pub enum LaunchStep {
+    Done(LaunchResult),
+    Yield(Box<SuspendedLaunch>),
+}
+
+/// The machine of a suspended launch. Device memory lives *inside* the
+/// machine while suspended (it was moved in at launch and moves back out
+/// only when the launch finishes).
+pub enum SuspendedMachine {
+    Sim(Box<Simulator>),
+    Emu(Box<Emulator>),
+}
+
+/// An in-flight launch frozen at a preemption boundary. Resuming it —
+/// on the same device or, since the full image travels with it, on any
+/// idle device of identical configuration — commits results bit-identical
+/// to the uninterrupted run: suspension points are taken only at commit
+/// boundaries the uninterrupted schedule also passes through.
+pub struct SuspendedLaunch {
+    machine: SuspendedMachine,
+    /// Full machine configuration the launch was started with. Resumption
+    /// requires an identical config (not just the architectural shape:
+    /// SimX timing depends on cache geometry too).
+    pub config: MachineConfig,
+    pub backend: Backend,
+}
+
+impl SuspendedLaunch {
+    /// Cycles (SimX) or retired instructions (Emu) committed so far —
+    /// progress telemetry for schedulers and logs.
+    pub fn progress(&self) -> u64 {
+        match &self.machine {
+            SuspendedMachine::Sim(sim) => sim.cycles(),
+            SuspendedMachine::Emu(emu) => emu.instret,
+        }
+    }
+
+    /// Serialize the suspended launch as a versioned snapshot (functional
+    /// backend only — SimX microarchitectural state, caches and store
+    /// buffers, has no serializable form; SimX suspensions live only as
+    /// in-memory machines). Device-level host state (`next_buffer`,
+    /// `warm_caches`) is not the launch's to carry; the restoring side
+    /// supplies it.
+    pub fn to_snapshot(&self) -> Result<DeviceSnapshot, LaunchError> {
+        match &self.machine {
+            SuspendedMachine::Emu(emu) => Ok(DeviceSnapshot {
+                version: SNAPSHOT_VERSION,
+                warps: self.config.num_warps,
+                threads: self.config.num_threads,
+                cores: self.config.num_cores,
+                next_buffer: BUFFER_BASE,
+                warm_caches: false,
+                fingerprint: emu.mem.content_fingerprint(),
+                mem: emu.mem.clone(),
+                machine: Some(emu.capture_state()),
+            }),
+            SuspendedMachine::Sim(_) => Err(LaunchError::Snapshot(
+                "SimX mid-kernel state is not serializable; suspend/resume it in-memory \
+                 or checkpoint at launch boundaries"
+                    .into(),
+            )),
+        }
+    }
+
+    /// Rebuild a suspended functional-backend launch from a snapshot that
+    /// carries mid-kernel machine state (the inverse of
+    /// [`SuspendedLaunch::to_snapshot`]).
+    pub fn from_snapshot(snap: &DeviceSnapshot) -> Result<SuspendedLaunch, LaunchError> {
+        let state = snap
+            .machine
+            .clone()
+            .ok_or_else(|| LaunchError::Snapshot("snapshot carries no machine state".into()))?;
+        let mut config = MachineConfig::with_wt(snap.warps, snap.threads);
+        config.num_cores = snap.cores;
+        let mut emu = Box::new(Emulator::new(config));
+        emu.mem = snap.mem.clone();
+        emu.restore_state(state);
+        Ok(SuspendedLaunch {
+            machine: SuspendedMachine::Emu(emu),
+            config,
+            backend: Backend::Emu,
+        })
+    }
+}
+
+/// Shared finish path for SimX launches — byte-for-byte the same ordering
+/// as [`execute_launch`]: console first, memory moves back even on error,
+/// protection dominates, then machine errors, then non-zero exit.
+fn finish_sim(
+    mut sim: Box<Simulator>,
+    mem: &mut Memory,
+    run: Result<RunResult, EmuError>,
+) -> Result<LaunchResult, LaunchError> {
+    let console = String::from_utf8_lossy(&sim.console).into_owned();
+    *mem = std::mem::take(&mut sim.mem);
+    if mem.protection_faults() > 0 {
+        return Err(LaunchError::Protection);
+    }
+    let res = run.map_err(LaunchError::Machine)?;
+    if res.status != ExitStatus::Exited(0) {
+        return Err(LaunchError::BadExit(res.status));
+    }
+    Ok(LaunchResult {
+        status: res.status,
+        cycles: res.cycles,
+        stats: res.stats,
+        console,
+        mem_pages: mem.resident_pages() as u64,
+        mem_bytes: mem.resident_bytes(),
+    })
+}
+
+/// Shared finish path for functional-backend launches (mirror of
+/// [`finish_sim`]).
+fn finish_emu(
+    mut emu: Box<Emulator>,
+    mem: &mut Memory,
+    run: Result<ExitStatus, EmuError>,
+) -> Result<LaunchResult, LaunchError> {
+    let console = emu.console_string();
+    *mem = std::mem::take(&mut emu.mem);
+    if mem.protection_faults() > 0 {
+        return Err(LaunchError::Protection);
+    }
+    let status = run.map_err(LaunchError::Machine)?;
+    if status != ExitStatus::Exited(0) {
+        return Err(LaunchError::BadExit(status));
+    }
+    Ok(LaunchResult {
+        status,
+        cycles: 0,
+        stats: CoreStats::default(),
+        console,
+        mem_pages: mem.resident_pages() as u64,
+        mem_bytes: mem.resident_bytes(),
+    })
+}
+
+/// [`execute_launch`] with a preemption flag. Fuel is still unbounded, so
+/// an `OutOfFuel` status can only mean the flag tripped: the machine is
+/// then frozen (memory still inside it) and returned as a
+/// [`SuspendedLaunch`] instead of being torn down. On `Done`/`Err` the
+/// contract is identical to [`execute_launch`], including `*mem` getting
+/// the device image back even on error; on `Yield`, `*mem` is left
+/// defaulted — the image travels with the suspended machine.
+pub(crate) fn execute_launch_preemptible(
+    config: MachineConfig,
+    mem: &mut Memory,
+    prog: &Program,
+    backend: Backend,
+    warm: Option<(u32, u32)>,
+    exec_mode: ExecMode,
+    preempt: Arc<AtomicBool>,
+) -> Result<LaunchStep, LaunchError> {
+    match backend {
+        Backend::SimX => {
+            let mut sim = Box::new(Simulator::new(config));
+            sim.exec_mode = exec_mode;
+            sim.mem = std::mem::take(mem);
+            sim.load(prog);
+            if let Some((base, len)) = warm {
+                sim.warm_dcache(base, len);
+            }
+            sim.mem.reset_protection_faults();
+            sim.launch(prog.entry());
+            sim.preempt = Some(preempt);
+            let run = sim.run(u64::MAX);
+            if matches!(&run, Ok(r) if r.status == ExitStatus::OutOfFuel) {
+                sim.preempt = None;
+                return Ok(LaunchStep::Yield(Box::new(SuspendedLaunch {
+                    machine: SuspendedMachine::Sim(sim),
+                    config,
+                    backend,
+                })));
+            }
+            finish_sim(sim, mem, run).map(LaunchStep::Done)
+        }
+        Backend::Emu => {
+            let mut emu = Box::new(Emulator::new(config));
+            emu.mem = std::mem::take(mem);
+            emu.load(prog);
+            emu.mem.reset_protection_faults();
+            emu.launch(prog.entry());
+            emu.preempt = Some(preempt);
+            let run = emu.run(u64::MAX);
+            if matches!(&run, Ok(s) if *s == ExitStatus::OutOfFuel) {
+                emu.preempt = None;
+                return Ok(LaunchStep::Yield(Box::new(SuspendedLaunch {
+                    machine: SuspendedMachine::Emu(emu),
+                    config,
+                    backend,
+                })));
+            }
+            finish_emu(emu, mem, run).map(LaunchStep::Done)
+        }
+    }
+}
+
+/// Continue a [`SuspendedLaunch`] under a fresh preemption flag. May
+/// yield again; same finish contract as
+/// [`execute_launch_preemptible`].
+pub(crate) fn resume_suspended(
+    s: SuspendedLaunch,
+    mem: &mut Memory,
+    preempt: Arc<AtomicBool>,
+) -> Result<LaunchStep, LaunchError> {
+    let SuspendedLaunch { machine, config, backend } = s;
+    match machine {
+        SuspendedMachine::Sim(mut sim) => {
+            sim.preempt = Some(preempt);
+            let run = sim.run(u64::MAX);
+            if matches!(&run, Ok(r) if r.status == ExitStatus::OutOfFuel) {
+                sim.preempt = None;
+                return Ok(LaunchStep::Yield(Box::new(SuspendedLaunch {
+                    machine: SuspendedMachine::Sim(sim),
+                    config,
+                    backend,
+                })));
+            }
+            finish_sim(sim, mem, run).map(LaunchStep::Done)
+        }
+        SuspendedMachine::Emu(mut emu) => {
+            emu.preempt = Some(preempt);
+            let run = emu.run(u64::MAX);
+            if matches!(&run, Ok(st) if *st == ExitStatus::OutOfFuel) {
+                emu.preempt = None;
+                return Ok(LaunchStep::Yield(Box::new(SuspendedLaunch {
+                    machine: SuspendedMachine::Emu(emu),
+                    config,
+                    backend,
+                })));
+            }
+            finish_emu(emu, mem, run).map(LaunchStep::Done)
         }
     }
 }
@@ -367,6 +617,103 @@ impl VortexDevice {
         let prog = &self.program_cache[kernel.name];
         execute_launch(self.config, &mut self.mem, prog, backend, warm, self.exec_mode)
     }
+
+    /// [`VortexDevice::launch`] with a preemption flag: setting `preempt`
+    /// (from another thread) suspends the run at its next commit boundary
+    /// and returns [`LaunchStep::Yield`] carrying the frozen machine.
+    /// While suspended, this device's memory is the empty placeholder —
+    /// the image travels with the machine — so only launches that adopt
+    /// their own image may use the device until the suspension resolves.
+    pub fn launch_preemptible(
+        &mut self,
+        kernel: &Kernel,
+        total: u32,
+        args: &[u32],
+        backend: Backend,
+        preempt: Arc<AtomicBool>,
+    ) -> Result<LaunchStep, LaunchError> {
+        if args.len() > MAX_ARGS as usize {
+            return Err(LaunchError::TooManyArgs(args.len()));
+        }
+        self.ensure_cached(kernel)?;
+        self.write_launch_params(total, args);
+        let warm = self.warm_range();
+        let prog = Arc::clone(&self.program_cache[kernel.name]);
+        execute_launch_preemptible(
+            self.config,
+            &mut self.mem,
+            &prog,
+            backend,
+            warm,
+            self.exec_mode,
+            preempt,
+        )
+    }
+
+    /// Continue a suspended launch on this device (the same device it was
+    /// preempted on, or — migration — any device of identical config whose
+    /// own memory is disposable: on completion the launch's image becomes
+    /// this device's memory).
+    pub fn resume_launch(
+        &mut self,
+        s: SuspendedLaunch,
+        preempt: Arc<AtomicBool>,
+    ) -> Result<LaunchStep, LaunchError> {
+        if s.config != self.config {
+            return Err(LaunchError::Snapshot(format!(
+                "suspended launch config {:?} does not match device config {:?}",
+                s.config, self.config
+            )));
+        }
+        resume_suspended(s, &mut self.mem, preempt)
+    }
+
+    /// Capture a versioned snapshot of this device at a launch boundary:
+    /// memory by COW reference, allocator watermark, cache-warming flag,
+    /// protection domain, and the memory content fingerprint. O(resident
+    /// page directory), no page copies.
+    pub fn snapshot(&self) -> DeviceSnapshot {
+        DeviceSnapshot {
+            version: SNAPSHOT_VERSION,
+            warps: self.config.num_warps,
+            threads: self.config.num_threads,
+            cores: self.config.num_cores,
+            next_buffer: self.next_buffer,
+            warm_caches: self.warm_caches,
+            fingerprint: self.mem.content_fingerprint(),
+            mem: self.mem.clone(),
+            machine: None,
+        }
+    }
+
+    /// Replace this device's state with `snap` (same-device restart, crash
+    /// recovery, or migration onto a different device of the same shape).
+    /// The program cache survives — it is keyed by kernel source against
+    /// the same architectural shape.
+    pub fn restore_snapshot(&mut self, snap: &DeviceSnapshot) -> Result<(), LaunchError> {
+        if !snap.matches(&self.config) {
+            return Err(LaunchError::Snapshot(format!(
+                "snapshot shape {}w\u{d7}{}t\u{d7}{}c does not fit device shape {}w\u{d7}{}t\u{d7}{}c",
+                snap.warps,
+                snap.threads,
+                snap.cores,
+                self.config.num_warps,
+                self.config.num_threads,
+                self.config.num_cores
+            )));
+        }
+        if snap.machine.is_some() {
+            return Err(LaunchError::Snapshot(
+                "snapshot carries mid-kernel machine state; rebuild it with \
+                 SuspendedLaunch::from_snapshot and resume_launch instead"
+                    .into(),
+            ));
+        }
+        self.mem = snap.mem.clone();
+        self.next_buffer = snap.next_buffer;
+        self.warm_caches = snap.warm_caches;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -479,5 +826,114 @@ kernel_body:
         let args = vec![0u32; 17];
         let e = dev.launch(&double_kernel(), 1, &args, Backend::Emu).unwrap_err();
         assert!(matches!(e, LaunchError::TooManyArgs(17)));
+    }
+
+    #[test]
+    fn preempted_launch_resumes_bit_identical() {
+        for backend in [Backend::SimX, Backend::Emu] {
+            let n = 64usize;
+            let input: Vec<i32> = (0..n as i32).collect();
+            // uninterrupted baseline
+            let mut base = VortexDevice::new(MachineConfig::with_wt(2, 4));
+            let a = base.create_buffer(n * 4);
+            let b = base.create_buffer(n * 4);
+            base.write_buffer_i32(a, &input);
+            let want = base.launch(&double_kernel(), n as u32, &[a.addr, b.addr], backend).unwrap();
+            let want_out = base.read_buffer_i32(b, n);
+
+            // preempt immediately (flag set before the first poll), then resume
+            let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 4));
+            let a2 = dev.create_buffer(n * 4);
+            let b2 = dev.create_buffer(n * 4);
+            dev.write_buffer_i32(a2, &input);
+            let flag = Arc::new(AtomicBool::new(true));
+            let step = dev
+                .launch_preemptible(&double_kernel(), n as u32, &[a2.addr, b2.addr], backend, flag)
+                .unwrap();
+            let sus = match step {
+                LaunchStep::Yield(s) => *s,
+                LaunchStep::Done(_) => panic!("pre-set flag must yield at the first poll"),
+            };
+            assert_eq!(sus.backend, backend);
+            let done = dev.resume_launch(sus, Arc::new(AtomicBool::new(false))).unwrap();
+            let got = match done {
+                LaunchStep::Done(r) => r,
+                LaunchStep::Yield(_) => panic!("cleared flag must run to completion"),
+            };
+            assert_eq!(got.status, want.status);
+            assert_eq!(got.cycles, want.cycles, "{backend:?} cycle count must be exact");
+            assert_eq!(got.console, want.console);
+            assert_eq!(dev.read_buffer_i32(b2, n), want_out);
+            assert_eq!(
+                dev.mem.content_fingerprint(),
+                base.mem.content_fingerprint(),
+                "{backend:?} memory fingerprint must match the uninterrupted run"
+            );
+        }
+    }
+
+    #[test]
+    fn suspended_emu_launch_survives_serialization() {
+        let n = 32usize;
+        let input: Vec<i32> = (0..n as i32).map(|x| x * 7).collect();
+        let mut base = VortexDevice::new(MachineConfig::with_wt(2, 4));
+        let a = base.create_buffer(n * 4);
+        let b = base.create_buffer(n * 4);
+        base.write_buffer_i32(a, &input);
+        base.launch(&double_kernel(), n as u32, &[a.addr, b.addr], Backend::Emu).unwrap();
+        let want_out = base.read_buffer_i32(b, n);
+
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 4));
+        let a2 = dev.create_buffer(n * 4);
+        let b2 = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a2, &input);
+        let flag = Arc::new(AtomicBool::new(true));
+        let LaunchStep::Yield(sus) = dev
+            .launch_preemptible(&double_kernel(), n as u32, &[a2.addr, b2.addr], Backend::Emu, flag)
+            .unwrap()
+        else {
+            panic!("pre-set flag must yield");
+        };
+        // serialize → JSON text → rebuild → resume on a *different* device
+        let text = sus.to_snapshot().unwrap().to_json().render();
+        let snap =
+            DeviceSnapshot::from_json(&crate::coordinator::report::Json::parse(&text).unwrap())
+                .unwrap();
+        let rebuilt = SuspendedLaunch::from_snapshot(&snap).unwrap();
+        let mut other = VortexDevice::new(MachineConfig::with_wt(2, 4));
+        let _ = other.create_buffer(n * 4);
+        let _ = other.create_buffer(n * 4);
+        let LaunchStep::Done(_) =
+            other.resume_launch(rebuilt, Arc::new(AtomicBool::new(false))).unwrap()
+        else {
+            panic!("rebuilt launch must complete");
+        };
+        assert_eq!(other.read_buffer_i32(b2, n), want_out);
+        assert_eq!(other.mem.content_fingerprint(), base.mem.content_fingerprint());
+    }
+
+    #[test]
+    fn device_snapshot_restores_onto_fresh_device() {
+        let n = 16usize;
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(2, 2));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &vec![5; n]);
+        dev.launch(&double_kernel(), n as u32, &[a.addr, b.addr], Backend::SimX).unwrap();
+        let snap = dev.snapshot();
+        assert_eq!(snap.fingerprint, dev.mem.content_fingerprint());
+
+        let mut fresh = VortexDevice::new(MachineConfig::with_wt(2, 2));
+        fresh.restore_snapshot(&snap).unwrap();
+        assert_eq!(fresh.read_buffer_i32(b, n), vec![10; n]);
+        // allocator watermark restored: the next buffer lands after b
+        let c = fresh.create_buffer(16);
+        assert!(c.addr >= b.addr + (n as u32 * 4));
+        // shape mismatch is rejected whole
+        let mut wrong = VortexDevice::new(MachineConfig::with_wt(4, 4));
+        assert!(matches!(
+            wrong.restore_snapshot(&snap),
+            Err(LaunchError::Snapshot(_))
+        ));
     }
 }

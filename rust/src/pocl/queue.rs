@@ -113,7 +113,8 @@
 //! ```
 
 use super::{
-    execute_launch, validate_kernel, Backend, Kernel, LaunchError, LaunchResult, VortexDevice,
+    execute_launch, validate_kernel, Backend, DeviceSnapshot, Kernel, LaunchError, LaunchResult,
+    LaunchStep, SuspendedLaunch, VortexDevice,
 };
 use crate::asm::Program;
 use crate::config::{self, MachineConfig};
@@ -122,6 +123,7 @@ use crate::mem::Memory;
 use crate::sim::ExecMode;
 use crate::stack::MAX_ARGS;
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -241,6 +243,32 @@ impl TenantFifo {
         None
     }
 
+    /// Pop the next queued launch from a *tenant-tagged* lane only,
+    /// leaving the untagged lane (tenant 0) untouched. These are the
+    /// launches that may pass a suspended launch on the device: tenant
+    /// lineages always adopt their own image, never the device-resident
+    /// memory the suspended machine is holding. Does not advance the
+    /// round-robin cursor, so the interleaved pop order of the remaining
+    /// lanes is unchanged relative to a run without preemption.
+    fn pop_tenant(&mut self) -> Option<usize> {
+        let n = self.lanes.len();
+        for k in 0..n {
+            let slot = (self.next + k) % n;
+            if self.lanes[slot].0 == 0 {
+                continue;
+            }
+            if let Some(idx) = self.lanes[slot].1.pop_front() {
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    /// Is there anything a [`TenantFifo::pop_tenant`] would return?
+    fn pop_tenant_peek(&self) -> bool {
+        self.lanes.iter().any(|(t, q)| *t != 0 && !q.is_empty())
+    }
+
     fn len(&self) -> usize {
         self.lanes.iter().map(|(_, q)| q.len()).sum()
     }
@@ -341,6 +369,15 @@ pub struct LaunchQueue {
     /// Test-only hook (`tests/event_graph.rs`): delays must never change
     /// results, placements or `exec_seq` in `finish` mode.
     pub fault_latency: Option<(u64, u64)>,
+    /// Preemptive scheduling (streaming [`SchedMode::Reactive`] only,
+    /// off by default): a tenant-tagged launch queued behind an in-flight
+    /// launch signals it to suspend at its next commit boundary, runs
+    /// through (tenant lineages adopt their own image, so passing is
+    /// residency-safe), and the suspended launch resumes afterwards with
+    /// results bit-identical to the uninterrupted run. Suspensions are
+    /// also reachable manually via [`LaunchQueue::preempt_device`] /
+    /// [`LaunchQueue::migrate_suspended`].
+    pub preemption: bool,
     devices: Vec<VortexDevice>,
     /// Observed cost model per device, indexed like `devices`.
     sched: Vec<DeviceSched>,
@@ -392,6 +429,35 @@ fn estimate(sched: &[DeviceSched], di: usize, total: u32) -> u64 {
     }
 }
 
+/// Determinism fingerprint of a batch's results, folded in **enqueue
+/// order** (not commit order): per event — outcome, cycles, console,
+/// memory footprint, and the result image's content fingerprint. Device
+/// ids and `exec_seq` are deliberately excluded, so the fingerprint is
+/// invariant under worker count, [`SchedMode`], preemption, and launch
+/// migration — equality is the verification gate for every
+/// suspend/restore/migrate path.
+pub fn results_fingerprint(results: &[Result<QueuedResult, LaunchError>]) -> u64 {
+    let mut fp = crate::fingerprint::Fingerprint::new();
+    for (i, r) in results.iter().enumerate() {
+        fp.fold_u64(i as u64);
+        match r {
+            Ok(q) => {
+                fp.fold_u64(1);
+                fp.fold_u64(q.result.cycles);
+                fp.fold_str(&q.result.console);
+                fp.fold_u64(q.result.mem_pages);
+                fp.fold_u64(q.result.mem_bytes);
+                fp.fold_u64(q.mem.content_fingerprint());
+            }
+            Err(e) => {
+                fp.fold_u64(0);
+                fp.fold_str(&e.to_string());
+            }
+        }
+    }
+    fp.value()
+}
+
 /// Draw a process-unique batch id (shared counter across all queues, so
 /// handles from one queue can never masquerade as another's).
 fn next_batch_id() -> u64 {
@@ -426,6 +492,7 @@ impl LaunchQueue {
             stream_snapshots: true,
             sched_mode: SchedMode::default(),
             fault_latency: None,
+            preemption: false,
             devices: Vec::new(),
             sched: Vec::new(),
             configs: Vec::new(),
@@ -959,6 +1026,108 @@ impl LaunchQueue {
         }
     }
 
+    /// Ask the launch currently running on `id` to suspend at its next
+    /// commit boundary, and *hold* the resulting suspension (the engine
+    /// will not auto-resume it) so it can be inspected or migrated.
+    /// Returns `false` when nothing preemptible is running there (idle
+    /// device, non-preemptible launch, or no engine). The launch may
+    /// still finish before it observes the signal — poll
+    /// [`LaunchQueue::suspended_event`] vs [`LaunchQueue::result`] to
+    /// see which way it resolved.
+    pub fn preempt_device(&mut self, id: DeviceId) -> bool {
+        match &mut self.engine {
+            Some(eng) => eng.preempt_device(id.0),
+            None => false,
+        }
+    }
+
+    /// The event currently suspended on `id`, if any (processes pending
+    /// completions first).
+    pub fn suspended_event(&mut self, id: DeviceId) -> Option<Event> {
+        let batch = self.batch;
+        let eng = self.engine.as_mut()?;
+        eng.pump_nonblocking();
+        eng.suspended_idx(id.0).map(|i| Event(i, batch))
+    }
+
+    /// Release a held suspension on `id`: the engine resumes it as soon
+    /// as a pool slot frees up.
+    pub fn resume_device(&mut self, id: DeviceId) {
+        if let Some(eng) = &mut self.engine {
+            eng.release_hold(id.0);
+        }
+    }
+
+    /// Move the suspension held on `src` onto `dst` — live launch
+    /// migration. `dst` must be idle (parked, no suspension of its own)
+    /// and of a configuration identical to the one the launch started on;
+    /// the full device image travels inside the suspended machine, so on
+    /// completion the launch commits on `dst` exactly as it would have on
+    /// `src` (fingerprint-equal — asserted in
+    /// `tests/snapshot_resilience.rs`). The launch's scheduling charge
+    /// follows it, and its committed result reports `dst`.
+    pub fn migrate_suspended(&mut self, src: DeviceId, dst: DeviceId) -> Result<(), LaunchError> {
+        match &mut self.engine {
+            Some(eng) => {
+                eng.pump_nonblocking();
+                eng.migrate_suspended(src.0, dst.0)
+            }
+            None => Err(LaunchError::Snapshot("no streaming batch is in flight".into())),
+        }
+    }
+
+    /// Number of times an in-flight launch was suspended at a commit
+    /// boundary (auto-preemption plus manual [`LaunchQueue::preempt_device`])
+    /// since the current engine started. 0 when idle.
+    pub fn preemptions(&mut self) -> u64 {
+        match &mut self.engine {
+            Some(eng) => {
+                eng.pump_nonblocking();
+                eng.preemptions
+            }
+            None => 0,
+        }
+    }
+
+    /// Capture a versioned snapshot of device `id` at a launch boundary.
+    /// While a streaming batch is in flight the device must be idle
+    /// (quiesce first, or catch the error).
+    pub fn snapshot_device(&mut self, id: DeviceId) -> Result<DeviceSnapshot, LaunchError> {
+        match &mut self.engine {
+            Some(eng) => {
+                eng.pump_nonblocking();
+                match eng.parked(id.0) {
+                    Some(d) => Ok(d.snapshot()),
+                    None => Err(LaunchError::Snapshot(
+                        "device is in flight — quiesce() before snapshotting".into(),
+                    )),
+                }
+            }
+            None => Ok(self.devices[id.0].snapshot()),
+        }
+    }
+
+    /// Restore device `id` from a snapshot (same-shape check inside).
+    /// Same idleness requirement as [`LaunchQueue::snapshot_device`].
+    pub fn restore_device(
+        &mut self,
+        id: DeviceId,
+        snap: &DeviceSnapshot,
+    ) -> Result<(), LaunchError> {
+        match &mut self.engine {
+            Some(eng) => {
+                eng.pump_nonblocking();
+                match eng.parked_mut(id.0) {
+                    Some(d) => d.restore_snapshot(snap),
+                    None => Err(LaunchError::Snapshot(
+                        "device is in flight — quiesce() before restoring".into(),
+                    )),
+                }
+            }
+            None => self.devices[id.0].restore_snapshot(snap),
+        }
+    }
+
     /// Hand the staged batch to a reactive engine if none is active.
     fn ensure_engine(&mut self, streaming: bool) {
         if self.engine.is_some() {
@@ -977,6 +1146,7 @@ impl LaunchQueue {
                 snapshots_on: self.stream_snapshots,
                 streaming,
                 fault: self.fault_latency,
+                preempt: self.preemption && streaming,
             },
         ));
     }
@@ -1443,6 +1613,7 @@ struct EngineCfg {
     snapshots_on: bool,
     streaming: bool,
     fault: Option<(u64, u64)>,
+    preempt: bool,
 }
 
 /// Execution payload sent back by a pool worker.
@@ -1453,6 +1624,10 @@ enum ExecOut {
     /// Snapshot launch: the result, the post-run working memory, and the
     /// committed image when a dependent needs it.
     Snap(Result<(LaunchResult, Memory, Option<Memory>), LaunchError>),
+    /// Preempted owned launch: suspended at a commit boundary, machine
+    /// state (with device memory inside) frozen for resumption. The event
+    /// stays in flight — no result, no commit, no physical resolve.
+    Yielded(Box<SuspendedLaunch>),
 }
 
 /// One completion message from the pool back to the coordinator.
@@ -1541,6 +1716,22 @@ struct Engine {
     running: usize,
     inflight: usize,
 
+    // Preemptive scheduling (streaming only; see LaunchQueue::preemption).
+    preempt_on: bool,
+    /// Per device: the preempt flag of the launch currently running on it
+    /// (present only for preemptible launches).
+    preempt_flags: Vec<Option<Arc<AtomicBool>>>,
+    /// Per device: the event index currently running on it (owned).
+    running_on: Vec<Option<usize>>,
+    /// Per device: a launch suspended at a commit boundary, waiting to be
+    /// resumed (after passable work drains) or migrated.
+    suspended: Vec<Option<(usize, Box<SuspendedLaunch>)>>,
+    /// Per device: hold the suspension instead of auto-resuming it
+    /// (manual `preempt_device`, cleared by migrate/resume/drain).
+    hold: Vec<bool>,
+    /// Times any launch yielded at a commit boundary.
+    preemptions: u64,
+
     tx: mpsc::Sender<Msg>,
     rx: mpsc::Receiver<Msg>,
 }
@@ -1595,6 +1786,12 @@ impl Engine {
             charged: Vec::new(),
             running: 0,
             inflight: 0,
+            preempt_on: cfg.preempt,
+            preempt_flags: vec![None; ndev],
+            running_on: vec![None; ndev],
+            suspended: (0..ndev).map(|_| None).collect(),
+            hold: vec![false; ndev],
+            preemptions: 0,
             tx,
             rx,
         };
@@ -1618,6 +1815,10 @@ impl Engine {
         self.dev_fifo.push(TenantFifo::default());
         self.sched.push(DeviceSched::default());
         self.outstanding.push(0);
+        self.preempt_flags.push(None);
+        self.running_on.push(None);
+        self.suspended.push(None);
+        self.hold.push(false);
     }
 
     fn parked(&self, di: usize) -> Option<&VortexDevice> {
@@ -1790,6 +1991,16 @@ impl Engine {
             self.ledger.push_back(i);
         }
         self.dev_fifo[di].push(self.tenant[i], i);
+        // Auto-preemption: a tenant-tagged launch queued behind a running
+        // preemptible launch signals it to yield at its next commit
+        // boundary — the short launch passes, the long one resumes after.
+        // (Anything queued here is independent of the running launch:
+        // dispatch happens only once all dependencies resolved.)
+        if self.preempt_on && self.tenant[i] != 0 && self.running_on[di].is_some() {
+            if let Some(flag) = &self.preempt_flags[di] {
+                flag.store(true, Ordering::Relaxed);
+            }
+        }
     }
 
     fn dispatch_snap(&mut self, i: usize) {
@@ -1866,7 +2077,10 @@ impl Engine {
     }
 
     /// Spawn queued work onto free pool slots / devices: snapshots first
-    /// (no device constraint), then devices in ascending index order.
+    /// (no device constraint), then devices in ascending index order. A
+    /// device holding a suspended launch runs tenant-tagged (passable)
+    /// work first, then resumes the suspension — unless it is held for
+    /// inspection/migration.
     fn drain_dispatch(&mut self) {
         loop {
             if self.running >= self.jobs {
@@ -1876,13 +2090,25 @@ impl Engine {
                 self.spawn_snap(idx);
                 continue;
             }
-            let Some(di) = (0..self.parked.len())
-                .find(|&d| self.parked[d].is_some() && !self.dev_fifo[d].is_empty())
-            else {
+            let Some(di) = (0..self.parked.len()).find(|&d| {
+                self.parked[d].is_some()
+                    && (if self.suspended[d].is_some() {
+                        self.dev_fifo[d].pop_tenant_peek() || !self.hold[d]
+                    } else {
+                        !self.dev_fifo[d].is_empty()
+                    })
+            }) else {
                 return;
             };
-            let idx = self.dev_fifo[di].pop().expect("fifo checked non-empty");
-            self.spawn_owned(di, idx);
+            if self.suspended[di].is_some() {
+                match self.dev_fifo[di].pop_tenant() {
+                    Some(idx) => self.spawn_owned(di, idx),
+                    None => self.spawn_resume(di),
+                }
+            } else {
+                let idx = self.dev_fifo[di].pop().expect("fifo checked non-empty");
+                self.spawn_owned(di, idx);
+            }
         }
     }
 
@@ -1944,6 +2170,17 @@ impl Engine {
         self.want_commit[idx] = want;
         let keep = self.snapshots_on || want;
         let mut dev = Box::new(self.parked[di].take().expect("device free at spawn"));
+        // A launch is preemptible when the engine runs preemptive and the
+        // device is not already parking a suspension (one suspended launch
+        // per device — launches passing a suspension run to completion).
+        let flag = if self.preempt_on && self.suspended[di].is_none() {
+            let f = Arc::new(AtomicBool::new(false));
+            self.preempt_flags[di] = Some(Arc::clone(&f));
+            self.running_on[di] = Some(idx);
+            Some(f)
+        } else {
+            None
+        };
         let tx = self.tx.clone();
         let delay = fault_delay(self.fault, idx);
         pool::global().spawn(move || {
@@ -1954,22 +2191,74 @@ impl Engine {
                 if let Some(img) = adopt {
                     dev.mem = img;
                 }
-                let res = dev
-                    .launch(&launch.kernel, launch.total, &launch.args, launch.backend)
-                    .map(|result| {
-                        let img = if keep { Some(dev.mem.clone()) } else { None };
-                        (result, img)
-                    });
-                (res, dev)
+                let out = match flag {
+                    Some(flag) => {
+                        match dev.launch_preemptible(
+                            &launch.kernel,
+                            launch.total,
+                            &launch.args,
+                            launch.backend,
+                            flag,
+                        ) {
+                            Ok(LaunchStep::Done(result)) => {
+                                let img = if keep { Some(dev.mem.clone()) } else { None };
+                                ExecOut::Owned(Ok((result, img)))
+                            }
+                            Ok(LaunchStep::Yield(s)) => ExecOut::Yielded(s),
+                            Err(e) => ExecOut::Owned(Err(e)),
+                        }
+                    }
+                    None => ExecOut::Owned(
+                        dev.launch(&launch.kernel, launch.total, &launch.args, launch.backend)
+                            .map(|result| {
+                                let img = if keep { Some(dev.mem.clone()) } else { None };
+                                (result, img)
+                            }),
+                    ),
+                };
+                (out, dev)
             }));
             let msg = match payload {
-                Ok((res, dev)) => Msg { idx, dev: Some((di, dev)), out: Ok(ExecOut::Owned(res)) },
+                Ok((out, dev)) => Msg { idx, dev: Some((di, dev)), out: Ok(out) },
                 Err(p) => Msg { idx, dev: None, out: Err(p) },
             };
             let _ = tx.send(msg);
         });
         self.running += 1;
         self.inflight += 1;
+    }
+
+    /// Resume the launch suspended on `di` under a fresh preempt flag. The
+    /// event keeps its original dispatch bookkeeping (ledger slot, charge,
+    /// `want_commit`); only execution continues.
+    fn spawn_resume(&mut self, di: usize) {
+        let (idx, s) = self.suspended[di].take().expect("resume follows a suspension");
+        self.hold[di] = false;
+        let keep = self.snapshots_on || self.want_commit[idx];
+        let mut dev = Box::new(self.parked[di].take().expect("device free at resume"));
+        let flag = Arc::new(AtomicBool::new(false));
+        self.preempt_flags[di] = Some(Arc::clone(&flag));
+        self.running_on[di] = Some(idx);
+        let tx = self.tx.clone();
+        pool::global().spawn(move || {
+            let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let out = match dev.resume_launch(*s, flag) {
+                    Ok(LaunchStep::Done(result)) => {
+                        let img = if keep { Some(dev.mem.clone()) } else { None };
+                        ExecOut::Owned(Ok((result, img)))
+                    }
+                    Ok(LaunchStep::Yield(s2)) => ExecOut::Yielded(s2),
+                    Err(e) => ExecOut::Owned(Err(e)),
+                };
+                (out, dev)
+            }));
+            let msg = match payload {
+                Ok((out, dev)) => Msg { idx, dev: Some((di, dev)), out: Ok(out) },
+                Err(p) => Msg { idx, dev: None, out: Err(p) },
+            };
+            let _ = tx.send(msg);
+        });
+        self.running += 1;
     }
 
     fn spawn_snap(&mut self, idx: usize) {
@@ -2010,13 +2299,28 @@ impl Engine {
     /// refill free pool slots.
     fn on_msg(&mut self, msg: Msg) {
         self.running -= 1;
+        let from_dev = msg.dev.as_ref().map(|(d, _)| *d);
         if let Some((di, dev)) = msg.dev {
             self.parked[di] = Some(*dev);
+            if self.running_on[di] == Some(msg.idx) {
+                self.running_on[di] = None;
+                self.preempt_flags[di] = None;
+            }
         }
         let out = match msg.out {
             Ok(o) => o,
             Err(p) => std::panic::resume_unwind(p),
         };
+        if let ExecOut::Yielded(s) = out {
+            // The launch suspended at a commit boundary. It stays in
+            // flight (ledger slot, charge, inflight count untouched);
+            // passable work dispatches ahead of it, then it resumes.
+            let di = from_dev.expect("yield always returns its device");
+            self.suspended[di] = Some((msg.idx, s));
+            self.preemptions += 1;
+            self.drain_dispatch();
+            return;
+        }
         let failed = matches!(&out, ExecOut::Owned(Err(_)) | ExecOut::Snap(Err(_)));
         self.exec_out[msg.idx] = Some(out);
         self.phys_resolve(msg.idx, if failed { Some(msg.idx) } else { None });
@@ -2044,6 +2348,7 @@ impl Engine {
         self.exec_seq += 1;
         self.inflight -= 1;
         match out {
+            ExecOut::Yielded(_) => unreachable!("yields never enter exec_out"),
             ExecOut::Snap(res) => match res {
                 Ok((result, mem, img)) => {
                     self.committed[idx] = img;
@@ -2119,6 +2424,7 @@ impl Engine {
     /// Block until `idx` retires; a copy of its stored result.
     fn wait_for(&mut self, idx: usize) -> Result<QueuedResult, LaunchError> {
         self.pump_nonblocking();
+        self.drain_dispatch();
         while self.results[idx].is_none() {
             let msg = self.rx.recv().expect("launch worker channel stays open");
             self.on_msg(msg);
@@ -2129,12 +2435,90 @@ impl Engine {
     /// Block until no launch is executing or queued, without retiring
     /// the batch: every enqueued event has resolved, results and handles
     /// stay valid, devices are all parked.
+    /// Signal the launch running on `di` to suspend at its next commit
+    /// boundary and hold the suspension. False when nothing preemptible
+    /// is running there.
+    fn preempt_device(&mut self, di: usize) -> bool {
+        self.pump_nonblocking();
+        match self.preempt_flags.get(di).and_then(|f| f.as_ref()) {
+            Some(flag) => {
+                flag.store(true, Ordering::Relaxed);
+                self.hold[di] = true;
+                true
+            }
+            None => {
+                // already suspended? holding it is still meaningful
+                if self.suspended.get(di).is_some_and(|s| s.is_some()) {
+                    self.hold[di] = true;
+                    return true;
+                }
+                false
+            }
+        }
+    }
+
+    fn suspended_idx(&self, di: usize) -> Option<usize> {
+        self.suspended.get(di).and_then(|s| s.as_ref()).map(|(i, _)| *i)
+    }
+
+    fn release_hold(&mut self, di: usize) {
+        if di < self.hold.len() {
+            self.hold[di] = false;
+            self.drain_dispatch();
+        }
+    }
+
+    /// Move the suspension on `src` to idle device `dst` (identical
+    /// config required — SimX timing depends on the full configuration,
+    /// not just the shape). The launch's scheduling charge and eventual
+    /// commit attribution follow it.
+    fn migrate_suspended(&mut self, src: usize, dst: usize) -> Result<(), LaunchError> {
+        if src == dst {
+            return Err(LaunchError::Snapshot("source and destination are the same".into()));
+        }
+        let Some((_, s)) = self.suspended.get(src).and_then(|s| s.as_ref()) else {
+            return Err(LaunchError::Snapshot("no suspended launch on the source device".into()));
+        };
+        if self.suspended.get(dst).map_or(true, |d| d.is_some()) {
+            return Err(LaunchError::Snapshot(
+                "destination device already holds a suspension".into(),
+            ));
+        }
+        let Some(dst_dev) = self.parked(dst) else {
+            return Err(LaunchError::Snapshot("destination device is in flight".into()));
+        };
+        if dst_dev.config != s.config {
+            return Err(LaunchError::Snapshot(
+                "destination configuration differs from the one the launch started on".into(),
+            ));
+        }
+        let (idx, s) = self.suspended[src].take().expect("checked above");
+        self.hold[src] = false;
+        self.placed[idx] = Some(dst);
+        self.outstanding[src] = self.outstanding[src].saturating_sub(self.charged[idx]);
+        self.outstanding[dst] = self.outstanding[dst].saturating_add(self.charged[idx]);
+        self.suspended[dst] = Some((idx, s));
+        self.drain_dispatch();
+        Ok(())
+    }
+
+    /// Suspensions that are not manually held (these must resume before
+    /// the engine can be considered idle or drained).
+    fn unheld_suspensions(&self) -> bool {
+        (0..self.suspended.len()).any(|d| self.suspended[d].is_some() && !self.hold[d])
+    }
+
     fn quiesce(&mut self) {
         self.pump_nonblocking();
-        while self.running > 0
-            || !self.snap_fifo.is_empty()
-            || self.dev_fifo.iter().any(|f| !f.is_empty())
-        {
+        loop {
+            self.drain_dispatch();
+            if self.running == 0
+                && self.snap_fifo.is_empty()
+                && self.dev_fifo.iter().all(|f| f.is_empty())
+                && !self.unheld_suspensions()
+            {
+                return;
+            }
             let msg = self.rx.recv().expect("launch worker channel stays open");
             self.on_msg(msg);
         }
@@ -2146,6 +2530,11 @@ impl Engine {
     fn drain(
         &mut self,
     ) -> (Vec<Result<QueuedResult, LaunchError>>, Vec<VortexDevice>, Vec<DeviceSched>) {
+        // Draining means "run everything": held suspensions resume too.
+        for h in &mut self.hold {
+            *h = false;
+        }
+        self.drain_dispatch();
         while self.resolved < self.total() {
             let msg = self.rx.recv().expect("launch worker channel stays open");
             self.on_msg(msg);

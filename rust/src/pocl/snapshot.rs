@@ -1,0 +1,532 @@
+//! Versioned device snapshot encoding (PR 8).
+//!
+//! A [`DeviceSnapshot`] captures everything a [`super::VortexDevice`]
+//! needs to be reconstructed elsewhere — on another device slot, in
+//! another process, or after a `kill -9`:
+//!
+//! * the architectural shape (`warps × threads × cores`),
+//! * the bump-allocator watermark (`next_buffer`) and cache-warming flag,
+//! * device memory as the COW page directory — held **by reference**
+//!   (an `Arc`-sharing [`Memory`] clone, O(directory)) in memory, and as
+//!   the resident `(page, bytes)` set when encoded to JSON,
+//! * the tenant protection domain (window + grants; the transient fault
+//!   counter is deliberately not state),
+//! * optionally the exact mid-kernel machine state of a suspended
+//!   functional-emulator launch ([`MachineState`]: registers, thread
+//!   masks, IPDOM stacks, barrier tables, console, heap break), and
+//! * the memory content fingerprint at capture time, re-verified on
+//!   restore.
+//!
+//! Versioning contract (see `docs/snapshot-versioning-policy.md`): the
+//! `version` field is a single monotonically increasing integer. A
+//! decoder accepts any `version <= SNAPSHOT_VERSION`, ignores object keys
+//! it does not recognise (forward-tolerant within a version), and
+//! rejects a newer version outright — never a partial restore. SimX
+//! mid-kernel state (caches, store buffers, chunk telemetry) is
+//! intentionally *not* serializable: suspended SimX launches live as
+//! in-memory machines only, and checkpoints are taken at launch
+//! boundaries where no machine state exists.
+
+use crate::config::MachineConfig;
+use crate::coordinator::report::Json;
+use crate::emu::{CoreState, MachineState, WarpState};
+use crate::fingerprint;
+use crate::mem::Memory;
+
+/// Current snapshot encoding version. Bump on any change a v-1 decoder
+/// would misread; pure key additions are allowed within a version.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// A versioned, serializable snapshot of one device.
+#[derive(Clone)]
+pub struct DeviceSnapshot {
+    pub version: u32,
+    /// Architectural shape the snapshot was taken on. Cache geometry is
+    /// host configuration, not device state — the restoring side supplies
+    /// it and only the shape is matched.
+    pub warps: u32,
+    pub threads: u32,
+    pub cores: u32,
+    pub next_buffer: u32,
+    pub warm_caches: bool,
+    /// Device memory, by COW reference (page frames are `Arc`-shared
+    /// with the live device until either side writes).
+    pub mem: Memory,
+    /// Exact suspended functional-emulator machine state, when the
+    /// snapshot was taken mid-kernel (Emu backend only).
+    pub machine: Option<MachineState>,
+    /// `Memory::content_fingerprint` at capture — the restore gate.
+    pub fingerprint: u64,
+}
+
+impl DeviceSnapshot {
+    /// Does this snapshot fit a device of `config`'s shape?
+    pub fn matches(&self, config: &MachineConfig) -> bool {
+        self.warps == config.num_warps
+            && self.threads == config.num_threads
+            && self.cores == config.num_cores
+    }
+
+    /// Encode to the versioned JSON form (pages materialized as hex).
+    pub fn to_json(&self) -> Json {
+        let mut pages = Vec::new();
+        self.mem.for_each_resident_page(|base, bytes| {
+            let mut p = Json::obj();
+            p.push("base", Json::from(base as u64));
+            p.push("data", Json::Str(hex_encode(bytes)));
+            pages.push(p);
+        });
+        let prot = match self.mem.protection_windows() {
+            Some((lo, hi, granted)) => {
+                let mut p = Json::obj();
+                p.push("lo", Json::from(lo as u64));
+                p.push("hi", Json::from(hi as u64));
+                p.push(
+                    "granted",
+                    Json::Arr(
+                        granted
+                            .iter()
+                            .map(|&(l, h)| {
+                                Json::Arr(vec![Json::from(l as u64), Json::from(h as u64)])
+                            })
+                            .collect(),
+                    ),
+                );
+                p
+            }
+            None => Json::Null,
+        };
+        let mut o = Json::obj();
+        o.push("version", Json::from(self.version as u64));
+        o.push("warps", Json::from(self.warps as u64));
+        o.push("threads", Json::from(self.threads as u64));
+        o.push("cores", Json::from(self.cores as u64));
+        o.push("next_buffer", Json::from(self.next_buffer as u64));
+        o.push("warm_caches", Json::Bool(self.warm_caches));
+        o.push("pages", Json::Arr(pages));
+        o.push("protection", prot);
+        o.push(
+            "machine",
+            match &self.machine {
+                Some(m) => machine_to_json(m),
+                None => Json::Null,
+            },
+        );
+        o.push("fingerprint", Json::Str(fingerprint::to_hex(self.fingerprint)));
+        o
+    }
+
+    /// Decode a versioned JSON snapshot. Rejects versions newer than
+    /// [`SNAPSHOT_VERSION`]; tolerates unknown keys and absent optional
+    /// fields; verifies the embedded fingerprint against the rebuilt
+    /// memory, so a corrupted journal surfaces here rather than as a
+    /// silently divergent device.
+    pub fn from_json(j: &Json) -> Result<DeviceSnapshot, String> {
+        let version = get_u64(j, "version")? as u32;
+        if version > SNAPSHOT_VERSION {
+            return Err(format!(
+                "snapshot version {version} is newer than supported {SNAPSHOT_VERSION}"
+            ));
+        }
+        if version == 0 {
+            return Err("snapshot version 0 is invalid".into());
+        }
+        let warps = get_u64(j, "warps")? as u32;
+        let threads = get_u64(j, "threads")? as u32;
+        let cores = get_u64(j, "cores")? as u32;
+        let next_buffer = get_u64(j, "next_buffer")? as u32;
+        let warm_caches =
+            j.get("warm_caches").and_then(|v| v.as_bool()).unwrap_or(false);
+        let mut pages = Vec::new();
+        for p in j.get("pages").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let base = get_u64(p, "base")? as u32;
+            let data = p
+                .get("data")
+                .and_then(|v| v.as_str())
+                .ok_or("snapshot page missing data")?;
+            pages.push((base, hex_decode(data)?));
+        }
+        let protection = match j.get("protection") {
+            Some(Json::Null) | None => None,
+            Some(p) => {
+                let lo = get_u64(p, "lo")? as u32;
+                let hi = get_u64(p, "hi")? as u32;
+                let mut granted = Vec::new();
+                for g in p.get("granted").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                    let pair = g.as_arr().ok_or("grant must be a [lo, hi] pair")?;
+                    if pair.len() != 2 {
+                        return Err("grant must be a [lo, hi] pair".into());
+                    }
+                    let l = pair[0].as_u64().ok_or("grant bound must be a number")? as u32;
+                    let h = pair[1].as_u64().ok_or("grant bound must be a number")? as u32;
+                    granted.push((l, h));
+                }
+                Some((lo, hi, granted))
+            }
+        };
+        let machine = match j.get("machine") {
+            Some(Json::Null) | None => None,
+            Some(m) => Some(machine_from_json(m)?),
+        };
+        let fp = j
+            .get("fingerprint")
+            .and_then(|v| v.as_str())
+            .and_then(fingerprint::from_hex)
+            .ok_or("snapshot missing fingerprint")?;
+        let mem = Memory::restore_pages(pages, protection);
+        let rebuilt = mem.content_fingerprint();
+        if rebuilt != fp {
+            return Err(format!(
+                "snapshot fingerprint mismatch: encoded {} rebuilt {}",
+                fingerprint::to_hex(fp),
+                fingerprint::to_hex(rebuilt)
+            ));
+        }
+        Ok(DeviceSnapshot {
+            version,
+            warps,
+            threads,
+            cores,
+            next_buffer,
+            warm_caches,
+            mem,
+            machine,
+            fingerprint: fp,
+        })
+    }
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| format!("snapshot missing numeric field `{key}`"))
+}
+
+fn machine_to_json(m: &MachineState) -> Json {
+    let mut o = Json::obj();
+    o.push("cycle", Json::from(m.cycle));
+    o.push("instret", Json::from(m.instret));
+    o.push("heap_end", Json::from(m.heap_end as u64));
+    o.push("console", Json::Str(hex_encode(&m.console)));
+    o.push(
+        "cores",
+        Json::Arr(
+            m.cores
+                .iter()
+                .map(|c| {
+                    let mut co = Json::obj();
+                    co.push(
+                        "warps",
+                        Json::Arr(c.warps.iter().map(warp_to_json).collect()),
+                    );
+                    co.push(
+                        "barrier_stalled",
+                        Json::Arr(c.barrier_stalled.iter().map(|&b| Json::Bool(b)).collect()),
+                    );
+                    co.push("local_barriers", barriers_to_json(&c.local_barriers));
+                    co
+                })
+                .collect(),
+        ),
+    );
+    o.push("global_barriers", barriers_to_json(&m.global_barriers));
+    o
+}
+
+fn warp_to_json(w: &WarpState) -> Json {
+    let mut o = Json::obj();
+    o.push("id", Json::from(w.id as u64));
+    o.push("pc", Json::from(w.pc as u64));
+    o.push("tmask", Json::from(w.tmask as u64));
+    o.push("active", Json::Bool(w.active));
+    o.push("instret", Json::from(w.instret));
+    o.push(
+        "regs",
+        Json::Arr(
+            w.regs
+                .iter()
+                .map(|lane| Json::Arr(lane.iter().map(|&r| Json::from(r as u64)).collect()))
+                .collect(),
+        ),
+    );
+    o.push(
+        "ipdom",
+        Json::Arr(
+            w.ipdom
+                .iter()
+                .map(|&(pc, tmask, ft)| {
+                    Json::Arr(vec![
+                        Json::from(pc as u64),
+                        Json::from(tmask as u64),
+                        Json::Bool(ft),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    o
+}
+
+fn barriers_to_json(entries: &[(u32, Vec<(u32, u32)>)]) -> Json {
+    Json::Arr(
+        entries
+            .iter()
+            .map(|(id, stalled)| {
+                let mut o = Json::obj();
+                o.push("id", Json::from(*id as u64));
+                o.push(
+                    "stalled",
+                    Json::Arr(
+                        stalled
+                            .iter()
+                            .map(|&(c, w)| {
+                                Json::Arr(vec![Json::from(c as u64), Json::from(w as u64)])
+                            })
+                            .collect(),
+                    ),
+                );
+                o
+            })
+            .collect(),
+    )
+}
+
+fn machine_from_json(j: &Json) -> Result<MachineState, String> {
+    let mut cores = Vec::new();
+    for c in j.get("cores").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        let mut warps = Vec::new();
+        for w in c.get("warps").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            warps.push(warp_from_json(w)?);
+        }
+        let barrier_stalled = c
+            .get("barrier_stalled")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|b| b.as_bool().ok_or("barrier_stalled must be booleans"))
+            .collect::<Result<Vec<bool>, _>>()?;
+        cores.push(CoreState {
+            warps,
+            barrier_stalled,
+            local_barriers: barriers_from_json(c.get("local_barriers"))?,
+        });
+    }
+    Ok(MachineState {
+        cycle: get_u64(j, "cycle")?,
+        instret: get_u64(j, "instret")?,
+        heap_end: get_u64(j, "heap_end")? as u32,
+        console: j
+            .get("console")
+            .and_then(|v| v.as_str())
+            .map(hex_decode)
+            .transpose()?
+            .unwrap_or_default(),
+        cores,
+        global_barriers: barriers_from_json(j.get("global_barriers"))?,
+    })
+}
+
+fn warp_from_json(j: &Json) -> Result<WarpState, String> {
+    let mut regs = Vec::new();
+    for lane in j.get("regs").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        let vals = lane.as_arr().ok_or("warp regs lane must be an array")?;
+        if vals.len() != 32 {
+            return Err("warp regs lane must hold 32 registers".into());
+        }
+        let mut arr = [0u32; 32];
+        for (i, v) in vals.iter().enumerate() {
+            arr[i] = v.as_u64().ok_or("register must be a number")? as u32;
+        }
+        regs.push(arr);
+    }
+    let mut ipdom = Vec::new();
+    for e in j.get("ipdom").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        let t = e.as_arr().ok_or("ipdom entry must be [pc, tmask, fallthrough]")?;
+        if t.len() != 3 {
+            return Err("ipdom entry must be [pc, tmask, fallthrough]".into());
+        }
+        ipdom.push((
+            t[0].as_u64().ok_or("ipdom pc must be a number")? as u32,
+            t[1].as_u64().ok_or("ipdom tmask must be a number")? as u32,
+            t[2].as_bool().ok_or("ipdom fallthrough must be a bool")?,
+        ));
+    }
+    Ok(WarpState {
+        id: get_u64(j, "id")? as u32,
+        pc: get_u64(j, "pc")? as u32,
+        tmask: get_u64(j, "tmask")? as u32,
+        active: j.get("active").and_then(|v| v.as_bool()).unwrap_or(false),
+        instret: get_u64(j, "instret")?,
+        regs,
+        ipdom,
+    })
+}
+
+fn barriers_from_json(j: Option<&Json>) -> Result<Vec<(u32, Vec<(u32, u32)>)>, String> {
+    let mut out = Vec::new();
+    for e in j.and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        let id = get_u64(e, "id")? as u32;
+        let mut stalled = Vec::new();
+        for p in e.get("stalled").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let pair = p.as_arr().ok_or("barrier participant must be [core, warp]")?;
+            if pair.len() != 2 {
+                return Err("barrier participant must be [core, warp]".into());
+            }
+            stalled.push((
+                pair[0].as_u64().ok_or("participant core must be a number")? as u32,
+                pair[1].as_u64().ok_or("participant warp must be a number")? as u32,
+            ));
+        }
+        out.push((id, stalled));
+    }
+    Ok(out)
+}
+
+fn hex_encode(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 0xF) as usize] as char);
+    }
+    s
+}
+
+fn hex_decode(s: &str) -> Result<Vec<u8>, String> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return Err("hex payload has odd length".into());
+    }
+    let nib = |c: u8| -> Result<u8, String> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(format!("invalid hex byte 0x{c:02x}")),
+        }
+    };
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        out.push(nib(pair[0])? << 4 | nib(pair[1])?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mem() -> Memory {
+        let mut mem = Memory::new();
+        mem.write_u32(0x9000_0000, 0xdead_beef);
+        mem.write_u32(0x9000_2004, 7);
+        mem.write_block(0x9400_0000, &[1, 2, 3]);
+        mem.protect(0x9000_0000, 0x9400_0000);
+        mem.grant(0x9000_0000, 0x3000);
+        mem
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_memory_and_protection() {
+        let mem = sample_mem();
+        let snap = DeviceSnapshot {
+            version: SNAPSHOT_VERSION,
+            warps: 4,
+            threads: 8,
+            cores: 2,
+            next_buffer: 0x9000_4000,
+            warm_caches: true,
+            fingerprint: mem.content_fingerprint(),
+            mem,
+            machine: None,
+        };
+        let text = snap.to_json().render();
+        let back = DeviceSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.version, SNAPSHOT_VERSION);
+        assert_eq!(back.warps, 4);
+        assert_eq!(back.next_buffer, 0x9000_4000);
+        assert!(back.warm_caches);
+        assert_eq!(back.mem.read_u32(0x9000_0000), 0xdead_beef);
+        assert_eq!(back.mem.read_u32(0x9000_2004), 7);
+        assert_eq!(back.mem.resident_pages(), snap.mem.resident_pages());
+        assert_eq!(back.mem.content_fingerprint(), snap.fingerprint);
+        assert_eq!(
+            back.mem.protection_windows(),
+            snap.mem.protection_windows()
+        );
+    }
+
+    #[test]
+    fn newer_version_is_rejected_whole() {
+        let mem = Memory::new();
+        let snap = DeviceSnapshot {
+            version: SNAPSHOT_VERSION,
+            warps: 1,
+            threads: 1,
+            cores: 1,
+            next_buffer: 0x9000_0000,
+            warm_caches: false,
+            fingerprint: mem.content_fingerprint(),
+            mem,
+            machine: None,
+        };
+        let mut j = snap.to_json();
+        if let Json::Obj(entries) = &mut j {
+            for (k, v) in entries.iter_mut() {
+                if k == "version" {
+                    *v = Json::from((SNAPSHOT_VERSION + 1) as u64);
+                }
+            }
+        }
+        let err = DeviceSnapshot::from_json(&j).unwrap_err();
+        assert!(err.contains("newer"), "{err}");
+    }
+
+    #[test]
+    fn unknown_keys_are_tolerated() {
+        let mem = Memory::new();
+        let snap = DeviceSnapshot {
+            version: SNAPSHOT_VERSION,
+            warps: 2,
+            threads: 2,
+            cores: 1,
+            next_buffer: 0x9000_0040,
+            warm_caches: false,
+            fingerprint: mem.content_fingerprint(),
+            mem,
+            machine: None,
+        };
+        let mut j = snap.to_json();
+        j.push("some_future_field", Json::Str("ignored".into()));
+        assert!(DeviceSnapshot::from_json(&j).is_ok());
+    }
+
+    #[test]
+    fn corrupted_page_fails_the_fingerprint_gate() {
+        let mem = sample_mem();
+        let snap = DeviceSnapshot {
+            version: SNAPSHOT_VERSION,
+            warps: 1,
+            threads: 1,
+            cores: 1,
+            next_buffer: 0x9000_0000,
+            warm_caches: false,
+            fingerprint: mem.content_fingerprint(),
+            mem,
+            machine: None,
+        };
+        let text = snap.to_json().render().replacen("deadbeef", "deadbeee", 1);
+        // the hex for 0xdead_beef little-endian is "efbeadde"; corrupt that
+        let text = text.replacen("efbeadde", "efbeaddf", 1);
+        let err = DeviceSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap_err();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+    }
+
+    #[test]
+    fn hex_codec_roundtrip() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(hex_decode(&hex_encode(&data)).unwrap(), data);
+        assert!(hex_decode("abc").is_err());
+        assert!(hex_decode("zz").is_err());
+    }
+}

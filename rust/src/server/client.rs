@@ -20,6 +20,12 @@ use std::net::TcpStream;
 pub enum ClientError {
     /// Transport failure (connect/read/write); the connection is dead.
     Io(std::io::Error),
+    /// No response within the read timeout. Distinct from [`Io`]: the
+    /// server may still be computing (a slow batch) — the caller decides
+    /// whether to widen the timeout and retry or abandon the connection.
+    ///
+    /// [`Io`]: ClientError::Io
+    Timeout(std::time::Duration),
     /// The server closed the connection or sent an undecodable frame.
     Protocol(String),
     /// The server answered `ok:false`; the connection stays usable.
@@ -37,6 +43,9 @@ impl std::fmt::Display for ClientError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ClientError::Io(e) => write!(f, "transport: {e}"),
+            ClientError::Timeout(d) => {
+                write!(f, "timeout: no response within {d:?}")
+            }
             ClientError::Protocol(m) => write!(f, "protocol: {m}"),
             ClientError::Server { code, message } => {
                 write!(f, "server [{}]: {message}", code.as_str())
@@ -67,6 +76,12 @@ fn unexpected(resp: &Response) -> ClientError {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Mirrors the socket read timeout so an expiry can be reported as
+    /// [`ClientError::Timeout`] with the bound that tripped.
+    timeout: Option<std::time::Duration>,
+    /// The resume token from the last `open_session` (empty if the
+    /// server is not journaling this session).
+    last_resume: String,
 }
 
 impl Client {
@@ -82,7 +97,12 @@ impl Client {
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(Self::DEFAULT_TIMEOUT))?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { reader, writer: stream })
+        Ok(Client {
+            reader,
+            writer: stream,
+            timeout: Some(Self::DEFAULT_TIMEOUT),
+            last_resume: String::new(),
+        })
     }
 
     /// Override the per-response read timeout (`None` ⇒ block forever).
@@ -91,18 +111,28 @@ impl Client {
         timeout: Option<std::time::Duration>,
     ) -> Result<(), ClientError> {
         self.writer.set_read_timeout(timeout)?;
+        self.timeout = timeout;
         Ok(())
     }
 
     /// Send one frame, read one frame. `ok:false` becomes
-    /// [`ClientError::Server`].
+    /// [`ClientError::Server`]; a read-timeout expiry becomes
+    /// [`ClientError::Timeout`].
     pub fn request(&mut self, req: &Request) -> Result<Response, ClientError> {
         let mut line = req.encode();
         line.push('\n');
         self.writer.write_all(line.as_bytes())?;
         self.writer.flush()?;
         let mut resp = String::new();
-        let n = self.reader.read_line(&mut resp)?;
+        let n = self.reader.read_line(&mut resp).map_err(|e| {
+            // both kinds appear in the wild: WouldBlock (unix), TimedOut (windows)
+            if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+            {
+                ClientError::Timeout(self.timeout.unwrap_or(Self::DEFAULT_TIMEOUT))
+            } else {
+                ClientError::Io(e)
+            }
+        })?;
         if n == 0 {
             return Err(ClientError::Protocol("server closed the connection".into()));
         }
@@ -119,8 +149,16 @@ impl Client {
         &mut self,
         devices: &[(u32, u32)],
     ) -> Result<(u64, Vec<(u32, u32)>), ClientError> {
-        match self.request(&Request::OpenSession { devices: devices.to_vec(), fleet: None })? {
-            Response::Session { session, devices } => Ok((session, devices)),
+        let req = Request::OpenSession {
+            devices: devices.to_vec(),
+            fleet: None,
+            resume: None,
+        };
+        match self.request(&req)? {
+            Response::Session { session, devices, resume } => {
+                self.last_resume = resume;
+                Ok((session, devices))
+            }
             other => Err(unexpected(&other)),
         }
     }
@@ -131,9 +169,53 @@ impl Client {
         &mut self,
         fleet: &str,
     ) -> Result<(u64, Vec<(u32, u32)>), ClientError> {
-        let req = Request::OpenSession { devices: Vec::new(), fleet: Some(fleet.to_string()) };
+        let req = Request::OpenSession {
+            devices: Vec::new(),
+            fleet: Some(fleet.to_string()),
+            resume: None,
+        };
         match self.request(&req)? {
-            Response::Session { session, devices } => Ok((session, devices)),
+            Response::Session { session, devices, resume } => {
+                self.last_resume = resume;
+                Ok((session, devices))
+            }
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Reattach a journaled session after a server crash/restart. The
+    /// token is what [`Client::resume_token`] returned when the session
+    /// was first opened; the restored session keeps its id, kernels,
+    /// buffers, committed events and determinism fingerprint.
+    pub fn open_session_resume(
+        &mut self,
+        token: &str,
+    ) -> Result<(u64, Vec<(u32, u32)>), ClientError> {
+        let req = Request::OpenSession {
+            devices: Vec::new(),
+            fleet: None,
+            resume: Some(token.to_string()),
+        };
+        match self.request(&req)? {
+            Response::Session { session, devices, resume } => {
+                self.last_resume = resume;
+                Ok((session, devices))
+            }
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// The crash-recovery token from the last `open_session` — empty if
+    /// the server is not journaling (no `--state-dir`, or fleet tenant).
+    pub fn resume_token(&self) -> &str {
+        &self.last_resume
+    }
+
+    /// The session's running determinism fingerprint and how many
+    /// committed events it folds.
+    pub fn fingerprint(&mut self) -> Result<(u64, u64), ClientError> {
+        match self.request(&Request::Fingerprint)? {
+            Response::Fingerprint { fingerprint, events } => Ok((fingerprint, events)),
             other => Err(unexpected(&other)),
         }
     }

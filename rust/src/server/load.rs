@@ -280,6 +280,8 @@ fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
     let want_chained: Vec<i32> =
         input.iter().map(|x| x * (factor * factor) as i32).collect();
     let kernel = scale_kernel_name(factor);
+    // per-client backoff stream, decorrelated from the input stream
+    let mut backoff = SplitMix64::new(cfg.seed ^ 0xB0FF ^ ((c as u64) << 32));
 
     for r in 0..cfg.requests {
         out.sent += 1;
@@ -311,6 +313,13 @@ fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
             ) {
                 Err(e) if e.is_busy() && attempt < 16 => {
                     // explicit backpressure: drain our batch and retry
+                    // after an exponential, seeded-jitter backoff so N
+                    // clients refused together don't re-collide in
+                    // lockstep on the same admission gate
+                    let exp = attempt.min(6);
+                    let base = 200u64 << exp; // 200µs … 12.8ms
+                    let jitter = backoff.below(base as u32 + 1) as u64;
+                    std::thread::sleep(Duration::from_micros(base + jitter));
                     attempt += 1;
                     out.busy_retries += 1;
                     if let Err(e) = cl.finish() {

@@ -10,7 +10,16 @@
 
 use crate::server::protocol::StatsReport;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex tolerating poison: a panic on some other thread while it
+/// held this lock must degrade to that thread's own counted failure, not
+/// cascade a panic into every thread that touches the counters afterwards
+/// (the counters are monotone u64s/vecs — any torn state a poisoning
+/// panic could leave behind is still safe to read and add to).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Shared counters for one serve instance.
 #[derive(Debug, Default)]
@@ -30,6 +39,11 @@ pub struct Metrics {
     /// is distinguishable from admission-control pushback inside open
     /// sessions.
     pub sessions_rejected: AtomicU64,
+    /// Connections whose shepherd thread died abnormally — a panic
+    /// caught at the connection boundary (lock poisoning, a bug in the
+    /// session layer). Each one is a logged, counted per-connection
+    /// failure; the accept loop keeps serving everyone else.
+    pub connections_failed: AtomicU64,
     /// Launches that failed with a memory-protection fault: a tenant on a
     /// shared fleet touched arena pages outside its own grants.
     pub protection_faults: AtomicU64,
@@ -88,11 +102,28 @@ impl Metrics {
 
     /// Account `cycles` simulated by device slot `slot`.
     pub fn add_device_cycles(&self, slot: usize, cycles: u64) {
-        let mut v = self.device_cycles.lock().unwrap();
+        let mut v = lock_unpoisoned(&self.device_cycles);
         if v.len() <= slot {
             v.resize(slot + 1, 0);
         }
         v[slot] += cycles;
+    }
+
+    /// Test support: poison the internal device-cycles lock the way a
+    /// panicking session thread would (panic while holding the guard),
+    /// so the robustness suite can prove the service degrades instead of
+    /// cascading. Hidden — not part of the service API.
+    #[doc(hidden)]
+    pub fn poison_for_test(&self) {
+        let m: &Mutex<Vec<u64>> = &self.device_cycles;
+        let _ = std::thread::scope(|scope| {
+            scope
+                .spawn(|| {
+                    let _guard = m.lock().unwrap();
+                    panic!("deliberate poison (test support)");
+                })
+                .join()
+        });
     }
 
     /// Snapshot every counter into the wire-protocol report.
@@ -103,6 +134,7 @@ impl Metrics {
             requests_accepted: self.requests_accepted.load(Ordering::SeqCst),
             requests_rejected: self.requests_rejected.load(Ordering::SeqCst),
             sessions_rejected: self.sessions_rejected.load(Ordering::SeqCst),
+            connections_failed: self.connections_failed.load(Ordering::SeqCst),
             protection_faults: self.protection_faults.load(Ordering::SeqCst),
             launches_enqueued: self.launches_enqueued.load(Ordering::SeqCst),
             launches_completed: self.launches_completed.load(Ordering::SeqCst),
@@ -111,7 +143,7 @@ impl Metrics {
             launches_streamed: self.launches_streamed.load(Ordering::SeqCst),
             sched_in_flight: self.sched_in_flight.load(Ordering::SeqCst),
             sched_ready: self.sched_ready.load(Ordering::SeqCst),
-            device_cycles: self.device_cycles.lock().unwrap().clone(),
+            device_cycles: lock_unpoisoned(&self.device_cycles).clone(),
             // per-fleet occupancy is owned by the fleet registry, not the
             // counters; the service fills it in (see `Service::serve_stats`)
             fleets: Vec::new(),
@@ -142,5 +174,16 @@ mod tests {
         m.add_device_cycles(0, 5);
         m.add_device_cycles(2, 1);
         assert_eq!(m.snapshot().device_cycles, vec![5, 0, 11]);
+    }
+
+    #[test]
+    fn poisoned_lock_degrades_instead_of_cascading() {
+        let m = Metrics::new();
+        m.add_device_cycles(0, 7);
+        m.poison_for_test();
+        // both the write and the read path must survive the poison
+        m.add_device_cycles(1, 3);
+        let snap = m.snapshot();
+        assert_eq!(snap.device_cycles, vec![7, 3]);
     }
 }

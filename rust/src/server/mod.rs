@@ -38,6 +38,7 @@
 
 pub mod client;
 pub mod fleet;
+pub mod journal;
 pub mod load;
 pub mod metrics;
 pub mod protocol;

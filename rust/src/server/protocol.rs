@@ -18,8 +18,15 @@
 //! | `finish`        | `clFinish`                     | `results[]` |
 //! | `wait_event`    | `clWaitForEvents`              | `result` |
 //! | `read_result`   | `clEnqueueReadBuffer`          | `data[]` |
+//! | `fingerprint`   | —                              | `fingerprint`, `events` |
 //! | `stats`         | —                              | `stats{}` |
 //! | `shutdown`      | —                              | ack (server drains) |
+//!
+//! `open_session` may carry a `resume` token (issued by a previous
+//! `session` response) to reattach to a journaled session after a server
+//! restart — see `crate::server::journal`. Determinism fingerprints are
+//! 64-bit values carried as `"0x%016x"` hex **strings** (JSON numbers
+//! are f64: only 53 mantissa bits).
 //!
 //! Encoding is **canonical** (fixed key order, `null` for absent
 //! options), so `decode(encode(f))` is the identity and
@@ -151,8 +158,10 @@ pub enum Request {
     /// devices (`devices` empty ⇒ the server's configured defaults);
     /// `fleet:"name"` attaches the session as a tenant of that named
     /// shared fleet (`devices` must then be empty — the fleet owns its
-    /// device set).
-    OpenSession { devices: Vec<(u32, u32)>, fleet: Option<String> },
+    /// device set). `resume:"token"` reattaches to a journaled session
+    /// after a server restart (`devices` and `fleet` must be empty — the
+    /// journal records the device set).
+    OpenSession { devices: Vec<(u32, u32)>, fleet: Option<String>, resume: Option<String> },
     /// Register kernel source under `name` in this session's namespace.
     StageKernel { name: String, body: String },
     /// Allocate `len` bytes of device memory on **every** session device
@@ -179,6 +188,11 @@ pub enum Request {
     /// Read `count` i32 words at `addr` from `event`'s post-launch
     /// memory image (retained for the most recent finished batch).
     ReadResult { event: u64, addr: u32, count: u32 },
+    /// The session's running determinism fingerprint (folded over every
+    /// committed batch, in enqueue order) and how many committed events
+    /// it covers — the bit-identity gate crash recovery and migration
+    /// verify against.
+    Fingerprint,
     /// Service-wide counters.
     Stats,
     /// Initiate graceful drain: in-flight requests complete, new work is
@@ -193,10 +207,11 @@ impl Request {
     pub fn encode(&self) -> String {
         let mut j = Json::obj();
         match self {
-            Request::OpenSession { devices, fleet } => {
+            Request::OpenSession { devices, fleet, resume } => {
                 j.push("op", "open_session".into());
                 j.push("devices", devices_json(devices));
                 j.push("fleet", fleet.as_deref().map_or(Json::Null, |f| f.into()));
+                j.push("resume", resume.as_deref().map_or(Json::Null, |r| r.into()));
             }
             Request::StageKernel { name, body } => {
                 j.push("op", "stage_kernel".into());
@@ -234,6 +249,9 @@ impl Request {
                 j.push("addr", (*addr as u64).into());
                 j.push("count", (*count as u64).into());
             }
+            Request::Fingerprint => {
+                j.push("op", "fingerprint".into());
+            }
             Request::Stats => {
                 j.push("op", "stats".into());
             }
@@ -249,7 +267,8 @@ impl Request {
         let op = str_field(&j, "op")?;
         match op {
             "open_session" => {
-                // `fleet` tolerates absence: pre-fleet clients never send it
+                // `fleet`/`resume` tolerate absence: older clients never
+                // send them
                 let fleet = match j.get("fleet") {
                     None | Some(Json::Null) => None,
                     Some(f) => Some(
@@ -258,7 +277,17 @@ impl Request {
                             .to_string(),
                     ),
                 };
-                Ok(Request::OpenSession { devices: devices_field(&j, "devices")?, fleet })
+                let resume = match j.get("resume") {
+                    None | Some(Json::Null) => None,
+                    Some(r) => Some(
+                        r.as_str()
+                            .ok_or_else(|| {
+                                ProtoError("`resume` must be a string or null".into())
+                            })?
+                            .to_string(),
+                    ),
+                };
+                Ok(Request::OpenSession { devices: devices_field(&j, "devices")?, fleet, resume })
             }
             "stage_kernel" => Ok(Request::StageKernel {
                 name: str_field(&j, "name")?.to_string(),
@@ -294,6 +323,7 @@ impl Request {
                 addr: u32_field(&j, "addr")?,
                 count: u32_field(&j, "count")?,
             }),
+            "fingerprint" => Ok(Request::Fingerprint),
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(ProtoError(format!("unknown op `{other}`"))),
@@ -366,7 +396,9 @@ pub struct EventSummary {
 }
 
 impl EventSummary {
-    fn to_json(&self) -> Json {
+    /// Crate-visible: the crash-recovery journal reuses the wire shape
+    /// for its checkpoint records (see [`crate::server::journal`]).
+    pub(crate) fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.push("event", self.event.into());
         j.push("ok", Json::Bool(self.ok));
@@ -377,7 +409,7 @@ impl EventSummary {
         j
     }
 
-    fn from_json(j: &Json) -> Result<EventSummary, ProtoError> {
+    pub(crate) fn from_json(j: &Json) -> Result<EventSummary, ProtoError> {
         let device = match field(j, "device")? {
             Json::Null => None,
             d => Some(d.as_u64().and_then(|v| u32::try_from(v).ok()).ok_or_else(|| {
@@ -416,6 +448,10 @@ pub struct StatsReport {
     /// connection-level busy, distinct from request-level
     /// `requests_rejected`.
     pub sessions_rejected: u64,
+    /// Connections whose shepherd thread died abnormally (a panic caught
+    /// at the connection boundary — e.g. lock poisoning); the accept
+    /// loop kept serving.
+    pub connections_failed: u64,
     /// Launches failed with a memory-protection fault (cross-tenant
     /// access on a shared fleet).
     pub protection_faults: u64,
@@ -482,6 +518,7 @@ impl StatsReport {
         j.push("requests_accepted", self.requests_accepted.into());
         j.push("requests_rejected", self.requests_rejected.into());
         j.push("sessions_rejected", self.sessions_rejected.into());
+        j.push("connections_failed", self.connections_failed.into());
         j.push("protection_faults", self.protection_faults.into());
         j.push("launches_enqueued", self.launches_enqueued.into());
         j.push("launches_completed", self.launches_completed.into());
@@ -505,6 +542,11 @@ impl StatsReport {
             requests_accepted: u64_field(j, "requests_accepted")?,
             requests_rejected: u64_field(j, "requests_rejected")?,
             sessions_rejected: u64_field(j, "sessions_rejected")?,
+            // absent on pre-resilience servers: default 0
+            connections_failed: match j.get("connections_failed") {
+                None => 0,
+                Some(_) => u64_field(j, "connections_failed")?,
+            },
             protection_faults: u64_field(j, "protection_faults")?,
             launches_enqueued: u64_field(j, "launches_enqueued")?,
             launches_completed: u64_field(j, "launches_completed")?,
@@ -530,8 +572,10 @@ impl StatsReport {
 pub enum Response {
     /// `ok:false`: the request failed; the connection stays usable.
     Error { code: ErrorCode, message: String },
-    /// `open_session` succeeded.
-    Session { session: u64, devices: Vec<(u32, u32)> },
+    /// `open_session` succeeded. `resume` is the token a client presents
+    /// to reattach after a server restart (empty when the server keeps
+    /// no state dir — nothing to resume from).
+    Session { session: u64, devices: Vec<(u32, u32)>, resume: String },
     /// Generic success (stage_kernel, write_buffer, shutdown).
     Ack,
     /// `create_buffer` succeeded.
@@ -544,6 +588,9 @@ pub enum Response {
     EventStatus { result: EventSummary },
     /// `read_result`: the words read.
     Data { data: Vec<i32> },
+    /// `fingerprint`: the session's running determinism fingerprint and
+    /// the number of committed events it covers.
+    Fingerprint { fingerprint: u64, events: u64 },
     /// `stats`.
     Stats { stats: StatsReport },
 }
@@ -557,10 +604,11 @@ impl Response {
                 j.push("code", code.as_str().into());
                 j.push("error", message.as_str().into());
             }
-            Response::Session { session, devices } => {
+            Response::Session { session, devices, resume } => {
                 j.push("ok", Json::Bool(true));
                 j.push("session", (*session).into());
                 j.push("devices", devices_json(devices));
+                j.push("resume", resume.as_str().into());
             }
             Response::Ack => {
                 j.push("ok", Json::Bool(true));
@@ -585,6 +633,12 @@ impl Response {
                 j.push("ok", Json::Bool(true));
                 j.push("data", Json::Arr(data.iter().map(|&v| Json::Num(v as f64)).collect()));
             }
+            Response::Fingerprint { fingerprint, events } => {
+                j.push("ok", Json::Bool(true));
+                // hex string: JSON numbers are f64 (53 mantissa bits)
+                j.push("fingerprint", crate::fingerprint::to_hex(*fingerprint).as_str().into());
+                j.push("events", (*events).into());
+            }
             Response::Stats { stats } => {
                 j.push("ok", Json::Bool(true));
                 j.push("stats", stats.to_json());
@@ -605,10 +659,23 @@ impl Response {
             });
         }
         if j.get("session").is_some() {
+            // `resume` tolerates absence: pre-resilience servers never
+            // send it (no state dir ⇒ nothing to resume from)
+            let resume = match j.get("resume") {
+                None | Some(Json::Null) => String::new(),
+                Some(_) => str_field(&j, "resume")?.to_string(),
+            };
             return Ok(Response::Session {
                 session: u64_field(&j, "session")?,
                 devices: devices_field(&j, "devices")?,
+                resume,
             });
+        }
+        if j.get("fingerprint").is_some() {
+            let hex = str_field(&j, "fingerprint")?;
+            let fingerprint = crate::fingerprint::from_hex(hex)
+                .ok_or_else(|| ProtoError(format!("bad fingerprint hex `{hex}`")))?;
+            return Ok(Response::Fingerprint { fingerprint, events: u64_field(&j, "events")? });
         }
         if j.get("results").is_some() {
             return Ok(Response::Finished {
@@ -644,9 +711,10 @@ mod tests {
     #[test]
     fn request_roundtrip_every_variant() {
         let frames = vec![
-            Request::OpenSession { devices: vec![(2, 2), (8, 8)], fleet: None },
-            Request::OpenSession { devices: vec![], fleet: None },
-            Request::OpenSession { devices: vec![], fleet: Some("shared".into()) },
+            Request::OpenSession { devices: vec![(2, 2), (8, 8)], fleet: None, resume: None },
+            Request::OpenSession { devices: vec![], fleet: None, resume: None },
+            Request::OpenSession { devices: vec![], fleet: Some("shared".into()), resume: None },
+            Request::OpenSession { devices: vec![], fleet: None, resume: Some("s17".into()) },
             Request::StageKernel {
                 name: "k\"quoted\"".into(),
                 body: "kernel_body:\n\tret # tab\r\n".into(),
@@ -672,6 +740,7 @@ mod tests {
             Request::Finish,
             Request::WaitEvent { event: 9 },
             Request::ReadResult { event: 2, addr: 0x9000_0040, count: 16 },
+            Request::Fingerprint,
             Request::Stats,
             Request::Shutdown,
         ];
@@ -706,7 +775,12 @@ mod tests {
             Response::Error { code: ErrorCode::Busy, message: "in-flight cap reached".into() },
             Response::Error { code: ErrorCode::StaleEvent, message: "stale #3".into() },
             Response::Error { code: ErrorCode::Protection, message: "cross-tenant access".into() },
-            Response::Session { session: 7, devices: vec![(2, 2), (4, 4)] },
+            Response::Session {
+                session: 7,
+                devices: vec![(2, 2), (4, 4)],
+                resume: "s7".into(),
+            },
+            Response::Session { session: 8, devices: vec![(2, 2)], resume: String::new() },
             Response::Ack,
             Response::Buffer { addr: 0x9000_0000 },
             Response::Enqueued { event: 12 },
@@ -714,6 +788,10 @@ mod tests {
             Response::Finished { results: vec![] },
             Response::EventStatus { result: summary_err },
             Response::Data { data: vec![-5, 0, 5] },
+            // fingerprints ride as hex strings: a value above 2^53 must
+            // survive the wire exactly
+            Response::Fingerprint { fingerprint: 0xDEAD_BEEF_CAFE_F00D, events: 42 },
+            Response::Fingerprint { fingerprint: 0, events: 0 },
             Response::Stats {
                 stats: StatsReport {
                     sessions_opened: 3,
@@ -721,6 +799,7 @@ mod tests {
                     requests_accepted: 40,
                     requests_rejected: 2,
                     sessions_rejected: 1,
+                    connections_failed: 1,
                     protection_faults: 4,
                     launches_enqueued: 20,
                     launches_completed: 18,
@@ -773,14 +852,23 @@ mod tests {
 
     #[test]
     fn open_session_tolerates_pre_fleet_frames() {
-        // pre-fleet clients never send the `fleet` key; decode must treat
-        // absence exactly like an explicit null
+        // older clients never send the `fleet`/`resume` keys; decode must
+        // treat absence exactly like an explicit null
         let legacy = r#"{"op":"open_session","devices":[[2,2]]}"#;
         assert_eq!(
             Request::decode(legacy).unwrap(),
-            Request::OpenSession { devices: vec![(2, 2)], fleet: None },
+            Request::OpenSession { devices: vec![(2, 2)], fleet: None, resume: None },
         );
         assert!(Request::decode(r#"{"op":"open_session","devices":[],"fleet":3}"#).is_err());
+        assert!(Request::decode(r#"{"op":"open_session","devices":[],"resume":9}"#).is_err());
+        // a pre-resilience server's session response has no resume token
+        let legacy_resp = r#"{"ok":true,"session":3,"devices":[[2,2]]}"#;
+        assert_eq!(
+            Response::decode(legacy_resp).unwrap(),
+            Response::Session { session: 3, devices: vec![(2, 2)], resume: String::new() },
+        );
+        // bad fingerprint hex is a decode error, not a silent zero
+        assert!(Response::decode(r#"{"ok":true,"fingerprint":"xyz","events":1}"#).is_err());
     }
 
     #[test]

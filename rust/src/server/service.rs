@@ -42,16 +42,24 @@
 use crate::config::MachineConfig;
 use crate::coordinator::pool;
 use crate::server::fleet::Fleet;
+use crate::server::journal::{self, Journal};
 use crate::server::metrics::Metrics;
 use crate::server::protocol::{ErrorCode, Request, Response};
 use crate::server::session::{Session, SessionLimits};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Lock tolerating poison: a panicking shepherd must degrade to its own
+/// counted failure, never wedge the accept loop or other connections.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Serve-instance configuration (`vortex serve` flags map onto this).
 #[derive(Clone, Debug)]
@@ -73,6 +81,11 @@ pub struct ServeConfig {
     /// via `open_session {fleet:"name"}` and contend for the fleet's
     /// devices under per-tenant page-table protection.
     pub fleets: Vec<(String, Vec<(u32, u32)>)>,
+    /// Crash-recovery state directory (`--state-dir`): private sessions
+    /// are journaled here and hand out resume tokens; on restart the
+    /// service scans it so killed sessions can reattach via
+    /// `open_session {resume: token}`.
+    pub state_dir: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -84,6 +97,7 @@ impl Default for ServeConfig {
             limits: SessionLimits::default(),
             max_line: 4 << 20,
             fleets: Vec::new(),
+            state_dir: None,
         }
     }
 }
@@ -103,6 +117,9 @@ struct Shared {
     next_session: AtomicU64,
     /// The named shared fleets, immutable for the server's life.
     fleets: HashMap<String, Arc<Fleet>>,
+    /// Session ids currently live on some connection — the resume path
+    /// refuses to reattach a journal whose session is still being served.
+    active_ids: Mutex<HashSet<u64>>,
 }
 
 /// The address `begin_shutdown` connects to in order to wake a blocking
@@ -133,7 +150,7 @@ impl Shared {
     /// under the drain mutex so a concurrent [`Server::wait`] can never
     /// miss the final wakeup.
     fn release_active(&self) {
-        let _lock = self.drained.0.lock().unwrap();
+        let _lock = lock_unpoisoned(&self.drained.0);
         self.active.fetch_sub(1, Ordering::SeqCst);
         self.drained.1.notify_all();
     }
@@ -145,6 +162,30 @@ struct ActiveGuard(Arc<Shared>);
 impl Drop for ActiveGuard {
     fn drop(&mut self) {
         self.0.release_active();
+    }
+}
+
+/// The connection's session, with its id registered in the service-wide
+/// live set while held — however the shepherd exits (clean EOF, error,
+/// panic unwind), the id is released so a client can resume the journal.
+struct SessionSlot {
+    session: Option<Session>,
+    shared: Arc<Shared>,
+}
+
+impl SessionSlot {
+    /// Install a freshly opened/recovered session and register its id.
+    fn install(&mut self, s: Session) {
+        lock_unpoisoned(&self.shared.active_ids).insert(s.id());
+        self.session = Some(s);
+    }
+}
+
+impl Drop for SessionSlot {
+    fn drop(&mut self) {
+        if let Some(s) = &self.session {
+            lock_unpoisoned(&self.shared.active_ids).remove(&s.id());
+        }
     }
 }
 
@@ -183,6 +224,16 @@ impl Server {
             let fleet = Fleet::new(name, configs, cfg.jobs).map_err(bad)?;
             fleets.insert(name.clone(), Arc::new(fleet));
         }
+        // resuming sessions keep their pre-crash ids: fresh ids start
+        // above everything the state dir has ever recorded
+        let mut first_id = 1;
+        if let Some(dir) = &cfg.state_dir {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| bad(format!("state dir {}: {e}", dir.display())))?;
+            if let Some((max, _)) = journal::scan_sessions(dir).last() {
+                first_id = max + 1;
+            }
+        }
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let shared = Arc::new(Shared {
@@ -192,8 +243,9 @@ impl Server {
             shutdown: AtomicBool::new(false),
             active: AtomicUsize::new(0),
             drained: (Mutex::new(()), Condvar::new()),
-            next_session: AtomicU64::new(1),
+            next_session: AtomicU64::new(first_id),
             fleets,
+            active_ids: Mutex::new(HashSet::new()),
         });
         let accept_shared = Arc::clone(&shared);
         let accept = std::thread::Builder::new()
@@ -228,12 +280,15 @@ impl Server {
         // drop) instead of sleep-polling; the 30 s wedge bound stays
         let deadline = Instant::now() + Duration::from_secs(30);
         let (lock, cvar) = (&self.shared.drained.0, &self.shared.drained.1);
-        let mut guard = lock.lock().unwrap();
+        let mut guard = lock_unpoisoned(lock);
         while self.shared.active.load(Ordering::SeqCst) > 0 {
             let Some(left) = deadline.checked_duration_since(Instant::now()) else {
                 break;
             };
-            guard = cvar.wait_timeout(guard, left).unwrap().0;
+            guard = cvar
+                .wait_timeout(guard, left)
+                .unwrap_or_else(PoisonError::into_inner)
+                .0;
         }
     }
 }
@@ -269,8 +324,23 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         let spawned = std::thread::Builder::new()
             .name("vortex-serve-conn".into())
             .spawn(move || {
+                // the guard sits OUTSIDE the catch so the connection
+                // gauge releases even when the shepherd dies abnormally
                 let _guard = ActiveGuard(Arc::clone(&conn_shared));
-                serve_conn(stream, conn_shared);
+                let shared = Arc::clone(&conn_shared);
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    serve_conn(stream, conn_shared)
+                }));
+                if outcome.is_err() {
+                    // a bug in the session layer (or a poisoned lock)
+                    // costs exactly this connection: logged, counted,
+                    // and the accept loop keeps serving everyone else
+                    shared.metrics.connections_failed.fetch_add(1, Ordering::SeqCst);
+                    eprintln!(
+                        "vortex serve: connection shepherd panicked; \
+                         the connection was dropped (see connections_failed)"
+                    );
+                }
             });
         if spawned.is_err() {
             shared.release_active();
@@ -360,7 +430,7 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
-    let mut session: Option<Session> = None;
+    let mut slot = SessionSlot { session: None, shared: Arc::clone(&shared) };
     let mut buf: Vec<u8> = Vec::new();
     // an oversized line is being discarded up to its newline
     let mut discarding = false;
@@ -424,7 +494,7 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                         continue;
                     }
                     Ok(text) => {
-                        let (resp, close) = handle_line(text.trim(), &mut session, &shared);
+                        let (resp, close) = handle_line(text.trim(), &mut slot, &shared);
                         match &resp {
                             Response::Error { code: ErrorCode::Busy, .. } => {
                                 shared
@@ -457,13 +527,37 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
     }
 }
 
+/// Reattach a killed session from its journal under the state dir.
+/// Registers the id in `active_ids` for the duration (two connections
+/// presenting the same token race on that set — exactly one wins).
+fn resume_session(token: &str, shared: &Shared) -> Result<Session, String> {
+    let Some(dir) = &shared.cfg.state_dir else {
+        return Err("this serve instance has no --state-dir; sessions are not resumable".into());
+    };
+    let Some(id) = journal::parse_token(token) else {
+        return Err(format!("malformed resume token `{token}`"));
+    };
+    if !lock_unpoisoned(&shared.active_ids).insert(id) {
+        return Err(format!("session {token} is still active on another connection"));
+    }
+    let restore = || -> Result<Session, String> {
+        let path = journal::session_path(dir, id);
+        let records = journal::load(&path)?;
+        let jnl = Journal::open_append(&path)?;
+        Session::recover(id, &records, shared.cfg.limits, Arc::clone(&shared.metrics), jnl)
+    };
+    match restore() {
+        Ok(s) => Ok(s),
+        Err(e) => {
+            lock_unpoisoned(&shared.active_ids).remove(&id);
+            Err(e)
+        }
+    }
+}
+
 /// Decode + dispatch one frame. Returns the response and whether the
 /// connection should close afterwards (only after acking `shutdown`).
-fn handle_line(
-    text: &str,
-    session: &mut Option<Session>,
-    shared: &Shared,
-) -> (Response, bool) {
+fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response, bool) {
     let req = match Request::decode(text) {
         Ok(r) => r,
         Err(e) => {
@@ -486,7 +580,13 @@ fn handle_line(
             shared.begin_shutdown();
             (Response::Ack, true)
         }
-        Request::OpenSession { devices, fleet } => {
+        // deliberate failure injection so the robustness suite can prove
+        // a shepherd panic is contained (debug/test builds only)
+        #[cfg(debug_assertions)]
+        Request::StageKernel { ref name, .. } if name == "__vortex_panic__" => {
+            panic!("deliberate shepherd panic (test hook)");
+        }
+        Request::OpenSession { devices, fleet, resume } => {
             if draining {
                 return (
                     Response::Error {
@@ -496,7 +596,7 @@ fn handle_line(
                     false,
                 );
             }
-            if session.is_some() {
+            if slot.session.is_some() {
                 return (
                     Response::Error {
                         code: ErrorCode::BadRequest,
@@ -504,6 +604,34 @@ fn handle_line(
                     },
                     false,
                 );
+            }
+            if let Some(token) = resume {
+                if fleet.is_some() || !devices.is_empty() {
+                    return (
+                        Response::Error {
+                            code: ErrorCode::BadRequest,
+                            message: "resume takes no devices or fleet — \
+                                      the journal defines the session"
+                                .into(),
+                        },
+                        false,
+                    );
+                }
+                return match resume_session(&token, shared) {
+                    Ok(s) => {
+                        let resp = Response::Session {
+                            session: s.id(),
+                            devices: s.configs().to_vec(),
+                            resume: token,
+                        };
+                        // resume_session already registered the id
+                        slot.session = Some(s);
+                        (resp, false)
+                    }
+                    Err(e) => {
+                        (Response::Error { code: ErrorCode::BadRequest, message: e }, false)
+                    }
+                };
             }
             if let Some(name) = fleet {
                 if !devices.is_empty() {
@@ -531,8 +659,14 @@ fn handle_line(
                     shared.cfg.limits,
                     Arc::clone(&shared.metrics),
                 );
-                let resp = Response::Session { session: id, devices: s.configs().to_vec() };
-                *session = Some(s);
+                // fleet tenants are not resumable (shared device state
+                // is interleaved across tenants): empty token
+                let resp = Response::Session {
+                    session: id,
+                    devices: s.configs().to_vec(),
+                    resume: String::new(),
+                };
+                slot.install(s);
                 return (resp, false);
             }
             let configs =
@@ -545,10 +679,20 @@ fn handle_line(
                 shared.cfg.limits,
                 Arc::clone(&shared.metrics),
             ) {
-                Ok(s) => {
-                    let resp =
-                        Response::Session { session: id, devices: s.configs().to_vec() };
-                    *session = Some(s);
+                Ok(mut s) => {
+                    if let Some(dir) = &shared.cfg.state_dir {
+                        if let Err(e) = s.enable_journal(dir) {
+                            eprintln!(
+                                "vortex serve: session {id} journaling unavailable: {e}"
+                            );
+                        }
+                    }
+                    let resp = Response::Session {
+                        session: id,
+                        devices: s.configs().to_vec(),
+                        resume: s.resume_token().unwrap_or_default(),
+                    };
+                    slot.install(s);
                     (resp, false)
                 }
                 Err(e) => {
@@ -571,7 +715,7 @@ fn handle_line(
                 false,
             )
         }
-        other => match session.as_mut() {
+        other => match slot.session.as_mut() {
             Some(s) => (s.handle(other), false),
             None => (
                 Response::Error {
@@ -596,6 +740,7 @@ mod tests {
             limits: SessionLimits::default(),
             max_line: 1 << 16,
             fleets: Vec::new(),
+            state_dir: None,
         }
     }
 

@@ -32,12 +32,15 @@
 //! `server_service::bombard_matches_direct_launch_queue_bit_identically`).
 
 use crate::config::{self, MachineConfig};
+use crate::fingerprint::Fingerprint;
 use crate::mem::Memory;
 use crate::pocl::{Buffer, DeviceId, Event, Kernel, LaunchError, LaunchQueue, VortexDevice};
 use crate::server::fleet::Fleet;
+use crate::server::journal::{self, Journal, Record};
 use crate::server::metrics::Metrics;
 use crate::server::protocol::{ErrorCode, EventSummary, Request, Response};
 use std::collections::{HashMap, HashSet};
+use std::path::Path;
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// Admission-control and resource caps, service-wide (see
@@ -115,12 +118,14 @@ fn launch_err(e: &LaunchError) -> Response {
 }
 
 /// A finished event: its wire summary, the queue handle that produced it
-/// (kept so a stale wait on it reaches the queue's `StaleEvent` check),
-/// and — for the most recent finished batch only — its post-launch
-/// memory image for `read_result`.
+/// (kept so a stale wait on it reaches the queue's `StaleEvent` check;
+/// `None` for events recovered from a journal — their queue died with
+/// the old process, so a wait on them is answered stale directly), and —
+/// for the most recent finished batch only — its post-launch memory
+/// image for `read_result`.
 struct Completed {
     summary: EventSummary,
-    qevent: Event,
+    qevent: Option<Event>,
     mem: Option<Memory>,
 }
 
@@ -170,6 +175,18 @@ pub struct Session {
     /// Last occupancy this session published into the shared gauges
     /// (`(in_flight, ready)`); diffs keep the fleet-wide sums exact.
     published: (u64, u64),
+    /// Worker-pool share the session queue was opened with (journaled in
+    /// the `open` record so recovery reopens it identically).
+    jobs: usize,
+    /// Running determinism fingerprint, folded over every committed
+    /// batch (enqueue order; cycles, outcomes, result-memory content).
+    fingerprint: Fingerprint,
+    /// Events folded into `fingerprint` so far.
+    committed_events: u64,
+    /// Crash-recovery journal — private sessions under `--state-dir`
+    /// only (shared-fleet device state is interleaved across tenants and
+    /// cannot be replayed from one session's log).
+    journal: Option<Journal>,
     limits: SessionLimits,
     metrics: Arc<Metrics>,
 }
@@ -216,6 +233,10 @@ impl Session {
             completed: HashMap::new(),
             last_batch: Vec::new(),
             published: (0, 0),
+            jobs,
+            fingerprint: Fingerprint::new(),
+            committed_events: 0,
+            journal: None,
             limits,
             metrics,
         })
@@ -246,6 +267,10 @@ impl Session {
             completed: HashMap::new(),
             last_batch: Vec::new(),
             published: (0, 0),
+            jobs: 0,
+            fingerprint: Fingerprint::new(),
+            committed_events: 0,
+            journal: None,
             limits,
             metrics,
         }
@@ -280,7 +305,211 @@ impl Session {
             Request::Finish => Response::Finished { results: self.drain_batch() },
             Request::WaitEvent { event } => self.wait_event(event),
             Request::ReadResult { event, addr, count } => self.read_result(event, addr, count),
+            Request::Fingerprint => {
+                let (fingerprint, events) = self.fingerprint();
+                Response::Fingerprint { fingerprint, events }
+            }
         }
+    }
+
+    /// The running determinism fingerprint and the number of committed
+    /// events folded into it. Equality against an uninterrupted run is
+    /// the verification gate for resume/migrate/recover.
+    pub fn fingerprint(&self) -> (u64, u64) {
+        (self.fingerprint.value(), self.committed_events)
+    }
+
+    /// The resume token clients present to reattach after a crash
+    /// (`None`: this session is not journaled).
+    pub fn resume_token(&self) -> Option<String> {
+        self.journal.as_ref().map(|_| journal::token(self.id))
+    }
+
+    /// Append to the session journal, degrading to a logged, disabled
+    /// journal on I/O failure — a full disk must not kill the live
+    /// session, it costs only resumability from this point on.
+    fn journal_append(&mut self, rec: &Record) {
+        if let Some(j) = &mut self.journal {
+            if let Err(e) = j.append(rec) {
+                eprintln!(
+                    "vortex serve: journal write failed for session {}: {e} \
+                     (resumability disabled)",
+                    self.id
+                );
+                self.journal = None;
+            }
+        }
+    }
+
+    /// Start journaling this (private) session under `dir`: fresh log,
+    /// `open` record first, every admitted mutation after.
+    pub fn enable_journal(&mut self, dir: &Path) -> Result<(), String> {
+        if !matches!(self.exec, Exec::Private { .. }) {
+            return Err("shared-fleet sessions are not journaled".into());
+        }
+        let mut j = Journal::create(&journal::session_path(dir, self.id))?;
+        j.append(&Record::Open {
+            session: self.id,
+            devices: self.configs.clone(),
+            jobs: self.jobs as u64,
+        })?;
+        self.journal = Some(j);
+        Ok(())
+    }
+
+    /// Append a checkpoint: the batch just retired is now captured in
+    /// per-device snapshots, so recovery replays only records after this
+    /// point. Called at every `drain_batch` — the queue is idle then,
+    /// which is the snapshot precondition.
+    fn write_checkpoint(&mut self) {
+        if self.journal.is_none() {
+            return;
+        }
+        let snapshots = match &mut self.exec {
+            Exec::Private { queue, devices } => {
+                let mut v = Vec::with_capacity(devices.len());
+                for &d in devices.iter() {
+                    match queue.snapshot_device(d) {
+                        Ok(s) => v.push(s),
+                        Err(e) => {
+                            eprintln!(
+                                "vortex serve: checkpoint snapshot failed for session {}: \
+                                 {e} (resumability disabled)",
+                                self.id
+                            );
+                            self.journal = None;
+                            return;
+                        }
+                    }
+                }
+                v
+            }
+            Exec::Fleet { .. } => return,
+        };
+        let mut ids: Vec<u64> = self.completed.keys().copied().collect();
+        ids.sort_unstable();
+        let completed =
+            ids.iter().filter_map(|w| self.completed.get(w).map(|c| c.summary.clone())).collect();
+        let rec = Record::Checkpoint {
+            next_event: self.next_event,
+            fingerprint: self.fingerprint.value(),
+            events: self.committed_events,
+            completed,
+            snapshots,
+        };
+        self.journal_append(&rec);
+    }
+
+    /// Rebuild a session from its journal after a crash (or a graceful
+    /// restart): restore the last checkpoint's device images, then
+    /// replay only the records after it. Launches that were admitted but
+    /// not yet committed re-execute from the restored state — committed
+    /// results are never lost, and the restored fingerprint lets the
+    /// client verify bit-identity with an uninterrupted run.
+    pub fn recover(
+        id: u64,
+        records: &[Record],
+        limits: SessionLimits,
+        metrics: Arc<Metrics>,
+        journal: Journal,
+    ) -> Result<Session, String> {
+        let Some(Record::Open { session, devices, jobs }) = records.first() else {
+            return Err("journal must start with an `open` record".into());
+        };
+        if *session != id {
+            return Err(format!("journal names session {session}, expected {id}"));
+        }
+        let mut s = Session::new(id, devices, *jobs as usize, limits, metrics)?;
+        let checkpoint_at = records
+            .iter()
+            .rposition(|r| matches!(r, Record::Checkpoint { .. }));
+        // device-independent state (kernels, the buffer table) is
+        // rebuilt from the whole log; device calls replay only after the
+        // checkpoint — the snapshots already hold everything before it
+        for (i, rec) in records.iter().enumerate().skip(1) {
+            let replay_devices = checkpoint_at.map_or(true, |c| i > c);
+            match rec {
+                Record::Open { .. } => {
+                    return Err(format!("duplicate `open` record at line {}", i + 1));
+                }
+                Record::Kernel { name, body } => {
+                    match s.stage_kernel(name.clone(), body.clone()) {
+                        Response::Ack => {}
+                        other => return Err(format!("kernel `{name}` replay: {other:?}")),
+                    }
+                }
+                Record::Buffer { len, addr } => {
+                    if replay_devices {
+                        match s.create_buffer(*len) {
+                            Response::Buffer { addr: got } if got == *addr => {}
+                            Response::Buffer { addr: got } => {
+                                return Err(format!(
+                                    "buffer replay diverged: journal {addr:#x}, got {got:#x}"
+                                ));
+                            }
+                            other => return Err(format!("buffer replay: {other:?}")),
+                        }
+                    } else {
+                        // pre-checkpoint: the snapshot's allocator
+                        // watermark already covers it — record the
+                        // handle only
+                        s.buffers.push(Buffer { addr: *addr, len: *len as usize });
+                    }
+                }
+                Record::Write { addr, data } => {
+                    if replay_devices {
+                        match s.write_buffer(*addr, data) {
+                            Response::Ack => {}
+                            other => return Err(format!("write replay at {addr:#x}: {other:?}")),
+                        }
+                    }
+                }
+                Record::Enqueue { event, kernel, total, args, device, backend, wait } => {
+                    if replay_devices {
+                        match s.enqueue(kernel, *total, args, *device, *backend, wait) {
+                            Response::Enqueued { event: got } if got == *event => {}
+                            Response::Enqueued { event: got } => {
+                                return Err(format!(
+                                    "enqueue replay diverged: journal event {event}, got {got}"
+                                ));
+                            }
+                            other => return Err(format!("enqueue {event} replay: {other:?}")),
+                        }
+                    }
+                }
+                Record::Checkpoint { next_event, fingerprint, events, completed, snapshots } => {
+                    if Some(i) != checkpoint_at {
+                        continue; // superseded by a later checkpoint
+                    }
+                    let Exec::Private { queue, devices } = &mut s.exec else {
+                        unreachable!("recovery only builds private sessions");
+                    };
+                    if snapshots.len() != devices.len() {
+                        return Err(format!(
+                            "checkpoint holds {} snapshots for {} devices",
+                            snapshots.len(),
+                            devices.len()
+                        ));
+                    }
+                    for (slot, snap) in snapshots.iter().enumerate() {
+                        queue
+                            .restore_device(devices[slot], snap)
+                            .map_err(|e| format!("restore device {slot}: {e}"))?;
+                    }
+                    s.next_event = *next_event;
+                    s.fingerprint = Fingerprint::from_value(*fingerprint);
+                    s.committed_events = *events;
+                    for sum in completed {
+                        s.completed.insert(
+                            sum.event,
+                            Completed { summary: sum.clone(), qevent: None, mem: None },
+                        );
+                    }
+                }
+            }
+        }
+        s.journal = Some(journal);
+        Ok(s)
     }
 
     fn stage_kernel(&mut self, name: String, body: String) -> Response {
@@ -321,8 +550,9 @@ impl Session {
                 format!("kernel-name interner full ({INTERN_CAP} distinct names); reuse names"),
             );
         };
-        let kernel = Kernel { name: interned, body };
-        self.kernels.insert(name, kernel);
+        let kernel = Kernel { name: interned, body: body.clone() };
+        self.kernels.insert(name.clone(), kernel);
+        self.journal_append(&Record::Kernel { name, body });
         Response::Ack
     }
 
@@ -368,6 +598,7 @@ impl Session {
             }
         };
         self.buffers.push(b);
+        self.journal_append(&Record::Buffer { len, addr: b.addr });
         Response::Buffer { addr: b.addr }
     }
 
@@ -397,6 +628,7 @@ impl Session {
             // is visible to launches enqueued after it
             Exec::Fleet { root, .. } => root.write_i32_slice(b.addr, data),
         }
+        self.journal_append(&Record::Write { addr, data: data.to_vec() });
         Response::Ack
     }
 
@@ -435,14 +667,20 @@ impl Session {
         // handle is passed through so the queue reports it stale
         let mut wait_events = Vec::with_capacity(wait.len());
         for &wid in wait {
-            let ev = self
-                .pending
-                .iter()
-                .find(|(w, _)| *w == wid)
-                .map(|&(_, e)| e)
-                .or_else(|| self.completed.get(&wid).map(|c| c.qevent));
-            match ev {
-                Some(e) => wait_events.push(e),
+            if let Some(&(_, e)) = self.pending.iter().find(|(w, _)| *w == wid) {
+                wait_events.push(e);
+                continue;
+            }
+            match self.completed.get(&wid) {
+                Some(Completed { qevent: Some(e), .. }) => wait_events.push(*e),
+                // recovered from a journal: its queue handle died with
+                // the old process — it is a retired event either way
+                Some(Completed { qevent: None, .. }) => {
+                    return err(
+                        ErrorCode::StaleEvent,
+                        format!("event {wid} is stale (completed before recovery)"),
+                    );
+                }
                 None => {
                     return err(ErrorCode::BadRequest, format!("unknown event id {wid}"));
                 }
@@ -509,6 +747,15 @@ impl Session {
                 self.next_event += 1;
                 self.pending.push((wid, ev));
                 self.current_batch.push(wid);
+                self.journal_append(&Record::Enqueue {
+                    event: wid,
+                    kernel: kernel.to_string(),
+                    total,
+                    args: args.to_vec(),
+                    device,
+                    backend,
+                    wait: wait.to_vec(),
+                });
                 self.metrics
                     .launches_enqueued
                     .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
@@ -580,7 +827,8 @@ impl Session {
                 )
             }
         };
-        self.completed.insert(wid, Completed { summary: summary.clone(), qevent, mem });
+        self.completed
+            .insert(wid, Completed { summary: summary.clone(), qevent: Some(qevent), mem });
         summary
     }
 
@@ -661,7 +909,32 @@ impl Session {
         for (wid, ev, res) in outcomes {
             summaries.push(self.harvest(wid, ev, res));
         }
+        // fold the retiring batch into the running determinism
+        // fingerprint, in enqueue order (events harvested mid-stream by
+        // `wait_event` included). Device slot and commit order are
+        // deliberately excluded — like the queue's
+        // `results_fingerprint`, this captures *what the client can
+        // observe per event*, which is placement-independent for pinned
+        // schedules and must survive resume and migration.
+        for i in 0..self.current_batch.len() {
+            let wid = self.current_batch[i];
+            let Some(c) = self.completed.get(&wid) else { continue };
+            let (ok, cycles) = (c.summary.ok, c.summary.cycles);
+            let error = c.summary.error.clone();
+            let mem_fp = c.mem.as_ref().map(|m| m.content_fingerprint());
+            self.fingerprint.fold_u64(wid);
+            self.fingerprint.fold_u64(ok as u64);
+            self.fingerprint.fold_u64(cycles);
+            if let Some(e) = &error {
+                self.fingerprint.fold_str(e);
+            }
+            if let Some(fp) = mem_fp {
+                self.fingerprint.fold_u64(fp);
+            }
+            self.committed_events += 1;
+        }
         self.last_batch = std::mem::take(&mut self.current_batch);
+        self.write_checkpoint();
         self.publish_occupancy();
         // evict old summaries (ids are monotonic: cutoff by id) — but
         // never any of the batch just reported, even when a session's
@@ -975,6 +1248,121 @@ kernel_body:
             Response::Data { data } => assert_eq!(data, vec![3, 6, 9, 12]),
             other => panic!("{other:?}"),
         }
+    }
+
+    /// Drive one deterministic schedule: returns the session after
+    /// `batches` committed batches plus (optionally) one admitted but
+    /// uncommitted launch.
+    fn journaled_run(dir: Option<&std::path::Path>, batches: usize, dangle: bool) -> Session {
+        let mut s = Session::new(
+            3,
+            &[(2, 2), (4, 4)],
+            2,
+            SessionLimits::default(),
+            Arc::new(Metrics::new()),
+        )
+        .unwrap();
+        if let Some(d) = dir {
+            s.enable_journal(d).unwrap();
+        }
+        s.handle(Request::StageKernel { name: "s3".into(), body: SCALE3_BODY.into() });
+        let a = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        let b = match s.handle(Request::CreateBuffer { len: 64 }) {
+            Response::Buffer { addr } => addr,
+            other => panic!("{other:?}"),
+        };
+        s.handle(Request::WriteBuffer { addr: a, data: vec![1, 2, 3, 4] });
+        let enq = |src: u32, dst: u32, dev: u32| Request::Enqueue {
+            kernel: "s3".into(),
+            total: 4,
+            args: vec![src, dst],
+            device: Some(dev),
+            backend: Backend::SimX,
+            wait: vec![],
+        };
+        for r in 0..batches {
+            expect_event(s.handle(enq(a, b, (r % 2) as u32)));
+            expect_event(s.handle(enq(b, a, (r % 2) as u32)));
+            match s.handle(Request::Finish) {
+                Response::Finished { results } => {
+                    assert!(results.iter().all(|x| x.ok), "{results:?}")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        if dangle {
+            expect_event(s.handle(enq(a, b, 0)));
+        }
+        s
+    }
+
+    #[test]
+    fn journal_recovery_resumes_bit_identically_to_an_uninterrupted_run() {
+        let dir = std::env::temp_dir()
+            .join(format!("vortex-session-recover-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // the reference: the same schedule, never interrupted
+        let mut reference = journaled_run(None, 2, true);
+        match reference.handle(Request::Finish) {
+            Response::Finished { results } => assert!(results.iter().all(|x| x.ok)),
+            other => panic!("{other:?}"),
+        }
+        let want = reference.fingerprint();
+
+        // the victim: killed (dropped) with one admitted-but-uncommitted
+        // launch in flight
+        let victim = journaled_run(Some(&dir), 2, true);
+        let committed = victim.fingerprint();
+        let token = victim.resume_token().unwrap();
+        drop(victim);
+
+        // recover from the journal: the committed fingerprint survives…
+        let id = journal::parse_token(&token).unwrap();
+        let path = journal::session_path(&dir, id);
+        let records = journal::load(&path).unwrap();
+        let jnl = Journal::open_append(&path).unwrap();
+        let mut back = Session::recover(
+            id,
+            &records,
+            SessionLimits::default(),
+            Arc::new(Metrics::new()),
+            jnl,
+        )
+        .unwrap();
+        assert_eq!(back.fingerprint(), committed, "zero lost committed results");
+
+        // …the dangling launch re-executes from the restored state, and
+        // the final fingerprint matches the uninterrupted run exactly
+        match back.handle(Request::Finish) {
+            Response::Finished { results } => {
+                assert_eq!(results.len(), 1);
+                assert!(results.iter().all(|x| x.ok), "{results:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(back.fingerprint(), want, "resumed run diverged from reference");
+
+        // a wait list naming a pre-crash event answers stale, a fresh
+        // launch still runs, and read_result works through new events
+        match back.handle(Request::Enqueue {
+            kernel: "s3".into(),
+            total: 4,
+            args: vec![back.buffers[0].addr, back.buffers[1].addr],
+            device: Some(0),
+            backend: Backend::SimX,
+            wait: vec![0],
+        }) {
+            Response::Error { code: ErrorCode::StaleEvent, message } => {
+                assert!(message.contains("stale"), "{message}");
+            }
+            other => panic!("expected stale_event, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

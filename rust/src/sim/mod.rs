@@ -30,6 +30,7 @@ use crate::emu::barrier::BarrierTable;
 use crate::emu::step::EmuError;
 use crate::emu::ExitStatus;
 use crate::mem::{BufferedMem, Memory, StoreBuffer};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// How the machine steps its cores.
@@ -163,6 +164,15 @@ pub struct Simulator {
     decoded: Option<Arc<DecodedImage>>,
     /// `Memory::text_generation` snapshot the image is valid against.
     decode_gen: u64,
+    /// Cooperative preemption request, polled only at the engine's
+    /// natural commit boundaries (chunk starts on multi-core, a coarse
+    /// cycle grid on single-core) — never mid-chunk, so a preempted run
+    /// commits exactly the state an uninterrupted run would have had at
+    /// that boundary. When set with cores still active, [`Simulator::run`]
+    /// returns [`ExitStatus::OutOfFuel`] with all resume state in `self`;
+    /// the run loop is fully re-entrant, so calling `run` again continues
+    /// bit-identically (`rust/tests/snapshot_resilience.rs`).
+    pub preempt: Option<Arc<AtomicBool>>,
 }
 
 /// One core's buffered side effects from an execution slice, merged by the
@@ -214,6 +224,7 @@ impl Simulator {
             chunk_telemetry: ChunkTelemetry::default(),
             decoded: None,
             decode_gen: 0,
+            preempt: None,
         }
     }
 
@@ -229,6 +240,12 @@ impl Simulator {
         for core in &mut self.cores {
             core.spawn_warp(0, entry);
         }
+    }
+
+    /// Machine cycles committed so far (progress telemetry for suspended
+    /// launches).
+    pub fn cycles(&self) -> u64 {
+        self.cycle
     }
 
     /// Enable per-core retired-instruction tracing (first `limit` entries).
@@ -299,6 +316,16 @@ impl Simulator {
             let any_active = self.cores.iter().any(|c| c.any_active());
             if !any_active {
                 break;
+            }
+            // Preemption poll on a coarse cycle grid (the single-core
+            // stepper has no chunk boundaries): state stays complete in
+            // `self`, so the next `run` resumes at exactly this cycle.
+            if self.cycle & 0x3FF == 0 {
+                if let Some(flag) = &self.preempt {
+                    if flag.load(Ordering::Relaxed) {
+                        return Ok(self.finish(None));
+                    }
+                }
             }
             // deadlock: every active warp everywhere is parked on a barrier
             if self.cores.iter().all(|c| !c.any_active() || c.all_blocked_on_barriers()) {
@@ -382,6 +409,14 @@ impl Simulator {
             if !self.cores.iter().any(|c| c.any_active()) {
                 drained = true;
                 break;
+            }
+            // Preemption poll at the chunk boundary — the engine's only
+            // cross-core commit point, so suspending here never perturbs
+            // the chunk schedule or barrier timing of the remaining run.
+            if let Some(flag) = &self.preempt {
+                if flag.load(Ordering::Relaxed) {
+                    return Ok(self.finish(None));
+                }
             }
             // deadlock: every active warp everywhere is parked on a barrier
             // (checked after each commit, when pending releases are applied)

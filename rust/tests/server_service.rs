@@ -54,10 +54,11 @@ fn rand_id(rng: &mut SplitMix64) -> u64 {
 }
 
 fn rand_request(rng: &mut SplitMix64) -> Request {
-    match rng.below(10) {
+    match rng.below(11) {
         0 => Request::OpenSession {
             devices: rand_devices(rng),
             fleet: if rng.below(2) == 0 { None } else { Some(rand_string(rng)) },
+            resume: if rng.below(2) == 0 { None } else { Some(rand_string(rng)) },
         },
         1 => Request::StageKernel { name: rand_string(rng), body: rand_string(rng) },
         2 => Request::CreateBuffer { len: rng.next_u32() },
@@ -81,6 +82,7 @@ fn rand_request(rng: &mut SplitMix64) -> Request {
             count: rng.next_u32(),
         },
         8 => Request::Stats,
+        9 => Request::Fingerprint,
         _ => Request::Shutdown,
     }
 }
@@ -106,12 +108,16 @@ fn rand_response(rng: &mut SplitMix64) -> Response {
         ErrorCode::Protection,
         ErrorCode::ShuttingDown,
     ];
-    match rng.below(9) {
+    match rng.below(10) {
         0 => Response::Error {
             code: CODES[rng.below(6) as usize],
             message: rand_string(rng),
         },
-        1 => Response::Session { session: rand_id(rng), devices: rand_devices(rng) },
+        1 => Response::Session {
+            session: rand_id(rng),
+            devices: rand_devices(rng),
+            resume: rand_string(rng),
+        },
         2 => Response::Ack,
         3 => Response::Buffer { addr: rng.next_u32() },
         4 => Response::Enqueued { event: rand_id(rng) },
@@ -122,6 +128,12 @@ fn rand_response(rng: &mut SplitMix64) -> Response {
         7 => Response::Data {
             data: (0..rng.below(8)).map(|_| rng.next_u32() as i32).collect(),
         },
+        8 => Response::Fingerprint {
+            // full 64-bit range: fingerprints cross the wire as hex
+            // strings, so they are not limited to exact JSON numbers
+            fingerprint: rng.next_u64(),
+            events: rand_id(rng),
+        },
         _ => Response::Stats {
             stats: vortex::server::StatsReport {
                 sessions_opened: rand_id(rng),
@@ -129,6 +141,7 @@ fn rand_response(rng: &mut SplitMix64) -> Response {
                 requests_accepted: rand_id(rng),
                 requests_rejected: rand_id(rng),
                 sessions_rejected: rand_id(rng),
+                connections_failed: rand_id(rng),
                 protection_faults: rand_id(rng),
                 launches_enqueued: rand_id(rng),
                 launches_completed: rand_id(rng),
@@ -186,6 +199,7 @@ fn tiny_server(max_line: usize) -> Server {
             limits: SessionLimits::default(),
             max_line,
             fleets: Vec::new(),
+            state_dir: None,
         },
     )
     .unwrap()
@@ -385,6 +399,7 @@ fn bombard_matches_direct_launch_queue_bit_identically() {
             limits: SessionLimits::default(),
             max_line: 1 << 20,
             fleets: Vec::new(),
+            state_dir: None,
         },
     )
     .unwrap();
@@ -446,6 +461,7 @@ fn bombard_load_generator_is_clean_against_a_two_device_fleet() {
             limits: SessionLimits::default(),
             max_line: 1 << 20,
             fleets: Vec::new(),
+            state_dir: None,
         },
     )
     .unwrap();
@@ -486,6 +502,7 @@ fn bombard_streaming_scenario_is_clean() {
             limits: SessionLimits::default(),
             max_line: 1 << 20,
             fleets: Vec::new(),
+            state_dir: None,
         },
     )
     .unwrap();
@@ -533,6 +550,7 @@ fn global_inflight_cap_backpressures_across_sessions() {
             },
             max_line: 1 << 20,
             fleets: Vec::new(),
+            state_dir: None,
         },
     )
     .unwrap();
@@ -587,6 +605,7 @@ fn connection_cap_rejections_count_as_sessions_not_requests() {
             limits: SessionLimits::default(),
             max_line: 1 << 16,
             fleets: Vec::new(),
+            state_dir: None,
         },
     )
     .unwrap();
@@ -658,6 +677,7 @@ fn wait_event_returns_per_event_while_an_unrelated_chain_runs() {
             limits: SessionLimits::default(),
             max_line: 1 << 20,
             fleets: Vec::new(),
+            state_dir: None,
         },
     )
     .unwrap();
@@ -713,6 +733,7 @@ fn fleet_server() -> Server {
             limits: SessionLimits::default(),
             max_line: 1 << 20,
             fleets: vec![("shared".to_string(), FLEET.to_vec())],
+            state_dir: None,
         },
     )
     .unwrap()
@@ -921,4 +942,149 @@ fn shutdown_drains_gracefully_and_refuses_new_work() {
             assert_eq!(r.read_line(&mut buf).unwrap_or(0), 0, "no service behind the port");
         }
     }
+}
+
+// -------------------------------------------------------------- robustness
+
+/// A poisoned internal lock (a session thread that panicked while
+/// holding the metrics guard) must degrade to stale-but-served state,
+/// never a wedged accept loop or a cascading panic.
+#[test]
+fn poisoned_metrics_lock_degrades_instead_of_wedging_the_service() {
+    let server = tiny_server(1 << 20);
+    server.metrics().poison_for_test();
+
+    // a full request cycle still works over the poisoned lock…
+    let mut cl = Client::connect(&server.addr().to_string()).unwrap();
+    cl.open_session(&[]).unwrap();
+    cl.stage_kernel(scale_kernel_name(2), &scale_kernel_body(2)).unwrap();
+    let a = cl.create_buffer(64).unwrap();
+    let b = cl.create_buffer(64).unwrap();
+    cl.write_buffer(a, &[4; 4]).unwrap();
+    let e = cl
+        .enqueue(scale_kernel_name(2), 4, &[a, b], Some(0), Backend::SimX, &[])
+        .unwrap();
+    assert!(cl.wait_event(e).unwrap().ok);
+    assert_eq!(cl.read_result(e, b, 4).unwrap(), vec![8; 4]);
+
+    // …stats still answer (device cycles recorded through the poison)…
+    let stats = cl.stats().unwrap();
+    assert!(stats.device_cycles.iter().sum::<u64>() > 0, "{stats:?}");
+
+    // …and brand-new connections are still accepted
+    let mut fresh = Client::connect(&server.addr().to_string()).unwrap();
+    fresh.open_session(&[]).unwrap();
+    drop(fresh);
+    server.shutdown();
+    drop(cl);
+    server.wait();
+}
+
+/// A shepherd panic (deliberately injected via the debug-only
+/// `__vortex_panic__` kernel-name hook) costs exactly that connection:
+/// it is counted on `connections_failed`, and the accept loop keeps
+/// serving everyone else.
+#[test]
+fn shepherd_panic_is_contained_counted_and_does_not_kill_the_accept_loop() {
+    let server = tiny_server(1 << 20);
+    let addr = server.addr().to_string();
+
+    let (mut w, mut r) = raw_conn(&server);
+    w.write_all(b"{\"op\":\"open_session\",\"devices\":[]}\n").unwrap();
+    match read_frame(&mut r) {
+        Response::Session { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    // the hook: a stage_kernel with this name panics inside the shepherd
+    w.write_all(b"{\"op\":\"stage_kernel\",\"name\":\"__vortex_panic__\",\"body\":\"\"}\n")
+        .unwrap();
+    let mut line = String::new();
+    let n = r.read_line(&mut line).unwrap_or(0);
+    assert_eq!(n, 0, "the panicked connection must drop, got: {line}");
+
+    // the service survived: a new connection does a full request cycle
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.open_session(&[]).unwrap();
+    let stats = cl.stats().unwrap();
+    assert_eq!(stats.connections_failed, 1, "the panic was counted: {stats:?}");
+    drop(w);
+    drop(r);
+    server.shutdown();
+    drop(cl);
+    server.wait();
+}
+
+/// Seeded fuzz over the parse surface: random byte soup and truncated
+/// valid frames must never panic `Json::parse` or the protocol
+/// decoders, and a live connection fed garbage must stay serviceable.
+#[test]
+fn fuzzed_and_truncated_frames_never_panic_the_parse_surface() {
+    use vortex::coordinator::report::Json;
+
+    // random byte soup (printable + raw control/continuation bytes)
+    quickcheck::check_default("fuzz-byte-soup", |rng| {
+        let len = rng.below(64) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let text = String::from_utf8_lossy(&bytes);
+        // must return, not panic; the Err path is the expected outcome
+        let _ = Json::parse(&text);
+        let _ = Request::decode(&text);
+        let _ = Response::decode(&text);
+    });
+
+    // structured-looking soup biased toward JSON punctuation
+    quickcheck::check_default("fuzz-json-shaped", |rng| {
+        let line = rand_string(rng);
+        let _ = Json::parse(&line);
+        let _ = Request::decode(&line);
+        let _ = Response::decode(&line);
+    });
+
+    // every prefix of a valid frame: truncation must be a clean error
+    quickcheck::check_default("fuzz-truncated-frames", |rng| {
+        let line = rand_request(rng).encode();
+        assert!(Request::decode(&line).is_ok());
+        // cut on a char boundary (frames may contain multi-byte chars)
+        let mut cut = rng.below(line.len() as u32) as usize;
+        while !line.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        let _ = Json::parse(&line[..cut]);
+        let _ = Request::decode(&line[..cut]);
+        let resp = rand_response(rng).encode();
+        assert!(Response::decode(&resp).is_ok());
+        let mut rcut = rng.below(resp.len() as u32) as usize;
+        while !resp.is_char_boundary(rcut) {
+            rcut -= 1;
+        }
+        let _ = Response::decode(&resp[..rcut]);
+    });
+
+    // live: a connection fed fuzz lines answers errors and then still
+    // serves a well-formed frame
+    let server = tiny_server(1 << 16);
+    let (mut w, mut r) = raw_conn(&server);
+    let mut rng = SplitMix64::new(0xF022);
+    for _ in 0..32 {
+        let body: String =
+            rand_string(&mut rng).chars().filter(|&c| c != '\n' && c != '\r').collect();
+        let expect_answer = !body.trim().is_empty(); // blank lines are skipped
+        w.write_all(format!("{body}\n").as_bytes()).unwrap();
+        if expect_answer {
+            // non-blank garbage gets exactly one answer frame
+            match read_frame(&mut r) {
+                Response::Error { code: ErrorCode::BadRequest, .. } => {}
+                other => panic!("unexpected answer to fuzz line {body:?}: {other:?}"),
+            }
+        }
+    }
+    w.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    match read_frame(&mut r) {
+        Response::Stats { .. } => {}
+        other => panic!("connection died under fuzz: {other:?}"),
+    }
+    server.shutdown();
+    drop(w);
+    drop(r);
+    server.wait();
 }

@@ -1,0 +1,484 @@
+//! Resilience acceptance for the versioned snapshot/restore subsystem
+//! (ISSUE 8): the determinism fingerprint is the verification gate, and
+//! it must be bit-identical across every way a schedule can be
+//! interrupted —
+//!
+//! * preemptive scheduling on/off, scheduler discipline, worker count,
+//!   and batch-vs-streaming submission (`results_fingerprint` folds in
+//!   enqueue order and excludes placement, so equality means the
+//!   *results* are identical, not merely similar);
+//! * a manual `preempt_device` suspension that is then resumed in place
+//!   or migrated onto an idle same-config device mid-flight;
+//! * device snapshots taken at a batch boundary and restored — onto the
+//!   same device, onto a fresh queue, and through the JSON wire form the
+//!   crash-recovery journal uses;
+//! * a journaled `vortex serve` session whose server dies and restarts:
+//!   `open_session {resume: token}` must reattach with the committed
+//!   fingerprint intact and finish the run bit-identical to an
+//!   uninterrupted reference session.
+
+use vortex::config::MachineConfig;
+use vortex::coordinator::report::Json;
+use vortex::pocl::{
+    results_fingerprint, Backend, DeviceId, DeviceSnapshot, Kernel, LaunchQueue, SchedMode,
+    VortexDevice,
+};
+use vortex::server::load::{scale_kernel_body, scale_kernel_name};
+use vortex::server::{Client, ClientError, ServeConfig, Server};
+
+fn scale_kernel(name: &'static str, factor: u32) -> Kernel {
+    Kernel {
+        name,
+        body: format!(
+            r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)           # in
+    lw t2, 4(t0)           # out
+    slli t3, a0, 2
+    add t4, t1, t3
+    lw t5, 0(t4)
+    li t6, {factor}
+    mul t5, t5, t6
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#
+        ),
+    }
+}
+
+/// Two-device fixture mirroring the queue's own streaming tests: each
+/// device stages an `n`-element ones input and a zeroed output at
+/// identical addresses.
+fn fixture(n: usize, jobs: usize) -> (LaunchQueue, Vec<(DeviceId, u32, u32)>) {
+    let mut q = LaunchQueue::new(jobs);
+    let mut devs = Vec::new();
+    for (w, t) in [(2u32, 2u32), (4u32, 4u32)] {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &vec![1; n]);
+        dev.write_buffer_i32(b, &vec![0; n]);
+        let id = q.add_device(dev);
+        devs.push((id, a.addr, b.addr));
+    }
+    (q, devs)
+}
+
+/// Run one pinned cross-device DAG (two chains with cross waits) under
+/// the given scheduling knobs and return the batch fingerprint.
+fn pinned_dag_fingerprint(
+    n: usize,
+    jobs: usize,
+    mode: SchedMode,
+    preemption: bool,
+    streaming: bool,
+) -> u64 {
+    let k2 = scale_kernel("res_dag2", 2);
+    let k3 = scale_kernel("res_dag3", 3);
+    let (mut q, devs) = fixture(n, jobs);
+    q.sched_mode = mode;
+    q.preemption = preemption;
+    let (d0, a0, b0) = devs[0];
+    let (d1, a1, b1) = devs[1];
+    let e0 = q.enqueue_on(d0, &k2, n as u32, &[a0, b0], Backend::SimX).unwrap();
+    let e1 = q.enqueue_on(d1, &k3, n as u32, &[a1, b1], Backend::SimX).unwrap();
+    if streaming {
+        q.flush();
+    }
+    // cross-device consumers: each tail launch waits on the *other*
+    // chain's head, so interleavings that preemption or worker count
+    // could reorder are all represented
+    let e2 = q
+        .enqueue_on_after(d0, &k3, n as u32, &[b0, a0], Backend::SimX, &[e1])
+        .unwrap();
+    let e3 = q
+        .enqueue_on_after(d1, &k2, n as u32, &[b1, a1], Backend::SimX, &[e0, e2])
+        .unwrap();
+    let _ = (e0, e1, e2, e3);
+    results_fingerprint(&q.finish())
+}
+
+/// Acceptance: the determinism fingerprint of a pinned DAG is invariant
+/// under worker count, scheduler discipline, preemptive scheduling, and
+/// batch-vs-streaming submission.
+#[test]
+fn fingerprint_is_invariant_under_scheduling_knobs() {
+    let n = 16usize;
+    let base = pinned_dag_fingerprint(n, 1, SchedMode::Reactive, false, false);
+    for (jobs, mode, preemption, streaming) in [
+        (2, SchedMode::Reactive, false, false),
+        (8, SchedMode::Reactive, false, false),
+        (4, SchedMode::RoundSync, false, false),
+        (2, SchedMode::Reactive, false, true),
+        (1, SchedMode::Reactive, true, true),
+        (8, SchedMode::Reactive, true, true),
+    ] {
+        let fp = pinned_dag_fingerprint(n, jobs, mode, preemption, streaming);
+        assert_eq!(
+            fp, base,
+            "fingerprint diverged at jobs={jobs} mode={mode:?} \
+             preemption={preemption} streaming={streaming}"
+        );
+    }
+}
+
+/// Three-device fixture for migration: d0 and d2 share one config (so a
+/// suspension on d0 can land on d2), d1 provides concurrent traffic.
+fn migration_fixture(n: usize) -> (LaunchQueue, Vec<(DeviceId, u32, u32)>) {
+    let mut q = LaunchQueue::new(4);
+    let mut devs = Vec::new();
+    for (w, t) in [(2u32, 2u32), (4u32, 4u32), (2u32, 2u32)] {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+        let a = dev.create_buffer(n * 4);
+        let b = dev.create_buffer(n * 4);
+        dev.write_buffer_i32(a, &vec![1; n]);
+        dev.write_buffer_i32(b, &vec![0; n]);
+        let id = q.add_device(dev);
+        devs.push((id, a.addr, b.addr));
+    }
+    (q, devs)
+}
+
+/// One long launch on d0 plus a chain on d1; returns the fingerprint and
+/// d0's launch event index.
+fn migration_dag(
+    q: &mut LaunchQueue,
+    devs: &[(DeviceId, u32, u32)],
+    n: usize,
+    k2: &Kernel,
+    k3: &Kernel,
+) -> usize {
+    let (d0, a0, b0) = devs[0];
+    let (d1, a1, b1) = devs[1];
+    let long = q.enqueue_on(d0, k2, n as u32, &[a0, b0], Backend::SimX).unwrap();
+    let _ = q.enqueue_on(d1, k3, n as u32, &[a1, b1], Backend::SimX).unwrap();
+    let _ = q.enqueue_on(d1, k3, n as u32, &[b1, b1], Backend::SimX).unwrap();
+    long.0
+}
+
+/// Acceptance: a launch suspended mid-flight by `preempt_device` and then
+/// resumed in place — or migrated onto an idle identical-config device —
+/// commits a batch bit-identical to the uninterrupted run. The test is
+/// robust to the race where the launch finishes before the signal lands:
+/// the fingerprint must match either way.
+#[test]
+fn manual_preemption_resume_and_migration_are_bit_identical() {
+    let n = 1024usize; // long enough that the preempt signal usually lands
+    let k2 = scale_kernel("res_mig2", 2);
+    let k3 = scale_kernel("res_mig3", 3);
+
+    // uninterrupted baseline
+    let (mut q, devs) = migration_fixture(n);
+    migration_dag(&mut q, &devs, n, &k2, &k3);
+    let base = results_fingerprint(&q.finish());
+
+    // suspend → resume in place
+    let (mut q, devs) = migration_fixture(n);
+    q.preemption = true;
+    migration_dag(&mut q, &devs, n, &k2, &k3);
+    q.flush();
+    let d0 = devs[0].0;
+    if q.preempt_device(d0) && q.suspended_event(d0).is_some() {
+        q.resume_device(d0);
+    }
+    let resumed = results_fingerprint(&q.finish());
+    assert_eq!(resumed, base, "suspend→resume must not perturb the batch");
+
+    // suspend → migrate onto the idle same-config device
+    let (mut q, devs) = migration_fixture(n);
+    q.preemption = true;
+    let long_idx = migration_dag(&mut q, &devs, n, &k2, &k3);
+    q.flush();
+    let (d0, d2) = (devs[0].0, devs[2].0);
+    let mut migrated = false;
+    if q.preempt_device(d0) && q.suspended_event(d0).is_some() {
+        q.migrate_suspended(d0, d2).unwrap();
+        migrated = true;
+        assert!(q.preemptions() >= 1, "the suspension must be counted");
+    }
+    let results = q.finish();
+    if migrated {
+        let r = results[long_idx].as_ref().unwrap();
+        assert_eq!(r.device, Some(d2), "a migrated launch commits on its destination");
+    }
+    assert_eq!(
+        results_fingerprint(&results),
+        base,
+        "suspend→migrate must be bit-identical to the uninterrupted run \
+         (migrated={migrated})"
+    );
+}
+
+/// Acceptance: device snapshots taken at a batch boundary rewind the
+/// fleet exactly — replaying the next batch after a restore reproduces
+/// the same fingerprint, on the same queue, on a fresh queue
+/// (migration), and through the JSON form the journal persists.
+#[test]
+fn snapshot_restore_replays_bit_identically() {
+    let n = 16usize;
+    let k2 = scale_kernel("res_snap2", 2);
+    let k3 = scale_kernel("res_snap3", 3);
+    let (mut q, devs) = fixture(n, 4);
+    let (d0, a0, b0) = devs[0];
+    let (d1, a1, b1) = devs[1];
+
+    // batch 1, then checkpoint both devices at the boundary
+    q.enqueue_on(d0, &k2, n as u32, &[a0, b0], Backend::SimX).unwrap();
+    q.enqueue_on(d1, &k3, n as u32, &[a1, b1], Backend::SimX).unwrap();
+    for r in q.finish() {
+        r.unwrap();
+    }
+    let snap0 = q.snapshot_device(d0).unwrap();
+    let snap1 = q.snapshot_device(d1).unwrap();
+
+    // batch 2 runs forward from the checkpoint
+    let run_batch2 = |q: &mut LaunchQueue| {
+        q.enqueue_on(d0, &k3, n as u32, &[b0, a0], Backend::SimX).unwrap();
+        q.enqueue_on(d1, &k2, n as u32, &[b1, a1], Backend::SimX).unwrap();
+        results_fingerprint(&q.finish())
+    };
+    let fp_a = run_batch2(&mut q);
+    let data_a = q.device(d0).mem.read_i32_slice(a0, n);
+    assert_eq!(data_a, vec![6; n], "ones * 2 * 3 after the chained batches");
+
+    // rewind the same queue and replay
+    q.restore_device(d0, &snap0).unwrap();
+    q.restore_device(d1, &snap1).unwrap();
+    assert_eq!(run_batch2(&mut q), fp_a, "same-queue restore must replay exactly");
+    assert_eq!(q.device(d0).mem.read_i32_slice(a0, n), data_a);
+
+    // migrate the checkpoint onto a brand-new queue (fresh devices of
+    // the same shapes, no history)
+    let (mut fresh, _) = fixture(n, 2);
+    fresh.restore_device(d0, &snap0).unwrap();
+    fresh.restore_device(d1, &snap1).unwrap();
+    assert_eq!(run_batch2(&mut fresh), fp_a, "restore onto a fresh fleet must replay exactly");
+
+    // the JSON wire form (what the crash-recovery journal persists)
+    // round-trips without losing a bit
+    let text = snap0.to_json().render();
+    let parsed = DeviceSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(parsed.fingerprint, snap0.fingerprint);
+    let (mut wire, _) = fixture(n, 2);
+    wire.restore_device(d0, &parsed).unwrap();
+    wire.restore_device(d1, &snap1).unwrap();
+    assert_eq!(run_batch2(&mut wire), fp_a, "JSON-round-tripped restore must replay exactly");
+
+    // shape mismatch is rejected whole: d1 is (4,4), snap0 is (2,2)
+    assert!(q.restore_device(d1, &snap0).is_err(), "shape mismatch must be rejected");
+}
+
+/// Mid-stream checkpoint discipline: while a streaming batch is in
+/// flight the device must be quiesced first — the error says so — and
+/// after `quiesce` the snapshot succeeds without retiring the batch.
+#[test]
+fn in_flight_snapshot_requires_quiesce() {
+    let n = 256usize;
+    let k2 = scale_kernel("res_qsc2", 2);
+    let (mut q, devs) = fixture(n, 2);
+    let (d0, a0, b0) = devs[0];
+    q.enqueue_on(d0, &k2, n as u32, &[a0, b0], Backend::SimX).unwrap();
+    q.flush();
+    // the launch may still be in flight; an early snapshot either
+    // succeeds (already parked) or names the remedy
+    if let Err(e) = q.snapshot_device(d0) {
+        assert!(e.to_string().contains("quiesce"), "error must name the remedy: {e}");
+    }
+    q.quiesce();
+    let snap = q.snapshot_device(d0).unwrap();
+    assert_eq!(snap.fingerprint, q.device(d0).mem.content_fingerprint());
+    // the batch is still open: streaming continues after the checkpoint
+    q.enqueue_on(d0, &k2, n as u32, &[b0, a0], Backend::SimX).unwrap();
+    for r in q.finish() {
+        r.unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Crash recovery over the wire: journaled serve sessions
+// ---------------------------------------------------------------------
+
+/// Scratch state directory under the system tempdir, wiped on entry.
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("vortex-resilience-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+const SESSION_CONFIGS: [(u32, u32); 2] = [(2, 2), (4, 4)];
+const FACTOR: u32 = 3;
+
+/// Stage the session prefix: kernel, two buffers, seeded input, and two
+/// finished (committed, journal-checkpointed) ping-pong batches — batch
+/// 1 scales a→b on device 0, batch 2 scales b→a on device 1, chaining
+/// through the committed device images (batches carry no wait lists:
+/// server events are batch-scoped). Returns the buffer addresses and the
+/// input.
+fn session_prefix(cl: &mut Client, n: u32) -> (u32, u32, Vec<i32>) {
+    cl.stage_kernel(scale_kernel_name(FACTOR), &scale_kernel_body(FACTOR)).unwrap();
+    let a = cl.create_buffer(n * 4).unwrap();
+    let b = cl.create_buffer(n * 4).unwrap();
+    let input: Vec<i32> = (0..n as i32).map(|x| x - 7).collect();
+    cl.write_buffer(a, &input).unwrap();
+    for (src, dst, dev) in [(a, b, 0u32), (b, a, 1)] {
+        cl.enqueue(scale_kernel_name(FACTOR), n, &[src, dst], Some(dev), Backend::SimX, &[])
+            .unwrap();
+        let r = cl.finish().unwrap();
+        assert!(
+            r.len() == 1 && r[0].ok,
+            "prefix batch on device {dev} must commit cleanly: {r:?}"
+        );
+    }
+    (a, b, input)
+}
+
+/// Finish the session: one more chained batch, then read the final data
+/// and the fingerprint.
+fn session_tail(cl: &mut Client, a: u32, b: u32, n: u32) -> (Vec<i32>, u64, u64) {
+    let e = cl
+        .enqueue(scale_kernel_name(FACTOR), n, &[a, b], Some(1), Backend::SimX, &[])
+        .unwrap();
+    let r = cl.finish().unwrap();
+    assert!(r.len() == 1 && r[0].ok, "tail batch must commit cleanly: {r:?}");
+    let data = cl.read_result(e, b, n).unwrap();
+    let (fp, events) = cl.fingerprint().unwrap();
+    (data, fp, events)
+}
+
+/// Acceptance (the crash-recovery leg of ISSUE 8, in-process): a
+/// journaled session survives its server being torn down and restarted
+/// over the same state directory — `open_session {resume: token}`
+/// reattaches with the committed fingerprint intact, and finishing the
+/// run is bit-identical to an uninterrupted session on a server that
+/// never journaled at all.
+#[test]
+fn journaled_session_survives_server_restart_bit_identically() {
+    let n = 48u32;
+
+    // uninterrupted reference on a non-journaling server
+    let ref_srv = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig { configs: SESSION_CONFIGS.to_vec(), ..ServeConfig::default() },
+    )
+    .unwrap();
+    let mut cl = Client::connect(&ref_srv.addr().to_string()).unwrap();
+    let (_, devices) = cl.open_session(&[]).unwrap();
+    assert_eq!(devices, SESSION_CONFIGS.to_vec());
+    assert!(cl.resume_token().is_empty(), "no --state-dir ⇒ no resume token");
+    let (a, b, input) = session_prefix(&mut cl, n);
+    let (ref_data, ref_fp, ref_events) = session_tail(&mut cl, a, b, n);
+    assert_eq!(ref_events, 3, "three committed events fold into the fingerprint");
+    let want: Vec<i32> = input.iter().map(|x| x * 27).collect();
+    assert_eq!(ref_data, want, "three chained x3 scales");
+    drop(cl);
+    ref_srv.shutdown();
+    ref_srv.wait();
+
+    // journaled run, phase 1: prefix only, then the server dies
+    let dir = scratch_dir("journal");
+    let journaled_cfg = || ServeConfig {
+        configs: SESSION_CONFIGS.to_vec(),
+        state_dir: Some(dir.clone()),
+        ..ServeConfig::default()
+    };
+    let srv1 = Server::spawn("127.0.0.1:0", journaled_cfg()).unwrap();
+    let mut cl = Client::connect(&srv1.addr().to_string()).unwrap();
+    cl.open_session(&[]).unwrap();
+    let token = cl.resume_token().to_string();
+    assert!(!token.is_empty(), "journaling server must hand out a resume token");
+    let (a2, b2, _) = session_prefix(&mut cl, n);
+    assert_eq!((a2, b2), (a, b), "identical staging must yield identical addresses");
+    let (committed_fp, committed_events) = cl.fingerprint().unwrap();
+    assert_eq!(committed_events, 2);
+    drop(cl); // connection gone, results unharvested
+    srv1.shutdown();
+    srv1.wait();
+
+    // phase 2: a new server over the same state dir; resume by token
+    let srv2 = Server::spawn("127.0.0.1:0", journaled_cfg()).unwrap();
+    let addr = srv2.addr().to_string();
+    let mut cl = Client::connect(&addr).unwrap();
+    let (_, devices) = cl.open_session_resume(&token).unwrap();
+    assert_eq!(devices, SESSION_CONFIGS.to_vec(), "restored session keeps its fleet");
+    let (fp, events) = cl.fingerprint().unwrap();
+    assert_eq!(
+        (fp, events),
+        (committed_fp, committed_events),
+        "restore must reproduce the committed fingerprint, not recompute a new one"
+    );
+
+    // the token is single-holder while attached
+    let mut thief = Client::connect(&addr).unwrap();
+    match thief.open_session_resume(&token) {
+        Err(ClientError::Server { message, .. }) => {
+            assert!(message.contains("active"), "second resume must say the session is live");
+        }
+        other => panic!("second resume of a live session must fail, got {other:?}"),
+    }
+    drop(thief);
+
+    // finishing the restored session is bit-identical to the reference
+    let (data, fp, events) = session_tail(&mut cl, a, b, n);
+    assert_eq!(data, ref_data, "restored run data must match the uninterrupted run");
+    assert_eq!(fp, ref_fp, "restored run fingerprint must match the uninterrupted run");
+    assert_eq!(events, ref_events);
+    drop(cl);
+    srv2.shutdown();
+    srv2.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Resume error surface: a malformed token, an unknown token, and a
+/// server with no state dir each answer a distinct, connection-preserving
+/// error.
+#[test]
+fn resume_errors_are_answered_not_fatal() {
+    // journaling server: bad tokens
+    let dir = scratch_dir("errors");
+    let srv = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: vec![(2, 2)],
+            state_dir: Some(dir.clone()),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = srv.addr().to_string();
+    let mut cl = Client::connect(&addr).unwrap();
+    for bad in ["not-a-token", "s999999"] {
+        match cl.open_session_resume(bad) {
+            Err(ClientError::Server { .. }) => {}
+            other => panic!("resume {bad:?} must be a server error, got {other:?}"),
+        }
+    }
+    // the connection survived: a fresh open_session still works on it
+    cl.open_session(&[]).unwrap();
+    drop(cl);
+    srv.shutdown();
+    srv.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // non-journaling server: resume is rejected up front
+    let srv = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig { configs: vec![(2, 2)], ..ServeConfig::default() },
+    )
+    .unwrap();
+    let mut cl = Client::connect(&srv.addr().to_string()).unwrap();
+    match cl.open_session_resume("s1") {
+        Err(ClientError::Server { message, .. }) => {
+            assert!(
+                message.contains("state-dir"),
+                "the error must name the missing --state-dir: {message}"
+            );
+        }
+        other => panic!("resume without a state dir must fail, got {other:?}"),
+    }
+    drop(cl);
+    srv.shutdown();
+    srv.wait();
+}
