@@ -382,6 +382,8 @@ fn main() {
         shutdown: true,
         stream: true,
         fleet: None,
+        binary: false,
+        large: false,
     });
     // idempotent with the shutdown frame: guarantees the drain even if
     // the control connection was refused
@@ -437,6 +439,8 @@ fn main() {
         shutdown: true,
         stream: false,
         fleet: Some("bench".to_string()),
+        binary: false,
+        large: false,
     });
     server.shutdown();
     server.wait();
@@ -462,6 +466,75 @@ fn main() {
     json.push("server_shared_fleet_p50_ms", (rep.p50.as_secs_f64() * 1e3).into());
     json.push("server_shared_fleet_p99_ms", (rep.p99.as_secs_f64() * 1e3).into());
     json.push("server_shared_fleet_launches", rep.launches.into());
+
+    // --- bulk transfer: JSON lines vs the binary wire, 64 KiB – 4 MiB ---
+    // The same large-buffer workload (timed write_buffer / read_result
+    // round trips, every byte verified) over both framings against one
+    // server. The aggregate MiB/s is dominated by the 4 MiB requests
+    // (~75% of the bytes), which is exactly the regime the binary frames
+    // exist for; the two runs must also report the SAME results
+    // fingerprint — the encoding may never leak into committed results.
+    let large_requests = if smoke { 4usize } else { 8 };
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: vec![(2, 2)],
+            // a JSON-framed 4 MiB write line is ~10 bytes per word
+            max_line: 64 << 20,
+            ..ServeConfig::default()
+        },
+    )
+    .expect("spawn bulk-transfer bench server");
+    let large_cfg = |binary: bool| BombardConfig {
+        addr: server.addr().to_string(),
+        clients: 2,
+        requests: large_requests,
+        n: 256,
+        seed: 0xC0FFEE,
+        shutdown: false,
+        stream: false,
+        fleet: None,
+        binary,
+        large: true,
+    };
+    let rep_json = run_bombard(&large_cfg(false));
+    let rep_bin = run_bombard(&large_cfg(true));
+    server.shutdown();
+    server.wait();
+    assert!(
+        rep_json.clean(),
+        "JSON large-buffer bombard must verify every request: {:?}",
+        rep_json.errors
+    );
+    assert!(
+        rep_bin.clean(),
+        "binary large-buffer bombard must verify every request: {:?}",
+        rep_bin.errors
+    );
+    assert!(
+        rep_json.results_fingerprint.is_some()
+            && rep_json.results_fingerprint == rep_bin.results_fingerprint,
+        "JSON and binary runs of the same workload must commit identical \
+         results: {:?} vs {:?}",
+        rep_json.results_fingerprint,
+        rep_bin.results_fingerprint
+    );
+    for (label, rep) in [("json", &rep_json), ("binary", &rep_bin)] {
+        let w = rep.write_mbps.expect("large run reports write MiB/s");
+        let r = rep.read_mbps.expect("large run reports read MiB/s");
+        println!(
+            "bench {:<40} write {w:.2} MiB/s, read {r:.2} MiB/s",
+            format!("server_{label}_bulk_transfer"),
+        );
+        json.push(&format!("server_{label}_write_mbps"), w.into());
+        json.push(&format!("server_{label}_read_mbps"), r.into());
+    }
+    println!(
+        "  -> binary wire speedup over JSON: write {:.2}x, read {:.2}x \
+         (2 clients x {large_requests} requests, 64 KiB – 4 MiB)\n",
+        rep_bin.write_mbps.unwrap_or(0.0) / rep_json.write_mbps.unwrap_or(f64::INFINITY),
+        rep_bin.read_mbps.unwrap_or(0.0) / rep_json.read_mbps.unwrap_or(f64::INFINITY)
+    );
 
     // --- resilience: snapshot capture/restore + preemption round trip ---
     // Checkpoint-per-batch journaling (serve --state-dir) and preemptive

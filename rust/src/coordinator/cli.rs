@@ -118,6 +118,12 @@ pub enum Command {
         /// (self-hosted servers host it over `--configs`); the run also
         /// asserts zero cross-tenant protection faults.
         fleet: Option<String>,
+        /// `--binary`: negotiate binary wire framing (results stay
+        /// bit-identical to JSON — the printed fingerprint proves it).
+        binary: bool,
+        /// `--large-buffers`: bulk-transfer scenario (64 KiB – 4 MiB
+        /// buffers, timed write/read, MiB/s in the report).
+        large: bool,
     },
     List,
     Help,
@@ -348,6 +354,8 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut shutdown = false;
             let mut stream = false;
             let mut fleet: Option<String> = None;
+            let mut binary = false;
+            let mut large = false;
             let mut i = 1;
             while i < args.len() {
                 match args[i].as_str() {
@@ -367,6 +375,8 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--fleet" => {
                         fleet = Some(take_value(args, &mut i, "--fleet")?.to_string())
                     }
+                    "--binary" => binary = true,
+                    "--large-buffers" => large = true,
                     other => return Err(CliError(format!("unknown flag `{other}`"))),
                 }
                 i += 1;
@@ -388,6 +398,8 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 shutdown,
                 stream,
                 fleet,
+                binary,
+                large,
             })
         }
         "power" => {
@@ -534,7 +546,8 @@ USAGE:
                                                   lost
   vortex bombard [--addr HOST:PORT] [--clients N] [--requests M] [--n SIZE]
                  [--configs 2x2,8x8] [--jobs N] [--seed S] [--shutdown]
-                 [--stream] [--fleet NAME]        concurrent load generator:
+                 [--stream] [--fleet NAME] [--binary] [--large-buffers]
+                                                  concurrent load generator:
                                                   verifies every response and
                                                   reports req/s + p50/p99
                                                   latency; without --addr it
@@ -547,7 +560,15 @@ USAGE:
                                                   client to the named shared
                                                   fleet and also asserts zero
                                                   cross-tenant protection
-                                                  faults
+                                                  faults; --binary negotiates
+                                                  the length-prefixed binary
+                                                  wire frames (bit-identical
+                                                  results, proven by the
+                                                  printed fingerprint);
+                                                  --large-buffers cycles
+                                                  64KiB-4MiB buffers through
+                                                  timed write/read round
+                                                  trips and reports MiB/s
   vortex crash-smoke [--dir DIR] [--n SIZE] [--seed S]
                                                   end-to-end crash-recovery
                                                   proof: SIGKILL a journaled
@@ -783,6 +804,8 @@ pub fn execute(cmd: Command) -> i32 {
             shutdown,
             stream,
             fleet,
+            binary,
+            large,
         } => {
             // self-host a server on an ephemeral port unless --addr given
             let (target, local) = match addr {
@@ -797,6 +820,14 @@ pub fn execute(cmd: Command) -> i32 {
                             .unwrap_or_default(),
                         configs,
                         jobs: jobs.map_or_else(pool::default_jobs, |j| j as usize),
+                        // a JSON-framed 4 MiB write_buffer line is ~10
+                        // bytes per word: the large scenario needs
+                        // headroom over the default line cap
+                        max_line: if large {
+                            64 << 20
+                        } else {
+                            ServeConfig::default().max_line
+                        },
                         ..ServeConfig::default()
                     };
                     match Server::spawn("127.0.0.1:0", cfg) {
@@ -810,12 +841,14 @@ pub fn execute(cmd: Command) -> i32 {
             };
             println!(
                 "bombarding {target}: {clients} client(s) x {requests} request(s), n={n}, \
-                 seed {seed:#x}{}{}",
+                 seed {seed:#x}{}{}{}{}",
                 if stream { ", streaming" } else { "" },
                 fleet
                     .as_deref()
                     .map(|f| format!(", shared fleet `{f}`"))
-                    .unwrap_or_default()
+                    .unwrap_or_default(),
+                if binary { ", binary wire" } else { "" },
+                if large { ", large buffers" } else { "" }
             );
             let rep = crate::server::run_bombard(&BombardConfig {
                 addr: target,
@@ -827,6 +860,8 @@ pub fn execute(cmd: Command) -> i32 {
                 shutdown: shutdown || local.is_some(),
                 stream,
                 fleet,
+                binary,
+                large,
             });
             let dropped = rep.requests_sent - rep.answered;
             println!(
@@ -838,6 +873,13 @@ pub fn execute(cmd: Command) -> i32 {
                 "throughput: {:.2} verified req/s over {:.2?}; latency p50 {:.2?} p99 {:.2?}",
                 rep.req_per_sec, rep.elapsed, rep.p50, rep.p99
             );
+            if let (Some(w), Some(r)) = (rep.write_mbps, rep.read_mbps) {
+                println!("bulk transfer: write {w:.2} MiB/s, read {r:.2} MiB/s");
+            }
+            if let Some(fp) = rep.results_fingerprint {
+                // stable grep target for the CI JSON-vs-binary compare
+                println!("results fingerprint: {fp:#018x}");
+            }
             if let Some(stats) = &rep.stats {
                 println!(
                     "server: {} session(s) opened, {} accepted, {} busy-rejected, \
@@ -1358,6 +1400,14 @@ mod tests {
         }
         match parse(&argv("bombard --stream --clients 2")).unwrap() {
             Command::Bombard { stream: true, clients: 2, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("bombard --binary --large-buffers --clients 2")).unwrap() {
+            Command::Bombard { binary: true, large: true, clients: 2, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("bombard")).unwrap() {
+            Command::Bombard { binary: false, large: false, .. } => {}
             other => panic!("{other:?}"),
         }
         assert!(parse(&argv("bombard --clients 0")).is_err());

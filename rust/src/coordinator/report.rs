@@ -79,27 +79,53 @@ impl Json {
     }
 
     pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    /// [`Json::render`] appended to `out`, with no per-node intermediate
+    /// strings — the serving hot path renders every response frame into
+    /// one reused buffer. Byte-identical to `render()` by construction.
+    pub fn render_into(&self, out: &mut String) {
+        use std::fmt::Write;
         match self {
-            Json::Null => "null".into(),
-            Json::Bool(b) => b.to_string(),
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 1e15 {
-                    format!("{}", *n as i64)
+                    let _ = write!(out, "{}", *n as i64);
                 } else {
-                    format!("{n}")
+                    let _ = write!(out, "{n}");
                 }
             }
-            Json::Str(s) => format!("\"{}\"", escape(s)),
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
             Json::Arr(xs) => {
-                let inner: Vec<String> = xs.iter().map(|x| x.render()).collect();
-                format!("[{}]", inner.join(","))
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.render_into(out);
+                }
+                out.push(']');
             }
             Json::Obj(entries) => {
-                let inner: Vec<String> = entries
-                    .iter()
-                    .map(|(k, v)| format!("\"{}\":{}", escape(k), v.render()))
-                    .collect();
-                format!("{{{}}}", inner.join(","))
+                out.push('{');
+                for (i, (k, v)) in entries.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\":");
+                    v.render_into(out);
+                }
+                out.push('}');
             }
         }
     }

@@ -682,6 +682,34 @@ impl Memory {
         }
     }
 
+    /// [`Memory::write_block`] fed straight from a reader: `len` bytes
+    /// stream from `r` directly into the COW page frames, one
+    /// `read_exact` per covered page — the binary wire path lands
+    /// `write_buffer` payloads here without materializing an
+    /// intermediate buffer. On an I/O error the prefix already read is
+    /// committed (callers treat transport errors as fatal for the
+    /// connection, so the torn state is never observed).
+    pub fn write_block_from_reader<R: std::io::Read>(
+        &mut self,
+        addr: u32,
+        len: usize,
+        r: &mut R,
+    ) -> std::io::Result<()> {
+        let mut a = addr;
+        let mut rest = len;
+        while rest > 0 {
+            let off = (a & PAGE_MASK) as usize;
+            let n = (PAGE_SIZE - off).min(rest);
+            // per-chunk so address-space wraparound still hits the text
+            // range at the chunk's real (wrapped) address
+            self.touch(a, n as u32);
+            r.read_exact(&mut self.page_mut(a)[off..off + n])?;
+            rest -= n;
+            a = a.wrapping_add(n as u32);
+        }
+        Ok(())
+    }
+
     /// Device→host bulk copy (mini-OpenCL `clEnqueueReadBuffer`): per-page
     /// copies; unmapped pages read as zeros.
     pub fn read_block(&self, addr: u32, len: usize) -> Vec<u8> {
@@ -916,6 +944,32 @@ mod tests {
         let data: Vec<u8> = (0..=255).collect();
         m.write_block(0x5000, &data);
         assert_eq!(m.read_block(0x5000, 256), data);
+    }
+
+    #[test]
+    fn write_block_from_reader_matches_write_block() {
+        // the zero-copy wire path must land exactly the bytes write_block
+        // would, across page boundaries, odd offsets, and wraparound
+        let cases: &[(u32, usize)] = &[
+            (0x5000, 256),
+            (0x0000_0F80, 300),            // crosses page 0 / page 1
+            ((1 << PAGE_BITS) - 1, 8193),  // last byte of a page + 2 full pages
+            (0xFFFF_FFF0, 64),             // wraps the top of the address space
+        ];
+        for &(addr, len) in cases {
+            let data: Vec<u8> = (0..len as u32).map(|i| (i * 31 + 7) as u8).collect();
+            let mut a = Memory::new();
+            a.write_block(addr, &data);
+            let mut b = Memory::new();
+            b.write_block_from_reader(addr, len, &mut &data[..]).unwrap();
+            assert_eq!(b.read_block(addr, len), a.read_block(addr, len), "@{addr:#x}");
+            assert_eq!(b.resident_pages(), a.resident_pages());
+            assert_eq!(b.content_fingerprint(), a.content_fingerprint());
+        }
+        // a short reader reports the error instead of faking zero-fill
+        let mut m = Memory::new();
+        let short = [0u8; 10];
+        assert!(m.write_block_from_reader(0x100, 64, &mut &short[..]).is_err());
     }
 
     #[test]

@@ -382,7 +382,9 @@ fn barriers_from_json(j: Option<&Json>) -> Result<Vec<(u32, Vec<(u32, u32)>)>, S
     Ok(out)
 }
 
-fn hex_encode(bytes: &[u8]) -> String {
+/// Crate-visible: the crash-recovery journal reuses the snapshot hex
+/// form for its large binary `write` records.
+pub(crate) fn hex_encode(bytes: &[u8]) -> String {
     const HEX: &[u8; 16] = b"0123456789abcdef";
     let mut s = String::with_capacity(bytes.len() * 2);
     for &b in bytes {
@@ -392,7 +394,7 @@ fn hex_encode(bytes: &[u8]) -> String {
     s
 }
 
-fn hex_decode(s: &str) -> Result<Vec<u8>, String> {
+pub(crate) fn hex_decode(s: &str) -> Result<Vec<u8>, String> {
     let b = s.as_bytes();
     if b.len() % 2 != 0 {
         return Err("hex payload has odd length".into());

@@ -12,7 +12,8 @@ use crate::pocl::Backend;
 use crate::server::protocol::{
     ErrorCode, EventSummary, ProtoError, Request, Response, StatsReport,
 };
-use std::io::{BufRead, BufReader, Write};
+use crate::server::wire;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
 /// Client-side failure.
@@ -82,6 +83,20 @@ pub struct Client {
     /// The resume token from the last `open_session` (empty if the
     /// server is not journaling this session).
     last_resume: String,
+    /// Ask for `{"wire":"binary"}` at the next `open_session`
+    /// ([`Client::connect_binary`]).
+    want_binary: bool,
+    /// Binary framing is live (set after a successful binary open — the
+    /// open itself is always line-JSON in both directions).
+    binary: bool,
+    /// Reused per-frame scratch: outgoing bytes/line and the incoming
+    /// response accumulator — steady-state traffic allocates nothing.
+    out_buf: Vec<u8>,
+    line: String,
+    in_buf: Vec<u8>,
+    /// Transparent [`Client::read_result`] chunk size in words (defaults
+    /// to the server's `max_read_words` default).
+    read_chunk_words: u32,
 }
 
 impl Client {
@@ -91,6 +106,10 @@ impl Client {
     /// drop and the CI smoke turns into a nonzero exit) instead of
     /// hanging the caller forever.
     pub const DEFAULT_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(120);
+
+    /// Default transparent read chunk: the server's `max_read_words`
+    /// default, so an un-tuned client never trips the per-request cap.
+    pub const DEFAULT_READ_CHUNK_WORDS: u32 = 1 << 20;
 
     pub fn connect(addr: &str) -> Result<Client, ClientError> {
         let stream = TcpStream::connect(addr)?;
@@ -102,7 +121,37 @@ impl Client {
             writer: stream,
             timeout: Some(Self::DEFAULT_TIMEOUT),
             last_resume: String::new(),
+            want_binary: false,
+            binary: false,
+            out_buf: Vec::new(),
+            line: String::new(),
+            in_buf: Vec::new(),
+            read_chunk_words: Self::DEFAULT_READ_CHUNK_WORDS,
         })
+    }
+
+    /// Connect and negotiate **binary framing** at the next
+    /// `open_session`: the open request/ack are line-JSON as always,
+    /// then both directions switch to length-prefixed binary frames
+    /// (bulk `write_buffer`/`read_result` payloads as raw little-endian
+    /// words, everything else in JSON envelopes). Results are
+    /// bit-identical to JSON mode — only the encoding differs.
+    pub fn connect_binary(addr: &str) -> Result<Client, ClientError> {
+        let mut c = Self::connect(addr)?;
+        c.want_binary = true;
+        Ok(c)
+    }
+
+    /// Is binary framing live on this connection?
+    pub fn is_binary(&self) -> bool {
+        self.binary
+    }
+
+    /// Override the transparent [`Client::read_result`] chunk size
+    /// (words per request; must stay within the server's
+    /// `max_read_words`). Zero is clamped to one word.
+    pub fn set_read_chunk_words(&mut self, words: u32) {
+        self.read_chunk_words = words.max(1);
     }
 
     /// Override the per-response read timeout (`None` ⇒ block forever).
@@ -115,28 +164,93 @@ impl Client {
         Ok(())
     }
 
+    /// Map a transport read error to the client error that names what
+    /// actually happened (timeout vs dead connection).
+    fn read_err(&self, e: std::io::Error) -> ClientError {
+        match e.kind() {
+            // both kinds appear in the wild: WouldBlock (unix), TimedOut (windows)
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                ClientError::Timeout(self.timeout.unwrap_or(Self::DEFAULT_TIMEOUT))
+            }
+            std::io::ErrorKind::UnexpectedEof => {
+                ClientError::Protocol("server closed the connection".into())
+            }
+            _ => ClientError::Io(e),
+        }
+    }
+
+    /// `read_exact` that distinguishes clean close from transport death
+    /// (BufReader's `read_exact` already reports close as
+    /// `UnexpectedEof`, which [`Client::read_err`] names).
+    fn read_exact_frame(&mut self, buf: &mut [u8]) -> Result<(), ClientError> {
+        let mut have = 0usize;
+        while have < buf.len() {
+            match self.reader.read(&mut buf[have..]) {
+                Ok(0) => {
+                    return Err(ClientError::Protocol(
+                        "server closed the connection".into(),
+                    ))
+                }
+                Ok(n) => have += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(self.read_err(e)),
+            }
+        }
+        Ok(())
+    }
+
     /// Send one frame, read one frame. `ok:false` becomes
     /// [`ClientError::Server`]; a read-timeout expiry becomes
-    /// [`ClientError::Timeout`].
+    /// [`ClientError::Timeout`]. In binary mode the same call speaks
+    /// length-prefixed frames instead of JSON lines.
     pub fn request(&mut self, req: &Request) -> Result<Response, ClientError> {
-        let mut line = req.encode();
-        line.push('\n');
-        self.writer.write_all(line.as_bytes())?;
+        if self.binary {
+            return self.request_binary(req);
+        }
+        self.line.clear();
+        req.encode_into(&mut self.line);
+        self.line.push('\n');
+        self.writer.write_all(self.line.as_bytes())?;
         self.writer.flush()?;
-        let mut resp = String::new();
-        let n = self.reader.read_line(&mut resp).map_err(|e| {
-            // both kinds appear in the wild: WouldBlock (unix), TimedOut (windows)
-            if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
-            {
-                ClientError::Timeout(self.timeout.unwrap_or(Self::DEFAULT_TIMEOUT))
-            } else {
-                ClientError::Io(e)
-            }
-        })?;
+        self.line.clear();
+        let mut resp = std::mem::take(&mut self.line);
+        let n = self.reader.read_line(&mut resp);
+        self.line = resp;
+        let n = n.map_err(|e| self.read_err(e))?;
         if n == 0 {
             return Err(ClientError::Protocol("server closed the connection".into()));
         }
-        match Response::decode(resp.trim())? {
+        match Response::decode(self.line.trim())? {
+            Response::Error { code, message } => Err(ClientError::Server { code, message }),
+            other => Ok(other),
+        }
+    }
+
+    /// One binary-mode round trip: encode into the reused outgoing
+    /// buffer, read the 6-byte header, then the declared payload into
+    /// the reused incoming buffer.
+    fn request_binary(&mut self, req: &Request) -> Result<Response, ClientError> {
+        let mut out = std::mem::take(&mut self.out_buf);
+        wire::encode_request_into(req, &mut out);
+        let sent = self.writer.write_all(&out).and_then(|_| self.writer.flush());
+        self.out_buf = out;
+        sent?;
+        let mut hdr = [0u8; wire::HEADER_LEN];
+        self.read_exact_frame(&mut hdr)?;
+        let (op, len) = wire::parse_header(&hdr)
+            .map_err(|e| ClientError::Protocol(e.to_string()))?;
+        if len > wire::MAX_BINARY_PAYLOAD {
+            return Err(ClientError::Protocol(format!(
+                "response frame payload {len} bytes exceeds cap"
+            )));
+        }
+        let mut payload = std::mem::take(&mut self.in_buf);
+        payload.clear();
+        payload.resize(len, 0);
+        let got = self.read_exact_frame(&mut payload);
+        self.in_buf = payload;
+        got?;
+        match wire::decode_response(op, &self.in_buf)? {
             Response::Error { code, message } => Err(ClientError::Server { code, message }),
             other => Ok(other),
         }
@@ -153,10 +267,12 @@ impl Client {
             devices: devices.to_vec(),
             fleet: None,
             resume: None,
+            wire: self.wire_field(),
         };
         match self.request(&req)? {
             Response::Session { session, devices, resume } => {
                 self.last_resume = resume;
+                self.binary = self.want_binary;
                 Ok((session, devices))
             }
             other => Err(unexpected(&other)),
@@ -173,10 +289,12 @@ impl Client {
             devices: Vec::new(),
             fleet: Some(fleet.to_string()),
             resume: None,
+            wire: self.wire_field(),
         };
         match self.request(&req)? {
             Response::Session { session, devices, resume } => {
                 self.last_resume = resume;
+                self.binary = self.want_binary;
                 Ok((session, devices))
             }
             other => Err(unexpected(&other)),
@@ -195,14 +313,23 @@ impl Client {
             devices: Vec::new(),
             fleet: None,
             resume: Some(token.to_string()),
+            wire: self.wire_field(),
         };
         match self.request(&req)? {
             Response::Session { session, devices, resume } => {
                 self.last_resume = resume;
+                self.binary = self.want_binary;
                 Ok((session, devices))
             }
             other => Err(unexpected(&other)),
         }
+    }
+
+    /// The `wire` field for an `open_session` frame: `Some("binary")`
+    /// when this client was built with [`Client::connect_binary`], else
+    /// absent (the server defaults to JSON).
+    fn wire_field(&self) -> Option<String> {
+        self.want_binary.then(|| "binary".to_string())
     }
 
     /// The crash-recovery token from the last `open_session` — empty if
@@ -283,16 +410,46 @@ impl Client {
         }
     }
 
+    /// Read `count` words of a completed event's buffer. Reads larger
+    /// than the configured chunk size
+    /// ([`Client::set_read_chunk_words`], default
+    /// [`Client::DEFAULT_READ_CHUNK_WORDS`] = the server's
+    /// `max_read_words` default) are **transparently split** into
+    /// sequential in-bounds requests and reassembled — callers never
+    /// trip the server's per-request cap, whatever the buffer size.
     pub fn read_result(
         &mut self,
         event: u64,
         addr: u32,
         count: u32,
     ) -> Result<Vec<i32>, ClientError> {
-        match self.request(&Request::ReadResult { event, addr, count })? {
-            Response::Data { data } => Ok(data),
-            other => Err(unexpected(&other)),
+        let chunk = self.read_chunk_words;
+        if count <= chunk {
+            return match self.request(&Request::ReadResult { event, addr, count })? {
+                Response::Data { data } => Ok(data),
+                other => Err(unexpected(&other)),
+            };
         }
+        let mut data = Vec::with_capacity(count as usize);
+        let mut done: u32 = 0;
+        while done < count {
+            let n = chunk.min(count - done);
+            let req = Request::ReadResult { event, addr: addr + done * 4, count: n };
+            match self.request(&req)? {
+                Response::Data { data: part } => {
+                    if part.len() != n as usize {
+                        return Err(ClientError::Protocol(format!(
+                            "read_result chunk returned {} words, expected {n}",
+                            part.len()
+                        )));
+                    }
+                    data.extend_from_slice(&part);
+                }
+                other => return Err(unexpected(&other)),
+            }
+            done += n;
+        }
+        Ok(data)
     }
 
     pub fn stats(&mut self) -> Result<StatsReport, ClientError> {

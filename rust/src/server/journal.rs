@@ -44,7 +44,10 @@ pub enum Record {
     /// An allocated buffer and the arena address it landed on (replay
     /// asserts the allocator reproduces it).
     Buffer { len: u32, addr: u32 },
-    /// A host write into a buffer.
+    /// A host write into a buffer. Encoded as a JSON i32 array up to
+    /// [`WRITE_HEX_WORDS`] words; larger writes as one little-endian
+    /// hex blob (`"hex"` key) so journaled bulk transfers don't
+    /// re-inflate to JSON.
     Write { addr: u32, data: Vec<i32> },
     /// An admitted launch, by its session-scoped wire event id.
     Enqueue {
@@ -79,6 +82,14 @@ impl std::fmt::Debug for Record {
         f.write_str(&self.to_json().render())
     }
 }
+
+/// Word count above which a [`Record::Write`] encodes its payload as a
+/// little-endian hex blob instead of a JSON i32 array. Hex is 8 chars
+/// per word vs ~11 for a signed decimal plus comma — and, more
+/// important, decode is a fixed-width scan, not digit parsing. Small
+/// writes stay human-readable arrays (the journal doubles as a debug
+/// surface).
+pub const WRITE_HEX_WORDS: usize = 256;
 
 fn backend_str(b: Backend) -> &'static str {
     match b {
@@ -146,10 +157,22 @@ impl Record {
             Record::Write { addr, data } => {
                 o.push("t", Json::from("write"));
                 o.push("addr", Json::from(*addr as u64));
-                o.push(
-                    "data",
-                    Json::Arr(data.iter().map(|&v| Json::Num(v as f64)).collect()),
-                );
+                if data.len() > WRITE_HEX_WORDS {
+                    // large writes (the binary wire path's bread and
+                    // butter) must not re-inflate to ~10 JSON bytes per
+                    // word: encode the words as one little-endian hex
+                    // blob, the same form snapshot pages use
+                    let mut bytes = Vec::with_capacity(data.len() * 4);
+                    for &v in data {
+                        bytes.extend_from_slice(&v.to_le_bytes());
+                    }
+                    o.push("hex", Json::Str(crate::pocl::snapshot::hex_encode(&bytes)));
+                } else {
+                    o.push(
+                        "data",
+                        Json::Arr(data.iter().map(|&v| Json::Num(v as f64)).collect()),
+                    );
+                }
             }
             Record::Enqueue { event, kernel, total, args, device, backend, wait } => {
                 o.push("t", Json::from("enqueue"));
@@ -211,6 +234,21 @@ impl Record {
                 addr: get_u64(j, "addr")? as u32,
             }),
             "write" => {
+                let addr = get_u64(j, "addr")? as u32;
+                // two encodings: small writes as a JSON i32 array, large
+                // ones as a little-endian hex blob (see `to_json`)
+                if let Some(h) = j.get("hex") {
+                    let hex = h.as_str().ok_or("write `hex` must be a string")?;
+                    let bytes = crate::pocl::snapshot::hex_decode(hex)?;
+                    if bytes.len() % 4 != 0 {
+                        return Err("write `hex` must hold whole i32 words".into());
+                    }
+                    let data = bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    return Ok(Record::Write { addr, data });
+                }
                 let mut data = Vec::new();
                 for v in get_arr(j, "data")? {
                     data.push(
@@ -219,7 +257,7 @@ impl Record {
                             .ok_or("write data entries must be i32")?,
                     );
                 }
-                Ok(Record::Write { addr: get_u64(j, "addr")? as u32, data })
+                Ok(Record::Write { addr, data })
             }
             "enqueue" => {
                 let mut args = Vec::new();
@@ -468,6 +506,37 @@ mod tests {
             other => panic!("{other:?}"),
         }
         fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn large_writes_journal_as_hex_and_roundtrip_exactly() {
+        // one word over the threshold: must take the hex form
+        let data: Vec<i32> = (0..=WRITE_HEX_WORDS as i32).map(|i| i * -7 + 3).collect();
+        let rec = Record::Write { addr: 0x9000_0040, data: data.clone() };
+        let line = rec.to_json().render();
+        assert!(line.contains("\"hex\""), "{line}");
+        assert!(!line.contains("\"data\""), "{line}");
+        // hex is ~8 bytes/word; the array form would be ~2× that
+        assert!(line.len() < data.len() * 10, "{} bytes", line.len());
+        match Record::from_json(&Json::parse(&line).unwrap()).unwrap() {
+            Record::Write { addr, data: back } => {
+                assert_eq!(addr, 0x9000_0040);
+                assert_eq!(back, data);
+            }
+            other => panic!("{other:?}"),
+        }
+        // encode(decode(encode)) is byte-stable (form depends only on len)
+        let back = Record::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.to_json().render(), line);
+
+        // at the threshold: still the readable array form
+        let small = Record::Write { addr: 4, data: vec![1; WRITE_HEX_WORDS] };
+        let sline = small.to_json().render();
+        assert!(sline.contains("\"data\""), "{sline}");
+
+        // ragged hex (not whole words) is corruption, not a panic
+        let bad = r#"{"t":"write","addr":4,"hex":"aabbcc"}"#;
+        assert!(Record::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

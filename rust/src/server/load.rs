@@ -30,6 +30,17 @@
 //! as [`BombardReport::clean`] — the smoke proves both that sharing
 //! works and that no tenant's stores leaked into another's pages.
 //!
+//! With [`BombardConfig::large`] the generator becomes a **bulk
+//! transfer** benchmark: each request cycles a [`LARGE_SIZES`] buffer
+//! through a timed `write_buffer`, a deliberately tiny verification
+//! launch, and a timed `read_result` of the whole buffer (echo equality
+//! proves the bytes survived the wire; a scaled prefix proves the
+//! launch saw them). The report adds sustained write/read MiB/s and the
+//! fold of every session's `results_fingerprint` — the number that must
+//! match between a JSON and a binary run of the same workload.
+//! [`BombardConfig::binary`] flips any scenario onto the binary wire
+//! frames ([`crate::server::wire`]).
+//!
 //! The report (sustained req/s + p50/p99 latency) feeds the
 //! `server_throughput` section of `benches/sim_hotpath.rs` and the CI
 //! serve/bombard smoke step.
@@ -42,6 +53,16 @@ use std::time::{Duration, Instant};
 
 /// The factor pool (kernel names are static: they key program caches).
 pub const SCALE_FACTORS: [u32; 4] = [2, 3, 5, 7];
+
+/// Buffer sizes (bytes) the `--large-buffers` scenario cycles through —
+/// 64 KiB up to 4 MiB, the span where wire encoding dominates the cost
+/// of a `write_buffer`/`read_result` round trip.
+pub const LARGE_SIZES: [usize; 4] = [64 << 10, 256 << 10, 1 << 20, 4 << 20];
+
+/// Launch width of the large-buffer scenario's verification kernel: the
+/// launch is deliberately tiny so the measured time is wire transfer,
+/// not simulation.
+const LARGE_PREFIX: u32 = 256;
 
 /// Static kernel name for a factor from [`SCALE_FACTORS`].
 pub fn scale_kernel_name(factor: u32) -> &'static str {
@@ -100,6 +121,16 @@ pub struct BombardConfig {
     /// `clean()` additionally requires zero cross-tenant protection
     /// faults.
     pub fleet: Option<String>,
+    /// Negotiate binary wire framing (`open_session {"wire":"binary"}`)
+    /// instead of line-JSON. Results are bit-identical — only the
+    /// encoding differs, which the report's `results_fingerprint`
+    /// proves across runs.
+    pub binary: bool,
+    /// Large-buffer throughput scenario: cycle [`LARGE_SIZES`] buffers
+    /// through timed `write_buffer`/`read_result` round trips (pinned
+    /// placement, tiny verification launch) and report sustained write
+    /// and read MB/s alongside the usual verification counters.
+    pub large: bool,
 }
 
 impl Default for BombardConfig {
@@ -113,6 +144,8 @@ impl Default for BombardConfig {
             shutdown: false,
             stream: false,
             fleet: None,
+            binary: false,
+            large: false,
         }
     }
 }
@@ -144,6 +177,16 @@ pub struct BombardReport {
     pub stats: Option<StatsReport>,
     /// Was this a shared-fleet run? (Tightens [`Self::clean`].)
     pub fleet_mode: bool,
+    /// Sustained `write_buffer` throughput in MiB/s (large scenario
+    /// only: bytes pushed over the summed in-flight write time).
+    pub write_mbps: Option<f64>,
+    /// Sustained `read_result` throughput in MiB/s (large scenario only).
+    pub read_mbps: Option<f64>,
+    /// Every client's session `results_fingerprint` folded in client
+    /// order — two runs replaying the same workload (whatever the wire
+    /// encoding) must report the same value. `None` if any client died
+    /// before sampling its fingerprint.
+    pub results_fingerprint: Option<u64>,
 }
 
 impl BombardReport {
@@ -168,6 +211,33 @@ struct ClientOutcome {
     launches: u64,
     busy_retries: u64,
     errors: Vec<String>,
+    /// Bulk-transfer accounting (large scenario): bytes and summed
+    /// in-flight time of timed `write_buffer` / `read_result` calls.
+    write_bytes: u64,
+    write_time: Duration,
+    read_bytes: u64,
+    read_time: Duration,
+    /// The session's determinism fingerprint sampled after the run.
+    fingerprint: Option<u64>,
+}
+
+impl ClientOutcome {
+    fn empty(requests: usize) -> ClientOutcome {
+        ClientOutcome {
+            latencies: Vec::with_capacity(requests),
+            sent: 0,
+            answered: 0,
+            verified: 0,
+            launches: 0,
+            busy_retries: 0,
+            errors: Vec::new(),
+            write_bytes: 0,
+            write_time: Duration::ZERO,
+            read_bytes: 0,
+            read_time: Duration::ZERO,
+            fingerprint: None,
+        }
+    }
 }
 
 /// One request: enqueue (+ chain), drain, read back, verify. Returns
@@ -227,20 +297,123 @@ fn try_request(
     }
 }
 
-fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
-    let mut out = ClientOutcome {
-        latencies: Vec::with_capacity(cfg.requests),
-        sent: 0,
-        answered: 0,
-        verified: 0,
-        launches: 0,
-        busy_retries: 0,
-        errors: Vec::new(),
-    };
+/// One large-buffer request: timed bulk write, tiny verification
+/// launch, timed bulk read-back of the whole input, scaled-prefix
+/// check. Returns `(verified, launches)`.
+#[allow(clippy::too_many_arguments)]
+fn try_large_request(
+    cl: &mut Client,
+    kernel: &str,
+    words: usize,
+    dev: Option<u32>,
+    bufs: (u32, u32),
+    input: &[i32],
+    factor: u32,
+    out: &mut ClientOutcome,
+) -> Result<(bool, u64), ClientError> {
+    let (inp, outb) = bufs;
+    let chunk = &input[..words];
+    let t0 = Instant::now();
+    cl.write_buffer(inp, chunk)?;
+    out.write_time += t0.elapsed();
+    out.write_bytes += (words * 4) as u64;
+    let e = cl.enqueue(kernel, LARGE_PREFIX, &[inp, outb], dev, Backend::SimX, &[])?;
+    let results = cl.finish()?;
+    if !(results.len() == 1 && results[0].ok) {
+        return Ok((false, 1));
+    }
+    // read the *whole* input buffer back: the server answered from the
+    // same pages the bulk write streamed into, so equality proves the
+    // zero-copy path end to end (and clocks the read direction)
+    let t1 = Instant::now();
+    let echo = cl.read_result(e, inp, words as u32)?;
+    out.read_time += t1.elapsed();
+    out.read_bytes += (words * 4) as u64;
+    if echo.as_slice() != chunk {
+        return Ok((false, 1));
+    }
+    let scaled = cl.read_result(e, outb, LARGE_PREFIX)?;
+    let want: Vec<i32> =
+        chunk[..LARGE_PREFIX as usize].iter().map(|x| x * factor as i32).collect();
+    Ok((scaled == want, 1))
+}
+
+/// The `--large-buffers` client body (session already set up).
+#[allow(clippy::too_many_arguments)]
+fn run_client_large(
+    cfg: &BombardConfig,
+    c: usize,
+    cl: &mut Client,
+    out: &mut ClientOutcome,
+    ndev: usize,
+    bufs: (u32, u32),
+    factor: u32,
+    input: &[i32],
+) {
     let fail = |out: &mut ClientOutcome, msg: String| {
         out.errors.push(format!("client {c}: {msg}"));
     };
-    let mut cl = match Client::connect(&cfg.addr) {
+    let kernel = scale_kernel_name(factor);
+    let mut backoff = SplitMix64::new(cfg.seed ^ 0xB0FF ^ ((c as u64) << 32));
+    for r in 0..cfg.requests {
+        out.sent += 1;
+        let words = LARGE_SIZES[r % LARGE_SIZES.len()] / 4;
+        // pinned placement, exactly like fleet mode: reproducible
+        // results whatever the contention, so fingerprints compare
+        let dev = Some((r % ndev) as u32);
+        let t0 = Instant::now();
+        let mut attempt = 0u32;
+        let verdict = loop {
+            match try_large_request(cl, kernel, words, dev, bufs, input, factor, out) {
+                Err(e) if e.is_busy() && attempt < 16 => {
+                    let exp = attempt.min(6);
+                    let base = 200u64 << exp;
+                    let jitter = backoff.below(base as u32 + 1) as u64;
+                    std::thread::sleep(Duration::from_micros(base + jitter));
+                    attempt += 1;
+                    out.busy_retries += 1;
+                    if let Err(e) = cl.finish() {
+                        break Err(e);
+                    }
+                }
+                other => break other,
+            }
+        };
+        match verdict {
+            Ok((verified, launches)) => {
+                out.answered += 1;
+                out.launches += launches;
+                if verified {
+                    out.verified += 1;
+                } else {
+                    fail(out, format!("request {r}: result mismatch"));
+                }
+                out.latencies.push(t0.elapsed());
+            }
+            Err(e) => {
+                fail(out, format!("request {r}: {e}"));
+                if matches!(e, ClientError::Io(_) | ClientError::Protocol(_)) {
+                    out.sent += (cfg.requests - r - 1) as u64;
+                    return;
+                }
+                out.answered += 1;
+            }
+        }
+    }
+    out.fingerprint = cl.fingerprint().ok().map(|(fp, _)| fp);
+}
+
+fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
+    let mut out = ClientOutcome::empty(cfg.requests);
+    let fail = |out: &mut ClientOutcome, msg: String| {
+        out.errors.push(format!("client {c}: {msg}"));
+    };
+    let connected = if cfg.binary {
+        Client::connect_binary(&cfg.addr)
+    } else {
+        Client::connect(&cfg.addr)
+    };
+    let mut cl = match connected {
         Ok(cl) => cl,
         Err(e) => {
             out.sent = cfg.requests as u64; // all dropped
@@ -248,6 +421,10 @@ fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
             return out;
         }
     };
+    // large mode sizes its two bulk buffers to the biggest cycle entry;
+    // the generic path keeps its three n-word buffers
+    let blen =
+        if cfg.large { LARGE_SIZES[LARGE_SIZES.len() - 1] } else { cfg.n * 4 };
     let setup = (|| -> Result<(usize, u32, u32, u32), ClientError> {
         let (_, devices) = match &cfg.fleet {
             Some(name) => cl.open_session_fleet(name)?,
@@ -255,9 +432,10 @@ fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
         };
         let factor = SCALE_FACTORS[c % SCALE_FACTORS.len()];
         cl.stage_kernel(scale_kernel_name(factor), &scale_kernel_body(factor))?;
-        let inp = cl.create_buffer((cfg.n * 4) as u32)?;
-        let outb = cl.create_buffer((cfg.n * 4) as u32)?;
-        let out2 = cl.create_buffer((cfg.n * 4) as u32)?;
+        let inp = cl.create_buffer(blen as u32)?;
+        let outb = cl.create_buffer(blen as u32)?;
+        let out2 =
+            if cfg.large { 0 } else { cl.create_buffer(blen as u32)? };
         Ok((devices.len(), inp, outb, out2))
     })();
     let (ndev, inp, outb, out2) = match setup {
@@ -270,6 +448,12 @@ fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
     };
     let factor = SCALE_FACTORS[c % SCALE_FACTORS.len()];
     let mut rng = SplitMix64::new(cfg.seed ^ (0x1000 + c as u64));
+    if cfg.large {
+        let input: Vec<i32> =
+            (0..blen / 4).map(|_| rng.range_i32(-100, 100)).collect();
+        run_client_large(cfg, c, &mut cl, &mut out, ndev, (inp, outb), factor, &input);
+        return out;
+    }
     let input: Vec<i32> = (0..cfg.n).map(|_| rng.range_i32(-100, 100)).collect();
     if let Err(e) = cl.write_buffer(inp, &input) {
         out.sent = cfg.requests as u64;
@@ -363,6 +547,7 @@ fn run_client(cfg: &BombardConfig, c: usize) -> ClientOutcome {
             }
         }
     }
+    out.fingerprint = cl.fingerprint().ok().map(|(fp, _)| fp);
     out
 }
 
@@ -385,14 +570,11 @@ pub fn run_bombard(cfg: &BombardConfig) -> BombardReport {
         handles
             .into_iter()
             .map(|h| {
-                h.join().unwrap_or_else(|_| ClientOutcome {
-                    latencies: Vec::new(),
-                    sent: cfg.requests as u64,
-                    answered: 0,
-                    verified: 0,
-                    launches: 0,
-                    busy_retries: 0,
-                    errors: vec!["client thread panicked".into()],
+                h.join().unwrap_or_else(|_| {
+                    let mut o = ClientOutcome::empty(0);
+                    o.sent = cfg.requests as u64;
+                    o.errors.push("client thread panicked".into());
+                    o
                 })
             })
             .collect()
@@ -414,7 +596,18 @@ pub fn run_bombard(cfg: &BombardConfig) -> BombardReport {
         errors: Vec::new(),
         stats: None,
         fleet_mode: cfg.fleet.is_some(),
+        write_mbps: None,
+        read_mbps: None,
+        results_fingerprint: None,
     };
+    let mut write_bytes = 0u64;
+    let mut write_time = Duration::ZERO;
+    let mut read_bytes = 0u64;
+    let mut read_time = Duration::ZERO;
+    // FNV-1a-style fold of the per-client session fingerprints, in
+    // client order: any client that died before sampling poisons the
+    // whole value to None (a partial fold would compare equal by luck)
+    let mut fold: Option<u64> = Some(0xcbf2_9ce4_8422_2325);
     for o in outcomes {
         report.requests_sent += o.sent;
         report.answered += o.answered;
@@ -423,6 +616,25 @@ pub fn run_bombard(cfg: &BombardConfig) -> BombardReport {
         report.busy_retries += o.busy_retries;
         report.errors.extend(o.errors);
         latencies.extend(o.latencies);
+        write_bytes += o.write_bytes;
+        write_time += o.write_time;
+        read_bytes += o.read_bytes;
+        read_time += o.read_time;
+        fold = match (fold, o.fingerprint) {
+            (Some(h), Some(fp)) => {
+                Some((h ^ fp).wrapping_mul(0x0000_0100_0000_01B3))
+            }
+            _ => None,
+        };
+    }
+    report.results_fingerprint = fold;
+    const MIB: f64 = (1 << 20) as f64;
+    if write_bytes > 0 && write_time > Duration::ZERO {
+        report.write_mbps =
+            Some(write_bytes as f64 / MIB / write_time.as_secs_f64());
+    }
+    if read_bytes > 0 && read_time > Duration::ZERO {
+        report.read_mbps = Some(read_bytes as f64 / MIB / read_time.as_secs_f64());
     }
     latencies.sort_unstable();
     report.p50 = percentile(&latencies, 0.50);

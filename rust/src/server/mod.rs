@@ -25,6 +25,11 @@
 //!   control (explicit `busy` backpressure at three gates) and graceful
 //!   drain; simulation work multiplexes over the process-wide persistent
 //!   worker pool.
+//! * [`wire`] — the length-prefixed **binary frame mode** (negotiated
+//!   per connection at `open_session {"wire":"binary"}`): bulk
+//!   `write_buffer`/`read_result` payloads as raw little-endian words
+//!   streamed straight into/out of COW page frames, everything else in
+//!   JSON envelopes. JSON stays the default and the debug surface.
 //! * [`client`] — the blocking client library (CLI, tests and benches
 //!   all reuse it).
 //! * [`metrics`] — service counters, served via the `stats` frame.
@@ -44,6 +49,7 @@ pub mod metrics;
 pub mod protocol;
 pub mod service;
 pub mod session;
+pub mod wire;
 
 pub use client::{Client, ClientError};
 pub use fleet::Fleet;

@@ -24,9 +24,12 @@
 //!
 //! `open_session` may carry a `resume` token (issued by a previous
 //! `session` response) to reattach to a journaled session after a server
-//! restart — see `crate::server::journal`. Determinism fingerprints are
-//! 64-bit values carried as `"0x%016x"` hex **strings** (JSON numbers
-//! are f64: only 53 mantissa bits).
+//! restart — see `crate::server::journal`. It may also carry
+//! `"wire":"binary"` to negotiate the length-prefixed binary frame mode
+//! (`crate::server::wire`) for the rest of the connection; JSON stays
+//! the default and the debug/canonical surface. Determinism fingerprints
+//! are 64-bit values carried as `"0x%016x"` hex **strings** (JSON
+//! numbers are f64: only 53 mantissa bits).
 //!
 //! Encoding is **canonical** (fixed key order, `null` for absent
 //! options), so `decode(encode(f))` is the identity and
@@ -160,8 +163,15 @@ pub enum Request {
     /// shared fleet (`devices` must then be empty — the fleet owns its
     /// device set). `resume:"token"` reattaches to a journaled session
     /// after a server restart (`devices` and `fleet` must be empty — the
-    /// journal records the device set).
-    OpenSession { devices: Vec<(u32, u32)>, fleet: Option<String>, resume: Option<String> },
+    /// journal records the device set). `wire:"binary"` switches the
+    /// connection to length-prefixed binary framing after a successful
+    /// open (`wire:null`/`"json"`: stay on line-delimited JSON).
+    OpenSession {
+        devices: Vec<(u32, u32)>,
+        fleet: Option<String>,
+        resume: Option<String>,
+        wire: Option<String>,
+    },
     /// Register kernel source under `name` in this session's namespace.
     StageKernel { name: String, body: String },
     /// Allocate `len` bytes of device memory on **every** session device
@@ -205,13 +215,22 @@ impl Request {
     /// escape keeps control characters out of the wire — see
     /// `coordinator::report::tests::json_escapes_every_control_character`).
     pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// [`Request::encode`] appended to `out` — hot-path callers hoist one
+    /// line buffer per connection and `clear()` it between frames.
+    pub fn encode_into(&self, out: &mut String) {
         let mut j = Json::obj();
         match self {
-            Request::OpenSession { devices, fleet, resume } => {
+            Request::OpenSession { devices, fleet, resume, wire } => {
                 j.push("op", "open_session".into());
                 j.push("devices", devices_json(devices));
                 j.push("fleet", fleet.as_deref().map_or(Json::Null, |f| f.into()));
                 j.push("resume", resume.as_deref().map_or(Json::Null, |r| r.into()));
+                j.push("wire", wire.as_deref().map_or(Json::Null, |w| w.into()));
             }
             Request::StageKernel { name, body } => {
                 j.push("op", "stage_kernel".into());
@@ -259,7 +278,7 @@ impl Request {
                 j.push("op", "shutdown".into());
             }
         }
-        j.render()
+        j.render_into(out);
     }
 
     pub fn decode(line: &str) -> Result<Request, ProtoError> {
@@ -287,7 +306,22 @@ impl Request {
                             .to_string(),
                     ),
                 };
-                Ok(Request::OpenSession { devices: devices_field(&j, "devices")?, fleet, resume })
+                // `wire` tolerates absence too: pre-binary clients never
+                // send it (absence ⇒ line-delimited JSON)
+                let wire = match j.get("wire") {
+                    None | Some(Json::Null) => None,
+                    Some(w) => Some(
+                        w.as_str()
+                            .ok_or_else(|| ProtoError("`wire` must be a string or null".into()))?
+                            .to_string(),
+                    ),
+                };
+                Ok(Request::OpenSession {
+                    devices: devices_field(&j, "devices")?,
+                    fleet,
+                    resume,
+                    wire,
+                })
             }
             "stage_kernel" => Ok(Request::StageKernel {
                 name: str_field(&j, "name")?.to_string(),
@@ -597,6 +631,15 @@ pub enum Response {
 
 impl Response {
     pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// [`Response::encode`] appended to `out` — the shepherd loop reuses
+    /// one response buffer per connection instead of allocating a fresh
+    /// line per frame.
+    pub fn encode_into(&self, out: &mut String) {
         let mut j = Json::obj();
         match self {
             Response::Error { code, message } => {
@@ -644,7 +687,7 @@ impl Response {
                 j.push("stats", stats.to_json());
             }
         }
-        j.render()
+        j.render_into(out);
     }
 
     pub fn decode(line: &str) -> Result<Response, ProtoError> {
@@ -711,10 +754,25 @@ mod tests {
     #[test]
     fn request_roundtrip_every_variant() {
         let frames = vec![
-            Request::OpenSession { devices: vec![(2, 2), (8, 8)], fleet: None, resume: None },
-            Request::OpenSession { devices: vec![], fleet: None, resume: None },
-            Request::OpenSession { devices: vec![], fleet: Some("shared".into()), resume: None },
-            Request::OpenSession { devices: vec![], fleet: None, resume: Some("s17".into()) },
+            Request::OpenSession {
+                devices: vec![(2, 2), (8, 8)],
+                fleet: None,
+                resume: None,
+                wire: None,
+            },
+            Request::OpenSession { devices: vec![], fleet: None, resume: None, wire: None },
+            Request::OpenSession {
+                devices: vec![],
+                fleet: Some("shared".into()),
+                resume: None,
+                wire: Some("binary".into()),
+            },
+            Request::OpenSession {
+                devices: vec![],
+                fleet: None,
+                resume: Some("s17".into()),
+                wire: Some("json".into()),
+            },
             Request::StageKernel {
                 name: "k\"quoted\"".into(),
                 body: "kernel_body:\n\tret # tab\r\n".into(),
@@ -857,10 +915,11 @@ mod tests {
         let legacy = r#"{"op":"open_session","devices":[[2,2]]}"#;
         assert_eq!(
             Request::decode(legacy).unwrap(),
-            Request::OpenSession { devices: vec![(2, 2)], fleet: None, resume: None },
+            Request::OpenSession { devices: vec![(2, 2)], fleet: None, resume: None, wire: None },
         );
         assert!(Request::decode(r#"{"op":"open_session","devices":[],"fleet":3}"#).is_err());
         assert!(Request::decode(r#"{"op":"open_session","devices":[],"resume":9}"#).is_err());
+        assert!(Request::decode(r#"{"op":"open_session","devices":[],"wire":1}"#).is_err());
         // a pre-resilience server's session response has no resume token
         let legacy_resp = r#"{"ok":true,"session":3,"devices":[[2,2]]}"#;
         assert_eq!(

@@ -46,8 +46,9 @@ use crate::server::journal::{self, Journal};
 use crate::server::metrics::Metrics;
 use crate::server::protocol::{ErrorCode, Request, Response};
 use crate::server::session::{Session, SessionLimits};
+use crate::server::wire;
 use std::collections::{HashMap, HashSet};
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -348,11 +349,15 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
-/// Write one response line; `false` ⇒ the connection is dead.
-fn send(writer: &mut TcpStream, resp: &Response) -> bool {
-    let mut s = resp.encode();
-    s.push('\n');
-    writer.write_all(s.as_bytes()).and_then(|_| writer.flush()).is_ok()
+/// Write one response line into the connection's reused scratch buffer;
+/// `false` ⇒ the connection is dead. The scratch `String` is hoisted to
+/// the shepherd loop so steady-state traffic re-serialises into one
+/// warm allocation instead of a fresh `String` per frame.
+fn send(writer: &mut TcpStream, resp: &Response, scratch: &mut String) -> bool {
+    scratch.clear();
+    resp.encode_into(scratch);
+    scratch.push('\n');
+    writer.write_all(scratch.as_bytes()).and_then(|_| writer.flush()).is_ok()
 }
 
 /// Outcome of one bounded read step (see [`read_step`]).
@@ -431,7 +436,11 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
     };
     let mut reader = BufReader::new(stream);
     let mut slot = SessionSlot { session: None, shared: Arc::clone(&shared) };
+    // per-connection reused I/O scratch: the line accumulator and the
+    // response serialisation buffer live for the whole connection, so a
+    // busy tenant's steady state allocates nothing per frame
     let mut buf: Vec<u8> = Vec::new();
+    let mut out = String::new();
     // an oversized line is being discarded up to its newline
     let mut discarding = false;
     loop {
@@ -460,7 +469,7 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                             shared.cfg.max_line
                         ),
                     };
-                    if !send(&mut writer, &resp) {
+                    if !send(&mut writer, &resp, &mut out) {
                         return;
                     }
                 }
@@ -480,21 +489,24 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                 return;
             }
             ReadStep::Line | ReadStep::Eof => {
-                let raw = std::mem::take(&mut buf);
-                if raw.is_empty() && last {
+                if buf.is_empty() && last {
                     return; // clean EOF (Session's Drop releases state)
                 }
                 // frames are JSON: they must be UTF-8, but a bad frame
-                // is *answered*, not a reason to kill the connection
-                let resp = match String::from_utf8(raw) {
+                // is *answered*, not a reason to kill the connection.
+                // Borrow (don't take) the accumulator — it is cleared
+                // after dispatch and reused for the next line.
+                let resp = match std::str::from_utf8(&buf) {
                     Ok(text) if text.trim().is_empty() => {
+                        buf.clear();
                         if last {
                             return;
                         }
                         continue;
                     }
                     Ok(text) => {
-                        let (resp, close) = handle_line(text.trim(), &mut slot, &shared);
+                        let (resp, close, go_binary) =
+                            handle_line(text.trim(), &mut slot, &shared);
                         match &resp {
                             Response::Error { code: ErrorCode::Busy, .. } => {
                                 shared
@@ -509,9 +521,17 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                                     .fetch_add(1, Ordering::SeqCst);
                             }
                         }
-                        if !send(&mut writer, &resp) || close || last {
+                        if !send(&mut writer, &resp, &mut out) || close || last {
                             return;
                         }
+                        if go_binary {
+                            // the open ack above was the connection's
+                            // last JSON line; everything after is
+                            // length-prefixed binary frames
+                            serve_conn_binary(reader, writer, slot, shared);
+                            return;
+                        }
+                        buf.clear();
                         continue;
                     }
                     Err(_) => Response::Error {
@@ -519,10 +539,293 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                         message: "frame is not valid UTF-8".into(),
                     },
                 };
-                if !send(&mut writer, &resp) || last {
+                buf.clear();
+                if !send(&mut writer, &resp, &mut out) || last {
                     return;
                 }
             }
+        }
+    }
+}
+
+/// Write one binary response frame (reusing `scratch`); `false` ⇒ the
+/// connection is dead.
+fn send_frame(writer: &mut TcpStream, resp: &Response, scratch: &mut Vec<u8>) -> bool {
+    wire::encode_response_into(resp, scratch);
+    writer.write_all(scratch).and_then(|_| writer.flush()).is_ok()
+}
+
+/// Read exactly `HEADER_LEN` header bytes, tolerating idle ticks between
+/// frames (read-timeout liveness) but not mid-header: once the first
+/// byte of a header has landed the peer is mid-frame and gets the same
+/// stall budget as a payload read. Returns `Ok(None)` on clean EOF at a
+/// frame boundary.
+fn read_frame_header(
+    reader: &mut BufReader<TcpStream>,
+    hdr: &mut [u8; wire::HEADER_LEN],
+) -> std::io::Result<Option<()>> {
+    let mut have = 0usize;
+    let mut stalls = 0u32;
+    while have < wire::HEADER_LEN {
+        match reader.read(&mut hdr[have..]) {
+            Ok(0) => {
+                if have == 0 {
+                    return Ok(None); // clean EOF between frames
+                }
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "peer closed mid-header",
+                ));
+            }
+            Ok(n) => {
+                have += n;
+                stalls = 0;
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if have == 0 {
+                    // idle tick between frames: keep waiting (drain does
+                    // not force-close, exactly like the JSON loop)
+                    continue;
+                }
+                stalls += 1;
+                if stalls > wire::STALL_TICKS {
+                    return Err(e);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(()))
+}
+
+/// Binary-mode shepherd loop (after a successful
+/// `open_session {"wire":"binary"}` negotiation).
+///
+/// Robustness mirrors the JSON loop: a malformed frame — bad magic,
+/// unknown op, impossible payload shape, oversized length — is
+/// *answered* with one binary error frame and the connection survives.
+/// Desync recovery scans forward to the next magic byte; the declared
+/// payload of a recognisable-but-bad frame is drained (bounded by the
+/// declared length) so the stream stays framed.
+fn serve_conn_binary(
+    mut reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+    mut slot: SessionSlot,
+    shared: Arc<Shared>,
+) {
+    let mut hdr = [0u8; wire::HEADER_LEN];
+    // reused per-connection scratch: payload accumulator + outgoing frame
+    let mut payload: Vec<u8> = Vec::new();
+    let mut out: Vec<u8> = Vec::new();
+    // a desync was detected and junk is being skipped to the next magic
+    let mut resyncing = false;
+    loop {
+        match read_frame_header(&mut reader, &mut hdr) {
+            Ok(Some(())) => {}
+            Ok(None) => return, // clean EOF (Session's Drop releases state)
+            Err(_) => return,
+        }
+        if hdr[0] != wire::WIRE_MAGIC {
+            // desynchronised: skip forward byte-by-byte to the next
+            // magic, answering one error frame per junk run
+            if !resyncing {
+                let resp = Response::Error {
+                    code: ErrorCode::BadRequest,
+                    message: format!(
+                        "bad frame magic {:#04x} (expected {:#04x}); resynchronising",
+                        hdr[0],
+                        wire::WIRE_MAGIC
+                    ),
+                };
+                if !send_frame(&mut writer, &resp, &mut out) {
+                    return;
+                }
+                resyncing = true;
+            }
+            match hdr.iter().position(|&b| b == wire::WIRE_MAGIC) {
+                Some(pos) => {
+                    // refill the header from the magic onward
+                    hdr.copy_within(pos.., 0);
+                    let have = wire::HEADER_LEN - pos;
+                    let mut stalling = wire::Stalling::new(&mut reader);
+                    if stalling.read_exact(&mut hdr[have..]).is_err() {
+                        return;
+                    }
+                }
+                None => continue, // all six bytes were junk; keep scanning
+            }
+        }
+        let (op, len) = match wire::parse_header(&hdr) {
+            Ok(v) => v,
+            Err(e) => {
+                // recognisable magic, unknown op: the length field is
+                // still trustworthy enough to drain, keeping framing
+                let resp = Response::Error {
+                    code: ErrorCode::BadRequest,
+                    message: e.to_string(),
+                };
+                let len = u32::from_le_bytes([hdr[2], hdr[3], hdr[4], hdr[5]]) as usize;
+                if len <= wire::MAX_BINARY_PAYLOAD {
+                    let mut stalling = wire::Stalling::new(&mut reader);
+                    if wire::discard_exact(&mut stalling, len).is_err() {
+                        return;
+                    }
+                } else {
+                    resyncing = true;
+                }
+                if !send_frame(&mut writer, &resp, &mut out) {
+                    return;
+                }
+                continue;
+            }
+        };
+        resyncing = false;
+        // per-op payload cap: JSON envelopes obey the line cap, bulk
+        // binary ops the (larger) binary cap
+        let cap = match op {
+            wire::Op::Json => shared.cfg.max_line,
+            _ => wire::MAX_BINARY_PAYLOAD,
+        };
+        if len > cap {
+            // cannot buffer it, but can stay framed by draining the
+            // declared payload (bounded: the declared length itself)
+            let resp = Response::Error {
+                code: ErrorCode::BadRequest,
+                message: format!("frame payload {len} bytes exceeds cap ({cap} bytes)"),
+            };
+            if len <= wire::MAX_BINARY_PAYLOAD {
+                let mut stalling = wire::Stalling::new(&mut reader);
+                if wire::discard_exact(&mut stalling, len).is_err() {
+                    return;
+                }
+            } else {
+                resyncing = true;
+            }
+            if !send_frame(&mut writer, &resp, &mut out) {
+                return;
+            }
+            continue;
+        }
+        let draining = shared.shutdown.load(Ordering::SeqCst);
+        let (resp, close) = match op {
+            wire::Op::WriteBuffer => {
+                // the tentpole zero-copy path: payload words stream
+                // straight into COW page frames, never through an
+                // intermediate Vec<i32>
+                if len < 4 || (len - 4) % 4 != 0 {
+                    let mut stalling = wire::Stalling::new(&mut reader);
+                    if wire::discard_exact(&mut stalling, len).is_err() {
+                        return;
+                    }
+                    (
+                        Response::Error {
+                            code: ErrorCode::BadRequest,
+                            message: format!(
+                                "write_buffer frame payload must be 4 + 4·words \
+                                 bytes, got {len}"
+                            ),
+                        },
+                        false,
+                    )
+                } else {
+                    let mut addr4 = [0u8; 4];
+                    let mut stalling = wire::Stalling::new(&mut reader);
+                    if stalling.read_exact(&mut addr4).is_err() {
+                        return;
+                    }
+                    let addr = u32::from_le_bytes(addr4);
+                    let words = (len - 4) / 4;
+                    if draining {
+                        if wire::discard_exact(&mut stalling, len - 4).is_err() {
+                            return;
+                        }
+                        (
+                            Response::Error {
+                                code: ErrorCode::ShuttingDown,
+                                message: "service is draining; no new work".into(),
+                            },
+                            false,
+                        )
+                    } else {
+                        match slot.session.as_mut() {
+                            Some(s) => {
+                                match s.write_buffer_stream(addr, words, &mut stalling) {
+                                    Ok(resp) => (resp, false),
+                                    // stream died mid-payload: the frame
+                                    // boundary is lost, drop the peer
+                                    Err(_) => return,
+                                }
+                            }
+                            None => {
+                                if wire::discard_exact(&mut stalling, len - 4).is_err() {
+                                    return;
+                                }
+                                (
+                                    Response::Error {
+                                        code: ErrorCode::BadRequest,
+                                        message: "open_session first".into(),
+                                    },
+                                    false,
+                                )
+                            }
+                        }
+                    }
+                }
+            }
+            wire::Op::Json => {
+                payload.clear();
+                payload.resize(len, 0);
+                let mut stalling = wire::Stalling::new(&mut reader);
+                if stalling.read_exact(&mut payload).is_err() {
+                    return;
+                }
+                match std::str::from_utf8(&payload) {
+                    Ok(text) if text.trim().is_empty() => continue,
+                    Ok(text) => {
+                        let (resp, close, _renegotiate) =
+                            handle_line(text.trim(), &mut slot, &shared);
+                        // re-negotiation inside binary mode is a no-op:
+                        // the connection is already binary
+                        (resp, close)
+                    }
+                    Err(_) => (
+                        Response::Error {
+                            code: ErrorCode::BadRequest,
+                            message: "json frame payload is not valid UTF-8".into(),
+                        },
+                        false,
+                    ),
+                }
+            }
+            // response-direction ops arriving as requests
+            wire::Op::Data | wire::Op::SnapshotPages => {
+                let mut stalling = wire::Stalling::new(&mut reader);
+                if wire::discard_exact(&mut stalling, len).is_err() {
+                    return;
+                }
+                (
+                    Response::Error {
+                        code: ErrorCode::BadRequest,
+                        message: format!(
+                            "op {:#04x} is response-direction only",
+                            op.tag()
+                        ),
+                    },
+                    false,
+                )
+            }
+        };
+        match &resp {
+            Response::Error { code: ErrorCode::Busy, .. } => {
+                shared.metrics.requests_rejected.fetch_add(1, Ordering::SeqCst);
+            }
+            _ => {
+                shared.metrics.requests_accepted.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        if !send_frame(&mut writer, &resp, &mut out) || close {
+            return;
         }
     }
 }
@@ -555,15 +858,23 @@ fn resume_session(token: &str, shared: &Shared) -> Result<Session, String> {
     }
 }
 
-/// Decode + dispatch one frame. Returns the response and whether the
-/// connection should close afterwards (only after acking `shutdown`).
-fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response, bool) {
+/// Decode + dispatch one frame. Returns the response, whether the
+/// connection should close afterwards (only after acking `shutdown`),
+/// and whether the connection should switch to binary framing (only
+/// after a successful `open_session {"wire":"binary"}` — the ack itself
+/// is still the last JSON line).
+fn handle_line(
+    text: &str,
+    slot: &mut SessionSlot,
+    shared: &Shared,
+) -> (Response, bool, bool) {
     let req = match Request::decode(text) {
         Ok(r) => r,
         Err(e) => {
             // malformed frame: answer and keep the connection
             return (
                 Response::Error { code: ErrorCode::BadRequest, message: e.to_string() },
+                false,
                 false,
             );
         }
@@ -574,11 +885,11 @@ fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response
             let mut stats = shared.metrics.snapshot();
             stats.fleets = shared.fleets.values().map(|f| f.stat()).collect();
             stats.fleets.sort_by(|a, b| a.name.cmp(&b.name));
-            (Response::Stats { stats }, false)
+            (Response::Stats { stats }, false, false)
         }
         Request::Shutdown => {
             shared.begin_shutdown();
-            (Response::Ack, true)
+            (Response::Ack, true, false)
         }
         // deliberate failure injection so the robustness suite can prove
         // a shepherd panic is contained (debug/test builds only)
@@ -586,13 +897,30 @@ fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response
         Request::StageKernel { ref name, .. } if name == "__vortex_panic__" => {
             panic!("deliberate shepherd panic (test hook)");
         }
-        Request::OpenSession { devices, fleet, resume } => {
+        Request::OpenSession { devices, fleet, resume, wire } => {
+            // the wire mode is validated before any open path runs: an
+            // unknown mode must not leave a half-open session behind
+            let mode = match wire::WireMode::parse(wire.as_deref()) {
+                Ok(m) => m,
+                Err(e) => {
+                    return (
+                        Response::Error {
+                            code: ErrorCode::BadRequest,
+                            message: e.to_string(),
+                        },
+                        false,
+                        false,
+                    );
+                }
+            };
+            let go_binary = mode == wire::WireMode::Binary;
             if draining {
                 return (
                     Response::Error {
                         code: ErrorCode::ShuttingDown,
                         message: "service is draining; no new sessions".into(),
                     },
+                    false,
                     false,
                 );
             }
@@ -602,6 +930,7 @@ fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response
                         code: ErrorCode::BadRequest,
                         message: "session already open on this connection".into(),
                     },
+                    false,
                     false,
                 );
             }
@@ -615,6 +944,7 @@ fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response
                                 .into(),
                         },
                         false,
+                        false,
                     );
                 }
                 return match resume_session(&token, shared) {
@@ -626,11 +956,13 @@ fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response
                         };
                         // resume_session already registered the id
                         slot.session = Some(s);
-                        (resp, false)
+                        (resp, false, go_binary)
                     }
-                    Err(e) => {
-                        (Response::Error { code: ErrorCode::BadRequest, message: e }, false)
-                    }
+                    Err(e) => (
+                        Response::Error { code: ErrorCode::BadRequest, message: e },
+                        false,
+                        false,
+                    ),
                 };
             }
             if let Some(name) = fleet {
@@ -641,6 +973,7 @@ fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response
                             message: "fleet sessions cannot request private devices".into(),
                         },
                         false,
+                        false,
                     );
                 }
                 let Some(f) = shared.fleets.get(&name) else {
@@ -649,6 +982,7 @@ fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response
                             code: ErrorCode::BadRequest,
                             message: format!("unknown fleet `{name}`"),
                         },
+                        false,
                         false,
                     );
                 };
@@ -667,7 +1001,7 @@ fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response
                     resume: String::new(),
                 };
                 slot.install(s);
-                return (resp, false);
+                return (resp, false, go_binary);
             }
             let configs =
                 if devices.is_empty() { shared.cfg.configs.clone() } else { devices };
@@ -693,11 +1027,13 @@ fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response
                         resume: s.resume_token().unwrap_or_default(),
                     };
                     slot.install(s);
-                    (resp, false)
+                    (resp, false, go_binary)
                 }
-                Err(e) => {
-                    (Response::Error { code: ErrorCode::BadRequest, message: e }, false)
-                }
+                Err(e) => (
+                    Response::Error { code: ErrorCode::BadRequest, message: e },
+                    false,
+                    false,
+                ),
             }
         }
         // draining refuses *new work*; finish/wait/read still complete
@@ -713,15 +1049,17 @@ fn handle_line(text: &str, slot: &mut SessionSlot, shared: &Shared) -> (Response
                     message: "service is draining; no new work".into(),
                 },
                 false,
+                false,
             )
         }
         other => match slot.session.as_mut() {
-            Some(s) => (s.handle(other), false),
+            Some(s) => (s.handle(other), false, false),
             None => (
                 Response::Error {
                     code: ErrorCode::BadRequest,
                     message: "open_session first".into(),
                 },
+                false,
                 false,
             ),
         },

@@ -632,6 +632,66 @@ impl Session {
         Response::Ack
     }
 
+    /// Binary-path `write_buffer`: stream `words` i32 words out of `r`
+    /// **directly into the COW page frames** of the target memory
+    /// ([`Memory::write_block_from_reader`]) — no intermediate
+    /// `Vec<i32>` between the socket and the page directory. Semantics
+    /// are identical to [`Session::write_buffer`] (same validation,
+    /// same fan-out, same journal record — words are little-endian on
+    /// the wire and in device memory, so the committed bytes match the
+    /// JSON path bit-for-bit).
+    ///
+    /// `Err` means the transport died mid-payload (the connection is
+    /// unusable); a validation failure drains the declared payload and
+    /// returns the error `Response` with the connection intact.
+    pub fn write_buffer_stream<R: std::io::Read>(
+        &mut self,
+        addr: u32,
+        words: usize,
+        r: &mut R,
+    ) -> std::io::Result<Response> {
+        let len = words * 4;
+        let Some(b) = self.buffer_at(addr) else {
+            crate::server::wire::discard_exact(r, len)?;
+            return Ok(err(ErrorCode::BadRequest, format!("no buffer at {addr:#x}")));
+        };
+        if len > b.len {
+            crate::server::wire::discard_exact(r, len)?;
+            return Ok(err(
+                ErrorCode::BadRequest,
+                format!("{words} words overflow the {}-byte buffer", b.len),
+            ));
+        }
+        match &mut self.exec {
+            Exec::Private { queue, devices } => {
+                // stream into the first device, then fan out with bulk
+                // page copies (private devices march in lockstep, so
+                // every replica must see the same bytes)
+                let (&first, rest) = devices.split_first().expect("session owns a device");
+                queue.device_mut(first).mem.write_block_from_reader(b.addr, len, r)?;
+                if !rest.is_empty() {
+                    let bytes = queue.device_mut(first).mem.read_block(b.addr, len);
+                    for &d in rest {
+                        queue.device_mut(d).mem.write_block(b.addr, &bytes);
+                    }
+                }
+            }
+            Exec::Fleet { root, .. } => root.write_block_from_reader(b.addr, len, r)?,
+        }
+        if self.journal.is_some() {
+            // journaled sessions re-read the committed words once; the
+            // journal encodes large records as hex, not JSON arrays
+            let data = match &self.exec {
+                Exec::Private { queue, devices } => {
+                    queue.device(devices[0]).mem.read_i32_slice(b.addr, words)
+                }
+                Exec::Fleet { root, .. } => root.read_i32_slice(b.addr, words),
+            };
+            self.journal_append(&Record::Write { addr, data });
+        }
+        Ok(Response::Ack)
+    }
+
     fn enqueue(
         &mut self,
         kernel: &str,

@@ -1,0 +1,587 @@
+//! Length-prefixed **binary frame mode** of the device service — the
+//! fast path negotiated per connection with `open_session
+//! {"wire":"binary"}` (see `docs/wire-protocol.md`; line-delimited JSON
+//! stays the default and the debug/canonical surface).
+//!
+//! ## Framing
+//!
+//! Every frame, in both directions, is a 6-byte header followed by the
+//! payload:
+//!
+//! ```text
+//! [ magic: u8 = 0xA5 ][ op: u8 ][ len: u32 LE ][ payload: len bytes ]
+//! ```
+//!
+//! | op | tag | payload |
+//! |----|-----|---------|
+//! | [`Op::Json`]          | `0x00` | one canonical JSON request/response, UTF-8, no trailing newline |
+//! | [`Op::WriteBuffer`]   | `0x01` | `addr: u32 LE` + the data words, `i32` LE (`len = 4 + 4·words`) |
+//! | [`Op::Data`]          | `0x02` | `read_result` answer: the words, `i32` LE |
+//! | [`Op::SnapshotPages`] | `0x03` | repeated `base: u32 LE` + one 4096-byte page (ascending bases) |
+//!
+//! Only the ops that move bulk data get binary payloads; every other
+//! request/response rides its unchanged canonical JSON encoding inside
+//! an [`Op::Json`] envelope, so the two modes share one semantic
+//! surface and the JSON↔binary determinism property
+//! (`results_fingerprint` equality, pinned in
+//! `rust/tests/server_service.rs`) is structural: the scheduler never
+//! sees which transport delivered a request.
+//!
+//! [`Op::SnapshotPages`] is the page-image encoding reserved for
+//! cross-node `DeviceSnapshot` hand-off (ROADMAP item 1 — pages must
+//! never ship as JSON hex between nodes); the codec and its
+//! fingerprint-preserving roundtrip are implemented and tested here,
+//! and no client-originated `SnapshotPages` frame is accepted yet.
+//!
+//! Versioning follows the snapshot policy
+//! (`docs/snapshot-versioning-policy.md`): the magic byte is the
+//! version stamp. A semantic change to the framing or an op's payload
+//! layout bumps the magic; adding a new op tag does not (old servers
+//! answer unknown tags with `bad_request` and keep the connection, the
+//! same tolerance JSON mode extends to unknown keys).
+
+use crate::mem::{Memory, PAGE_SIZE};
+use crate::server::protocol::{ProtoError, Request, Response};
+
+/// First byte of every binary frame — doubles as the framing version
+/// stamp (see the module docs for the bump rule).
+pub const WIRE_MAGIC: u8 = 0xA5;
+
+/// Fixed header size: magic + op tag + `u32` payload length.
+pub const HEADER_LEN: usize = 6;
+
+/// Hard cap on a binary-payload frame ([`Op::WriteBuffer`] /
+/// [`Op::Data`] / [`Op::SnapshotPages`]). Independent of the JSON-mode
+/// `max_line` (which still caps [`Op::Json`] envelopes on the server):
+/// bulk data is the point of this mode, and the session-level
+/// `max_buffer_len` (16 MiB) already bounds what a well-formed frame
+/// can usefully carry.
+pub const MAX_BINARY_PAYLOAD: usize = 64 << 20;
+
+/// Consecutive read-timeout ticks tolerated **mid-frame** before the
+/// peer is declared dead (the server reads with a 500 ms timeout, so
+/// this is a ~2 min stall budget). Between frames, silence is idle, not
+/// a stall — the shepherd keeps its drain/liveness tick.
+pub const STALL_TICKS: u32 = 240;
+
+/// Binary frame op tags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// JSON envelope: any request/response without a bulk payload.
+    Json = 0x00,
+    /// `write_buffer` request: `addr` + words, straight into COW pages.
+    WriteBuffer = 0x01,
+    /// `read_result` response: the words, one bulk write.
+    Data = 0x02,
+    /// Snapshot page images (reserved on the socket; see module docs).
+    SnapshotPages = 0x03,
+}
+
+impl Op {
+    pub fn tag(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_tag(t: u8) -> Option<Op> {
+        match t {
+            0x00 => Some(Op::Json),
+            0x01 => Some(Op::WriteBuffer),
+            0x02 => Some(Op::Data),
+            0x03 => Some(Op::SnapshotPages),
+            _ => None,
+        }
+    }
+}
+
+/// Framing-layer failure (the payload codecs report [`ProtoError`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// First header byte is not [`WIRE_MAGIC`] — desynchronized stream
+    /// or a JSON client talking to a binary connection.
+    BadMagic(u8),
+    /// Unknown op tag (the declared length is still trustworthy, so the
+    /// server drains the payload and answers instead of dropping the
+    /// connection).
+    BadOp(u8),
+    /// Declared payload length exceeds the applicable cap.
+    Oversized { len: usize, cap: usize },
+    /// Buffer ends before the declared frame does (in-memory decode
+    /// only — socket paths block for the remainder instead).
+    Truncated { have: usize, need: usize },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(b) => {
+                write!(f, "bad frame magic 0x{b:02x} (expected 0x{WIRE_MAGIC:02x})")
+            }
+            WireError::BadOp(t) => write!(f, "unknown binary op tag 0x{t:02x}"),
+            WireError::Oversized { len, cap } => {
+                write!(f, "frame payload of {len} bytes exceeds the {cap}-byte cap")
+            }
+            WireError::Truncated { have, need } => {
+                write!(f, "truncated frame: have {have} bytes of {need}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Render the 6-byte header for a frame of `len` payload bytes.
+pub fn header(op: Op, len: u32) -> [u8; HEADER_LEN] {
+    let l = len.to_le_bytes();
+    [WIRE_MAGIC, op.tag(), l[0], l[1], l[2], l[3]]
+}
+
+/// Parse a 6-byte header. [`WireError::Oversized`] is *not* checked
+/// here — the cap depends on the op and the caller's `max_line`.
+pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(Op, usize), WireError> {
+    if h[0] != WIRE_MAGIC {
+        return Err(WireError::BadMagic(h[0]));
+    }
+    let op = Op::from_tag(h[1]).ok_or(WireError::BadOp(h[1]))?;
+    let len = u32::from_le_bytes([h[2], h[3], h[4], h[5]]) as usize;
+    Ok((op, len))
+}
+
+/// One complete frame, decoded in memory — the unit the differential
+/// property suite round-trips; socket paths stream instead of
+/// materializing a `Frame` for bulk ops.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub op: Op,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Header + payload as one byte string.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        out.extend_from_slice(&header(self.op, self.payload.len() as u32));
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Decode one frame from the front of `bytes`; returns the frame
+    /// and how many bytes it consumed.
+    pub fn decode(bytes: &[u8]) -> Result<(Frame, usize), WireError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(WireError::Truncated { have: bytes.len(), need: HEADER_LEN });
+        }
+        let mut h = [0u8; HEADER_LEN];
+        h.copy_from_slice(&bytes[..HEADER_LEN]);
+        let (op, len) = parse_header(&h)?;
+        if len > MAX_BINARY_PAYLOAD {
+            return Err(WireError::Oversized { len, cap: MAX_BINARY_PAYLOAD });
+        }
+        let need = HEADER_LEN + len;
+        if bytes.len() < need {
+            return Err(WireError::Truncated { have: bytes.len(), need });
+        }
+        Ok((Frame { op, payload: bytes[HEADER_LEN..need].to_vec() }, need))
+    }
+}
+
+// ------------------------------------------------------------ word codecs
+
+/// Append `words` as little-endian `i32` bytes.
+pub fn words_to_bytes(words: &[i32], out: &mut Vec<u8>) {
+    out.reserve(words.len() * 4);
+    for &w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// Inverse of [`words_to_bytes`] over a whole payload.
+pub fn bytes_to_words(payload: &[u8]) -> Result<Vec<i32>, ProtoError> {
+    if payload.len() % 4 != 0 {
+        return Err(ProtoError(format!(
+            "binary word payload of {} bytes is not a whole number of words",
+            payload.len()
+        )));
+    }
+    Ok(payload
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+// ------------------------------------------------------- request / response
+
+/// Encode a request as one complete binary frame into `out` (cleared
+/// first — callers hoist one buffer per connection). `write_buffer`
+/// gets the bulk [`Op::WriteBuffer`] layout; everything else rides its
+/// canonical JSON inside an [`Op::Json`] envelope.
+pub fn encode_request_into(req: &Request, out: &mut Vec<u8>) {
+    out.clear();
+    match req {
+        Request::WriteBuffer { addr, data } => {
+            out.extend_from_slice(&header(Op::WriteBuffer, (4 + data.len() * 4) as u32));
+            out.extend_from_slice(&addr.to_le_bytes());
+            words_to_bytes(data, out);
+        }
+        other => {
+            let text = other.encode();
+            out.extend_from_slice(&header(Op::Json, text.len() as u32));
+            out.extend_from_slice(text.as_bytes());
+        }
+    }
+}
+
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_request_into(req, &mut out);
+    out
+}
+
+/// Decode a request from a frame's op + payload. Inverse of
+/// [`encode_request_into`]; the differential suite pins
+/// `encode(decode(encode(f))) == encode(f)`.
+pub fn decode_request(op: Op, payload: &[u8]) -> Result<Request, ProtoError> {
+    match op {
+        Op::Json => {
+            let text = std::str::from_utf8(payload)
+                .map_err(|_| ProtoError("json envelope is not valid UTF-8".into()))?;
+            Request::decode(text.trim())
+        }
+        Op::WriteBuffer => {
+            if payload.len() < 4 || (payload.len() - 4) % 4 != 0 {
+                return Err(ProtoError(format!(
+                    "write_buffer frame must be a u32 addr plus whole words, got {} bytes",
+                    payload.len()
+                )));
+            }
+            let addr = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]);
+            Ok(Request::WriteBuffer { addr, data: bytes_to_words(&payload[4..])? })
+        }
+        Op::Data | Op::SnapshotPages => Err(ProtoError(format!(
+            "unexpected {op:?} frame where a request was required"
+        ))),
+    }
+}
+
+/// Encode a response as one complete binary frame into `out` (cleared
+/// first). `read_result` data gets the bulk [`Op::Data`] layout — one
+/// `write_all` of raw LE words instead of ~10 formatted bytes per word.
+pub fn encode_response_into(resp: &Response, out: &mut Vec<u8>) {
+    out.clear();
+    match resp {
+        Response::Data { data } => {
+            out.extend_from_slice(&header(Op::Data, (data.len() * 4) as u32));
+            words_to_bytes(data, out);
+        }
+        other => {
+            let text = other.encode();
+            out.extend_from_slice(&header(Op::Json, text.len() as u32));
+            out.extend_from_slice(text.as_bytes());
+        }
+    }
+}
+
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_response_into(resp, &mut out);
+    out
+}
+
+/// Decode a response from a frame's op + payload.
+pub fn decode_response(op: Op, payload: &[u8]) -> Result<Response, ProtoError> {
+    match op {
+        Op::Json => {
+            let text = std::str::from_utf8(payload)
+                .map_err(|_| ProtoError("json envelope is not valid UTF-8".into()))?;
+            Response::decode(text.trim())
+        }
+        Op::Data => Ok(Response::Data { data: bytes_to_words(payload)? }),
+        Op::WriteBuffer | Op::SnapshotPages => Err(ProtoError(format!(
+            "unexpected {op:?} frame where a response was required"
+        ))),
+    }
+}
+
+// ---------------------------------------------------------- stall handling
+
+/// Read adapter that retries `WouldBlock`/`TimedOut` (the server's
+/// 500 ms liveness tick firing mid-frame) up to [`STALL_TICKS`]
+/// consecutive silent ticks, then surfaces the timeout: a peer that
+/// stops sending mid-frame is dead, not idle. Any successful read
+/// resets the stall count.
+pub struct Stalling<R: std::io::Read> {
+    inner: R,
+}
+
+impl<R: std::io::Read> Stalling<R> {
+    /// Wrap a reader (call sites pass `&mut r` — `Read` is implemented
+    /// for mutable references, so the underlying reader stays usable).
+    pub fn new(inner: R) -> Self {
+        Stalling { inner }
+    }
+}
+
+impl<R: std::io::Read> std::io::Read for Stalling<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let mut stalls = 0u32;
+        loop {
+            match self.inner.read(buf) {
+                Err(e) if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+                {
+                    stalls += 1;
+                    if stalls >= STALL_TICKS {
+                        return Err(e);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                other => return other,
+            }
+        }
+    }
+}
+
+/// Read and drop exactly `len` bytes — how the server drains the
+/// declared payload of a frame it rejects (unknown op, validation
+/// failure) so the connection stays framed instead of dying.
+pub fn discard_exact<R: std::io::Read>(r: &mut R, mut len: usize) -> std::io::Result<()> {
+    let mut sink = [0u8; 8192];
+    while len > 0 {
+        let n = sink.len().min(len);
+        r.read_exact(&mut sink[..n])?;
+        len -= n;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------- snapshot pages
+
+/// Encode a memory's resident pages as an [`Op::SnapshotPages`] payload:
+/// repeated `base: u32 LE` + the 4096 raw page bytes, ascending bases
+/// (the same walk `content_fingerprint` hashes, so a faithful decode
+/// fingerprints equal by construction).
+pub fn encode_snapshot_pages(mem: &Memory) -> Vec<u8> {
+    let mut out = Vec::new();
+    mem.for_each_resident_page(|base, bytes| {
+        out.extend_from_slice(&base.to_le_bytes());
+        out.extend_from_slice(bytes);
+    });
+    out
+}
+
+/// Decode an [`Op::SnapshotPages`] payload back to `(base, page)` pairs
+/// fit for [`Memory::restore_pages`].
+pub fn decode_snapshot_pages(payload: &[u8]) -> Result<Vec<(u32, Vec<u8>)>, ProtoError> {
+    let rec = 4 + PAGE_SIZE;
+    if payload.len() % rec != 0 {
+        return Err(ProtoError(format!(
+            "snapshot-pages payload of {} bytes is not a whole number of {}-byte records",
+            payload.len(),
+            rec
+        )));
+    }
+    let mut out = Vec::with_capacity(payload.len() / rec);
+    for chunk in payload.chunks_exact(rec) {
+        let base = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        if base as usize % PAGE_SIZE != 0 {
+            return Err(ProtoError(format!("snapshot page base {base:#x} is not page-aligned")));
+        }
+        out.push((base, chunk[4..].to_vec()));
+    }
+    Ok(out)
+}
+
+/// The negotiated wire mode of a connection, parsed from
+/// `open_session`'s `wire` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireMode {
+    /// Line-delimited JSON (the default and the debug surface).
+    #[default]
+    Json,
+    /// Length-prefixed binary frames after a successful open.
+    Binary,
+}
+
+impl WireMode {
+    /// Parse the `wire` request field; unknown values are an error so a
+    /// typo'd negotiation fails loudly instead of silently staying JSON.
+    pub fn parse(wire: Option<&str>) -> Result<WireMode, ProtoError> {
+        match wire {
+            None | Some("json") => Ok(WireMode::Json),
+            Some("binary") => Ok(WireMode::Binary),
+            Some(other) => {
+                Err(ProtoError(format!("unknown wire mode `{other}` (json|binary)")))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    #[test]
+    fn header_roundtrip_and_rejections() {
+        for (op, len) in [(Op::Json, 0u32), (Op::WriteBuffer, 4), (Op::Data, 1 << 20)] {
+            let h = header(op, len);
+            assert_eq!(parse_header(&h).unwrap(), (op, len as usize));
+        }
+        let mut bad = header(Op::Json, 4);
+        bad[0] = 0x7E;
+        assert_eq!(parse_header(&bad), Err(WireError::BadMagic(0x7E)));
+        let mut unk = header(Op::Json, 4);
+        unk[1] = 0x7F;
+        assert_eq!(parse_header(&unk), Err(WireError::BadOp(0x7F)));
+    }
+
+    #[test]
+    fn frame_truncation_and_oversize_are_clean_errors() {
+        let f = Frame { op: Op::Data, payload: vec![1, 2, 3, 4] };
+        let bytes = f.encode();
+        for cut in 0..bytes.len() {
+            match Frame::decode(&bytes[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => panic!("cut {cut}: {other:?}"),
+            }
+        }
+        let (back, used) = Frame::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, f);
+        let huge = header(Op::Data, (MAX_BINARY_PAYLOAD + 1) as u32);
+        let mut buf = huge.to_vec();
+        buf.resize(HEADER_LEN + 8, 0);
+        assert!(matches!(Frame::decode(&buf), Err(WireError::Oversized { .. })));
+    }
+
+    #[test]
+    fn word_codec_is_exact_at_the_extremes() {
+        let words = vec![i32::MIN, -1, 0, 1, i32::MAX];
+        let mut bytes = Vec::new();
+        words_to_bytes(&words, &mut bytes);
+        assert_eq!(bytes.len(), words.len() * 4);
+        assert_eq!(bytes_to_words(&bytes).unwrap(), words);
+        assert!(bytes_to_words(&bytes[..7]).is_err(), "ragged payloads are rejected");
+    }
+
+    #[test]
+    fn bulk_ops_get_binary_payloads_and_the_rest_ride_json_envelopes() {
+        let wb = Request::WriteBuffer { addr: 0x9000_0040, data: vec![-7, 7] };
+        let bytes = encode_request(&wb);
+        let (frame, used) = Frame::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(frame.op, Op::WriteBuffer);
+        assert_eq!(frame.payload.len(), 4 + 8);
+        assert_eq!(decode_request(frame.op, &frame.payload).unwrap(), wb);
+
+        let st = Request::Stats;
+        let bytes = encode_request(&st);
+        let (frame, _) = Frame::decode(&bytes).unwrap();
+        assert_eq!(frame.op, Op::Json);
+        assert_eq!(decode_request(frame.op, &frame.payload).unwrap(), st);
+
+        let data = Response::Data { data: vec![i32::MIN, 0, i32::MAX] };
+        let bytes = encode_response(&data);
+        let (frame, _) = Frame::decode(&bytes).unwrap();
+        assert_eq!(frame.op, Op::Data);
+        assert_eq!(decode_response(frame.op, &frame.payload).unwrap(), data);
+
+        let ack = Response::Ack;
+        let (frame, _) = Frame::decode(&encode_response(&ack)).unwrap();
+        assert_eq!(frame.op, Op::Json);
+        assert_eq!(decode_response(frame.op, &frame.payload).unwrap(), ack);
+    }
+
+    #[test]
+    fn malformed_write_buffer_payloads_are_rejected() {
+        // too short for an addr
+        assert!(decode_request(Op::WriteBuffer, &[1, 2]).is_err());
+        // addr but ragged words
+        assert!(decode_request(Op::WriteBuffer, &[0, 0, 0, 0, 9, 9]).is_err());
+        // a data/snapshot frame is not a request
+        assert!(decode_request(Op::Data, &[0, 0, 0, 0]).is_err());
+        assert!(decode_request(Op::SnapshotPages, &[]).is_err());
+    }
+
+    #[test]
+    fn snapshot_pages_roundtrip_preserves_the_content_fingerprint() {
+        let mut mem = Memory::new();
+        // touch three non-contiguous pages, including offset writes
+        mem.write_block(0x0000_1000, &[0xAB; 64]);
+        mem.write_block(0x0003_0F00, &(0..=255u8).collect::<Vec<u8>>());
+        mem.write_block(0x9000_0000, &[1, 2, 3, 4]);
+        let payload = encode_snapshot_pages(&mem);
+        let pages = decode_snapshot_pages(&payload).unwrap();
+        assert!(pages.len() >= 3, "{}", pages.len());
+        let back = Memory::restore_pages(pages, None);
+        assert_eq!(back.content_fingerprint(), mem.content_fingerprint());
+        // and the codec is a byte fixed point
+        assert_eq!(encode_snapshot_pages(&back), payload);
+        // ragged / misaligned payloads are clean errors
+        assert!(decode_snapshot_pages(&payload[..PAGE_SIZE]).is_err());
+        let mut crooked = payload.clone();
+        crooked[0] = 0x10; // base 0x1010: not page-aligned
+        assert!(decode_snapshot_pages(&crooked).is_err());
+    }
+
+    /// A reader that times out `stalls` times before each chunk of real
+    /// data — the shape of a socket with a read timeout mid-frame.
+    struct Choppy {
+        data: Vec<u8>,
+        pos: usize,
+        stalls: u32,
+        left: u32,
+    }
+
+    impl Read for Choppy {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.left > 0 {
+                self.left -= 1;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.left = self.stalls;
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            let n = buf.len().min(3).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn stalling_reader_rides_out_timeouts_but_not_forever() {
+        let data: Vec<u8> = (0..64).collect();
+        let mut choppy = Choppy { data: data.clone(), pos: 0, stalls: 5, left: 5 };
+        let mut out = vec![0u8; 64];
+        Stalling::new(&mut choppy).read_exact(&mut out).unwrap();
+        assert_eq!(out, data);
+
+        // a peer that goes permanently silent mid-frame surfaces the
+        // timeout after the stall budget
+        let mut dead = Choppy { data: vec![], pos: 0, stalls: u32::MAX, left: u32::MAX };
+        let mut buf = [0u8; 4];
+        let err = Stalling::new(&mut dead).read(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+    }
+
+    #[test]
+    fn discard_exact_drains_declared_payloads() {
+        let payload: Vec<u8> = (0..20_000u32).map(|i| i as u8).collect();
+        let mut cur = std::io::Cursor::new(payload);
+        discard_exact(&mut cur, 12_345).unwrap();
+        assert_eq!(cur.position(), 12_345);
+        // draining past EOF is the transport error, not a hang
+        assert!(discard_exact(&mut cur, 100_000).is_err());
+    }
+
+    #[test]
+    fn wire_mode_negotiation_parses_strictly() {
+        assert_eq!(WireMode::parse(None).unwrap(), WireMode::Json);
+        assert_eq!(WireMode::parse(Some("json")).unwrap(), WireMode::Json);
+        assert_eq!(WireMode::parse(Some("binary")).unwrap(), WireMode::Binary);
+        assert!(WireMode::parse(Some("msgpack")).is_err());
+    }
+}

@@ -59,6 +59,11 @@ fn rand_request(rng: &mut SplitMix64) -> Request {
             devices: rand_devices(rng),
             fleet: if rng.below(2) == 0 { None } else { Some(rand_string(rng)) },
             resume: if rng.below(2) == 0 { None } else { Some(rand_string(rng)) },
+            wire: match rng.below(3) {
+                0 => None,
+                1 => Some("json".to_string()),
+                _ => Some("binary".to_string()),
+            },
         },
         1 => Request::StageKernel { name: rand_string(rng), body: rand_string(rng) },
         2 => Request::CreateBuffer { len: rng.next_u32() },
@@ -474,6 +479,8 @@ fn bombard_load_generator_is_clean_against_a_two_device_fleet() {
         shutdown: true,
         stream: false,
         fleet: None,
+        binary: false,
+        large: false,
     });
     assert_eq!(rep.requests_sent, 32);
     assert_eq!(rep.answered, 32, "no request may go unanswered: {:?}", rep.errors);
@@ -515,6 +522,8 @@ fn bombard_streaming_scenario_is_clean() {
         shutdown: true,
         stream: true,
         fleet: None,
+        binary: false,
+        large: false,
     });
     assert_eq!(rep.requests_sent, 32);
     assert_eq!(rep.answered, 32, "no request may go unanswered: {:?}", rep.errors);
@@ -1086,5 +1095,308 @@ fn fuzzed_and_truncated_frames_never_panic_the_parse_surface() {
     server.shutdown();
     drop(w);
     drop(r);
+    server.wait();
+}
+
+// ------------------------------------------------------------- binary wire
+
+use vortex::server::wire;
+
+/// Read one binary frame off the socket and decode it as a response.
+fn read_bin_frame(r: &mut BufReader<TcpStream>) -> Response {
+    use std::io::Read;
+    let mut hdr = [0u8; wire::HEADER_LEN];
+    r.read_exact(&mut hdr).unwrap();
+    let (op, len) = wire::parse_header(&hdr).unwrap();
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).unwrap();
+    wire::decode_response(op, &payload).unwrap()
+}
+
+#[test]
+fn binary_frames_encode_decode_encode_fixed_point() {
+    // the binary twin of the JSON property: decode(encode(f)) == f and
+    // the re-encode is byte-identical, over the same random frame pool
+    // (bulk WriteBuffer/Data layouts AND JSON envelopes both covered)
+    quickcheck::check_default("binary-request-roundtrip", |rng| {
+        let f = rand_request(rng);
+        let bytes = wire::encode_request(&f);
+        let (frame, used) = wire::Frame::decode(&bytes)
+            .unwrap_or_else(|e| panic!("decode of {f:?} failed: {e}"));
+        assert_eq!(used, bytes.len(), "one frame consumes exactly its bytes");
+        let g = wire::decode_request(frame.op, &frame.payload)
+            .unwrap_or_else(|e| panic!("payload decode of {f:?} failed: {e}"));
+        assert_eq!(g, f);
+        assert_eq!(wire::encode_request(&g), bytes, "binary encoding fixed point");
+    });
+    quickcheck::check_default("binary-response-roundtrip", |rng| {
+        let f = rand_response(rng);
+        let bytes = wire::encode_response(&f);
+        let (frame, used) = wire::Frame::decode(&bytes)
+            .unwrap_or_else(|e| panic!("decode of {f:?} failed: {e}"));
+        assert_eq!(used, bytes.len());
+        let g = wire::decode_response(frame.op, &frame.payload)
+            .unwrap_or_else(|e| panic!("payload decode of {f:?} failed: {e}"));
+        assert_eq!(g, f);
+        assert_eq!(wire::encode_response(&g), bytes);
+    });
+}
+
+#[test]
+fn malformed_binary_frames_do_not_kill_the_connection() {
+    // the binary twin of the JSON wire-hygiene test: junk, unknown ops,
+    // impossible payload shapes and oversized envelopes are *answered*
+    // (one binary error frame each) and the connection keeps serving
+    let server = tiny_server(1024);
+    let (mut w, mut r) = raw_conn(&server);
+
+    // negotiation is plain line-JSON in both directions
+    w.write_all(b"{\"op\":\"open_session\",\"devices\":[],\"wire\":\"binary\"}\n").unwrap();
+    match read_frame(&mut r) {
+        Response::Session { .. } => {}
+        other => panic!("binary open refused: {other:?}"),
+    }
+
+    // sanity: a JSON-envelope stats request over binary framing works
+    w.write_all(&wire::encode_request(&Request::Stats)).unwrap();
+    match read_bin_frame(&mut r) {
+        Response::Stats { .. } => {}
+        other => panic!("{other:?}"),
+    }
+
+    // six junk bytes with no magic anywhere: one error frame, then the
+    // loop resynchronises on the next real frame
+    w.write_all(&[0x00, 0x01, 0x02, 0x03, 0x04, 0x05]).unwrap();
+    w.write_all(&wire::encode_request(&Request::Stats)).unwrap();
+    match read_bin_frame(&mut r) {
+        Response::Error { code: ErrorCode::BadRequest, message } => {
+            assert!(message.contains("magic"), "{message}");
+        }
+        other => panic!("junk not answered: {other:?}"),
+    }
+    match read_bin_frame(&mut r) {
+        Response::Stats { .. } => {}
+        other => panic!("connection did not resync after junk: {other:?}"),
+    }
+
+    // unknown op tag (magic fine): answered, alive
+    w.write_all(&[wire::WIRE_MAGIC, 0x7F, 0, 0, 0, 0]).unwrap();
+    match read_bin_frame(&mut r) {
+        Response::Error { code: ErrorCode::BadRequest, message } => {
+            assert!(message.contains("op"), "{message}");
+        }
+        other => panic!("unknown op not answered: {other:?}"),
+    }
+
+    // write_buffer payload that cannot be addr + whole words
+    w.write_all(&[wire::WIRE_MAGIC, 0x01, 2, 0, 0, 0, 0xAB, 0xCD]).unwrap();
+    match read_bin_frame(&mut r) {
+        Response::Error { code: ErrorCode::BadRequest, message } => {
+            assert!(message.contains("write_buffer"), "{message}");
+        }
+        other => panic!("bad write_buffer shape not answered: {other:?}"),
+    }
+
+    // JSON envelope over the (tiny) line cap: payload is drained so the
+    // stream stays framed, and one error frame answers it
+    let mut big = vec![wire::WIRE_MAGIC, 0x00];
+    big.extend_from_slice(&2048u32.to_le_bytes());
+    big.extend_from_slice(&[b'x'; 2048]);
+    w.write_all(&big).unwrap();
+    match read_bin_frame(&mut r) {
+        Response::Error { code: ErrorCode::BadRequest, message } => {
+            assert!(message.contains("cap"), "{message}");
+        }
+        other => panic!("oversized envelope not answered: {other:?}"),
+    }
+
+    // after all of that, the connection still serves
+    w.write_all(&wire::encode_request(&Request::Stats)).unwrap();
+    match read_bin_frame(&mut r) {
+        Response::Stats { .. } => {}
+        other => panic!("connection died after malformed frames: {other:?}"),
+    }
+
+    server.shutdown();
+    drop(w);
+    drop(r);
+    server.wait();
+}
+
+/// One scripted session over the chosen wire mode: bulk write, a
+/// two-device chained pair of launches, bulk echo + result read-back,
+/// and the session's determinism fingerprint.
+fn wire_mode_transcript(addr: &str, binary: bool) -> (u64, u64, Vec<i32>, Vec<i32>) {
+    const W: usize = 1024; // buffer words (bulk path)
+    const T: u32 = 256; // launch width (small: this test clocks nothing)
+    let mut cl = if binary {
+        Client::connect_binary(addr).unwrap()
+    } else {
+        Client::connect(addr).unwrap()
+    };
+    let (_, devices) = cl.open_session(&[]).unwrap();
+    assert_eq!(devices, FLEET.to_vec());
+    assert_eq!(cl.is_binary(), binary, "negotiated mode mismatch");
+    cl.stage_kernel(scale_kernel_name(2), &scale_kernel_body(2)).unwrap();
+    let a = cl.create_buffer((W * 4) as u32).unwrap();
+    let b = cl.create_buffer((W * 4) as u32).unwrap();
+    let mut rng = SplitMix64::new(0xB1A5);
+    let input: Vec<i32> = (0..W).map(|_| rng.range_i32(-1000, 1000)).collect();
+    cl.write_buffer(a, &input).unwrap();
+    let k = scale_kernel_name(2);
+    let e0 = cl.enqueue(k, T, &[a, b], Some(0), Backend::SimX, &[]).unwrap();
+    let e1 = cl.enqueue(k, T, &[a, b], Some(1), Backend::SimX, &[e0]).unwrap();
+    let results = cl.finish().unwrap();
+    assert!(results.iter().all(|s| s.ok), "{results:?}");
+    // bulk read: the whole input buffer echoes back bit-exactly...
+    let echo = cl.read_result(e1, a, W as u32).unwrap();
+    assert_eq!(echo, input, "bulk write/read round trip corrupted data");
+    // ...and the launch saw the same bytes
+    let data = cl.read_result(e1, b, T).unwrap();
+    let want: Vec<i32> = input[..T as usize].iter().map(|x| x * 2).collect();
+    assert_eq!(data, want);
+    let (fp, events) = cl.fingerprint().unwrap();
+    (fp, events, echo, data)
+}
+
+#[test]
+fn json_and_binary_sessions_commit_identical_fingerprints() {
+    // The determinism invariant of the wire refactor: the same
+    // transcript driven over JSON lines and over binary frames must
+    // commit bit-identical results and the same results_fingerprint —
+    // at every worker count. (Server sessions are Reactive-only by
+    // construction — `Session` flushes through the queue's reactive
+    // path — and SchedMode-invariance of the fingerprint itself is
+    // pinned separately by the queue suite; the wire layer sits
+    // entirely upstream of scheduling.)
+    let mut all: Vec<(u64, u64, Vec<i32>, Vec<i32>)> = Vec::new();
+    for jobs in [1usize, 2] {
+        let mut per_mode = Vec::new();
+        for binary in [false, true] {
+            // a fresh server per run: identical session ids and arena
+            // addresses, so the transcripts are exact replicas
+            let server = Server::spawn(
+                "127.0.0.1:0",
+                ServeConfig {
+                    configs: FLEET.to_vec(),
+                    jobs,
+                    max_sessions: 4,
+                    limits: SessionLimits::default(),
+                    max_line: 1 << 20,
+                    fleets: Vec::new(),
+                    state_dir: None,
+                },
+            )
+            .unwrap();
+            let obs = wire_mode_transcript(&server.addr().to_string(), binary);
+            server.shutdown();
+            server.wait();
+            per_mode.push(obs);
+        }
+        assert_eq!(
+            per_mode[0], per_mode[1],
+            "jobs={jobs}: JSON and binary transcripts must commit identically"
+        );
+        all.push(per_mode.pop().unwrap());
+    }
+    assert_eq!(all[0], all[1], "worker count must not leak into results");
+}
+
+#[test]
+fn client_read_result_chunks_transparently_over_max_read_words() {
+    // satellite: a read larger than the server's per-request cap is
+    // split client-side into in-bounds chunks and reassembled
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: vec![(1, 2)],
+            jobs: 1,
+            max_sessions: 4,
+            limits: SessionLimits { max_read_words: 8, ..SessionLimits::default() },
+            max_line: 1 << 20,
+            fleets: Vec::new(),
+            state_dir: None,
+        },
+    )
+    .unwrap();
+    let mut cl = Client::connect(&server.addr().to_string()).unwrap();
+    cl.open_session(&[]).unwrap();
+    cl.stage_kernel(scale_kernel_name(2), &scale_kernel_body(2)).unwrap();
+    let a = cl.create_buffer(32 * 4).unwrap();
+    let b = cl.create_buffer(32 * 4).unwrap();
+    let input: Vec<i32> = (0..32).collect();
+    cl.write_buffer(a, &input).unwrap();
+    let e = cl
+        .enqueue(scale_kernel_name(2), 32, &[a, b], Some(0), Backend::SimX, &[])
+        .unwrap();
+    assert!(cl.wait_event(e).unwrap().ok);
+    // one 32-word request trips the server cap (the cap is real)...
+    match cl.request(&Request::ReadResult { event: e, addr: b, count: 32 }) {
+        Err(ClientError::Server { code: ErrorCode::BadRequest, message }) => {
+            assert!(message.contains("words"), "{message}");
+        }
+        other => panic!("expected the cap to refuse a 32-word read, got {other:?}"),
+    }
+    // ...but the chunking client reassembles it transparently
+    cl.set_read_chunk_words(8);
+    let want: Vec<i32> = input.iter().map(|x| x * 2).collect();
+    assert_eq!(cl.read_result(e, b, 32).unwrap(), want);
+    // chunk sizes that do not divide the count still work (last partial)
+    cl.set_read_chunk_words(7);
+    assert_eq!(cl.read_result(e, b, 32).unwrap(), want);
+    server.shutdown();
+    drop(cl);
+    server.wait();
+}
+
+#[test]
+fn bombard_binary_large_buffers_is_clean_and_matches_json_fingerprint() {
+    // the CI smoke shape in-process: the large-buffer scenario over both
+    // framings against one server, zero drops, and the fold of every
+    // session's results_fingerprint identical between the two runs
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            configs: vec![(2, 2)],
+            jobs: 2,
+            max_sessions: 8,
+            limits: SessionLimits::default(),
+            // JSON-framed large writes are ~10 bytes per word
+            max_line: 64 << 20,
+            fleets: Vec::new(),
+            state_dir: None,
+        },
+    )
+    .unwrap();
+    let cfg = |binary: bool| BombardConfig {
+        addr: server.addr().to_string(),
+        clients: 2,
+        requests: 4, // one request per LARGE_SIZES entry
+        n: 64,
+        seed: 0xC0FFEE,
+        shutdown: false,
+        stream: false,
+        fleet: None,
+        binary,
+        large: true,
+    };
+    let rep_json = run_bombard(&cfg(false));
+    assert!(rep_json.clean(), "{:?}", rep_json.errors);
+    let rep_bin = run_bombard(&cfg(true));
+    assert!(rep_bin.clean(), "{:?}", rep_bin.errors);
+    for rep in [&rep_json, &rep_bin] {
+        assert_eq!(rep.requests_sent, 8);
+        assert_eq!(rep.verified, 8, "{:?}", rep.errors);
+        assert!(rep.write_mbps.unwrap_or(0.0) > 0.0, "write MiB/s reported");
+        assert!(rep.read_mbps.unwrap_or(0.0) > 0.0, "read MiB/s reported");
+    }
+    assert!(
+        rep_json.results_fingerprint.is_some()
+            && rep_json.results_fingerprint == rep_bin.results_fingerprint,
+        "wire encoding leaked into committed results: {:?} vs {:?}",
+        rep_json.results_fingerprint,
+        rep_bin.results_fingerprint
+    );
+    server.shutdown();
     server.wait();
 }
