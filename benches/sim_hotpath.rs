@@ -415,6 +415,56 @@ fn main() {
         json.push("server_launches_streamed", stats.launches_streamed.into());
     }
 
+    // --- traced server throughput: the same load, recorder enabled ---
+    // The identical streaming workload with the process-global span
+    // recorder on: the ratio against server_requests_per_sec IS the
+    // tracing overhead (the CI floor pins it), and fingerprint equality
+    // proves tracing is determinism-neutral under concurrent load.
+    let server = Server::spawn(
+        "127.0.0.1:0",
+        ServeConfig { configs: het_cfgs[..2].to_vec(), ..ServeConfig::default() },
+    )
+    .expect("spawn traced bench server");
+    vortex::trace::set_enabled(true);
+    vortex::trace::reset_dropped();
+    let rep_traced = run_bombard(&BombardConfig {
+        addr: server.addr().to_string(),
+        clients: bombard_clients,
+        requests: bombard_requests,
+        n: if smoke { 128 } else { 256 },
+        seed: 0xC0FFEE,
+        shutdown: true,
+        stream: true,
+        fleet: None,
+        binary: false,
+        large: false,
+    });
+    vortex::trace::set_enabled(false);
+    let spans = vortex::trace::drain();
+    server.shutdown();
+    server.wait();
+    assert!(
+        rep_traced.clean(),
+        "traced bombard must answer + verify every request: {:?}",
+        rep_traced.errors
+    );
+    assert!(!spans.is_empty(), "a traced bombard run must record spans");
+    assert_eq!(
+        rep.results_fingerprint, rep_traced.results_fingerprint,
+        "tracing must be determinism-neutral under server load"
+    );
+    let trace_overhead = (rep.req_per_sec / rep_traced.req_per_sec - 1.0) * 100.0;
+    println!(
+        "bench {:<40} {:.2} verified req/s, p50 {:.2?}, p99 {:.2?}",
+        "server_traced_throughput", rep_traced.req_per_sec, rep_traced.p50, rep_traced.p99
+    );
+    println!(
+        "  -> {} spans recorded; tracing overhead {trace_overhead:.1}% vs untraced\n",
+        spans.len()
+    );
+    json.push("server_traced_requests_per_sec", rep_traced.req_per_sec.into());
+    json.push("server_traced_spans", (spans.len() as u64).into());
+
     // --- shared-fleet throughput: tenants contending for ONE fleet ---
     // Same service, but every client attaches to a single named fleet:
     // all tenants' launches interleave on the same two devices under

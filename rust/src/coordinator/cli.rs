@@ -15,11 +15,13 @@
 //!              [--session-inflight N] [--global-inflight N]
 //!              [--port-file PATH]                 # --fleet hosts a named
 //!              [--fleet NAME=2x2,8x8]...          # SHARED tenant fleet
+//!              [--trace-dir DIR]                  # Chrome trace on drain
 //! vortex bombard [--addr H:P] [--clients N]       # concurrent load
 //!                [--requests M] [--n SIZE]        # generator (self-hosts
 //!                [--configs 2x2,8x8] [--jobs N]   # a server without
 //!                [--seed S] [--shutdown]          # --addr); --stream
 //!                [--stream] [--fleet NAME]        # enqueues while running
+//!                [--trace FILE]                   # traced 2nd pass + proof
 //! ```
 
 use super::{config as cfgfile, pool, report::Table, sweep};
@@ -43,6 +45,9 @@ pub enum Command {
         /// `--jobs N`: N > 1 enables the parallel multi-core engine
         /// (workers are capped at the host's available parallelism).
         jobs: u32,
+        /// `--trace FILE`: record the run as Chrome trace-event JSON
+        /// (load in Perfetto / `chrome://tracing`).
+        trace: Option<String>,
     },
     Sweep {
         benches: Vec<Bench>,
@@ -89,6 +94,11 @@ pub enum Command {
         /// `--state-dir DIR`: journal private sessions here so a killed
         /// server can be restarted and sessions resumed by token.
         state_dir: Option<String>,
+        /// `--trace-dir DIR`: enable the span recorder for the server's
+        /// lifetime and write `DIR/serve-trace.json` (Chrome trace-event
+        /// JSON) after drain. Determinism-neutral: results are
+        /// bit-identical traced or not.
+        trace_dir: Option<String>,
     },
     /// End-to-end crash-recovery smoke: SIGKILL a journaled serve child
     /// mid-run, restart it over the same state dir, resume the session,
@@ -124,6 +134,13 @@ pub enum Command {
         /// `--large-buffers`: bulk-transfer scenario (64 KiB – 4 MiB
         /// buffers, timed write/read, MiB/s in the report).
         large: bool,
+        /// `--trace FILE`: run an untraced baseline then a traced pass
+        /// of the same workload, require bit-identical fingerprints,
+        /// report the tracing overhead, and write the traced pass as
+        /// Chrome trace-event JSON. Incompatible with `--addr` (the
+        /// recorder is process-global, so the server must be
+        /// self-hosted).
+        trace: Option<String>,
     },
     List,
     Help,
@@ -168,6 +185,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut seed = 0xC0FFEEu64;
             let mut warm = true;
             let mut jobs = 1u32;
+            let mut trace: Option<String> = None;
             let mut base: Option<MachineConfig> = None;
             let mut i = 1;
             while i < args.len() {
@@ -187,6 +205,9 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--jobs" => jobs = parse_jobs(take_value(args, &mut i, "--jobs")?)?,
                     "--emu" => backend = Backend::Emu,
                     "--no-warm" => warm = false,
+                    "--trace" => {
+                        trace = Some(take_value(args, &mut i, "--trace")?.to_string())
+                    }
                     "--config" => {
                         let path = take_value(args, &mut i, "--config")?;
                         base = Some(
@@ -207,7 +228,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 cfg.num_threads = threads;
             }
             cfg.num_cores = cores;
-            Ok(Command::Run { bench, cfg, backend, scale, seed, warm, jobs })
+            Ok(Command::Run { bench, cfg, backend, scale, seed, warm, jobs, trace })
         }
         "sweep" => {
             let mut benches = Vec::new();
@@ -274,6 +295,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut port_file: Option<String> = None;
             let mut fleets: Vec<(String, Vec<(u32, u32)>)> = Vec::new();
             let mut state_dir: Option<String> = None;
+            let mut trace_dir: Option<String> = None;
             let mut i = 1;
             while i < args.len() {
                 match args[i].as_str() {
@@ -302,6 +324,9 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--state-dir" => {
                         state_dir = Some(take_value(args, &mut i, "--state-dir")?.to_string())
                     }
+                    "--trace-dir" => {
+                        trace_dir = Some(take_value(args, &mut i, "--trace-dir")?.to_string())
+                    }
                     other => return Err(CliError(format!("unknown flag `{other}`"))),
                 }
                 i += 1;
@@ -322,6 +347,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 port_file,
                 fleets,
                 state_dir,
+                trace_dir,
             })
         }
         "crash-smoke" => {
@@ -356,6 +382,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut fleet: Option<String> = None;
             let mut binary = false;
             let mut large = false;
+            let mut trace: Option<String> = None;
             let mut i = 1;
             while i < args.len() {
                 match args[i].as_str() {
@@ -377,6 +404,9 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     }
                     "--binary" => binary = true,
                     "--large-buffers" => large = true,
+                    "--trace" => {
+                        trace = Some(take_value(args, &mut i, "--trace")?.to_string())
+                    }
                     other => return Err(CliError(format!("unknown flag `{other}`"))),
                 }
                 i += 1;
@@ -386,6 +416,13 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             }
             if n == 0 {
                 return Err(CliError("--n must be >= 1".into()));
+            }
+            if trace.is_some() && addr.is_some() {
+                return Err(CliError(
+                    "--trace needs the self-hosted server (the recorder is \
+                     process-global); drop --addr"
+                        .into(),
+                ));
             }
             Ok(Command::Bombard {
                 addr,
@@ -400,6 +437,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 fleet,
                 binary,
                 large,
+                trace,
             })
         }
         "power" => {
@@ -502,6 +540,7 @@ Vortex: OpenCL-compatible RISC-V GPGPU — full-stack reproduction
 USAGE:
   vortex run --bench <name> [--warps W --threads T --cores C] [--emu]
              [--scale K --seed S --no-warm --config file.toml] [--jobs N]
+             [--trace FILE]
   vortex sweep [--bench <name>]... [--seed S] [--jobs N]
                                                   Fig 9 + Fig 10 series
   vortex queue [--configs 2x2,4x4,8x8] [--stages K] [--n N] [--seed S]
@@ -522,7 +561,7 @@ USAGE:
   vortex serve [--addr HOST:PORT] [--configs 2x2,8x8] [--jobs N]
                [--max-sessions N] [--session-inflight N]
                [--global-inflight N] [--port-file PATH]
-               [--fleet NAME=2x2,8x8]... [--state-dir DIR]
+               [--fleet NAME=2x2,8x8]... [--state-dir DIR] [--trace-dir DIR]
                                                   multi-tenant device service
                                                   (line-delimited JSON over
                                                   TCP; per-client sessions on
@@ -547,9 +586,10 @@ USAGE:
   vortex bombard [--addr HOST:PORT] [--clients N] [--requests M] [--n SIZE]
                  [--configs 2x2,8x8] [--jobs N] [--seed S] [--shutdown]
                  [--stream] [--fleet NAME] [--binary] [--large-buffers]
+                 [--trace FILE]
                                                   concurrent load generator:
                                                   verifies every response and
-                                                  reports req/s + p50/p99
+                                                  reports req/s + p50/p99/p999
                                                   latency; without --addr it
                                                   self-hosts a server on an
                                                   ephemeral port; --stream
@@ -584,6 +624,15 @@ USAGE:
              workers (results unchanged); serve/bombard: worker share of
              each session's finish (default: host parallelism). N must
              be >= 1.
+
+  --trace FILE / --trace-dir DIR
+             record every layer (launch lifecycle, server requests,
+             resilience ops) as Chrome trace-event JSON — load the file
+             in Perfetto (ui.perfetto.dev) or chrome://tracing. Tracing
+             is off unless requested (one relaxed atomic load per site)
+             and never changes results: bombard --trace runs an
+             untraced baseline, requires a bit-identical fingerprint
+             from the traced pass, and prints the overhead.
 ";
 
 /// Execute a parsed command, writing human-readable output to stdout.
@@ -602,7 +651,7 @@ pub fn execute(cmd: Command) -> i32 {
             }
             0
         }
-        Command::Run { bench, cfg, backend, scale, seed, warm, jobs } => {
+        Command::Run { bench, cfg, backend, scale, seed, warm, jobs, trace } => {
             // reject bad machine configs on the CLI error path, not via the
             // machine constructors' fail-fast panic
             if let Err(e) = cfg.validate() {
@@ -622,7 +671,30 @@ pub fn execute(cmd: Command) -> i32 {
                 cfg.num_cores,
                 backend
             );
-            match bench.run_scaled_mode(cfg, scale, seed, backend, warm, mode) {
+            if trace.is_some() {
+                crate::trace::set_enabled(true);
+            }
+            let t0 = crate::trace::now_ns();
+            let run = bench.run_scaled_mode(cfg, scale, seed, backend, warm, mode);
+            if let Some(path) = &trace {
+                let mut sp = crate::trace::Span::at(
+                    crate::trace::SpanKind::Run,
+                    t0,
+                    crate::trace::now_ns().saturating_sub(t0),
+                );
+                sp.detail = bench.name();
+                crate::trace::record(sp);
+                crate::trace::set_enabled(false);
+                let spans = crate::trace::drain();
+                match crate::trace::write_chrome(std::path::Path::new(path), &spans) {
+                    Ok(()) => println!("trace: wrote {path} ({} spans)", spans.len()),
+                    Err(e) => {
+                        eprintln!("trace: cannot write {path}: {e}");
+                        return 1;
+                    }
+                }
+            }
+            match run {
                 Ok(r) => {
                     println!(
                         "cycles {}  launches {}  verified {}",
@@ -738,6 +810,7 @@ pub fn execute(cmd: Command) -> i32 {
             port_file,
             fleets,
             state_dir,
+            trace_dir,
         } => {
             let jobs = jobs.map_or_else(pool::default_jobs, |j| j as usize);
             let cfg = ServeConfig {
@@ -751,6 +824,7 @@ pub fn execute(cmd: Command) -> i32 {
                 },
                 fleets: fleets.clone(),
                 state_dir: state_dir.clone().map(std::path::PathBuf::from),
+                trace_dir: trace_dir.clone().map(std::path::PathBuf::from),
                 ..ServeConfig::default()
             };
             let srv = match Server::spawn(&addr, cfg) {
@@ -780,6 +854,13 @@ pub fn execute(cmd: Command) -> i32 {
                      (resume with open_session {{\"resume\": token}})"
                 );
             }
+            if let Some(td) = &trace_dir {
+                println!(
+                    "tracing: recording spans for the server's lifetime; Chrome \
+                     trace-event JSON lands in {td}/serve-trace.json on drain \
+                     (live snapshots via the `trace` wire op)"
+                );
+            }
             println!("(line-delimited JSON; send {{\"op\":\"shutdown\"}} to drain)");
             if let Some(pf) = port_file {
                 if let Err(e) = std::fs::write(&pf, format!("{}\n", local.port())) {
@@ -790,6 +871,17 @@ pub fn execute(cmd: Command) -> i32 {
                 }
             }
             srv.wait();
+            if let Some(td) = &trace_dir {
+                crate::trace::set_enabled(false);
+                let spans = crate::trace::drain();
+                let path = std::path::Path::new(td).join("serve-trace.json");
+                match crate::trace::write_chrome(&path, &spans) {
+                    Ok(()) => {
+                        println!("trace: wrote {} ({} spans)", path.display(), spans.len())
+                    }
+                    Err(e) => eprintln!("trace: cannot write {}: {e}", path.display()),
+                }
+            }
             println!("vortex serve: drained, exiting");
             0
         }
@@ -806,63 +898,41 @@ pub fn execute(cmd: Command) -> i32 {
             fleet,
             binary,
             large,
+            trace,
         } => {
-            // self-host a server on an ephemeral port unless --addr given
-            let (target, local) = match addr {
-                Some(a) => (a, None),
-                None => {
-                    let cfg = ServeConfig {
-                        // a self-hosted fleet run hosts the named fleet
-                        // over the --configs devices
-                        fleets: fleet
-                            .as_ref()
-                            .map(|name| vec![(name.clone(), configs.clone())])
-                            .unwrap_or_default(),
-                        configs,
-                        jobs: jobs.map_or_else(pool::default_jobs, |j| j as usize),
-                        // a JSON-framed 4 MiB write_buffer line is ~10
-                        // bytes per word: the large scenario needs
-                        // headroom over the default line cap
-                        max_line: if large {
-                            64 << 20
-                        } else {
-                            ServeConfig::default().max_line
-                        },
-                        ..ServeConfig::default()
-                    };
-                    match Server::spawn("127.0.0.1:0", cfg) {
-                        Ok(s) => (s.addr().to_string(), Some(s)),
-                        Err(e) => {
-                            eprintln!("bombard: self-hosted serve failed: {e}");
-                            return 1;
-                        }
-                    }
-                }
+            let bcfg = BombardConfig {
+                // filled in per pass by bombard_pass
+                addr: String::new(),
+                clients: clients as usize,
+                requests: requests as usize,
+                n: n as usize,
+                seed,
+                shutdown,
+                stream,
+                fleet: fleet.clone(),
+                binary,
+                large,
             };
             println!(
-                "bombarding {target}: {clients} client(s) x {requests} request(s), n={n}, \
-                 seed {seed:#x}{}{}{}{}",
+                "bombarding {}: {clients} client(s) x {requests} request(s), n={n}, \
+                 seed {seed:#x}{}{}{}{}{}",
+                addr.as_deref().unwrap_or("self-hosted server"),
                 if stream { ", streaming" } else { "" },
                 fleet
                     .as_deref()
                     .map(|f| format!(", shared fleet `{f}`"))
                     .unwrap_or_default(),
                 if binary { ", binary wire" } else { "" },
-                if large { ", large buffers" } else { "" }
+                if large { ", large buffers" } else { "" },
+                if trace.is_some() { ", traced second pass" } else { "" }
             );
-            let rep = crate::server::run_bombard(&BombardConfig {
-                addr: target,
-                clients: clients as usize,
-                requests: requests as usize,
-                n: n as usize,
-                seed,
-                // a self-hosted server always drains at the end
-                shutdown: shutdown || local.is_some(),
-                stream,
-                fleet,
-                binary,
-                large,
-            });
+            let rep = match bombard_pass(addr.as_deref(), &configs, jobs, &bcfg) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("bombard: {e}");
+                    return 1;
+                }
+            };
             let dropped = rep.requests_sent - rep.answered;
             println!(
                 "requests: {} sent, {} answered, {} verified, {dropped} dropped \
@@ -870,8 +940,9 @@ pub fn execute(cmd: Command) -> i32 {
                 rep.requests_sent, rep.answered, rep.verified, rep.busy_retries, rep.launches
             );
             println!(
-                "throughput: {:.2} verified req/s over {:.2?}; latency p50 {:.2?} p99 {:.2?}",
-                rep.req_per_sec, rep.elapsed, rep.p50, rep.p99
+                "throughput: {:.2} verified req/s over {:.2?}; latency p50 {:.2?} p99 {:.2?} \
+                 p999 {:.2?}",
+                rep.req_per_sec, rep.elapsed, rep.p50, rep.p99, rep.p999
             );
             if let (Some(w), Some(r)) = (rep.write_mbps, rep.read_mbps) {
                 println!("bulk transfer: write {w:.2} MiB/s, read {r:.2} MiB/s");
@@ -894,6 +965,16 @@ pub fn execute(cmd: Command) -> i32 {
                     stats.protection_faults,
                     stats.device_cycles
                 );
+                println!(
+                    "server perf: {} launches, ipc {:.3}, simd {:.3}; request latency \
+                     p50/p99/p999 {}/{}/{} us",
+                    stats.perf.launches,
+                    stats.perf.ipc_milli as f64 / 1000.0,
+                    stats.perf.simd_milli as f64 / 1000.0,
+                    stats.request_latency.p50_ns / 1000,
+                    stats.request_latency.p99_ns / 1000,
+                    stats.request_latency.p999_ns / 1000
+                );
                 for f in &stats.fleets {
                     println!(
                         "fleet `{}`: {} session(s), {} in-flight, {} ready, {} launches",
@@ -907,16 +988,66 @@ pub fn execute(cmd: Command) -> i32 {
             if rep.errors.len() > 8 {
                 eprintln!("... and {} more", rep.errors.len() - 8);
             }
-            if let Some(local) = local {
-                // idempotent with the shutdown frame bombard sent; makes
-                // the drain unconditional even if that frame was refused
-                local.shutdown();
-                local.wait();
+            let mut ok = rep.clean();
+            if !ok {
+                eprintln!("bombard: FAILED (drops, mismatches or transport errors)");
             }
-            if rep.clean() {
+            if let Some(path) = &trace {
+                // second, traced pass over the identical workload: the
+                // recorder is process-global, so this pass always
+                // self-hosts (parse rejects --trace with --addr)
+                crate::trace::set_enabled(true);
+                crate::trace::reset_dropped();
+                let traced = match bombard_pass(None, &configs, jobs, &bcfg) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        crate::trace::set_enabled(false);
+                        eprintln!("bombard: traced pass: {e}");
+                        return 1;
+                    }
+                };
+                crate::trace::set_enabled(false);
+                let spans = crate::trace::drain();
+                match crate::trace::write_chrome(std::path::Path::new(path), &spans) {
+                    Ok(()) => println!(
+                        "trace: wrote {path} ({} spans, {} dropped)",
+                        spans.len(),
+                        crate::trace::dropped()
+                    ),
+                    Err(e) => {
+                        eprintln!("trace: cannot write {path}: {e}");
+                        ok = false;
+                    }
+                }
+                let overhead = if traced.req_per_sec > 0.0 {
+                    (rep.req_per_sec / traced.req_per_sec - 1.0) * 100.0
+                } else {
+                    0.0
+                };
+                println!(
+                    "trace overhead: {overhead:.1}% ({:.2} untraced vs {:.2} traced req/s)",
+                    rep.req_per_sec, traced.req_per_sec
+                );
+                if !traced.clean() {
+                    eprintln!("bombard: traced pass FAILED (drops, mismatches or errors)");
+                    ok = false;
+                }
+                match (rep.results_fingerprint, traced.results_fingerprint) {
+                    (Some(a), Some(b)) if a == b => println!(
+                        "determinism: traced fingerprint matches untraced ({a:#018x})"
+                    ),
+                    (a, b) => {
+                        eprintln!(
+                            "bombard: FAILED — traced fingerprint {b:?} != untraced {a:?} \
+                             (tracing must be determinism-neutral)"
+                        );
+                        ok = false;
+                    }
+                }
+            }
+            if ok {
                 0
             } else {
-                eprintln!("bombard: FAILED (drops, mismatches or transport errors)");
                 1
             }
         }
@@ -985,6 +1116,56 @@ pub fn execute(cmd: Command) -> i32 {
             }
         }
     }
+}
+
+/// One bombard pass: self-host a server over `configs` (hosting the
+/// named fleet when `bcfg.fleet` is set) unless `addr` is given, run
+/// the fan-out, drain any self-hosted instance, and return the report.
+/// `bombard --trace` runs two of these (untraced, then traced) over the
+/// identical workload.
+fn bombard_pass(
+    addr: Option<&str>,
+    configs: &[(u32, u32)],
+    jobs: Option<u32>,
+    bcfg: &BombardConfig,
+) -> Result<crate::server::BombardReport, String> {
+    let (target, local) = match addr {
+        Some(a) => (a.to_string(), None),
+        None => {
+            let cfg = ServeConfig {
+                // a self-hosted fleet run hosts the named fleet over the
+                // --configs devices
+                fleets: bcfg
+                    .fleet
+                    .as_ref()
+                    .map(|name| vec![(name.clone(), configs.to_vec())])
+                    .unwrap_or_default(),
+                configs: configs.to_vec(),
+                jobs: jobs.map_or_else(pool::default_jobs, |j| j as usize),
+                // a JSON-framed 4 MiB write_buffer line is ~10 bytes per
+                // word: the large scenario needs headroom over the
+                // default line cap
+                max_line: if bcfg.large { 64 << 20 } else { ServeConfig::default().max_line },
+                ..ServeConfig::default()
+            };
+            match Server::spawn("127.0.0.1:0", cfg) {
+                Ok(s) => (s.addr().to_string(), Some(s)),
+                Err(e) => return Err(format!("self-hosted serve failed: {e}")),
+            }
+        }
+    };
+    let mut cfg = bcfg.clone();
+    cfg.addr = target;
+    // a self-hosted server always drains at the end
+    cfg.shutdown = bcfg.shutdown || local.is_some();
+    let rep = crate::server::run_bombard(&cfg);
+    if let Some(local) = local {
+        // idempotent with the shutdown frame bombard sent; makes the
+        // drain unconditional even if that frame was refused
+        local.shutdown();
+        local.wait();
+    }
+    Ok(rep)
 }
 
 // ---------------------------------------------------------------------------
@@ -1341,6 +1522,7 @@ mod tests {
                 port_file: Some(pf),
                 fleets,
                 state_dir: None,
+                trace_dir: None,
             } => {
                 assert_eq!(addr, "0.0.0.0:7000");
                 assert_eq!(configs, vec![(2, 2), (4, 4)]);
@@ -1414,6 +1596,37 @@ mod tests {
         assert!(parse(&argv("bombard --requests 0")).is_err());
         assert!(parse(&argv("bombard --n 0")).is_err());
         assert!(parse(&argv("bombard --configs 2y2")).is_err());
+    }
+
+    #[test]
+    fn trace_flags_parse() {
+        match parse(&argv("run --bench vecadd --trace run.json")).unwrap() {
+            Command::Run { trace: Some(t), .. } => assert_eq!(t, "run.json"),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("run --bench vecadd")).unwrap() {
+            Command::Run { trace: None, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("serve --trace-dir /tmp/vx-trace")).unwrap() {
+            Command::Serve { trace_dir: Some(d), .. } => assert_eq!(d, "/tmp/vx-trace"),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("bombard --trace out.json --clients 2")).unwrap() {
+            Command::Bombard { trace: Some(t), clients: 2, .. } => assert_eq!(t, "out.json"),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("bombard")).unwrap() {
+            Command::Bombard { trace: None, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        // the recorder is process-global: a traced bombard must
+        // self-host, so --trace with --addr is a clean argument error
+        let err = parse(&argv("bombard --addr 127.0.0.1:7000 --trace out.json")).unwrap_err();
+        assert!(err.0.contains("--addr"), "error names the conflict: {err}");
+        // both flags require a value
+        assert!(parse(&argv("run --bench vecadd --trace")).is_err());
+        assert!(parse(&argv("serve --trace-dir")).is_err());
     }
 
     #[test]

@@ -15,6 +15,11 @@
 //! * [`server`] — a multi-tenant device *service* over the event-graph
 //!   launch queue: line-delimited JSON protocol on TCP, per-client
 //!   sessions, admission control, `vortex serve`/`vortex bombard`.
+//! * [`trace`] — opt-in cross-layer span recorder: per-thread ring
+//!   buffers capture every event-graph node's enqueue→dispatch→retire→
+//!   commit lifecycle plus server/resilience ops, exported as Chrome
+//!   trace-event JSON (Perfetto). Zero-cost disabled, determinism-neutral
+//!   enabled.
 //! * [`kernels`] — the Rodinia-subset device kernels, authored with a
 //!   kernel-builder DSL that mirrors POCL's generated structure.
 //! * [`workloads`] — seeded input generators + host-side references.
@@ -43,4 +48,5 @@ pub mod runtime;
 pub mod server;
 pub mod sim;
 pub mod stack;
+pub mod trace;
 pub mod workloads;

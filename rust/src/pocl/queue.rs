@@ -122,6 +122,7 @@ use crate::coordinator::pool;
 use crate::mem::Memory;
 use crate::sim::ExecMode;
 use crate::stack::MAX_ARGS;
+use crate::trace::{self, Span, SpanKind};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
@@ -295,6 +296,16 @@ pub struct QueuedResult {
     /// devices reproduces every result bit-identically — the order the
     /// event-graph property tests replay.
     pub exec_seq: u32,
+    /// Wall-clock nanoseconds the event waited between enqueue and its
+    /// first worker spawn (reactive engine only; 0 in
+    /// [`SchedMode::RoundSync`]). Observability only: deliberately
+    /// excluded from [`results_fingerprint`], like every wall-clock
+    /// surface.
+    pub queue_wait_ns: u64,
+    /// Wall-clock nanoseconds between the event's first worker spawn and
+    /// its physical retirement (reactive engine only; 0 in
+    /// [`SchedMode::RoundSync`]). Excluded from [`results_fingerprint`].
+    pub exec_ns: u64,
 }
 
 /// A unit of parallel work inside one `finish` round: one snapshot
@@ -405,6 +416,13 @@ pub struct LaunchQueue {
     /// (previous batch, or a foreign queue) apart from a merely unknown
     /// (future) index.
     batch: u64,
+    /// Tag stamped into every [`crate::trace::Span`] this queue records
+    /// (the Chrome trace `pid` lane). The server sets it to the owning
+    /// session id; 0 for standalone queues.
+    pub trace_tag: u64,
+    /// Enqueue timestamps of the staged (pre-engine) `nodes`, parallel to
+    /// `nodes` — [`crate::trace::now_ns`] at `push_node` time.
+    node_t_push: Vec<u64>,
 }
 
 /// Estimated cost of `total` work items on device `di` against the
@@ -501,6 +519,8 @@ impl LaunchQueue {
             last_on_device: Vec::new(),
             last_tenant_on_device: HashMap::new(),
             batch: next_batch_id(),
+            trace_tag: 0,
+            node_t_push: Vec::new(),
         }
     }
 
@@ -671,10 +691,22 @@ impl LaunchQueue {
     /// one is active (streaming submission joins the running graph), else
     /// into the staging list `finish`/`flush` will consume.
     fn push_node(&mut self, node: Node) -> Event {
+        let t_push = trace::now_ns();
+        let idx = self.engine.as_ref().map_or(self.nodes.len(), |e| e.total());
+        if trace::enabled() {
+            let mut s = Span::at(SpanKind::Enqueue, t_push, 0);
+            s.event = idx as u64;
+            s.batch = self.batch;
+            s.tenant = node.tenant;
+            s.tag = self.trace_tag;
+            s.wait = node.deps.iter().map(|&d| d as u64).collect();
+            trace::record(s);
+        }
         let idx = match &mut self.engine {
-            Some(eng) => eng.push_node(node),
+            Some(eng) => eng.push_node(node, t_push),
             None => {
                 self.nodes.push(node);
+                self.node_t_push.push(t_push);
                 self.nodes.len() - 1
             }
         };
@@ -1067,13 +1099,18 @@ impl LaunchQueue {
     /// `tests/snapshot_resilience.rs`). The launch's scheduling charge
     /// follows it, and its committed result reports `dst`.
     pub fn migrate_suspended(&mut self, src: DeviceId, dst: DeviceId) -> Result<(), LaunchError> {
-        match &mut self.engine {
+        let t0 = trace::now_ns();
+        let out = match &mut self.engine {
             Some(eng) => {
                 eng.pump_nonblocking();
                 eng.migrate_suspended(src.0, dst.0)
             }
             None => Err(LaunchError::Snapshot("no streaming batch is in flight".into())),
+        };
+        if out.is_ok() {
+            self.record_resilience_span(SpanKind::Migrate, dst.0, t0);
         }
+        out
     }
 
     /// Number of times an in-flight launch was suspended at a commit
@@ -1093,7 +1130,8 @@ impl LaunchQueue {
     /// While a streaming batch is in flight the device must be idle
     /// (quiesce first, or catch the error).
     pub fn snapshot_device(&mut self, id: DeviceId) -> Result<DeviceSnapshot, LaunchError> {
-        match &mut self.engine {
+        let t0 = trace::now_ns();
+        let out = match &mut self.engine {
             Some(eng) => {
                 eng.pump_nonblocking();
                 match eng.parked(id.0) {
@@ -1104,7 +1142,11 @@ impl LaunchQueue {
                 }
             }
             None => Ok(self.devices[id.0].snapshot()),
+        };
+        if out.is_ok() {
+            self.record_resilience_span(SpanKind::Snapshot, id.0, t0);
         }
+        out
     }
 
     /// Restore device `id` from a snapshot (same-shape check inside).
@@ -1114,7 +1156,8 @@ impl LaunchQueue {
         id: DeviceId,
         snap: &DeviceSnapshot,
     ) -> Result<(), LaunchError> {
-        match &mut self.engine {
+        let t0 = trace::now_ns();
+        let out = match &mut self.engine {
             Some(eng) => {
                 eng.pump_nonblocking();
                 match eng.parked_mut(id.0) {
@@ -1125,7 +1168,24 @@ impl LaunchQueue {
                 }
             }
             None => self.devices[id.0].restore_snapshot(snap),
+        };
+        if out.is_ok() {
+            self.record_resilience_span(SpanKind::Restore, id.0, t0);
         }
+        out
+    }
+
+    /// Interval span for a resilience operation on device `di` (success
+    /// paths only).
+    fn record_resilience_span(&self, kind: SpanKind, di: usize, t0: u64) {
+        if !trace::enabled() {
+            return;
+        }
+        let mut s = Span::at(kind, t0, trace::now_ns().saturating_sub(t0));
+        s.batch = self.batch;
+        s.tag = self.trace_tag;
+        s.device = Some(di as u32);
+        trace::record(s);
     }
 
     /// Hand the staged batch to a reactive engine if none is active.
@@ -1133,7 +1193,10 @@ impl LaunchQueue {
         if self.engine.is_some() {
             return;
         }
-        let nodes = std::mem::take(&mut self.nodes);
+        let nodes = std::mem::take(&mut self.nodes)
+            .into_iter()
+            .zip(std::mem::take(&mut self.node_t_push))
+            .collect();
         let devices = std::mem::take(&mut self.devices);
         let sched = std::mem::take(&mut self.sched);
         self.engine = Some(Engine::new(
@@ -1147,6 +1210,8 @@ impl LaunchQueue {
                 streaming,
                 fault: self.fault_latency,
                 preempt: self.preemption && streaming,
+                batch: self.batch,
+                tag: self.trace_tag,
             },
         ));
     }
@@ -1178,6 +1243,12 @@ impl LaunchQueue {
         }
 
         let taken = std::mem::take(&mut self.nodes);
+        self.node_t_push.clear();
+        let t_batch = trace::now_ns();
+        // The batch id the taken nodes were enqueued under (span scoping;
+        // `self.batch` is retired and redrawn below).
+        let span_batch = self.batch;
+        let span_tag = self.trace_tag;
         for l in &mut self.last_on_device {
             *l = None;
         }
@@ -1431,8 +1502,35 @@ impl LaunchQueue {
             }
 
             // 7. Run the round's units over the worker pool.
+            //
+            // Dispatch + retire interval spans for one unit execution
+            // (success paths only — failures and skips never reach a
+            // commit span, and the span-chain completeness invariant
+            // keys on commits). The retire span is the instant the unit
+            // hands its result back, nested at the end of the dispatch
+            // span by construction — same shape the reactive engine
+            // emits, so `scripts/check_trace.py` validates both modes.
+            fn exec_spans(idx: usize, device: Option<u32>, batch: u64, tag: u64, t0: u64) {
+                if !trace::enabled() {
+                    return;
+                }
+                let t_end = trace::now_ns();
+                let mut d = Span::at(SpanKind::Dispatch, t0, t_end.saturating_sub(t0));
+                d.event = idx as u64;
+                d.batch = batch;
+                d.tag = tag;
+                d.device = device;
+                trace::record(d);
+                let mut r = Span::at(SpanKind::Retire, t_end, 0);
+                r.event = idx as u64;
+                r.batch = batch;
+                r.tag = tag;
+                r.device = device;
+                trace::record(r);
+            }
             let outs = pool::run_indexed(self.jobs, units, move |_, u| match u {
                 Unit::Snap { idx, job, keep_image } => {
+                    let t0 = trace::now_ns();
                     let mut mem = job.mem;
                     let out = execute_launch(
                         job.config, &mut mem, &job.prog, job.backend, job.warm, mode,
@@ -1441,6 +1539,9 @@ impl LaunchQueue {
                         let img = if keep_image { Some(mem.clone()) } else { None };
                         (result, mem, img)
                     });
+                    if out.is_ok() {
+                        exec_spans(idx, None, span_batch, span_tag, t0);
+                    }
                     UnitOut::Snap { idx, out }
                 }
                 Unit::Dev { di, mut dev, items } => {
@@ -1463,6 +1564,7 @@ impl LaunchQueue {
                         }
                         // Literally the sequential path: bit-identical to
                         // a caller running this launch on this device.
+                        let t0 = trace::now_ns();
                         match dev.launch(
                             &it.launch.kernel,
                             it.launch.total,
@@ -1470,6 +1572,7 @@ impl LaunchQueue {
                             it.launch.backend,
                         ) {
                             Ok(result) => {
+                                exec_spans(it.idx, Some(di as u32), span_batch, span_tag, t0);
                                 let img = if it.keep_image {
                                     Some(dev.mem.clone())
                                 } else {
@@ -1553,11 +1656,21 @@ impl LaunchQueue {
                             // (committed image already stored above).
                             None => img.expect("snapshot memory always returned"),
                         };
+                        if trace::enabled() {
+                            let mut s = Span::at(SpanKind::Commit, trace::now_ns(), 0);
+                            s.event = idx as u64;
+                            s.batch = span_batch;
+                            s.tag = span_tag;
+                            s.device = di.map(|d| d as u32);
+                            trace::record(s);
+                        }
                         results[idx] = Some(Ok(QueuedResult {
                             result,
                             mem,
                             device: di.map(DeviceId),
                             exec_seq,
+                            queue_wait_ns: 0,
+                            exec_ns: 0,
                         }));
                     }
                     ItemOut::Fail(e) => {
@@ -1591,6 +1704,14 @@ impl LaunchQueue {
             .into_iter()
             .map(|d| d.expect("device returned from its unit"))
             .collect();
+        if trace::enabled() {
+            let now = trace::now_ns();
+            let mut s = Span::at(SpanKind::Batch, t_batch, now.saturating_sub(t_batch));
+            s.batch = span_batch;
+            s.tag = span_tag;
+            s.detail = "round-sync";
+            trace::record(s);
+        }
         results
             .into_iter()
             .map(|r| r.expect("every enqueued event produces a result"))
@@ -1614,6 +1735,10 @@ struct EngineCfg {
     streaming: bool,
     fault: Option<(u64, u64)>,
     preempt: bool,
+    /// Batch id the engine's events belong to (span scoping).
+    batch: u64,
+    /// The owning queue's [`LaunchQueue::trace_tag`].
+    tag: u64,
 }
 
 /// Execution payload sent back by a pool worker.
@@ -1732,13 +1857,30 @@ struct Engine {
     /// Times any launch yielded at a commit boundary.
     preemptions: u64,
 
+    // Observability (see `crate::trace`). The `t_*` stamps are wall
+    // clock; they feed `QueuedResult::{queue_wait_ns, exec_ns}` and the
+    // span recorder only — never a determinism surface.
+    /// Batch id of this engine's events (span scoping).
+    batch: u64,
+    /// Owning queue's trace tag (Chrome trace `pid` lane).
+    tag: u64,
+    /// Engine creation time — the batch span's start.
+    t_start: u64,
+    /// Enqueue time per event.
+    t_push: Vec<u64>,
+    /// First worker-spawn time per event (`None` until dispatched; set
+    /// once — a preemption resume keeps the original dispatch start).
+    t_first_spawn: Vec<Option<u64>>,
+    /// Physical retirement time per event (0 until retired).
+    t_retire: Vec<u64>,
+
     tx: mpsc::Sender<Msg>,
     rx: mpsc::Receiver<Msg>,
 }
 
 impl Engine {
     fn new(
-        nodes: Vec<Node>,
+        nodes: Vec<(Node, u64)>,
         devices: Vec<VortexDevice>,
         sched: Vec<DeviceSched>,
         cfg: EngineCfg,
@@ -1792,11 +1934,17 @@ impl Engine {
             suspended: (0..ndev).map(|_| None).collect(),
             hold: vec![false; ndev],
             preemptions: 0,
+            batch: cfg.batch,
+            tag: cfg.tag,
+            t_start: trace::now_ns(),
+            t_push: Vec::new(),
+            t_first_spawn: Vec::new(),
+            t_retire: Vec::new(),
             tx,
             rx,
         };
-        for node in nodes {
-            eng.push_node(node);
+        for (node, t_push) in nodes {
+            eng.push_node(node, t_push);
         }
         eng.start();
         eng
@@ -1845,7 +1993,7 @@ impl Engine {
     }
 
     /// Append one event to the (possibly running) graph.
-    fn push_node(&mut self, node: Node) -> usize {
+    fn push_node(&mut self, node: Node, t_push: u64) -> usize {
         let idx = self.deps.len();
         let mut d = node.deps;
         d.sort_unstable();
@@ -1879,6 +2027,9 @@ impl Engine {
         self.results.push(None);
         self.committed.push(None);
         self.charged.push(0);
+        self.t_push.push(t_push);
+        self.t_first_spawn.push(None);
+        self.t_retire.push(0);
         if self.started {
             debug_assert!(self.streaming, "classic batches are closed before start");
             if self.pend_phys[idx] == 0 {
@@ -1962,6 +2113,14 @@ impl Engine {
     fn admit(&mut self, i: usize) {
         debug_assert!(!self.admitted[i], "event admitted twice");
         self.admitted[i] = true;
+        if trace::enabled() {
+            let mut s = Span::at(SpanKind::Ready, trace::now_ns(), 0);
+            s.event = i as u64;
+            s.batch = self.batch;
+            s.tenant = self.tenant[i];
+            s.tag = self.tag;
+            trace::record(s);
+        }
         if self.is_owned[i] {
             self.dispatch_owned(i);
         } else {
@@ -2169,6 +2328,9 @@ impl Engine {
         let want = if self.streaming { true } else { self.classic_want_commit(idx, Some(di)) };
         self.want_commit[idx] = want;
         let keep = self.snapshots_on || want;
+        if self.t_first_spawn[idx].is_none() {
+            self.t_first_spawn[idx] = Some(trace::now_ns());
+        }
         let mut dev = Box::new(self.parked[di].take().expect("device free at spawn"));
         // A launch is preemptible when the engine runs preemptive and the
         // device is not already parking a suspension (one suspended launch
@@ -2267,6 +2429,9 @@ impl Engine {
         };
         let want = if self.streaming { true } else { self.classic_want_commit(idx, None) };
         self.want_commit[idx] = want;
+        if self.t_first_spawn[idx].is_none() {
+            self.t_first_spawn[idx] = Some(trace::now_ns());
+        }
         let mode = self.exec_mode;
         let tx = self.tx.clone();
         let delay = fault_delay(self.fault, idx);
@@ -2298,6 +2463,7 @@ impl Engine {
     /// payload, cascade physical readiness, commit ledger heads, and
     /// refill free pool slots.
     fn on_msg(&mut self, msg: Msg) {
+        let t_msg = if trace::enabled() { trace::now_ns() } else { 0 };
         self.running -= 1;
         let from_dev = msg.dev.as_ref().map(|(d, _)| *d);
         if let Some((di, dev)) = msg.dev {
@@ -2316,10 +2482,43 @@ impl Engine {
             // flight (ledger slot, charge, inflight count untouched);
             // passable work dispatches ahead of it, then it resumes.
             let di = from_dev.expect("yield always returns its device");
+            if trace::enabled() {
+                let mut sp = Span::at(SpanKind::Preempt, t_msg, 0);
+                sp.event = msg.idx as u64;
+                sp.batch = self.batch;
+                sp.tenant = self.tenant[msg.idx];
+                sp.tag = self.tag;
+                sp.device = Some(di as u32);
+                trace::record(sp);
+            }
             self.suspended[di] = Some((msg.idx, s));
             self.preemptions += 1;
             self.drain_dispatch();
             return;
+        }
+        let t_end = trace::now_ns();
+        self.t_retire[msg.idx] = t_end;
+        if trace::enabled() {
+            let dev32 = self.placed[msg.idx].or(from_dev).map(|d| d as u32);
+            let t_disp = self.t_first_spawn[msg.idx].unwrap_or(t_end);
+            // Dispatch covers first spawn → physical completion; the
+            // retire span (completion handling) ends at the same instant,
+            // so retire ⊆ dispatch by construction.
+            let mut d = Span::at(SpanKind::Dispatch, t_disp, t_end.saturating_sub(t_disp));
+            d.event = msg.idx as u64;
+            d.batch = self.batch;
+            d.tenant = self.tenant[msg.idx];
+            d.tag = self.tag;
+            d.device = dev32;
+            trace::record(d);
+            let t_ret = t_msg.max(t_disp);
+            let mut r = Span::at(SpanKind::Retire, t_ret, t_end.saturating_sub(t_ret));
+            r.event = msg.idx as u64;
+            r.batch = self.batch;
+            r.tenant = self.tenant[msg.idx];
+            r.tag = self.tag;
+            r.device = dev32;
+            trace::record(r);
         }
         let failed = matches!(&out, ExecOut::Owned(Err(_)) | ExecOut::Snap(Err(_)));
         self.exec_out[msg.idx] = Some(out);
@@ -2347,14 +2546,27 @@ impl Engine {
         let seq = self.exec_seq;
         self.exec_seq += 1;
         self.inflight -= 1;
+        // Wall-clock service intervals for the observability layer; zeros
+        // when the event never spawned. Never folded into fingerprints.
+        let queue_wait_ns =
+            self.t_first_spawn[idx].map_or(0, |t| t.saturating_sub(self.t_push[idx]));
+        let exec_ns =
+            self.t_first_spawn[idx].map_or(0, |t| self.t_retire[idx].saturating_sub(t));
         match out {
             ExecOut::Yielded(_) => unreachable!("yields never enter exec_out"),
             ExecOut::Snap(res) => match res {
                 Ok((result, mem, img)) => {
                     self.committed[idx] = img;
                     self.state[idx] = Some(LogState::Ok);
-                    self.results[idx] =
-                        Some(Ok(QueuedResult { result, mem, device: None, exec_seq: seq }));
+                    self.record_commit_span(idx, None);
+                    self.results[idx] = Some(Ok(QueuedResult {
+                        result,
+                        mem,
+                        device: None,
+                        exec_seq: seq,
+                        queue_wait_ns,
+                        exec_ns,
+                    }));
                 }
                 Err(e) => {
                     self.state[idx] = Some(LogState::Failed);
@@ -2386,11 +2598,14 @@ impl Engine {
                             (false, false) => Memory::new(),
                         };
                         self.state[idx] = Some(LogState::Ok);
+                        self.record_commit_span(idx, Some(di as u32));
                         self.results[idx] = Some(Ok(QueuedResult {
                             result,
                             mem,
                             device: Some(DeviceId(di)),
                             exec_seq: seq,
+                            queue_wait_ns,
+                            exec_ns,
                         }));
                     }
                     Err(e) => {
@@ -2413,6 +2628,23 @@ impl Engine {
             }
             self.cascade_logical(idx);
         }
+    }
+
+    /// Instant span marking event `idx` committing to the deterministic
+    /// ledger (successful commits only — skips and failures retire with
+    /// no commit span, which is what the span-chain completeness test
+    /// keys on).
+    fn record_commit_span(&self, idx: usize, device: Option<u32>) {
+        if !trace::enabled() {
+            return;
+        }
+        let mut s = Span::at(SpanKind::Commit, trace::now_ns(), 0);
+        s.event = idx as u64;
+        s.batch = self.batch;
+        s.tenant = self.tenant[idx];
+        s.tag = self.tag;
+        s.device = device;
+        trace::record(s);
     }
 
     fn pump_nonblocking(&mut self) {
@@ -2540,6 +2772,15 @@ impl Engine {
             self.on_msg(msg);
         }
         debug_assert_eq!(self.running, 0, "all events resolved implies the pool drained");
+        if trace::enabled() {
+            let now = trace::now_ns();
+            let mut s =
+                Span::at(SpanKind::Batch, self.t_start, now.saturating_sub(self.t_start));
+            s.batch = self.batch;
+            s.tag = self.tag;
+            s.detail = "reactive";
+            trace::record(s);
+        }
         let results = self
             .results
             .drain(..)

@@ -8,6 +8,7 @@
 //! (`busy` backpressure is an ordinary error value here — callers drain
 //! and retry).
 
+use crate::coordinator::report::Json;
 use crate::pocl::Backend;
 use crate::server::protocol::{
     ErrorCode, EventSummary, ProtoError, Request, Response, StatsReport,
@@ -455,6 +456,15 @@ impl Client {
     pub fn stats(&mut self) -> Result<StatsReport, ClientError> {
         match self.request(&Request::Stats)? {
             Response::Stats { stats } => Ok(stats),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Snapshot this session's recorded spans as a Chrome trace-event
+    /// document (empty `traceEvents` when the server runs untraced).
+    pub fn trace(&mut self) -> Result<Json, ClientError> {
+        match self.request(&Request::Trace)? {
+            Response::Trace { trace } => Ok(trace),
             other => Err(unexpected(&other)),
         }
     }

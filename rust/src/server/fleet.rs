@@ -45,6 +45,7 @@ use crate::mem::Memory;
 use crate::pocl::{
     Backend, DeviceId, Event, Kernel, LaunchError, LaunchQueue, QueuedResult, VortexDevice,
 };
+use crate::server::metrics::PerfTotals;
 use crate::server::protocol::FleetStat;
 use std::sync::Mutex;
 use std::time::Duration;
@@ -82,6 +83,9 @@ struct FleetState {
     launches: u64,
     /// The current batch has events (rotation would retire something).
     dirty: bool,
+    /// Aggregated simulator counters over every harvested launch — the
+    /// fleet's `perf` block in `stats`.
+    perf: PerfTotals,
 }
 
 /// A named shared device fleet (see the module docs).
@@ -90,7 +94,23 @@ pub struct Fleet {
     configs: Vec<(u32, u32)>,
     /// Device handles, in config order (stable for the fleet's life).
     devices: Vec<DeviceId>,
+    /// Span lane of the fleet's shared queue (FNV-1a of the fleet name):
+    /// one Chrome-trace pid for the whole fleet; tenants are told apart
+    /// by the per-span tenant tag.
+    trace_tag: u64,
     state: Mutex<FleetState>,
+}
+
+/// FNV-1a of a fleet name — a stable, process-independent span lane id
+/// that cannot collide with session-id lanes in practice (session ids
+/// are small integers; a 64-bit FNV digest of a non-empty name is not).
+fn fleet_trace_tag(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
 }
 
 impl Fleet {
@@ -113,6 +133,8 @@ impl Fleet {
                 .map_err(|e| format!("fleet `{name}` device config {w}x{t}: {e}"))?;
         }
         let mut queue = LaunchQueue::new(jobs);
+        let trace_tag = fleet_trace_tag(name);
+        queue.trace_tag = trace_tag;
         let devices = configs
             .iter()
             .map(|&(w, t)| queue.add_device(VortexDevice::new(MachineConfig::with_wt(w, t))))
@@ -123,6 +145,7 @@ impl Fleet {
             name: name.to_string(),
             configs: configs.to_vec(),
             devices,
+            trace_tag,
             state: Mutex::new(FleetState {
                 queue,
                 base,
@@ -133,8 +156,14 @@ impl Fleet {
                 outstanding: 0,
                 launches: 0,
                 dirty: false,
+                perf: PerfTotals::default(),
             }),
         })
+    }
+
+    /// The fleet's span lane (Chrome-trace `pid`).
+    pub fn trace_tag(&self) -> u64 {
+        self.trace_tag
     }
 
     pub fn name(&self) -> &str {
@@ -262,6 +291,13 @@ impl Fleet {
                 if let Some(res) = st.queue.result(qe) {
                     let res = res.clone();
                     st.outstanding -= 1;
+                    if let Ok(qr) = &res {
+                        let threads = qr
+                            .device
+                            .and_then(|d| self.configs.get(d.0))
+                            .map_or(1, |&(_, t)| t);
+                        st.perf.fold(&qr.result.stats, threads);
+                    }
                     return res;
                 }
             }
@@ -300,6 +336,7 @@ impl Fleet {
             in_flight: o.in_flight as u64,
             ready: o.ready as u64,
             launches: st.launches,
+            perf: st.perf.report(),
         }
     }
 }

@@ -466,6 +466,7 @@ mod tests {
                     device: Some(1),
                     exec_seq: 0,
                     error: None,
+                    perf: None,
                 }],
                 snapshots: vec![snap],
             },

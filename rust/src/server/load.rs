@@ -171,6 +171,7 @@ pub struct BombardReport {
     pub req_per_sec: f64,
     pub p50: Duration,
     pub p99: Duration,
+    pub p999: Duration,
     /// Anomalies (transport failures, mismatches, launch errors).
     pub errors: Vec<String>,
     /// Server counters sampled after the run (when reachable).
@@ -593,6 +594,7 @@ pub fn run_bombard(cfg: &BombardConfig) -> BombardReport {
         req_per_sec: 0.0,
         p50: Duration::ZERO,
         p99: Duration::ZERO,
+        p999: Duration::ZERO,
         errors: Vec::new(),
         stats: None,
         fleet_mode: cfg.fleet.is_some(),
@@ -639,6 +641,7 @@ pub fn run_bombard(cfg: &BombardConfig) -> BombardReport {
     latencies.sort_unstable();
     report.p50 = percentile(&latencies, 0.50);
     report.p99 = percentile(&latencies, 0.99);
+    report.p999 = percentile(&latencies, 0.999);
     report.req_per_sec = report.verified as f64 / elapsed.as_secs_f64().max(1e-9);
 
     // post-run counters + optional drain, over a fresh control client

@@ -1,16 +1,26 @@
 //! Service-wide counters, served to clients through the `stats` frame.
 //!
 //! One [`Metrics`] instance is shared (via `Arc`) by the accept loop and
-//! every connection thread. Counters are lock-free atomics; the only lock
-//! is around the per-device-slot cycle totals, touched once per finished
-//! batch. `in_flight` doubles as the **global admission-control gauge**:
+//! every connection thread. Counters are lock-free atomics; the locks are
+//! around the per-device-slot cycle totals and the perf-counter
+//! aggregates, touched once per finished launch. `in_flight` doubles as
+//! the **global admission-control gauge**:
 //! [`Metrics::try_acquire_inflight`] is the single compare-and-swap that
 //! decides whether an enqueue is admitted or answered with an explicit
 //! `busy` backpressure error (see [`crate::server::session`]).
+//!
+//! PR 10 adds the observability surface: three log₂-bucketed
+//! [`LatencyHistogram`]s (request service time, queue-wait time, launch
+//! wall time) whose p50/p99/p999 land in `StatsReport`, plus
+//! [`PerfTotals`] — the paper's Fig 10 counters (cycles, IPC, cache hit
+//! rates, SIMD efficiency, barrier stalls) aggregated service-wide and
+//! per tenant from every committed launch's `CoreStats`.
 
-use crate::server::protocol::StatsReport;
+use crate::server::protocol::{LatencySummary, PerfReport, StatsReport, TenantPerf};
+use crate::sim::stats::CoreStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
 
 /// Lock a mutex tolerating poison: a panic on some other thread while it
 /// held this lock must degrade to that thread's own counted failure, not
@@ -21,8 +31,140 @@ fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// Most-recently-active tenants tracked in the per-tenant perf table;
+/// beyond this the oldest (smallest session id) entry is evicted.
+const TENANT_PERF_CAP: usize = 64;
+
+/// Quantiles never report a bucket bound above 2^50 ns (~13 days): the
+/// cap keeps every summary integral under the canonical-JSON threshold
+/// where `f64` round-trips bit-exactly as `i64`.
+const MAX_QUANTILE_SHIFT: u32 = 50;
+
+/// A log₂-bucketed latency histogram: bucket *i* counts samples in
+/// `[2^i, 2^(i+1))` nanoseconds, so 64 atomic counters cover the full
+/// `u64` range with ≤ 2× quantile error and a wait-free record path.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one sample (wait-free: three relaxed atomic adds).
+    pub fn record_ns(&self, ns: u64) {
+        let idx = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Upper bound (ns) of the bucket holding quantile `q` — 0 when the
+    /// histogram is empty. Reported value is at most 2× the true sample.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((total as f64 * q).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return 1u64 << (i as u32 + 1).min(MAX_QUANTILE_SHIFT);
+            }
+        }
+        1u64 << MAX_QUANTILE_SHIFT
+    }
+
+    /// Snapshot into the wire-protocol summary (count, mean, p50/p99/p999).
+    pub fn summary(&self) -> LatencySummary {
+        let count = self.count.load(Ordering::Relaxed);
+        let sum = self.sum_ns.load(Ordering::Relaxed);
+        LatencySummary {
+            count,
+            mean_ns: if count == 0 { 0 } else { sum / count },
+            p50_ns: self.quantile_ns(0.50),
+            p99_ns: self.quantile_ns(0.99),
+            p999_ns: self.quantile_ns(0.999),
+        }
+    }
+}
+
+/// Raw sums of the paper's Fig 10 per-kernel counters across committed
+/// launches; derived rates (IPC, hit rates, SIMD efficiency) are computed
+/// once at report time so folds stay exact integer adds.
+#[derive(Debug, Default, Clone)]
+pub struct PerfTotals {
+    pub launches: u64,
+    pub cycles: u64,
+    pub warp_instrs: u64,
+    pub thread_instrs: u64,
+    /// `warp_instrs × machine width` summed per launch — the SIMD
+    /// efficiency denominator for heterogeneous device mixes.
+    pub lane_slots: u64,
+    pub icache_hits: u64,
+    pub icache_misses: u64,
+    pub dcache_hits: u64,
+    pub dcache_misses: u64,
+    pub barrier_stall_cycles: u64,
+}
+
+impl PerfTotals {
+    /// Fold one committed launch's counters (`threads` = the executing
+    /// device's SIMD width).
+    pub fn fold(&mut self, s: &CoreStats, threads: u32) {
+        self.launches += 1;
+        self.cycles += s.cycles;
+        self.warp_instrs += s.warp_instrs;
+        self.thread_instrs += s.thread_instrs;
+        self.lane_slots += s.lane_slots(threads);
+        self.icache_hits += s.icache_hits;
+        self.icache_misses += s.icache_misses;
+        self.dcache_hits += s.dcache_hits;
+        self.dcache_misses += s.dcache_misses;
+        self.barrier_stall_cycles += s.barrier_stall_cycles;
+    }
+
+    /// Derive the wire-protocol report (rates in exact milli-units).
+    pub fn report(&self) -> PerfReport {
+        fn milli(num: u64, den: u64) -> u64 {
+            if den == 0 {
+                0
+            } else {
+                num.saturating_mul(1000) / den
+            }
+        }
+        PerfReport {
+            launches: self.launches,
+            cycles: self.cycles,
+            warp_instrs: self.warp_instrs,
+            thread_instrs: self.thread_instrs,
+            ipc_milli: milli(self.warp_instrs, self.cycles),
+            simd_milli: milli(self.thread_instrs, self.lane_slots),
+            icache_hit_milli: milli(self.icache_hits, self.icache_hits + self.icache_misses),
+            dcache_hit_milli: milli(self.dcache_hits, self.dcache_hits + self.dcache_misses),
+            barrier_stall_cycles: self.barrier_stall_cycles,
+        }
+    }
+}
+
 /// Shared counters for one serve instance.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     /// Sessions ever opened.
     pub sessions_opened: AtomicU64,
@@ -68,10 +210,52 @@ pub struct Metrics {
     /// but queued behind a busy device or the worker throttle, summed
     /// across sessions.
     pub sched_ready: AtomicU64,
+    /// Service time per request: decode → response encoded (both wire
+    /// surfaces).
+    pub request_latency: LatencyHistogram,
+    /// Enqueue-admission → first device dispatch, per committed launch.
+    pub queue_wait: LatencyHistogram,
+    /// First device dispatch → physical retirement, per committed launch.
+    pub launch_wall: LatencyHistogram,
+    /// When this serve instance started (`uptime_ms` in stats).
+    started: Instant,
     /// Simulated cycles retired per session-device slot (index = the
     /// device's position in its session's config list; heterogeneous
     /// fleets accumulate per slot across sessions).
     device_cycles: Mutex<Vec<u64>>,
+    /// Service-wide Fig 10 counter totals over committed launches.
+    perf: Mutex<PerfTotals>,
+    /// Per-tenant counter totals, keyed by session id (bounded; oldest
+    /// evicted past [`TENANT_PERF_CAP`]).
+    tenant_perf: Mutex<Vec<(u64, PerfTotals)>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            sessions_opened: AtomicU64::new(0),
+            sessions_active: AtomicU64::new(0),
+            requests_accepted: AtomicU64::new(0),
+            requests_rejected: AtomicU64::new(0),
+            sessions_rejected: AtomicU64::new(0),
+            connections_failed: AtomicU64::new(0),
+            protection_faults: AtomicU64::new(0),
+            launches_enqueued: AtomicU64::new(0),
+            launches_completed: AtomicU64::new(0),
+            launches_failed: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            launches_streamed: AtomicU64::new(0),
+            sched_in_flight: AtomicU64::new(0),
+            sched_ready: AtomicU64::new(0),
+            request_latency: LatencyHistogram::default(),
+            queue_wait: LatencyHistogram::default(),
+            launch_wall: LatencyHistogram::default(),
+            started: Instant::now(),
+            device_cycles: Mutex::new(Vec::new()),
+            perf: Mutex::new(PerfTotals::default()),
+            tenant_perf: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl Metrics {
@@ -95,9 +279,18 @@ impl Metrics {
     }
 
     /// Release `n` admitted launches (batch finished, or the session
-    /// died with launches still staged).
+    /// died with launches still staged). Saturating: a session that
+    /// double-releases (e.g. a poisoned teardown racing its own harvest)
+    /// must clamp the gauge at zero, not wrap it to `u64::MAX` and brick
+    /// admission control for the whole service.
     pub fn release_inflight(&self, n: u64) {
-        self.in_flight.fetch_sub(n, Ordering::SeqCst);
+        let prev = self
+            .in_flight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| Some(v.saturating_sub(n)))
+            .unwrap_or_default();
+        // over-release is a session-accounting bug worth catching in dev
+        // builds, but the regression test exercises it deliberately
+        debug_assert!(prev >= n || cfg!(test), "in_flight release underflow: {prev} < {n}");
     }
 
     /// Account `cycles` simulated by device slot `slot`.
@@ -107,6 +300,47 @@ impl Metrics {
             v.resize(slot + 1, 0);
         }
         v[slot] += cycles;
+    }
+
+    /// Record the service interval of one answered request.
+    pub fn record_request_ns(&self, ns: u64) {
+        self.request_latency.record_ns(ns);
+    }
+
+    /// Fold one committed launch into the observability surface: its
+    /// queue-wait / wall-time histograms and the service-wide plus
+    /// per-tenant Fig 10 counter totals (`tenant` = owning session id,
+    /// `threads` = the executing device's SIMD width).
+    pub fn record_launch(
+        &self,
+        tenant: u64,
+        stats: &CoreStats,
+        threads: u32,
+        queue_wait_ns: u64,
+        exec_ns: u64,
+    ) {
+        if queue_wait_ns > 0 {
+            self.queue_wait.record_ns(queue_wait_ns);
+        }
+        if exec_ns > 0 {
+            self.launch_wall.record_ns(exec_ns);
+        }
+        lock_unpoisoned(&self.perf).fold(stats, threads);
+        let mut tp = lock_unpoisoned(&self.tenant_perf);
+        if let Some((_, totals)) = tp.iter_mut().find(|(id, _)| *id == tenant) {
+            totals.fold(stats, threads);
+            return;
+        }
+        if tp.len() >= TENANT_PERF_CAP {
+            if let Some(oldest) =
+                tp.iter().enumerate().min_by_key(|(_, (id, _))| *id).map(|(i, _)| i)
+            {
+                tp.remove(oldest);
+            }
+        }
+        let mut totals = PerfTotals::default();
+        totals.fold(stats, threads);
+        tp.push((tenant, totals));
     }
 
     /// Test support: poison the internal device-cycles lock the way a
@@ -128,6 +362,11 @@ impl Metrics {
 
     /// Snapshot every counter into the wire-protocol report.
     pub fn snapshot(&self) -> StatsReport {
+        let mut tenants: Vec<TenantPerf> = lock_unpoisoned(&self.tenant_perf)
+            .iter()
+            .map(|(id, totals)| TenantPerf { session: *id, perf: totals.report() })
+            .collect();
+        tenants.sort_by_key(|t| t.session);
         StatsReport {
             sessions_opened: self.sessions_opened.load(Ordering::SeqCst),
             sessions_active: self.sessions_active.load(Ordering::SeqCst),
@@ -143,6 +382,12 @@ impl Metrics {
             launches_streamed: self.launches_streamed.load(Ordering::SeqCst),
             sched_in_flight: self.sched_in_flight.load(Ordering::SeqCst),
             sched_ready: self.sched_ready.load(Ordering::SeqCst),
+            uptime_ms: self.started.elapsed().as_millis() as u64,
+            request_latency: self.request_latency.summary(),
+            queue_wait: self.queue_wait.summary(),
+            launch_wall: self.launch_wall.summary(),
+            perf: lock_unpoisoned(&self.perf).report(),
+            tenants,
             device_cycles: lock_unpoisoned(&self.device_cycles).clone(),
             // per-fleet occupancy is owned by the fleet registry, not the
             // counters; the service fills it in (see `Service::serve_stats`)
@@ -168,6 +413,19 @@ mod tests {
     }
 
     #[test]
+    fn release_inflight_saturates_instead_of_wrapping() {
+        let m = Metrics::new();
+        assert!(m.try_acquire_inflight(8));
+        // a died session double-releasing more than it ever acquired
+        m.release_inflight(5);
+        assert_eq!(m.snapshot().in_flight, 0, "gauge must clamp at zero, not wrap");
+        assert!(m.try_acquire_inflight(1), "admission control must survive the over-release");
+        m.release_inflight(u64::MAX);
+        assert_eq!(m.snapshot().in_flight, 0);
+        assert!(m.try_acquire_inflight(1));
+    }
+
+    #[test]
     fn device_cycles_grow_per_slot() {
         let m = Metrics::new();
         m.add_device_cycles(2, 10);
@@ -185,5 +443,81 @@ mod tests {
         m.add_device_cycles(1, 3);
         let snap = m.snapshot();
         assert_eq!(snap.device_cycles, vec![7, 3]);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_bound_the_samples() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.summary().count, 0);
+        assert_eq!(h.quantile_ns(0.5), 0, "empty histogram reports 0");
+        for _ in 0..900 {
+            h.record_ns(1_000); // ~1 µs
+        }
+        for _ in 0..90 {
+            h.record_ns(1_000_000); // ~1 ms
+        }
+        for _ in 0..10 {
+            h.record_ns(100_000_000); // ~100 ms tail
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 1000);
+        assert!(s.p50_ns >= 1_000 && s.p50_ns <= 2_048, "p50 {}", s.p50_ns);
+        assert!(s.p99_ns >= 1_000_000 && s.p99_ns <= 2_097_152, "p99 {}", s.p99_ns);
+        assert!(s.p999_ns >= 100_000_000 && s.p999_ns <= 268_435_456, "p999 {}", s.p999_ns);
+        assert!(s.p50_ns <= s.p99_ns && s.p99_ns <= s.p999_ns);
+        assert!(s.mean_ns >= 1_000 && s.mean_ns <= 100_000_000);
+    }
+
+    #[test]
+    fn latency_histogram_caps_extreme_buckets() {
+        let h = LatencyHistogram::default();
+        h.record_ns(u64::MAX);
+        // the reported bound stays under the canonical-JSON-exact range
+        assert_eq!(h.quantile_ns(0.5), 1u64 << 50);
+    }
+
+    #[test]
+    fn perf_totals_fold_and_derive_rates() {
+        let s = CoreStats {
+            cycles: 1_000,
+            warp_instrs: 500,
+            thread_instrs: 1_500,
+            icache_hits: 90,
+            icache_misses: 10,
+            dcache_hits: 75,
+            dcache_misses: 25,
+            barrier_stall_cycles: 40,
+            ..Default::default()
+        };
+        let mut t = PerfTotals::default();
+        t.fold(&s, 4);
+        t.fold(&s, 4);
+        let r = t.report();
+        assert_eq!(r.launches, 2);
+        assert_eq!(r.cycles, 2_000);
+        assert_eq!(r.ipc_milli, 500); // 1000 warp instrs / 2000 cycles
+        assert_eq!(r.simd_milli, 750); // 3000 thread instrs / (1000 × 4 lanes)
+        assert_eq!(r.icache_hit_milli, 900);
+        assert_eq!(r.dcache_hit_milli, 750);
+        assert_eq!(r.barrier_stall_cycles, 80);
+    }
+
+    #[test]
+    fn per_tenant_perf_is_tracked_and_bounded() {
+        let m = Metrics::new();
+        let s = CoreStats { cycles: 10, warp_instrs: 5, ..Default::default() };
+        for tenant in 0..(TENANT_PERF_CAP as u64 + 8) {
+            m.record_launch(tenant, &s, 4, 100, 200);
+        }
+        m.record_launch(70, &s, 4, 100, 200);
+        let snap = m.snapshot();
+        assert_eq!(snap.tenants.len(), TENANT_PERF_CAP, "table must stay bounded");
+        // the oldest tenants were evicted; the re-recorded one folded twice
+        assert!(snap.tenants.iter().all(|t| t.session >= 8));
+        let hot = snap.tenants.iter().find(|t| t.session == 70).unwrap();
+        assert_eq!(hot.perf.launches, 2);
+        assert_eq!(snap.perf.launches, TENANT_PERF_CAP as u64 + 9);
+        assert_eq!(snap.queue_wait.count, TENANT_PERF_CAP as u64 + 9);
+        assert_eq!(snap.launch_wall.count, TENANT_PERF_CAP as u64 + 9);
     }
 }

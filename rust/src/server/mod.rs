@@ -55,6 +55,9 @@ pub use client::{Client, ClientError};
 pub use fleet::Fleet;
 pub use load::{run_bombard, BombardConfig, BombardReport};
 pub use metrics::Metrics;
-pub use protocol::{ErrorCode, EventSummary, FleetStat, Request, Response, StatsReport};
+pub use protocol::{
+    ErrorCode, EventSummary, FleetStat, LatencySummary, PerfReport, PerfSummary, Request,
+    Response, StatsReport, TenantPerf,
+};
 pub use service::{ServeConfig, Server};
 pub use session::{Session, SessionLimits};

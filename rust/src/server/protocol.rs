@@ -20,6 +20,7 @@
 //! | `read_result`   | `clEnqueueReadBuffer`          | `data[]` |
 //! | `fingerprint`   | —                              | `fingerprint`, `events` |
 //! | `stats`         | —                              | `stats{}` |
+//! | `trace`         | —                              | `trace{}` (Chrome trace-event JSON) |
 //! | `shutdown`      | —                              | ack (server drains) |
 //!
 //! `open_session` may carry a `resume` token (issued by a previous
@@ -205,6 +206,10 @@ pub enum Request {
     Fingerprint,
     /// Service-wide counters.
     Stats,
+    /// Snapshot this session's trace spans as Chrome trace-event JSON
+    /// (empty `traceEvents` unless the server runs with tracing on —
+    /// `vortex serve --trace-dir`).
+    Trace,
     /// Initiate graceful drain: in-flight requests complete, new work is
     /// refused, the listener closes.
     Shutdown,
@@ -273,6 +278,9 @@ impl Request {
             }
             Request::Stats => {
                 j.push("op", "stats".into());
+            }
+            Request::Trace => {
+                j.push("op", "trace".into());
             }
             Request::Shutdown => {
                 j.push("op", "shutdown".into());
@@ -359,6 +367,7 @@ impl Request {
             }),
             "fingerprint" => Ok(Request::Fingerprint),
             "stats" => Ok(Request::Stats),
+            "trace" => Ok(Request::Trace),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(ProtoError(format!("unknown op `{other}`"))),
         }
@@ -427,6 +436,9 @@ pub struct EventSummary {
     pub exec_seq: u32,
     /// Failure rendering (`None` when `ok`).
     pub error: Option<String>,
+    /// Per-launch Fig 10 counter block (`None` for failures and for the
+    /// functional backend, which retires no cycles).
+    pub perf: Option<PerfSummary>,
 }
 
 impl EventSummary {
@@ -440,6 +452,7 @@ impl EventSummary {
         j.push("device", self.device.map_or(Json::Null, |d| (d as u64).into()));
         j.push("exec_seq", (self.exec_seq as u64).into());
         j.push("error", self.error.as_deref().map_or(Json::Null, |e| e.into()));
+        j.push("perf", self.perf.as_ref().map_or(Json::Null, |p| p.to_json()));
         j
     }
 
@@ -458,6 +471,12 @@ impl EventSummary {
                     .to_string(),
             ),
         };
+        // `perf` tolerates absence: pre-observability servers (and their
+        // journal checkpoints) never wrote it
+        let perf = match j.get("perf") {
+            None | Some(Json::Null) => None,
+            Some(p) => Some(PerfSummary::from_json(p)?),
+        };
         Ok(EventSummary {
             event: u64_field(j, "event")?,
             ok: field(j, "ok")?
@@ -467,6 +486,182 @@ impl EventSummary {
             device,
             exec_seq: u32_field(j, "exec_seq")?,
             error,
+            perf,
+        })
+    }
+}
+
+/// Per-launch counter block on `finish`/`wait_event` summaries — the
+/// paper's Fig 10 per-kernel metrics. Rates are exact integer
+/// **milli-units** (×1000: `ipc_milli:742` ⇒ IPC 0.742) so the canonical
+/// JSON stays integral and byte-stable.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PerfSummary {
+    pub cycles: u64,
+    pub warp_instrs: u64,
+    pub thread_instrs: u64,
+    pub ipc_milli: u64,
+    pub simd_milli: u64,
+    pub icache_hit_milli: u64,
+    pub dcache_hit_milli: u64,
+    pub barrier_stall_cycles: u64,
+}
+
+impl PerfSummary {
+    /// Derive from one launch's core counters (`threads` = the executing
+    /// device's SIMD width).
+    pub fn from_stats(s: &crate::sim::stats::CoreStats, threads: u32) -> PerfSummary {
+        PerfSummary {
+            cycles: s.cycles,
+            warp_instrs: s.warp_instrs,
+            thread_instrs: s.thread_instrs,
+            ipc_milli: milli(s.warp_instrs, s.cycles),
+            simd_milli: milli(s.thread_instrs, s.lane_slots(threads)),
+            icache_hit_milli: milli(s.icache_hits, s.icache_hits + s.icache_misses),
+            dcache_hit_milli: milli(s.dcache_hits, s.dcache_hits + s.dcache_misses),
+            barrier_stall_cycles: s.barrier_stall_cycles,
+        }
+    }
+
+    pub(crate) fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push("cycles", self.cycles.into());
+        j.push("warp_instrs", self.warp_instrs.into());
+        j.push("thread_instrs", self.thread_instrs.into());
+        j.push("ipc_milli", self.ipc_milli.into());
+        j.push("simd_milli", self.simd_milli.into());
+        j.push("icache_hit_milli", self.icache_hit_milli.into());
+        j.push("dcache_hit_milli", self.dcache_hit_milli.into());
+        j.push("barrier_stall_cycles", self.barrier_stall_cycles.into());
+        j
+    }
+
+    pub(crate) fn from_json(j: &Json) -> Result<PerfSummary, ProtoError> {
+        Ok(PerfSummary {
+            cycles: u64_field(j, "cycles")?,
+            warp_instrs: u64_field(j, "warp_instrs")?,
+            thread_instrs: u64_field(j, "thread_instrs")?,
+            ipc_milli: u64_field(j, "ipc_milli")?,
+            simd_milli: u64_field(j, "simd_milli")?,
+            icache_hit_milli: u64_field(j, "icache_hit_milli")?,
+            dcache_hit_milli: u64_field(j, "dcache_hit_milli")?,
+            barrier_stall_cycles: u64_field(j, "barrier_stall_cycles")?,
+        })
+    }
+}
+
+/// Exact integer milli-rate (×1000), the protocol's fixed-point rendering
+/// for ratios (JSON floats would break canonical byte-stability).
+fn milli(num: u64, den: u64) -> u64 {
+    if den == 0 {
+        0
+    } else {
+        num.saturating_mul(1000) / den
+    }
+}
+
+/// Aggregated Fig 10 counters over many launches (service-wide, per
+/// tenant, per fleet) inside [`StatsReport`]. Same milli-unit convention
+/// as [`PerfSummary`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PerfReport {
+    /// Committed launches folded into this aggregate.
+    pub launches: u64,
+    pub cycles: u64,
+    pub warp_instrs: u64,
+    pub thread_instrs: u64,
+    pub ipc_milli: u64,
+    pub simd_milli: u64,
+    pub icache_hit_milli: u64,
+    pub dcache_hit_milli: u64,
+    pub barrier_stall_cycles: u64,
+}
+
+impl PerfReport {
+    pub(crate) fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push("launches", self.launches.into());
+        j.push("cycles", self.cycles.into());
+        j.push("warp_instrs", self.warp_instrs.into());
+        j.push("thread_instrs", self.thread_instrs.into());
+        j.push("ipc_milli", self.ipc_milli.into());
+        j.push("simd_milli", self.simd_milli.into());
+        j.push("icache_hit_milli", self.icache_hit_milli.into());
+        j.push("dcache_hit_milli", self.dcache_hit_milli.into());
+        j.push("barrier_stall_cycles", self.barrier_stall_cycles.into());
+        j
+    }
+
+    pub(crate) fn from_json(j: &Json) -> Result<PerfReport, ProtoError> {
+        Ok(PerfReport {
+            launches: u64_field(j, "launches")?,
+            cycles: u64_field(j, "cycles")?,
+            warp_instrs: u64_field(j, "warp_instrs")?,
+            thread_instrs: u64_field(j, "thread_instrs")?,
+            ipc_milli: u64_field(j, "ipc_milli")?,
+            simd_milli: u64_field(j, "simd_milli")?,
+            icache_hit_milli: u64_field(j, "icache_hit_milli")?,
+            dcache_hit_milli: u64_field(j, "dcache_hit_milli")?,
+            barrier_stall_cycles: u64_field(j, "barrier_stall_cycles")?,
+        })
+    }
+}
+
+/// One tenant's aggregated perf counters inside [`StatsReport`], keyed by
+/// session id.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantPerf {
+    pub session: u64,
+    pub perf: PerfReport,
+}
+
+impl TenantPerf {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push("session", self.session.into());
+        j.push("perf", self.perf.to_json());
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<TenantPerf, ProtoError> {
+        Ok(TenantPerf {
+            session: u64_field(j, "session")?,
+            perf: PerfReport::from_json(field(j, "perf")?)?,
+        })
+    }
+}
+
+/// One latency histogram's wire summary: sample count, mean, and the
+/// log₂-bucket upper bounds holding p50/p99/p999, all in nanoseconds
+/// (see `server::metrics::LatencyHistogram` — values are ≤ 2× the true
+/// quantile and capped at 2^50 ns to stay canonically integral).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_ns: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub p999_ns: u64,
+}
+
+impl LatencySummary {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push("count", self.count.into());
+        j.push("mean_ns", self.mean_ns.into());
+        j.push("p50_ns", self.p50_ns.into());
+        j.push("p99_ns", self.p99_ns.into());
+        j.push("p999_ns", self.p999_ns.into());
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<LatencySummary, ProtoError> {
+        Ok(LatencySummary {
+            count: u64_field(j, "count")?,
+            mean_ns: u64_field(j, "mean_ns")?,
+            p50_ns: u64_field(j, "p50_ns")?,
+            p99_ns: u64_field(j, "p99_ns")?,
+            p999_ns: u64_field(j, "p999_ns")?,
         })
     }
 }
@@ -502,6 +697,19 @@ pub struct StatsReport {
     /// Scheduler occupancy: dependency-released events queued behind
     /// busy devices / the worker throttle, summed across sessions.
     pub sched_ready: u64,
+    /// Milliseconds since this serve instance started.
+    pub uptime_ms: u64,
+    /// Request service time (decode → response encoded), both wire modes.
+    pub request_latency: LatencySummary,
+    /// Enqueue admission → first device dispatch, per committed launch.
+    pub queue_wait: LatencySummary,
+    /// First device dispatch → physical retirement, per committed launch.
+    pub launch_wall: LatencySummary,
+    /// Service-wide aggregated Fig 10 counters over committed launches.
+    pub perf: PerfReport,
+    /// Per-tenant aggregates, sorted by session id (bounded — the oldest
+    /// sessions are evicted past the tracking cap).
+    pub tenants: Vec<TenantPerf>,
     pub device_cycles: Vec<u64>,
     /// Per-fleet occupancy, sorted by fleet name (empty when the server
     /// hosts no named fleets).
@@ -520,6 +728,8 @@ pub struct FleetStat {
     pub ready: u64,
     /// Launches ever enqueued on this fleet.
     pub launches: u64,
+    /// Aggregated Fig 10 counters over the fleet's committed launches.
+    pub perf: PerfReport,
 }
 
 impl FleetStat {
@@ -530,6 +740,7 @@ impl FleetStat {
         j.push("in_flight", self.in_flight.into());
         j.push("ready", self.ready.into());
         j.push("launches", self.launches.into());
+        j.push("perf", self.perf.to_json());
         j
     }
 
@@ -540,6 +751,11 @@ impl FleetStat {
             in_flight: u64_field(j, "in_flight")?,
             ready: u64_field(j, "ready")?,
             launches: u64_field(j, "launches")?,
+            // absent on pre-observability servers: default zeros
+            perf: match j.get("perf") {
+                None => PerfReport::default(),
+                Some(p) => PerfReport::from_json(p)?,
+            },
         })
     }
 }
@@ -561,6 +777,12 @@ impl StatsReport {
         j.push("launches_streamed", self.launches_streamed.into());
         j.push("sched_in_flight", self.sched_in_flight.into());
         j.push("sched_ready", self.sched_ready.into());
+        j.push("uptime_ms", self.uptime_ms.into());
+        j.push("request_latency", self.request_latency.to_json());
+        j.push("queue_wait", self.queue_wait.to_json());
+        j.push("launch_wall", self.launch_wall.to_json());
+        j.push("perf", self.perf.to_json());
+        j.push("tenants", Json::Arr(self.tenants.iter().map(|t| t.to_json()).collect()));
         j.push(
             "device_cycles",
             Json::Arr(self.device_cycles.iter().map(|&c| c.into()).collect()),
@@ -589,6 +811,35 @@ impl StatsReport {
             launches_streamed: u64_field(j, "launches_streamed")?,
             sched_in_flight: u64_field(j, "sched_in_flight")?,
             sched_ready: u64_field(j, "sched_ready")?,
+            // the observability block tolerates absence: pre-PR-10
+            // servers never sent it
+            uptime_ms: match j.get("uptime_ms") {
+                None => 0,
+                Some(_) => u64_field(j, "uptime_ms")?,
+            },
+            request_latency: match j.get("request_latency") {
+                None => LatencySummary::default(),
+                Some(l) => LatencySummary::from_json(l)?,
+            },
+            queue_wait: match j.get("queue_wait") {
+                None => LatencySummary::default(),
+                Some(l) => LatencySummary::from_json(l)?,
+            },
+            launch_wall: match j.get("launch_wall") {
+                None => LatencySummary::default(),
+                Some(l) => LatencySummary::from_json(l)?,
+            },
+            perf: match j.get("perf") {
+                None => PerfReport::default(),
+                Some(p) => PerfReport::from_json(p)?,
+            },
+            tenants: match j.get("tenants") {
+                None => Vec::new(),
+                Some(_) => arr_field(j, "tenants")?
+                    .iter()
+                    .map(TenantPerf::from_json)
+                    .collect::<Result<_, _>>()?,
+            },
             device_cycles: u64_arr(j, "device_cycles")?,
             fleets: arr_field(j, "fleets")?
                 .iter()
@@ -599,9 +850,9 @@ impl StatsReport {
 }
 
 /// Server → client frames. The variant is recovered from the payload key
-/// (`session`/`addr`/`event`/`results`/`result`/`data`/`stats`; a bare
-/// `{"ok":true}` is [`Response::Ack`]), so the encoding needs no second
-/// tag field.
+/// (`session`/`addr`/`event`/`results`/`result`/`data`/`stats`/`trace`;
+/// a bare `{"ok":true}` is [`Response::Ack`]), so the encoding needs no
+/// second tag field.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     /// `ok:false`: the request failed; the connection stays usable.
@@ -627,6 +878,9 @@ pub enum Response {
     Fingerprint { fingerprint: u64, events: u64 },
     /// `stats`.
     Stats { stats: StatsReport },
+    /// `trace`: the session's span snapshot as an embedded Chrome
+    /// trace-event JSON object (`{"traceEvents":[...],...}`).
+    Trace { trace: Json },
 }
 
 impl Response {
@@ -686,6 +940,10 @@ impl Response {
                 j.push("ok", Json::Bool(true));
                 j.push("stats", stats.to_json());
             }
+            Response::Trace { trace } => {
+                j.push("ok", Json::Bool(true));
+                j.push("trace", trace.clone());
+            }
         }
         j.render_into(out);
     }
@@ -736,6 +994,9 @@ impl Response {
         }
         if let Some(s) = j.get("stats") {
             return Ok(Response::Stats { stats: StatsReport::from_json(s)? });
+        }
+        if let Some(t) = j.get("trace") {
+            return Ok(Response::Trace { trace: t.clone() });
         }
         if j.get("event").is_some() {
             return Ok(Response::Enqueued { event: u64_field(&j, "event")? });
@@ -800,6 +1061,7 @@ mod tests {
             Request::ReadResult { event: 2, addr: 0x9000_0040, count: 16 },
             Request::Fingerprint,
             Request::Stats,
+            Request::Trace,
             Request::Shutdown,
         ];
         for f in frames {
@@ -820,6 +1082,16 @@ mod tests {
             device: Some(1),
             exec_seq: 2,
             error: None,
+            perf: Some(PerfSummary {
+                cycles: 1234,
+                warp_instrs: 900,
+                thread_instrs: 3200,
+                ipc_milli: 729,
+                simd_milli: 888,
+                icache_hit_milli: 991,
+                dcache_hit_milli: 874,
+                barrier_stall_cycles: 17,
+            }),
         };
         let summary_err = EventSummary {
             event: 5,
@@ -828,6 +1100,7 @@ mod tests {
             device: None,
             exec_seq: 0,
             error: Some("launch skipped: transitively depends on failed event #0".into()),
+            perf: None,
         };
         let frames = vec![
             Response::Error { code: ErrorCode::Busy, message: "in-flight cap reached".into() },
@@ -866,6 +1139,40 @@ mod tests {
                     launches_streamed: 7,
                     sched_in_flight: 3,
                     sched_ready: 1,
+                    uptime_ms: 5321,
+                    request_latency: LatencySummary {
+                        count: 40,
+                        mean_ns: 812_000,
+                        p50_ns: 524_288,
+                        p99_ns: 4_194_304,
+                        p999_ns: 8_388_608,
+                    },
+                    queue_wait: LatencySummary {
+                        count: 20,
+                        mean_ns: 65_000,
+                        p50_ns: 65_536,
+                        p99_ns: 131_072,
+                        p999_ns: 131_072,
+                    },
+                    launch_wall: LatencySummary::default(),
+                    perf: PerfReport {
+                        launches: 18,
+                        cycles: 90_000,
+                        warp_instrs: 45_000,
+                        thread_instrs: 170_000,
+                        ipc_milli: 500,
+                        simd_milli: 944,
+                        icache_hit_milli: 998,
+                        dcache_hit_milli: 923,
+                        barrier_stall_cycles: 210,
+                    },
+                    tenants: vec![
+                        TenantPerf { session: 1, perf: PerfReport::default() },
+                        TenantPerf {
+                            session: 3,
+                            perf: PerfReport { launches: 9, cycles: 44_000, ..Default::default() },
+                        },
+                    ],
                     device_cycles: vec![100, 2000],
                     fleets: vec![
                         FleetStat {
@@ -874,10 +1181,17 @@ mod tests {
                             in_flight: 1,
                             ready: 3,
                             launches: 17,
+                            perf: PerfReport { launches: 17, cycles: 81_000, ..Default::default() },
                         },
                         FleetStat::default(),
                     ],
                 },
+            },
+            Response::Trace {
+                trace: Json::parse(
+                    r#"{"traceEvents":[{"name":"commit","cat":"launch","ph":"X","ts":12,"dur":0,"pid":1,"tid":1,"args":{"event":0,"batch":3}}],"displayTimeUnit":"ms","dropped_spans":0}"#,
+                )
+                .unwrap(),
             },
         ];
         for f in frames {
@@ -928,6 +1242,30 @@ mod tests {
         );
         // bad fingerprint hex is a decode error, not a silent zero
         assert!(Response::decode(r#"{"ok":true,"fingerprint":"xyz","events":1}"#).is_err());
+    }
+
+    #[test]
+    fn stats_and_summaries_tolerate_pre_observability_frames() {
+        // a pre-PR-10 stats frame: no uptime, histograms, perf or tenants
+        let legacy = r#"{"ok":true,"stats":{"sessions_opened":1,"sessions_active":1,"requests_accepted":5,"requests_rejected":0,"sessions_rejected":0,"connections_failed":0,"protection_faults":0,"launches_enqueued":2,"launches_completed":2,"launches_failed":0,"in_flight":0,"launches_streamed":0,"sched_in_flight":0,"sched_ready":0,"device_cycles":[9],"fleets":[{"name":"f","sessions":1,"in_flight":0,"ready":0,"launches":2}]}}"#;
+        match Response::decode(legacy).unwrap() {
+            Response::Stats { stats } => {
+                assert_eq!(stats.uptime_ms, 0);
+                assert_eq!(stats.request_latency, LatencySummary::default());
+                assert_eq!(stats.perf, PerfReport::default());
+                assert!(stats.tenants.is_empty());
+                assert_eq!(stats.fleets[0].perf, PerfReport::default());
+            }
+            other => panic!("{other:?}"),
+        }
+        // a pre-PR-10 event summary (e.g. an old journal checkpoint): no
+        // perf block
+        let legacy_summary = r#"{"event":0,"ok":true,"cycles":7,"device":0,"exec_seq":0,"error":null}"#;
+        let s = EventSummary::from_json(&Json::parse(legacy_summary).unwrap()).unwrap();
+        assert_eq!(s.perf, None);
+        // ill-typed perf blocks are decode errors, not silent defaults
+        let bad = r#"{"event":0,"ok":true,"cycles":7,"device":0,"exec_seq":0,"error":null,"perf":{"cycles":"x"}}"#;
+        assert!(EventSummary::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -47,6 +47,7 @@ use crate::server::metrics::Metrics;
 use crate::server::protocol::{ErrorCode, Request, Response};
 use crate::server::session::{Session, SessionLimits};
 use crate::server::wire;
+use crate::trace::{self, Span, SpanKind};
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
@@ -87,6 +88,11 @@ pub struct ServeConfig {
     /// service scans it so killed sessions can reattach via
     /// `open_session {resume: token}`.
     pub state_dir: Option<PathBuf>,
+    /// Trace-output directory (`--trace-dir`): when set, the process-wide
+    /// span recorder is switched on for the server's lifetime and the CLI
+    /// writes a Chrome trace-event file here after drain. Tracing is
+    /// determinism-neutral — wall-clock never feeds fingerprints.
+    pub trace_dir: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +105,7 @@ impl Default for ServeConfig {
             max_line: 4 << 20,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         }
     }
 }
@@ -234,6 +241,11 @@ impl Server {
             if let Some((max, _)) = journal::scan_sessions(dir).last() {
                 first_id = max + 1;
             }
+        }
+        if let Some(dir) = &cfg.trace_dir {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| bad(format!("trace dir {}: {e}", dir.display())))?;
+            trace::set_enabled(true);
         }
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -506,7 +518,7 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                     }
                     Ok(text) => {
                         let (resp, close, go_binary) =
-                            handle_line(text.trim(), &mut slot, &shared);
+                            timed_handle_line(text.trim(), &mut slot, &shared);
                         match &resp {
                             Response::Error { code: ErrorCode::Busy, .. } => {
                                 shared
@@ -784,7 +796,7 @@ fn serve_conn_binary(
                     Ok(text) if text.trim().is_empty() => continue,
                     Ok(text) => {
                         let (resp, close, _renegotiate) =
-                            handle_line(text.trim(), &mut slot, &shared);
+                            timed_handle_line(text.trim(), &mut slot, &shared);
                         // re-negotiation inside binary mode is a no-op:
                         // the connection is already binary
                         (resp, close)
@@ -856,6 +868,27 @@ fn resume_session(token: &str, shared: &Shared) -> Result<Session, String> {
             Err(e)
         }
     }
+}
+
+/// Dispatch one frame with request-lifecycle observability: service
+/// time always lands in the request-latency histogram, and — when the
+/// span recorder is live — as a `Request` span tagged with the
+/// connection's session id (0 before `open_session`).
+fn timed_handle_line(
+    text: &str,
+    slot: &mut SessionSlot,
+    shared: &Shared,
+) -> (Response, bool, bool) {
+    let t0 = trace::now_ns();
+    let out = handle_line(text, slot, shared);
+    let dur = trace::now_ns().saturating_sub(t0);
+    shared.metrics.record_request_ns(dur);
+    if trace::enabled() {
+        let mut sp = Span::at(SpanKind::Request, t0, dur);
+        sp.tag = slot.session.as_ref().map_or(0, |s| s.id());
+        trace::record(sp);
+    }
+    out
 }
 
 /// Decode + dispatch one frame. Returns the response, whether the
@@ -1079,6 +1112,7 @@ mod tests {
             max_line: 1 << 16,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         }
     }
 

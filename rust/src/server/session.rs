@@ -38,7 +38,8 @@ use crate::pocl::{Buffer, DeviceId, Event, Kernel, LaunchError, LaunchQueue, Vor
 use crate::server::fleet::Fleet;
 use crate::server::journal::{self, Journal, Record};
 use crate::server::metrics::Metrics;
-use crate::server::protocol::{ErrorCode, EventSummary, Request, Response};
+use crate::server::protocol::{ErrorCode, EventSummary, PerfSummary, Request, Response};
+use crate::trace;
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -215,6 +216,8 @@ impl Session {
                 .map_err(|e| format!("device config {w}x{t}: {e}"))?;
         }
         let mut queue = LaunchQueue::new(jobs);
+        // span lane: the session id is the queue's Chrome-trace pid
+        queue.trace_tag = id;
         let devices = configs
             .iter()
             .map(|&(w, t)| queue.add_device(VortexDevice::new(MachineConfig::with_wt(w, t))))
@@ -309,7 +312,26 @@ impl Session {
                 let (fingerprint, events) = self.fingerprint();
                 Response::Fingerprint { fingerprint, events }
             }
+            Request::Trace => self.trace_snapshot(),
         }
+    }
+
+    /// The `trace` wire op: this session's slice of the process span
+    /// recorder as Chrome trace-event JSON. Private sessions own a whole
+    /// span lane (their queue's trace tag is the session id); fleet
+    /// tenants see the fleet lane filtered to their own tenant tag. An
+    /// empty `traceEvents` simply means the server runs untraced.
+    fn trace_snapshot(&self) -> Response {
+        let spans: Vec<trace::Span> = match &self.exec {
+            Exec::Private { .. } => {
+                trace::snapshot().into_iter().filter(|s| s.tag == self.id).collect()
+            }
+            Exec::Fleet { fleet, tenant, .. } => trace::snapshot()
+                .into_iter()
+                .filter(|s| s.tag == fleet.trace_tag() && s.tenant == *tenant)
+                .collect(),
+        };
+        Response::Trace { trace: trace::chrome_json(&spans) }
     }
 
     /// The running determinism fingerprint and the number of committed
@@ -853,6 +875,21 @@ impl Session {
                 if let Some(d) = qr.device {
                     self.metrics.add_device_cycles(d.0, qr.result.cycles);
                 }
+                // SIMD-width denominator for the perf block: the device
+                // the launch committed on (launches always place on a
+                // session device; fall back to the first config).
+                let threads = qr
+                    .device
+                    .and_then(|d| self.configs.get(d.0))
+                    .or_else(|| self.configs.first())
+                    .map_or(1, |&(_, t)| t);
+                self.metrics.record_launch(
+                    self.id,
+                    &qr.result.stats,
+                    threads,
+                    qr.queue_wait_ns,
+                    qr.exec_ns,
+                );
                 (
                     EventSummary {
                         event: wid,
@@ -861,6 +898,7 @@ impl Session {
                         device: qr.device.map(|d| d.0 as u32),
                         exec_seq: qr.exec_seq,
                         error: None,
+                        perf: Some(PerfSummary::from_stats(&qr.result.stats, threads)),
                     },
                     Some(qr.mem),
                 )
@@ -882,6 +920,7 @@ impl Session {
                         device: None,
                         exec_seq: 0,
                         error: Some(e.to_string()),
+                        perf: None,
                     },
                     None,
                 )

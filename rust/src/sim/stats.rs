@@ -58,6 +58,14 @@ impl CoreStats {
         }
     }
 
+    /// Issued lane slots: the SIMD-efficiency denominator
+    /// (`thread_instrs / lane_slots` = fraction of lanes doing work).
+    /// Integer so service-wide aggregation over heterogeneous widths
+    /// stays exact (see `server::metrics::PerfTotals`).
+    pub fn lane_slots(&self, num_threads: u32) -> u64 {
+        self.warp_instrs.saturating_mul(num_threads as u64)
+    }
+
     pub fn dcache_hit_rate(&self) -> f64 {
         let t = self.dcache_hits + self.dcache_misses;
         if t == 0 {

@@ -1,0 +1,388 @@
+//! `vortex::trace` — cross-layer structured tracing and profiling.
+//!
+//! A process-global, **opt-in** span recorder: every layer (the launch
+//! queue's event-graph engine, the device service, the resilience ops)
+//! records [`Span`]s describing the wall-clock lifecycle of its work —
+//! enqueue → ready → dispatch → retire → commit for every event-graph
+//! node, request service intervals on the server, preempt / snapshot /
+//! restore / migrate for the resilience layer. Spans land in bounded
+//! **per-thread ring buffers** (registered in a process-wide registry on
+//! first use), so the record path never contends across threads; a
+//! snapshot or drain walks the registry and merges.
+//!
+//! Two hard properties, pinned by `rust/tests/trace_observability.rs`:
+//!
+//! - **Zero-cost when disabled.** [`record`] is gated on one relaxed
+//!   atomic load; nothing allocates, no ring is touched, and no
+//!   thread-local is initialized while tracing is off.
+//! - **Determinism-neutral when enabled.** Spans carry wall-clock
+//!   timestamps, but no timestamp ever feeds a determinism surface:
+//!   `pocl::results_fingerprint` and the per-session fingerprints fold
+//!   committed *results* only, so a traced run is bit-identical to an
+//!   untraced one at every worker count and [`crate::pocl::SchedMode`].
+//!
+//! The export format is Chrome trace-event JSON ([`chrome_json`]) —
+//! `{"traceEvents":[{"name","cat","ph":"X","ts","dur","pid","tid",
+//! "args"},...]}` — loadable directly in Perfetto / `chrome://tracing`,
+//! built with the in-tree [`Json`] writer so the output parses with
+//! [`Json::parse`] by construction. `ts`/`dur` are microseconds
+//! (fractional, per the spec); `pid` carries the queue's trace tag (the
+//! session id on the server) and `tid` the device slot, so Perfetto
+//! renders one lane per session × device.
+
+use crate::coordinator::report::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Per-thread ring capacity: the oldest spans are dropped (and counted
+/// in [`dropped`]) once a thread outruns its drains.
+pub const RING_CAP: usize = 1 << 16;
+
+/// What lifecycle edge a span describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// Event accepted into a queue batch (instant).
+    Enqueue,
+    /// Dependencies resolved; the event joined the ready set (instant).
+    Ready,
+    /// Device occupancy: first worker spawn → physical completion.
+    Dispatch,
+    /// Retirement processing inside the engine's completion handler;
+    /// ends at the same instant as its [`SpanKind::Dispatch`] span, so
+    /// retire ⊆ dispatch by construction.
+    Retire,
+    /// Deterministic ledger commit (instant; carries `exec_seq` timing
+    /// only through wall-clock — never into results).
+    Commit,
+    /// One engine run: creation → drain (covers every dispatch).
+    Batch,
+    /// One server request: decode → response encoded.
+    Request,
+    /// A launch yielded to the preemption flag (instant).
+    Preempt,
+    /// Device snapshot capture.
+    Snapshot,
+    /// Device snapshot restore.
+    Restore,
+    /// A suspended launch migrated between devices.
+    Migrate,
+    /// One `vortex run` benchmark invocation.
+    Run,
+}
+
+impl SpanKind {
+    /// Chrome trace-event `name`.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::Ready => "ready",
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::Retire => "retire",
+            SpanKind::Commit => "commit",
+            SpanKind::Batch => "batch",
+            SpanKind::Request => "request",
+            SpanKind::Preempt => "preempt",
+            SpanKind::Snapshot => "snapshot",
+            SpanKind::Restore => "restore",
+            SpanKind::Migrate => "migrate",
+            SpanKind::Run => "run",
+        }
+    }
+
+    /// Chrome trace-event `cat` (Perfetto filter group).
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue
+            | SpanKind::Ready
+            | SpanKind::Dispatch
+            | SpanKind::Retire
+            | SpanKind::Commit => "launch",
+            SpanKind::Batch => "batch",
+            SpanKind::Request => "server",
+            SpanKind::Preempt | SpanKind::Snapshot | SpanKind::Restore | SpanKind::Migrate => {
+                "resilience"
+            }
+            SpanKind::Run => "cli",
+        }
+    }
+}
+
+/// One recorded interval (or instant, when `dur_ns == 0`).
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Start, nanoseconds since the process trace epoch.
+    pub ts_ns: u64,
+    /// Duration in nanoseconds (0 for instants).
+    pub dur_ns: u64,
+    /// Event index within its batch (`u64::MAX`: not event-scoped).
+    pub event: u64,
+    /// Queue batch id (process-unique).
+    pub batch: u64,
+    /// Tenant lane tag (shared fleets; 0 for untagged work).
+    pub tenant: u64,
+    /// The owning queue's trace tag (the session id on the server; 0
+    /// for standalone queues).
+    pub tag: u64,
+    /// Device slot, when placed.
+    pub device: Option<u32>,
+    /// Wait-list edges (event indices within the same batch).
+    pub wait: Vec<u64>,
+    /// Free-form static detail (request op, resilience direction, ...).
+    pub detail: &'static str,
+}
+
+impl Span {
+    /// A span with every scope field defaulted; callers fill what they
+    /// know and [`record`] it.
+    pub fn at(kind: SpanKind, ts_ns: u64, dur_ns: u64) -> Span {
+        Span {
+            kind,
+            ts_ns,
+            dur_ns,
+            event: u64::MAX,
+            batch: 0,
+            tenant: 0,
+            tag: 0,
+            device: None,
+            wait: Vec::new(),
+            detail: "",
+        }
+    }
+}
+
+/// Lock tolerating poison: tracing must degrade, never cascade a panic.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+struct ThreadRing {
+    spans: Mutex<VecDeque<Span>>,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<ThreadRing>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<ThreadRing>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static RING: Arc<ThreadRing> = {
+        let ring = Arc::new(ThreadRing { spans: Mutex::new(VecDeque::new()) });
+        lock_unpoisoned(registry()).push(Arc::clone(&ring));
+        ring
+    };
+}
+
+/// Is tracing live? One relaxed load — the whole cost of a disabled
+/// instrumentation site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on/off process-wide. Enabling pins the trace epoch on
+/// first use; spans already recorded stay in their rings.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Nanoseconds since the process trace epoch (pinned on first call).
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Record one span into the calling thread's ring. No-op while tracing
+/// is disabled; drops the ring's oldest span (counted) when full.
+pub fn record(span: Span) {
+    if !enabled() {
+        return;
+    }
+    RING.with(|ring| {
+        let mut q = lock_unpoisoned(&ring.spans);
+        if q.len() >= RING_CAP {
+            q.pop_front();
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(span);
+    });
+}
+
+fn collect(clear: bool) -> Vec<Span> {
+    let rings = lock_unpoisoned(registry());
+    let mut all = Vec::new();
+    for ring in rings.iter() {
+        let mut q = lock_unpoisoned(&ring.spans);
+        if clear {
+            all.extend(q.drain(..));
+        } else {
+            all.extend(q.iter().cloned());
+        }
+    }
+    drop(rings);
+    all.sort_by_key(|s| (s.ts_ns, s.ts_ns.wrapping_add(s.dur_ns)));
+    all
+}
+
+/// Copy every ring's spans (merged, time-sorted) without clearing —
+/// the `trace` wire op's view of a live server.
+pub fn snapshot() -> Vec<Span> {
+    collect(false)
+}
+
+/// Take every ring's spans (merged, time-sorted), leaving them empty —
+/// the end-of-run export path.
+pub fn drain() -> Vec<Span> {
+    collect(true)
+}
+
+/// Spans lost to ring overflow since the last [`reset_dropped`].
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Zero the overflow counter (paired with [`drain`] between runs).
+pub fn reset_dropped() {
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// Render spans as a Chrome trace-event JSON object (Perfetto /
+/// `chrome://tracing` compatible; parses with [`Json::parse`] by
+/// construction).
+pub fn chrome_json(spans: &[Span]) -> Json {
+    let mut events = Vec::with_capacity(spans.len());
+    for s in spans {
+        let mut j = Json::obj();
+        j.push("name", s.kind.name().into());
+        j.push("cat", s.kind.category().into());
+        j.push("ph", "X".into());
+        // trace-event timestamps are microseconds; keep sub-µs precision
+        j.push("ts", Json::Num(s.ts_ns as f64 / 1000.0));
+        j.push("dur", Json::Num(s.dur_ns as f64 / 1000.0));
+        j.push("pid", s.tag.into());
+        j.push("tid", s.device.map_or(0u64, |d| d as u64 + 1).into());
+        let mut args = Json::obj();
+        if s.event != u64::MAX {
+            args.push("event", s.event.into());
+        }
+        args.push("batch", s.batch.into());
+        if s.tenant != 0 {
+            args.push("tenant", s.tenant.into());
+        }
+        if !s.wait.is_empty() {
+            args.push("wait", Json::Arr(s.wait.iter().map(|&w| w.into()).collect()));
+        }
+        if !s.detail.is_empty() {
+            args.push("detail", s.detail.into());
+        }
+        j.push("args", args);
+        events.push(j);
+    }
+    let mut top = Json::obj();
+    top.push("traceEvents", Json::Arr(events));
+    top.push("displayTimeUnit", "ms".into());
+    top.push("dropped_spans", dropped().into());
+    top
+}
+
+/// Write spans to `path` as Chrome trace-event JSON.
+pub fn write_chrome(path: &std::path::Path, spans: &[Span]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_json(spans).render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The recorder is process-global state: these tests serialize on
+    /// one lock so parallel `cargo test` threads cannot interleave
+    /// enable/drain cycles.
+    fn test_lock() -> &'static Mutex<()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _g = lock_unpoisoned(test_lock());
+        set_enabled(false);
+        let _ = drain();
+        record(Span::at(SpanKind::Enqueue, 10, 0));
+        assert!(snapshot().is_empty(), "disabled tracing must record nothing");
+    }
+
+    #[test]
+    fn spans_round_trip_through_snapshot_and_drain() {
+        let _g = lock_unpoisoned(test_lock());
+        set_enabled(true);
+        let _ = drain();
+        let mut s = Span::at(SpanKind::Dispatch, 100, 50);
+        s.event = 3;
+        s.batch = 7;
+        s.device = Some(1);
+        record(s);
+        record(Span::at(SpanKind::Batch, 90, 100));
+        let snap = snapshot();
+        assert_eq!(snap.len(), 2);
+        // time-sorted merge: the batch span starts first
+        assert_eq!(snap[0].kind, SpanKind::Batch);
+        assert_eq!(snap[1].event, 3);
+        let taken = drain();
+        assert_eq!(taken.len(), 2);
+        assert!(snapshot().is_empty(), "drain must clear the rings");
+        set_enabled(false);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let _g = lock_unpoisoned(test_lock());
+        set_enabled(true);
+        let _ = drain();
+        reset_dropped();
+        for i in 0..(RING_CAP as u64 + 10) {
+            record(Span::at(SpanKind::Commit, i, 0));
+        }
+        let spans = drain();
+        assert_eq!(spans.len(), RING_CAP);
+        assert_eq!(dropped(), 10);
+        // the oldest were dropped: the survivors start at ts 10
+        assert_eq!(spans[0].ts_ns, 10);
+        reset_dropped();
+        set_enabled(false);
+    }
+
+    #[test]
+    fn chrome_json_is_parseable_and_complete() {
+        let mut s = Span::at(SpanKind::Retire, 1500, 250);
+        s.event = 2;
+        s.batch = 4;
+        s.tenant = 9;
+        s.tag = 11;
+        s.device = Some(0);
+        s.wait = vec![0, 1];
+        let top = chrome_json(&[s]);
+        let text = top.render();
+        let back = Json::parse(&text).expect("chrome trace JSON must parse");
+        let events = back.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(events.len(), 1);
+        let ev = &events[0];
+        assert_eq!(ev.get("name").and_then(|n| n.as_str()), Some("retire"));
+        assert_eq!(ev.get("cat").and_then(|c| c.as_str()), Some("launch"));
+        assert_eq!(ev.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(ev.get("ts").and_then(|t| t.as_f64()), Some(1.5));
+        assert_eq!(ev.get("pid").and_then(|p| p.as_u64()), Some(11));
+        assert_eq!(ev.get("tid").and_then(|t| t.as_u64()), Some(1));
+        let args = ev.get("args").unwrap();
+        assert_eq!(args.get("event").and_then(|e| e.as_u64()), Some(2));
+        assert_eq!(args.get("tenant").and_then(|t| t.as_u64()), Some(9));
+        assert_eq!(args.get("wait").and_then(|w| w.as_arr()).map(|w| w.len()), Some(2));
+    }
+}

@@ -29,7 +29,8 @@ use vortex::pocl::{Backend, LaunchQueue, VortexDevice};
 use vortex::server::load::{scale_kernel_body, scale_kernel_name, SCALE_FACTORS};
 use vortex::server::{
     run_bombard, BombardConfig, Client, ClientError, ErrorCode, EventSummary, FleetStat,
-    Request, Response, ServeConfig, Server, SessionLimits,
+    LatencySummary, PerfReport, PerfSummary, Request, Response, ServeConfig, Server,
+    SessionLimits, TenantPerf,
 };
 use vortex::workloads::rng::SplitMix64;
 
@@ -101,6 +102,44 @@ fn rand_summary(rng: &mut SplitMix64) -> EventSummary {
         device: if rng.below(2) == 0 { None } else { Some(rng.below(16)) },
         exec_seq: rng.below(1 << 16),
         error: if ok { None } else { Some(rand_string(rng)) },
+        perf: if rng.below(2) == 0 { None } else { Some(rand_perf_summary(rng)) },
+    }
+}
+
+fn rand_perf_summary(rng: &mut SplitMix64) -> PerfSummary {
+    PerfSummary {
+        cycles: rand_id(rng),
+        warp_instrs: rand_id(rng),
+        thread_instrs: rand_id(rng),
+        ipc_milli: rand_id(rng),
+        simd_milli: rand_id(rng),
+        icache_hit_milli: rand_id(rng),
+        dcache_hit_milli: rand_id(rng),
+        barrier_stall_cycles: rand_id(rng),
+    }
+}
+
+fn rand_perf_report(rng: &mut SplitMix64) -> PerfReport {
+    PerfReport {
+        launches: rand_id(rng),
+        cycles: rand_id(rng),
+        warp_instrs: rand_id(rng),
+        thread_instrs: rand_id(rng),
+        ipc_milli: rand_id(rng),
+        simd_milli: rand_id(rng),
+        icache_hit_milli: rand_id(rng),
+        dcache_hit_milli: rand_id(rng),
+        barrier_stall_cycles: rand_id(rng),
+    }
+}
+
+fn rand_latency(rng: &mut SplitMix64) -> LatencySummary {
+    LatencySummary {
+        count: rand_id(rng),
+        mean_ns: rand_id(rng),
+        p50_ns: rand_id(rng),
+        p99_ns: rand_id(rng),
+        p999_ns: rand_id(rng),
     }
 }
 
@@ -155,6 +194,14 @@ fn rand_response(rng: &mut SplitMix64) -> Response {
                 launches_streamed: rand_id(rng),
                 sched_in_flight: rand_id(rng),
                 sched_ready: rand_id(rng),
+                uptime_ms: rand_id(rng),
+                request_latency: rand_latency(rng),
+                queue_wait: rand_latency(rng),
+                launch_wall: rand_latency(rng),
+                perf: rand_perf_report(rng),
+                tenants: (0..rng.below(3))
+                    .map(|_| TenantPerf { session: rand_id(rng), perf: rand_perf_report(rng) })
+                    .collect(),
                 device_cycles: (0..rng.below(4)).map(|_| rand_id(rng)).collect(),
                 fleets: (0..rng.below(3))
                     .map(|_| FleetStat {
@@ -163,6 +210,7 @@ fn rand_response(rng: &mut SplitMix64) -> Response {
                         in_flight: rand_id(rng),
                         ready: rand_id(rng),
                         launches: rand_id(rng),
+                        perf: rand_perf_report(rng),
                     })
                     .collect(),
             },
@@ -205,6 +253,7 @@ fn tiny_server(max_line: usize) -> Server {
             max_line,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         },
     )
     .unwrap()
@@ -405,6 +454,7 @@ fn bombard_matches_direct_launch_queue_bit_identically() {
             max_line: 1 << 20,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         },
     )
     .unwrap();
@@ -467,6 +517,7 @@ fn bombard_load_generator_is_clean_against_a_two_device_fleet() {
             max_line: 1 << 20,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         },
     )
     .unwrap();
@@ -510,6 +561,7 @@ fn bombard_streaming_scenario_is_clean() {
             max_line: 1 << 20,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         },
     )
     .unwrap();
@@ -560,6 +612,7 @@ fn global_inflight_cap_backpressures_across_sessions() {
             max_line: 1 << 20,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         },
     )
     .unwrap();
@@ -615,6 +668,7 @@ fn connection_cap_rejections_count_as_sessions_not_requests() {
             max_line: 1 << 16,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         },
     )
     .unwrap();
@@ -687,6 +741,7 @@ fn wait_event_returns_per_event_while_an_unrelated_chain_runs() {
             max_line: 1 << 20,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         },
     )
     .unwrap();
@@ -743,6 +798,7 @@ fn fleet_server() -> Server {
             max_line: 1 << 20,
             fleets: vec![("shared".to_string(), FLEET.to_vec())],
             state_dir: None,
+            trace_dir: None,
         },
     )
     .unwrap()
@@ -1285,6 +1341,7 @@ fn json_and_binary_sessions_commit_identical_fingerprints() {
                     max_line: 1 << 20,
                     fleets: Vec::new(),
                     state_dir: None,
+                    trace_dir: None,
                 },
             )
             .unwrap();
@@ -1316,6 +1373,7 @@ fn client_read_result_chunks_transparently_over_max_read_words() {
             max_line: 1 << 20,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         },
     )
     .unwrap();
@@ -1365,6 +1423,7 @@ fn bombard_binary_large_buffers_is_clean_and_matches_json_fingerprint() {
             max_line: 64 << 20,
             fleets: Vec::new(),
             state_dir: None,
+            trace_dir: None,
         },
     )
     .unwrap();

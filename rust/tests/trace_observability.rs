@@ -1,0 +1,300 @@
+//! Observability acceptance suite: the cross-layer span recorder must
+//! emit one complete enqueue → dispatch → retire → commit chain per
+//! committed event (in both scheduler modes), render as Chrome
+//! trace-event JSON that our own parser accepts, record nothing when
+//! disabled, and — the hard invariant — leave the deterministic results
+//! fingerprint bit-identical traced vs untraced at every worker count
+//! and `SchedMode`. The wire `trace` op must serve a session-scoped
+//! snapshot of the same document over TCP.
+//!
+//! The recorder is process-global, so every test serializes on a file
+//! lock and drains the rings before and after its run.
+
+use std::sync::Mutex;
+
+use vortex::config::MachineConfig;
+use vortex::coordinator::report::Json;
+use vortex::pocl::{
+    results_fingerprint, Backend, Kernel, LaunchError, LaunchQueue, QueuedResult, SchedMode,
+    VortexDevice,
+};
+use vortex::server::load::{scale_kernel_body, scale_kernel_name};
+use vortex::server::{Client, ServeConfig, Server};
+use vortex::trace::{self, Span, SpanKind};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Work items per launch.
+const N: usize = 16;
+
+/// Nodes in the fixed DAG (also the per-device output-buffer count).
+const NODES: usize = 5;
+
+/// Queue trace tag every lifecycle span must carry.
+const TAG: u64 = 77;
+
+fn scale_kernel(factor: u32) -> Kernel {
+    // kernel names key the per-device program cache, so the factor set
+    // is a fixed pool with static names
+    let name = match factor {
+        2 => "tr_scale2",
+        _ => "tr_scale3",
+    };
+    Kernel {
+        name,
+        body: format!(
+            r#"
+kernel_body:
+    li t0, 0x7F000100
+    lw t1, 0(t0)           # src
+    lw t2, 4(t0)           # dst
+    slli t3, a0, 2
+    add t4, t1, t3
+    lw t5, 0(t4)
+    li t6, {factor}
+    mul t5, t5, t6
+    add t4, t2, t3
+    sw t5, 0(t4)
+    ret
+"#
+        ),
+    }
+}
+
+/// Fixed 5-node DAG over two heterogeneous devices with cross-device
+/// edges. Both devices allocate buffers in the same order, so addresses
+/// line up and hand-off images stay valid (the event-graph suite's
+/// discipline).
+fn run_dag(jobs: usize, mode: SchedMode) -> Vec<Result<QueuedResult, LaunchError>> {
+    let input: Vec<i32> = (0..N as i32).map(|i| i - 7).collect();
+    let mut q = LaunchQueue::new(jobs);
+    q.sched_mode = mode;
+    q.trace_tag = TAG;
+    let mut layout: Option<(u32, Vec<u32>)> = None;
+    let mut ids = Vec::new();
+    for &(w, t) in &[(2u32, 2u32), (4, 4)] {
+        let mut dev = VortexDevice::new(MachineConfig::with_wt(w, t));
+        let inp = dev.create_buffer(N * 4);
+        dev.write_buffer_i32(inp, &input);
+        let outs: Vec<u32> = (0..NODES)
+            .map(|_| {
+                let b = dev.create_buffer(N * 4);
+                // pre-touch so stores land in mapped pages on every device
+                dev.write_buffer_i32(b, &[0; N]);
+                b.addr
+            })
+            .collect();
+        if let Some((prev_inp, prev_outs)) = &layout {
+            assert_eq!((*prev_inp, prev_outs), (inp.addr, &outs), "shared buffer layout");
+        } else {
+            layout = Some((inp.addr, outs));
+        }
+        ids.push(q.add_device(dev));
+    }
+    let (inp, outs) = layout.expect("two devices built");
+    let k2 = scale_kernel(2);
+    let k3 = scale_kernel(3);
+    let e0 = q
+        .enqueue_on_after(ids[0], &k2, N as u32, &[inp, outs[0]], Backend::SimX, &[])
+        .unwrap();
+    let e1 = q
+        .enqueue_on_after(ids[1], &k3, N as u32, &[inp, outs[1]], Backend::SimX, &[])
+        .unwrap();
+    // cross-device edge: consumer on device 0 adopts device 1's image
+    let e2 = q
+        .enqueue_on_after(ids[0], &k3, N as u32, &[outs[1], outs[2]], Backend::SimX, &[e1])
+        .unwrap();
+    let e3 = q
+        .enqueue_on_after(ids[1], &k2, N as u32, &[outs[2], outs[3]], Backend::SimX, &[e2, e0])
+        .unwrap();
+    let _e4 = q
+        .enqueue_any_after(&k2, N as u32, &[outs[3], outs[4]], Backend::SimX, &[e3])
+        .unwrap();
+    q.finish()
+}
+
+/// Run the DAG with the recorder on; returns (results, drained spans).
+/// Leaves the recorder disabled and empty.
+fn traced_dag(jobs: usize, mode: SchedMode) -> (Vec<Result<QueuedResult, LaunchError>>, Vec<Span>) {
+    trace::set_enabled(false);
+    let _ = trace::drain();
+    trace::reset_dropped();
+    trace::set_enabled(true);
+    let results = run_dag(jobs, mode);
+    trace::set_enabled(false);
+    let spans = trace::drain();
+    (results, spans)
+}
+
+fn spans_for(spans: &[Span], kind: SpanKind, event: u64) -> Vec<&Span> {
+    spans.iter().filter(|s| s.kind == kind && s.event == event).collect()
+}
+
+#[test]
+fn traced_run_emits_parseable_chrome_json() {
+    let _g = lock();
+    let (results, spans) = traced_dag(2, SchedMode::Reactive);
+    assert!(results.iter().all(|r| r.is_ok()), "every DAG node commits");
+    assert_eq!(trace::dropped(), 0, "no spans dropped to ring overflow");
+    assert!(!spans.is_empty());
+    let doc = trace::chrome_json(&spans).render();
+    let parsed = Json::parse(&doc).expect("chrome trace renders as valid JSON");
+    let events =
+        parsed.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    assert_eq!(events.len(), spans.len(), "one trace event per span");
+    for ev in events {
+        assert_eq!(ev.get("ph").and_then(|p| p.as_str()), Some("X"), "complete events");
+        assert!(ev.get("name").and_then(|n| n.as_str()).is_some());
+        assert!(ev.get("cat").and_then(|c| c.as_str()).is_some());
+        assert!(ev.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(ev.get("dur").and_then(|d| d.as_f64()).is_some());
+    }
+    assert_eq!(parsed.get("dropped_spans").and_then(|d| d.as_u64()), Some(0));
+}
+
+#[test]
+fn one_complete_chain_per_committed_event_in_both_modes() {
+    let _g = lock();
+    for mode in [SchedMode::Reactive, SchedMode::RoundSync] {
+        let (results, spans) = traced_dag(2, mode);
+        let batches: Vec<&Span> =
+            spans.iter().filter(|s| s.kind == SpanKind::Batch).collect();
+        assert_eq!(batches.len(), 1, "{mode:?}: one batch span per drained batch");
+        let batch = batches[0];
+        assert_eq!(batch.tag, TAG, "{mode:?}: batch span carries the queue tag");
+        for (i, r) in results.iter().enumerate() {
+            assert!(r.is_ok(), "{mode:?}: event {i} commits");
+            let ev = i as u64;
+            for kind in
+                [SpanKind::Enqueue, SpanKind::Dispatch, SpanKind::Retire, SpanKind::Commit]
+            {
+                let found = spans_for(&spans, kind, ev);
+                assert_eq!(
+                    found.len(),
+                    1,
+                    "{mode:?}: event {i} has exactly one {kind:?} span"
+                );
+                assert_eq!(found[0].batch, batch.batch, "{mode:?}: spans share the batch id");
+                assert_eq!(found[0].tag, TAG, "{mode:?}: spans carry the queue tag");
+            }
+            let d = spans_for(&spans, SpanKind::Dispatch, ev)[0];
+            let ret = spans_for(&spans, SpanKind::Retire, ev)[0];
+            assert!(
+                ret.ts_ns >= d.ts_ns && ret.ts_ns + ret.dur_ns <= d.ts_ns + d.dur_ns,
+                "{mode:?}: event {i} retire nests inside its dispatch"
+            );
+            assert!(
+                d.ts_ns >= batch.ts_ns
+                    && d.ts_ns + d.dur_ns <= batch.ts_ns + batch.dur_ns,
+                "{mode:?}: event {i} dispatch nests inside the batch span"
+            );
+        }
+        // wait edges round-trip: node 3 waits on {2, 0}
+        let enq3 = spans_for(&spans, SpanKind::Enqueue, 3)[0];
+        assert!(
+            enq3.wait.contains(&2) && enq3.wait.contains(&0),
+            "{mode:?}: enqueue span records its wait edges, got {:?}",
+            enq3.wait
+        );
+    }
+}
+
+#[test]
+fn tracing_is_determinism_neutral_across_jobs_and_modes() {
+    let _g = lock();
+    trace::set_enabled(false);
+    let _ = trace::drain();
+    let reference = results_fingerprint(&run_dag(1, SchedMode::Reactive));
+    for mode in [SchedMode::Reactive, SchedMode::RoundSync] {
+        for jobs in [1usize, 2, 8] {
+            trace::set_enabled(false);
+            let _ = trace::drain();
+            let untraced = results_fingerprint(&run_dag(jobs, mode));
+            assert_eq!(
+                untraced, reference,
+                "{mode:?} jobs={jobs}: fingerprint invariant under mode and worker count"
+            );
+            let (traced_results, spans) = traced_dag(jobs, mode);
+            assert!(!spans.is_empty(), "{mode:?} jobs={jobs}: traced run recorded spans");
+            assert_eq!(
+                results_fingerprint(&traced_results),
+                untraced,
+                "{mode:?} jobs={jobs}: tracing must be determinism-neutral"
+            );
+        }
+    }
+}
+
+#[test]
+fn disabled_recorder_records_nothing() {
+    let _g = lock();
+    trace::set_enabled(false);
+    let _ = trace::drain();
+    trace::reset_dropped();
+    let results = run_dag(2, SchedMode::Reactive);
+    assert!(results.iter().all(|r| r.is_ok()));
+    assert!(trace::snapshot().is_empty(), "disabled tracing records no spans");
+    assert_eq!(trace::dropped(), 0);
+}
+
+#[test]
+fn trace_wire_op_returns_session_scoped_chrome_json() {
+    let _g = lock();
+    trace::set_enabled(false);
+    let _ = trace::drain();
+    trace::reset_dropped();
+    let dir = std::env::temp_dir().join(format!("vortex-trace-wire-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp trace dir");
+    let cfg = ServeConfig {
+        configs: vec![(2, 2), (4, 4)],
+        jobs: 2,
+        trace_dir: Some(dir.clone()),
+        ..ServeConfig::default()
+    };
+    let srv = Server::spawn("127.0.0.1:0", cfg).expect("spawn traced server");
+    assert!(trace::enabled(), "trace_dir switches the process recorder on");
+    let mut cl = Client::connect(&srv.addr().to_string()).expect("connect");
+    cl.open_session(&[]).expect("open session");
+    let kernel = scale_kernel_name(3);
+    cl.stage_kernel(kernel, &scale_kernel_body(3)).expect("stage kernel");
+    let a = cl.create_buffer((N * 4) as u32).expect("src buffer");
+    let b = cl.create_buffer((N * 4) as u32).expect("dst buffer");
+    let input: Vec<i32> = (0..N as i32).collect();
+    cl.write_buffer(a, &input).expect("write input");
+    let e0 = cl
+        .enqueue(kernel, N as u32, &[a, b], Some(0), Backend::SimX, &[])
+        .expect("enqueue");
+    cl.enqueue(kernel, N as u32, &[b, a], Some(1), Backend::SimX, &[e0])
+        .expect("chained enqueue");
+    let results = cl.finish().expect("finish");
+    assert_eq!(results.len(), 2);
+    assert!(results.iter().all(|r| r.ok), "both launches verify");
+    assert!(
+        results.iter().all(|r| r.perf.is_some()),
+        "perf counters ride every committed SimX launch"
+    );
+    let doc = cl.trace().expect("trace wire op");
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    assert!(!events.is_empty(), "session trace snapshot has spans");
+    let names: Vec<&str> = events
+        .iter()
+        .filter_map(|ev| ev.get("name").and_then(|n| n.as_str()))
+        .collect();
+    assert_eq!(
+        names.iter().filter(|&&n| n == "commit").count(),
+        2,
+        "one commit span per committed launch, got {names:?}"
+    );
+    assert!(names.contains(&"request"), "request lifecycle spans ride along");
+    drop(cl);
+    srv.shutdown();
+    srv.wait();
+    trace::set_enabled(false);
+    let _ = trace::drain();
+    trace::reset_dropped();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Validate a vortex Chrome trace-event JSON file (CI trace smoke gate).
+
+Usage: check_trace.py TRACE_FILE [EXPECTED_COMMITS]
+
+Checks, stdlib-only:
+  * the file parses as JSON and has a non-empty `traceEvents` array;
+  * every event carries the Chrome trace-event shape Perfetto needs
+    (`name`, `cat`, `ph` == "X", numeric `ts`/`dur`, `pid`, `tid`);
+  * every `commit` event has a complete lifecycle chain — an `enqueue`,
+    a `dispatch` and a `retire` event for the same
+    (pid, args.batch, args.event) key — and the retire span nests inside
+    its dispatch span;
+  * no spans were dropped to ring overflow (`dropped_spans` == 0);
+  * when EXPECTED_COMMITS is given, the number of `commit` events equals
+    it exactly (one commit per verified launch).
+
+Exit code: 0 on success, 1 on any violation, 2 on usage errors.
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_trace: FAILED: {msg}", file=sys.stderr)
+    return 1
+
+
+def key_of(ev):
+    args = ev.get("args", {})
+    return (ev.get("pid"), args.get("batch"), args.get("event"))
+
+
+def main(argv):
+    if len(argv) < 2 or len(argv) > 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    path = argv[1]
+    expected = int(argv[2]) if len(argv) == 3 else None
+
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return fail(f"cannot read {path}: {e}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return fail("traceEvents missing or empty")
+
+    by_kind = {}
+    for i, ev in enumerate(events):
+        for field in ("name", "cat", "ph", "ts", "dur", "pid", "tid"):
+            if field not in ev:
+                return fail(f"event {i} lacks `{field}`: {ev}")
+        if ev["ph"] != "X":
+            return fail(f"event {i} has phase {ev['ph']!r}, expected 'X'")
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            return fail(f"event {i} has bad ts: {ev['ts']!r}")
+        if not isinstance(ev["dur"], (int, float)) or ev["dur"] < 0:
+            return fail(f"event {i} has bad dur: {ev['dur']!r}")
+        by_kind.setdefault(ev["name"], []).append(ev)
+
+    commits = by_kind.get("commit", [])
+    for stage in ("enqueue", "dispatch", "retire"):
+        have = {key_of(ev) for ev in by_kind.get(stage, [])}
+        for ev in commits:
+            if key_of(ev) not in have:
+                return fail(
+                    f"commit {key_of(ev)} has no matching `{stage}` span "
+                    "(incomplete lifecycle chain)"
+                )
+
+    # retire ends when its dispatch ends and runs inside it
+    dispatch_by_key = {key_of(ev): ev for ev in by_kind.get("dispatch", [])}
+    for ev in by_kind.get("retire", []):
+        d = dispatch_by_key.get(key_of(ev))
+        if d is None:
+            continue
+        slack = 1e-3  # microsecond rounding slack
+        if ev["ts"] + slack < d["ts"] or (
+            ev["ts"] + ev["dur"] > d["ts"] + d["dur"] + slack
+        ):
+            return fail(
+                f"retire span for {key_of(ev)} escapes its dispatch span: "
+                f"[{ev['ts']}, +{ev['dur']}] vs [{d['ts']}, +{d['dur']}]"
+            )
+
+    dropped = doc.get("dropped_spans", 0)
+    if dropped:
+        return fail(f"{dropped} span(s) dropped to ring overflow")
+
+    if expected is not None and len(commits) != expected:
+        return fail(f"expected {expected} commit spans, found {len(commits)}")
+
+    kinds = ", ".join(f"{k}={len(v)}" for k, v in sorted(by_kind.items()))
+    print(f"check_trace: OK — {len(events)} events ({kinds})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
